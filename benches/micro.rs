@@ -1,0 +1,84 @@
+//! Micro-benchmarks of the L3 hot paths: METIS partitioning, history
+//! pull/push throughput, batch assembly, literal marshalling (§Perf
+//! baselines in EXPERIMENTS.md).
+//!
+//!     cargo bench --bench micro
+
+use gas::bench::Bencher;
+use gas::config::Ctx;
+use gas::graph::generators;
+use gas::history::{HistoryPipeline, HistoryStore, PipelineMode};
+use gas::partition::metis_partition;
+use gas::sched::batch::{BatchPlan, LabelSel};
+use gas::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bencher::new(1, 7);
+
+    // --- METIS on a 100K graph ---------------------------------------------
+    let mut rng = Rng::new(1);
+    let (g, _) = generators::planted_partition(100_000, 16, 12.0, 0.8, &mut rng);
+    let r = b.run("metis_partition 100K nodes k=64", || {
+        metis_partition(&g, 64, 1)
+    });
+    println!("{}", r.line());
+
+    // --- history pull/push: 8K rows x 64 dims x 3 layers ---------------------
+    let ids: Vec<u32> = (0..8192u32).map(|i| (i * 7) % 100_000).collect();
+    let data = vec![1.0f32; 8192 * 64];
+    for mode in [PipelineMode::Serial, PipelineMode::Concurrent] {
+        let store = HistoryStore::new(100_000, 64, 3);
+        let mut pipe = HistoryPipeline::new(store, mode);
+        let r = b.run(&format!("history pull 8K rows x3 layers [{mode:?}]"), || {
+            pipe.request_pull(&ids);
+            let buf = pipe.wait_pull();
+            pipe.recycle(buf);
+        });
+        println!("{}", r.line());
+        let r = b.run(&format!("history push 8K rows [{mode:?}]"), || {
+            let mut buf = pipe.take_buffer(data.len());
+            buf.copy_from_slice(&data);
+            pipe.push(0, &ids, buf);
+            if mode == PipelineMode::Serial {
+                // concurrent applies in background; serial is inline
+            }
+        });
+        pipe.sync();
+        println!("{}", r.line());
+    }
+
+    // --- batch assembly on cora ---------------------------------------------
+    let mut ctx = Ctx::new()?;
+    let (ds, art) = ctx.pair("cora", "cora_gcn2_gas")?;
+    let part = metis_partition(&ds.graph, ds.profile.parts, 1);
+    let batch: Vec<u32> = (0..ds.n() as u32).filter(|&v| part[v as usize] == 0).collect();
+    let spec = art.spec.clone();
+    let r = b.run("batch assembly (cora part 0)", || {
+        BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train).unwrap()
+    });
+    println!("{}", r.line());
+
+    // --- one PJRT step (exec only) ------------------------------------------
+    let plan = BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train)?;
+    let params = gas::model::ParamStore::init(&spec.params, 1)?;
+    let hist = vec![0f32; spec.hist_layers() * spec.nh * spec.hist_dim];
+    let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
+    let r = b.run("PJRT train step (cora_gcn2_gas)", || {
+        let inputs = gas::runtime::StepInputs {
+            x: &plan.st.x,
+            edge_src: &plan.edge_src,
+            edge_dst: &plan.edge_dst,
+            edge_w: &plan.edge_w,
+            hist: &hist,
+            labels_i: Some(&plan.st.labels_i),
+            labels_f: None,
+            label_mask: &plan.st.label_mask,
+            deg: &plan.st.deg,
+            noise: &noise,
+            reg_lambda: 0.0,
+        };
+        art.run(&params.tensors, &inputs).unwrap()
+    });
+    println!("{}", r.line());
+    Ok(())
+}

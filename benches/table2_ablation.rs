@@ -1,0 +1,65 @@
+//! Paper Table 2: relative improvement of individual GAS techniques within
+//! GCNII, in points vs full-batch: naive baseline / +regularization /
+//! +METIS / full GAS.
+//!
+//!     cargo bench --bench table2_ablation
+
+use gas::bench::{epochs_or, filter, print_table};
+use gas::config::Ctx;
+use gas::history::PipelineMode;
+use gas::sched::batch::LabelSel;
+use gas::train::trainer::{PartitionKind, TrainConfig, Trainer};
+use gas::train::FullBatchTrainer;
+
+const DATASETS: [&str; 8] = [
+    "cora", "citeseer", "pubmed", "coauthor_cs", "coauthor_physics",
+    "amazon_computer", "amazon_photo", "wiki_cs",
+];
+
+fn cfg(metis: bool, reg: bool, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        lr: 0.01,
+        clip: if reg { Some(1.0) } else { None },
+        reg_lambda: if reg { 0.02 } else { 0.0 },
+        noise_scale: 0.1,
+        weight_decay: 0.0,
+        partitioner: if metis { PartitionKind::Metis } else { PartitionKind::Random },
+        pipeline: PipelineMode::Concurrent,
+        seed: 0,
+        eval_every: 2,
+        shuffle: true,
+        label_sel: LabelSel::Train,
+        parts: None,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let epochs = epochs_or(30);
+    let filt = filter();
+    let mut ctx = Ctx::new()?;
+    let mut rows = Vec::new();
+    for ds_name in DATASETS {
+        if !filt.is_empty() && !ds_name.contains(&filt) {
+            continue;
+        }
+        let (ds, art) = ctx.pair(ds_name, &format!("{ds_name}_gcnii8_full"))?;
+        let mut fb = FullBatchTrainer::new(ds, art, 0.01, Some(1.0), 0.0, 0)?;
+        let full = fb.train(epochs, 2)?.test_at_best_val;
+        let mut row = vec![ds_name.to_string(), format!("{full:.4}")];
+        for (metis, reg) in [(false, false), (false, true), (true, false), (true, true)] {
+            let (ds, art) = ctx.pair(ds_name, &format!("{ds_name}_gcnii8_gas"))?;
+            let mut t = Trainer::new(ds, art, cfg(metis, reg, epochs))?;
+            let r = t.train()?;
+            row.push(format!("{:+.2}", 100.0 * (r.test_at_best_val - full)));
+        }
+        eprintln!("done {ds_name}");
+        rows.push(row);
+    }
+    print_table(
+        "Table 2: GCNII ablation (points vs full-batch; paper: Baseline < Reg/METIS < GAS ~ 0)",
+        &["dataset", "full", "Baseline", "+Reg", "+METIS", "GAS"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Paper Table 3: device-memory consumption + % data used per execution
+//! strategy (full-batch / GraphSAGE / Cluster-GCN / GAS) at L in {2,3,4}.
+//!
+//! Memory is the analytic device-resident model of memaccount (DESIGN.md
+//! §3: CPU testbed, so "GPU GB" is modeled, not measured); the reproduction
+//! target is the *shape*: GAS ~ Cluster-GCN << SAGE << full-batch, with
+//! GAS at 100% data and Cluster-GCN at a fraction.
+//!
+//!     cargo bench --bench table3_memory
+
+use gas::bench::print_table;
+use gas::config::Ctx;
+use gas::memaccount::MemoryModel;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = Ctx::new()?;
+    let mut rows = Vec::new();
+    for layers in [2usize, 3, 4] {
+        for ds_name in ["yelp", "arxiv", "products"] {
+            let ds = ctx.dataset(ds_name)?;
+            let m = MemoryModel::new(ds, layers, 64);
+            let parts = ds.profile.parts;
+            for mm in [
+                m.full_batch(),
+                m.graphsage(1024, 10),
+                m.cluster_gcn(parts, 1),
+                m.gas(parts, 1),
+            ] {
+                rows.push(vec![
+                    format!("L={layers}"),
+                    ds_name.to_string(),
+                    mm.method.clone(),
+                    format!("{:.3}", mm.gib()),
+                    format!("{:.0}%", 100.0 * mm.data_frac),
+                ]);
+            }
+        }
+    }
+    print_table(
+        "Table 3: modeled device memory (GiB) + % of receptive-field data used",
+        &["layers", "dataset", "method", "GiB", "data"],
+        &rows,
+    );
+    println!("\npaper shape check: GAS uses ~100% data at Cluster-GCN-like memory;");
+    println!("GraphSAGE grows exponentially with L; full-batch is OOM-scale.");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Paper Table 4: GTTF vs GAS efficiency for a 4-layer GCN — per-step
+//! runtime (s) and working-set memory (MB). GTTF's recursive neighborhood
+//! construction scales exponentially with depth; GAS's halo is constant.
+//!
+//!     cargo bench --bench table4_gttf
+
+use gas::baselines::naive_history::gas_config;
+use gas::baselines::GttfSampler;
+use gas::bench::{epochs_or, print_table, Bencher};
+use gas::config::Ctx;
+use gas::sched::batch::{BatchPlan, LabelSel};
+use gas::runtime::StepInputs;
+use gas::train::Trainer;
+use gas::util::rng::Rng;
+
+const F32: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let _ = epochs_or(1);
+    let mut ctx = Ctx::new()?;
+    let b = Bencher::new(1, 5);
+    let mut rows = Vec::new();
+    for ds_name in ["cora", "pubmed", "ppi", "flickr"] {
+        // ---- GAS: one optimizer step on the first METIS batch ------------
+        let gas_name = format!("{ds_name}_gcn4_gas");
+        let (ds, art) = ctx.pair(ds_name, &gas_name)?;
+        let parts = ds.profile.parts;
+        // GAS per-step working set: batch tensors + activations
+        let spec = &art.spec;
+        let gas_bytes = spec.nt * spec.f * F32
+            + 2 * spec.layers * spec.nb * spec.h * F32
+            + spec.hist_layers() * spec.nh * spec.hist_dim * F32
+            + spec.e * 3 * F32;
+        let gas_nt = spec.nt;
+        let mut tr = Trainer::new(ds, art, gas_config(1, 0.01, 0.0, 0))?;
+        let rep_gas = b.run(&format!("{ds_name} gas step"), || {
+            tr.train().unwrap() // 1 epoch == parts steps; normalize below
+        });
+        let gas_step_s = rep_gas.median_s / parts as f64;
+
+        // ---- GTTF: traversal + exact execution on the sampled forest -----
+        let full_name = format!("{ds_name}_gcn4_full");
+        let (ds, art) = ctx.pair(ds_name, &full_name)?;
+        let sampler = GttfSampler::new(3, 4);
+        let batch: Vec<u32> = (0..(ds.n() / parts).min(512) as u32).collect();
+        let mut rng = Rng::new(7);
+        let sample = sampler.traverse(&ds.graph, &batch, &mut rng);
+        let plan = BatchPlan::build_full_with_edges(
+            ds, &art.spec, &sample.nodes, &sample.edges, LabelSel::Train,
+            Some(&batch),
+        )?;
+        let params = gas::model::ParamStore::init(&art.spec.params, 1)?;
+        let hist = vec![0f32; 1];
+        let noise = vec![0f32; art.spec.n_in() * art.spec.hist_dim.max(art.spec.h)];
+        let rep_gttf = b.run(&format!("{ds_name} gttf step"), || {
+            let mut rng = Rng::new(7);
+            let s = sampler.traverse(&ds.graph, &batch, &mut rng);
+            std::hint::black_box(s.nodes.len());
+            let inputs = StepInputs {
+                x: &plan.st.x,
+                edge_src: &plan.edge_src,
+                edge_dst: &plan.edge_dst,
+                edge_w: &plan.edge_w,
+                hist: &hist,
+                labels_i: if art.spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
+                labels_f: if art.spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
+                label_mask: &plan.st.label_mask,
+                deg: &plan.st.deg,
+                noise: &noise,
+                reg_lambda: 0.0,
+            };
+            art.run(&params.tensors, &inputs).unwrap()
+        });
+        // GTTF working set: full program on the recursive neighborhood +
+        // the materialized walk-forest index tensors
+        let fspec = &art.spec;
+        let gttf_bytes = sample.nodes.len() * fspec.f * F32
+            + 2 * fspec.layers * sample.nodes.len() * fspec.h * F32
+            + sample.tensor_bytes;
+        rows.push(vec![
+            ds_name.to_string(),
+            format!("{:.4}", rep_gttf.median_s),
+            format!("{:.4}", gas_step_s),
+            format!("{:.2}", gttf_bytes as f64 / 1e6),
+            format!("{:.2}", gas_bytes as f64 / 1e6),
+            format!("{}", sample.nodes.len()),
+            format!("{}", gas_nt),
+        ]);
+        eprintln!("done {ds_name}");
+    }
+    print_table(
+        "Table 4: GTTF vs GAS, 4-layer GCN (paper: GAS faster and smaller)",
+        &["dataset", "GTTF s/step", "GAS s/step", "GTTF MB", "GAS MB",
+          "GTTF nodes", "GAS nodes(pad)"],
+        &rows,
+    );
+    Ok(())
+}

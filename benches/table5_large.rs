@@ -1,0 +1,141 @@
+//! Paper Table 5: large-graph performance — GCN / GCNII / PNA trained via
+//! GAS, plus Cluster-GCN and GraphSAGE baselines (GCN) and full-batch
+//! where it fits. Reproduction target: deep/expressive + GAS >= GCN+GAS >=
+//! edge-dropping baselines.
+//!
+//!     GAS_FILTER=flickr cargo bench --bench table5_large
+//!     GAS_EPOCHS=10 cargo bench --bench table5_large
+
+use gas::baselines::naive_history::gas_config;
+use gas::baselines::{ClusterGcnTrainer, SageSampler};
+use gas::bench::{epochs_or, filter, print_table};
+use gas::config::Ctx;
+use gas::model::{Adam, Optimizer, ParamStore};
+use gas::runtime::StepInputs;
+use gas::sched::batch::{BatchPlan, LabelSel};
+use gas::train::trainer::score;
+use gas::train::{FullBatchTrainer, Trainer};
+use gas::util::rng::Rng;
+
+const DATASETS: [&str; 6] = ["reddit", "ppi", "flickr", "yelp", "arxiv", "products"];
+
+fn main() -> anyhow::Result<()> {
+    let epochs = epochs_or(8);
+    let mut filt = filter();
+    // GAS_T5_SETS: comma list bounding this (expensive) sweep independently
+    let sets = std::env::var("GAS_T5_SETS").unwrap_or_default();
+    if !sets.is_empty() && filt.is_empty() {
+        filt = sets; // contains-match against each name below
+    }
+    let allowed: Vec<&str> = filt.split(',').collect();
+    let filt_match = |name: &str| filt.is_empty() || allowed.iter().any(|a| name.contains(a));
+    let mut ctx = Ctx::new()?;
+    let mut rows = Vec::new();
+    for ds_name in DATASETS {
+        if !filt_match(ds_name) {
+            continue;
+        }
+        // --- GAS: GCN / GCNII / PNA ---------------------------------------
+        for (model, reg) in [("gcn2", 0.0f32), ("gcnii8", 0.02), ("pna3", 0.0)] {
+            let name = format!("{ds_name}_{model}_gas");
+            let (ds, art) = ctx.pair(ds_name, &name)?;
+            let mut cfg = gas_config(epochs, 0.01, reg, 0);
+            cfg.eval_every = 2;
+            let mut tr = Trainer::new(ds, art, cfg)?;
+            let r = tr.train()?;
+            rows.push(vec![
+                ds_name.into(),
+                format!("GAS {model}"),
+                format!("{:.4}", r.test_at_best_val),
+            ]);
+            eprintln!("done {name}: {:.4}", r.test_at_best_val);
+        }
+        // --- Cluster-GCN baseline (GCN, intra-cluster only) ---------------
+        {
+            let name = format!("{ds_name}_gcn2_subg");
+            let (ds, art) = ctx.pair(ds_name, &name)?;
+            let parts = ds.profile.parts;
+            let mut tr = ClusterGcnTrainer::new(ds, art, parts, 0.01, 0)?;
+            let r = tr.train(epochs, 2)?;
+            rows.push(vec![
+                ds_name.into(),
+                "Cluster-GCN gcn2".into(),
+                format!("{:.4}", r.test_at_best_val),
+            ]);
+            eprintln!("done {name} (cluster): {:.4}", r.test_at_best_val);
+        }
+        // --- GraphSAGE baseline (sampled forests on the subg program) -----
+        {
+            let name = format!("{ds_name}_gcn2_subg");
+            let (ds, art) = ctx.pair(ds_name, &name)?;
+            let spec = &art.spec;
+            let sampler = SageSampler::new(8, spec.layers);
+            let mut params = ParamStore::init(&spec.params, 1)?;
+            let mut opt = Adam::new(0.01).with_clip(1.0);
+            let mut rng = Rng::new(11);
+            let seeds_per_batch = (spec.nb / 24).max(32);
+            let hist = vec![0f32; 1];
+            let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
+            let steps = epochs * ds.profile.parts.min(16);
+            for _ in 0..steps {
+                let seeds: Vec<u32> = (0..seeds_per_batch)
+                    .map(|_| rng.below(ds.n()) as u32)
+                    .collect();
+                let (sample, _) = sampler.sample(&ds.graph, &seeds, spec.nb, &mut rng);
+                let plan = BatchPlan::build_full_with_edges(
+                    ds, spec, &sample.nodes, &sample.edges, LabelSel::Train,
+                    Some(&seeds),
+                )?;
+                let inputs = StepInputs {
+                    x: &plan.st.x,
+                    edge_src: &plan.edge_src,
+                    edge_dst: &plan.edge_dst,
+                    edge_w: &plan.edge_w,
+                    hist: &hist,
+                    labels_i: if spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
+                    labels_f: if spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
+                    label_mask: &plan.st.label_mask,
+                    deg: &plan.st.deg,
+                    noise: &noise,
+                    reg_lambda: 0.0,
+                };
+                let out = art.run(&params.tensors, &inputs)?;
+                opt.step(&mut params, &out.grads);
+            }
+            // evaluate with intra-cluster plans (same protocol as c-gcn)
+            let parts = ds.profile.parts;
+            let mut ev = ClusterGcnTrainer::new(ds, art, parts, 0.01, 0)?;
+            ev.params = params;
+            let (_, _, te) = ev.evaluate()?;
+            rows.push(vec![
+                ds_name.into(),
+                "GraphSAGE gcn2".into(),
+                format!("{te:.4}"),
+            ]);
+            eprintln!("done {ds_name} sage: {te:.4}");
+        }
+        // --- full-batch where compiled (flickr, arxiv) --------------------
+        for model in ["gcn2", "gcnii8", "pna3"] {
+            let name = format!("{ds_name}_{model}_full");
+            if ctx.manifest.artifacts.get(&name).is_none() {
+                continue;
+            }
+            let (ds, art) = ctx.pair(ds_name, &name)?;
+            let mut fb = FullBatchTrainer::new(ds, art, 0.01, Some(1.0), 0.0, 0)?;
+            let r = fb.train(epochs, 2)?;
+            rows.push(vec![
+                ds_name.into(),
+                format!("Full {model}"),
+                format!("{:.4}", r.test_at_best_val),
+            ]);
+            eprintln!("done {name}: {:.4}", r.test_at_best_val);
+        }
+        let _ = score; // (used in other benches)
+    }
+    print_table(
+        "Table 5: large-graph test metric (acc / micro-F1)",
+        &["dataset", "method", "test"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Paper Table 6 (appendix): inter/intra-connectivity ratio of mini-batches,
+//! random vs METIS, across all dataset profiles. Reproduction target: METIS
+//! reduces the ratio ~4x on average; most datasets land in [0.1, 2.5].
+//!
+//!     cargo bench --bench table6_ratio
+
+use gas::bench::print_table;
+use gas::config::Ctx;
+use gas::partition::{inter_intra_ratio, metis_partition, random_partition};
+use gas::util::timer::Timer;
+
+const DATASETS: [&str; 15] = [
+    "cora", "citeseer", "pubmed", "coauthor_cs", "coauthor_physics",
+    "amazon_computer", "amazon_photo", "wiki_cs", "cluster", "reddit",
+    "ppi", "flickr", "yelp", "arxiv", "products",
+];
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = Ctx::new()?;
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    for ds_name in DATASETS {
+        let ds = ctx.dataset(ds_name)?;
+        let k = ds.profile.parts;
+        let t = Timer::start();
+        let pm = metis_partition(&ds.graph, k, 1);
+        let metis_s = t.elapsed_s();
+        let qm = inter_intra_ratio(&ds.graph, &pm, k);
+        let qr = inter_intra_ratio(&ds.graph, &random_partition(ds.n(), k, 1), k);
+        speedups.push(qr.inter_intra_ratio / qm.inter_intra_ratio.max(1e-9));
+        rows.push(vec![
+            ds_name.to_string(),
+            format!("{k}"),
+            format!("{:.2}", qr.inter_intra_ratio),
+            format!("{:.2}", qm.inter_intra_ratio),
+            format!("{:.1}x", qr.inter_intra_ratio / qm.inter_intra_ratio.max(1e-9)),
+            format!("{:.2}", qm.imbalance),
+            format!("{:.2}s", metis_s),
+        ]);
+    }
+    print_table(
+        "Table 6: inter/intra-connectivity ratio (paper: METIS ~4x lower on average)",
+        &["dataset", "parts", "random", "METIS", "reduction", "imbalance", "metis time"],
+        &rows,
+    );
+    let gm = speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64;
+    println!("\ngeometric-mean ratio reduction: {:.1}x (paper: ~4x)", gm.exp());
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""AOT lowering: every registered artifact -> artifacts/<name>.hlo.txt.
+
+HLO *text* is the interchange format (NOT `lowered.compiler_ir("hlo")
+.serialize()`): the rust side's xla_extension 0.5.1 rejects jax>=0.5's
+64-bit instruction ids, while the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Also emits artifacts/manifest.json — the Rust coordinator's configuration
+root: artifact shapes + input/output orders + parameter init specs + the
+synthetic dataset profiles.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--filter SUBSTR] [--jobs N]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs, models
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(cfg) -> str:
+    step = models.make_train_step(cfg)
+    args = models.example_inputs(cfg)
+    # keep_unused: the rust marshaller feeds every manifest input, so the
+    # HLO signature must retain args the model ignores (e.g. `noise` when
+    # the Lipschitz-reg branch is compiled out).
+    lowered = jax.jit(step, keep_unused=True).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(cfg) -> dict:
+    specs = models.param_specs(cfg)
+    # jax flattens dict pytrees in sorted-key order; manifest mirrors that.
+    by_name = dict(specs)
+    ordered = sorted(by_name.keys())
+    params = [{"name": k, **by_name[k]} for k in ordered]
+    d = configs.config_dict(cfg)
+    full = cfg.program == "full"
+    n_in = cfg.nb if full else cfg.nt
+    hist_layers = max(cfg.layers - 1, 0)
+    hist_shape = [1, 1, 1] if full else [hist_layers, cfg.nh, cfg.hist_dim]
+    labels_shape = [cfg.nb] if cfg.loss == "ce" else [cfg.nb, cfg.c]
+    noise_dim = max(cfg.hist_dim, cfg.h)
+    inputs = (
+        [{"name": p["name"], "kind": "param", "shape": p["shape"],
+          "dtype": "f32"} for p in params]
+        + [
+            {"name": "x", "kind": "x", "shape": [n_in, cfg.f], "dtype": "f32"},
+            {"name": "edge_src", "kind": "edge_src", "shape": [cfg.e],
+             "dtype": "i32"},
+            {"name": "edge_dst", "kind": "edge_dst", "shape": [cfg.e],
+             "dtype": "i32"},
+            {"name": "edge_w", "kind": "edge_w", "shape": [cfg.e],
+             "dtype": "f32"},
+            {"name": "hist", "kind": "hist", "shape": hist_shape,
+             "dtype": "f32"},
+            {"name": "labels", "kind": "labels", "shape": labels_shape,
+             "dtype": "i32" if cfg.loss == "ce" else "f32"},
+            {"name": "label_mask", "kind": "label_mask", "shape": [cfg.nb],
+             "dtype": "f32"},
+            {"name": "deg", "kind": "deg", "shape": [n_in], "dtype": "f32"},
+            {"name": "noise", "kind": "noise", "shape": [n_in, noise_dim],
+             "dtype": "f32"},
+            {"name": "reg_lambda", "kind": "reg_lambda", "shape": [],
+             "dtype": "f32"},
+        ]
+    )
+    outputs = (
+        [{"name": "loss", "shape": []}]
+        + [{"name": f"grad_{p['name']}", "shape": p["shape"]} for p in params]
+        + [{"name": "push",
+            "shape": [hist_layers, cfg.nb, cfg.hist_dim] if not full
+            else [hist_layers, cfg.nb, cfg.hist_dim]},
+           {"name": "logits", "shape": [cfg.nb, cfg.c]}]
+    )
+    d.update({
+        "file": f"{cfg.name}.hlo.txt",
+        "params": params,
+        "inputs": inputs,
+        "outputs": outputs,
+    })
+    return d
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--filter", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    todo = [c for c in configs.REGISTRY if args.filter in c.name]
+    print(f"lowering {len(todo)} artifacts -> {args.out_dir}", flush=True)
+
+    entries = []
+    t_all = time.time()
+    for i, cfg in enumerate(todo):
+        path = os.path.join(args.out_dir, f"{cfg.name}.hlo.txt")
+        entries.append(manifest_entry(cfg))
+        if os.path.exists(path) and not args.force:
+            print(f"[{i+1}/{len(todo)}] {cfg.name}: cached", flush=True)
+            continue
+        t0 = time.time()
+        try:
+            text = lower_one(cfg)
+        except Exception as e:  # keep going; report at the end
+            print(f"[{i+1}/{len(todo)}] {cfg.name}: FAILED {e}", flush=True)
+            entries.pop()
+            continue
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[{i+1}/{len(todo)}] {cfg.name}: {len(text)/1e3:.0f}kB "
+              f"in {time.time()-t0:.1f}s", flush=True)
+
+    manifest = {
+        "version": 1,
+        "profiles": {p.name: configs.profile_dict(p)
+                     for p in configs.PROFILES.values()},
+        "artifacts": {e["name"]: e for e in entries},
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(entries)} artifacts) "
+          f"total {time.time()-t_all:.0f}s", flush=True)
+    if len(entries) != len(todo):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

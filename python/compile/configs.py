@@ -1,0 +1,229 @@
+"""Artifact + dataset-profile registry — the single source of truth.
+
+Every compiled artifact is described by an `ArtifactConfig` (static shapes,
+model family, program family). Every synthetic dataset is described by a
+`DatasetProfile` mirroring the statistics of the paper's Table 8 (scaled to
+the CPU testbed; scale factors recorded in DESIGN.md §3 and EXPERIMENTS.md).
+`aot.py` lowers all artifacts and writes everything — including the dataset
+profiles — into artifacts/manifest.json, which the Rust coordinator treats
+as its configuration root. Rust never re-derives shapes on its own.
+"""
+
+import math
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional
+
+
+# ---------------------------------------------------------------------------
+# dataset profiles (synthetic stand-ins for the paper's datasets, §3 DESIGN)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DatasetProfile:
+    name: str
+    kind: str          # "planted" (homophilic planted partition) | "sbm"
+    n: int             # nodes (scaled)
+    f: int             # feature dim
+    c: int             # classes
+    avg_deg: float     # mean *undirected* degree (directed deg ~ same)
+    multilabel: bool = False
+    train_frac: float = 0.1
+    val_frac: float = 0.15
+    homophily: float = 0.8    # fraction of intra-class edges (planted)
+    feat_noise: float = 1.0   # class-center feature SNR control
+    parts: int = 4            # METIS partitions (=> mini-batches)
+    paper_n: int = 0          # the paper's original node count
+    seed: int = 7
+
+
+def _p(name, kind, n, f, c, deg, parts, paper_n, train_frac=0.1,
+       multilabel=False, homophily=0.8, seed=7):
+    return DatasetProfile(
+        name=name, kind=kind, n=n, f=f, c=c, avg_deg=deg, parts=parts,
+        paper_n=paper_n, train_frac=train_frac, multilabel=multilabel,
+        homophily=homophily, seed=seed)
+
+
+# Small transductive benchmarks (Table 1 / 2 / 6) — near-original scale,
+# feature dims trimmed for the CPU testbed.
+SMALL = [
+    _p("cora",             "planted", 2708, 256, 7,  3.9, 4,  2708,  0.052),
+    _p("citeseer",         "planted", 3327, 256, 6,  2.8, 4,  3327,  0.036),
+    _p("pubmed",           "planted", 6000, 128, 3,  4.5, 6,  19717, 0.02),
+    _p("coauthor_cs",      "planted", 6000, 256, 15, 8.9, 8,  18333, 0.016),
+    _p("coauthor_physics", "planted", 6000, 128, 5, 12.0, 8,  34493, 0.01),
+    _p("amazon_computer",  "planted", 6000, 128, 10, 16.0, 8, 13752, 0.015),
+    _p("amazon_photo",     "planted", 5000, 128, 8, 16.0, 8,  7650,  0.021),
+    _p("wiki_cs",          "planted", 4000, 128, 10, 14.0, 8, 11701, 0.05),
+]
+
+# Large benchmarks (Table 3 / 4 / 5 / 6) — scaled down, structure preserved.
+LARGE = [
+    _p("cluster",  "sbm",     24000, 6,   6,  12.0, 32, 1406436, 0.8335),
+    _p("reddit",   "planted", 40000, 128, 41, 24.0, 40, 232965,  0.65),
+    _p("ppi",      "planted", 12000, 64,  40, 14.0, 20, 56944,   0.75,
+       multilabel=True),
+    _p("flickr",   "planted", 20000, 128, 7,  10.0, 24, 89250,   0.50),
+    _p("yelp",     "planted", 40000, 64,  50, 10.0, 40, 716847,  0.70,
+       multilabel=True),
+    _p("arxiv",    "planted", 30000, 128, 40, 7.0,  32, 169343,  0.54),
+    _p("products", "planted", 120000, 100, 47, 15.0, 96, 2449029, 0.08),
+]
+
+PROFILES: Dict[str, DatasetProfile] = {p.name: p for p in SMALL + LARGE}
+
+
+# ---------------------------------------------------------------------------
+# artifact configs
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ArtifactConfig:
+    name: str
+    model: str         # gcn | gat | appnp | gcnii | gin | pna
+    program: str       # "gas" | "full"
+    dataset: str       # profile name ("" for synthetic fig4 configs)
+    nb: int            # padded in-batch nodes (== padded total for "full")
+    nh: int            # padded halo nodes (0 for "full")
+    e: int             # padded directed edge count
+    f: int
+    h: int
+    c: int
+    layers: int
+    loss: str = "ce"   # "ce" | "bce"
+    heads: int = 4     # GAT
+    alpha: float = 0.1     # APPNP/GCNII teleport
+    lam: float = 1.0       # GCNII beta = log(lam/l + 1)
+    with_reg: bool = False  # compile the Lipschitz-reg branch (GIN/GCNII)
+    edge_weight: str = "gcn_norm"  # "gcn_norm" | "ones" (rust-side w calc)
+    scaler_mean: float = 1.0       # PNA: mean log(deg+1), baked
+    block: int = 2048              # L1 edge-block size
+    hist_dim: int = 0              # set in __post_init__
+
+    def __post_init__(self):
+        if self.hist_dim == 0:
+            self.hist_dim = self.c if self.model == "appnp" else self.h
+
+    @property
+    def nt(self) -> int:
+        return self.nb + self.nh
+
+
+MODEL_EDGE_WEIGHT = {
+    "gcn": "gcn_norm", "gcnii": "gcn_norm", "appnp": "gcn_norm",
+    "gat": "ones", "gin": "ones", "pna": "ones",
+}
+
+# layers per model family for the standard benchmarks
+MODEL_LAYERS = {"gcn": 2, "gat": 2, "appnp": 10, "gcnii": 8, "gin": 4,
+                "pna": 3}
+
+
+def _gas_shapes(p: DatasetProfile):
+    """Padded GAS batch shapes for a profile: one METIS part per batch."""
+    nb = int(math.ceil(p.n / p.parts * 1.5))
+    nh = min(p.n, 8 * nb)
+    # edges with dst in batch: ~deg * nb, inflated for random-batch ablations
+    e = _round_up(int(p.avg_deg * nb * 3.0) + 64, 256)
+    return nb, nh, e
+
+
+def _full_shapes(p: DatasetProfile):
+    nb = p.n
+    e = _round_up(int(p.n * p.avg_deg * 1.10) + 64, 256)
+    return nb, 0, e
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def make_config(dataset: str, model: str, program: str, *, layers=None,
+                h=64, with_reg=False, suffix="", heads=4) -> ArtifactConfig:
+    p = PROFILES[dataset]
+    layers = layers or MODEL_LAYERS[model]
+    if program == "gas":
+        nb, nh, e = _gas_shapes(p)
+    else:
+        nb, nh, e = _full_shapes(p)
+    loss = "bce" if p.multilabel else "ce"
+    name = f"{dataset}_{model}{layers}_{program}{suffix}"
+    return ArtifactConfig(
+        name=name, model=model, program=program, dataset=dataset,
+        nb=nb, nh=nh, e=e, f=p.f, h=h, c=p.c, layers=layers, loss=loss,
+        heads=heads, with_reg=with_reg,
+        edge_weight=MODEL_EDGE_WEIGHT[model],
+        scaler_mean=math.log(p.avg_deg + 1.0),
+    )
+
+
+def build_registry() -> List[ArtifactConfig]:
+    cfgs: List[ArtifactConfig] = []
+
+    # --- Table 1 / Table 2: 4 models x 8 small datasets x {full, gas} ------
+    for p in SMALL:
+        for model in ["gcn", "gat", "appnp", "gcnii"]:
+            reg = model == "gcnii"  # Table 2 ablation toggles reg_lambda
+            cfgs.append(make_config(p.name, model, "gas", with_reg=reg))
+            cfgs.append(make_config(p.name, model, "full"))
+
+    # --- Fig. 3: deep GCNII-64 and expressive GIN-4 ------------------------
+    cfgs.append(make_config("cora", "gcnii", "gas", layers=64,
+                            with_reg=True, suffix="_deep"))
+    cfgs.append(make_config("cora", "gcnii", "full", layers=64,
+                            suffix="_deep"))
+    cfgs.append(make_config("cluster", "gin", "gas", with_reg=True))
+    cfgs.append(make_config("cluster", "gin", "full"))
+
+    # --- Table 4: 4-layer GCN (GTTF comparison) ----------------------------
+    for ds in ["cora", "pubmed", "ppi", "flickr"]:
+        cfgs.append(make_config(ds, "gcn", "gas", layers=4))
+        cfgs.append(make_config(ds, "gcn", "full", layers=4))
+
+    # --- Table 3 / 5: large datasets, GCN / GCNII / PNA via GAS ------------
+    for p in LARGE:
+        if p.name == "cluster":
+            continue
+        for model in ["gcn", "gcnii", "pna"]:
+            reg = model == "gcnii"
+            cfgs.append(make_config(p.name, model, "gas", with_reg=reg))
+    # full-batch feasible on the two smaller large graphs (Table 5 rows)
+    for ds in ["flickr", "arxiv"]:
+        for model in ["gcn", "gcnii", "pna"]:
+            cfgs.append(make_config(ds, model, "full"))
+
+    # --- Cluster-GCN / SAGE subgraph baselines: full program at batch size -
+    for p in SMALL + LARGE:
+        pc = make_config(p.name, "gcn", "gas")  # borrow gas shapes
+        cfgs.append(ArtifactConfig(
+            name=f"{p.name}_gcn2_subg", model="gcn", program="full",
+            dataset=p.name, nb=pc.nb + pc.nh, nh=0, e=pc.e, f=p.f, h=64,
+            c=p.c, layers=2, loss=pc.loss,
+            edge_weight="gcn_norm", scaler_mean=pc.scaler_mean))
+
+    # --- Fig. 4: GIN-4, fixed 4000-node batch, swept halo size -------------
+    for i, nh in enumerate([512, 1024, 2048, 4096, 8192, 16384]):
+        nb = 4096
+        e = _round_up(60 * nb + 60 * nh + 64, 256)
+        cfgs.append(ArtifactConfig(
+            name=f"fig4_gin4_nh{nh}", model="gin", program="gas",
+            dataset="", nb=nb, nh=nh, e=e, f=64, h=64, c=8, layers=4,
+            loss="ce", edge_weight="ones", with_reg=False))
+
+    names = [c.name for c in cfgs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return cfgs
+
+
+REGISTRY: List[ArtifactConfig] = build_registry()
+BY_NAME: Dict[str, ArtifactConfig] = {c.name: c for c in REGISTRY}
+
+
+def profile_dict(p: DatasetProfile) -> dict:
+    return asdict(p)
+
+
+def config_dict(c: ArtifactConfig) -> dict:
+    d = asdict(c)
+    d["nt"] = c.nt
+    return d

@@ -1,0 +1,343 @@
+"""L1 Pallas kernels: sparse neighbor aggregation (the message-passing hot spot).
+
+The paper's hot loop — for every GNN layer, aggregate messages from the
+mini-batch's 1-hop sources (in-batch nodes + halo histories) into in-batch
+destinations — is an edge-parallel gather -> weight -> segment-scatter-add.
+On GPU the reference implementation (PyG) uses atomics over threadblocks;
+the TPU adaptation (DESIGN.md §Hardware-Adaptation) tiles the *edge list*
+into VMEM-sized blocks via BlockSpec and keeps the output tile resident
+across the edge-block grid (revisiting-reduction pattern). `interpret=True`
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, so the
+kernels lower to plain HLO while preserving the block structure.
+
+Autodiff: `pallas_call` grid kernels are not JVP-traceable in this jax
+version, so every public op carries a `custom_vjp` whose backward pass is
+*also* expressed with the pallas scatter kernel (the VJP of a
+gather->scale->scatter is another gather->scale->scatter with src/dst
+swapped) — the optimized kernel stays on the hot path in both directions.
+
+Padding convention: padded edges carry ``w == 0`` and ``src == dst == 0``
+so they contribute exactly nothing (scatter_sum) or lose every max/min.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default edge-block size. VMEM estimate per block (f32):
+#   src/dst idx: 2 * EB * 4B, w: EB * 4B, gathered rows: EB * H * 4B,
+#   out tile resident: N_out * H * 4B.
+# For EB=2048, H=64, N_out=4096: 2048*12B + 2048*64*4B + 4096*64*4B
+#   = 24KB + 512KB + 1MB  << 16MB VMEM.
+DEFAULT_EDGE_BLOCK = 2048
+_BIG = 3.0e38
+
+
+def _choose_block(num_edges: int, block: int) -> int:
+    """Pick an edge-block size that divides the padded edge count."""
+    block = min(block, num_edges)
+    while num_edges % block != 0:
+        block -= 1
+    return max(block, 1)
+
+
+# ---------------------------------------------------------------------------
+# raw pallas implementations (not differentiable; wrapped below)
+# ---------------------------------------------------------------------------
+
+def _scatter_sum_kernel(src_ref, dst_ref, w_ref, x_ref, o_ref):
+    """One edge-block: gather rows of x, weight, segment-add into out.
+
+    Out is the *whole* [N_out, H] array (index_map pinned to 0) and is
+    accumulated across grid steps — the revisiting-reduction pattern.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    w = w_ref[...]
+    msgs = x_ref[src, :] * w[:, None]
+    o_ref[...] += jnp.zeros_like(o_ref).at[dst].add(msgs)
+
+
+def _scatter_sum_impl(x, src, dst, w, num_out, block):
+    num_edges = src.shape[0]
+    feat = x.shape[1]
+    eb = _choose_block(num_edges, block)
+    grid = (num_edges // eb,)
+    return pl.pallas_call(
+        _scatter_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_out, feat), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_out, feat), x.dtype),
+        interpret=True,
+    )(src, dst, w, x)
+
+
+def _scatter_extreme_kernel(src_ref, dst_ref, m_ref, x_ref, o_ref, *, sign):
+    """Shared body for scatter_max (sign=+1) / scatter_min (sign=-1)."""
+    step = pl.program_id(0)
+    big = jnp.asarray(_BIG, o_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, -big)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    mask = m_ref[...]
+    vals = sign * x_ref[src, :]
+    vals = jnp.where(mask[:, None] > 0, vals, -big)
+    blk = jnp.full_like(o_ref, -big).at[dst].max(vals)
+    o_ref[...] = jnp.maximum(o_ref[...], blk)
+
+
+def _scatter_extreme_impl(x, src, dst, mask, num_out, sign, block):
+    num_edges = src.shape[0]
+    feat = x.shape[1]
+    eb = _choose_block(num_edges, block)
+    grid = (num_edges // eb,)
+    out = pl.pallas_call(
+        partial(_scatter_extreme_kernel, sign=sign),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_out, feat), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_out, feat), x.dtype),
+        interpret=True,
+    )(src, dst, mask, x)
+    # Destinations with no live in-edges come out as -BIG; clamp to 0 so
+    # isolated (or fully padded) nodes aggregate to zero like PyG does.
+    out = jnp.where(out <= -1.0e38, jnp.zeros_like(out), out)
+    return sign * out
+
+
+def _scatter_sum_vec_kernel(dst_ref, v_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.zeros_like(o_ref).at[dst_ref[...]].add(v_ref[...])
+
+
+def _scatter_sum_vec_impl(v, dst, num_out, block):
+    num_edges = dst.shape[0]
+    eb = _choose_block(num_edges, block)
+    grid = (num_edges // eb,)
+    return pl.pallas_call(
+        _scatter_sum_vec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec((eb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_out,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_out,), v.dtype),
+        interpret=True,
+    )(dst, v)
+
+
+def _scatter_pair_kernel(src_ref, dst_ref, w_ref, xs_ref, xd_ref, w1_ref,
+                         o_ref):
+    """Fused PNA-style edge MLP + scatter: per edge, [x_dst || x_src] @ W1."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    w = w_ref[...]
+    pair = jnp.concatenate([xd_ref[dst, :], xs_ref[src, :]], axis=1)
+    msgs = (pair @ w1_ref[...]) * w[:, None]
+    o_ref[...] += jnp.zeros_like(o_ref).at[dst].add(msgs)
+
+
+def _scatter_pair_impl(x_src, x_dst, src, dst, w, w1, num_out, block):
+    num_edges = src.shape[0]
+    eb = _choose_block(num_edges, block)
+    grid = (num_edges // eb,)
+    h_out = w1.shape[1]
+    return pl.pallas_call(
+        _scatter_pair_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec((eb,), lambda i: (i,)),
+            pl.BlockSpec(x_src.shape, lambda i: (0, 0)),
+            pl.BlockSpec(x_dst.shape, lambda i: (0, 0)),
+            pl.BlockSpec(w1.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_out, h_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_out, h_out), x_src.dtype),
+        interpret=True,
+    )(src, dst, w, x_src, x_dst, w1)
+
+
+# ---------------------------------------------------------------------------
+# public differentiable ops
+#
+# All are module-level custom_vjp functions taking index arrays as explicit
+# arguments (returning None cotangents) — closures over tracers break inside
+# lax.scan (e.g. the GCNII layer stack).
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _scatter_sum_cv(num_out, block, x, src, dst, w):
+    return _scatter_sum_impl(x, src, dst, w, num_out, block)
+
+
+def _scatter_sum_fwd(num_out, block, x, src, dst, w):
+    return _scatter_sum_cv(num_out, block, x, src, dst, w), (x, src, dst, w)
+
+
+def _scatter_sum_bwd(num_out, block, res, g):
+    x, src, dst, w = res
+    # VJP of gather->scale->scatter is gather->scale->scatter, src/dst swapped
+    dx = _scatter_sum_impl(g, dst, src, w, x.shape[0], block)
+    dw = jnp.sum(x[src] * g[dst], axis=1)
+    return dx, None, None, dw
+
+
+_scatter_sum_cv.defvjp(_scatter_sum_fwd, _scatter_sum_bwd)
+
+
+def scatter_sum(x, src, dst, w, num_out, *, block=DEFAULT_EDGE_BLOCK):
+    """out[d] = sum_e [dst_e == d] * w_e * x[src_e]  with out: [num_out, H].
+
+    x: [N_src, H] f32 — message sources (in-batch embeddings ++ halo history)
+    src: [E] i32 into x, dst: [E] i32 into out, w: [E] f32 (0 => padded).
+    """
+    return _scatter_sum_cv(num_out, block, x, src, dst, w)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _scatter_ext_cv(num_out, block, sign, x, src, dst, mask):
+    return _scatter_extreme_impl(x, src, dst, mask, num_out, sign, block)
+
+
+def _scatter_ext_fwd(num_out, block, sign, x, src, dst, mask):
+    out = _scatter_ext_cv(num_out, block, sign, x, src, dst, mask)
+    return out, (x, out, src, dst, mask)
+
+
+def _scatter_ext_bwd(num_out, block, sign, res, g):
+    x, out, src, dst, mask = res
+    # subgradient: route g to edges attaining the extreme (ties share).
+    eidx = jnp.arange(src.shape[0], dtype=src.dtype)
+    eq = (x[src] == out[dst]).astype(g.dtype)
+    vals = g[dst] * eq
+    dx = _scatter_sum_impl(vals, eidx, src, mask, x.shape[0], block)
+    return dx, None, None, None
+
+
+_scatter_ext_cv.defvjp(_scatter_ext_fwd, _scatter_ext_bwd)
+
+
+def scatter_max(x, src, dst, mask, num_out, *, block=DEFAULT_EDGE_BLOCK):
+    """out[d] = max_e {x[src_e] : dst_e == d, mask_e > 0}; 0 if no edge."""
+    return _scatter_ext_cv(num_out, block, 1.0, x, src, dst, mask)
+
+
+def scatter_min(x, src, dst, mask, num_out, *, block=DEFAULT_EDGE_BLOCK):
+    """out[d] = min_e {x[src_e] : dst_e == d, mask_e > 0}; 0 if no edge."""
+    return _scatter_ext_cv(num_out, block, -1.0, x, src, dst, mask)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _scatter_vec_cv(num_out, block, v, dst):
+    return _scatter_sum_vec_impl(v, dst, num_out, block)
+
+
+def _scatter_vec_fwd(num_out, block, v, dst):
+    return _scatter_vec_cv(num_out, block, v, dst), dst
+
+
+def _scatter_vec_bwd(num_out, block, dst, g):
+    return g[dst], None
+
+
+_scatter_vec_cv.defvjp(_scatter_vec_fwd, _scatter_vec_bwd)
+
+
+def scatter_sum_vec(v, dst, num_out, *, block=DEFAULT_EDGE_BLOCK):
+    """Scalar-per-edge scatter-add: out[d] = sum_e [dst_e==d] v_e."""
+    return _scatter_vec_cv(num_out, block, v, dst)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _scatter_pair_cv(num_out, block, x_src, x_dst, src, dst, w, w1):
+    return _scatter_pair_impl(x_src, x_dst, src, dst, w, w1, num_out, block)
+
+
+def _scatter_pair_fwd(num_out, block, x_src, x_dst, src, dst, w, w1):
+    out = _scatter_pair_cv(num_out, block, x_src, x_dst, src, dst, w, w1)
+    return out, (x_src, x_dst, src, dst, w, w1)
+
+
+def _scatter_pair_bwd(num_out, block, res, g):
+    xs, xd, src, dst, w, w1 = res
+    hd = xd.shape[1]
+    eidx = jnp.arange(src.shape[0], dtype=src.dtype)
+    dmsgs = g[dst] * w[:, None]              # [E, H']
+    dpair = dmsgs @ w1.T                     # [E, hd + hs]
+    dxd = _scatter_sum_impl(dpair[:, :hd], eidx, dst, jnp.ones_like(w),
+                            xd.shape[0], block)
+    dxs = _scatter_sum_impl(dpair[:, hd:], eidx, src, jnp.ones_like(w),
+                            xs.shape[0], block)
+    pair = jnp.concatenate([xd[dst], xs[src]], axis=1)
+    dw1 = pair.T @ dmsgs
+    dw = jnp.sum((pair @ w1) * g[dst], axis=1)
+    return dxs, dxd, None, None, dw, dw1
+
+
+_scatter_pair_cv.defvjp(_scatter_pair_fwd, _scatter_pair_bwd)
+
+
+def scatter_pair_mlp_sum(x_src, x_dst, src, dst, w, w1, num_out,
+                         *, block=DEFAULT_EDGE_BLOCK):
+    """Fused edge-message transform + aggregation (PNA hot path).
+
+    out[d] = sum_e [dst_e==d] w_e * ( [x_dst[dst_e] || x_src[src_e]] @ w1 )
+    Fusing the pair-concat matmul into the edge block avoids materializing
+    the [E, 2H] pair tensor in HBM — the classic PNA memory blow-up.
+    """
+    return _scatter_pair_cv(num_out, block, x_src, x_dst, src, dst, w, w1)
+
+
+def edge_softmax_parts(logits, dst, mask, num_out, *, block=DEFAULT_EDGE_BLOCK):
+    """Return (per-dst max, per-dst sum of exp, per-edge exp) for edge-softmax.
+
+    The caller computes alpha_e = ex_e / denom[dst_e]. The max is
+    stop-gradiented (softmax is shift-invariant, so this is exact).
+    """
+    num_edges = dst.shape[0]
+    eidx = jnp.arange(num_edges, dtype=dst.dtype)
+    neg = jnp.asarray(-1.0e30, logits.dtype)
+    masked = jnp.where(mask > 0, logits, neg)
+    mx = jax.lax.stop_gradient(
+        scatter_max(masked[:, None], eidx, dst, mask, num_out,
+                    block=block)[:, 0])
+    ex = jnp.where(mask > 0, jnp.exp(masked - mx[dst]), 0.0)
+    denom = scatter_sum_vec(ex, dst, num_out, block=block)
+    return mx, denom, ex

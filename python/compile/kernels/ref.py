@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Each function mirrors one kernel in aggregate.py with the simplest possible
+jnp formulation (no blocking, no grid). pytest asserts allclose between the
+two across hypothesis-driven shape/value sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def scatter_sum_ref(x, src, dst, w, num_out):
+    msgs = x[src, :] * w[:, None]
+    return jnp.zeros((num_out, x.shape[1]), x.dtype).at[dst].add(msgs)
+
+
+def scatter_max_ref(x, src, dst, mask, num_out):
+    big = jnp.asarray(3.0e38, x.dtype)
+    vals = jnp.where(mask[:, None] > 0, x[src, :], -big)
+    out = jnp.full((num_out, x.shape[1]), -big, x.dtype).at[dst].max(vals)
+    return jnp.where(out <= -1.0e38, jnp.zeros_like(out), out)
+
+
+def scatter_min_ref(x, src, dst, mask, num_out):
+    big = jnp.asarray(3.0e38, x.dtype)
+    vals = jnp.where(mask[:, None] > 0, x[src, :], big)
+    out = jnp.full((num_out, x.shape[1]), big, x.dtype).at[dst].min(vals)
+    return jnp.where(out >= 1.0e38, jnp.zeros_like(out), out)
+
+
+def scatter_sum_vec_ref(v, dst, num_out):
+    return jnp.zeros((num_out,), v.dtype).at[dst].add(v)
+
+
+def scatter_pair_mlp_sum_ref(x_src, x_dst, src, dst, w, w1, num_out):
+    pair = jnp.concatenate([x_dst[dst, :], x_src[src, :]], axis=1)
+    msgs = (pair @ w1) * w[:, None]
+    return jnp.zeros((num_out, w1.shape[1]), x_src.dtype).at[dst].add(msgs)
+
+
+def edge_softmax_parts_ref(logits, dst, mask, num_out):
+    neg = jnp.asarray(-1.0e30, logits.dtype)
+    masked = jnp.where(mask > 0, logits, neg)
+    big = jnp.asarray(3.0e38, logits.dtype)
+    mx = jnp.full((num_out,), -big, logits.dtype).at[dst].max(
+        jnp.where(mask > 0, masked, -big))
+    mx = jnp.where(mx <= -1.0e38, jnp.zeros_like(mx), mx)
+    ex = jnp.where(mask > 0, jnp.exp(masked - mx[dst]), 0.0)
+    denom = jnp.zeros((num_out,), logits.dtype).at[dst].add(ex)
+    return mx, denom, ex

@@ -1,0 +1,448 @@
+"""L2: GNN operators + GAS history-injected networks, fwd/bwd in JAX.
+
+Two program families per operator (see DESIGN.md §2):
+
+* ``gas``  — the GAS computation: each layer computes embeddings for the
+  NB in-batch nodes only; message sources are the concatenation of the
+  freshly computed in-batch embeddings and the *historical* embeddings of
+  the NH halo nodes (an input — gradients do not flow into histories,
+  exactly Equation (2) of the paper). Per-layer in-batch embeddings are
+  returned so the coordinator can push them to the history store.
+
+* ``full`` — the exact computation on a (sub)graph: every node's embedding
+  is computed at every layer. Used for full-batch training, Cluster-GCN
+  (intra-cluster subgraph), and GraphSAGE-style sampled subgraphs.
+
+All neighborhood aggregations go through the L1 Pallas kernels
+(`kernels.aggregate`), so the kernels lower into the same HLO module.
+
+Operators follow the paper's appendix §10 formulas: GCN, GAT, APPNP,
+GCNII, GIN, PNA. The Lipschitz auxiliary loss (Eq. 3) is computed for
+layers with H-dimensional inputs and weighted by the runtime scalar
+``reg_lambda`` (0 disables).
+"""
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate as K
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (shape + init), consumed by aot.py for the manifest and by
+# the Rust coordinator for initialization. init: "glorot" | "zeros" | "const:v"
+# ---------------------------------------------------------------------------
+
+def glorot(shape):
+    return {"shape": list(shape), "init": "glorot"}
+
+
+def zeros(shape):
+    return {"shape": list(shape), "init": "zeros"}
+
+
+def const(shape, v):
+    return {"shape": list(shape), "init": f"const:{v}"}
+
+
+def param_specs(cfg) -> List[Tuple[str, dict]]:
+    """Ordered parameter list for a model config."""
+    f, h, c, L = cfg.f, cfg.h, cfg.c, cfg.layers
+    m = cfg.model
+    specs: List[Tuple[str, dict]] = []
+    if m == "gcn":
+        dims = [f] + [h] * (L - 1) + [c]
+        for l in range(L):
+            specs.append((f"w{l}", glorot((dims[l], dims[l + 1]))))
+            specs.append((f"b{l}", zeros((dims[l + 1],))))
+    elif m == "gin":
+        dims = [f] + [h] * L
+        for l in range(L):
+            specs.append((f"mlp{l}_w1", glorot((dims[l], h))))
+            specs.append((f"mlp{l}_b1", zeros((h,))))
+            specs.append((f"mlp{l}_w2", glorot((h, h))))
+            specs.append((f"mlp{l}_b2", zeros((h,))))
+            specs.append((f"eps{l}", zeros((1,))))
+        specs.append(("head_w", glorot((h, c))))
+        specs.append(("head_b", zeros((c,))))
+    elif m == "gat":
+        kh = cfg.heads
+        dims = [f] + [h] * (L - 1) + [c]
+        for l in range(L):
+            heads_l = kh if l < L - 1 else 1
+            dh = dims[l + 1] // heads_l if l < L - 1 else dims[l + 1]
+            specs.append((f"w{l}", glorot((dims[l], heads_l * dh))))
+            specs.append((f"asrc{l}", glorot((heads_l, dh))))
+            specs.append((f"adst{l}", glorot((heads_l, dh))))
+            specs.append((f"b{l}", zeros((heads_l * dh,))))
+    elif m == "appnp":
+        specs.append(("mlp_w1", glorot((f, h))))
+        specs.append(("mlp_b1", zeros((h,))))
+        specs.append(("mlp_w2", glorot((h, c))))
+        specs.append(("mlp_b2", zeros((c,))))
+    elif m == "gcnii":
+        specs.append(("w_in", glorot((f, h))))
+        specs.append(("b_in", zeros((h,))))
+        specs.append(("w_stack", glorot((L, h, h))))
+        specs.append(("w_out", glorot((h, c))))
+        specs.append(("b_out", zeros((c,))))
+    elif m == "pna":
+        dims = [f] + [h] * L
+        for l in range(L):
+            specs.append((f"w1_{l}", glorot((2 * dims[l], h))))
+            specs.append((f"w2_{l}", glorot((dims[l] + 9 * h, h))))
+            specs.append((f"b2_{l}", zeros((h,))))
+        specs.append(("head_w", glorot((h, c))))
+        specs.append(("head_b", zeros((c,))))
+    else:
+        raise ValueError(f"unknown model {m}")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# layer primitives
+# ---------------------------------------------------------------------------
+
+def _gcn_propagate(z, src, dst, w, deg, n_out, block):
+    """Symmetric-normalized propagation incl. self loop: P̂ z.
+
+    ``w`` carries 1/sqrt((deg_s+1)(deg_d+1)) for real edges, 0 for padding.
+    The self term uses 1/(deg_v+1).
+    """
+    agg = K.scatter_sum(z, src, dst, w, n_out, block=block)
+    self_w = 1.0 / (deg[:n_out] + 1.0)
+    return agg + self_w[:, None] * z[:n_out]
+
+
+def _leaky(x):
+    return jax.nn.leaky_relu(x, negative_slope=0.2)
+
+
+def gat_layer(p, l, h_src, src, dst, emask, deg, n_out, heads, block):
+    """Multi-head GAT layer (appendix formula), softmax over N(v) ∪ {v}."""
+    w = p[f"w{l}"]
+    dh = p[f"asrc{l}"].shape[1]
+    z = h_src @ w  # [NT, K*dh]
+    zk = z.reshape(z.shape[0], heads, dh)
+    s_src = jnp.einsum("nkd,kd->nk", zk, p[f"asrc{l}"])  # [NT, K]
+    s_dst = jnp.einsum("nkd,kd->nk", zk[:n_out], p[f"adst{l}"])  # [n_out, K]
+    e = _leaky(s_src[src] + s_dst[dst])  # [E, K]
+    e_self = _leaky(s_src[:n_out] + s_dst)  # [n_out, K]
+
+    eidx = jnp.arange(src.shape[0], dtype=src.dtype)
+    neg = jnp.asarray(-1.0e30, e.dtype)
+    e_m = jnp.where(emask[:, None] > 0, e, neg)
+    mx = K.scatter_max(e_m, eidx, dst, emask, n_out, block=block)  # [n_out,K]
+    # softmax is shift-invariant: the max is for numerical stability only.
+    mx = jax.lax.stop_gradient(jnp.maximum(mx, e_self))
+    ex = jnp.where(emask[:, None] > 0, jnp.exp(e_m - mx[dst]), 0.0)  # [E,K]
+    ex_self = jnp.exp(e_self - mx)
+    denom = K.scatter_sum(ex, eidx, dst, jnp.ones_like(emask), n_out,
+                          block=block) + ex_self
+    alpha = ex / jnp.maximum(denom[dst], 1e-16)  # [E, K]
+    msgs = (alpha[:, :, None] * zk[src]).reshape(src.shape[0], heads * dh)
+    out = K.scatter_sum(msgs, eidx, dst, jnp.ones_like(emask), n_out,
+                        block=block)
+    self_msg = (ex_self / jnp.maximum(denom, 1e-16))[:, :, None] * zk[:n_out]
+    out = out + self_msg.reshape(n_out, heads * dh)
+    return out + p[f"b{l}"]
+
+
+def gin_layer(p, l, h_src, h_self, src, dst, w, n_out, block):
+    """GIN: MLP((1+eps) h_v + sum_{w in N(v)} h_w)."""
+    agg = K.scatter_sum(h_src, src, dst, w, n_out, block=block)
+    pre = (1.0 + p[f"eps{l}"][0]) * h_self + agg
+    z = jax.nn.relu(pre @ p[f"mlp{l}_w1"] + p[f"mlp{l}_b1"])
+    return z @ p[f"mlp{l}_w2"] + p[f"mlp{l}_b2"]
+
+
+def pna_layer(p, l, h_src, h_self, src, dst, w, deg, scaler_mean, n_out,
+              block):
+    """PNA: 3 aggregators x 3 degree scalers, tensor product (appendix)."""
+    eidx = jnp.arange(src.shape[0], dtype=src.dtype)
+    # fused pair-MLP sum (hot path: avoids [E, 2H] in HBM)
+    s = K.scatter_pair_mlp_sum(h_src, h_self, src, dst, w, p[f"w1_{l}"],
+                               n_out, block=block)
+    # materialized per-edge messages for min/max
+    pair = jnp.concatenate([h_self[dst], h_src[src]], axis=1)
+    msgs = pair @ p[f"w1_{l}"]  # [E, h]
+    mx = K.scatter_max(msgs, eidx, dst, w, n_out, block=block)
+    mn = K.scatter_min(msgs, eidx, dst, w, n_out, block=block)
+    d = jnp.maximum(deg[:n_out], 1.0)
+    mean = s / d[:, None]
+    aggs = jnp.concatenate([mean, mn, mx], axis=1)  # [n_out, 3h]
+    logd = jnp.log(deg[:n_out] + 1.0)
+    amp = (logd / scaler_mean)[:, None]
+    att = (scaler_mean / jnp.maximum(logd, 1e-6))[:, None]
+    scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], axis=1)  # 9h
+    out = jnp.concatenate([h_self, scaled], axis=1) @ p[f"w2_{l}"]
+    return out + p[f"b2_{l}"]
+
+
+# ---------------------------------------------------------------------------
+# networks. Shared calling convention, cfg from configs.ArtifactConfig.
+#
+# GAS inputs:  x[NT,F] hist[(L-1),NH,Hh] + edge/meta tensors
+# FULL inputs: x[NB,F]                   + edge/meta tensors (no hist)
+# returns (logits[n_out,C], push[(L-1),NB,Hh] or zeros, reg scalar)
+# ---------------------------------------------------------------------------
+
+def _sources(h_batch, hist_l, full):
+    """Message sources for the next layer: in-batch ++ halo-history."""
+    if full:
+        return h_batch
+    return jnp.concatenate([h_batch, hist_l], axis=0)
+
+
+def run_gcn(p, cfg, x, src, dst, w, hist, deg, noise, full):
+    L = cfg.layers
+    n_out = x.shape[0] if full else cfg.nb
+    h_src = x
+    push = []
+    reg = 0.0
+    for l in range(L):
+        z = h_src @ p[f"w{l}"]
+        h = _gcn_propagate(z, src, dst, w, deg, n_out if full else cfg.nb,
+                           cfg.block) + p[f"b{l}"]
+        if l < L - 1:
+            h = jax.nn.relu(h)
+            push.append(h if not full else h[: cfg.nb])
+            h_src = h if full else _sources(h, hist[l], full)
+    logits = h
+    return logits, _stack_push(push, cfg), reg
+
+
+def run_gat(p, cfg, x, src, dst, w, hist, deg, noise, full):
+    L = cfg.layers
+    n_out = x.shape[0] if full else cfg.nb
+    emask = jnp.where(w > 0, 1.0, 0.0)
+    h_src = x
+    push = []
+    reg = 0.0
+    for l in range(L):
+        heads = cfg.heads if l < L - 1 else 1
+        h = gat_layer(p, l, h_src, src, dst, emask, deg, n_out, heads,
+                      cfg.block)
+        if l < L - 1:
+            h = jax.nn.elu(h)
+            push.append(h if not full else h[: cfg.nb])
+            h_src = h if full else _sources(h, hist[l], full)
+    return h, _stack_push(push, cfg), reg
+
+
+def run_appnp(p, cfg, x, src, dst, w, hist, deg, noise, full):
+    """Predict (MLP) then propagate with teleport alpha. hist dim = C."""
+    L = cfg.layers  # number of propagation steps
+    n_out = x.shape[0] if full else cfg.nb
+    z = jax.nn.relu(x @ p["mlp_w1"] + p["mlp_b1"])
+    h0 = z @ p["mlp_w2"] + p["mlp_b2"]  # [NT or NB, C] exact everywhere
+    h = h0
+    push = []
+    alpha = cfg.alpha
+    for l in range(L):
+        srcs = h if full else (h0 if l == 0 else _sources(h, hist[l - 1], full))
+        # layer-0 sources are exact h0 rows for the halo too (no staleness).
+        if not full and l == 0:
+            srcs = h0
+            h = h0[: cfg.nb]
+        prop = _gcn_propagate(srcs, src, dst, w, deg, n_out, cfg.block)
+        h = (1.0 - alpha) * prop + alpha * h0[: n_out]
+        if l < L - 1:
+            push.append(h if not full else h[: cfg.nb])
+    return h, _stack_push(push, cfg), 0.0
+
+
+def run_gcnii(p, cfg, x, src, dst, w, hist, deg, noise, full):
+    """GCNII with a scan over the stacked per-layer weights."""
+    L = cfg.layers
+    n_out = x.shape[0] if full else cfg.nb
+    alpha = cfg.alpha
+    betas = jnp.log(cfg.lam / jnp.arange(1, L + 1) + 1.0).astype(x.dtype)
+    h0 = jax.nn.relu(x @ p["w_in"] + p["b_in"])  # [NT or NB, H] exact
+    reg_on = cfg.with_reg
+
+    if full:
+        def step(h, lw):
+            wl, beta = lw
+            prop = _gcn_propagate(h, src, dst, w, deg, n_out, cfg.block)
+            hn = (1.0 - alpha) * prop + alpha * h0
+            out = jax.nn.relu((1.0 - beta) * hn + beta * (hn @ wl))
+            return out, h  # emit previous (so ys = h_0..h_{L-1})
+        h, ys = jax.lax.scan(step, h0, (p["w_stack"], betas))
+        push = ys[1:]  # h_1..h_{L-1} for batch nodes
+        logits = h @ p["w_out"] + p["b_out"]
+        return logits, push[:, : cfg.nb, :], 0.0
+
+    # GAS: halo sources layer 1 are exact h0 rows; layers 2..L use history.
+    hist_ext = jnp.concatenate([h0[cfg.nb:][None], hist], axis=0)  # [L,NH,H]
+    h0b = h0[: cfg.nb]
+
+    def step(carry, lw):
+        h, regacc = carry
+        wl, beta, hist_l = lw
+        srcs = jnp.concatenate([h, hist_l], axis=0)
+
+        def f(s):
+            prop = _gcn_propagate(s, src, dst, w, deg, cfg.nb, cfg.block)
+            hn = (1.0 - alpha) * prop + alpha * h0b
+            return jax.nn.relu((1.0 - beta) * hn + beta * (hn @ wl))
+
+        out = f(srcs)
+        if reg_on:
+            out_p = f(srcs + noise[: srcs.shape[0], : srcs.shape[1]])
+            regacc = regacc + jnp.mean(jnp.sum((out - out_p) ** 2, axis=-1))
+        return (out, regacc), out
+
+    (h, reg), ys = jax.lax.scan(step, (h0b, 0.0),
+                                (p["w_stack"], betas, hist_ext))
+    push = ys[:-1]  # h_1..h_{L-1}
+    logits = h @ p["w_out"] + p["b_out"]
+    return logits, push, reg
+
+
+def run_gin(p, cfg, x, src, dst, w, hist, deg, noise, full):
+    L = cfg.layers
+    n_out = x.shape[0] if full else cfg.nb
+    h_src = x
+    push = []
+    reg = 0.0
+    for l in range(L):
+        h_self = h_src[: n_out]
+        h = gin_layer(p, l, h_src, h_self, src, dst, w, n_out, cfg.block)
+        if cfg.with_reg and l > 0:  # inputs are H-dim from layer 1 on
+            def f(s, _l=l, _hs_shape=h_src.shape):
+                hs = s
+                return gin_layer(p, _l, hs, hs[: n_out], src, dst, w, n_out,
+                                 cfg.block)
+            hp = h_src + noise[: h_src.shape[0], : h_src.shape[1]]
+            h_pert = f(hp)
+            reg = reg + jnp.mean(jnp.sum((h - h_pert) ** 2, axis=-1))
+        h = jax.nn.relu(h)
+        if l < L - 1:
+            push.append(h if not full else h[: cfg.nb])
+            h_src = h if full else _sources(h, hist[l], full)
+    logits = h @ p["head_w"] + p["head_b"]
+    return logits, _stack_push(push, cfg), reg
+
+
+def run_pna(p, cfg, x, src, dst, w, hist, deg, noise, full):
+    L = cfg.layers
+    n_out = x.shape[0] if full else cfg.nb
+    h_src = x
+    push = []
+    reg = 0.0
+    for l in range(L):
+        h_self = h_src[: n_out]
+        h = pna_layer(p, l, h_src, h_self, src, dst, w, deg, cfg.scaler_mean,
+                      n_out, cfg.block)
+        h = jax.nn.relu(h)
+        if l < L - 1:
+            push.append(h if not full else h[: cfg.nb])
+            h_src = h if full else _sources(h, hist[l], full)
+    logits = h @ p["head_w"] + p["head_b"]
+    return logits, _stack_push(push, cfg), reg
+
+
+def _stack_push(push, cfg):
+    if not push:
+        return jnp.zeros((0, cfg.nb, cfg.hist_dim), jnp.float32)
+    return jnp.stack(push, axis=0)
+
+
+RUNNERS = {
+    "gcn": run_gcn,
+    "gat": run_gat,
+    "appnp": run_appnp,
+    "gcnii": run_gcnii,
+    "gin": run_gin,
+    "pna": run_pna,
+}
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_ce(logits, labels, mask):
+    """Masked mean cross-entropy; labels i32 [N], mask f32 [N]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def bce_multilabel(logits, labels, mask):
+    """Masked mean binary CE; labels f32 [N,C], mask f32 [N]."""
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    per = -(labels * logp + (1.0 - labels) * lognp).mean(axis=-1)
+    return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# train step (value_and_grad) — the artifact entry point
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg):
+    """Returns fn(params..., inputs...) -> (loss, grads..., push, logits)."""
+    runner = RUNNERS[cfg.model]
+    full = cfg.program == "full"
+
+    def loss_fn(p, x, src, dst, w, hist, labels, label_mask, deg, noise,
+                reg_lambda):
+        logits, push, reg = runner(p, cfg, x, src, dst, w, hist, deg, noise,
+                                   full)
+        lg = logits[: cfg.nb]
+        if cfg.loss == "ce":
+            task = softmax_ce(lg, labels, label_mask)
+        else:
+            task = bce_multilabel(lg, labels, label_mask)
+        return task + reg_lambda * reg, (push, lg)
+
+    def train_step(p, x, src, dst, w, hist, labels, label_mask, deg, noise,
+                   reg_lambda):
+        (loss, (push, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, x, src, dst, w, hist, labels,
+                                   label_mask, deg, noise, reg_lambda)
+        return loss, grads, push, logits
+
+    return train_step
+
+
+def example_inputs(cfg):
+    """ShapeDtypeStructs in artifact input order (params first)."""
+    sd = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    nt = cfg.nb + cfg.nh
+    n_in = cfg.nb if cfg.program == "full" else nt
+    specs = param_specs(cfg)
+    params = {k: sd(tuple(v["shape"]), f32) for k, v in specs}
+    hist_layers = max(cfg.layers - 1, 0)
+    noise_dim = max(cfg.hist_dim, cfg.h)
+    if cfg.program == "full":
+        # full programs never read histories; keep a 1-element placeholder
+        # (zero-sized literals are awkward for the rust xla bindings).
+        hist = sd((1, 1, 1), f32)
+    else:
+        hist = sd((hist_layers, cfg.nh, cfg.hist_dim), f32)
+    if cfg.loss == "ce":
+        labels = sd((cfg.nb,), i32)
+    else:
+        labels = sd((cfg.nb, cfg.c), f32)
+    return (
+        params,
+        sd((n_in, cfg.f), f32),                       # x
+        sd((cfg.e,), i32),                            # src
+        sd((cfg.e,), i32),                            # dst
+        sd((cfg.e,), f32),                            # w
+        hist,                                         # hist
+        labels,
+        sd((cfg.nb,), f32),                           # label_mask
+        sd((n_in,), f32),                             # deg
+        sd((n_in, noise_dim), f32),                   # noise
+        sd((), f32),                                  # reg_lambda
+    )

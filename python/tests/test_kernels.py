@@ -1,0 +1,206 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes, block sizes, index patterns and values — the CORE
+correctness signal for the kernel layer (aggregation is inside every GNN
+layer of every artifact).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate as K
+from compile.kernels import ref as R
+
+
+def _case(seed, n_src, n_out, e, h):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n_src, h)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, n_src, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n_out, e), jnp.int32)
+    w = jnp.asarray(rng.normal(size=e), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, e), jnp.float32)
+    return x, src, dst, w, mask
+
+
+shape_st = st.tuples(
+    st.integers(0, 2**31 - 1),            # seed
+    st.integers(1, 70),                   # n_src
+    st.integers(1, 50),                   # n_out
+    st.integers(1, 700),                  # edges
+    st.integers(1, 33),                   # feature dim
+    st.sampled_from([16, 64, 128, 1024]), # block
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_st)
+def test_scatter_sum_matches_ref(args):
+    seed, n_src, n_out, e, h, block = args
+    x, src, dst, w, _ = _case(seed, n_src, n_out, e, h)
+    got = K.scatter_sum(x, src, dst, w, n_out, block=block)
+    want = R.scatter_sum_ref(x, src, dst, w, n_out)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st)
+def test_scatter_max_min_match_ref(args):
+    seed, n_src, n_out, e, h, block = args
+    x, src, dst, _, mask = _case(seed, n_src, n_out, e, h)
+    np.testing.assert_allclose(
+        K.scatter_max(x, src, dst, mask, n_out, block=block),
+        R.scatter_max_ref(x, src, dst, mask, n_out))
+    np.testing.assert_allclose(
+        K.scatter_min(x, src, dst, mask, n_out, block=block),
+        R.scatter_min_ref(x, src, dst, mask, n_out))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st)
+def test_scatter_sum_vec_matches_ref(args):
+    seed, _, n_out, e, _, block = args
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=e), jnp.float32)
+    dst = jnp.asarray(rng.integers(0, n_out, e), jnp.int32)
+    np.testing.assert_allclose(
+        K.scatter_sum_vec(v, dst, n_out, block=block),
+        R.scatter_sum_vec_ref(v, dst, n_out), atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape_st, st.integers(1, 17))
+def test_scatter_pair_mlp_matches_ref(args, h_out):
+    seed, n_src, n_out, e, h, block = args
+    x, src, dst, w, _ = _case(seed, n_src, n_out, e, h)
+    rng = np.random.default_rng(seed + 1)
+    xd = jnp.asarray(rng.normal(size=(n_out, h)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(2 * h, h_out)), jnp.float32)
+    got = K.scatter_pair_mlp_sum(x, xd, src, dst, w, w1, n_out, block=block)
+    want = R.scatter_pair_mlp_sum_ref(x, xd, src, dst, w, w1, n_out)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape_st)
+def test_edge_softmax_parts_match_ref(args):
+    seed, _, n_out, e, _, block = args
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=e) * 3.0, jnp.float32)
+    dst = jnp.asarray(rng.integers(0, n_out, e), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, e), jnp.float32)
+    m1, d1, e1 = K.edge_softmax_parts(logits, dst, mask, n_out, block=block)
+    m2, d2, e2 = R.edge_softmax_parts_ref(logits, dst, mask, n_out)
+    np.testing.assert_allclose(m1, m2)
+    np.testing.assert_allclose(d1, d2, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(e1, e2, atol=1e-5, rtol=1e-4)
+
+
+# ----------------------------- gradients ----------------------------------
+
+def test_scatter_sum_grad_matches_ref_grad():
+    x, src, dst, w, _ = _case(0, 30, 20, 256, 8)
+
+    def f_kernel(x, w):
+        return jnp.sum(K.scatter_sum(x, src, dst, w, 20, block=64) ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum(R.scatter_sum_ref(x, src, dst, w, 20) ** 2)
+
+    gx1, gw1 = jax.grad(f_kernel, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx1, gx2, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(gw1, gw2, atol=1e-3, rtol=1e-3)
+
+
+def test_scatter_max_grad_matches_ref_grad():
+    # distinct values AND unique (src,dst) pairs => unique argmax per dst
+    # => the kernel's tie-sharing subgradient equals jnp's. (Real edge
+    # lists are duplicate-free; duplicate edges would legitimately split
+    # the subgradient differently between the two implementations.)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.permutation(30 * 8).reshape(30, 8) * 0.01, jnp.float32)
+    pairs = rng.permutation(30 * 20)[:128]
+    src = jnp.asarray(pairs // 20, jnp.int32)
+    dst = jnp.asarray(pairs % 20, jnp.int32)
+    mask = jnp.ones(128, jnp.float32)
+
+    def f_kernel(x):
+        return jnp.sum(K.scatter_max(x, src, dst, mask, 20, block=64) ** 2)
+
+    def f_ref(x):
+        return jnp.sum(R.scatter_max_ref(x, src, dst, mask, 20) ** 2)
+
+    np.testing.assert_allclose(jax.grad(f_kernel)(x), jax.grad(f_ref)(x),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_scatter_pair_grad_matches_ref_grad():
+    x, src, dst, w, _ = _case(5, 30, 20, 256, 8)
+    rng = np.random.default_rng(6)
+    xd = jnp.asarray(rng.normal(size=(20, 8)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(16, 5)), jnp.float32)
+
+    def f_kernel(xs, xd, w1):
+        return jnp.sum(
+            K.scatter_pair_mlp_sum(xs, xd, src, dst, w, w1, 20, block=64) ** 2)
+
+    def f_ref(xs, xd, w1):
+        return jnp.sum(
+            R.scatter_pair_mlp_sum_ref(xs, xd, src, dst, w, w1, 20) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(x, xd, w1)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, xd, w1)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)
+
+
+def test_scatter_sum_inside_scan_differentiates():
+    """Regression: custom_vjp closures used to break under lax.scan (GCNII)."""
+    x, src, dst, w, _ = _case(1, 16, 16, 64, 4)
+    ws = jnp.asarray(np.random.default_rng(2).normal(size=(3, 4, 4)),
+                     jnp.float32)
+
+    def model(ws):
+        def step(h, wl):
+            return jax.nn.relu(
+                K.scatter_sum(h, src, dst, w, 16, block=64) @ wl), None
+        h, _ = jax.lax.scan(step, x, ws)
+        return jnp.sum(h ** 2)
+
+    g = jax.grad(model)(ws)
+    assert g.shape == (3, 4, 4)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ----------------------------- edge cases ----------------------------------
+
+def test_padded_edges_contribute_nothing():
+    x, src, dst, w, _ = _case(7, 10, 8, 64, 4)
+    w_padded = jnp.concatenate([w, jnp.zeros(64, jnp.float32)])
+    src_p = jnp.concatenate([src, jnp.zeros(64, jnp.int32)])
+    dst_p = jnp.concatenate([dst, jnp.zeros(64, jnp.int32)])
+    a = K.scatter_sum(x, src, dst, w, 8, block=32)
+    b = K.scatter_sum(x, src_p, dst_p, w_padded, 8, block=32)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_isolated_destinations_are_zero():
+    x = jnp.ones((4, 3), jnp.float32)
+    src = jnp.asarray([0, 1], jnp.int32)
+    dst = jnp.asarray([0, 0], jnp.int32)
+    w = jnp.ones(2, jnp.float32)
+    out = K.scatter_sum(x, src, dst, w, 5, block=2)
+    np.testing.assert_allclose(out[1:], np.zeros((4, 3)))
+    out = K.scatter_max(x, src, dst, w, 5, block=2)
+    np.testing.assert_allclose(out[1:], np.zeros((4, 3)))
+
+
+def test_block_not_dividing_edge_count():
+    # _choose_block must fall back to a divisor; numerics unchanged.
+    x, src, dst, w, _ = _case(9, 12, 9, 97, 5)  # 97 is prime
+    a = K.scatter_sum(x, src, dst, w, 9, block=64)
+    b = R.scatter_sum_ref(x, src, dst, w, 9)
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,85 @@
+"""Manifest integrity: registry shapes, input/output orders, profiles."""
+
+import json
+import os
+
+import pytest
+
+from compile import configs, models
+from compile.aot import manifest_entry
+
+
+def test_registry_has_no_duplicate_names():
+    names = [c.name for c in configs.REGISTRY]
+    assert len(names) == len(set(names))
+
+
+def test_all_small_datasets_have_four_models_both_programs():
+    names = {c.name for c in configs.REGISTRY}
+    for p in configs.SMALL:
+        for m, l in [("gcn", 2), ("gat", 2), ("appnp", 10), ("gcnii", 8)]:
+            assert f"{p.name}_{m}{l}_gas" in names
+            assert f"{p.name}_{m}{l}_full" in names
+
+
+def test_manifest_entry_input_order_matches_jax_flattening():
+    """jax flattens dict pytrees sorted by key — manifest must mirror it."""
+    cfg = configs.BY_NAME["cora_gcn2_gas"]
+    entry = manifest_entry(cfg)
+    param_names = [i["name"] for i in entry["inputs"] if i["kind"] == "param"]
+    assert param_names == sorted(param_names)
+    kinds = [i["kind"] for i in entry["inputs"] if i["kind"] != "param"]
+    assert kinds == ["x", "edge_src", "edge_dst", "edge_w", "hist", "labels",
+                     "label_mask", "deg", "noise", "reg_lambda"]
+
+
+def test_manifest_entry_outputs():
+    cfg = configs.BY_NAME["cora_gcnii8_gas"]
+    entry = manifest_entry(cfg)
+    outs = [o["name"] for o in entry["outputs"]]
+    assert outs[0] == "loss"
+    assert outs[-2:] == ["push", "logits"]
+    assert len(outs) == 1 + len(entry["params"]) + 2
+
+
+def test_param_specs_match_example_inputs():
+    for name in ["cora_gcn2_gas", "cluster_gin4_gas", "ppi_pna3_gas",
+                 "cora_gat2_full", "cora_appnp10_gas",
+                 "cora_gcnii64_gas_deep"]:
+        cfg = configs.BY_NAME[name]
+        args = models.example_inputs(cfg)
+        params = args[0]
+        specs = dict(models.param_specs(cfg))
+        assert set(params.keys()) == set(specs.keys())
+        for k, v in params.items():
+            assert list(v.shape) == specs[k]["shape"], (name, k)
+
+
+def test_multilabel_configs_use_bce_and_2d_labels():
+    cfg = configs.BY_NAME["ppi_gcn2_gas"]
+    assert cfg.loss == "bce"
+    entry = manifest_entry(cfg)
+    lab = [i for i in entry["inputs"] if i["kind"] == "labels"][0]
+    assert lab["shape"] == [cfg.nb, cfg.c]
+    assert lab["dtype"] == "f32"
+
+
+def test_full_program_has_no_halo():
+    cfg = configs.BY_NAME["cora_gcn2_full"]
+    assert cfg.nh == 0
+    assert cfg.nb == configs.PROFILES["cora"].n
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built")
+def test_written_manifest_covers_registry():
+    path = os.path.join(os.path.dirname(__file__),
+                        "../../artifacts/manifest.json")
+    with open(path) as f:
+        m = json.load(f)
+    assert set(m["artifacts"].keys()) == {c.name for c in configs.REGISTRY}
+    for name, entry in m["artifacts"].items():
+        assert os.path.exists(os.path.join(os.path.dirname(path),
+                                           entry["file"])), name
+    assert set(m["profiles"].keys()) == set(configs.PROFILES.keys())

@@ -1,0 +1,321 @@
+"""L2 correctness: model semantics.
+
+The key invariant (paper Eq. 2): with *exact* histories, the GAS program
+produces exactly the full-batch embeddings for in-batch nodes. Plus dense
+references for the operators and loss functions.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+from compile.configs import ArtifactConfig
+
+
+# --------------------------------------------------------------------------
+# tiny deterministic test graph: n nodes, undirected ring + chords
+# --------------------------------------------------------------------------
+
+def tiny_graph(n=12, extra=6, seed=0):
+    rng = np.random.default_rng(seed)
+    und = {(i, (i + 1) % n) for i in range(n)}
+    while len(und) < n + extra:
+        a, b = rng.integers(0, n, 2)
+        if a != b:
+            und.add((min(a, b), max(a, b)))
+    src, dst = [], []
+    for a, b in sorted(und):
+        src += [a, b]
+        dst += [b, a]
+    return np.array(src, np.int32), np.array(dst, np.int32)
+
+
+def degrees(src, dst, n):
+    deg = np.zeros(n, np.float32)
+    for d in dst:
+        deg[d] += 1
+    return deg
+
+
+def gcn_w(src, dst, deg):
+    return (1.0 / (np.sqrt(deg[src] + 1) * np.sqrt(deg[dst] + 1))).astype(
+        np.float32)
+
+
+def make_cfg(model, program, n, nb, nh, e, f=5, h=8, c=3, layers=2,
+             with_reg=False, loss="ce"):
+    return ArtifactConfig(
+        name="t", model=model, program=program, dataset="t", nb=nb, nh=nh,
+        e=e, f=f, h=h, c=c, layers=layers, loss=loss, heads=2,
+        with_reg=with_reg, edge_weight="ones", scaler_mean=1.0, block=64)
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in models.param_specs(cfg):
+        shape = spec["shape"]
+        if spec["init"] == "zeros":
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan = shape[0] if len(shape) > 1 else 1
+            out[name] = jnp.asarray(
+                rng.normal(size=shape) / np.sqrt(max(fan, 1)), jnp.float32)
+    return out
+
+
+def run_full(cfg, p, x, src, dst, w, deg):
+    hist = jnp.zeros((1, 1, 1), jnp.float32)
+    noise = jnp.zeros((cfg.nb, max(cfg.hist_dim, cfg.h)), jnp.float32)
+    return models.RUNNERS[cfg.model](p, cfg, x, src, dst, w, hist, deg,
+                                     noise, True)
+
+
+N = 12
+
+
+class TestExactHistoryEquivalence:
+    """GAS(exact histories) == full-batch, per operator (Eq. 2 line 1)."""
+
+    @pytest.mark.parametrize("model,layers",
+                             [("gcn", 3), ("gin", 3), ("gcnii", 4),
+                              ("appnp", 4), ("gat", 2), ("pna", 2)])
+    def test_equivalence(self, model, layers):
+        src, dst, = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        f = 5
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(N, f)), jnp.float32)
+        w_ones = jnp.ones(len(src), jnp.float32)
+        w_gcn = jnp.asarray(gcn_w(src, dst, deg))
+        w = w_gcn if model in ("gcn", "gcnii", "appnp") else w_ones
+
+        cfg_full = make_cfg(model, "full", N, N, 0, len(src), layers=layers)
+        p = init_params(cfg_full, seed=2)
+        logits_full, push_full, _ = run_full(
+            cfg_full, p, x, jnp.asarray(src), jnp.asarray(dst), w,
+            jnp.asarray(deg))
+
+        # batch = first half of nodes, halo = the rest (order preserved)
+        nb = N // 2
+        batch = np.arange(nb)
+        halo = np.arange(nb, N)
+        cfg_gas = dataclasses.replace(cfg_full, program="gas", nb=nb,
+                                      nh=len(halo))
+        # keep only edges with dst in batch; src stays in global numbering
+        keep = dst < nb
+        gsrc = jnp.asarray(src[keep])
+        gdst = jnp.asarray(dst[keep])
+        gw = w[np.where(keep)[0]]
+        hist_layers = layers - 1
+        hd = cfg_gas.hist_dim
+        # exact histories for halo nodes, from the full run
+        hist = jnp.stack([push_full[l][halo, :hd]
+                          for l in range(hist_layers)], axis=0)
+        noise = jnp.zeros((N, max(hd, cfg_gas.h)), jnp.float32)
+        logits_gas, push_gas, _ = models.RUNNERS[model](
+            p, cfg_gas, x, gsrc, gdst, gw, hist, jnp.asarray(deg), noise,
+            False)
+
+        np.testing.assert_allclose(logits_gas, logits_full[:nb],
+                                   atol=2e-4, rtol=2e-4)
+        for l in range(hist_layers):
+            np.testing.assert_allclose(push_gas[l], push_full[l][:nb],
+                                       atol=2e-4, rtol=2e-4)
+
+
+class TestDenseReferences:
+    def test_gcn_layer_matches_dense(self):
+        src, dst = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        w = gcn_w(src, dst, deg)
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(N, 5)).astype(np.float32)
+        cfg = make_cfg("gcn", "full", N, N, 0, len(src), layers=1, c=3)
+        p = init_params(cfg, 5)
+        logits, _, _ = run_full(cfg, p, jnp.asarray(x), jnp.asarray(src),
+                                jnp.asarray(dst), jnp.asarray(w),
+                                jnp.asarray(deg))
+        # dense: A_hat = D^-1/2 (A + I) D^-1/2 ; out = A_hat X W + b
+        a = np.zeros((N, N), np.float32)
+        a[dst, src] = w
+        a[np.arange(N), np.arange(N)] = 1.0 / (deg + 1)
+        want = a @ x @ np.asarray(p["w0"]) + np.asarray(p["b0"])
+        np.testing.assert_allclose(logits, want, atol=1e-4, rtol=1e-4)
+
+    def test_gat_attention_rows_sum_to_one(self):
+        src, dst = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(N, 5)), jnp.float32)
+        cfg = make_cfg("gat", "full", N, N, 0, len(src), layers=1, c=4)
+        p = init_params(cfg, 6)
+        # constant unit features through an identity-ish W would need exact
+        # row-stochastic check; instead verify output is convex combination:
+        # all-equal inputs => output equals (any) transformed input + bias.
+        x_const = jnp.ones((N, 5), jnp.float32)
+        logits, _, _ = run_full(cfg, p, x_const, jnp.asarray(src),
+                                jnp.asarray(dst),
+                                jnp.ones(len(src), jnp.float32),
+                                jnp.asarray(deg))
+        want = x_const[:1] @ p["w0"] + p["b0"]
+        np.testing.assert_allclose(logits, np.tile(want, (N, 1)),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_appnp_propagation_is_personalized_pagerank_step(self):
+        src, dst = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        w = gcn_w(src, dst, deg)
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=(N, 5)).astype(np.float32)
+        cfg = make_cfg("appnp", "full", N, N, 0, len(src), layers=3, c=3)
+        p = init_params(cfg, 8)
+        logits, _, _ = run_full(cfg, p, jnp.asarray(x), jnp.asarray(src),
+                                jnp.asarray(dst), jnp.asarray(w),
+                                jnp.asarray(deg))
+        a = np.zeros((N, N), np.float32)
+        a[dst, src] = w
+        a[np.arange(N), np.arange(N)] = 1.0 / (deg + 1)
+        z = np.maximum(x @ np.asarray(p["mlp_w1"]) + np.asarray(p["mlp_b1"]),
+                       0)
+        h0 = z @ np.asarray(p["mlp_w2"]) + np.asarray(p["mlp_b2"])
+        h = h0
+        for _ in range(3):
+            h = (1 - cfg.alpha) * (a @ h) + cfg.alpha * h0
+        np.testing.assert_allclose(logits, h, atol=1e-4, rtol=1e-4)
+
+    def test_gin_sum_aggregation(self):
+        src, dst = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        rng = np.random.default_rng(9)
+        x = rng.normal(size=(N, 5)).astype(np.float32)
+        cfg = make_cfg("gin", "full", N, N, 0, len(src), layers=1)
+        p = init_params(cfg, 10)
+        logits, _, _ = run_full(cfg, p, jnp.asarray(x), jnp.asarray(src),
+                                jnp.asarray(dst),
+                                jnp.ones(len(src), jnp.float32),
+                                jnp.asarray(deg))
+        a = np.zeros((N, N), np.float32)
+        a[dst, src] = 1.0
+        pre = (1.0 + np.asarray(p["eps0"])[0]) * x + a @ x
+        z = np.maximum(pre @ np.asarray(p["mlp0_w1"]) +
+                       np.asarray(p["mlp0_b1"]), 0)
+        hid = z @ np.asarray(p["mlp0_w2"]) + np.asarray(p["mlp0_b2"])
+        want = np.maximum(hid, 0) @ np.asarray(p["head_w"]) + \
+            np.asarray(p["head_b"])
+        np.testing.assert_allclose(logits, want, atol=1e-4, rtol=1e-4)
+
+
+class TestLosses:
+    def test_softmax_ce_masked(self):
+        logits = jnp.asarray([[2.0, 0.0], [0.0, 3.0], [1.0, 1.0]])
+        labels = jnp.asarray([0, 1, 0], jnp.int32)
+        mask = jnp.asarray([1.0, 1.0, 0.0])
+        got = models.softmax_ce(logits, labels, mask)
+        p0 = np.exp(2.0) / (np.exp(2.0) + 1.0)
+        p1 = np.exp(3.0) / (np.exp(3.0) + 1.0)
+        want = -(np.log(p0) + np.log(p1)) / 2
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_softmax_ce_zero_mask_is_finite(self):
+        logits = jnp.ones((3, 2))
+        labels = jnp.zeros(3, jnp.int32)
+        assert np.isfinite(float(models.softmax_ce(logits, labels,
+                                                   jnp.zeros(3))))
+
+    def test_bce_multilabel(self):
+        logits = jnp.asarray([[0.0, 10.0], [-10.0, 0.0]])
+        labels = jnp.asarray([[0.0, 1.0], [0.0, 1.0]])
+        mask = jnp.asarray([1.0, 1.0])
+        got = float(models.bce_multilabel(logits, labels, mask))
+        # row0: -(log .5 + log sig(10))/2 ; row1: -(log sig(10) + log .5)/2
+        want = -(np.log(0.5) + np.log(1 / (1 + np.exp(-10.0)))) / 2
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+class TestTrainStep:
+    def test_gradients_flow_and_push_shapes(self):
+        src, dst = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        nb, layers = 6, 3
+        keep = dst < nb
+        cfg = make_cfg("gcn", "gas", N, nb, N - nb, int(keep.sum()),
+                       layers=layers)
+        step = models.make_train_step(cfg)
+        p = init_params(cfg, 11)
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.normal(size=(N, 5)), jnp.float32)
+        hist = jnp.asarray(rng.normal(size=(layers - 1, N - nb, cfg.h)),
+                           jnp.float32)
+        noise = jnp.zeros((N, cfg.h), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 3, nb), jnp.int32)
+        lmask = jnp.ones(nb, jnp.float32)
+        w = jnp.asarray(gcn_w(src, dst, deg))[np.where(keep)[0]]
+        loss, grads, push, logits = step(
+            p, x, jnp.asarray(src[keep]), jnp.asarray(dst[keep]), w, hist,
+            labels, lmask, jnp.asarray(deg), noise, jnp.asarray(0.0))
+        assert np.isfinite(float(loss))
+        assert push.shape == (layers - 1, nb, cfg.h)
+        assert logits.shape == (nb, 3)
+        total = sum(float(jnp.sum(jnp.abs(g))) for g in grads.values())
+        assert total > 0
+
+    def test_history_influences_output_but_not_used_when_no_halo_edges(self):
+        src, dst = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        nb = 6
+        keep = dst < nb
+        cfg = make_cfg("gcn", "gas", N, nb, N - nb, int(keep.sum()),
+                       layers=3)
+        step = models.make_train_step(cfg)
+        p = init_params(cfg, 13)
+        rng = np.random.default_rng(14)
+        x = jnp.asarray(rng.normal(size=(N, 5)), jnp.float32)
+        noise = jnp.zeros((N, cfg.h), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 3, nb), jnp.int32)
+        lmask = jnp.ones(nb, jnp.float32)
+        w = jnp.asarray(gcn_w(src, dst, deg))[np.where(keep)[0]]
+        args = (jnp.asarray(src[keep]), jnp.asarray(dst[keep]), w)
+
+        h1 = jnp.zeros((2, N - nb, cfg.h), jnp.float32)
+        h2 = jnp.ones((2, N - nb, cfg.h), jnp.float32)
+        l1 = step(p, x, *args, h1, labels, lmask, jnp.asarray(deg), noise,
+                  jnp.asarray(0.0))[0]
+        l2 = step(p, x, *args, h2, labels, lmask, jnp.asarray(deg), noise,
+                  jnp.asarray(0.0))[0]
+        assert abs(float(l1) - float(l2)) > 1e-8  # histories are live
+
+        # with halo edges cut (w=0 on cross edges), histories are dead
+        cross = np.asarray(src[keep]) >= nb
+        wcut = jnp.where(jnp.asarray(cross), 0.0, w)
+        l3 = step(p, x, args[0], args[1], wcut, h1, labels, lmask,
+                  jnp.asarray(deg), noise, jnp.asarray(0.0))[0]
+        l4 = step(p, x, args[0], args[1], wcut, h2, labels, lmask,
+                  jnp.asarray(deg), noise, jnp.asarray(0.0))[0]
+        np.testing.assert_allclose(float(l3), float(l4), rtol=1e-6)
+
+    def test_reg_lambda_changes_loss_for_gin(self):
+        src, dst = tiny_graph(N)
+        deg = degrees(src, dst, N)
+        nb = 6
+        keep = dst < nb
+        cfg = make_cfg("gin", "gas", N, nb, N - nb, int(keep.sum()),
+                       layers=3, with_reg=True)
+        step = models.make_train_step(cfg)
+        p = init_params(cfg, 15)
+        rng = np.random.default_rng(16)
+        x = jnp.asarray(rng.normal(size=(N, 5)), jnp.float32)
+        hist = jnp.asarray(rng.normal(size=(2, N - nb, cfg.h)), jnp.float32)
+        noise = jnp.asarray(rng.normal(size=(N, cfg.h)) * 0.1, jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 3, nb), jnp.int32)
+        lmask = jnp.ones(nb, jnp.float32)
+        w = jnp.ones(int(keep.sum()), jnp.float32)
+        common = (p, x, jnp.asarray(src[keep]), jnp.asarray(dst[keep]), w,
+                  hist, labels, lmask, jnp.asarray(deg), noise)
+        l0 = float(step(*common, jnp.asarray(0.0))[0])
+        l1 = float(step(*common, jnp.asarray(10.0))[0])
+        assert l1 > l0

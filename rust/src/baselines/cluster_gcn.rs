@@ -1,0 +1,150 @@
+//! Cluster-GCN baseline (Chiang et al., KDD 2019): METIS clusters as
+//! mini-batches, message passing restricted to intra-cluster edges — the
+//! out-of-batch information GAS preserves is *dropped* here.
+//!
+//! Reuses the `full` program on each cluster's induced subgraph (exact
+//! math on the subgraph; no histories).
+
+use crate::graph::datasets::Dataset;
+use crate::model::{Adam, Optimizer, ParamStore};
+use crate::partition::metis_partition;
+use crate::runtime::{LoadedArtifact, StepInputs};
+use crate::sched::batch::{BatchPlan, LabelSel};
+use crate::sched::scheduler::EpochScheduler;
+use crate::train::curve::Curve;
+use crate::train::trainer::score;
+use anyhow::{ensure, Result};
+
+pub struct ClusterGcnTrainer<'a> {
+    ds: &'a Dataset,
+    art: &'a LoadedArtifact,
+    plans: Vec<BatchPlan>,
+    pub params: ParamStore,
+    opt: Adam,
+    noise: Vec<f32>,
+    hist: Vec<f32>,
+    seed: u64,
+}
+
+pub struct ClusterGcnResult {
+    pub loss: Curve,
+    pub val_acc: Curve,
+    pub test_at_best_val: f64,
+    /// fraction of directed edges retained inside clusters (the "% data
+    /// used" column of Table 3)
+    pub edges_used_frac: f64,
+}
+
+impl<'a> ClusterGcnTrainer<'a> {
+    /// `art` must be a `full` program sized for a whole cluster (the gas
+    /// artifact's padded nb is suitable: clusters are the same parts).
+    pub fn new(
+        ds: &'a Dataset,
+        art: &'a LoadedArtifact,
+        parts: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<ClusterGcnTrainer<'a>> {
+        let spec = &art.spec;
+        ensure!(spec.program == "full", "ClusterGcnTrainer wants a full artifact");
+        let part = metis_partition(&ds.graph, parts, seed);
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); parts];
+        for (v, &p) in part.iter().enumerate() {
+            groups[p as usize].push(v as u32);
+        }
+        let mut plans = Vec::with_capacity(parts);
+        for g in &groups {
+            plans.push(BatchPlan::build_full(ds, spec, g, LabelSel::Train, None)?);
+        }
+        let params = ParamStore::init(&spec.params, seed ^ 0x9e37)?;
+        let n_in = spec.n_in();
+        let noise_dim = spec.hist_dim.max(spec.h);
+        Ok(ClusterGcnTrainer {
+            ds,
+            art,
+            plans,
+            params,
+            opt: Adam::new(lr).with_clip(1.0),
+            noise: vec![0f32; n_in * noise_dim],
+            hist: vec![0f32; 1],
+            seed,
+        })
+    }
+
+    pub fn edges_used_frac(&self) -> f64 {
+        let kept: usize = self.plans.iter().map(|p| p.real_edges).sum();
+        kept as f64 / self.ds.graph.num_directed_edges() as f64
+    }
+
+    pub fn train(&mut self, epochs: usize, eval_every: usize) -> Result<ClusterGcnResult> {
+        let mut r = ClusterGcnResult {
+            loss: Curve::new("train_loss"),
+            val_acc: Curve::new("val_acc"),
+            test_at_best_val: 0.0,
+            edges_used_frac: self.edges_used_frac(),
+        };
+        let mut best_val = f64::NEG_INFINITY;
+        let mut sched = EpochScheduler::new(self.plans.len(), self.seed, true);
+        for epoch in 0..epochs {
+            sched.next_epoch();
+            let mut el = 0f64;
+            let mut nb = 0usize;
+            while let Some(b) = sched.current() {
+                let out = self.run_plan(b)?;
+                self.opt.step(&mut self.params, &out.grads);
+                el += out.loss as f64;
+                nb += 1;
+                sched.advance();
+            }
+            r.loss.push(el / nb.max(1) as f64);
+            if (epoch + 1) % eval_every == 0 || epoch + 1 == epochs {
+                let (_, va, te) = self.evaluate()?;
+                r.val_acc.push(va);
+                if va > best_val {
+                    best_val = va;
+                    r.test_at_best_val = te;
+                }
+            }
+        }
+        Ok(r)
+    }
+
+    fn run_plan(&mut self, b: usize) -> Result<crate::runtime::StepOutputs> {
+        let spec = &self.art.spec;
+        let plan = &self.plans[b];
+        let inputs = StepInputs {
+            x: &plan.st.x,
+            edge_src: &plan.edge_src,
+            edge_dst: &plan.edge_dst,
+            edge_w: &plan.edge_w,
+            hist: &self.hist,
+            labels_i: if spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
+            labels_f: if spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
+            label_mask: &plan.st.label_mask,
+            deg: &plan.st.deg,
+            noise: &self.noise,
+            reg_lambda: 0.0,
+        };
+        self.art.run(&self.params.tensors, &inputs)
+    }
+
+    /// Inference also stays intra-cluster (as in the original paper).
+    pub fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
+        let spec = &self.art.spec;
+        let c = spec.c;
+        let mut logits = vec![0f32; self.ds.n() * c];
+        for b in 0..self.plans.len() {
+            let out = self.run_plan(b)?;
+            for (i, &v) in self.plans[b].batch_nodes.iter().enumerate() {
+                logits[v as usize * c..(v as usize + 1) * c]
+                    .copy_from_slice(&out.logits[i * c..(i + 1) * c]);
+            }
+        }
+        Ok(score(self.ds, &logits, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // integration coverage lives in rust/tests/ (requires artifacts)
+}

@@ -1,0 +1,119 @@
+//! GTTF-style traversal (Markowitz et al., ICLR 2021): Graph Traversal
+//! with Tensor Functionals — a vectorized *walk-forest* sampler. Unlike
+//! SAGE's per-node loops it materializes a dense [batch, fanout^l] index
+//! tensor per hop (that is its speed trick *and* its memory cost, which
+//! Table 4 quantifies: the recursive neighborhood still grows
+//! exponentially with depth).
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+pub struct GttfSampler {
+    pub fanout: usize,
+    pub layers: usize,
+}
+
+pub struct GttfSample {
+    /// walk-forest tensor per hop: hop[l] has len = batch * fanout^(l+1)
+    pub hops: Vec<Vec<u32>>,
+    /// unique touched nodes
+    pub nodes: Vec<u32>,
+    /// message edges implied by the forest (child -> parent), global ids
+    pub edges: Vec<(u32, u32)>,
+    /// bytes of the materialized index tensors (GTTF's working set)
+    pub tensor_bytes: usize,
+}
+
+impl GttfSampler {
+    pub fn new(fanout: usize, layers: usize) -> GttfSampler {
+        GttfSampler { fanout, layers }
+    }
+
+    /// Functional traversal: hop tensor T_0 = seeds; T_{l+1}[i*f + j] =
+    /// random neighbor of T_l[i] (with replacement — GTTF's ACCUMULATE).
+    pub fn traverse(&self, g: &Csr, seeds: &[u32], rng: &mut Rng) -> GttfSample {
+        let f = self.fanout;
+        let mut hops: Vec<Vec<u32>> = Vec::with_capacity(self.layers);
+        let mut cur: Vec<u32> = seeds.to_vec();
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let mut tensor_bytes = cur.len() * 4;
+        for _ in 0..self.layers {
+            let mut next = Vec::with_capacity(cur.len() * f);
+            for &v in &cur {
+                let nb = g.neighbors(v as usize);
+                for _ in 0..f {
+                    let u = if nb.is_empty() { v } else { nb[rng.below(nb.len())] };
+                    next.push(u);
+                    edges.push((u, v));
+                }
+            }
+            tensor_bytes += next.len() * 4;
+            hops.push(next.clone());
+            cur = next;
+        }
+        let mut seen: HashSet<u32> = seeds.iter().copied().collect();
+        for h in &hops {
+            seen.extend(h.iter().copied());
+        }
+        let mut nodes: Vec<u32> = seen.into_iter().collect();
+        nodes.sort_unstable();
+        edges.sort_unstable();
+        edges.dedup();
+        GttfSample { hops, nodes, edges, tensor_bytes }
+    }
+
+    /// Index-tensor footprint without materializing (batch * sum fanout^l).
+    pub fn tensor_elems(&self, batch: usize) -> usize {
+        let mut total = batch;
+        let mut layer = batch;
+        for _ in 0..self.layers {
+            layer *= self.fanout;
+            total += layer;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn hop_tensors_grow_exponentially() {
+        let mut rng = Rng::new(1);
+        let (g, _) = generators::planted_partition(400, 4, 8.0, 0.8, &mut rng);
+        let s = GttfSampler::new(3, 3);
+        let out = s.traverse(&g, &[0, 1], &mut rng);
+        assert_eq!(out.hops[0].len(), 2 * 3);
+        assert_eq!(out.hops[1].len(), 2 * 9);
+        assert_eq!(out.hops[2].len(), 2 * 27);
+        assert_eq!(out.tensor_bytes, (2 + 6 + 18 + 54) * 4);
+        assert_eq!(s.tensor_elems(2), 2 + 6 + 18 + 54);
+    }
+
+    #[test]
+    fn edges_follow_forest() {
+        let mut rng = Rng::new(2);
+        let (g, _) = generators::planted_partition(300, 4, 6.0, 0.8, &mut rng);
+        let s = GttfSampler::new(2, 2);
+        let out = s.traverse(&g, &[10], &mut rng);
+        for &(src, dst) in &out.edges {
+            // src must be a neighbor of dst (or a self fallback)
+            assert!(
+                src == dst || g.neighbors(dst as usize).contains(&src),
+                "{src}->{dst} not an edge"
+            );
+        }
+    }
+
+    #[test]
+    fn isolated_seed_self_loops() {
+        let g = Csr::from_undirected(3, &[(1, 2)]);
+        let mut rng = Rng::new(3);
+        let s = GttfSampler::new(2, 1);
+        let out = s.traverse(&g, &[0], &mut rng);
+        assert!(out.hops[0].iter().all(|&u| u == 0));
+    }
+}

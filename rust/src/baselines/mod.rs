@@ -1,0 +1,14 @@
+//! Scalability baselines the paper compares against (Tables 3/4/5, Fig. 3):
+//! Cluster-GCN (subgraph-only, drops inter-cluster edges), GraphSAGE-style
+//! node-wise neighbor sampling, GTTF-style recursive tensor-functional
+//! traversal, and the naive-history configuration (random batches, serial
+//! I/O, no regularization).
+
+pub mod cluster_gcn;
+pub mod gttf;
+pub mod naive_history;
+pub mod sage;
+
+pub use cluster_gcn::ClusterGcnTrainer;
+pub use gttf::GttfSampler;
+pub use sage::SageSampler;

@@ -1,0 +1,138 @@
+//! GraphSAGE-style node-wise neighbor sampling (Hamilton et al. 2017).
+//!
+//! From a seed batch, recursively sample up to `fanout` neighbors per node
+//! per layer, building the L-hop computation forest. The resulting node set
+//! grows ~fanout^L — the *neighbor explosion* GAS eliminates (Tables 3/4).
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+pub struct SageSampler {
+    pub fanout: usize,
+    pub layers: usize,
+}
+
+/// A sampled computation forest.
+pub struct Sample {
+    /// all touched nodes (seeds first)
+    pub nodes: Vec<u32>,
+    /// sampled (src, dst) message edges, global ids
+    pub edges: Vec<(u32, u32)>,
+    pub seeds: Vec<u32>,
+}
+
+impl SageSampler {
+    pub fn new(fanout: usize, layers: usize) -> SageSampler {
+        SageSampler { fanout, layers }
+    }
+
+    /// Sample the L-hop forest from `seeds`, capped at `max_nodes`
+    /// (padding limit of the executable; caps are reported, not silent —
+    /// the returned flag says whether the cap was hit).
+    pub fn sample(
+        &self,
+        g: &Csr,
+        seeds: &[u32],
+        max_nodes: usize,
+        rng: &mut Rng,
+    ) -> (Sample, bool) {
+        let mut nodes: Vec<u32> = seeds.to_vec();
+        let mut seen: HashSet<u32> = seeds.iter().copied().collect();
+        let mut frontier: Vec<u32> = seeds.to_vec();
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let mut capped = false;
+        for _ in 0..self.layers {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                let nb = g.neighbors(v as usize);
+                if nb.is_empty() {
+                    continue;
+                }
+                let take = self.fanout.min(nb.len());
+                let picks = rng.sample_distinct(nb.len(), take);
+                for p in picks {
+                    let u = nb[p];
+                    edges.push((u, v));
+                    if !seen.contains(&u) {
+                        if nodes.len() >= max_nodes {
+                            capped = true;
+                            continue;
+                        }
+                        seen.insert(u);
+                        nodes.push(u);
+                        next.push(u);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        edges.retain(|(s, d)| seen.contains(s) && seen.contains(d));
+        edges.sort_unstable();
+        edges.dedup();
+        (Sample { nodes, edges, seeds: seeds.to_vec() }, capped)
+    }
+
+    /// Expected receptive-field size (no cap): sum_l |B| * fanout^l — the
+    /// quantity behind Table 3's GRAPHSAGE memory row.
+    pub fn expected_nodes(&self, batch: usize) -> usize {
+        let mut total = batch as f64;
+        let mut layer = batch as f64;
+        for _ in 0..self.layers {
+            layer *= self.fanout as f64;
+            total += layer;
+        }
+        total as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn sample_is_connected_to_seeds() {
+        let mut rng = Rng::new(1);
+        let (g, _) = generators::planted_partition(500, 4, 8.0, 0.8, &mut rng);
+        let s = SageSampler::new(3, 2);
+        let (sample, _) = s.sample(&g, &[0, 1, 2, 3], 10_000, &mut rng);
+        assert!(sample.nodes.len() >= 4);
+        let set: HashSet<u32> = sample.nodes.iter().copied().collect();
+        for (s_, d) in &sample.edges {
+            assert!(set.contains(s_) && set.contains(d));
+        }
+        // fanout bound: each node contributes <= fanout edges per layer
+        assert!(sample.edges.len() <= sample.nodes.len() * 3 * 2);
+    }
+
+    #[test]
+    fn cap_limits_growth() {
+        let mut rng = Rng::new(2);
+        let (g, _) = generators::planted_partition(2000, 4, 20.0, 0.5, &mut rng);
+        let s = SageSampler::new(10, 3);
+        let (sample, capped) = s.sample(&g, &(0..50).collect::<Vec<_>>(), 200, &mut rng);
+        assert!(sample.nodes.len() <= 200);
+        assert!(capped);
+    }
+
+    #[test]
+    fn expected_growth_is_exponential() {
+        let s = SageSampler::new(10, 3);
+        assert_eq!(s.expected_nodes(1), 1 + 10 + 100 + 1000);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let (g, _) = generators::planted_partition(300, 4, 6.0, 0.8, &mut r1);
+        let (g2, _) = generators::planted_partition(300, 4, 6.0, 0.8, &mut r2);
+        assert_eq!(g.indices, g2.indices);
+        let s = SageSampler::new(4, 2);
+        let (a, _) = s.sample(&g, &[5, 6], 1000, &mut r1);
+        let (b, _) = s.sample(&g2, &[5, 6], 1000, &mut r2);
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.edges, b.edges);
+    }
+}

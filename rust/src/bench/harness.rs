@@ -1,0 +1,122 @@
+//! Minimal benchmarking harness with warmup and summary stats.
+
+use crate::util::stats;
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub samples: Vec<f64>,
+}
+
+impl BenchReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10.4} ms ± {:>8.4} (median {:.4}, min {:.4}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.median_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Runs closures with warmup + N timed iterations.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, iters: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Bencher {
+        Bencher { warmup, iters }
+    }
+
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchReport {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            samples.push(t.elapsed_s());
+        }
+        BenchReport {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: stats::mean(&samples),
+            std_s: stats::std(&samples),
+            median_s: stats::median(&samples),
+            min_s: stats::min(&samples),
+            samples,
+        }
+    }
+}
+
+/// Pretty table printer for experiment harnesses.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep() {
+        let b = Bencher::new(0, 3);
+        let r = b.run("sleep", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(r.mean_s >= 0.004, "mean {}", r.mean_s);
+        assert_eq!(r.samples.len(), 3);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.mean_s + r.std_s + 1e-3);
+    }
+
+    #[test]
+    fn report_line_formats() {
+        let r = BenchReport {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.001,
+            std_s: 0.0,
+            median_s: 0.001,
+            min_s: 0.001,
+            samples: vec![0.001],
+        };
+        assert!(r.line().contains("1.0000 ms"));
+    }
+}

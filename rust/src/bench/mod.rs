@@ -1,0 +1,16 @@
+//! Criterion-like benchmark harness (criterion itself is not in the
+//! offline mirror): warmup, timed iterations, mean/σ/median reporting.
+
+pub mod harness;
+
+pub use harness::{print_table, BenchReport, Bencher};
+
+/// Epoch budget for experiment benches: `GAS_EPOCHS` env or the default.
+pub fn epochs_or(default: usize) -> usize {
+    std::env::var("GAS_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Substring filter for dataset/model sweeps: `GAS_FILTER` env.
+pub fn filter() -> String {
+    std::env::var("GAS_FILTER").unwrap_or_default()
+}

@@ -1,0 +1,70 @@
+//! Run-level configuration: a shared context bundling the manifest, PJRT
+//! client, and lazily generated datasets / loaded artifacts, so examples,
+//! benches and the CLI all go through one path.
+
+use crate::graph::datasets::Dataset;
+use crate::runtime::{LoadedArtifact, Manifest, RtClient};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Shared run context. Artifacts and datasets are cached on first use
+/// (XLA compilation and graph generation are the expensive parts).
+pub struct Ctx {
+    pub client: RtClient,
+    pub manifest: Manifest,
+    datasets: HashMap<String, Dataset>,
+    artifacts: HashMap<String, LoadedArtifact>,
+}
+
+impl Ctx {
+    pub fn new() -> Result<Ctx> {
+        Self::with_dir(Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: PathBuf) -> Result<Ctx> {
+        let manifest = Manifest::load(&dir)?;
+        let client = RtClient::cpu()?;
+        Ok(Ctx { client, manifest, datasets: HashMap::new(), artifacts: HashMap::new() })
+    }
+
+    /// Generate (once) and return a dataset by profile name.
+    pub fn dataset(&mut self, name: &str) -> Result<&Dataset> {
+        if !self.datasets.contains_key(name) {
+            let profile = self.manifest.profile(name)?.clone();
+            let ds = Dataset::generate(&profile);
+            self.datasets.insert(name.to_string(), ds);
+        }
+        Ok(&self.datasets[name])
+    }
+
+    /// Load + XLA-compile (once) an artifact by name.
+    pub fn artifact(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.artifacts.contains_key(name) {
+            let art = LoadedArtifact::load(&self.client, &self.manifest, name)?;
+            self.artifacts.insert(name.to_string(), art);
+        }
+        Ok(&self.artifacts[name])
+    }
+
+    /// Immutable lookups (after a prior `dataset`/`artifact` call) — lets
+    /// multiple datasets/artifacts be borrowed simultaneously.
+    pub fn get_dataset(&self, name: &str) -> Result<&Dataset> {
+        self.datasets
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("dataset {name:?} not generated yet"))
+    }
+
+    pub fn get_artifact(&self, name: &str) -> Result<&LoadedArtifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded yet"))
+    }
+
+    /// Both at once (borrow-splitting helper for trainers).
+    pub fn pair(&mut self, dataset: &str, artifact: &str) -> Result<(&Dataset, &LoadedArtifact)> {
+        self.dataset(dataset)?;
+        self.artifact(artifact)?;
+        Ok((&self.datasets[dataset], &self.artifacts[artifact]))
+    }
+}

@@ -1,0 +1,8 @@
+//! Expressiveness experiments: 1-WL color refinement (the yardstick of
+//! Theorem 5) and the Proposition 3 counterexample showing edge-sampled
+//! GNNs break WL-equivalence while GAS preserves it.
+
+pub mod prop3;
+pub mod wl;
+
+pub use wl::{wl_colors, wl_equivalent};

@@ -1,0 +1,168 @@
+//! Proposition 3: a WL-expressive GNN operating on a *sampled* adjacency
+//! (edges dropped, survivors re-weighted by |N(v)|/|Ñ(v)|) produces
+//! non-equivalent colorings for WL-equivalent nodes — sampling loses
+//! expressive power, histories do not.
+//!
+//! We emulate a maximally expressive operator with an exact multiset-hash
+//! refinement (the discrete analog of an injective GIN layer) and compare
+//! colorings on the true graph vs the sampled, re-weighted one.
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// One injective-hash refinement round over an *weighted* adjacency:
+/// color'(v) = hash(color(v), multiset{(w_uv, color(u))}).
+/// Weights participate in the hash exactly as they would perturb the sums
+/// of an injective sum-aggregator.
+pub fn weighted_refine(adj: &[Vec<(u32, u32)>], colors: &[u64]) -> Vec<u64> {
+    let mut palette: HashMap<(u64, Vec<(u32, u64)>), u64> = HashMap::new();
+    let mut next = vec![0u64; adj.len()];
+    for v in 0..adj.len() {
+        let mut nb: Vec<(u32, u64)> = adj[v]
+            .iter()
+            .map(|&(u, w)| (w, colors[u as usize]))
+            .collect();
+        nb.sort_unstable();
+        let key = (colors[v], nb);
+        let id = palette.len() as u64;
+        next[v] = *palette.entry(key).or_insert(id);
+    }
+    next
+}
+
+/// Weighted adjacency of the full graph (all weights 1).
+pub fn full_adj(g: &Csr) -> Vec<Vec<(u32, u32)>> {
+    (0..g.num_nodes())
+        .map(|v| g.neighbors(v).iter().map(|&u| (u, 1u32)).collect())
+        .collect()
+}
+
+/// Sampled adjacency per Proposition 3: keep `keep` of each node's
+/// neighbors, weight survivors by |N(v)|/|Ñ(v)| (stored as integer ratio
+/// numerator to keep hashing exact).
+pub fn sampled_adj(g: &Csr, keep: usize, rng: &mut Rng) -> Vec<Vec<(u32, u32)>> {
+    (0..g.num_nodes())
+        .map(|v| {
+            let nb = g.neighbors(v);
+            if nb.len() <= keep {
+                return nb.iter().map(|&u| (u, 1u32)).collect();
+            }
+            let picks = rng.sample_distinct(nb.len(), keep);
+            // weight = |N(v)| / keep, encoded as a rational scaled by keep
+            picks.into_iter().map(|p| (nb[p], nb.len() as u32)).collect()
+        })
+        .collect()
+}
+
+/// Result of the Prop-3 experiment on one graph.
+pub struct Prop3Outcome {
+    /// pairs (v, w) that are WL-equivalent on the true graph
+    pub equivalent_pairs: usize,
+    /// of those, how many get *different* colors under sampling
+    pub broken_by_sampling: usize,
+}
+
+/// Run `rounds` refinements on the true and sampled graphs and count
+/// WL-equivalent pairs whose sampled colors diverge. `init`: initial node
+/// colors (e.g. feature classes), as in the paper's colored counterexample.
+pub fn prop3_experiment(
+    g: &Csr,
+    init: &[u64],
+    keep: usize,
+    rounds: usize,
+    seed: u64,
+) -> Prop3Outcome {
+    let mut rng = Rng::new(seed);
+    let adj_true = full_adj(g);
+    let adj_samp = sampled_adj(g, keep, &mut rng);
+    let mut c_true = init.to_vec();
+    let mut c_samp = init.to_vec();
+    for _ in 0..rounds {
+        c_true = weighted_refine(&adj_true, &c_true);
+        c_samp = weighted_refine(&adj_samp, &c_samp);
+    }
+    let n = g.num_nodes();
+    let mut equivalent_pairs = 0usize;
+    let mut broken = 0usize;
+    for v in 0..n {
+        for w in (v + 1)..n {
+            if c_true[v] == c_true[w] {
+                equivalent_pairs += 1;
+                if c_samp[v] != c_samp[w] {
+                    broken += 1;
+                }
+            }
+        }
+    }
+    Prop3Outcome { equivalent_pairs, broken_by_sampling: broken }
+}
+
+/// The paper's counterexample (appendix proof of Prop. 3): two hubs whose
+/// *colored* neighborhoods are identical multisets {blue, green}; keeping
+/// one of two edges (re-weighted x2) can retain blue at one hub and green
+/// at the other => non-equivalent colorings under sampling.
+/// Returns (graph, initial colors, hub v, hub w).
+pub fn counterexample() -> (Csr, Vec<u64>, usize, usize) {
+    // hubs 0 and 3; 1,4 colored 1 ("blue"); 2,5 colored 2 ("green")
+    let g = Csr::from_undirected(6, &[(0, 1), (0, 2), (3, 4), (3, 5)]);
+    let init = vec![0, 1, 2, 0, 1, 2];
+    (g, init, 0, 3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn counterexample_hubs_share_full_colors() {
+        let (g, init, v, w) = counterexample();
+        let adj = full_adj(&g);
+        let mut c = init.clone();
+        for _ in 0..3 {
+            c = weighted_refine(&adj, &c);
+        }
+        assert_eq!(c[v], c[w]);
+    }
+
+    #[test]
+    fn sampling_breaks_counterexample() {
+        let (g, init, v, w) = counterexample();
+        // keep 1 of {blue, green}: one hub may retain blue, the other
+        // green — non-equivalent colorings for some sampling seed.
+        let mut diverged = false;
+        for seed in 0..40 {
+            let out = prop3_experiment(&g, &init, 1, 3, seed);
+            if out.broken_by_sampling > 0 {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "sampling never broke WL equivalence");
+    }
+
+    #[test]
+    fn experiment_finds_breakage_on_random_graphs() {
+        let mut rng = Rng::new(9);
+        let (g, labels) = generators::planted_partition(200, 3, 6.0, 0.7, &mut rng);
+        let init: Vec<u64> = labels.iter().map(|&c| c as u64).collect();
+        let mut total_equiv = 0;
+        let mut total_broken = 0;
+        for seed in 0..5 {
+            let out = prop3_experiment(&g, &init, 2, 3, seed);
+            total_equiv += out.equivalent_pairs;
+            total_broken += out.broken_by_sampling;
+        }
+        if total_equiv > 0 {
+            assert!(total_broken > 0, "{total_equiv} equivalent, none broken");
+        }
+    }
+
+    #[test]
+    fn no_sampling_breaks_nothing() {
+        let (g, init, ..) = counterexample();
+        let out = prop3_experiment(&g, &init, usize::MAX, 3, 1);
+        assert_eq!(out.broken_by_sampling, 0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! Graphs are undirected and stored with both edge directions, so
+//! `neighbors(v)` is the full neighborhood and `deg(v) == |N(v)|`.
+//! Self-loops are *not* stored — each GNN operator handles its own self
+//! term (see python/compile/models.py).
+
+use anyhow::{ensure, Result};
+
+/// CSR adjacency. `indptr.len() == n + 1`, `indices[indptr[v]..indptr[v+1]]`
+/// are the neighbors of `v`, sorted ascending.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an undirected edge list (each pair once, a < b not
+    /// required). Duplicates and self-loops are dropped.
+    pub fn from_undirected(n: usize, pairs: &[(u32, u32)]) -> Csr {
+        let mut deg = vec![0u32; n];
+        let mut clean: Vec<(u32, u32)> = pairs
+            .iter()
+            .filter(|(a, b)| a != b)
+            .map(|&(a, b)| if a < b { (a, b) } else { (b, a) })
+            .collect();
+        clean.sort_unstable();
+        clean.dedup();
+        for &(a, b) in &clean {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut indptr = vec![0u32; n + 1];
+        for v in 0..n {
+            indptr[v + 1] = indptr[v] + deg[v];
+        }
+        let mut cursor: Vec<u32> = indptr[..n].to_vec();
+        let mut indices = vec![0u32; indptr[n] as usize];
+        for &(a, b) in &clean {
+            indices[cursor[a as usize] as usize] = b;
+            cursor[a as usize] += 1;
+            indices[cursor[b as usize] as usize] = a;
+            cursor[b as usize] += 1;
+        }
+        for v in 0..n {
+            indices[indptr[v] as usize..indptr[v + 1] as usize].sort_unstable();
+        }
+        Csr { indptr, indices }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Directed edge count (2x undirected).
+    #[inline]
+    pub fn num_directed_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn deg(&self, v: usize) -> usize {
+        (self.indptr[v + 1] - self.indptr[v]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v] as usize..self.indptr[v + 1] as usize]
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        self.num_directed_edges() as f64 / self.num_nodes() as f64
+    }
+
+    pub fn degrees_f32(&self) -> Vec<f32> {
+        (0..self.num_nodes()).map(|v| self.deg(v) as f32).collect()
+    }
+
+    /// Validity check used by generator tests: sorted rows, symmetric,
+    /// no self loops, indices in range.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.num_nodes();
+        for v in 0..n {
+            let nb = self.neighbors(v);
+            ensure!(nb.windows(2).all(|w| w[0] < w[1]), "row {v} not sorted/dedup");
+            for &u in nb {
+                ensure!((u as usize) < n, "index out of range");
+                ensure!(u as usize != v, "self loop at {v}");
+                ensure!(
+                    self.neighbors(u as usize).binary_search(&(v as u32)).is_ok(),
+                    "asymmetric edge {v}->{u}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Edges (src, dst) with dst restricted to `dst_set` membership flags;
+    /// used by batch assembly. Returns (src, dst) in *global* numbering.
+    pub fn edges_into(&self, dst_nodes: &[u32]) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        for &d in dst_nodes {
+            for &s in self.neighbors(d as usize) {
+                out.push((s, d));
+            }
+        }
+        out
+    }
+
+    /// Count edges whose both endpoints lie in `part` (given a membership
+    /// array) vs edges crossing out — the inter/intra connectivity metric.
+    pub fn intra_inter(&self, member: &[bool]) -> (usize, usize) {
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for v in 0..self.num_nodes() {
+            if !member[v] {
+                continue;
+            }
+            for &u in self.neighbors(v) {
+                if member[u as usize] {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
+            }
+        }
+        (intra, inter) // intra counts each in-part edge twice (directed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn triangle_plus_tail() -> Csr {
+        // 0-1, 1-2, 0-2, 2-3
+        Csr::from_undirected(4, &[(0, 1), (1, 2), (0, 2), (2, 3)])
+    }
+
+    #[test]
+    fn builds_csr() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_directed_edges(), 8);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert_eq!(g.deg(3), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn drops_duplicates_and_self_loops() {
+        let g = Csr::from_undirected(3, &[(0, 1), (1, 0), (0, 0), (1, 2), (1, 2)]);
+        assert_eq!(g.num_directed_edges(), 4);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn edges_into_collects_incoming() {
+        let g = triangle_plus_tail();
+        let e = g.edges_into(&[2]);
+        assert_eq!(e, vec![(0, 2), (1, 2), (3, 2)]);
+    }
+
+    #[test]
+    fn intra_inter_counts() {
+        let g = triangle_plus_tail();
+        let member = vec![true, true, false, false];
+        let (intra, inter) = g.intra_inter(&member);
+        assert_eq!(intra, 2); // 0-1 both directions
+        assert_eq!(inter, 2); // 0->2, 1->2
+    }
+
+    #[test]
+    fn prop_random_graphs_validate() {
+        prop::check(
+            11,
+            25,
+            |r: &mut Rng| {
+                let n = 2 + r.below(40);
+                let m = r.below(3 * n);
+                let pairs: Vec<(u32, u32)> = (0..m)
+                    .map(|_| (r.below(n) as u32, r.below(n) as u32))
+                    .collect();
+                (n, pairs.into_iter().map(|(a, b)| (a as u64, b as u64)).map(|(a, b)| vec![a, b]).flatten().collect::<Vec<u64>>())
+            },
+            |(n, flat)| {
+                let pairs: Vec<(u32, u32)> = flat
+                    .chunks_exact(2)
+                    .map(|c| (c[0] as u32, c[1] as u32))
+                    .collect();
+                let g = Csr::from_undirected(*n, &pairs);
+                g.validate().is_ok() && g.num_nodes() == *n
+            },
+        );
+    }
+}

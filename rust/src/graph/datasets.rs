@@ -1,0 +1,198 @@
+//! Dataset = graph + features + labels + splits, built from a manifest
+//! `DatasetProfile` (python/compile/configs.py is the single source of
+//! truth; rust never re-derives shapes).
+
+use crate::graph::csr::Csr;
+use crate::graph::{features, generators};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Mirror of python's `DatasetProfile` (manifest.json / "profiles").
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: String,
+    pub kind: String,
+    pub n: usize,
+    pub f: usize,
+    pub c: usize,
+    pub avg_deg: f64,
+    pub multilabel: bool,
+    pub train_frac: f64,
+    pub val_frac: f64,
+    pub homophily: f64,
+    pub feat_noise: f64,
+    pub parts: usize,
+    pub paper_n: usize,
+    pub seed: u64,
+}
+
+impl Profile {
+    pub fn from_json(j: &Json) -> Result<Profile> {
+        Ok(Profile {
+            name: j.get("name")?.as_str()?.to_string(),
+            kind: j.get("kind")?.as_str()?.to_string(),
+            n: j.get("n")?.as_usize()?,
+            f: j.get("f")?.as_usize()?,
+            c: j.get("c")?.as_usize()?,
+            avg_deg: j.get("avg_deg")?.as_f64()?,
+            multilabel: j.get("multilabel")?.as_bool()?,
+            train_frac: j.get("train_frac")?.as_f64()?,
+            val_frac: j.get("val_frac")?.as_f64()?,
+            homophily: j.get("homophily")?.as_f64()?,
+            feat_noise: j.get("feat_noise")?.as_f64()?,
+            parts: j.get("parts")?.as_usize()?,
+            paper_n: j.get("paper_n")?.as_usize()?,
+            seed: j.get("seed")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// A fully materialized dataset.
+pub struct Dataset {
+    pub profile: Profile,
+    pub graph: Csr,
+    /// row-major [n, f]
+    pub x: Vec<f32>,
+    /// multi-class: class id per node (always populated; latent class for
+    /// multilabel datasets)
+    pub labels: Vec<u16>,
+    /// multilabel targets [n, c] in {0,1}; empty for multi-class
+    pub y_multi: Vec<f32>,
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl Dataset {
+    /// Generate deterministically from a profile (same seed => same data).
+    pub fn generate(profile: &Profile) -> Dataset {
+        let mut rng = Rng::new(profile.seed ^ hash_name(&profile.name));
+        let (graph, labels) = match profile.kind.as_str() {
+            "sbm" => {
+                // CLUSTER supergraph: paper converts multiple SBM graphs
+                // into one supergraph with 2x partitions per graph (§6.1).
+                let graphs = (profile.parts / 2).max(1);
+                generators::sbm_cluster(profile.n, profile.c, profile.avg_deg, graphs, &mut rng)
+            }
+            _ => generators::planted_partition(
+                profile.n,
+                profile.c,
+                profile.avg_deg,
+                profile.homophily,
+                &mut rng,
+            ),
+        };
+        let x = features::class_features(
+            &labels,
+            profile.c,
+            profile.f,
+            profile.feat_noise as f32,
+            &mut rng,
+        );
+        let y_multi = if profile.multilabel {
+            features::multilabel_targets(&labels, profile.c, profile.c, &mut rng)
+        } else {
+            Vec::new()
+        };
+        let (train_mask, val_mask, test_mask) =
+            features::split_masks(profile.n, profile.train_frac, profile.val_frac, &mut rng);
+        Dataset {
+            profile: profile.clone(),
+            graph,
+            x,
+            labels,
+            y_multi,
+            train_mask,
+            val_mask,
+            test_mask,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.profile.n
+    }
+
+    pub fn feature_row(&self, v: usize) -> &[f32] {
+        &self.x[v * self.profile.f..(v + 1) * self.profile.f]
+    }
+}
+
+fn hash_name(s: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_profile() -> Profile {
+        Profile {
+            name: "t".into(),
+            kind: "planted".into(),
+            n: 500,
+            f: 16,
+            c: 4,
+            avg_deg: 5.0,
+            multilabel: false,
+            train_frac: 0.2,
+            val_frac: 0.2,
+            homophily: 0.8,
+            feat_noise: 0.5,
+            parts: 4,
+            paper_n: 500,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let p = tiny_profile();
+        let a = Dataset::generate(&p);
+        let b = Dataset::generate(&p);
+        assert_eq!(a.graph.indices, b.graph.indices);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.train_mask, b.train_mask);
+    }
+
+    #[test]
+    fn different_names_differ() {
+        let p = tiny_profile();
+        let mut q = tiny_profile();
+        q.name = "u".into();
+        let a = Dataset::generate(&p);
+        let b = Dataset::generate(&q);
+        assert_ne!(a.graph.indices, b.graph.indices);
+    }
+
+    #[test]
+    fn multilabel_dataset_has_targets() {
+        let mut p = tiny_profile();
+        p.multilabel = true;
+        let d = Dataset::generate(&p);
+        assert_eq!(d.y_multi.len(), 500 * 4);
+        assert!(d.y_multi.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"cora","kind":"planted","n":2708,"f":256,"c":7,
+                "avg_deg":3.9,"multilabel":false,"train_frac":0.052,
+                "val_frac":0.15,"homophily":0.8,"feat_noise":1.0,
+                "parts":4,"paper_n":2708,"seed":7}"#,
+        )
+        .unwrap();
+        let p = Profile::from_json(&j).unwrap();
+        assert_eq!(p.name, "cora");
+        assert_eq!(p.parts, 4);
+        assert!((p.avg_deg - 3.9).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! Feature and label models for synthetic datasets.
+//!
+//! Features are class-correlated Gaussians: each class gets a random unit
+//! center in R^F; node features = center + noise. This preserves the one
+//! property GNN benchmarks rely on — features are informative of labels,
+//! and neighborhood aggregation denoises them (homophily).
+
+use crate::util::rng::Rng;
+
+/// Dense class-correlated features, row-major [n, f].
+pub fn class_features(
+    labels: &[u16],
+    classes: usize,
+    f: usize,
+    noise: f32,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let centers = class_centers(classes, f, rng);
+    let mut out = vec![0f32; labels.len() * f];
+    for (i, &c) in labels.iter().enumerate() {
+        let base = &centers[c as usize * f..(c as usize + 1) * f];
+        let row = &mut out[i * f..(i + 1) * f];
+        for j in 0..f {
+            row[j] = base[j] + noise * rng.normal_f32();
+        }
+    }
+    out
+}
+
+/// Random unit-norm class centers, [classes * f].
+pub fn class_centers(classes: usize, f: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut centers = vec![0f32; classes * f];
+    for c in 0..classes {
+        let row = &mut centers[c * f..(c + 1) * f];
+        let mut norm = 0f32;
+        for x in row.iter_mut() {
+            *x = rng.normal_f32();
+            norm += *x * *x;
+        }
+        let norm = norm.sqrt().max(1e-6);
+        for x in row.iter_mut() {
+            *x /= norm;
+        }
+    }
+    centers
+}
+
+/// Multi-label targets: `c` binary labels per node, each correlated with the
+/// node's latent class (PPI/Yelp stand-in). Returns [n * c] in {0,1}.
+pub fn multilabel_targets(labels: &[u16], classes: usize, c: usize, rng: &mut Rng) -> Vec<f32> {
+    // each output label has a random subset of latent classes that turn it on
+    let mut affinity = vec![false; classes * c];
+    for a in affinity.iter_mut() {
+        *a = rng.chance(0.3);
+    }
+    let mut out = vec![0f32; labels.len() * c];
+    for (i, &lc) in labels.iter().enumerate() {
+        for j in 0..c {
+            let on = affinity[lc as usize * c + j];
+            let p = if on { 0.85 } else { 0.08 };
+            out[i * c + j] = if rng.chance(p) { 1.0 } else { 0.0 };
+        }
+    }
+    out
+}
+
+/// Train/val/test split masks. Deterministic under the rng.
+pub fn split_masks(
+    n: usize,
+    train_frac: f64,
+    val_frac: f64,
+    rng: &mut Rng,
+) -> (Vec<bool>, Vec<bool>, Vec<bool>) {
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let n_train = ((n as f64) * train_frac).round() as usize;
+    let n_val = ((n as f64) * val_frac).round() as usize;
+    let mut train = vec![false; n];
+    let mut val = vec![false; n];
+    let mut test = vec![false; n];
+    for (i, &v) in order.iter().enumerate() {
+        if i < n_train {
+            train[v] = true;
+        } else if i < n_train + n_val {
+            val[v] = true;
+        } else {
+            test[v] = true;
+        }
+    }
+    (train, val, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_are_class_separable() {
+        let mut rng = Rng::new(1);
+        let labels: Vec<u16> = (0..200).map(|i| (i % 4) as u16).collect();
+        let f = 16;
+        let x = class_features(&labels, 4, f, 0.3, &mut rng);
+        // same-class rows should be closer than cross-class rows on average
+        let dist = |a: usize, b: usize| -> f32 {
+            (0..f).map(|j| (x[a * f + j] - x[b * f + j]).powi(2)).sum()
+        };
+        let mut same = 0f32;
+        let mut cross = 0f32;
+        let mut ns = 0;
+        let mut nc = 0;
+        for a in 0..50 {
+            for b in (a + 1)..50 {
+                if labels[a] == labels[b] {
+                    same += dist(a, b);
+                    ns += 1;
+                } else {
+                    cross += dist(a, b);
+                    nc += 1;
+                }
+            }
+        }
+        assert!(same / ns as f32 <= 0.7 * (cross / nc as f32));
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let mut rng = Rng::new(2);
+        let (tr, va, te) = split_masks(1000, 0.1, 0.2, &mut rng);
+        let nt = tr.iter().filter(|&&b| b).count();
+        let nv = va.iter().filter(|&&b| b).count();
+        let ne = te.iter().filter(|&&b| b).count();
+        assert_eq!(nt, 100);
+        assert_eq!(nv, 200);
+        assert_eq!(nt + nv + ne, 1000);
+        for i in 0..1000 {
+            assert_eq!(tr[i] as u8 + va[i] as u8 + te[i] as u8, 1);
+        }
+    }
+
+    #[test]
+    fn multilabel_correlates_with_class() {
+        let mut rng = Rng::new(3);
+        let labels: Vec<u16> = (0..400).map(|i| (i % 2) as u16).collect();
+        let y = multilabel_targets(&labels, 2, 8, &mut rng);
+        // mean per (class, label) must differ across classes for some label
+        let mut means = [[0f32; 8]; 2];
+        for (i, &lc) in labels.iter().enumerate() {
+            for j in 0..8 {
+                means[lc as usize][j] += y[i * 8 + j] / 200.0;
+            }
+        }
+        let diff: f32 = (0..8).map(|j| (means[0][j] - means[1][j]).abs()).sum();
+        assert!(diff > 0.3, "labels uncorrelated with latent class: {diff}");
+    }
+}

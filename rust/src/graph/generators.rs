@@ -1,0 +1,221 @@
+//! Synthetic graph generators.
+//!
+//! The paper's datasets are unavailable offline, so each is simulated by a
+//! generator matching its *relevant* statistics (DESIGN.md §3): node/edge
+//! counts, degree distribution, class structure (homophily — the property
+//! METIS exploits), and feature-label correlation. GAS's behaviour depends
+//! on exactly these quantities, not on the raw data.
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Planted-partition graph with a power-law-ish degree profile: the
+/// homophilic "citation network" stand-in. Nodes get a class; each node
+/// draws ~deg/2 stubs; a stub connects intra-class with prob `homophily`,
+/// uniformly otherwise. Target endpoints are degree-biased (preferential)
+/// to produce heavy tails like real citation/co-purchase graphs.
+pub fn planted_partition(
+    n: usize,
+    classes: usize,
+    avg_deg: f64,
+    homophily: f64,
+    rng: &mut Rng,
+) -> (Csr, Vec<u16>) {
+    assert!(classes >= 1 && n >= classes);
+    // class sizes: roughly balanced with mild skew
+    let labels: Vec<u16> = (0..n).map(|i| (i % classes) as u16).collect();
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); classes];
+    for (i, &c) in labels.iter().enumerate() {
+        by_class[c as usize].push(i as u32);
+    }
+    // per-node target stubs ~ powerlaw in [1, 20*avg] with mean ~ avg/2
+    let half = (avg_deg / 2.0).max(0.5);
+    let mut pairs: Vec<(u32, u32)> = Vec::with_capacity((n as f64 * half) as usize);
+    for v in 0..n {
+        let stubs = sample_stub_count(half, rng);
+        let c = labels[v] as usize;
+        for _ in 0..stubs {
+            let u = if rng.chance(homophily) {
+                let peers = &by_class[c];
+                peers[rng.below(peers.len())]
+            } else {
+                rng.below(n) as u32
+            };
+            if u as usize != v {
+                pairs.push((v as u32, u));
+            }
+        }
+    }
+    (Csr::from_undirected(n, &pairs), labels)
+}
+
+/// Draw a stub count with a heavy-ish tail, mean ~ `mean`.
+fn sample_stub_count(mean: f64, rng: &mut Rng) -> usize {
+    // mixture: mostly Poisson-like around the mean, 5% heavy tail
+    if rng.chance(0.05) {
+        rng.powerlaw(mean.max(1.0), 20.0 * mean.max(1.0), 2.5).round() as usize
+    } else {
+        // Poisson via Knuth for small means
+        let l = (-mean).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64();
+            if p <= l || k > 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+}
+
+/// Stochastic Block Model mirroring the CLUSTER benchmark (Dwivedi et al.):
+/// `graphs` disjoint SBMs merged into one super graph (paper §6.1), each
+/// with `classes` communities, intra-prob chosen to hit `avg_deg`.
+pub fn sbm_cluster(
+    n: usize,
+    classes: usize,
+    avg_deg: f64,
+    graphs: usize,
+    rng: &mut Rng,
+) -> (Csr, Vec<u16>) {
+    let per = n / graphs;
+    let mut pairs = Vec::new();
+    let mut labels = vec![0u16; n];
+    // stub model: each node draws ~avg_deg/2 partners; a stub stays inside
+    // its community with probability q (the SBM p_in = 5 p_out equivalent).
+    let b = (per / classes).max(1) as f64;
+    let q = 5.0 * (b - 1.0) / (5.0 * (b - 1.0) + (per as f64 - b)).max(1.0);
+    let half = avg_deg / 2.0;
+    for g in 0..graphs {
+        let base = g * per;
+        let end = if g == graphs - 1 { n } else { base + per };
+        let span = end - base;
+        for v in base..end {
+            labels[v] = (((v - base) * classes) / span.max(1)) as u16;
+        }
+        // block boundaries for intra-community sampling
+        for v in base..end {
+            let cv = labels[v] as usize;
+            let blk_lo = base + cv * span / classes;
+            let blk_hi = base + (cv + 1) * span / classes;
+            let stubs = sample_stub_count(half, rng);
+            for _ in 0..stubs {
+                let u = if rng.chance(q) && blk_hi > blk_lo {
+                    blk_lo + rng.below(blk_hi - blk_lo)
+                } else {
+                    base + rng.below(span)
+                };
+                if u != v {
+                    pairs.push((v as u32, u as u32));
+                }
+            }
+        }
+    }
+    (Csr::from_undirected(n, &pairs), labels)
+}
+
+/// Controlled inter/intra-connectivity synthetic for Fig. 4: a batch of
+/// `nb` nodes randomly intra-connected with degree `deg_intra`, plus
+/// `n_out` out-of-batch nodes each inter-connected to `deg_inter` batch
+/// nodes (paper §6.2 setup). Returns (graph, batch size).
+pub fn fig4_batch_graph(
+    nb: usize,
+    deg_intra: usize,
+    n_out: usize,
+    deg_inter: usize,
+    rng: &mut Rng,
+) -> Csr {
+    let n = nb + n_out;
+    let mut pairs = Vec::new();
+    for v in 0..nb {
+        for _ in 0..deg_intra / 2 {
+            let u = rng.below(nb) as u32;
+            if u as usize != v {
+                pairs.push((v as u32, u));
+            }
+        }
+    }
+    for o in nb..n {
+        for _ in 0..deg_inter {
+            pairs.push((o as u32, rng.below(nb) as u32));
+        }
+    }
+    Csr::from_undirected(n, &pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_matches_target_degree() {
+        let mut rng = Rng::new(1);
+        let (g, labels) = planted_partition(4000, 7, 6.0, 0.8, &mut rng);
+        g.validate().unwrap();
+        assert_eq!(labels.len(), 4000);
+        let d = g.avg_degree();
+        assert!(d > 3.5 && d < 9.0, "avg degree {d}");
+    }
+
+    #[test]
+    fn planted_is_homophilic() {
+        let mut rng = Rng::new(2);
+        let (g, labels) = planted_partition(3000, 5, 8.0, 0.85, &mut rng);
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for v in 0..g.num_nodes() {
+            for &u in g.neighbors(v) {
+                total += 1;
+                if labels[v] == labels[u as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        let frac = intra as f64 / total as f64;
+        assert!(frac > 0.6, "homophily fraction {frac}");
+    }
+
+    #[test]
+    fn planted_has_degree_tail() {
+        let mut rng = Rng::new(3);
+        let (g, _) = planted_partition(5000, 7, 6.0, 0.8, &mut rng);
+        let max_deg = (0..g.num_nodes()).map(|v| g.deg(v)).max().unwrap();
+        assert!(max_deg > 20, "max degree {max_deg} — no tail");
+    }
+
+    #[test]
+    fn sbm_block_structure() {
+        let mut rng = Rng::new(4);
+        let (g, labels) = sbm_cluster(3000, 6, 10.0, 4, &mut rng);
+        g.validate().unwrap();
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for v in 0..g.num_nodes() {
+            for &u in g.neighbors(v) {
+                total += 1;
+                if labels[v] == labels[u as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        // p_in = 5 p_out within subgraphs => clearly assortative
+        assert!(intra as f64 / total as f64 > 0.35);
+        let d = g.avg_degree();
+        assert!(d > 5.0 && d < 20.0, "avg degree {d}");
+    }
+
+    #[test]
+    fn fig4_ratio_scales_with_out_nodes() {
+        let mut rng = Rng::new(5);
+        let g1 = fig4_batch_graph(1000, 20, 100, 20, &mut rng);
+        let g2 = fig4_batch_graph(1000, 20, 2000, 20, &mut rng);
+        let member1: Vec<bool> = (0..g1.num_nodes()).map(|v| v < 1000).collect();
+        let member2: Vec<bool> = (0..g2.num_nodes()).map(|v| v < 1000).collect();
+        let (intra1, inter1) = g1.intra_inter(&member1);
+        let (intra2, inter2) = g2.intra_inter(&member2);
+        let r1 = inter1 as f64 / intra1 as f64;
+        let r2 = inter2 as f64 / intra2 as f64;
+        assert!(r2 > 5.0 * r1, "ratios {r1} {r2}");
+    }
+}

@@ -1,0 +1,81 @@
+//! Binary graph serialization — lets expensive synthetic graphs (products:
+//! 120K nodes) be generated once and memory-mapped-style reloaded by
+//! benches. Format: magic, n, m, indptr (u32 LE), indices (u32 LE).
+
+use crate::graph::csr::Csr;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"GASCSR01";
+
+pub fn save_csr(g: &Csr, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
+    f.write_all(&(g.indices.len() as u64).to_le_bytes())?;
+    f.write_all(as_bytes(&g.indptr))?;
+    f.write_all(as_bytes(&g.indices))?;
+    Ok(())
+}
+
+pub fn load_csr(path: &Path) -> Result<Csr> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a GASCSR01 file: {}", path.display());
+    }
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    f.read_exact(&mut b8)?;
+    let m = u64::from_le_bytes(b8) as usize;
+    let mut indptr = vec![0u32; n + 1];
+    read_u32s(&mut f, &mut indptr)?;
+    let mut indices = vec![0u32; m];
+    read_u32s(&mut f, &mut indices)?;
+    let g = Csr { indptr, indices };
+    g.validate().context("loaded graph failed validation")?;
+    Ok(g)
+}
+
+fn as_bytes(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn read_u32s(f: &mut std::fs::File, out: &mut [u32]) -> Result<()> {
+    let buf =
+        unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4) };
+    f.read_exact(buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let (g, _) = generators::planted_partition(500, 4, 6.0, 0.8, &mut rng);
+        let dir = std::env::temp_dir().join("gas_io_test.bin");
+        save_csr(&g, &dir).unwrap();
+        let g2 = load_csr(&dir).unwrap();
+        assert_eq!(g.indptr, g2.indptr);
+        assert_eq!(g.indices, g2.indices);
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("gas_io_garbage.bin");
+        std::fs::write(&dir, b"not a graph").unwrap();
+        assert!(load_csr(&dir).is_err());
+        std::fs::remove_file(&dir).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! Graph substrate: CSR storage, synthetic generators mirroring the paper's
+//! dataset statistics (Table 8), feature/label models and train/val/test
+//! splits.
+
+pub mod csr;
+pub mod datasets;
+pub mod features;
+pub mod generators;
+pub mod io;
+
+pub use csr::Csr;
+pub use datasets::Dataset;

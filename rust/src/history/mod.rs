@@ -1,0 +1,17 @@
+//! Historical embeddings — the paper's core mechanism.
+//!
+//! [`store::HistoryStore`] holds per-layer `[N, H]` embedding matrices in
+//! host memory ("RAM rather than GPU memory", §2) with staleness tracking
+//! and approximation-error probes (Lemma 1 / Theorem 2 measurements).
+//!
+//! [`pipeline::HistoryPipeline`] is the concurrent push/pull engine of
+//! §5 "Fast Historical Embeddings": a worker thread + reusable staging
+//! buffers (the pinned-memory analog) overlap history I/O with executable
+//! compute; `Serial` mode reproduces the naive blocking pattern for the
+//! Fig. 4 comparison.
+
+pub mod pipeline;
+pub mod store;
+
+pub use pipeline::{HistoryPipeline, PipelineMode};
+pub use store::HistoryStore;

@@ -1,0 +1,290 @@
+//! Concurrent history access engine (paper §5 "Fast Historical Embeddings").
+//!
+//! GPU original: a worker thread gathers history rows into *pinned* CPU
+//! buffers, CUDA streams overlap H2D copies with kernel execution. CPU-PJRT
+//! adaptation (DESIGN.md §Hardware-Adaptation): a dedicated worker thread
+//! gathers rows from the [`HistoryStore`] into *reusable staging buffers*
+//! (the pinned-pool analog) while the PJRT executable runs the previous
+//! batch; write-backs are applied by the same worker in the background.
+//!
+//! `Serial` mode performs both operations inline — the baseline whose I/O
+//! overhead Fig. 4 quantifies.
+//!
+//! Ordering semantics match the paper: pulls see the most recent *applied*
+//! push. A prefetched pull for batch t+1 may race ahead of the push of
+//! batch t by design — that is exactly the one-step staleness historical
+//! embeddings already tolerate (Theorem 2). `sync()` drains everything at
+//! epoch boundaries so evaluation reads fully-applied histories.
+
+use crate::history::store::HistoryStore;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    Serial,
+    Concurrent,
+}
+
+/// A staged pull result: per requested layer, the gathered halo rows.
+pub struct PullBuffer {
+    /// flat [num_layers][ids.len() * h]
+    pub data: Vec<Vec<f32>>,
+    pub num_rows: usize,
+}
+
+enum Job {
+    Pull { ids: Vec<u32>, reply: Sender<PullBuffer> },
+    Push { layer: usize, ids: Vec<u32>, data: Vec<f32> },
+    Sync { reply: Sender<()> },
+    Stop,
+}
+
+/// Shared-store history engine with optional worker-thread concurrency.
+pub struct HistoryPipeline {
+    store: Arc<RwLock<HistoryStore>>,
+    mode: PipelineMode,
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    pending_pull: Option<Receiver<PullBuffer>>,
+    /// staging-buffer pool (pinned-memory analog): recycled Vec<f32>
+    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+}
+
+impl HistoryPipeline {
+    pub fn new(store: HistoryStore, mode: PipelineMode) -> HistoryPipeline {
+        let store = Arc::new(RwLock::new(store));
+        let pool = Arc::new(Mutex::new(Vec::new()));
+        let (tx, worker) = match mode {
+            PipelineMode::Serial => (None, None),
+            PipelineMode::Concurrent => {
+                let (tx, rx) = channel::<Job>();
+                let st = Arc::clone(&store);
+                let pl = Arc::clone(&pool);
+                let handle = std::thread::Builder::new()
+                    .name("gas-history".into())
+                    .spawn(move || worker_loop(rx, st, pl))
+                    .expect("spawn history worker");
+                (Some(tx), Some(handle))
+            }
+        };
+        HistoryPipeline { store, mode, tx, worker, pending_pull: None, pool }
+    }
+
+    pub fn mode(&self) -> PipelineMode {
+        self.mode
+    }
+
+    /// Begin gathering halo rows for all layers. In `Concurrent` mode this
+    /// returns immediately; `wait_pull` blocks until staged.
+    pub fn request_pull(&mut self, ids: &[u32]) {
+        assert!(self.pending_pull.is_none(), "overlapping pulls");
+        match self.mode {
+            PipelineMode::Serial => {
+                let buf = gather(&self.store.read().unwrap(), ids, &self.pool);
+                let (tx, rx) = channel();
+                tx.send(buf).unwrap();
+                self.pending_pull = Some(rx);
+            }
+            PipelineMode::Concurrent => {
+                let (reply, rx) = channel();
+                self.tx
+                    .as_ref()
+                    .unwrap()
+                    .send(Job::Pull { ids: ids.to_vec(), reply })
+                    .expect("history worker alive");
+                self.pending_pull = Some(rx);
+            }
+        }
+    }
+
+    /// Block until the staged pull is ready.
+    pub fn wait_pull(&mut self) -> PullBuffer {
+        let rx = self.pending_pull.take().expect("no pull in flight");
+        rx.recv().expect("history worker alive")
+    }
+
+    /// Return a staging buffer to the pool (models pinned-buffer reuse).
+    pub fn recycle(&self, buf: PullBuffer) {
+        let mut pool = self.pool.lock().unwrap();
+        for v in buf.data {
+            pool.push(v);
+        }
+    }
+
+    /// Push layer rows. Concurrent mode applies in the background.
+    pub fn push(&mut self, layer: usize, ids: &[u32], data: Vec<f32>) {
+        match self.mode {
+            PipelineMode::Serial => {
+                self.store.write().unwrap().push(layer, ids, &data);
+                self.pool.lock().unwrap().push(data);
+            }
+            PipelineMode::Concurrent => {
+                self.tx
+                    .as_ref()
+                    .unwrap()
+                    .send(Job::Push { layer, ids: ids.to_vec(), data })
+                    .expect("history worker alive");
+            }
+        }
+    }
+
+    /// Grab a buffer from the pool (or allocate) for staging a push.
+    pub fn take_buffer(&self, len: usize) -> Vec<f32> {
+        let mut pool = self.pool.lock().unwrap();
+        match pool.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Drain all queued work (epoch boundary / before evaluation).
+    pub fn sync(&mut self) {
+        if let Some(tx) = &self.tx {
+            let (reply, rx) = channel();
+            tx.send(Job::Sync { reply }).expect("history worker alive");
+            rx.recv().expect("history worker alive");
+        }
+    }
+
+    /// Advance the staleness clock.
+    pub fn tick(&mut self) {
+        self.store.write().unwrap().tick();
+    }
+
+    /// Read access to the store (synced callers only).
+    pub fn with_store<T>(&self, f: impl FnOnce(&HistoryStore) -> T) -> T {
+        f(&self.store.read().unwrap())
+    }
+
+    pub fn with_store_mut<T>(&self, f: impl FnOnce(&mut HistoryStore) -> T) -> T {
+        f(&mut self.store.write().unwrap())
+    }
+}
+
+impl Drop for HistoryPipeline {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Job::Stop);
+        }
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn gather(
+    store: &HistoryStore,
+    ids: &[u32],
+    pool: &Arc<Mutex<Vec<Vec<f32>>>>,
+) -> PullBuffer {
+    let h = store.h;
+    let mut data = Vec::with_capacity(store.num_layers);
+    for l in 0..store.num_layers {
+        let mut buf = {
+            let mut p = pool.lock().unwrap();
+            p.pop().unwrap_or_default()
+        };
+        buf.clear();
+        buf.resize(ids.len() * h, 0.0);
+        store.pull(l, ids, &mut buf);
+        data.push(buf);
+    }
+    PullBuffer { data, num_rows: ids.len() }
+}
+
+fn worker_loop(
+    rx: Receiver<Job>,
+    store: Arc<RwLock<HistoryStore>>,
+    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Pull { ids, reply } => {
+                let buf = gather(&store.read().unwrap(), &ids, &pool);
+                let _ = reply.send(buf);
+            }
+            Job::Push { layer, ids, data } => {
+                store.write().unwrap().push(layer, &ids, &data);
+                pool.lock().unwrap().push(data);
+            }
+            Job::Sync { reply } => {
+                let _ = reply.send(());
+            }
+            Job::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(mode: PipelineMode) {
+        let store = HistoryStore::new(16, 4, 2);
+        let mut p = HistoryPipeline::new(store, mode);
+        let ids = [2u32, 5, 9];
+        let data: Vec<f32> = (0..12).map(|x| x as f32 + 1.0).collect();
+        p.push(0, &ids, data.clone());
+        p.push(1, &ids, data.iter().map(|v| v * 10.0).collect());
+        p.sync();
+        p.request_pull(&ids);
+        let buf = p.wait_pull();
+        assert_eq!(buf.num_rows, 3);
+        assert_eq!(buf.data[0], data);
+        assert_eq!(buf.data[1], data.iter().map(|v| v * 10.0).collect::<Vec<_>>());
+        p.recycle(buf);
+    }
+
+    #[test]
+    fn serial_roundtrip() {
+        roundtrip(PipelineMode::Serial);
+    }
+
+    #[test]
+    fn concurrent_roundtrip() {
+        roundtrip(PipelineMode::Concurrent);
+    }
+
+    #[test]
+    fn concurrent_overlap_does_not_lose_pushes() {
+        let store = HistoryStore::new(1000, 8, 1);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
+        for step in 0..50u32 {
+            let ids: Vec<u32> = (0..100).map(|i| (step * 7 + i) % 1000).collect();
+            let data: Vec<f32> = vec![step as f32; 100 * 8];
+            p.push(0, &ids, data);
+        }
+        p.sync();
+        p.with_store(|s| {
+            // last write to row (49*7 + 0) % 1000 was value 49
+            let row = s.row(0, ((49 * 7) % 1000) as usize);
+            assert!(row.iter().all(|&v| v == 49.0));
+        });
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let store = HistoryStore::new(8, 2, 1);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
+        p.request_pull(&[0, 1]);
+        let buf = p.wait_pull();
+        p.recycle(buf);
+        let b = p.take_buffer(4);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping pulls")]
+    fn overlapping_pulls_rejected() {
+        let store = HistoryStore::new(8, 2, 1);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
+        p.request_pull(&[0]);
+        p.request_pull(&[1]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Host-memory history store: per-layer `[N, H]` matrices + staleness.
+
+/// Per-layer historical embeddings for every node in the graph.
+///
+/// Layout: `layers[l]` is row-major `[n, h]`, holding h̄^(l+1) (layer
+/// outputs 1..=L-1; layer 0 is the exact input features and is never
+/// stored — see python/compile/models.py).
+pub struct HistoryStore {
+    pub n: usize,
+    pub h: usize,
+    pub num_layers: usize,
+    layers: Vec<Vec<f32>>,
+    /// optimizer step at which each (layer, node) row was last pushed
+    last_push: Vec<Vec<u64>>,
+    step: u64,
+    /// running sum/count of ||h̄_new - h̄_old||_2 per layer (staleness probe)
+    delta_sum: Vec<f64>,
+    delta_cnt: Vec<u64>,
+}
+
+impl HistoryStore {
+    pub fn new(n: usize, h: usize, num_layers: usize) -> HistoryStore {
+        HistoryStore {
+            n,
+            h,
+            num_layers,
+            layers: (0..num_layers).map(|_| vec![0f32; n * h]).collect(),
+            last_push: (0..num_layers).map(|_| vec![0u64; n]).collect(),
+            step: 0,
+            delta_sum: vec![0.0; num_layers],
+            delta_cnt: vec![0; num_layers],
+        }
+    }
+
+    /// Bytes of host memory held by the embedding matrices.
+    pub fn bytes(&self) -> usize {
+        self.num_layers * self.n * self.h * 4
+    }
+
+    pub fn tick(&mut self) {
+        self.step += 1;
+    }
+
+    /// Gather rows `ids` of layer `l` into `out` (len == ids.len() * h).
+    pub fn pull(&self, l: usize, ids: &[u32], out: &mut [f32]) {
+        let h = self.h;
+        debug_assert!(out.len() >= ids.len() * h);
+        let src = &self.layers[l];
+        for (i, &id) in ids.iter().enumerate() {
+            let s = id as usize * h;
+            out[i * h..(i + 1) * h].copy_from_slice(&src[s..s + h]);
+        }
+    }
+
+    /// Scatter rows: `data` is `[ids.len(), h]`, written into layer `l`.
+    /// Also updates the staleness probe (mean L2 delta vs previous value).
+    pub fn push(&mut self, l: usize, ids: &[u32], data: &[f32]) {
+        let h = self.h;
+        debug_assert!(data.len() >= ids.len() * h);
+        let dst = &mut self.layers[l];
+        let mut dsum = 0f64;
+        for (i, &id) in ids.iter().enumerate() {
+            let d = id as usize * h;
+            let row = &data[i * h..(i + 1) * h];
+            let old = &dst[d..d + h];
+            let mut diff = 0f64;
+            for j in 0..h {
+                let e = (row[j] - old[j]) as f64;
+                diff += e * e;
+            }
+            dsum += diff.sqrt();
+            dst[d..d + h].copy_from_slice(row);
+            self.last_push[l][id as usize] = self.step;
+        }
+        self.delta_sum[l] += dsum;
+        self.delta_cnt[l] += ids.len() as u64;
+    }
+
+    /// Direct read of one row (evaluation from last-layer histories).
+    pub fn row(&self, l: usize, id: usize) -> &[f32] {
+        &self.layers[l][id * self.h..(id + 1) * self.h]
+    }
+
+    /// Mean staleness (steps since last push) of given rows at layer `l`.
+    pub fn staleness(&self, l: usize, ids: &[u32]) -> f64 {
+        if ids.is_empty() {
+            return 0.0;
+        }
+        let s: u64 = ids
+            .iter()
+            .map(|&id| self.step - self.last_push[l][id as usize])
+            .sum();
+        s as f64 / ids.len() as f64
+    }
+
+    /// Mean ||h̄_new - h̄_old|| per push since start, per layer — the
+    /// empirical epsilon of Theorem 2.
+    pub fn mean_push_delta(&self, l: usize) -> f64 {
+        if self.delta_cnt[l] == 0 {
+            0.0
+        } else {
+            self.delta_sum[l] / self.delta_cnt[l] as f64
+        }
+    }
+
+    pub fn reset_probes(&mut self) {
+        self.delta_sum.iter_mut().for_each(|x| *x = 0.0);
+        self.delta_cnt.iter_mut().for_each(|x| *x = 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_then_pull_roundtrips() {
+        let mut s = HistoryStore::new(10, 4, 2);
+        let ids = [3u32, 7, 1];
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        s.push(1, &ids, &data);
+        let mut out = vec![0f32; 12];
+        s.pull(1, &ids, &mut out);
+        assert_eq!(out, data);
+        // other layer untouched
+        s.pull(0, &ids, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn staleness_counts_steps() {
+        let mut s = HistoryStore::new(5, 2, 1);
+        s.push(0, &[0, 1], &[1.0; 4]);
+        s.tick();
+        s.tick();
+        s.push(0, &[1], &[2.0; 2]);
+        assert_eq!(s.staleness(0, &[0]), 2.0);
+        assert_eq!(s.staleness(0, &[1]), 0.0);
+        assert_eq!(s.staleness(0, &[0, 1]), 1.0);
+    }
+
+    #[test]
+    fn push_delta_probe_measures_change() {
+        let mut s = HistoryStore::new(4, 2, 1);
+        s.push(0, &[0], &[3.0, 4.0]); // delta from zeros = 5
+        assert!((s.mean_push_delta(0) - 5.0).abs() < 1e-9);
+        s.push(0, &[0], &[3.0, 4.0]); // unchanged => delta 0, mean 2.5
+        assert!((s.mean_push_delta(0) - 2.5).abs() < 1e-9);
+        s.reset_probes();
+        assert_eq!(s.mean_push_delta(0), 0.0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let s = HistoryStore::new(100, 8, 3);
+        assert_eq!(s.bytes(), 100 * 8 * 3 * 4);
+    }
+}

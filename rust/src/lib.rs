@@ -1,0 +1,30 @@
+//! # gas — GNNAutoScale in Rust + JAX + Pallas
+//!
+//! A three-layer reproduction of *GNNAutoScale: Scalable and Expressive
+//! Graph Neural Networks via Historical Embeddings* (Fey et al., ICML 2021).
+//!
+//! * **L3 (this crate)** — the GAS coordinator: graph store, METIS-like
+//!   multilevel partitioner, mini-batch scheduler with 1-hop halo assembly,
+//!   the **history store** with a concurrent push/pull pipeline, optimizer,
+//!   training loop, evaluation, baselines, and every experiment harness.
+//! * **L2** — JAX models (GCN/GAT/APPNP/GCNII/GIN/PNA) with per-layer
+//!   history injection, AOT-lowered to HLO text (`python/compile/`).
+//! * **L1** — Pallas edge-blocked scatter kernels inside those models.
+//!
+//! The request path is pure Rust: artifacts are loaded via PJRT
+//! ([`runtime`]), histories live in host memory ([`history`]), batches are
+//! assembled by [`sched`], and [`train::Trainer`] runs the GAS loop.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod expressive;
+pub mod graph;
+pub mod history;
+pub mod memaccount;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod sched;
+pub mod train;
+pub mod util;

@@ -1,0 +1,176 @@
+//! `gas` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   train      --dataset cora --model gcn2 [--mode gas|full|naive|cluster]
+//!   gen        --dataset cora            (generate + print dataset stats)
+//!   partition  --dataset cora --parts 4  (METIS vs random quality)
+//!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
+//!   prop3                                 (expressiveness counterexample)
+//!   list                                  (artifacts in the manifest)
+
+use anyhow::{bail, Result};
+use gas::baselines::naive_history::{gas_config, naive_config};
+use gas::baselines::ClusterGcnTrainer;
+use gas::config::Ctx;
+use gas::expressive::prop3;
+use gas::memaccount::MemoryModel;
+use gas::partition::{inter_intra_ratio, metis_partition, random_partition};
+use gas::train::{FullBatchTrainer, Trainer};
+use gas::util::argparse::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "gen" => cmd_gen(&args),
+        "partition" => cmd_partition(&args),
+        "memory" => cmd_memory(&args),
+        "prop3" => cmd_prop3(),
+        "list" => cmd_list(),
+        "" => {
+            eprintln!("usage: gas <train|gen|partition|memory|prop3|list> [--options]");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "cora");
+    let model = args.str_or("model", "gcn2");
+    let mode = args.str_or("mode", "gas");
+    let epochs = args.usize_or("epochs", 30)?;
+    let lr = args.f64_or("lr", 0.01)? as f32;
+    let reg = args.f64_or("reg", 0.0)? as f32;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let mut ctx = Ctx::new()?;
+    match mode.as_str() {
+        "gas" | "naive" => {
+            let name = format!("{dataset}_{model}_gas");
+            let (ds, art) = ctx.pair(&dataset, &name)?;
+            let cfg = if mode == "gas" {
+                gas_config(epochs, lr, reg, seed)
+            } else {
+                naive_config(epochs, lr, seed)
+            };
+            let mut tr = Trainer::new(ds, art, cfg)?;
+            let r = tr.train()?;
+            println!(
+                "{name} [{mode}] loss={:.4} val={:.4} test@best={:.4} steps={} staleness={:?}",
+                r.loss.last().unwrap_or(0.0),
+                r.val_acc.last().unwrap_or(0.0),
+                r.test_at_best_val,
+                r.steps,
+                r.staleness
+            );
+            for (k, v) in r.buckets.entries() {
+                println!("  {k:<12} {:.3}s", v);
+            }
+        }
+        "full" => {
+            let name = format!("{dataset}_{model}_full");
+            let (ds, art) = ctx.pair(&dataset, &name)?;
+            let mut tr = FullBatchTrainer::new(ds, art, lr, Some(1.0), 0.0, seed)?;
+            let r = tr.train(epochs, 1)?;
+            println!(
+                "{name} [full] loss={:.4} val={:.4} test@best={:.4}",
+                r.loss.last().unwrap_or(0.0),
+                r.val_acc.last().unwrap_or(0.0),
+                r.test_at_best_val
+            );
+        }
+        "cluster" => {
+            let name = format!("{dataset}_gcn2_subg");
+            let (ds, art) = ctx.pair(&dataset, &name)?;
+            let parts = ds.profile.parts;
+            let mut tr = ClusterGcnTrainer::new(ds, art, parts, lr, seed)?;
+            let r = tr.train(epochs, 1)?;
+            println!(
+                "{name} [cluster-gcn] loss={:.4} val={:.4} test@best={:.4} edges_used={:.1}%",
+                r.loss.last().unwrap_or(0.0),
+                r.val_acc.last().unwrap_or(0.0),
+                r.test_at_best_val,
+                100.0 * r.edges_used_frac
+            );
+        }
+        other => bail!("unknown mode {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "cora");
+    let mut ctx = Ctx::new()?;
+    let ds = ctx.dataset(&dataset)?;
+    let g = &ds.graph;
+    println!(
+        "{dataset}: n={} e_dir={} avg_deg={:.2} f={} c={} train={} val={} test={}",
+        g.num_nodes(),
+        g.num_directed_edges(),
+        g.avg_degree(),
+        ds.profile.f,
+        ds.profile.c,
+        ds.train_mask.iter().filter(|&&b| b).count(),
+        ds.val_mask.iter().filter(|&&b| b).count(),
+        ds.test_mask.iter().filter(|&&b| b).count(),
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "cora");
+    let mut ctx = Ctx::new()?;
+    let ds = ctx.dataset(&dataset)?;
+    let k = args.usize_or("parts", ds.profile.parts)?;
+    let qm = inter_intra_ratio(&ds.graph, &metis_partition(&ds.graph, k, 1), k);
+    let qr = inter_intra_ratio(&ds.graph, &random_partition(ds.n(), k, 1), k);
+    println!(
+        "{dataset} k={k}: metis ratio={:.3} cut={} | random ratio={:.3} cut={}",
+        qm.inter_intra_ratio, qm.edge_cut, qr.inter_intra_ratio, qr.edge_cut
+    );
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "yelp");
+    let layers = args.usize_or("layers", 2)?;
+    let mut ctx = Ctx::new()?;
+    let ds = ctx.dataset(&dataset)?;
+    let m = MemoryModel::new(ds, layers, 64);
+    for mm in [
+        m.full_batch(),
+        m.graphsage(1024, 10),
+        m.cluster_gcn(ds.profile.parts, 1),
+        m.gas(ds.profile.parts, 1),
+    ] {
+        println!(
+            "{dataset} L={layers} {:<12} {:.3} GiB  data={:.0}%",
+            mm.method,
+            mm.gib(),
+            100.0 * mm.data_frac
+        );
+    }
+    Ok(())
+}
+
+fn cmd_prop3() -> Result<()> {
+    let (g, init, v, w) = prop3::counterexample();
+    let out = prop3::prop3_experiment(&g, &init, 1, 3, 1);
+    println!(
+        "counterexample hubs {v},{w}: {} equivalent pairs on true graph, {} broken by sampling",
+        out.equivalent_pairs, out.broken_by_sampling
+    );
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let manifest = gas::runtime::Manifest::load(&gas::runtime::Manifest::default_dir())?;
+    for (name, spec) in &manifest.artifacts {
+        println!(
+            "{name:<36} {:>5} model={:<6} L={} nb={} nh={} e={}",
+            spec.program, spec.model, spec.layers, spec.nb, spec.nh, spec.e
+        );
+    }
+    println!("{} artifacts, {} profiles", manifest.artifacts.len(), manifest.profiles.len());
+    Ok(())
+}

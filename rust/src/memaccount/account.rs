@@ -1,0 +1,214 @@
+//! Analytic per-step device-memory model for each execution strategy.
+
+use crate::graph::datasets::Dataset;
+use crate::partition::metis_partition;
+
+const F32: usize = 4;
+
+/// Per-method device-memory estimate (bytes) + data utilization.
+#[derive(Debug, Clone)]
+pub struct MethodMemory {
+    pub method: String,
+    pub bytes: usize,
+    /// fraction of the GNN receptive field's edges actually aggregated in
+    /// one optimizer step (the paper's "% data used")
+    pub data_frac: f64,
+}
+
+impl MethodMemory {
+    pub fn gib(&self) -> f64 {
+        self.bytes as f64 / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+/// Memory model for one dataset + depth + hidden size.
+pub struct MemoryModel<'a> {
+    pub ds: &'a Dataset,
+    pub layers: usize,
+    pub hidden: usize,
+}
+
+impl<'a> MemoryModel<'a> {
+    pub fn new(ds: &'a Dataset, layers: usize, hidden: usize) -> Self {
+        MemoryModel { ds, layers, hidden }
+    }
+
+    /// activations (+ grads, x2) for `rows` rows across `layers` layers,
+    /// plus input features for `in_rows` rows.
+    fn act_bytes(&self, in_rows: usize, rows: usize) -> usize {
+        let f = self.ds.profile.f;
+        in_rows * f * F32 + 2 * self.layers * rows * self.hidden * F32
+    }
+
+    /// Full-batch: everything resident.
+    pub fn full_batch(&self) -> MethodMemory {
+        let n = self.ds.n();
+        MethodMemory {
+            method: "full-batch".into(),
+            bytes: self.act_bytes(n, n) + self.ds.graph.num_directed_edges() * 2 * F32,
+            data_frac: 1.0,
+        }
+    }
+
+    /// GAS on METIS parts: per batch, B + halo rows at layer granularity;
+    /// histories live off-device. Uses the *largest* batch (peak memory).
+    pub fn gas(&self, parts: usize, seed: u64) -> MethodMemory {
+        let (max_rows, max_in, max_edges) = self.max_batch_extent(parts, seed);
+        MethodMemory {
+            method: "gas".into(),
+            // activations only for in-batch rows; halo rows appear once as
+            // pulled histories per layer (transfer buffer, not per-layer)
+            bytes: self.act_bytes(max_in, max_rows)
+                + (self.layers - 1) * (max_in - max_rows) * self.hidden * F32
+                + max_edges * 2 * F32,
+            data_frac: 1.0, // all edges into the batch are aggregated
+        }
+    }
+
+    /// Cluster-GCN: intra-cluster subgraph only.
+    pub fn cluster_gcn(&self, parts: usize, seed: u64) -> MethodMemory {
+        let part = metis_partition(&self.ds.graph, parts, seed);
+        let g = &self.ds.graph;
+        let mut best = MethodMemory {
+            method: "cluster-gcn".into(),
+            bytes: 0,
+            data_frac: 0.0,
+        };
+        let mut intra_total = 0usize;
+        let mut sizes = vec![0usize; parts];
+        let mut intra = vec![0usize; parts];
+        for v in 0..g.num_nodes() {
+            sizes[part[v] as usize] += 1;
+            for &u in g.neighbors(v) {
+                if part[u as usize] == part[v] {
+                    intra[part[v] as usize] += 1;
+                    intra_total += 1;
+                }
+            }
+        }
+        let peak = (0..parts)
+            .map(|p| self.act_bytes(sizes[p], sizes[p]) + intra[p] * 2 * F32)
+            .max()
+            .unwrap_or(0);
+        best.bytes = peak;
+        best.data_frac = intra_total as f64 / g.num_directed_edges() as f64;
+        best
+    }
+
+    /// GraphSAGE: batch * fanout^l rows per layer (capped at N per layer).
+    pub fn graphsage(&self, batch: usize, fanout: usize) -> MethodMemory {
+        let n = self.ds.n();
+        let mut rows_total = 0usize;
+        let mut rows = batch;
+        let mut edges = 0usize;
+        let mut in_rows = batch;
+        for _ in 0..self.layers {
+            edges += rows * fanout;
+            rows = (rows * fanout).min(n);
+            rows_total += rows;
+            in_rows = rows;
+        }
+        let f = self.ds.profile.f;
+        // fraction of each node's edges seen: fanout / avg_deg, capped 1
+        let frac = (fanout as f64 / self.ds.profile.avg_deg).min(1.0);
+        MethodMemory {
+            method: "graphsage".into(),
+            bytes: in_rows * f * F32 + 2 * rows_total * self.hidden * F32 + edges * 2 * F32,
+            data_frac: frac.powi(self.layers as i32).max(frac / self.layers as f64),
+        }
+    }
+
+    fn max_batch_extent(&self, parts: usize, seed: u64) -> (usize, usize, usize) {
+        let part = metis_partition(&self.ds.graph, parts, seed);
+        let g = &self.ds.graph;
+        let n = g.num_nodes();
+        let mut max = (0usize, 0usize, 0usize);
+        let mut stamp = vec![u32::MAX; n];
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); parts];
+        for (v, &p) in part.iter().enumerate() {
+            groups[p as usize].push(v as u32);
+        }
+        for (pi, grp) in groups.iter().enumerate() {
+            let mut halo = 0usize;
+            let mut edges = 0usize;
+            for &v in grp {
+                for &u in g.neighbors(v as usize) {
+                    edges += 1;
+                    if part[u as usize] as usize != pi && stamp[u as usize] != pi as u32 {
+                        stamp[u as usize] = pi as u32;
+                        halo += 1;
+                    }
+                }
+            }
+            let rows = grp.len();
+            let in_rows = rows + halo;
+            if self.act_bytes(in_rows, rows) > self.act_bytes(max.1, max.0) {
+                max = (rows, in_rows, edges);
+            }
+        }
+        max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::{Dataset, Profile};
+
+    fn ds() -> Dataset {
+        Dataset::generate(&Profile {
+            name: "m".into(),
+            kind: "planted".into(),
+            n: 2000,
+            f: 64,
+            c: 5,
+            avg_deg: 8.0,
+            multilabel: false,
+            train_frac: 0.3,
+            val_frac: 0.2,
+            homophily: 0.8,
+            feat_noise: 0.5,
+            parts: 8,
+            paper_n: 2000,
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn gas_is_much_smaller_than_full_batch() {
+        let d = ds();
+        let m = MemoryModel::new(&d, 3, 64);
+        let full = m.full_batch();
+        let gas = m.gas(8, 1);
+        assert!(gas.bytes * 3 < full.bytes, "gas {} full {}", gas.bytes, full.bytes);
+        assert_eq!(gas.data_frac, 1.0);
+    }
+
+    #[test]
+    fn cluster_gcn_smaller_but_lossy() {
+        let d = ds();
+        let m = MemoryModel::new(&d, 3, 64);
+        let cg = m.cluster_gcn(8, 1);
+        let gas = m.gas(8, 1);
+        assert!(cg.bytes <= gas.bytes);
+        assert!(cg.data_frac < 1.0 && cg.data_frac > 0.1);
+    }
+
+    #[test]
+    fn sage_grows_with_depth() {
+        let d = ds();
+        let m2 = MemoryModel::new(&d, 2, 64).graphsage(64, 10);
+        let m4 = MemoryModel::new(&d, 4, 64).graphsage(64, 10);
+        assert!(m4.bytes > m2.bytes);
+        assert!(m4.data_frac <= m2.data_frac);
+    }
+
+    #[test]
+    fn memory_scales_linearly_with_layers_for_gas() {
+        let d = ds();
+        let g2 = MemoryModel::new(&d, 2, 64).gas(8, 1);
+        let g4 = MemoryModel::new(&d, 4, 64).gas(8, 1);
+        let ratio = g4.bytes as f64 / g2.bytes as f64;
+        assert!(ratio < 2.6, "superlinear growth: {ratio}");
+    }
+}

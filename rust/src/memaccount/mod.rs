@@ -1,0 +1,12 @@
+//! Device-memory accounting model (paper Table 3).
+//!
+//! The testbed is CPU-PJRT, so "GPU memory" is modeled analytically: the
+//! bytes of tensors that must be device-resident during one optimizer step
+//! (inputs + per-layer activations + their gradients), per execution
+//! strategy. The model is calibrated to the paper's formula
+//! O(|∪_{v∈B} N(v) ∪ {v}| · L) for GAS vs O(N · L) full-batch vs
+//! O(B · fanout^L) for node-wise sampling.
+
+pub mod account;
+
+pub use account::{MemoryModel, MethodMemory};

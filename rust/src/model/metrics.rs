@@ -1,0 +1,97 @@
+//! Evaluation metrics: masked accuracy (multi-class) and micro-F1
+//! (multi-label, as used by PPI/Yelp in the paper).
+
+/// Masked multi-class accuracy from flat logits [n, c].
+pub fn accuracy(logits: &[f32], c: usize, labels: &[u16], mask: &[bool]) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (i, &m) in mask.iter().enumerate() {
+        if !m {
+            continue;
+        }
+        let row = &logits[i * c..(i + 1) * c];
+        let pred = argmax(row);
+        if pred == labels[i] as usize {
+            correct += 1;
+        }
+        total += 1;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// Masked micro-F1 for multi-label targets [n, c] (threshold 0 on logits).
+pub fn micro_f1(logits: &[f32], c: usize, targets: &[f32], mask: &[bool]) -> f64 {
+    let mut tp = 0u64;
+    let mut fp = 0u64;
+    let mut fnn = 0u64;
+    for (i, &m) in mask.iter().enumerate() {
+        if !m {
+            continue;
+        }
+        for j in 0..c {
+            let pred = logits[i * c + j] > 0.0;
+            let truth = targets[i * c + j] > 0.5;
+            match (pred, truth) {
+                (true, true) => tp += 1,
+                (true, false) => fp += 1,
+                (false, true) => fnn += 1,
+                _ => {}
+            }
+        }
+    }
+    let denom = 2 * tp + fp + fnn;
+    if denom == 0 {
+        1.0
+    } else {
+        2.0 * tp as f64 / denom as f64
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_masked() {
+        let logits = vec![1.0, 0.0, /*pred 0*/ 0.0, 1.0, /*pred 1*/ 1.0, 0.0];
+        let labels = vec![0u16, 0, 0];
+        let mask = vec![true, true, false];
+        assert_eq!(accuracy(&logits, 2, &labels, &mask), 0.5);
+        assert_eq!(accuracy(&logits, 2, &labels, &[false; 3]), 0.0);
+    }
+
+    #[test]
+    fn micro_f1_known_counts() {
+        // node0: pred {1}, true {1} => tp=1 ; node1: pred {0,1}, true {1}
+        let logits = vec![-1.0, 1.0, 1.0, 1.0];
+        let targets = vec![0.0, 1.0, 0.0, 1.0];
+        let mask = vec![true, true];
+        // tp=2, fp=1, fn=0 => f1 = 4/5
+        assert!((micro_f1(&logits, 2, &targets, &mask) - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_f1_when_empty() {
+        assert_eq!(micro_f1(&[], 3, &[], &[]), 1.0);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+        assert_eq!(argmax(&[0.1, 0.9, 0.9]), 1);
+    }
+}

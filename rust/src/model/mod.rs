@@ -1,0 +1,10 @@
+//! Model-side host state: parameter store + initialization, optimizers
+//! (Adam / SGD with global-norm gradient clipping — one of the paper's
+//! staleness-control techniques), and evaluation metrics.
+
+pub mod metrics;
+pub mod optim;
+pub mod params;
+
+pub use optim::{Adam, Optimizer, Sgd};
+pub use params::ParamStore;

@@ -1,0 +1,185 @@
+//! Optimizers over the host-side parameter store. Gradient clipping by
+//! global norm is one of the paper's techniques for keeping histories
+//! fresh ("restrict the parameters from changing too fast", §3).
+
+use crate::model::params::ParamStore;
+
+pub trait Optimizer {
+    /// Apply one update; `grads` aligned with `params.tensors`.
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<f32>]);
+}
+
+/// Global-norm gradient clipping. Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f32) -> f32 {
+    let mut sq = 0f64;
+    for g in grads.iter() {
+        for &v in g {
+            sq += (v as f64) * (v as f64);
+        }
+    }
+    let norm = sq.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+    norm
+}
+
+/// Adam (Kingma & Ba) with optional decoupled weight decay and clipping.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub clip: Option<f32>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            clip: None,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn with_clip(mut self, clip: f32) -> Adam {
+        self.clip = Some(clip);
+        self
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Adam {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<f32>]) {
+        if self.m.is_empty() {
+            self.m = params.tensors.iter().map(|t| vec![0f32; t.len()]).collect();
+            self.v = params.tensors.iter().map(|t| vec![0f32; t.len()]).collect();
+        }
+        let mut grads_owned;
+        let grads: &[Vec<f32>] = if let Some(c) = self.clip {
+            grads_owned = grads.to_vec();
+            clip_global_norm(&mut grads_owned, c);
+            &grads_owned
+        } else {
+            grads
+        };
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for (i, t) in params.tensors.iter_mut().enumerate() {
+            let g = &grads[i];
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            for j in 0..t.len() {
+                let gj = g[j] + self.weight_decay * t[j];
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * gj;
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * gj * gj;
+                let mh = m[j] / bc1;
+                let vh = v[j] / bc2;
+                t[j] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+/// Plain SGD (used by ablation benches).
+pub struct Sgd {
+    pub lr: f32,
+    pub clip: Option<f32>,
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut ParamStore, grads: &[Vec<f32>]) {
+        let mut grads_owned;
+        let grads: &[Vec<f32>] = if let Some(c) = self.clip {
+            grads_owned = grads.to_vec();
+            clip_global_norm(&mut grads_owned, c);
+            &grads_owned
+        } else {
+            grads
+        };
+        for (i, t) in params.tensors.iter_mut().enumerate() {
+            for j in 0..t.len() {
+                t[j] -= self.lr * grads[i][j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    fn store(vals: Vec<f32>) -> ParamStore {
+        ParamStore {
+            specs: vec![ParamSpec {
+                name: "w".into(),
+                shape: vec![vals.len()],
+                init: "zeros".into(),
+            }],
+            tensors: vec![vals],
+        }
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut p = store(vec![1.0, 1.0]);
+        let mut opt = Sgd { lr: 0.1, clip: None };
+        opt.step(&mut p, &[vec![1.0, -1.0]]);
+        assert_eq!(p.tensors[0], vec![0.9, 1.1]);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize (x-3)^2: grad = 2(x-3)
+        let mut p = store(vec![0.0]);
+        let mut opt = Adam::new(0.1);
+        for _ in 0..500 {
+            let g = 2.0 * (p.tensors[0][0] - 3.0);
+            opt.step(&mut p, &[vec![g]]);
+        }
+        assert!((p.tensors[0][0] - 3.0).abs() < 1e-2, "x={}", p.tensors[0][0]);
+    }
+
+    #[test]
+    fn clip_scales_to_max_norm() {
+        let mut g = vec![vec![3.0, 4.0]]; // norm 5
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert_eq!(pre, 5.0);
+        let norm: f32 = g[0].iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+        // below threshold: untouched
+        let mut g2 = vec![vec![0.3, 0.4]];
+        clip_global_norm(&mut g2, 1.0);
+        assert_eq!(g2[0], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn adam_first_step_size_is_lr() {
+        let mut p = store(vec![0.0]);
+        let mut opt = Adam::new(0.01);
+        opt.step(&mut p, &[vec![123.0]]);
+        // bias-corrected first step = lr regardless of grad scale
+        assert!((p.tensors[0][0] + 0.01).abs() < 1e-4);
+    }
+}

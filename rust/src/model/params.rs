@@ -1,0 +1,118 @@
+//! Parameter store: flat host-side tensors initialized from the manifest's
+//! init specs (Glorot / zeros / const). Python never initializes anything —
+//! the Rust coordinator owns model state end to end.
+
+use crate::runtime::manifest::ParamSpec;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// All parameters of one model, aligned with `ArtifactSpec::params` order.
+pub struct ParamStore {
+    pub tensors: Vec<Vec<f32>>,
+    pub specs: Vec<ParamSpec>,
+}
+
+impl ParamStore {
+    /// Initialize from manifest specs.
+    pub fn init(specs: &[ParamSpec], seed: u64) -> Result<ParamStore> {
+        let mut rng = Rng::new(seed);
+        let mut tensors = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let n: usize = spec.shape.iter().product();
+            let t = match spec.init.as_str() {
+                "zeros" => vec![0f32; n],
+                "glorot" => glorot(&spec.shape, &mut rng),
+                s if s.starts_with("const:") => {
+                    let v: f32 = s[6..].parse()?;
+                    vec![v; n]
+                }
+                other => bail!("unknown init {other:?} for {}", spec.name),
+            };
+            tensors.push(t);
+        }
+        Ok(ParamStore { tensors, specs: specs.to_vec() })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.specs
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| self.tensors[i].as_slice())
+    }
+}
+
+/// Glorot/Xavier uniform: U(-a, a), a = sqrt(6 / (fan_in + fan_out)).
+/// For stacked GCNII weights [L, H, H], fans are the trailing two dims.
+fn glorot(shape: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    let (fan_in, fan_out) = match shape.len() {
+        0 | 1 => (1, shape.first().copied().unwrap_or(1)),
+        2 => (shape[0], shape[1]),
+        _ => (shape[shape.len() - 2], shape[shape.len() - 1]),
+    };
+    let a = (6.0 / (fan_in + fan_out) as f64).sqrt();
+    (0..n).map(|_| ((rng.f64() * 2.0 - 1.0) * a) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: Vec<usize>, init: &str) -> ParamSpec {
+        ParamSpec { name: name.into(), shape, init: init.into() }
+    }
+
+    #[test]
+    fn initializes_all_kinds() {
+        let specs = vec![
+            spec("w", vec![8, 16], "glorot"),
+            spec("b", vec![16], "zeros"),
+            spec("eps", vec![1], "const:0.5"),
+        ];
+        let p = ParamStore::init(&specs, 1).unwrap();
+        assert_eq!(p.tensors[0].len(), 128);
+        assert!(p.tensors[1].iter().all(|&v| v == 0.0));
+        assert_eq!(p.tensors[2], vec![0.5]);
+        assert_eq!(p.num_params(), 128 + 16 + 1);
+        assert!(p.get("w").is_some());
+        assert!(p.get("nope").is_none());
+    }
+
+    #[test]
+    fn glorot_bounds_and_spread() {
+        let specs = vec![spec("w", vec![100, 100], "glorot")];
+        let p = ParamStore::init(&specs, 2).unwrap();
+        let a = (6.0f64 / 200.0).sqrt() as f32;
+        assert!(p.tensors[0].iter().all(|&v| v.abs() <= a));
+        let nonzero = p.tensors[0].iter().filter(|&&v| v.abs() > a / 2.0).count();
+        assert!(nonzero > 1000, "degenerate init");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let specs = vec![spec("w", vec![4, 4], "glorot")];
+        let a = ParamStore::init(&specs, 7).unwrap();
+        let b = ParamStore::init(&specs, 7).unwrap();
+        let c = ParamStore::init(&specs, 8).unwrap();
+        assert_eq!(a.tensors, b.tensors);
+        assert_ne!(a.tensors, c.tensors);
+    }
+
+    #[test]
+    fn stacked_weights_use_trailing_fans() {
+        let specs = vec![spec("ws", vec![64, 8, 8], "glorot")];
+        let p = ParamStore::init(&specs, 3).unwrap();
+        let a = (6.0f64 / 16.0).sqrt() as f32;
+        assert!(p.tensors[0].iter().all(|&v| v.abs() <= a));
+    }
+
+    #[test]
+    fn bad_init_rejected() {
+        let specs = vec![spec("w", vec![2], "fancy")];
+        assert!(ParamStore::init(&specs, 0).is_err());
+    }
+}

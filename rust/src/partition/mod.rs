@@ -1,0 +1,11 @@
+//! Graph partitioning: the METIS stand-in (multilevel heavy-edge matching +
+//! FM refinement) and the random baseline, plus the inter/intra-connectivity
+//! quality metric (paper Table 6).
+
+pub mod metis;
+pub mod quality;
+pub mod random_part;
+
+pub use metis::metis_partition;
+pub use quality::{inter_intra_ratio, PartitionQuality};
+pub use random_part::random_partition;

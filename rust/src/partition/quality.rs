@@ -1,0 +1,80 @@
+//! Partition quality metrics — the paper's inter/intra-connectivity ratio
+//! (Table 6) and balance statistics.
+
+use crate::graph::csr::Csr;
+
+#[derive(Debug, Clone)]
+pub struct PartitionQuality {
+    /// mean over parts of (edges leaving the part / edges inside the part)
+    pub inter_intra_ratio: f64,
+    /// directed edge cut
+    pub edge_cut: usize,
+    /// largest part size / ideal part size
+    pub imbalance: f64,
+    pub num_parts: usize,
+}
+
+/// Per-batch inter/intra edge counts, averaged as in the paper's Table 6:
+/// for each part, inter = edges from part nodes to outside, intra = edges
+/// staying inside; ratio = total_inter / total_intra.
+pub fn inter_intra_ratio(g: &Csr, part: &[u32], k: usize) -> PartitionQuality {
+    let n = g.num_nodes();
+    let mut intra = vec![0u64; k];
+    let mut inter = vec![0u64; k];
+    let mut sizes = vec![0u64; k];
+    for v in 0..n {
+        let pv = part[v] as usize;
+        sizes[pv] += 1;
+        for &u in g.neighbors(v) {
+            if part[u as usize] == part[v] {
+                intra[pv] += 1;
+            } else {
+                inter[pv] += 1;
+            }
+        }
+    }
+    let ti: u64 = intra.iter().sum();
+    let te: u64 = inter.iter().sum();
+    let ideal = n as f64 / k as f64;
+    PartitionQuality {
+        inter_intra_ratio: te as f64 / (ti as f64).max(1.0),
+        edge_cut: te as usize,
+        imbalance: *sizes.iter().max().unwrap() as f64 / ideal,
+        num_parts: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::{metis_partition, random_partition};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ratio_zero_for_disconnected_parts() {
+        // two disjoint triangles split perfectly
+        let g = Csr::from_undirected(6, &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)]);
+        let part = vec![0, 0, 0, 1, 1, 1];
+        let q = inter_intra_ratio(&g, &part, 2);
+        assert_eq!(q.inter_intra_ratio, 0.0);
+        assert_eq!(q.edge_cut, 0);
+        assert!((q.imbalance - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metis_ratio_beats_random_by_wide_margin() {
+        // the paper's Table 6 headline: METIS reduces the ratio ~4x on avg
+        let mut rng = Rng::new(5);
+        let (g, _) = generators::planted_partition(3000, 8, 8.0, 0.85, &mut rng);
+        let k = 8;
+        let qm = inter_intra_ratio(&g, &metis_partition(&g, k, 2), k);
+        let qr = inter_intra_ratio(&g, &random_partition(g.num_nodes(), k, 2), k);
+        assert!(
+            qm.inter_intra_ratio < 0.55 * qr.inter_intra_ratio,
+            "metis {} vs random {}",
+            qm.inter_intra_ratio,
+            qr.inter_intra_ratio
+        );
+    }
+}

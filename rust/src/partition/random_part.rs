@@ -1,0 +1,38 @@
+//! Random balanced partitioning — the "naive history" baseline batch
+//! selection (paper Fig. 3 / Table 2 ablation).
+
+use crate::util::rng::Rng;
+
+/// Assign each node to one of `k` parts uniformly, balanced to within one.
+pub fn random_partition(n: usize, k: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut part = vec![0u32; n];
+    for (i, &v) in order.iter().enumerate() {
+        part[v] = (i % k) as u32;
+    }
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_within_one() {
+        let part = random_partition(103, 4, 1);
+        let mut sizes = [0usize; 4];
+        for &p in &part {
+            sizes[p as usize] += 1;
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(random_partition(50, 3, 9), random_partition(50, 3, 9));
+        assert_ne!(random_partition(50, 3, 9), random_partition(50, 3, 10));
+    }
+}

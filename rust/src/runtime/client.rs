@@ -1,0 +1,39 @@
+//! Thin wrapper around the PJRT CPU client from the `xla` crate.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client. Creating a `PjRtClient` is expensive (spins up
+/// the TFRT CPU runtime), so the coordinator creates exactly one and shares
+/// it across all loaded executables.
+pub struct RtClient {
+    client: xla::PjRtClient,
+}
+
+impl RtClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it into an executable.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}

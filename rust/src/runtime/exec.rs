@@ -1,0 +1,243 @@
+//! Artifact execution: marshal batch tensors into PJRT literals in manifest
+//! input order, execute, unpack (loss, grads, push, logits).
+
+use crate::runtime::client::RtClient;
+use crate::runtime::manifest::{ArtifactSpec, InputKind, Manifest};
+use anyhow::{ensure, Context, Result};
+
+/// Borrowed batch tensors for one optimizer step, padded to spec shapes.
+pub struct StepInputs<'a> {
+    pub x: &'a [f32],
+    pub edge_src: &'a [i32],
+    pub edge_dst: &'a [i32],
+    pub edge_w: &'a [f32],
+    /// flat [(L-1) * NH * hist_dim] (or the [1,1,1] placeholder for full)
+    pub hist: &'a [f32],
+    /// one of the two, per loss kind
+    pub labels_i: Option<&'a [i32]>,
+    pub labels_f: Option<&'a [f32]>,
+    pub label_mask: &'a [f32],
+    pub deg: &'a [f32],
+    pub noise: &'a [f32],
+    pub reg_lambda: f32,
+}
+
+/// Parsed executable outputs.
+pub struct StepOutputs {
+    pub loss: f32,
+    /// one flat tensor per parameter, manifest order
+    pub grads: Vec<Vec<f32>>,
+    /// flat [(L-1) * NB * hist_dim]
+    pub push: Vec<f32>,
+    /// flat [NB * C]
+    pub logits: Vec<f32>,
+}
+
+/// A compiled artifact bound to its spec.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Pre-built literals for the per-epoch-invariant inputs of one batch plan
+/// (x, edges, weights, labels, masks, degrees — everything except params,
+/// histories and reg noise). Building these is a multi-MB memcpy per step;
+/// caching them was the single largest L3 hot-path win (EXPERIMENTS §Perf).
+pub struct StaticLits {
+    /// aligned with `spec.inputs`; None = dynamic input (built per step)
+    lits: Vec<Option<xla::Literal>>,
+}
+
+fn f32_lit(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    ensure!(n == data.len(), "want {n} f32s for {shape:?}, got {}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+fn i32_lit(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    ensure!(n == data.len(), "want {n} i32s for {shape:?}, got {}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+impl LoadedArtifact {
+    /// Load + XLA-compile an artifact by name.
+    pub fn load(client: &RtClient, manifest: &Manifest, name: &str) -> Result<LoadedArtifact> {
+        let spec = manifest.artifact(name)?.clone();
+        let exe = client
+            .compile_hlo_text(&manifest.hlo_path(&spec))
+            .with_context(|| format!("loading artifact {name}"))?;
+        Ok(LoadedArtifact { spec, exe })
+    }
+
+    /// Pre-build the static input literals for a batch plan. `cache_noise`:
+    /// also freeze the noise tensor (valid when reg_lambda stays 0).
+    pub fn prepare_static(&self, inp: &StepInputs, cache_noise: bool) -> Result<StaticLits> {
+        let spec = &self.spec;
+        let mut lits = Vec::with_capacity(spec.inputs.len());
+        for is in &spec.inputs {
+            let lit = match is.kind {
+                InputKind::X => Some(f32_lit(inp.x, &is.shape).context("x")?),
+                InputKind::EdgeSrc => Some(i32_lit(inp.edge_src, &is.shape)?),
+                InputKind::EdgeDst => Some(i32_lit(inp.edge_dst, &is.shape)?),
+                InputKind::EdgeW => Some(f32_lit(inp.edge_w, &is.shape)?),
+                InputKind::Labels => Some(if is.dtype == "i32" {
+                    i32_lit(inp.labels_i.context("labels_i")?, &is.shape)?
+                } else {
+                    f32_lit(inp.labels_f.context("labels_f")?, &is.shape)?
+                }),
+                InputKind::LabelMask => Some(f32_lit(inp.label_mask, &is.shape)?),
+                InputKind::Deg => Some(f32_lit(inp.deg, &is.shape)?),
+                InputKind::Noise if cache_noise => {
+                    Some(f32_lit(inp.noise, &is.shape)?)
+                }
+                _ => None,
+            };
+            lits.push(lit);
+        }
+        Ok(StaticLits { lits })
+    }
+
+    /// Execute one step reusing cached static literals; only params, hist
+    /// (and noise if not cached) are marshalled fresh.
+    pub fn run_prepared(
+        &self,
+        params: &[Vec<f32>],
+        statics: &StaticLits,
+        hist: &[f32],
+        noise: &[f32],
+        reg_lambda: f32,
+    ) -> Result<StepOutputs> {
+        let spec = &self.spec;
+        ensure!(params.len() == spec.params.len(), "param count mismatch");
+        let mut owned: Vec<Option<xla::Literal>> = Vec::with_capacity(spec.inputs.len());
+        let mut p_idx = 0usize;
+        for (i, is) in spec.inputs.iter().enumerate() {
+            let lit = if statics.lits[i].is_some() {
+                None
+            } else {
+                Some(match is.kind {
+                    InputKind::Param => {
+                        let l = f32_lit(&params[p_idx], &is.shape)
+                            .with_context(|| format!("param {}", is.name))?;
+                        p_idx += 1;
+                        l
+                    }
+                    InputKind::Hist => f32_lit(hist, &is.shape).context("hist")?,
+                    InputKind::Noise => f32_lit(noise, &is.shape).context("noise")?,
+                    InputKind::RegLambda => xla::Literal::scalar(reg_lambda),
+                    _ => unreachable!("static input not cached: {}", is.name),
+                })
+            };
+            owned.push(lit);
+        }
+        let refs: Vec<&xla::Literal> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                owned[i]
+                    .as_ref()
+                    .or(statics.lits[i].as_ref())
+                    .expect("input covered")
+            })
+            .collect();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&refs)
+            .with_context(|| format!("executing {}", spec.name))?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<StepOutputs> {
+        let n_params = self.spec.params.len();
+        let parts = result.to_tuple().context("decomposing output tuple")?;
+        ensure!(
+            parts.len() == 1 + n_params + 2,
+            "expected {} outputs, got {}",
+            1 + n_params + 2,
+            parts.len()
+        );
+        let mut it = parts.into_iter();
+        let loss = it.next().unwrap().to_vec::<f32>()?[0];
+        let mut grads = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            grads.push(it.next().unwrap().to_vec::<f32>()?);
+        }
+        let push = it.next().unwrap().to_vec::<f32>()?;
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        Ok(StepOutputs { loss, grads, push, logits })
+    }
+
+    /// Execute one step. `params` must be aligned with `spec.params`.
+    pub fn run(&self, params: &[Vec<f32>], inp: &StepInputs) -> Result<StepOutputs> {
+        let spec = &self.spec;
+        ensure!(params.len() == spec.params.len(), "param count mismatch");
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(spec.inputs.len());
+        let mut p_idx = 0usize;
+        for is in &spec.inputs {
+            let lit = match is.kind {
+                InputKind::Param => {
+                    let l = f32_lit(&params[p_idx], &is.shape).with_context(|| {
+                        format!("param {} ({})", is.name, spec.name)
+                    })?;
+                    p_idx += 1;
+                    l
+                }
+                InputKind::X => f32_lit(inp.x, &is.shape).context("x")?,
+                InputKind::EdgeSrc => i32_lit(inp.edge_src, &is.shape).context("edge_src")?,
+                InputKind::EdgeDst => i32_lit(inp.edge_dst, &is.shape).context("edge_dst")?,
+                InputKind::EdgeW => f32_lit(inp.edge_w, &is.shape).context("edge_w")?,
+                InputKind::Hist => f32_lit(inp.hist, &is.shape).context("hist")?,
+                InputKind::Labels => {
+                    if is.dtype == "i32" {
+                        i32_lit(inp.labels_i.context("labels_i missing")?, &is.shape)
+                            .context("labels")?
+                    } else {
+                        f32_lit(inp.labels_f.context("labels_f missing")?, &is.shape)
+                            .context("labels")?
+                    }
+                }
+                InputKind::LabelMask => {
+                    f32_lit(inp.label_mask, &is.shape).context("label_mask")?
+                }
+                InputKind::Deg => f32_lit(inp.deg, &is.shape).context("deg")?,
+                InputKind::Noise => f32_lit(inp.noise, &is.shape).context("noise")?,
+                InputKind::RegLambda => xla::Literal::scalar(inp.reg_lambda),
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", spec.name))?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_check_shapes() {
+        assert!(f32_lit(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_lit(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        let l = f32_lit(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}

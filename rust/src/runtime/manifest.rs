@@ -1,0 +1,247 @@
+//! Artifact manifest (artifacts/manifest.json) — written by
+//! `python/compile/aot.py`, the single source of truth for shapes,
+//! input/output order, parameter init specs and dataset profiles.
+
+use crate::graph::datasets::Profile;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InputKind {
+    Param,
+    X,
+    EdgeSrc,
+    EdgeDst,
+    EdgeW,
+    Hist,
+    Labels,
+    LabelMask,
+    Deg,
+    Noise,
+    RegLambda,
+}
+
+impl InputKind {
+    fn parse(s: &str) -> Result<InputKind> {
+        Ok(match s {
+            "param" => InputKind::Param,
+            "x" => InputKind::X,
+            "edge_src" => InputKind::EdgeSrc,
+            "edge_dst" => InputKind::EdgeDst,
+            "edge_w" => InputKind::EdgeW,
+            "hist" => InputKind::Hist,
+            "labels" => InputKind::Labels,
+            "label_mask" => InputKind::LabelMask,
+            "deg" => InputKind::Deg,
+            "noise" => InputKind::Noise,
+            "reg_lambda" => InputKind::RegLambda,
+            _ => bail!("unknown input kind {s}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub kind: InputKind,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // "glorot" | "zeros" | "const:<v>"
+}
+
+/// One compiled artifact: shapes + IO layout.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub program: String, // "gas" | "full"
+    pub dataset: String,
+    pub nb: usize,
+    pub nh: usize,
+    pub nt: usize,
+    pub e: usize,
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+    pub layers: usize,
+    pub hist_dim: usize,
+    pub loss: String,        // "ce" | "bce"
+    pub edge_weight: String, // "gcn_norm" | "ones"
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<InputSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn is_full(&self) -> bool {
+        self.program == "full"
+    }
+
+    /// Rows of the `x` / `deg` / `noise` inputs.
+    pub fn n_in(&self) -> usize {
+        if self.is_full() {
+            self.nb
+        } else {
+            self.nt
+        }
+    }
+
+    pub fn hist_layers(&self) -> usize {
+        self.layers.saturating_sub(1)
+    }
+
+    fn from_json(j: &Json) -> Result<ArtifactSpec> {
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    init: p.get("init")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let inputs = j
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|i| {
+                Ok(InputSpec {
+                    name: i.get("name")?.as_str()?.to_string(),
+                    kind: InputKind::parse(i.get("kind")?.as_str()?)?,
+                    shape: i.get("shape")?.usize_vec()?,
+                    dtype: i.get("dtype")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            file: j.get("file")?.as_str()?.to_string(),
+            model: j.get("model")?.as_str()?.to_string(),
+            program: j.get("program")?.as_str()?.to_string(),
+            dataset: j.get("dataset")?.as_str()?.to_string(),
+            nb: j.get("nb")?.as_usize()?,
+            nh: j.get("nh")?.as_usize()?,
+            nt: j.get("nt")?.as_usize()?,
+            e: j.get("e")?.as_usize()?,
+            f: j.get("f")?.as_usize()?,
+            h: j.get("h")?.as_usize()?,
+            c: j.get("c")?.as_usize()?,
+            layers: j.get("layers")?.as_usize()?,
+            hist_dim: j.get("hist_dim")?.as_usize()?,
+            loss: j.get("loss")?.as_str()?.to_string(),
+            edge_weight: j.get("edge_weight")?.as_str()?.to_string(),
+            params,
+            inputs,
+        })
+    }
+}
+
+/// The parsed manifest.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub profiles: BTreeMap<String, Profile>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), ArtifactSpec::from_json(entry)?);
+        }
+        let mut profiles = BTreeMap::new();
+        for (name, entry) in j.get("profiles")?.as_obj()? {
+            profiles.insert(name.clone(), Profile::from_json(entry)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, profiles })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&Profile> {
+        self.profiles
+            .get(name)
+            .with_context(|| format!("unknown dataset profile {name:?}"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Default artifacts dir: $GAS_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GAS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_json() -> Json {
+        Json::parse(
+            r#"{
+            "name":"t_gcn2_gas","file":"t.hlo.txt","model":"gcn",
+            "program":"gas","dataset":"t","nb":8,"nh":16,"nt":24,"e":64,
+            "f":4,"h":8,"c":3,"layers":2,"hist_dim":8,"loss":"ce",
+            "edge_weight":"gcn_norm",
+            "params":[{"name":"b0","shape":[8],"init":"zeros"},
+                      {"name":"w0","shape":[4,8],"init":"glorot"}],
+            "inputs":[
+              {"name":"b0","kind":"param","shape":[8],"dtype":"f32"},
+              {"name":"w0","kind":"param","shape":[4,8],"dtype":"f32"},
+              {"name":"x","kind":"x","shape":[24,4],"dtype":"f32"},
+              {"name":"edge_src","kind":"edge_src","shape":[64],"dtype":"i32"}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_artifact_spec() {
+        let s = ArtifactSpec::from_json(&spec_json()).unwrap();
+        assert_eq!(s.name, "t_gcn2_gas");
+        assert_eq!(s.nb, 8);
+        assert!(!s.is_full());
+        assert_eq!(s.n_in(), 24);
+        assert_eq!(s.hist_layers(), 1);
+        assert_eq!(s.params.len(), 2);
+        assert_eq!(s.inputs[3].kind, InputKind::EdgeSrc);
+        assert_eq!(s.inputs[3].dtype, "i32");
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 100, "expected full registry");
+            let spec = m.artifact("cora_gcn2_gas").unwrap();
+            assert_eq!(spec.model, "gcn");
+            assert_eq!(spec.layers, 2);
+            assert!(m.hlo_path(spec).exists());
+            assert!(m.profile("cora").unwrap().n == 2708);
+        }
+    }
+}

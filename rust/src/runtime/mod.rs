@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the coordinator hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized `HloModuleProto`): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod exec;
+pub mod literal;
+pub mod manifest;
+
+pub use client::RtClient;
+pub use exec::{LoadedArtifact, StaticLits, StepInputs, StepOutputs};
+pub use manifest::{ArtifactSpec, InputKind, InputSpec, Manifest, ParamSpec};

@@ -1,0 +1,510 @@
+//! Batch assembly: from a set of batch nodes, compute the 1-hop halo,
+//! renumber into batch∪halo local space, and build the padded tensors the
+//! artifact expects (see python/compile/aot.py input specs).
+//!
+//! A [`BatchPlan`] is built once per (partition, artifact) pair and reused
+//! every epoch — only histories and reg-noise change between steps.
+
+use crate::graph::datasets::Dataset;
+use crate::history::pipeline::PullBuffer;
+use crate::runtime::manifest::ArtifactSpec;
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+
+/// Which label mask to expose to the loss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LabelSel {
+    Train,
+    Val,
+    Test,
+    /// every batch node (used by CLUSTER-style 100%-labeled benchmarks)
+    All,
+}
+
+/// Static (per-epoch-invariant) structure of one mini-batch.
+pub struct BatchPlan {
+    /// global ids of in-batch nodes; local row i
+    pub batch_nodes: Vec<u32>,
+    /// global ids of halo nodes; local row nb_pad + j (gas programs only)
+    pub halo_nodes: Vec<u32>,
+    /// padded local edge endpoints (len == spec.e)
+    pub edge_src: Vec<i32>,
+    pub edge_dst: Vec<i32>,
+    pub edge_w: Vec<f32>,
+    pub real_edges: usize,
+    /// padded x / deg / labels / masks (per-epoch invariant)
+    pub st: StaticTensors,
+}
+
+/// The padded dense tensors that do not change across epochs.
+pub struct StaticTensors {
+    pub x: Vec<f32>,
+    pub deg: Vec<f32>,
+    pub labels_i: Vec<i32>,
+    pub labels_f: Vec<f32>,
+    pub label_mask: Vec<f32>,
+}
+
+impl BatchPlan {
+    /// Build a GAS-program plan: batch nodes + 1-hop halo, histories for
+    /// out-of-batch sources.
+    pub fn build_gas(
+        ds: &Dataset,
+        spec: &ArtifactSpec,
+        batch_nodes: &[u32],
+        sel: LabelSel,
+    ) -> Result<BatchPlan> {
+        ensure!(spec.program == "gas", "build_gas wants a gas artifact");
+        ensure!(
+            batch_nodes.len() <= spec.nb,
+            "batch {} > padded nb {} ({})",
+            batch_nodes.len(),
+            spec.nb,
+            spec.name
+        );
+        let g = &ds.graph;
+        let mut local: HashMap<u32, i32> = HashMap::with_capacity(batch_nodes.len() * 4);
+        for (i, &v) in batch_nodes.iter().enumerate() {
+            local.insert(v, i as i32);
+        }
+        let mut halo: Vec<u32> = Vec::new();
+        let mut edge_src = Vec::new();
+        let mut edge_dst = Vec::new();
+        for (di, &d) in batch_nodes.iter().enumerate() {
+            for &s in g.neighbors(d as usize) {
+                let sl = match local.get(&s) {
+                    Some(&l) => l,
+                    None => {
+                        let l = (spec.nb + halo.len()) as i32;
+                        halo.push(s);
+                        local.insert(s, l);
+                        l
+                    }
+                };
+                edge_src.push(sl);
+                edge_dst.push(di as i32);
+            }
+        }
+        ensure!(
+            halo.len() <= spec.nh,
+            "halo {} > padded nh {} ({}) — increase profile padding",
+            halo.len(),
+            spec.nh,
+            spec.name
+        );
+        ensure!(
+            edge_src.len() <= spec.e,
+            "edges {} > padded e {} ({})",
+            edge_src.len(),
+            spec.e,
+            spec.name
+        );
+        let real_edges = edge_src.len();
+        let edge_w = edge_weights(ds, spec, &edge_src, &edge_dst, batch_nodes, &halo);
+        pad_edges(&mut edge_src, &mut edge_dst, spec.e);
+        let mut edge_w = edge_w;
+        edge_w.resize(spec.e, 0.0);
+        let st = static_tensors(ds, spec, batch_nodes, &halo, sel);
+        Ok(BatchPlan {
+            batch_nodes: batch_nodes.to_vec(),
+            halo_nodes: halo,
+            edge_src,
+            edge_dst,
+            edge_w,
+            real_edges,
+            st,
+        })
+    }
+
+    /// Build a FULL-program plan on a node set (whole graph, a Cluster-GCN
+    /// cluster, or a sampled subgraph): only edges internal to the set are
+    /// kept, every node's embedding is computed at every layer.
+    ///
+    /// `loss_nodes`: restrict the label mask to these (e.g. SAGE seeds);
+    /// `None` means all set nodes (standard full-batch).
+    pub fn build_full(
+        ds: &Dataset,
+        spec: &ArtifactSpec,
+        nodes: &[u32],
+        sel: LabelSel,
+        loss_nodes: Option<&[u32]>,
+    ) -> Result<BatchPlan> {
+        ensure!(spec.program == "full", "build_full wants a full artifact");
+        ensure!(
+            nodes.len() <= spec.nb,
+            "node set {} > padded nb {} ({})",
+            nodes.len(),
+            spec.nb,
+            spec.name
+        );
+        let g = &ds.graph;
+        let mut local: HashMap<u32, i32> = HashMap::with_capacity(nodes.len() * 2);
+        for (i, &v) in nodes.iter().enumerate() {
+            local.insert(v, i as i32);
+        }
+        let mut edge_src = Vec::new();
+        let mut edge_dst = Vec::new();
+        for (di, &d) in nodes.iter().enumerate() {
+            for &s in g.neighbors(d as usize) {
+                if let Some(&sl) = local.get(&s) {
+                    edge_src.push(sl);
+                    edge_dst.push(di as i32);
+                }
+            }
+        }
+        ensure!(
+            edge_src.len() <= spec.e,
+            "edges {} > padded e {} ({})",
+            edge_src.len(),
+            spec.e,
+            spec.name
+        );
+        let real_edges = edge_src.len();
+        let edge_w = edge_weights(ds, spec, &edge_src, &edge_dst, nodes, &[]);
+        pad_edges(&mut edge_src, &mut edge_dst, spec.e);
+        let mut edge_w = edge_w;
+        edge_w.resize(spec.e, 0.0);
+        let mut st = static_tensors(ds, spec, nodes, &[], sel);
+        if let Some(seeds) = loss_nodes {
+            let seed_set: std::collections::HashSet<u32> = seeds.iter().copied().collect();
+            for (i, &v) in nodes.iter().enumerate() {
+                if !seed_set.contains(&v) {
+                    st.label_mask[i] = 0.0;
+                }
+            }
+        }
+        Ok(BatchPlan {
+            batch_nodes: nodes.to_vec(),
+            halo_nodes: Vec::new(),
+            edge_src,
+            edge_dst,
+            edge_w,
+            real_edges,
+            st,
+        })
+    }
+
+    /// FULL-program plan with an *explicit* (sampled) edge list in global
+    /// ids — used by the GraphSAGE / GTTF baselines where the computation
+    /// graph is a sampled forest, not the induced subgraph.
+    pub fn build_full_with_edges(
+        ds: &Dataset,
+        spec: &ArtifactSpec,
+        nodes: &[u32],
+        edges: &[(u32, u32)],
+        sel: LabelSel,
+        loss_nodes: Option<&[u32]>,
+    ) -> Result<BatchPlan> {
+        ensure!(spec.program == "full", "wants a full artifact");
+        ensure!(nodes.len() <= spec.nb, "node set {} > nb {}", nodes.len(), spec.nb);
+        ensure!(edges.len() <= spec.e, "edges {} > e {}", edges.len(), spec.e);
+        let mut local: HashMap<u32, i32> = HashMap::with_capacity(nodes.len() * 2);
+        for (i, &v) in nodes.iter().enumerate() {
+            local.insert(v, i as i32);
+        }
+        let mut edge_src = Vec::with_capacity(edges.len());
+        let mut edge_dst = Vec::with_capacity(edges.len());
+        for &(s, d) in edges {
+            let (&sl, &dl) = (
+                local.get(&s).expect("edge src outside node set"),
+                local.get(&d).expect("edge dst outside node set"),
+            );
+            edge_src.push(sl);
+            edge_dst.push(dl);
+        }
+        let real_edges = edge_src.len();
+        let edge_w = edge_weights(ds, spec, &edge_src, &edge_dst, nodes, &[]);
+        pad_edges(&mut edge_src, &mut edge_dst, spec.e);
+        let mut edge_w = edge_w;
+        edge_w.resize(spec.e, 0.0);
+        let mut st = static_tensors(ds, spec, nodes, &[], sel);
+        if let Some(seeds) = loss_nodes {
+            let seed_set: std::collections::HashSet<u32> = seeds.iter().copied().collect();
+            for (i, &v) in nodes.iter().enumerate() {
+                if !seed_set.contains(&v) {
+                    st.label_mask[i] = 0.0;
+                }
+            }
+        }
+        Ok(BatchPlan {
+            batch_nodes: nodes.to_vec(),
+            halo_nodes: Vec::new(),
+            edge_src,
+            edge_dst,
+            edge_w,
+            real_edges,
+            st,
+        })
+    }
+
+    /// Fill the padded history tensor from a staged pull.
+    /// Layout: [(L-1), NH, hist_dim] flattened.
+    pub fn fill_hist(&self, spec: &ArtifactSpec, pull: &PullBuffer, out: &mut Vec<f32>) {
+        if spec.is_full() {
+            out.clear();
+            out.push(0.0); // [1,1,1] placeholder
+            out.resize(1, 0.0);
+            return;
+        }
+        let hl = spec.hist_layers();
+        let hd = spec.hist_dim;
+        out.clear();
+        out.resize(hl * spec.nh * hd, 0.0);
+        let rows = pull.num_rows.min(spec.nh);
+        for l in 0..hl {
+            let src = &pull.data[l];
+            let dst = &mut out[l * spec.nh * hd..];
+            dst[..rows * hd].copy_from_slice(&src[..rows * hd]);
+        }
+    }
+
+    /// Local row count of the `x` tensor for this plan's program.
+    pub fn n_in(&self, spec: &ArtifactSpec) -> usize {
+        spec.n_in()
+    }
+}
+
+fn pad_edges(src: &mut Vec<i32>, dst: &mut Vec<i32>, e: usize) {
+    src.resize(e, 0);
+    dst.resize(e, 0);
+}
+
+/// Per-edge weights: GCN symmetric normalization uses *true global*
+/// degrees (paper: histories keep all edges, so normalization must match
+/// the full graph — unlike Cluster-GCN which renormalizes the subgraph).
+fn edge_weights(
+    ds: &Dataset,
+    spec: &ArtifactSpec,
+    edge_src: &[i32],
+    edge_dst: &[i32],
+    batch_nodes: &[u32],
+    halo_nodes: &[u32],
+) -> Vec<f32> {
+    let nb_pad = spec.nb;
+    let global = |l: i32| -> u32 {
+        let l = l as usize;
+        if l < nb_pad {
+            batch_nodes[l]
+        } else {
+            halo_nodes[l - nb_pad]
+        }
+    };
+    match spec.edge_weight.as_str() {
+        "gcn_norm" => edge_src
+            .iter()
+            .zip(edge_dst.iter())
+            .map(|(&s, &d)| {
+                let ds_ = ds.graph.deg(global(s) as usize) as f32;
+                let dd = ds.graph.deg(global(d) as usize) as f32;
+                1.0 / ((ds_ + 1.0).sqrt() * (dd + 1.0).sqrt())
+            })
+            .collect(),
+        _ => vec![1.0; edge_src.len()],
+    }
+}
+
+fn static_tensors(
+    ds: &Dataset,
+    spec: &ArtifactSpec,
+    batch_nodes: &[u32],
+    halo_nodes: &[u32],
+    sel: LabelSel,
+) -> StaticTensors {
+    let f = spec.f;
+    let n_in = spec.n_in();
+    let mut x = vec![0f32; n_in * f];
+    let mut deg = vec![0f32; n_in];
+    for (i, &v) in batch_nodes.iter().enumerate() {
+        x[i * f..(i + 1) * f].copy_from_slice(ds.feature_row(v as usize));
+        deg[i] = ds.graph.deg(v as usize) as f32;
+    }
+    for (j, &v) in halo_nodes.iter().enumerate() {
+        let row = spec.nb + j;
+        x[row * f..(row + 1) * f].copy_from_slice(ds.feature_row(v as usize));
+        deg[row] = ds.graph.deg(v as usize) as f32;
+    }
+    let mask_of = |v: usize| -> bool {
+        match sel {
+            LabelSel::Train => ds.train_mask[v],
+            LabelSel::Val => ds.val_mask[v],
+            LabelSel::Test => ds.test_mask[v],
+            LabelSel::All => true,
+        }
+    };
+    let mut label_mask = vec![0f32; spec.nb];
+    let mut labels_i = vec![0i32; spec.nb];
+    let mut labels_f = Vec::new();
+    if spec.loss == "bce" {
+        labels_f = vec![0f32; spec.nb * spec.c];
+    }
+    for (i, &v) in batch_nodes.iter().enumerate() {
+        label_mask[i] = if mask_of(v as usize) { 1.0 } else { 0.0 };
+        labels_i[i] = ds.labels[v as usize] as i32;
+        if spec.loss == "bce" {
+            let c = spec.c;
+            labels_f[i * c..(i + 1) * c]
+                .copy_from_slice(&ds.y_multi[v as usize * c..(v as usize + 1) * c]);
+        }
+    }
+    StaticTensors { x, deg, labels_i, labels_f, label_mask }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::{Dataset, Profile};
+    use crate::runtime::manifest::{ArtifactSpec, InputSpec, ParamSpec};
+
+    fn tiny_dataset() -> Dataset {
+        let p = Profile {
+            name: "t".into(),
+            kind: "planted".into(),
+            n: 60,
+            f: 4,
+            c: 3,
+            avg_deg: 4.0,
+            multilabel: false,
+            train_frac: 0.5,
+            val_frac: 0.2,
+            homophily: 0.8,
+            feat_noise: 0.5,
+            parts: 3,
+            paper_n: 60,
+            seed: 1,
+        };
+        Dataset::generate(&p)
+    }
+
+    fn gas_spec(nb: usize, nh: usize, e: usize) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t_gas".into(),
+            file: "t".into(),
+            model: "gcn".into(),
+            program: "gas".into(),
+            dataset: "t".into(),
+            nb,
+            nh,
+            nt: nb + nh,
+            e,
+            f: 4,
+            h: 8,
+            c: 3,
+            layers: 2,
+            hist_dim: 8,
+            loss: "ce".into(),
+            edge_weight: "gcn_norm".into(),
+            params: Vec::<ParamSpec>::new(),
+            inputs: Vec::<InputSpec>::new(),
+        }
+    }
+
+    #[test]
+    fn gas_plan_builds_halo_and_edges() {
+        let ds = tiny_dataset();
+        let batch: Vec<u32> = (0..20).collect();
+        let spec = gas_spec(24, 48, 512);
+        let plan = BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::Train).unwrap();
+        // every real edge lands on a batch dst; srcs are in range
+        for i in 0..plan.real_edges {
+            assert!((plan.edge_dst[i] as usize) < 20);
+            let s = plan.edge_src[i] as usize;
+            assert!(s < 24 || (s >= 24 && s < 24 + plan.halo_nodes.len()));
+        }
+        // edge count equals the sum of batch degrees
+        let want: usize = batch.iter().map(|&v| ds.graph.deg(v as usize)).sum();
+        assert_eq!(plan.real_edges, want);
+        // halo = exactly the out-of-batch neighbors
+        for &h in &plan.halo_nodes {
+            assert!(h >= 20);
+        }
+        // padding edges have zero weight
+        for i in plan.real_edges..spec.e {
+            assert_eq!(plan.edge_w[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn gas_weights_are_symmetric_normalized() {
+        let ds = tiny_dataset();
+        let batch: Vec<u32> = (0..20).collect();
+        let spec = gas_spec(24, 48, 512);
+        let plan = BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::Train).unwrap();
+        let d = plan.edge_dst[0] as usize;
+        let s_local = plan.edge_src[0] as usize;
+        let s_glob = if s_local < 24 {
+            batch[s_local]
+        } else {
+            plan.halo_nodes[s_local - 24]
+        } as usize;
+        let want = 1.0
+            / (((ds.graph.deg(s_glob) as f32 + 1.0).sqrt())
+                * ((ds.graph.deg(batch[d] as usize) as f32 + 1.0).sqrt()));
+        assert!((plan.edge_w[0] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn full_plan_keeps_only_internal_edges() {
+        let ds = tiny_dataset();
+        let mut spec = gas_spec(60, 0, 1024);
+        spec.program = "full".into();
+        let nodes: Vec<u32> = (0..30).collect();
+        let plan = BatchPlan::build_full(&ds, &spec, &nodes, LabelSel::Train, None).unwrap();
+        let internal: usize = nodes
+            .iter()
+            .map(|&v| {
+                ds.graph
+                    .neighbors(v as usize)
+                    .iter()
+                    .filter(|&&u| u < 30)
+                    .count()
+            })
+            .sum();
+        assert_eq!(plan.real_edges, internal);
+        assert!(plan.halo_nodes.is_empty());
+    }
+
+    #[test]
+    fn loss_nodes_restrict_mask() {
+        let ds = tiny_dataset();
+        let mut spec = gas_spec(60, 0, 1024);
+        spec.program = "full".into();
+        let nodes: Vec<u32> = (0..30).collect();
+        let seeds: Vec<u32> = vec![0, 1, 2];
+        let plan =
+            BatchPlan::build_full(&ds, &spec, &nodes, LabelSel::All, Some(&seeds)).unwrap();
+        for i in 0..30 {
+            let expect = i < 3;
+            assert_eq!(plan.st.label_mask[i] > 0.0, expect, "node {i}");
+        }
+    }
+
+    #[test]
+    fn overflow_is_an_error_not_a_truncation() {
+        let ds = tiny_dataset();
+        let batch: Vec<u32> = (0..20).collect();
+        // nh too small
+        let spec = gas_spec(24, 1, 512);
+        assert!(BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::Train).is_err());
+        // e too small
+        let spec = gas_spec(24, 48, 4);
+        assert!(BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::Train).is_err());
+    }
+
+    #[test]
+    fn fill_hist_pads_layers() {
+        let ds = tiny_dataset();
+        let batch: Vec<u32> = (0..20).collect();
+        let spec = gas_spec(24, 48, 512);
+        let plan = BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::Train).unwrap();
+        let nh_real = plan.halo_nodes.len();
+        let pull = PullBuffer {
+            data: vec![vec![2.0; nh_real * 8]],
+            num_rows: nh_real,
+        };
+        let mut out = Vec::new();
+        plan.fill_hist(&spec, &pull, &mut out);
+        assert_eq!(out.len(), 1 * 48 * 8);
+        assert!(out[..nh_real * 8].iter().all(|&v| v == 2.0));
+        assert!(out[nh_real * 8..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Mini-batch scheduling: halo computation + padded tensor assembly
+//! (Algorithm 1's `V_b = union N(v) ∪ {v}` / `G_b = G[V_b]` step) and the
+//! epoch-order scheduler with prefetch lookahead.
+
+pub mod batch;
+pub mod scheduler;
+
+pub use batch::{BatchPlan, LabelSel, StaticTensors};
+pub use scheduler::EpochScheduler;

@@ -1,0 +1,71 @@
+//! Training-curve recording (loss / accuracy per epoch) for Fig. 3 and
+//! convergence reporting.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Named series of per-epoch values.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+impl Curve {
+    pub fn new(name: &str) -> Curve {
+        Curve { name: name.to_string(), values: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    pub fn best(&self) -> Option<(usize, f64)> {
+        self.values
+            .iter()
+            .copied()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Mean of the final k entries (converged value).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        stats::tail_mean_std(&self.values, k).0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("values", Json::arr_f64(&self.values)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut c = Curve::new("val_acc");
+        for v in [0.1, 0.5, 0.8, 0.75] {
+            c.push(v);
+        }
+        assert_eq!(c.last(), Some(0.75));
+        assert_eq!(c.best(), Some((2, 0.8)));
+        assert!((c.tail_mean(2) - 0.775).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut c = Curve::new("loss");
+        c.push(1.0);
+        let j = c.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "loss");
+        assert_eq!(j.get("values").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,116 @@
+//! Full-batch reference trainer: exact gradient descent on the whole graph
+//! (the baseline GAS must match — Table 1 / Fig. 3).
+
+use crate::graph::datasets::Dataset;
+use crate::model::{Adam, Optimizer, ParamStore};
+use crate::runtime::{LoadedArtifact, StepInputs};
+use crate::sched::batch::{BatchPlan, LabelSel};
+use crate::train::curve::Curve;
+use crate::train::trainer::score;
+use crate::util::timer::{Buckets, Timer};
+use anyhow::{ensure, Result};
+
+pub struct FullBatchTrainer<'a> {
+    ds: &'a Dataset,
+    art: &'a LoadedArtifact,
+    plan: BatchPlan,
+    pub params: ParamStore,
+    opt: Adam,
+    noise: Vec<f32>,
+    hist: Vec<f32>,
+}
+
+pub struct FullBatchResult {
+    pub loss: Curve,
+    pub train_acc: Curve,
+    pub val_acc: Curve,
+    pub test_acc: Curve,
+    pub test_at_best_val: f64,
+    pub buckets: Buckets,
+}
+
+impl<'a> FullBatchTrainer<'a> {
+    pub fn new(
+        ds: &'a Dataset,
+        art: &'a LoadedArtifact,
+        lr: f32,
+        clip: Option<f32>,
+        weight_decay: f32,
+        seed: u64,
+    ) -> Result<FullBatchTrainer<'a>> {
+        let spec = &art.spec;
+        ensure!(spec.program == "full", "FullBatchTrainer wants a full artifact");
+        let nodes: Vec<u32> = (0..ds.n() as u32).collect();
+        let plan = BatchPlan::build_full(ds, spec, &nodes, LabelSel::Train, None)?;
+        let params = ParamStore::init(&spec.params, seed ^ 0x9e37)?;
+        let mut opt = Adam::new(lr).with_weight_decay(weight_decay);
+        if let Some(c) = clip {
+            opt = opt.with_clip(c);
+        }
+        let n_in = spec.n_in();
+        let noise_dim = spec.hist_dim.max(spec.h);
+        Ok(FullBatchTrainer {
+            ds,
+            art,
+            plan,
+            params,
+            opt,
+            noise: vec![0f32; n_in * noise_dim],
+            hist: vec![0f32; 1],
+        })
+    }
+
+    pub fn train(&mut self, epochs: usize, eval_every: usize) -> Result<FullBatchResult> {
+        let mut r = FullBatchResult {
+            loss: Curve::new("train_loss"),
+            train_acc: Curve::new("train_acc"),
+            val_acc: Curve::new("val_acc"),
+            test_acc: Curve::new("test_acc"),
+            test_at_best_val: 0.0,
+            buckets: Buckets::new(),
+        };
+        let mut best_val = f64::NEG_INFINITY;
+        for epoch in 0..epochs {
+            let t = Timer::start();
+            let out = self.run_once()?;
+            r.buckets.add("exec", t.elapsed_s());
+            let t = Timer::start();
+            self.opt.step(&mut self.params, &out.grads);
+            r.buckets.add("optim", t.elapsed_s());
+            r.loss.push(out.loss as f64);
+            if (epoch + 1) % eval_every == 0 || epoch + 1 == epochs {
+                let spec = &self.art.spec;
+                let c = spec.c;
+                // logits cover all (real) nodes already
+                let n = self.ds.n();
+                let (tr, va, te) = score(self.ds, &out.logits[..n * c], c);
+                r.train_acc.push(tr);
+                r.val_acc.push(va);
+                r.test_acc.push(te);
+                if va > best_val {
+                    best_val = va;
+                    r.test_at_best_val = te;
+                }
+            }
+        }
+        Ok(r)
+    }
+
+    fn run_once(&mut self) -> Result<crate::runtime::StepOutputs> {
+        let spec = &self.art.spec;
+        let inputs = StepInputs {
+            x: &self.plan.st.x,
+            edge_src: &self.plan.edge_src,
+            edge_dst: &self.plan.edge_dst,
+            edge_w: &self.plan.edge_w,
+            hist: &self.hist,
+            labels_i: if spec.loss == "ce" { Some(&self.plan.st.labels_i) } else { None },
+            labels_f: if spec.loss == "bce" { Some(&self.plan.st.labels_f) } else { None },
+            label_mask: &self.plan.st.label_mask,
+            deg: &self.plan.st.deg,
+            noise: &self.noise,
+            reg_lambda: 0.0,
+        };
+        self.art.run(&self.params.tensors, &inputs)
+    }
+}

@@ -1,0 +1,11 @@
+//! Training loops: the GAS mini-batch trainer (Algorithm 1 + the §5
+//! concurrent pipeline), the full-batch reference trainer, and curve
+//! recording.
+
+pub mod curve;
+pub mod full_batch;
+pub mod trainer;
+
+pub use curve::Curve;
+pub use full_batch::FullBatchTrainer;
+pub use trainer::{PartitionKind, TrainConfig, TrainResult, Trainer};

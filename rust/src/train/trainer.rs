@@ -1,0 +1,383 @@
+//! The GAS training loop (paper Algorithm 1 + §5 concurrency).
+//!
+//! Per epoch, for every mini-batch (a METIS part, or a random part for the
+//! naive-history baseline):
+//!   1. *pull* halo histories (prefetched by the concurrent pipeline while
+//!      the previous batch executes),
+//!   2. execute the AOT artifact (fwd + bwd + Lipschitz reg) via PJRT,
+//!   3. optimizer step (Adam + global-norm clip),
+//!   4. *push* fresh in-batch layer embeddings back to the history store.
+//!
+//! Evaluation runs the same artifact over all batches (histories synced),
+//! collecting logits for every node — mirroring the paper's
+//! constant-memory layer-wise inference.
+
+use crate::graph::datasets::Dataset;
+use crate::history::{HistoryPipeline, HistoryStore, PipelineMode};
+use crate::model::metrics;
+use crate::model::{Adam, Optimizer, ParamStore};
+use crate::partition::{metis_partition, random_partition};
+use crate::runtime::{LoadedArtifact, StepInputs};
+use crate::sched::batch::{BatchPlan, LabelSel};
+use crate::sched::scheduler::EpochScheduler;
+use crate::train::curve::Curve;
+use crate::util::rng::Rng;
+use crate::util::timer::{Buckets, Timer};
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    Metis,
+    Random,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub clip: Option<f32>,
+    /// Lipschitz-regularization weight (0 disables; artifact must have been
+    /// compiled with the reg branch for it to bite)
+    pub reg_lambda: f32,
+    pub noise_scale: f32,
+    pub weight_decay: f32,
+    pub partitioner: PartitionKind,
+    pub pipeline: PipelineMode,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub shuffle: bool,
+    pub label_sel: LabelSel,
+    /// number of mini-batches (defaults to the dataset profile's `parts`)
+    pub parts: Option<usize>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 30,
+            lr: 0.01,
+            clip: Some(1.0),
+            reg_lambda: 0.0,
+            noise_scale: 0.1,
+            weight_decay: 0.0,
+            partitioner: PartitionKind::Metis,
+            pipeline: PipelineMode::Concurrent,
+            seed: 0,
+            eval_every: 1,
+            shuffle: true,
+            label_sel: LabelSel::Train,
+            parts: None,
+        }
+    }
+}
+
+/// Metrics of a finished run.
+pub struct TrainResult {
+    pub loss: Curve,
+    pub train_acc: Curve,
+    pub val_acc: Curve,
+    pub test_acc: Curve,
+    /// test metric at the best-val epoch (the paper's reporting protocol)
+    pub test_at_best_val: f64,
+    pub buckets: Buckets,
+    /// mean staleness (steps) of pulled rows, per layer
+    pub staleness: Vec<f64>,
+    /// mean push delta ||h_new - h_old|| per layer (empirical epsilon)
+    pub push_delta: Vec<f64>,
+    pub history_bytes: usize,
+    pub steps: usize,
+}
+
+/// GAS trainer bound to a dataset + artifact.
+pub struct Trainer<'a> {
+    ds: &'a Dataset,
+    art: &'a LoadedArtifact,
+    cfg: TrainConfig,
+    plans: Vec<BatchPlan>,
+    pipeline: HistoryPipeline,
+    pub params: ParamStore,
+    opt: Adam,
+    rng: Rng,
+    noise_buf: Vec<f32>,
+    hist_buf: Vec<f32>,
+    staleness_acc: Vec<f64>,
+    staleness_cnt: u64,
+    /// per-plan cached static input literals (§Perf: avoids re-marshalling
+    /// x/edges/labels — megabytes — every step)
+    statics: Vec<Option<crate::runtime::StaticLits>>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(ds: &'a Dataset, art: &'a LoadedArtifact, cfg: TrainConfig) -> Result<Trainer<'a>> {
+        let spec = &art.spec;
+        ensure!(spec.program == "gas", "Trainer wants a gas artifact");
+        let k = cfg.parts.unwrap_or(ds.profile.parts);
+        let part = match cfg.partitioner {
+            PartitionKind::Metis => metis_partition(&ds.graph, k, cfg.seed),
+            PartitionKind::Random => random_partition(ds.n(), k, cfg.seed),
+        };
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (v, &p) in part.iter().enumerate() {
+            groups[p as usize].push(v as u32);
+        }
+        let mut plans = Vec::with_capacity(k);
+        for g in &groups {
+            plans.push(BatchPlan::build_gas(ds, spec, g, cfg.label_sel)?);
+        }
+        let store = HistoryStore::new(ds.n(), spec.hist_dim, spec.hist_layers());
+        let pipeline = HistoryPipeline::new(store, cfg.pipeline);
+        let params = ParamStore::init(&spec.params, cfg.seed ^ 0x9e37)?;
+        let opt = {
+            let mut a = Adam::new(cfg.lr).with_weight_decay(cfg.weight_decay);
+            if let Some(c) = cfg.clip {
+                a = a.with_clip(c);
+            }
+            a
+        };
+        let n_in = spec.n_in();
+        let noise_dim = spec.hist_dim.max(spec.h);
+        let hl = spec.hist_layers();
+        let n_plans = plans.len();
+        Ok(Trainer {
+            statics: (0..n_plans).map(|_| None).collect(),
+            ds,
+            art,
+            rng: Rng::new(cfg.seed ^ 0xabcd),
+            cfg,
+            plans,
+            pipeline,
+            params,
+            opt,
+            noise_buf: vec![0f32; n_in * noise_dim],
+            hist_buf: Vec::new(),
+            staleness_acc: vec![0.0; hl],
+            staleness_cnt: 0,
+        })
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn plans(&self) -> &[BatchPlan] {
+        &self.plans
+    }
+
+    /// Run the full schedule; returns curves + probes.
+    pub fn train(&mut self) -> Result<TrainResult> {
+        let mut result = TrainResult {
+            loss: Curve::new("train_loss"),
+            train_acc: Curve::new("train_acc"),
+            val_acc: Curve::new("val_acc"),
+            test_acc: Curve::new("test_acc"),
+            test_at_best_val: 0.0,
+            buckets: Buckets::new(),
+            staleness: Vec::new(),
+            push_delta: Vec::new(),
+            history_bytes: self.pipeline.with_store(|s| s.bytes()),
+            steps: 0,
+        };
+        let mut sched = EpochScheduler::new(self.plans.len(), self.cfg.seed ^ 0x5eed, self.cfg.shuffle);
+        let mut best_val = f64::NEG_INFINITY;
+        for epoch in 0..self.cfg.epochs {
+            sched.next_epoch();
+            let mut epoch_loss = 0f64;
+            let mut nb = 0usize;
+            // prime the pipeline with the first pull
+            if let Some(b0) = sched.current() {
+                let halo: Vec<u32> = self.plans[b0].halo_nodes.clone();
+                self.pipeline.request_pull(&halo);
+            }
+            while let Some(b) = sched.current() {
+                let loss = self.step(b, &mut result.buckets, sched.lookahead())?;
+                epoch_loss += loss as f64;
+                nb += 1;
+                result.steps += 1;
+                sched.advance();
+            }
+            result.loss.push(epoch_loss / nb.max(1) as f64);
+            if (epoch + 1) % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
+                let (tr, va, te) = self.evaluate(&mut result.buckets)?;
+                result.train_acc.push(tr);
+                result.val_acc.push(va);
+                result.test_acc.push(te);
+                if va > best_val {
+                    best_val = va;
+                    result.test_at_best_val = te;
+                }
+            }
+        }
+        let hl = self.art.spec.hist_layers();
+        result.staleness = (0..hl)
+            .map(|l| self.staleness_acc[l] / self.staleness_cnt.max(1) as f64)
+            .collect();
+        result.push_delta = self
+            .pipeline
+            .with_store(|s| (0..hl).map(|l| s.mean_push_delta(l)).collect());
+        Ok(result)
+    }
+
+    /// One optimizer step on batch `b`. `lookahead`: batch to prefetch.
+    fn step(&mut self, b: usize, buckets: &mut Buckets, lookahead: Option<usize>) -> Result<f32> {
+        let spec = &self.art.spec;
+        let hl = spec.hist_layers();
+        let hd = spec.hist_dim;
+
+        // -- wait for the staged pull (I/O wait = the Fig. 4 overhead) -----
+        let t = Timer::start();
+        let pull = self.pipeline.wait_pull();
+        buckets.add("pull_wait", t.elapsed_s());
+
+        // -- prefetch the next batch while this one computes ---------------
+        if let Some(nb) = lookahead {
+            let halo: Vec<u32> = self.plans[nb].halo_nodes.clone();
+            self.pipeline.request_pull(&halo);
+        }
+
+        // staleness probe
+        {
+            let plan = &self.plans[b];
+            self.pipeline.with_store(|s| {
+                for l in 0..hl {
+                    self.staleness_acc[l] += s.staleness(l, &plan.halo_nodes);
+                }
+            });
+            self.staleness_cnt += 1;
+        }
+
+        // -- assemble ------------------------------------------------------
+        let t = Timer::start();
+        let plan = &self.plans[b];
+        plan.fill_hist(spec, &pull, &mut self.hist_buf);
+        self.pipeline.recycle(pull);
+        if self.cfg.reg_lambda > 0.0 {
+            let ns = self.cfg.noise_scale;
+            for v in self.noise_buf.iter_mut() {
+                *v = self.rng.normal_f32() * ns;
+            }
+        }
+        buckets.add("assemble", t.elapsed_s());
+
+        // -- execute -------------------------------------------------------
+        let t = Timer::start();
+        if self.statics[b].is_none() {
+            let inputs = StepInputs {
+                x: &plan.st.x,
+                edge_src: &plan.edge_src,
+                edge_dst: &plan.edge_dst,
+                edge_w: &plan.edge_w,
+                hist: &self.hist_buf,
+                labels_i: if spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
+                labels_f: if spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
+                label_mask: &plan.st.label_mask,
+                deg: &plan.st.deg,
+                noise: &self.noise_buf,
+                reg_lambda: self.cfg.reg_lambda,
+            };
+            let cache_noise = self.cfg.reg_lambda == 0.0;
+            self.statics[b] = Some(self.art.prepare_static(&inputs, cache_noise)?);
+        }
+        let out = self.art.run_prepared(
+            &self.params.tensors,
+            self.statics[b].as_ref().unwrap(),
+            &self.hist_buf,
+            &self.noise_buf,
+            self.cfg.reg_lambda,
+        )?;
+        buckets.add("exec", t.elapsed_s());
+
+        // -- update --------------------------------------------------------
+        let t = Timer::start();
+        self.opt.step(&mut self.params, &out.grads);
+        buckets.add("optim", t.elapsed_s());
+
+        // -- push fresh embeddings back ------------------------------------
+        let t = Timer::start();
+        let nb_real = plan.batch_nodes.len();
+        for l in 0..hl {
+            let mut buf = self.pipeline.take_buffer(nb_real * hd);
+            let base = l * spec.nb * hd;
+            buf.copy_from_slice(&out.push[base..base + nb_real * hd]);
+            let ids = plan.batch_nodes.clone();
+            self.pipeline.push(l, &ids, buf);
+        }
+        self.pipeline.tick();
+        buckets.add("push", t.elapsed_s());
+
+        Ok(out.loss)
+    }
+
+    /// Read-only access to the (synced) history store — used by the
+    /// Theorem-2 error-bound probes.
+    pub fn with_history<T>(&mut self, f: impl FnOnce(&crate::history::HistoryStore) -> T) -> T {
+        self.pipeline.sync();
+        self.pipeline.with_store(f)
+    }
+
+    /// Evaluate over all batches (histories synced first): returns
+    /// (train, val, test) metric — accuracy or micro-F1 per dataset kind.
+    pub fn evaluate(&mut self, buckets: &mut Buckets) -> Result<(f64, f64, f64)> {
+        // ensure queued pushes are applied and no pull is left hanging
+        self.pipeline.sync();
+        let spec = &self.art.spec;
+        let t = Timer::start();
+        let n = self.ds.n();
+        let c = spec.c;
+        let mut logits = vec![0f32; n * c];
+        for b in 0..self.plans.len() {
+            let plan = &self.plans[b];
+            let halo: Vec<u32> = plan.halo_nodes.clone();
+            self.pipeline.request_pull(&halo);
+            let pull = self.pipeline.wait_pull();
+            plan.fill_hist(spec, &pull, &mut self.hist_buf);
+            self.pipeline.recycle(pull);
+            if self.statics[b].is_none() {
+                let inputs = StepInputs {
+                    x: &plan.st.x,
+                    edge_src: &plan.edge_src,
+                    edge_dst: &plan.edge_dst,
+                    edge_w: &plan.edge_w,
+                    hist: &self.hist_buf,
+                    labels_i: if spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
+                    labels_f: if spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
+                    label_mask: &plan.st.label_mask,
+                    deg: &plan.st.deg,
+                    noise: &self.noise_buf,
+                    reg_lambda: 0.0,
+                };
+                let cache_noise = self.cfg.reg_lambda == 0.0;
+                self.statics[b] = Some(self.art.prepare_static(&inputs, cache_noise)?);
+            }
+            let out = self.art.run_prepared(
+                &self.params.tensors,
+                self.statics[b].as_ref().unwrap(),
+                &self.hist_buf,
+                &self.noise_buf,
+                0.0,
+            )?;
+            for (i, &v) in plan.batch_nodes.iter().enumerate() {
+                logits[v as usize * c..(v as usize + 1) * c]
+                    .copy_from_slice(&out.logits[i * c..(i + 1) * c]);
+            }
+        }
+        buckets.add("eval", t.elapsed_s());
+        Ok(score(self.ds, &logits, c))
+    }
+}
+
+/// (train, val, test) metric from full-graph logits.
+pub fn score(ds: &Dataset, logits: &[f32], c: usize) -> (f64, f64, f64) {
+    if ds.profile.multilabel {
+        (
+            metrics::micro_f1(logits, c, &ds.y_multi, &ds.train_mask),
+            metrics::micro_f1(logits, c, &ds.y_multi, &ds.val_mask),
+            metrics::micro_f1(logits, c, &ds.y_multi, &ds.test_mask),
+        )
+    } else {
+        (
+            metrics::accuracy(logits, c, &ds.labels, &ds.train_mask),
+            metrics::accuracy(logits, c, &ds.labels, &ds.val_mask),
+            metrics::accuracy(logits, c, &ds.labels, &ds.test_mask),
+        )
+    }
+}

@@ -1,0 +1,128 @@
+//! Tiny clap-like CLI substrate: subcommands + `--flag value` options.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch` options
+/// and positional arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.command = iter.next().unwrap();
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.switches.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.options.contains_key(switch)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --dataset cora --epochs 30 --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("cora"));
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 30);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --name=fig4 --ratio=2.5");
+        assert_eq!(a.get("name"), Some("fig4"));
+        assert_eq!(a.f64_or("ratio", 0.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("eval model.json out.json --fast");
+        assert_eq!(a.positional, vec!["model.json", "out.json"]);
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse("train");
+        assert!(a.require("dataset").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.str_or("mode", "gas"), "gas");
+        assert_eq!(a.usize_or("n", 5).unwrap(), 5);
+    }
+}

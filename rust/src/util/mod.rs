@@ -1,0 +1,13 @@
+//! Offline substrates: the crates.io mirror only carries the `xla` closure,
+//! so JSON, CLI parsing, RNG, stats, property testing and benchmarking are
+//! all built in-repo (DESIGN.md §4).
+
+pub mod argparse;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;

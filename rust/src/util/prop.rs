@@ -1,0 +1,137 @@
+//! Mini property-testing harness (proptest is not in the offline mirror).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` random inputs and,
+//! on failure, performs greedy shrinking via the input's `Shrink` impl.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over random cases; panics with the (shrunk) witness on
+/// failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let witness = shrink_loop(input, &prop);
+            panic!("property failed on case {case}: {witness:?}");
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> bool>(mut failing: T, prop: &P) -> T {
+    // greedy: keep taking the first shrink candidate that still fails
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(0, 200, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(0, 200, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn shrinks_to_boundary() {
+        // witness for "x < 50" should shrink to exactly 50
+        let witness = shrink_loop(97usize, &|&x: &usize| x < 50);
+        assert_eq!(witness, 50);
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v: Vec<usize> = (0..64).collect();
+        let w = shrink_loop(v, &|v: &Vec<usize>| v.len() < 8);
+        assert_eq!(w.len(), 8);
+    }
+}

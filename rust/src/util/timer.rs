@@ -1,0 +1,98 @@
+//! Wall-clock timing helpers for the bench harness and pipeline tracing.
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Accumulates named time buckets — used for the Fig. 4 I/O-vs-compute
+/// overhead decomposition (pull / exec / push / assemble).
+#[derive(Debug, Default, Clone)]
+pub struct Buckets {
+    entries: Vec<(String, f64)>,
+}
+
+impl Buckets {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, seconds: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += seconds;
+        } else {
+            self.entries.push((name.to_string(), seconds));
+        }
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.elapsed_s());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, v)| v).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    pub fn merge(&mut self, other: &Buckets) {
+        for (n, v) in &other.entries {
+            self.add(n, *v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_accumulate() {
+        let mut b = Buckets::new();
+        b.add("pull", 1.0);
+        b.add("pull", 0.5);
+        b.add("exec", 2.0);
+        assert_eq!(b.get("pull"), 1.5);
+        assert_eq!(b.total(), 3.5);
+        let mut c = Buckets::new();
+        c.add("pull", 1.0);
+        c.merge(&b);
+        assert_eq!(c.get("pull"), 2.5);
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(t.elapsed_ms() >= 9.0);
+    }
+}
