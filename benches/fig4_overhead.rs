@@ -13,7 +13,7 @@ use gas::bench::print_table;
 use gas::config::Ctx;
 use gas::graph::datasets::{Dataset, Profile};
 use gas::graph::generators::fig4_batch_graph;
-use gas::history::{HistoryPipeline, HistoryStore, PipelineMode};
+use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use gas::model::ParamStore;
 use gas::runtime::StepInputs;
 use gas::sched::batch::{BatchPlan, LabelSel};
@@ -92,9 +92,20 @@ fn main() -> anyhow::Result<()> {
         let params = ParamStore::init(&spec.params, 1)?;
         let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
 
-        let mut results = Vec::new(); // (mode, step_s, io_wait_s)
-        for mode in [PipelineMode::Serial, PipelineMode::Concurrent] {
-            let store = HistoryStore::new(ds.n(), spec.hist_dim, spec.hist_layers());
+        let mut results = Vec::new(); // (label, step_s, io_wait_s)
+        // serial / concurrent run the single-stripe store (the old engine);
+        // sharded adds row striping + rayon gather/scatter under the pool
+        let configs: [(&str, PipelineMode, bool); 3] = [
+            ("serial", PipelineMode::Serial, false),
+            ("concurrent", PipelineMode::Concurrent, false),
+            ("sharded", PipelineMode::Concurrent, true),
+        ];
+        for (label, mode, sharded) in configs {
+            let store = if sharded {
+                ShardedHistoryStore::new(ds.n(), spec.hist_dim, spec.hist_layers())
+            } else {
+                ShardedHistoryStore::sequential(ds.n(), spec.hist_dim, spec.hist_layers())
+            };
             let mut pipe = HistoryPipeline::new(store, mode);
             let mut hist_buf = Vec::new();
             let steps = 6usize;
@@ -144,15 +155,15 @@ fn main() -> anyhow::Result<()> {
             }
             pipe.sync();
             let step_s = t_all.elapsed_s() / steps as f64;
-            results.push((mode, step_s, (io_wait + push_wait) / steps as f64));
+            results.push((label, step_s, (io_wait + push_wait) / steps as f64));
         }
         if i == 0 {
             base_exec = results[1].1; // concurrent at lowest ratio = baseline
         }
-        for (mode, step_s, io_s) in &results {
+        for (label, step_s, io_s) in &results {
             rows.push(vec![
                 format!("{:.2}", ratio),
-                format!("{:?}", mode),
+                label.to_string(),
                 format!("{:.1}", step_s * 1e3),
                 format!("{:.1}", io_s * 1e3),
                 format!("{:+.0}%", 100.0 * (step_s / base_exec - 1.0)),

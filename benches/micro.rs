@@ -1,69 +1,199 @@
 //! Micro-benchmarks of the L3 hot paths: METIS partitioning, history
-//! pull/push throughput, batch assembly, literal marshalling (§Perf
-//! baselines in EXPERIMENTS.md).
+//! pull/push throughput (serial vs concurrent vs sharded), batch assembly,
+//! literal marshalling (§Perf baselines in EXPERIMENTS.md).
 //!
 //!     cargo bench --bench micro
+//!     GAS_MICRO_TINY=1 cargo bench --bench micro   # CI smoke (< 60 s)
+//!
+//! Always writes a machine-readable summary (default `BENCH_micro.json`,
+//! override with `GAS_BENCH_JSON`) so the CI bench-smoke job can archive
+//! pull/push throughput and fail loudly on regressions.
 
-use gas::bench::Bencher;
-use gas::config::Ctx;
+use gas::bench::{write_bench_json, BenchReport, Bencher};
 use gas::graph::generators;
-use gas::history::{HistoryPipeline, HistoryStore, PipelineMode};
+use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use gas::partition::metis_partition;
+use gas::runtime::{ArtifactSpec, InputSpec, ParamSpec};
 use gas::sched::batch::{BatchPlan, LabelSel};
 use gas::util::rng::Rng;
 
+const HIST_N: usize = 100_000;
+const HIST_H: usize = 64;
+const HIST_LAYERS: usize = 3;
+const PULL_ROWS: usize = 8192;
+const PUSHES_PER_ITER: usize = 4;
+
+/// A gas-program spec sized exactly for one synthetic batch (no manifest
+/// needed — batch assembly is pure Rust).
+fn synthetic_spec(f: usize, nb: usize, nh: usize, e: usize) -> ArtifactSpec {
+    ArtifactSpec {
+        name: "synthetic_gcn2_gas".into(),
+        file: "unused".into(),
+        model: "gcn".into(),
+        program: "gas".into(),
+        dataset: "synthetic".into(),
+        nb,
+        nh,
+        nt: nb + nh,
+        e,
+        f,
+        h: HIST_H,
+        c: 8,
+        layers: 2,
+        hist_dim: HIST_H,
+        loss: "ce".into(),
+        edge_weight: "gcn_norm".into(),
+        params: Vec::<ParamSpec>::new(),
+        inputs: Vec::<InputSpec>::new(),
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    let b = Bencher::new(1, 7);
+    let tiny = std::env::var("GAS_MICRO_TINY").is_ok();
+    let b = if tiny { Bencher::new(1, 5) } else { Bencher::new(1, 7) };
+    let mut reports: Vec<BenchReport> = Vec::new();
+    let mut run = |reports: &mut Vec<BenchReport>, name: &str, f: &mut dyn FnMut()| -> f64 {
+        let r = b.run(name, f);
+        println!("{}", r.line());
+        let median_s = r.median_s;
+        reports.push(r);
+        median_s
+    };
+    println!(
+        "micro bench: tiny={tiny} rayon_threads={}",
+        rayon::current_num_threads()
+    );
 
-    // --- METIS on a 100K graph ---------------------------------------------
+    // --- METIS partitioning --------------------------------------------------
+    let n_metis = if tiny { 20_000 } else { 100_000 };
     let mut rng = Rng::new(1);
-    let (g, _) = generators::planted_partition(100_000, 16, 12.0, 0.8, &mut rng);
-    let r = b.run("metis_partition 100K nodes k=64", || {
-        metis_partition(&g, 64, 1)
+    let (g, _) = generators::planted_partition(n_metis, 16, 12.0, 0.8, &mut rng);
+    let k = if tiny { 16 } else { 64 };
+    run(&mut reports, &format!("metis_partition {n_metis} nodes k={k}"), &mut || {
+        std::hint::black_box(metis_partition(&g, k, 1));
     });
-    println!("{}", r.line());
 
-    // --- history pull/push: 8K rows x 64 dims x 3 layers ---------------------
-    let ids: Vec<u32> = (0..8192u32).map(|i| (i * 7) % 100_000).collect();
-    let data = vec![1.0f32; 8192 * 64];
-    for mode in [PipelineMode::Serial, PipelineMode::Concurrent] {
-        let store = HistoryStore::new(100_000, 64, 3);
+    // --- history pull/push: serial vs concurrent vs sharded ------------------
+    // 100K-node store, 8K-row transfers x 64 dims x 3 layers (≥ the paper's
+    // halo sizes). "serial"/"concurrent" run the single-stripe store (the
+    // old engine); "sharded" adds row striping + rayon gather/scatter.
+    let ids: Vec<u32> = (0..PULL_ROWS as u32)
+        .map(|i| (i * 7) % HIST_N as u32)
+        .collect();
+    let data = vec![1.0f32; PULL_ROWS * HIST_H];
+    let configs: [(&str, PipelineMode, bool); 3] = [
+        ("serial", PipelineMode::Serial, false),
+        ("concurrent", PipelineMode::Concurrent, false),
+        ("sharded", PipelineMode::Concurrent, true),
+    ];
+    let mut hist_medians: Vec<(&str, f64, f64)> = Vec::new(); // (label, pull_s, push_s)
+    for (label, mode, sharded) in configs {
+        let store = if sharded {
+            ShardedHistoryStore::new(HIST_N, HIST_H, HIST_LAYERS)
+        } else {
+            ShardedHistoryStore::sequential(HIST_N, HIST_H, HIST_LAYERS)
+        };
         let mut pipe = HistoryPipeline::new(store, mode);
-        let r = b.run(&format!("history pull 8K rows x3 layers [{mode:?}]"), || {
-            pipe.request_pull(&ids);
-            let buf = pipe.wait_pull();
-            pipe.recycle(buf);
-        });
-        println!("{}", r.line());
-        let r = b.run(&format!("history push 8K rows [{mode:?}]"), || {
-            let mut buf = pipe.take_buffer(data.len());
-            buf.copy_from_slice(&data);
-            pipe.push(0, &ids, buf);
-            if mode == PipelineMode::Serial {
-                // concurrent applies in background; serial is inline
-            }
-        });
-        pipe.sync();
-        println!("{}", r.line());
+        let pull_s = run(
+            &mut reports,
+            &format!("history pull 8K rows x3 layers [{label}]"),
+            &mut || {
+                pipe.request_pull(&ids);
+                let buf = pipe.wait_pull();
+                pipe.recycle(buf);
+            },
+        );
+        // push throughput must include the background drain (sync), or the
+        // concurrent modes would only be timing the enqueue
+        let push_s = run(
+            &mut reports,
+            &format!("history push {PUSHES_PER_ITER}x8K rows + drain [{label}]"),
+            &mut || {
+                for _ in 0..PUSHES_PER_ITER {
+                    let mut buf = pipe.take_buffer(data.len());
+                    buf.copy_from_slice(&data);
+                    pipe.push(0, &ids, buf);
+                }
+                pipe.sync();
+            },
+        );
+        hist_medians.push((label, pull_s, push_s));
     }
 
-    // --- batch assembly on cora ---------------------------------------------
-    let mut ctx = Ctx::new()?;
-    let (ds, art) = ctx.pair("cora", "cora_gcn2_gas")?;
-    let part = metis_partition(&ds.graph, ds.profile.parts, 1);
-    let batch: Vec<u32> = (0..ds.n() as u32).filter(|&v| part[v as usize] == 0).collect();
-    let spec = art.spec.clone();
-    let r = b.run("batch assembly (cora part 0)", || {
-        BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train).unwrap()
-    });
-    println!("{}", r.line());
+    // --- the delta-probe cost on the push path -------------------------------
+    for probe in [true, false] {
+        let mut store = ShardedHistoryStore::sequential(HIST_N, HIST_H, 1);
+        store.set_delta_tracking(probe);
+        run(
+            &mut reports,
+            &format!("store push 8K rows (delta probe {})", if probe { "on" } else { "off" }),
+            &mut || store.push(0, &ids, &data),
+        );
+    }
 
-    // --- one PJRT step (exec only) ------------------------------------------
-    let plan = BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train)?;
-    let params = gas::model::ParamStore::init(&spec.params, 1)?;
-    let hist = vec![0f32; spec.hist_layers() * spec.nh * spec.hist_dim];
-    let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
-    let r = b.run("PJRT train step (cora_gcn2_gas)", || {
+    // --- batch assembly on a synthetic graph (no artifacts needed) -----------
+    let n_asm = if tiny { 20_000 } else { 100_000 };
+    let mut rng = Rng::new(2);
+    let (g_asm, labels) = generators::planted_partition(n_asm, 8, 12.0, 0.8, &mut rng);
+    let f = 32;
+    let x = gas::graph::features::class_features(&labels, 8, f, 1.0, &mut rng);
+    let profile = gas::graph::datasets::Profile {
+        name: "micro_asm".into(),
+        kind: "planted".into(),
+        n: n_asm,
+        f,
+        c: 8,
+        avg_deg: g_asm.avg_degree(),
+        multilabel: false,
+        train_frac: 1.0,
+        val_frac: 0.0,
+        homophily: 0.8,
+        feat_noise: 1.0,
+        parts: 64,
+        paper_n: n_asm,
+        seed: 2,
+    };
+    let ds_asm = gas::graph::datasets::Dataset {
+        profile,
+        graph: g_asm,
+        x,
+        labels,
+        y_multi: Vec::new(),
+        train_mask: vec![true; n_asm],
+        val_mask: vec![false; n_asm],
+        test_mask: vec![false; n_asm],
+    };
+    let part = metis_partition(&ds_asm.graph, 64, 1);
+    let batch: Vec<u32> = (0..n_asm as u32).filter(|&v| part[v as usize] == 0).collect();
+    let deg_sum: usize = batch.iter().map(|&v| ds_asm.graph.deg(v as usize)).sum();
+    let spec = synthetic_spec(f, batch.len(), deg_sum.max(1), deg_sum.max(1));
+    run(
+        &mut reports,
+        &format!("batch assembly ({} nodes, {} edges)", batch.len(), deg_sum),
+        &mut || {
+            std::hint::black_box(
+                BatchPlan::build_gas(&ds_asm, &spec, &batch, LabelSel::Train).unwrap(),
+            );
+        },
+    );
+
+    // --- artifact-dependent sections (need `make artifacts` + real PJRT) -----
+    let manifest_dir = gas::runtime::Manifest::default_dir();
+    if manifest_dir.join("manifest.json").exists() {
+        let mut ctx = gas::config::Ctx::new()?;
+        let (ds, art) = ctx.pair("cora", "cora_gcn2_gas")?;
+        let part = metis_partition(&ds.graph, ds.profile.parts, 1);
+        let batch: Vec<u32> = (0..ds.n() as u32).filter(|&v| part[v as usize] == 0).collect();
+        let spec = art.spec.clone();
+        run(&mut reports, "batch assembly (cora part 0)", &mut || {
+            std::hint::black_box(
+                BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train).unwrap(),
+            );
+        });
+        let plan = BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train)?;
+        let params = gas::model::ParamStore::init(&spec.params, 1)?;
+        let hist = vec![0f32; spec.hist_layers() * spec.nh * spec.hist_dim];
+        let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
         let inputs = gas::runtime::StepInputs {
             x: &plan.st.x,
             edge_src: &plan.edge_src,
@@ -77,8 +207,48 @@ fn main() -> anyhow::Result<()> {
             noise: &noise,
             reg_lambda: 0.0,
         };
-        art.run(&params.tensors, &inputs).unwrap()
-    });
-    println!("{}", r.line());
+        match art.run(&params.tensors, &inputs) {
+            Ok(_) => {
+                run(&mut reports, "PJRT train step (cora_gcn2_gas)", &mut || {
+                    std::hint::black_box(art.run(&params.tensors, &inputs).unwrap());
+                });
+            }
+            Err(e) => eprintln!("skipping PJRT step bench (runtime unavailable): {e:#}"),
+        }
+    } else {
+        eprintln!("skipping artifact sections: {} not built", manifest_dir.display());
+    }
+
+    // --- summary + JSON -------------------------------------------------------
+    let hist = |label: &str| -> (f64, f64) {
+        let &(_, pull_s, push_s) = hist_medians
+            .iter()
+            .find(|(l, ..)| *l == label)
+            .expect("history config benched");
+        (pull_s, push_s)
+    };
+    let (serial_pull, serial_push) = hist("serial");
+    let (sharded_pull, sharded_push) = hist("sharded");
+    let pull_speedup = serial_pull / sharded_pull;
+    let push_speedup = serial_push / sharded_push;
+    println!(
+        "\nsharded concurrent vs serial: pull {pull_speedup:.2}x, push {push_speedup:.2}x \
+         (target ≥ 2x at 4+ threads; threads={})",
+        rayon::current_num_threads()
+    );
+    let json_path =
+        std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".to_string());
+    write_bench_json(
+        &json_path,
+        "micro",
+        &reports,
+        &[
+            ("tiny", if tiny { 1.0 } else { 0.0 }),
+            ("rayon_threads", rayon::current_num_threads() as f64),
+            ("pull_speedup_sharded_vs_serial", pull_speedup),
+            ("push_speedup_sharded_vs_serial", push_speedup),
+        ],
+    )?;
+    println!("wrote {json_path}");
     Ok(())
 }

@@ -117,7 +117,7 @@ fn main() -> anyhow::Result<()> {
         // --- full-batch where compiled (flickr, arxiv) --------------------
         for model in ["gcn2", "gcnii8", "pna3"] {
             let name = format!("{ds_name}_{model}_full");
-            if ctx.manifest.artifacts.get(&name).is_none() {
+            if !ctx.manifest.artifacts.contains_key(&name) {
                 continue;
             }
             let (ds, art) = ctx.pair(ds_name, &name)?;

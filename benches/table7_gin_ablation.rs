@@ -26,6 +26,7 @@ fn cfg(metis: bool, reg: bool, epochs: usize) -> TrainConfig {
         shuffle: true,
         label_sel: LabelSel::Train,
         parts: None,
+        history_shards: None,
     }
 }
 

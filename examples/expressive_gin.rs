@@ -26,6 +26,7 @@ fn run(ctx: &mut Ctx, metis: bool, reg: bool, epochs: usize) -> anyhow::Result<(
         shuffle: true,
         label_sel: LabelSel::Train,
         parts: None,
+        history_shards: None,
     };
     let mut t = Trainer::new(ds, art, cfg)?;
     let r = t.train()?;

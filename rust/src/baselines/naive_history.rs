@@ -23,6 +23,7 @@ pub fn naive_config(epochs: usize, lr: f32, seed: u64) -> TrainConfig {
         shuffle: true,
         label_sel: LabelSel::Train,
         parts: None,
+        history_shards: None,
     }
 }
 
@@ -42,6 +43,7 @@ pub fn gas_config(epochs: usize, lr: f32, reg_lambda: f32, seed: u64) -> TrainCo
         shuffle: true,
         label_sel: LabelSel::Train,
         parts: None,
+        history_shards: None,
     }
 }
 

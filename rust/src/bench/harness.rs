@@ -1,7 +1,10 @@
-//! Minimal benchmarking harness with warmup and summary stats.
+//! Minimal benchmarking harness with warmup, summary stats and JSON
+//! emission (consumed by the CI bench-smoke job).
 
+use crate::util::json::Json;
 use crate::util::stats;
 use crate::util::timer::Timer;
+use anyhow::Context;
 
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -26,6 +29,41 @@ impl BenchReport {
             self.iters
         )
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ms", Json::num(self.mean_s * 1e3)),
+            ("std_ms", Json::num(self.std_s * 1e3)),
+            ("median_ms", Json::num(self.median_s * 1e3)),
+            ("min_ms", Json::num(self.min_s * 1e3)),
+        ])
+    }
+}
+
+/// Write a bench run as JSON (`{bench, results: [...], metrics: {...}}`) —
+/// the machine-readable record CI uploads so pull/push perf regressions
+/// fail loudly instead of scrolling by.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    reports: &[BenchReport],
+    metrics: &[(&str, f64)],
+) -> anyhow::Result<()> {
+    let root = Json::obj(vec![
+        ("bench", Json::str(bench)),
+        (
+            "results",
+            Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+        ),
+        (
+            "metrics",
+            Json::obj(metrics.iter().map(|&(k, v)| (k, Json::num(v))).collect()),
+        ),
+    ]);
+    std::fs::write(path, root.to_string()).with_context(|| format!("writing {path}"))?;
+    Ok(())
 }
 
 /// Runs closures with warmup + N timed iterations.
@@ -118,5 +156,28 @@ mod tests {
             samples: vec![0.001],
         };
         assert!(r.line().contains("1.0000 ms"));
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let r = BenchReport {
+            name: "pull".into(),
+            iters: 3,
+            mean_s: 0.002,
+            std_s: 0.0001,
+            median_s: 0.002,
+            min_s: 0.0019,
+            samples: vec![0.002; 3],
+        };
+        let path = std::env::temp_dir().join("gas_bench_json_test.json");
+        let path = path.to_str().unwrap();
+        write_bench_json(path, "micro", &[r], &[("pull_speedup", 2.5)]).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "micro");
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "pull");
+        let m = j.get("metrics").unwrap().get("pull_speedup").unwrap();
+        assert!((m.as_f64().unwrap() - 2.5).abs() < 1e-12);
+        std::fs::remove_file(path).ok();
     }
 }

@@ -3,7 +3,7 @@
 
 pub mod harness;
 
-pub use harness::{print_table, BenchReport, Bencher};
+pub use harness::{print_table, write_bench_json, BenchReport, Bencher};
 
 /// Epoch budget for experiment benches: `GAS_EPOCHS` env or the default.
 pub fn epochs_or(default: usize) -> usize {

@@ -1,17 +1,24 @@
 //! Historical embeddings — the paper's core mechanism.
 //!
-//! [`store::HistoryStore`] holds per-layer `[N, H]` embedding matrices in
-//! host memory ("RAM rather than GPU memory", §2) with staleness tracking
-//! and approximation-error probes (Lemma 1 / Theorem 2 measurements).
+//! [`store::HistoryStore`] is the single-threaded reference store holding
+//! per-layer `[N, H]` embedding matrices in host memory ("RAM rather than
+//! GPU memory", §2) with staleness tracking and approximation-error probes
+//! (Lemma 1 / Theorem 2 measurements).
+//!
+//! [`store::ShardedHistoryStore`] is the production store: rows striped
+//! over `S` shards behind per-shard locks, with rayon-parallel gather and
+//! scatter over row chunks — the history-access bandwidth that dominates
+//! GAS-style training (Duan et al., 2022) scales with cores instead of
+//! serializing on one lock.
 //!
 //! [`pipeline::HistoryPipeline`] is the concurrent push/pull engine of
-//! §5 "Fast Historical Embeddings": a worker thread + reusable staging
-//! buffers (the pinned-memory analog) overlap history I/O with executable
-//! compute; `Serial` mode reproduces the naive blocking pattern for the
-//! Fig. 4 comparison.
+//! §5 "Fast Historical Embeddings": a FIFO push applier plus a pool of
+//! pull workers with reusable staging buffers (the pinned-memory analog)
+//! overlap history I/O with executable compute; `Serial` mode reproduces
+//! the naive blocking pattern for the Fig. 4 comparison.
 
 pub mod pipeline;
 pub mod store;
 
-pub use pipeline::{HistoryPipeline, PipelineMode};
-pub use store::HistoryStore;
+pub use pipeline::{HistoryPipeline, PipelineMode, PullBuffer};
+pub use store::{HistoryStore, ShardedHistoryStore};

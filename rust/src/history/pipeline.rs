@@ -2,10 +2,22 @@
 //!
 //! GPU original: a worker thread gathers history rows into *pinned* CPU
 //! buffers, CUDA streams overlap H2D copies with kernel execution. CPU-PJRT
-//! adaptation (DESIGN.md §Hardware-Adaptation): a dedicated worker thread
-//! gathers rows from the [`HistoryStore`] into *reusable staging buffers*
+//! adaptation (DESIGN.md §Hardware-Adaptation): a worker *pool* gathers
+//! rows from the [`ShardedHistoryStore`] into reusable staging buffers
 //! (the pinned-pool analog) while the PJRT executable runs the previous
-//! batch; write-backs are applied by the same worker in the background.
+//! batch; write-backs drain in the background.
+//!
+//! Pool layout (two dedicated workers, each fanning out over rayon):
+//!
+//! * a **push applier** consumes write-backs (and clock ticks) in FIFO
+//!   order, so repeated pushes to the same rows land last-write-wins
+//!   exactly as the single-worker engine did, and the staleness clock
+//!   never advances in the middle of a scatter — rayon-parallel scatter
+//!   inside each push supplies the multi-core scaling;
+//! * a **pull stager** services gathers — the pull for batch *t+1*
+//!   proceeds while the pushes of batch *t* drain. (One stager suffices:
+//!   the pipeline allows a single pull in flight; widen this to a pool if
+//!   a WaveGAS-style multi-pull schedule ever lifts that invariant.)
 //!
 //! `Serial` mode performs both operations inline — the baseline whose I/O
 //! overhead Fig. 4 quantifies.
@@ -13,12 +25,13 @@
 //! Ordering semantics match the paper: pulls see the most recent *applied*
 //! push. A prefetched pull for batch t+1 may race ahead of the push of
 //! batch t by design — that is exactly the one-step staleness historical
-//! embeddings already tolerate (Theorem 2). `sync()` drains everything at
-//! epoch boundaries so evaluation reads fully-applied histories.
+//! embeddings already tolerate (Theorem 2). `sync()` drains every queued
+//! job across all shards; the trainer calls it at epoch boundaries so
+//! evaluation reads fully-applied histories.
 
-use crate::history::store::HistoryStore;
+use crate::history::store::ShardedHistoryStore;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,49 +40,112 @@ pub enum PipelineMode {
     Concurrent,
 }
 
-/// A staged pull result: per requested layer, the gathered halo rows.
+/// A staged pull result: the gathered halo rows for every history layer in
+/// one flat buffer, laid out `[num_layers][num_rows * h]` (one allocation,
+/// recycled through the staging pool).
 pub struct PullBuffer {
-    /// flat [num_layers][ids.len() * h]
-    pub data: Vec<Vec<f32>>,
+    pub data: Vec<f32>,
     pub num_rows: usize,
+    pub num_layers: usize,
+    pub h: usize,
+}
+
+impl PullBuffer {
+    /// The gathered rows of history layer `l`.
+    pub fn layer(&self, l: usize) -> &[f32] {
+        let span = self.num_rows * self.h;
+        &self.data[l * span..(l + 1) * span]
+    }
 }
 
 enum Job {
     Pull { ids: Vec<u32>, reply: Sender<PullBuffer> },
     Push { layer: usize, ids: Vec<u32>, data: Vec<f32> },
-    Sync { reply: Sender<()> },
-    Stop,
+    /// advance the staleness clock, ordered FIFO with the pushes around it
+    Tick,
 }
 
-/// Shared-store history engine with optional worker-thread concurrency.
+/// Count of queued-or-running jobs; `sync` blocks until it reaches zero.
+#[derive(Default)]
+struct Inflight {
+    n: Mutex<usize>,
+    idle: Condvar,
+}
+
+impl Inflight {
+    fn begin(&self) {
+        *self.n.lock().unwrap() += 1;
+    }
+
+    fn end(&self) {
+        let mut g = self.n.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    fn wait_idle(&self) {
+        let mut g = self.n.lock().unwrap();
+        while *g > 0 {
+            g = self.idle.wait(g).unwrap();
+        }
+    }
+}
+
+/// Shared-store history engine with an optional background worker pool.
 pub struct HistoryPipeline {
-    store: Arc<RwLock<HistoryStore>>,
+    store: Arc<ShardedHistoryStore>,
     mode: PipelineMode,
-    tx: Option<Sender<Job>>,
-    worker: Option<JoinHandle<()>>,
+    push_tx: Option<Sender<Job>>,
+    pull_tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
     pending_pull: Option<Receiver<PullBuffer>>,
     /// staging-buffer pool (pinned-memory analog): recycled Vec<f32>
     pool: Arc<Mutex<Vec<Vec<f32>>>>,
+    inflight: Arc<Inflight>,
 }
 
 impl HistoryPipeline {
-    pub fn new(store: HistoryStore, mode: PipelineMode) -> HistoryPipeline {
-        let store = Arc::new(RwLock::new(store));
+    pub fn new(store: ShardedHistoryStore, mode: PipelineMode) -> HistoryPipeline {
+        let store = Arc::new(store);
         let pool = Arc::new(Mutex::new(Vec::new()));
-        let (tx, worker) = match mode {
+        let inflight = Arc::new(Inflight::default());
+        let mut workers = Vec::new();
+        let (push_tx, pull_tx) = match mode {
             PipelineMode::Serial => (None, None),
             PipelineMode::Concurrent => {
-                let (tx, rx) = channel::<Job>();
-                let st = Arc::clone(&store);
-                let pl = Arc::clone(&pool);
-                let handle = std::thread::Builder::new()
-                    .name("gas-history".into())
-                    .spawn(move || worker_loop(rx, st, pl))
-                    .expect("spawn history worker");
-                (Some(tx), Some(handle))
+                // dedicated FIFO push applier
+                let (ptx, prx) = channel::<Job>();
+                let (st, pl, inf) = (Arc::clone(&store), Arc::clone(&pool), Arc::clone(&inflight));
+                workers.push(
+                    std::thread::Builder::new()
+                        .name("gas-history-push".into())
+                        .spawn(move || push_worker(prx, st, pl, inf))
+                        .expect("spawn history push worker"),
+                );
+                // dedicated pull stager
+                let (gtx, grx) = channel::<Job>();
+                let (st, pl, inf) = (Arc::clone(&store), Arc::clone(&pool), Arc::clone(&inflight));
+                workers.push(
+                    std::thread::Builder::new()
+                        .name("gas-history-pull".into())
+                        .spawn(move || pull_worker(grx, st, pl, inf))
+                        .expect("spawn history pull worker"),
+                );
+                (Some(ptx), Some(gtx))
             }
         };
-        HistoryPipeline { store, mode, tx, worker, pending_pull: None, pool }
+        HistoryPipeline {
+            store,
+            mode,
+            push_tx,
+            pull_tx,
+            workers,
+            pending_pull: None,
+            pool,
+            inflight,
+        }
     }
 
     pub fn mode(&self) -> PipelineMode {
@@ -80,52 +156,49 @@ impl HistoryPipeline {
     /// returns immediately; `wait_pull` blocks until staged.
     pub fn request_pull(&mut self, ids: &[u32]) {
         assert!(self.pending_pull.is_none(), "overlapping pulls");
+        let (tx, rx) = channel();
         match self.mode {
             PipelineMode::Serial => {
-                let buf = gather(&self.store.read().unwrap(), ids, &self.pool);
-                let (tx, rx) = channel();
+                let buf = gather(&self.store, ids, &self.pool);
                 tx.send(buf).unwrap();
-                self.pending_pull = Some(rx);
             }
             PipelineMode::Concurrent => {
-                let (reply, rx) = channel();
-                self.tx
+                self.inflight.begin();
+                self.pull_tx
                     .as_ref()
                     .unwrap()
-                    .send(Job::Pull { ids: ids.to_vec(), reply })
-                    .expect("history worker alive");
-                self.pending_pull = Some(rx);
+                    .send(Job::Pull { ids: ids.to_vec(), reply: tx })
+                    .expect("history pull worker alive");
             }
         }
+        self.pending_pull = Some(rx);
     }
 
     /// Block until the staged pull is ready.
     pub fn wait_pull(&mut self) -> PullBuffer {
         let rx = self.pending_pull.take().expect("no pull in flight");
-        rx.recv().expect("history worker alive")
+        rx.recv().expect("history pull worker alive")
     }
 
     /// Return a staging buffer to the pool (models pinned-buffer reuse).
     pub fn recycle(&self, buf: PullBuffer) {
-        let mut pool = self.pool.lock().unwrap();
-        for v in buf.data {
-            pool.push(v);
-        }
+        self.pool.lock().unwrap().push(buf.data);
     }
 
-    /// Push layer rows. Concurrent mode applies in the background.
+    /// Push layer rows. Concurrent mode applies in the background (FIFO).
     pub fn push(&mut self, layer: usize, ids: &[u32], data: Vec<f32>) {
         match self.mode {
             PipelineMode::Serial => {
-                self.store.write().unwrap().push(layer, ids, &data);
+                self.store.push(layer, ids, &data);
                 self.pool.lock().unwrap().push(data);
             }
             PipelineMode::Concurrent => {
-                self.tx
+                self.inflight.begin();
+                self.push_tx
                     .as_ref()
                     .unwrap()
                     .send(Job::Push { layer, ids: ids.to_vec(), data })
-                    .expect("history worker alive");
+                    .expect("history push worker alive");
             }
         }
     }
@@ -145,79 +218,104 @@ impl HistoryPipeline {
 
     /// Drain all queued work (epoch boundary / before evaluation).
     pub fn sync(&mut self) {
-        if let Some(tx) = &self.tx {
-            let (reply, rx) = channel();
-            tx.send(Job::Sync { reply }).expect("history worker alive");
-            rx.recv().expect("history worker alive");
+        if self.mode == PipelineMode::Concurrent {
+            self.inflight.wait_idle();
         }
     }
 
-    /// Advance the staleness clock.
+    /// Advance the staleness clock. In `Concurrent` mode the tick is
+    /// queued FIFO behind the pushes of the step it closes, so queued
+    /// write-backs are stamped with the step they were produced in.
     pub fn tick(&mut self) {
-        self.store.write().unwrap().tick();
+        match self.mode {
+            PipelineMode::Serial => self.store.tick(),
+            PipelineMode::Concurrent => {
+                self.inflight.begin();
+                self.push_tx
+                    .as_ref()
+                    .unwrap()
+                    .send(Job::Tick)
+                    .expect("history push worker alive");
+            }
+        }
     }
 
     /// Read access to the store (synced callers only).
-    pub fn with_store<T>(&self, f: impl FnOnce(&HistoryStore) -> T) -> T {
-        f(&self.store.read().unwrap())
-    }
-
-    pub fn with_store_mut<T>(&self, f: impl FnOnce(&mut HistoryStore) -> T) -> T {
-        f(&mut self.store.write().unwrap())
+    pub fn with_store<T>(&self, f: impl FnOnce(&ShardedHistoryStore) -> T) -> T {
+        f(&self.store)
     }
 }
 
 impl Drop for HistoryPipeline {
     fn drop(&mut self) {
-        if let Some(tx) = self.tx.take() {
-            let _ = tx.send(Job::Stop);
-        }
-        if let Some(h) = self.worker.take() {
+        // closing the channels ends the worker loops
+        self.push_tx.take();
+        self.pull_tx.take();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
 fn gather(
-    store: &HistoryStore,
+    store: &ShardedHistoryStore,
     ids: &[u32],
     pool: &Arc<Mutex<Vec<Vec<f32>>>>,
 ) -> PullBuffer {
-    let h = store.h;
-    let mut data = Vec::with_capacity(store.num_layers);
-    for l in 0..store.num_layers {
-        let mut buf = {
-            let mut p = pool.lock().unwrap();
-            p.pop().unwrap_or_default()
-        };
-        buf.clear();
-        buf.resize(ids.len() * h, 0.0);
-        store.pull(l, ids, &mut buf);
-        data.push(buf);
-    }
-    PullBuffer { data, num_rows: ids.len() }
+    let h = store.h();
+    let num_layers = store.num_layers();
+    let mut buf = {
+        let mut p = pool.lock().unwrap();
+        p.pop().unwrap_or_default()
+    };
+    buf.clear();
+    buf.resize(num_layers * ids.len() * h, 0.0);
+    store.pull_all(ids, &mut buf);
+    PullBuffer { data: buf, num_rows: ids.len(), num_layers, h }
 }
 
-fn worker_loop(
+/// Applies write-backs and clock ticks strictly in arrival order.
+fn push_worker(
     rx: Receiver<Job>,
-    store: Arc<RwLock<HistoryStore>>,
+    store: Arc<ShardedHistoryStore>,
     pool: Arc<Mutex<Vec<Vec<f32>>>>,
+    inflight: Arc<Inflight>,
+) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Push { layer, ids, data } => {
+                store.push(layer, &ids, &data);
+                pool.lock().unwrap().push(data);
+            }
+            Job::Tick => store.tick(),
+            Job::Pull { ids, reply } => {
+                // not routed here in practice, but harmless to serve
+                let _ = reply.send(gather(&store, &ids, &pool));
+            }
+        }
+        inflight.end();
+    }
+}
+
+/// Stages halo gathers for the (single) in-flight pull request.
+fn pull_worker(
+    rx: Receiver<Job>,
+    store: Arc<ShardedHistoryStore>,
+    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+    inflight: Arc<Inflight>,
 ) {
     while let Ok(job) = rx.recv() {
         match job {
             Job::Pull { ids, reply } => {
-                let buf = gather(&store.read().unwrap(), &ids, &pool);
-                let _ = reply.send(buf);
+                let _ = reply.send(gather(&store, &ids, &pool));
             }
             Job::Push { layer, ids, data } => {
-                store.write().unwrap().push(layer, &ids, &data);
+                store.push(layer, &ids, &data);
                 pool.lock().unwrap().push(data);
             }
-            Job::Sync { reply } => {
-                let _ = reply.send(());
-            }
-            Job::Stop => break,
+            Job::Tick => store.tick(),
         }
+        inflight.end();
     }
 }
 
@@ -225,8 +323,8 @@ fn worker_loop(
 mod tests {
     use super::*;
 
-    fn roundtrip(mode: PipelineMode) {
-        let store = HistoryStore::new(16, 4, 2);
+    fn roundtrip(mode: PipelineMode, shards: usize) {
+        let store = ShardedHistoryStore::with_shards(16, 4, 2, shards);
         let mut p = HistoryPipeline::new(store, mode);
         let ids = [2u32, 5, 9];
         let data: Vec<f32> = (0..12).map(|x| x as f32 + 1.0).collect();
@@ -236,24 +334,30 @@ mod tests {
         p.request_pull(&ids);
         let buf = p.wait_pull();
         assert_eq!(buf.num_rows, 3);
-        assert_eq!(buf.data[0], data);
-        assert_eq!(buf.data[1], data.iter().map(|v| v * 10.0).collect::<Vec<_>>());
+        assert_eq!(buf.num_layers, 2);
+        assert_eq!(buf.layer(0), &data[..]);
+        assert_eq!(
+            buf.layer(1),
+            data.iter().map(|v| v * 10.0).collect::<Vec<_>>()
+        );
         p.recycle(buf);
     }
 
     #[test]
     fn serial_roundtrip() {
-        roundtrip(PipelineMode::Serial);
+        roundtrip(PipelineMode::Serial, 1);
+        roundtrip(PipelineMode::Serial, 4);
     }
 
     #[test]
     fn concurrent_roundtrip() {
-        roundtrip(PipelineMode::Concurrent);
+        roundtrip(PipelineMode::Concurrent, 1);
+        roundtrip(PipelineMode::Concurrent, 4);
     }
 
     #[test]
     fn concurrent_overlap_does_not_lose_pushes() {
-        let store = HistoryStore::new(1000, 8, 1);
+        let store = ShardedHistoryStore::with_shards(1000, 8, 1, 4);
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
         for step in 0..50u32 {
             let ids: Vec<u32> = (0..100).map(|i| (step * 7 + i) % 1000).collect();
@@ -262,15 +366,58 @@ mod tests {
         }
         p.sync();
         p.with_store(|s| {
-            // last write to row (49*7 + 0) % 1000 was value 49
+            // last write to row (49*7 + 0) % 1000 was value 49: the FIFO
+            // push applier must preserve last-write-wins across steps
             let row = s.row(0, ((49 * 7) % 1000) as usize);
             assert!(row.iter().all(|&v| v == 49.0));
         });
     }
 
     #[test]
+    fn pulls_are_serviced_while_pushes_drain() {
+        // queue a burst of pushes, then interleave pulls — the pull worker
+        // pool must answer without waiting for the push queue to empty,
+        // and sync() must still leave the final state fully applied.
+        let store = ShardedHistoryStore::with_shards(5000, 16, 2, 4);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
+        let ids: Vec<u32> = (0..2048u32).collect();
+        for step in 0..8 {
+            for l in 0..2 {
+                let data = vec![(step * 2 + l) as f32; ids.len() * 16];
+                p.push(l, &ids, data);
+            }
+            p.request_pull(&ids);
+            let buf = p.wait_pull();
+            assert_eq!(buf.num_rows, ids.len());
+            p.recycle(buf);
+        }
+        p.sync();
+        p.with_store(|s| {
+            assert!(s.row(0, 100).iter().all(|&v| v == 14.0));
+            assert!(s.row(1, 100).iter().all(|&v| v == 15.0));
+        });
+    }
+
+    #[test]
+    fn ticks_are_fifo_with_pushes() {
+        // a push enqueued before tick() must be stamped with the step it
+        // was produced in, even though both apply in the background
+        let store = ShardedHistoryStore::with_shards(64, 2, 1, 4);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
+        let ids: Vec<u32> = (0..64).collect();
+        p.push(0, &ids, vec![1.0; 64 * 2]);
+        p.tick(); // closes the step of the push above
+        p.push(0, &[3], vec![2.0; 2]);
+        p.sync();
+        p.with_store(|s| {
+            assert_eq!(s.staleness(0, &[5]), 1.0, "pre-tick push aged one step");
+            assert_eq!(s.staleness(0, &[3]), 0.0, "post-tick push is fresh");
+        });
+    }
+
+    #[test]
     fn buffer_pool_recycles() {
-        let store = HistoryStore::new(8, 2, 1);
+        let store = ShardedHistoryStore::with_shards(8, 2, 1, 2);
         let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
         p.request_pull(&[0, 1]);
         let buf = p.wait_pull();
@@ -282,7 +429,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "overlapping pulls")]
     fn overlapping_pulls_rejected() {
-        let store = HistoryStore::new(8, 2, 1);
+        let store = ShardedHistoryStore::sequential(8, 2, 1);
         let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
         p.request_pull(&[0]);
         p.request_pull(&[1]);

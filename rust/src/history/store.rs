@@ -1,4 +1,18 @@
-//! Host-memory history store: per-layer `[N, H]` matrices + staleness.
+//! Host-memory history stores: per-layer `[N, H]` matrices + staleness.
+//!
+//! Two implementations share the same semantics:
+//!
+//! * [`HistoryStore`] — the single-threaded reference store (one contiguous
+//!   matrix per layer, exclusive access via `&mut`).
+//! * [`ShardedHistoryStore`] — the production store: rows are striped over
+//!   `S` shards (`shard = id % S`, `local = id / S`), each behind its own
+//!   `RwLock`, and `pull`/`push` gather/scatter rayon-parallel over row
+//!   chunks. Concurrent pulls share read locks; concurrent pushes touch
+//!   disjoint shards without contention. Both stores produce bit-identical
+//!   embeddings for the same push sequence (tested below).
+
+use rayon::prelude::*;
+use std::sync::{RwLock, RwLockReadGuard};
 
 /// Per-layer historical embeddings for every node in the graph.
 ///
@@ -16,6 +30,8 @@ pub struct HistoryStore {
     /// running sum/count of ||h̄_new - h̄_old||_2 per layer (staleness probe)
     delta_sum: Vec<f64>,
     delta_cnt: Vec<u64>,
+    /// when false, `push` skips the O(h) delta probe entirely
+    track_deltas: bool,
 }
 
 impl HistoryStore {
@@ -29,7 +45,14 @@ impl HistoryStore {
             step: 0,
             delta_sum: vec![0.0; num_layers],
             delta_cnt: vec![0; num_layers],
+            track_deltas: true,
         }
+    }
+
+    /// Toggle the per-push delta probe. Disabling it removes the O(h)
+    /// compare from the push hot path (scatter becomes a pure memcpy).
+    pub fn set_delta_tracking(&mut self, on: bool) {
+        self.track_deltas = on;
     }
 
     /// Bytes of host memory held by the embedding matrices.
@@ -53,27 +76,36 @@ impl HistoryStore {
     }
 
     /// Scatter rows: `data` is `[ids.len(), h]`, written into layer `l`.
-    /// Also updates the staleness probe (mean L2 delta vs previous value).
+    /// When delta tracking is on, also updates the staleness probe (mean
+    /// L2 delta vs previous value); when off, the old values are never read.
     pub fn push(&mut self, l: usize, ids: &[u32], data: &[f32]) {
         let h = self.h;
         debug_assert!(data.len() >= ids.len() * h);
         let dst = &mut self.layers[l];
-        let mut dsum = 0f64;
-        for (i, &id) in ids.iter().enumerate() {
-            let d = id as usize * h;
-            let row = &data[i * h..(i + 1) * h];
-            let old = &dst[d..d + h];
-            let mut diff = 0f64;
-            for j in 0..h {
-                let e = (row[j] - old[j]) as f64;
-                diff += e * e;
+        if self.track_deltas {
+            let mut dsum = 0f64;
+            for (i, &id) in ids.iter().enumerate() {
+                let d = id as usize * h;
+                let row = &data[i * h..(i + 1) * h];
+                let old = &dst[d..d + h];
+                let mut diff = 0f64;
+                for j in 0..h {
+                    let e = (row[j] - old[j]) as f64;
+                    diff += e * e;
+                }
+                dsum += diff.sqrt();
+                dst[d..d + h].copy_from_slice(row);
+                self.last_push[l][id as usize] = self.step;
             }
-            dsum += diff.sqrt();
-            dst[d..d + h].copy_from_slice(row);
-            self.last_push[l][id as usize] = self.step;
+            self.delta_sum[l] += dsum;
+            self.delta_cnt[l] += ids.len() as u64;
+        } else {
+            for (i, &id) in ids.iter().enumerate() {
+                let d = id as usize * h;
+                dst[d..d + h].copy_from_slice(&data[i * h..(i + 1) * h]);
+                self.last_push[l][id as usize] = self.step;
+            }
         }
-        self.delta_sum[l] += dsum;
-        self.delta_cnt[l] += ids.len() as u64;
     }
 
     /// Direct read of one row (evaluation from last-layer histories).
@@ -109,9 +141,314 @@ impl HistoryStore {
     }
 }
 
+// ---------------------------------------------------------------------------
+// sharded store
+// ---------------------------------------------------------------------------
+
+/// Rows of one stripe: the same fields as [`HistoryStore`], in local
+/// (striped) numbering.
+struct Shard {
+    rows: usize,
+    layers: Vec<Vec<f32>>,
+    last_push: Vec<Vec<u64>>,
+    step: u64,
+    delta_sum: Vec<f64>,
+    delta_cnt: Vec<u64>,
+}
+
+impl Shard {
+    fn new(rows: usize, h: usize, num_layers: usize) -> Shard {
+        Shard {
+            rows,
+            layers: (0..num_layers).map(|_| vec![0f32; rows * h]).collect(),
+            last_push: (0..num_layers).map(|_| vec![0u64; rows]).collect(),
+            step: 0,
+            delta_sum: vec![0.0; num_layers],
+            delta_cnt: vec![0; num_layers],
+        }
+    }
+
+    #[inline]
+    fn row(&self, l: usize, local: usize, h: usize) -> &[f32] {
+        &self.layers[l][local * h..(local + 1) * h]
+    }
+
+    /// Scatter the rows of `ids`/`data` that stripe onto this shard.
+    fn scatter(
+        &mut self,
+        l: usize,
+        shard_idx: usize,
+        num_shards: usize,
+        ids: &[u32],
+        data: &[f32],
+        h: usize,
+        track_deltas: bool,
+    ) {
+        let dst = &mut self.layers[l];
+        let mut dsum = 0f64;
+        let mut cnt = 0u64;
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            if id % num_shards != shard_idx {
+                continue;
+            }
+            let local = id / num_shards;
+            debug_assert!(local < self.rows);
+            let d = local * h;
+            let row = &data[i * h..(i + 1) * h];
+            if track_deltas {
+                let old = &dst[d..d + h];
+                let mut diff = 0f64;
+                for j in 0..h {
+                    let e = (row[j] - old[j]) as f64;
+                    diff += e * e;
+                }
+                dsum += diff.sqrt();
+                cnt += 1;
+            }
+            dst[d..d + h].copy_from_slice(row);
+            self.last_push[l][local] = self.step;
+        }
+        if track_deltas {
+            self.delta_sum[l] += dsum;
+            self.delta_cnt[l] += cnt;
+        }
+    }
+}
+
+/// Row count below which gather/scatter stays single-threaded (rayon
+/// task overhead dominates tiny transfers).
+const PAR_MIN_ROWS: usize = 1024;
+/// Rows per parallel gather task.
+const GATHER_CHUNK_ROWS: usize = 512;
+
+/// The production history store: `S` row-striped shards behind per-shard
+/// locks, with rayon-parallel gather/scatter. All methods take `&self` —
+/// the shard locks provide interior mutability, so the concurrent pipeline
+/// shares it via a plain `Arc` (pulls on read locks, pushes on the write
+/// lock of each touched shard only).
+pub struct ShardedHistoryStore {
+    n: usize,
+    h: usize,
+    num_layers: usize,
+    num_shards: usize,
+    parallel: bool,
+    track_deltas: bool,
+    shards: Vec<RwLock<Shard>>,
+}
+
+impl ShardedHistoryStore {
+    /// Default sharding: one stripe per available core, capped at 8.
+    pub fn new(n: usize, h: usize, num_layers: usize) -> ShardedHistoryStore {
+        Self::with_shards(n, h, num_layers, default_shards())
+    }
+
+    pub fn with_shards(
+        n: usize,
+        h: usize,
+        num_layers: usize,
+        num_shards: usize,
+    ) -> ShardedHistoryStore {
+        assert!(num_shards >= 1, "need at least one shard");
+        let shards = (0..num_shards)
+            .map(|s| {
+                // stripe s holds ids {s, s+S, s+2S, ...} below n
+                let rows = if n > s { (n - s).div_ceil(num_shards) } else { 0 };
+                RwLock::new(Shard::new(rows, h, num_layers))
+            })
+            .collect();
+        ShardedHistoryStore {
+            n,
+            h,
+            num_layers,
+            num_shards,
+            parallel: true,
+            track_deltas: true,
+            shards,
+        }
+    }
+
+    /// Single shard, no rayon: the serial baseline the Fig. 4 / micro
+    /// benches compare against (identical memory behaviour to the old
+    /// unsharded engine).
+    pub fn sequential(n: usize, h: usize, num_layers: usize) -> ShardedHistoryStore {
+        let mut s = Self::with_shards(n, h, num_layers, 1);
+        s.parallel = false;
+        s
+    }
+
+    pub fn set_delta_tracking(&mut self, on: bool) {
+        self.track_deltas = on;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// Bytes of host memory held by the embedding matrices.
+    pub fn bytes(&self) -> usize {
+        self.num_layers * self.n * self.h * 4
+    }
+
+    /// Advance the staleness clock on every shard, atomically: all write
+    /// locks are held (acquired in shard order, the same order every other
+    /// path uses) before any step moves, so a concurrent push or staleness
+    /// read never observes a half-ticked clock.
+    pub fn tick(&self) {
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        for g in guards.iter_mut() {
+            g.step += 1;
+        }
+    }
+
+    /// Gather rows `ids` of layer `l` into `out` (len >= ids.len() * h).
+    pub fn pull(&self, l: usize, ids: &[u32], out: &mut [f32]) {
+        let guards = self.read_all();
+        self.gather_layer(&guards, l, ids, &mut out[..ids.len() * self.h]);
+    }
+
+    /// Gather rows `ids` for *all* layers into the flat buffer `out`,
+    /// laid out `[num_layers][ids.len() * h]` — the pipeline's pull path
+    /// (one buffer, one pass over the shard locks).
+    pub fn pull_all(&self, ids: &[u32], out: &mut [f32]) {
+        let span = ids.len() * self.h;
+        debug_assert!(out.len() >= self.num_layers * span);
+        let guards = self.read_all();
+        for l in 0..self.num_layers {
+            self.gather_layer(&guards, l, ids, &mut out[l * span..(l + 1) * span]);
+        }
+    }
+
+    fn read_all(&self) -> Vec<RwLockReadGuard<'_, Shard>> {
+        self.shards.iter().map(|s| s.read().unwrap()).collect()
+    }
+
+    fn gather_layer(
+        &self,
+        guards: &[RwLockReadGuard<'_, Shard>],
+        l: usize,
+        ids: &[u32],
+        out: &mut [f32],
+    ) {
+        let h = self.h;
+        let ns = self.num_shards;
+        debug_assert_eq!(out.len(), ids.len() * h);
+        if self.parallel && ids.len() >= PAR_MIN_ROWS {
+            out.par_chunks_mut(GATHER_CHUNK_ROWS * h)
+                .zip(ids.par_chunks(GATHER_CHUNK_ROWS))
+                .for_each(|(dst, idc)| {
+                    for (k, &id) in idc.iter().enumerate() {
+                        let id = id as usize;
+                        dst[k * h..(k + 1) * h]
+                            .copy_from_slice(guards[id % ns].row(l, id / ns, h));
+                    }
+                });
+        } else {
+            for (k, &id) in ids.iter().enumerate() {
+                let id = id as usize;
+                out[k * h..(k + 1) * h].copy_from_slice(guards[id % ns].row(l, id / ns, h));
+            }
+        }
+    }
+
+    /// Scatter rows: `data` is `[ids.len(), h]`, written into layer `l`.
+    /// Shards are updated in parallel; rows within one push land exactly
+    /// as the reference [`HistoryStore::push`] would place them.
+    pub fn push(&self, l: usize, ids: &[u32], data: &[f32]) {
+        debug_assert!(data.len() >= ids.len() * self.h);
+        let h = self.h;
+        let ns = self.num_shards;
+        let track = self.track_deltas;
+        if self.parallel && ns > 1 && ids.len() >= PAR_MIN_ROWS.min(ns * 64) {
+            self.shards.par_iter().enumerate().for_each(|(si, shard)| {
+                shard
+                    .write()
+                    .unwrap()
+                    .scatter(l, si, ns, ids, data, h, track);
+            });
+        } else {
+            for (si, shard) in self.shards.iter().enumerate() {
+                shard
+                    .write()
+                    .unwrap()
+                    .scatter(l, si, ns, ids, data, h, track);
+            }
+        }
+    }
+
+    /// Copy of one row (the sharded store cannot hand out references
+    /// across its locks).
+    pub fn row(&self, l: usize, id: usize) -> Vec<f32> {
+        let g = self.shards[id % self.num_shards].read().unwrap();
+        g.row(l, id / self.num_shards, self.h).to_vec()
+    }
+
+    /// Mean staleness (steps since last push) of given rows at layer `l`.
+    pub fn staleness(&self, l: usize, ids: &[u32]) -> f64 {
+        if ids.is_empty() {
+            return 0.0;
+        }
+        let guards = self.read_all();
+        let ns = self.num_shards;
+        let s: u64 = ids
+            .iter()
+            .map(|&id| {
+                let g = &guards[id as usize % ns];
+                g.step - g.last_push[l][id as usize / ns]
+            })
+            .sum();
+        s as f64 / ids.len() as f64
+    }
+
+    /// Mean ||h̄_new - h̄_old|| per push since start, per layer,
+    /// aggregated over shards.
+    pub fn mean_push_delta(&self, l: usize) -> f64 {
+        let mut sum = 0f64;
+        let mut cnt = 0u64;
+        for s in &self.shards {
+            let g = s.read().unwrap();
+            sum += g.delta_sum[l];
+            cnt += g.delta_cnt[l];
+        }
+        if cnt == 0 {
+            0.0
+        } else {
+            sum / cnt as f64
+        }
+    }
+
+    pub fn reset_probes(&self) {
+        for s in &self.shards {
+            let mut g = s.write().unwrap();
+            g.delta_sum.iter_mut().for_each(|x| *x = 0.0);
+            g.delta_cnt.iter_mut().for_each(|x| *x = 0);
+        }
+    }
+}
+
+fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn push_then_pull_roundtrips() {
@@ -151,8 +488,99 @@ mod tests {
     }
 
     #[test]
+    fn disabled_delta_tracking_skips_probe_but_stores_rows() {
+        let mut s = HistoryStore::new(4, 2, 1);
+        s.set_delta_tracking(false);
+        s.push(0, &[2], &[3.0, 4.0]);
+        assert_eq!(s.mean_push_delta(0), 0.0); // probe never ran
+        assert_eq!(s.row(0, 2), &[3.0, 4.0]); // data landed anyway
+        s.set_delta_tracking(true);
+        s.push(0, &[2], &[0.0, 0.0]);
+        assert!((s.mean_push_delta(0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn bytes_accounting() {
         let s = HistoryStore::new(100, 8, 3);
         assert_eq!(s.bytes(), 100 * 8 * 3 * 4);
+        let sh = ShardedHistoryStore::with_shards(100, 8, 3, 4);
+        assert_eq!(sh.bytes(), s.bytes());
+    }
+
+    #[test]
+    fn sharded_roundtrips_across_shard_counts() {
+        for shards in [1usize, 2, 3, 7] {
+            let s = ShardedHistoryStore::with_shards(20, 4, 2, shards);
+            let ids = [3u32, 19, 0, 7];
+            let data: Vec<f32> = (0..16).map(|x| x as f32 + 1.0).collect();
+            s.push(1, &ids, &data);
+            let mut out = vec![0f32; 16];
+            s.pull(1, &ids, &mut out);
+            assert_eq!(out, data, "shards={shards}");
+            s.pull(0, &ids, &mut out);
+            assert!(out.iter().all(|&v| v == 0.0));
+            assert_eq!(s.row(1, 19), data[4..8].to_vec());
+        }
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_bit_for_bit() {
+        let n = 257;
+        let h = 5;
+        let layers = 3;
+        let mut reference = HistoryStore::new(n, h, layers);
+        let sharded = ShardedHistoryStore::with_shards(n, h, layers, 4);
+        let mut rng = Rng::new(9);
+        for step in 0..30 {
+            let l = step % layers;
+            let k = 1 + rng.below(120);
+            let ids: Vec<u32> = (0..k).map(|_| rng.below(n) as u32).collect();
+            let data: Vec<f32> = (0..k * h).map(|_| rng.normal_f32()).collect();
+            reference.push(l, &ids, &data);
+            sharded.push(l, &ids, &data);
+            reference.tick();
+            sharded.tick();
+        }
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut a = vec![0f32; n * h];
+        let mut b = vec![0f32; n * h];
+        for l in 0..layers {
+            reference.pull(l, &all, &mut a);
+            sharded.pull(l, &all, &mut b);
+            assert_eq!(a, b, "layer {l} diverged"); // bit-for-bit
+            // integer staleness bookkeeping must agree exactly...
+            assert_eq!(reference.staleness(l, &all), sharded.staleness(l, &all));
+            // ...while the float probe only up to summation order
+            let (da, db) = (reference.mean_push_delta(l), sharded.mean_push_delta(l));
+            assert!((da - db).abs() < 1e-9 * da.abs().max(1.0), "{da} vs {db}");
+        }
+    }
+
+    #[test]
+    fn sharded_parallel_path_matches_serial_path() {
+        // force the rayon branches by pushing/pulling > PAR_MIN_ROWS rows
+        let n = 10_000;
+        let h = 8;
+        let par = ShardedHistoryStore::with_shards(n, h, 1, 4);
+        let seq = ShardedHistoryStore::sequential(n, h, 1);
+        let ids: Vec<u32> = (0..4096u32).map(|i| (i * 13) % n as u32).collect();
+        let data: Vec<f32> = (0..ids.len() * h).map(|x| x as f32 * 0.25).collect();
+        par.push(0, &ids, &data);
+        seq.push(0, &ids, &data);
+        let mut a = vec![0f32; ids.len() * h];
+        let mut b = vec![0f32; ids.len() * h];
+        par.pull(0, &ids, &mut a);
+        seq.pull(0, &ids, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pull_all_is_layer_major() {
+        let s = ShardedHistoryStore::with_shards(6, 2, 2, 2);
+        s.push(0, &[1], &[1.0, 2.0]);
+        s.push(1, &[1], &[3.0, 4.0]);
+        let mut out = vec![0f32; 2 * 2];
+        s.pull_all(&[1], &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
     }
 }

@@ -5,15 +5,19 @@
 //!
 //! * **L3 (this crate)** — the GAS coordinator: graph store, METIS-like
 //!   multilevel partitioner, mini-batch scheduler with 1-hop halo assembly,
-//!   the **history store** with a concurrent push/pull pipeline, optimizer,
-//!   training loop, evaluation, baselines, and every experiment harness.
+//!   the **sharded history store** (row-striped shards behind per-shard
+//!   locks, rayon-parallel gather/scatter) with a concurrent push/pull
+//!   worker pool, optimizer, training loop, evaluation, baselines, and
+//!   every experiment harness.
 //! * **L2** — JAX models (GCN/GAT/APPNP/GCNII/GIN/PNA) with per-layer
 //!   history injection, AOT-lowered to HLO text (`python/compile/`).
 //! * **L1** — Pallas edge-blocked scatter kernels inside those models.
 //!
 //! The request path is pure Rust: artifacts are loaded via PJRT
-//! ([`runtime`]), histories live in host memory ([`history`]), batches are
-//! assembled by [`sched`], and [`train::Trainer`] runs the GAS loop.
+//! ([`runtime`]), histories live in host memory
+//! ([`history::ShardedHistoryStore`]), batches are assembled by [`sched`],
+//! and [`train::Trainer`] runs the GAS loop with pulls for batch *t+1*
+//! prefetched while the write-backs of batch *t* drain.
 
 pub mod baselines;
 pub mod bench;

@@ -238,7 +238,8 @@ impl BatchPlan {
     }
 
     /// Fill the padded history tensor from a staged pull.
-    /// Layout: [(L-1), NH, hist_dim] flattened.
+    /// Layout: [(L-1), NH, hist_dim] flattened — the pull buffer is already
+    /// layer-major, so each layer is one contiguous copy into the padding.
     pub fn fill_hist(&self, spec: &ArtifactSpec, pull: &PullBuffer, out: &mut Vec<f32>) {
         if spec.is_full() {
             out.clear();
@@ -252,7 +253,7 @@ impl BatchPlan {
         out.resize(hl * spec.nh * hd, 0.0);
         let rows = pull.num_rows.min(spec.nh);
         for l in 0..hl {
-            let src = &pull.data[l];
+            let src = pull.layer(l);
             let dst = &mut out[l * spec.nh * hd..];
             dst[..rows * hd].copy_from_slice(&src[..rows * hd]);
         }
@@ -498,13 +499,95 @@ mod tests {
         let plan = BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::Train).unwrap();
         let nh_real = plan.halo_nodes.len();
         let pull = PullBuffer {
-            data: vec![vec![2.0; nh_real * 8]],
+            data: vec![2.0; nh_real * 8],
             num_rows: nh_real,
+            num_layers: 1,
+            h: 8,
         };
         let mut out = Vec::new();
         plan.fill_hist(&spec, &pull, &mut out);
         assert_eq!(out.len(), 1 * 48 * 8);
         assert!(out[..nh_real * 8].iter().all(|&v| v == 2.0));
         assert!(out[nh_real * 8..].iter().all(|&v| v == 0.0));
+    }
+
+    /// Hand-built 8-node graph where the exact halo set, batch∪halo
+    /// renumbering, padded edge lists and static tensors are all asserted
+    /// verbatim (not just structurally).
+    #[test]
+    fn halo_assembly_exact_on_hand_built_graph() {
+        // 0-1-2 triangle, then a path 2-3-4 with 4 fanning out to 5 and 7,
+        // and a tail 5-6-7 closing a cycle on the out-of-batch side.
+        let graph = crate::graph::csr::Csr::from_undirected(
+            8,
+            &[(0, 1), (0, 2), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (4, 7)],
+        );
+        let n = 8;
+        let f = 4;
+        let x: Vec<f32> = (0..n)
+            .flat_map(|i| (0..f).map(move |j| (i * 10 + j) as f32))
+            .collect();
+        let profile = Profile {
+            name: "hand8".into(),
+            kind: "planted".into(),
+            n,
+            f,
+            c: 3,
+            avg_deg: graph.avg_degree(),
+            multilabel: false,
+            train_frac: 1.0,
+            val_frac: 0.0,
+            homophily: 0.0,
+            feat_noise: 0.0,
+            parts: 2,
+            paper_n: n,
+            seed: 0,
+        };
+        let ds = Dataset {
+            profile,
+            graph,
+            x,
+            labels: vec![0, 1, 2, 0, 1, 2, 0, 1],
+            y_multi: Vec::new(),
+            train_mask: vec![true; n],
+            val_mask: vec![false; n],
+            test_mask: vec![false; n],
+        };
+        let spec = gas_spec(4, 8, 16);
+        let batch: Vec<u32> = vec![0, 1, 2, 3];
+        let plan = BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::Train).unwrap();
+
+        // halo: the only out-of-batch neighbor of {0,1,2,3} is node 4,
+        // renumbered to local row nb_pad + 0 == 4
+        assert_eq!(plan.halo_nodes, vec![4]);
+        assert_eq!(plan.real_edges, 9);
+        // exact renumbered edge lists (batch nodes keep their index, halo
+        // node 4 -> local 4), in batch-then-sorted-neighbor order:
+        //   dst 0 <- {1, 2}; dst 1 <- {0, 2}; dst 2 <- {0, 1, 3}; dst 3 <- {2, 4}
+        let want_src = [1, 2, 0, 2, 0, 1, 3, 2, 4];
+        let want_dst = [0, 0, 1, 1, 2, 2, 2, 3, 3];
+        assert_eq!(&plan.edge_src[..9], &want_src[..]);
+        assert_eq!(&plan.edge_dst[..9], &want_dst[..]);
+        // padding: zero endpoints and zero weights out to spec.e
+        assert_eq!(plan.edge_src.len(), spec.e);
+        assert!(plan.edge_src[9..].iter().all(|&v| v == 0));
+        assert!(plan.edge_dst[9..].iter().all(|&v| v == 0));
+        assert!(plan.edge_w[9..].iter().all(|&w| w == 0.0));
+        // gcn_norm uses *global* degrees: edge (1 -> 0) has deg(1)=2, deg(0)=2
+        let w10 = 1.0 / ((2.0f32 + 1.0).sqrt() * (2.0f32 + 1.0).sqrt());
+        assert!((plan.edge_w[0] - w10).abs() < 1e-6);
+        // edge (4 -> 3): deg(4)=3 (neighbors 3,5,7), deg(3)=2
+        let w43 = 1.0 / ((3.0f32 + 1.0).sqrt() * (2.0f32 + 1.0).sqrt());
+        assert!((plan.edge_w[8] - w43).abs() < 1e-6);
+        // static tensors: batch rows 0..4 then the halo row at nb_pad (=4)
+        for (i, &v) in batch.iter().enumerate() {
+            assert_eq!(&plan.st.x[i * 4..(i + 1) * 4], ds.feature_row(v as usize));
+        }
+        assert_eq!(&plan.st.x[4 * 4..5 * 4], ds.feature_row(4));
+        assert!(plan.st.x[5 * 4..].iter().all(|&v| v == 0.0), "padding rows stay zero");
+        assert_eq!(&plan.st.deg[..5], &[2.0, 2.0, 3.0, 2.0, 3.0][..]);
+        // labels / mask cover exactly the batch rows
+        assert_eq!(&plan.st.labels_i[..4], &[0, 1, 2, 0][..]);
+        assert_eq!(plan.st.label_mask, vec![1.0, 1.0, 1.0, 1.0]);
     }
 }

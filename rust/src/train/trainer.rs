@@ -13,7 +13,7 @@
 //! constant-memory layer-wise inference.
 
 use crate::graph::datasets::Dataset;
-use crate::history::{HistoryPipeline, HistoryStore, PipelineMode};
+use crate::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use crate::model::metrics;
 use crate::model::{Adam, Optimizer, ParamStore};
 use crate::partition::{metis_partition, random_partition};
@@ -49,6 +49,9 @@ pub struct TrainConfig {
     pub label_sel: LabelSel,
     /// number of mini-batches (defaults to the dataset profile's `parts`)
     pub parts: Option<usize>,
+    /// history-store shard count (None = one stripe per core, capped at 8;
+    /// Some(1) still runs the rayon gather/scatter on a single stripe)
+    pub history_shards: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -67,6 +70,7 @@ impl Default for TrainConfig {
             shuffle: true,
             label_sel: LabelSel::Train,
             parts: None,
+            history_shards: None,
         }
     }
 }
@@ -124,7 +128,10 @@ impl<'a> Trainer<'a> {
         for g in &groups {
             plans.push(BatchPlan::build_gas(ds, spec, g, cfg.label_sel)?);
         }
-        let store = HistoryStore::new(ds.n(), spec.hist_dim, spec.hist_layers());
+        let store = match cfg.history_shards {
+            Some(s) => ShardedHistoryStore::with_shards(ds.n(), spec.hist_dim, spec.hist_layers(), s),
+            None => ShardedHistoryStore::new(ds.n(), spec.hist_dim, spec.hist_layers()),
+        };
         let pipeline = HistoryPipeline::new(store, cfg.pipeline);
         let params = ParamStore::init(&spec.params, cfg.seed ^ 0x9e37)?;
         let opt = {
@@ -195,6 +202,10 @@ impl<'a> Trainer<'a> {
                 result.steps += 1;
                 sched.advance();
             }
+            // epoch boundary: drain queued write-backs across all shards so
+            // the next epoch (and any evaluation) reads applied histories —
+            // this bounds staleness at one step exactly as in the paper
+            self.pipeline.sync();
             result.loss.push(epoch_loss / nb.max(1) as f64);
             if (epoch + 1) % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
                 let (tr, va, te) = self.evaluate(&mut result.buckets)?;
@@ -309,7 +320,7 @@ impl<'a> Trainer<'a> {
 
     /// Read-only access to the (synced) history store — used by the
     /// Theorem-2 error-bound probes.
-    pub fn with_history<T>(&mut self, f: impl FnOnce(&crate::history::HistoryStore) -> T) -> T {
+    pub fn with_history<T>(&mut self, f: impl FnOnce(&ShardedHistoryStore) -> T) -> T {
         self.pipeline.sync();
         self.pipeline.with_store(f)
     }

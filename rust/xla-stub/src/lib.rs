@@ -1,0 +1,352 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The GAS coordinator talks to XLA through a narrow surface: parse an
+//! HLO-text artifact, compile it on a CPU PJRT client, marshal `Literal`
+//! values in and out of `execute`. The real bindings need a multi-GB
+//! `libxla_extension` that is not available in the offline build
+//! environment, so this crate provides the same types with fully
+//! functional host-side literals (creation, reshape, tuple decomposition,
+//! typed extraction) and a client whose `execute` fails with a clear
+//! error. Everything up to execution — manifest loading, shape checking,
+//! literal marshalling, batch assembly, the history engine — runs and is
+//! tested against this crate; training additionally requires the real
+//! bindings plus AOT-compiled artifacts.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real bindings' (message-carrying) errors.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error { msg: msg.into() }
+}
+
+/// Element dtypes the coordinator uses (f32 tensors, i32 indices/labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Rust-native element types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(b: [u8; 4]) -> Self;
+    fn to_le(self) -> [u8; 4];
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Repr {
+    Dense {
+        ty: ElementType,
+        dims: Vec<i64>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side tensor (or tuple of tensors) in row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    repr: Repr,
+}
+
+impl Literal {
+    /// Scalar f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            repr: Repr::Dense {
+                ty: ElementType::F32,
+                dims: Vec::new(),
+                data: v.to_le_bytes().to_vec(),
+            },
+        }
+    }
+
+    /// Rank-1 literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for &v in data {
+            bytes.extend_from_slice(&v.to_le());
+        }
+        Literal {
+            repr: Repr::Dense {
+                ty: T::TY,
+                dims: vec![data.len() as i64],
+                data: bytes,
+            },
+        }
+    }
+
+    /// Build a literal of `dims` shape directly from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want: usize = dims.iter().product::<usize>() * ty.byte_size();
+        if want != data.len() {
+            return Err(err(format!(
+                "shape {dims:?} wants {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            repr: Repr::Dense {
+                ty,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                data: data.to_vec(),
+            },
+        })
+    }
+
+    /// Tuple literal (what executables return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            repr: Repr::Tuple(elems),
+        }
+    }
+
+    /// Number of elements of a dense literal (1 for scalars).
+    pub fn element_count(&self) -> usize {
+        match &self.repr {
+            Repr::Dense { ty, data, .. } => data.len() / ty.byte_size(),
+            Repr::Tuple(elems) => elems.iter().map(|e| e.element_count()).sum(),
+        }
+    }
+
+    /// Same data, new shape; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.repr {
+            Repr::Dense { ty, data, .. } => {
+                let want: usize = dims.iter().map(|&d| d as usize).product();
+                if want != data.len() / ty.byte_size() {
+                    return Err(err(format!(
+                        "cannot reshape {} elements to {dims:?}",
+                        data.len() / ty.byte_size()
+                    )));
+                }
+                Ok(Literal {
+                    repr: Repr::Dense {
+                        ty: *ty,
+                        dims: dims.to_vec(),
+                        data: data.clone(),
+                    },
+                })
+            }
+            Repr::Tuple(_) => Err(err("cannot reshape a tuple literal")),
+        }
+    }
+
+    /// Extract a flat typed vector (dtype must match).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            Repr::Dense { ty, data, .. } => {
+                if *ty != T::TY {
+                    return Err(err(format!("literal is {ty:?}, requested {:?}", T::TY)));
+                }
+                Ok(data
+                    .chunks_exact(4)
+                    .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Repr::Tuple(_) => Err(err("cannot extract a typed vec from a tuple literal")),
+        }
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            Repr::Tuple(elems) => Ok(elems),
+            Repr::Dense { .. } => Err(err("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed (well — carried) HLO module text. jax >= 0.5 emits 64-bit
+/// instruction ids, so interchange is text, re-parsed by the backend.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn from_text(text: &str) -> HloModuleProto {
+        HloModuleProto {
+            text: text.to_string(),
+        }
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            proto: proto.clone(),
+        }
+    }
+
+    pub fn hlo_text(&self) -> &str {
+        self.proto.text()
+    }
+}
+
+/// The PJRT CPU client. The stub accepts compilations (shape bookkeeping
+/// works end to end) but cannot execute them.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            hlo_text: comp.hlo_text().to_string(),
+        })
+    }
+}
+
+/// A compiled executable handle. `execute` fails in the stub — swap in the
+/// real bindings to run artifacts.
+pub struct PjRtLoadedExecutable {
+    hlo_text: String,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(err(format!(
+            "the offline `xla` stub cannot execute HLO ({} bytes of module text); \
+             build against the real xla/PJRT bindings to run artifacts",
+            self.hlo_text.len()
+        )))
+    }
+}
+
+/// A device buffer returned by `execute`.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn literal_dtype_checked() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn untyped_creation_checks_byte_count() {
+        let bytes = [0u8; 8];
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &bytes).is_ok());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::scalar(1.5), Literal::vec1(&[2i32])]);
+        assert_eq!(t.element_count(), 2);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.5]);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_compiles_but_does_not_execute() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let comp = XlaComputation::from_proto(&HloModuleProto::from_text("HloModule m"));
+        let exe = client.compile(&comp).unwrap();
+        let args: Vec<Literal> = vec![Literal::scalar(1.0)];
+        assert!(exe.execute::<Literal>(&args).is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_is_an_error() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
