@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Gate the CI bench-smoke job on BENCH_micro.json.
+
+Exits non-zero when the sharded history pull/push medians blow an absolute
+budget, or when the sharded-vs-serial speedup falls below a floor. The
+budgets are deliberately loose: shared CI runners are noisy, so this gate
+catches order-of-magnitude regressions (and near-hangs shorter than the
+job timeout), not few-percent drift. Thresholds are overridable via env
+for local experimentation:
+
+    GAS_BENCH_MAX_PULL_MS   (default 250)
+    GAS_BENCH_MAX_PUSH_MS   (default 500)
+    GAS_BENCH_MIN_SPEEDUP   (default 0.6)
+
+Usage: python3 ci/check_bench_micro.py [BENCH_micro.json]
+"""
+import json
+import os
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_micro.json"
+    with open(path) as f:
+        rec = json.load(f)
+
+    pull_budget_ms = float(os.environ.get("GAS_BENCH_MAX_PULL_MS", "250"))
+    push_budget_ms = float(os.environ.get("GAS_BENCH_MAX_PUSH_MS", "500"))
+    speedup_floor = float(os.environ.get("GAS_BENCH_MIN_SPEEDUP", "0.6"))
+
+    medians = {r["name"]: r["median_ms"] for r in rec["results"]}
+
+    def one(*subs):
+        hits = [(k, v) for k, v in medians.items() if all(s in k for s in subs)]
+        if len(hits) != 1:
+            print(f"expected exactly one bench matching {subs}, got {hits}")
+            raise SystemExit(2)
+        return hits[0]
+
+    failures = []
+    for (kind, budget_ms) in [("history pull", pull_budget_ms), ("history push", push_budget_ms)]:
+        name, ms = one(kind, "[sharded]")
+        print(f"{name}: median {ms:.3f} ms (budget {budget_ms:.0f} ms)")
+        if ms > budget_ms:
+            failures.append(f"{name}: median {ms:.3f} ms over budget {budget_ms:.0f} ms")
+
+    metrics = rec["metrics"]
+    for key in ("pull_speedup_sharded_vs_serial", "push_speedup_sharded_vs_serial"):
+        v = metrics[key]
+        print(f"{key}: {v:.2f}x (floor {speedup_floor}x)")
+        if v < speedup_floor:
+            failures.append(f"{key} = {v:.2f}x below floor {speedup_floor}x")
+
+    if failures:
+        print("\nPERF GATE FAILED:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

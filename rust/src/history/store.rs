@@ -7,9 +7,17 @@
 //! * [`ShardedHistoryStore`] — the production store: rows are striped over
 //!   `S` shards (`shard = id % S`, `local = id / S`), each behind its own
 //!   `RwLock`, and `pull`/`push` gather/scatter rayon-parallel over row
-//!   chunks. Concurrent pulls share read locks; concurrent pushes touch
-//!   disjoint shards without contention. Both stores produce bit-identical
-//!   embeddings for the same push sequence (tested below).
+//!   chunks. Concurrent pulls share read locks; a push buckets its rows
+//!   per shard, takes every write lock, and scatters the shards in
+//!   parallel. Both stores produce bit-identical embeddings for the same
+//!   push sequence (tested below).
+//!
+//! Locking discipline: every multi-shard operation acquires its guards on
+//! the *calling* thread, in shard order, before any rayon work is spawned.
+//! Rayon pool tasks never block on a lock — otherwise blocked scatter
+//! tasks could occupy every pool thread while a concurrent pull (holding
+//! all read guards) waits for its gather chunks to be scheduled on the
+//! same pool, deadlocking both workers.
 
 use rayon::prelude::*;
 use std::sync::{RwLock, RwLockReadGuard};
@@ -173,13 +181,13 @@ impl Shard {
         &self.layers[l][local * h..(local + 1) * h]
     }
 
-    /// Scatter the rows of `ids`/`data` that stripe onto this shard.
+    /// Scatter `(local_row, data_row)` pairs into layer `l`. Callers hand
+    /// each shard only its own rows (pre-bucketed on the pushing thread),
+    /// so with the delta probe off this is a pure memcpy loop.
     fn scatter(
         &mut self,
         l: usize,
-        shard_idx: usize,
-        num_shards: usize,
-        ids: &[u32],
+        rows: impl Iterator<Item = (usize, usize)>,
         data: &[f32],
         h: usize,
         track_deltas: bool,
@@ -187,12 +195,7 @@ impl Shard {
         let dst = &mut self.layers[l];
         let mut dsum = 0f64;
         let mut cnt = 0u64;
-        for (i, &id) in ids.iter().enumerate() {
-            let id = id as usize;
-            if id % num_shards != shard_idx {
-                continue;
-            }
-            let local = id / num_shards;
+        for (local, i) in rows {
             debug_assert!(local < self.rows);
             let d = local * h;
             let row = &data[i * h..(i + 1) * h];
@@ -204,10 +207,10 @@ impl Shard {
                     diff += e * e;
                 }
                 dsum += diff.sqrt();
-                cnt += 1;
             }
             dst[d..d + h].copy_from_slice(row);
             self.last_push[l][local] = self.step;
+            cnt += 1;
         }
         if track_deltas {
             self.delta_sum[l] += dsum;
@@ -225,8 +228,10 @@ const GATHER_CHUNK_ROWS: usize = 512;
 /// The production history store: `S` row-striped shards behind per-shard
 /// locks, with rayon-parallel gather/scatter. All methods take `&self` —
 /// the shard locks provide interior mutability, so the concurrent pipeline
-/// shares it via a plain `Arc` (pulls on read locks, pushes on the write
-/// lock of each touched shard only).
+/// shares it via a plain `Arc` (pulls share the read locks; a push holds
+/// all write locks for the duration of its scatter). All guards are
+/// acquired on the calling thread, never inside a rayon task (see the
+/// module docs on the locking discipline).
 pub struct ShardedHistoryStore {
     n: usize,
     h: usize,
@@ -371,19 +376,48 @@ impl ShardedHistoryStore {
         let h = self.h;
         let ns = self.num_shards;
         let track = self.track_deltas;
-        if self.parallel && ns > 1 && ids.len() >= PAR_MIN_ROWS.min(ns * 64) {
-            self.shards.par_iter().enumerate().for_each(|(si, shard)| {
-                shard
-                    .write()
-                    .unwrap()
-                    .scatter(l, si, ns, ids, data, h, track);
-            });
+        if ns == 1 {
+            self.shards[0].write().unwrap().scatter(
+                l,
+                ids.iter().enumerate().map(|(i, &id)| (id as usize, i)),
+                data,
+                h,
+                track,
+            );
+            return;
+        }
+        // One O(|ids|) pass buckets (local_row, data_row) pairs per shard,
+        // so each shard's scatter reads only its own rows of `data`.
+        let mut buckets: Vec<Vec<(u32, u32)>> = (0..ns)
+            .map(|_| Vec::with_capacity(ids.len() / ns + 1))
+            .collect();
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            buckets[id % ns].push(((id / ns) as u32, i as u32));
+        }
+        // Every write guard is taken here, on the pushing thread in shard
+        // order, BEFORE any rayon work: the pool tasks below receive
+        // already-locked `&mut Shard`s and never block on a lock, so they
+        // cannot starve a concurrent pull's gather chunks (deadlock).
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        let mut locked: Vec<&mut Shard> = guards.iter_mut().map(|g| &mut **g).collect();
+        let scatter_bucket = |shard: &mut Shard, bucket: &[(u32, u32)]| {
+            shard.scatter(
+                l,
+                bucket.iter().map(|&(local, i)| (local as usize, i as usize)),
+                data,
+                h,
+                track,
+            );
+        };
+        if self.parallel && ids.len() >= PAR_MIN_ROWS.min(ns * 64) {
+            locked
+                .par_iter_mut()
+                .zip(buckets.par_iter())
+                .for_each(|(shard, bucket)| scatter_bucket(shard, bucket));
         } else {
-            for (si, shard) in self.shards.iter().enumerate() {
-                shard
-                    .write()
-                    .unwrap()
-                    .scatter(l, si, ns, ids, data, h, track);
+            for (shard, bucket) in locked.iter_mut().zip(&buckets) {
+                scatter_bucket(shard, bucket);
             }
         }
     }
@@ -572,6 +606,58 @@ mod tests {
         par.pull(0, &ids, &mut a);
         seq.pull(0, &ids, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concurrent_push_and_pull_do_not_deadlock() {
+        // regression guard for the pipeline's steady state (push of batch t
+        // overlapping the pull of batch t+1): with shard count >= core
+        // count and both rayon paths engaged, scatter tasks must never
+        // block on shard locks inside the pool while a pull holds all the
+        // read guards — that starves the gather chunks and hangs both
+        // workers. The fix takes every write guard on the pushing thread
+        // before fanning out, so this test terminates.
+        let n = 50_000;
+        let h = 16;
+        let store = std::sync::Arc::new(ShardedHistoryStore::with_shards(n, h, 2, 8));
+        let ids: Vec<u32> = (0..4096u32).map(|i| (i * 11) % n as u32).collect();
+        let data = vec![1.0f32; ids.len() * h];
+        // watchdog: on regression this test would hang, not fail — abort
+        // with an attributed message instead of eating the CI job timeout
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+        let watchdog = std::thread::spawn(move || {
+            use std::sync::mpsc::RecvTimeoutError;
+            let wait = done_rx.recv_timeout(std::time::Duration::from_secs(60));
+            if let Err(RecvTimeoutError::Timeout) = wait {
+                eprintln!(
+                    "concurrent_push_and_pull_do_not_deadlock: still running after 60s, \
+                     deadlock suspected — aborting"
+                );
+                std::process::abort();
+            }
+        });
+        let mut handles = Vec::new();
+        for role in 0..2 {
+            let store = std::sync::Arc::clone(&store);
+            let ids = ids.clone();
+            let data = data.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut out = vec![0f32; ids.len() * h * 2];
+                for _ in 0..20 {
+                    if role == 0 {
+                        store.push(0, &ids, &data);
+                    } else {
+                        store.pull_all(&ids, &mut out);
+                    }
+                }
+            }));
+        }
+        for handle in handles {
+            handle.join().unwrap();
+        }
+        done_tx.send(()).unwrap();
+        watchdog.join().unwrap();
+        assert_eq!(store.row(0, ids[0] as usize), vec![1.0; h]);
     }
 
     #[test]
