@@ -13,7 +13,7 @@
 use gas::baselines::naive_history::{gas_config, naive_config};
 use gas::bench::{epochs_or, print_table};
 use gas::config::Ctx;
-use gas::runtime::StepInputs;
+use gas::runtime::{Executor, StepInputs};
 use gas::sched::batch::{BatchPlan, LabelSel};
 use gas::train::Trainer;
 
@@ -32,8 +32,8 @@ fn probe(ctx: &mut Ctx, epochs: usize, naive: bool) -> anyhow::Result<(Vec<f64>,
     } else {
         gas_config(epochs, 0.01, 0.0, 0)
     };
-    let hl = art.spec.hist_layers();
-    let hd = art.spec.hist_dim;
+    let hl = art.spec().hist_layers();
+    let hd = art.spec().hist_dim;
     let mut tr = Trainer::new(ds, art, cfg)?;
     let r = tr.train()?;
     let params = tr.params.tensors.clone();
@@ -43,9 +43,10 @@ fn probe(ctx: &mut Ctx, epochs: usize, naive: bool) -> anyhow::Result<(Vec<f64>,
     let full = ctx.get_artifact(full_art)?;
     let n = ds.n();
     let nodes: Vec<u32> = (0..n as u32).collect();
-    let plan = BatchPlan::build_full(ds, &full.spec, &nodes, LabelSel::Train, None)?;
+    let fspec = full.spec();
+    let plan = BatchPlan::build_full(ds, fspec, &nodes, LabelSel::Train, None)?;
     let hist = vec![0f32; 1];
-    let noise = vec![0f32; full.spec.n_in() * full.spec.hist_dim.max(full.spec.h)];
+    let noise = vec![0f32; fspec.n_in() * fspec.hist_dim.max(fspec.h)];
     let inputs = StepInputs {
         x: &plan.st.x,
         edge_src: &plan.edge_src,

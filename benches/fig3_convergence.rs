@@ -3,15 +3,34 @@
 //! Reproduction target: GAS tracks full-batch; the naive baseline lags,
 //! dramatically so for deep (b) and expressive (c) models.
 //!
+//! Runs on whichever backend `Ctx` resolves — on a bare checkout that is
+//! the native interpreter, so this bench performs real training compute
+//! with no PJRT. Always writes `BENCH_fig3.json` (override with
+//! `GAS_BENCH_FIG3_JSON`) for the CI convergence gate
+//! (`ci/check_bench_fig3.py`).
+//!
 //!     cargo bench --bench fig3_convergence
+//!     GAS_FIG3_TINY=1 cargo bench --bench fig3_convergence   # CI smoke:
+//!         panel (a) only, CI-budget epochs
 
 use gas::baselines::naive_history::{gas_config, naive_config};
-use gas::bench::epochs_or;
+use gas::bench::{epochs_or, write_bench_json};
 use gas::config::Ctx;
 use gas::train::{FullBatchTrainer, Trainer};
+use gas::util::timer::Timer;
+
+struct Panel {
+    prefix: &'static str,
+    full_val: f64,
+    naive_val: f64,
+    gas_val: f64,
+    gas_loss_ratio: f64,
+    secs: f64,
+}
 
 fn run_panel(
     ctx: &mut Ctx,
+    prefix: &'static str,
     title: &str,
     ds_name: &str,
     gas_art: &str,
@@ -19,13 +38,15 @@ fn run_panel(
     lr: f32,
     reg: f32,
     epochs: usize,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<Panel> {
+    let t = Timer::start();
     let (ds, art) = ctx.pair(ds_name, full_art)?;
     let full = FullBatchTrainer::new(ds, art, lr, Some(1.0), 0.0, 0)?.train(epochs, 1)?;
     let (ds, art) = ctx.pair(ds_name, gas_art)?;
     let naive = Trainer::new(ds, art, naive_config(epochs, lr, 0))?.train()?;
     let (ds, art) = ctx.pair(ds_name, gas_art)?;
     let gas_r = Trainer::new(ds, art, gas_config(epochs, lr, reg, 0))?.train()?;
+    let secs = t.elapsed_s();
 
     println!("\n--- Fig 3{title}: val accuracy per epoch ---");
     println!("{:<7} {:>10} {:>10} {:>10}", "epoch", "full", "naive", "GAS");
@@ -46,17 +67,84 @@ fn run_panel(
         gas_r.val_acc.last().unwrap_or(0.0) - full.val_acc.last().unwrap_or(0.0),
         naive.val_acc.last().unwrap_or(0.0) - full.val_acc.last().unwrap_or(0.0),
     );
-    Ok(())
+    let loss_first = gas_r.loss.values.first().copied().unwrap_or(f64::NAN);
+    let loss_last = gas_r.loss.values.last().copied().unwrap_or(f64::NAN);
+    Ok(Panel {
+        prefix,
+        full_val: full.val_acc.last().unwrap_or(0.0),
+        naive_val: naive.val_acc.last().unwrap_or(0.0),
+        gas_val: gas_r.val_acc.last().unwrap_or(0.0),
+        gas_loss_ratio: loss_last / loss_first.max(1e-12),
+        secs,
+    })
 }
 
 fn main() -> anyhow::Result<()> {
-    let epochs = epochs_or(20);
+    let tiny = std::env::var("GAS_FIG3_TINY").is_ok();
+    // tiny mode still runs enough epochs for full-batch (1 optimizer step
+    // per epoch) to approach GAS (parts steps per epoch), so the CI gap
+    // gate compares two near-converged runs
+    let epochs = epochs_or(if tiny { 25 } else { 20 });
     let mut ctx = Ctx::new()?;
-    run_panel(&mut ctx, "a (GCN-2 / cora)", "cora", "cora_gcn2_gas",
-              "cora_gcn2_full", 0.01, 0.0, epochs)?;
-    run_panel(&mut ctx, "b (GCNII-64 / cora)", "cora", "cora_gcnii64_gas_deep",
-              "cora_gcnii64_full_deep", 0.01, 0.05, epochs)?;
-    run_panel(&mut ctx, "c (GIN-4 / cluster)", "cluster", "cluster_gin4_gas",
-              "cluster_gin4_full", 0.005, 0.05, epochs.min(12))?;
+    let backend = ctx.backend();
+    println!("fig3 convergence: backend={} tiny={tiny} epochs={epochs}", backend.name());
+    let mut panels = Vec::new();
+    panels.push(run_panel(
+        &mut ctx,
+        "a",
+        "a (GCN-2 / cora)",
+        "cora",
+        "cora_gcn2_gas",
+        "cora_gcn2_full",
+        0.01,
+        0.0,
+        epochs,
+    )?);
+    if !tiny {
+        panels.push(run_panel(
+            &mut ctx,
+            "b",
+            "b (GCNII-64 / cora)",
+            "cora",
+            "cora_gcnii64_gas_deep",
+            "cora_gcnii64_full_deep",
+            0.01,
+            0.05,
+            epochs,
+        )?);
+        panels.push(run_panel(
+            &mut ctx,
+            "c",
+            "c (GIN-4 / cluster)",
+            "cluster",
+            "cluster_gin4_gas",
+            "cluster_gin4_full",
+            0.005,
+            0.05,
+            epochs.min(12),
+        )?);
+    }
+
+    let mut metrics: Vec<(String, f64)> = vec![
+        ("tiny".into(), if tiny { 1.0 } else { 0.0 }),
+        ("epochs".into(), epochs as f64),
+        (
+            "backend_native".into(),
+            if backend == gas::config::Backend::Native { 1.0 } else { 0.0 },
+        ),
+    ];
+    for p in &panels {
+        metrics.push((format!("{}_full_val", p.prefix), p.full_val));
+        metrics.push((format!("{}_naive_val", p.prefix), p.naive_val));
+        metrics.push((format!("{}_gas_val", p.prefix), p.gas_val));
+        metrics.push((format!("{}_gas_full_gap", p.prefix), p.gas_val - p.full_val));
+        metrics.push((format!("{}_gas_loss_ratio", p.prefix), p.gas_loss_ratio));
+        metrics.push((format!("{}_secs", p.prefix), p.secs));
+    }
+    let metric_refs: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let json_path =
+        std::env::var("GAS_BENCH_FIG3_JSON").unwrap_or_else(|_| "BENCH_fig3.json".to_string());
+    write_bench_json(&json_path, "fig3_convergence", &[], &metric_refs)?;
+    println!("wrote {json_path}");
     Ok(())
 }

@@ -15,10 +15,11 @@ use gas::graph::datasets::{Dataset, Profile};
 use gas::graph::generators::fig4_batch_graph;
 use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use gas::model::ParamStore;
-use gas::runtime::StepInputs;
+use gas::runtime::{Executor, StepInputs};
 use gas::sched::batch::{BatchPlan, LabelSel};
 use gas::util::rng::Rng;
 use gas::util::timer::Timer;
+use std::sync::Arc;
 
 const NB: usize = 4000;
 const DEG: usize = 60;
@@ -83,8 +84,9 @@ fn main() -> anyhow::Result<()> {
     {
         let ds = fig4_dataset(*n_out, 3);
         let art = ctx.artifact(art_name)?;
-        let spec = art.spec.clone();
+        let spec = art.spec().clone();
         let batch: Vec<u32> = (0..NB as u32).collect();
+        let batch_ids: Arc<[u32]> = Arc::from(&batch[..]);
         let plan = BatchPlan::build_gas(&ds, &spec, &batch, LabelSel::All)?;
         let member: Vec<bool> = (0..ds.n()).map(|v| v < NB).collect();
         let (intra, inter) = ds.graph.intra_inter(&member);
@@ -112,19 +114,19 @@ fn main() -> anyhow::Result<()> {
             let mut io_wait = 0f64;
             let mut push_wait = 0f64;
             let t_all = Timer::start();
-            pipe.request_pull(&plan.halo_nodes); // prime (serial: inline gather)
+            pipe.request_pull(plan.halo_nodes.clone()); // prime (serial: inline gather)
             for s in 0..steps {
                 // serial: the gather happens here, blocking (I/O overhead);
                 // concurrent: the worker prefetched it during the last exec.
                 let t = Timer::start();
                 if mode == PipelineMode::Serial && s > 0 {
-                    pipe.request_pull(&plan.halo_nodes);
+                    pipe.request_pull(plan.halo_nodes.clone());
                 }
                 let pull = pipe.wait_pull();
                 io_wait += t.elapsed_s();
                 if mode == PipelineMode::Concurrent && s + 1 < steps {
                     // prefetch the next step's histories during exec
-                    pipe.request_pull(&plan.halo_nodes);
+                    pipe.request_pull(plan.halo_nodes.clone());
                 }
                 plan.fill_hist(&spec, &pull, &mut hist_buf);
                 pipe.recycle(pull);
@@ -149,7 +151,7 @@ fn main() -> anyhow::Result<()> {
                     let base = l * spec.nb * spec.hist_dim;
                     buf.copy_from_slice(
                         &out.push[base..base + batch.len() * spec.hist_dim]);
-                    pipe.push(l, &batch, buf);
+                    pipe.push(l, batch_ids.clone(), buf);
                 }
                 push_wait += t.elapsed_s();
             }

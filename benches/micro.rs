@@ -3,7 +3,8 @@
 //! literal marshalling (§Perf baselines in EXPERIMENTS.md).
 //!
 //!     cargo bench --bench micro
-//!     GAS_MICRO_TINY=1 cargo bench --bench micro   # CI smoke (< 60 s)
+//!     GAS_MICRO_TINY=1 cargo bench --bench micro   # CI smoke (< 120 s; includes
+//!                                                  # a real native train step)
 //!
 //! Always writes a machine-readable summary (default `BENCH_micro.json`,
 //! override with `GAS_BENCH_JSON`) so the CI bench-smoke job can archive
@@ -13,9 +14,10 @@ use gas::bench::{write_bench_json, BenchReport, Bencher};
 use gas::graph::generators;
 use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use gas::partition::metis_partition;
-use gas::runtime::{ArtifactSpec, InputSpec, ParamSpec};
+use gas::runtime::{ArtifactSpec, Executor, InputSpec, ParamSpec};
 use gas::sched::batch::{BatchPlan, LabelSel};
 use gas::util::rng::Rng;
+use std::sync::Arc;
 
 const HIST_N: usize = 100_000;
 const HIST_H: usize = 64;
@@ -80,6 +82,8 @@ fn main() -> anyhow::Result<()> {
     let ids: Vec<u32> = (0..PULL_ROWS as u32)
         .map(|i| (i * 7) % HIST_N as u32)
         .collect();
+    // shared once, cloned per step — the hot path does no per-step id copy
+    let ids_arc: Arc<[u32]> = Arc::from(&ids[..]);
     let data = vec![1.0f32; PULL_ROWS * HIST_H];
     let configs: [(&str, PipelineMode, bool); 3] = [
         ("serial", PipelineMode::Serial, false),
@@ -98,7 +102,7 @@ fn main() -> anyhow::Result<()> {
             &mut reports,
             &format!("history pull 8K rows x3 layers [{label}]"),
             &mut || {
-                pipe.request_pull(&ids);
+                pipe.request_pull(ids_arc.clone());
                 let buf = pipe.wait_pull();
                 pipe.recycle(buf);
             },
@@ -112,7 +116,7 @@ fn main() -> anyhow::Result<()> {
                 for _ in 0..PUSHES_PER_ITER {
                     let mut buf = pipe.take_buffer(data.len());
                     buf.copy_from_slice(&data);
-                    pipe.push(0, &ids, buf);
+                    pipe.push(0, ids_arc.clone(), buf);
                 }
                 pipe.sync();
             },
@@ -177,14 +181,16 @@ fn main() -> anyhow::Result<()> {
         },
     );
 
-    // --- artifact-dependent sections (need `make artifacts` + real PJRT) -----
-    let manifest_dir = gas::runtime::Manifest::default_dir();
-    if manifest_dir.join("manifest.json").exists() {
+    // --- real train-step compute through the Executor trait ------------------
+    // (native backend needs no artifacts; PJRT benches too when compiled
+    // artifacts + real bindings are present, and skips on the stub)
+    {
         let mut ctx = gas::config::Ctx::new()?;
+        let backend = ctx.backend().name();
         let (ds, art) = ctx.pair("cora", "cora_gcn2_gas")?;
         let part = metis_partition(&ds.graph, ds.profile.parts, 1);
         let batch: Vec<u32> = (0..ds.n() as u32).filter(|&v| part[v as usize] == 0).collect();
-        let spec = art.spec.clone();
+        let spec = art.spec().clone();
         run(&mut reports, "batch assembly (cora part 0)", &mut || {
             std::hint::black_box(
                 BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train).unwrap(),
@@ -209,14 +215,16 @@ fn main() -> anyhow::Result<()> {
         };
         match art.run(&params.tensors, &inputs) {
             Ok(_) => {
-                run(&mut reports, "PJRT train step (cora_gcn2_gas)", &mut || {
-                    std::hint::black_box(art.run(&params.tensors, &inputs).unwrap());
+                let statics = art.prepare_static(&inputs, true)?;
+                run(&mut reports, &format!("{backend} train step (cora_gcn2_gas)"), &mut || {
+                    std::hint::black_box(
+                        art.run_prepared(&params.tensors, &statics, &hist, &noise, 0.0)
+                            .unwrap(),
+                    );
                 });
             }
-            Err(e) => eprintln!("skipping PJRT step bench (runtime unavailable): {e:#}"),
+            Err(e) => eprintln!("skipping {backend} step bench (runtime unavailable): {e:#}"),
         }
-    } else {
-        eprintln!("skipping artifact sections: {} not built", manifest_dir.display());
     }
 
     // --- summary + JSON -------------------------------------------------------

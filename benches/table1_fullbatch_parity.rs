@@ -38,6 +38,16 @@ fn main() -> anyhow::Result<()> {
             }
             let full_name = format!("{ds_name}_{model}_full");
             let gas_name = format!("{ds_name}_{model}_gas");
+            // skip models the active backend cannot execute (e.g. gat/appnp
+            // on the native interpreter) instead of aborting the sweep
+            let loadable = ctx
+                .artifact(&full_name)
+                .map(|_| ())
+                .and_then(|_| ctx.artifact(&gas_name).map(|_| ()));
+            if let Err(e) = loadable {
+                eprintln!("skipping {tag}: {e:#}");
+                continue;
+            }
             let (ds, art) = ctx.pair(ds_name, &full_name)?;
             let mut fb = FullBatchTrainer::new(ds, art, *lr, Some(1.0), 0.0, 0)?;
             let rf = fb.train(epochs, 2)?;

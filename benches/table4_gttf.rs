@@ -8,8 +8,8 @@ use gas::baselines::naive_history::gas_config;
 use gas::baselines::GttfSampler;
 use gas::bench::{epochs_or, print_table, Bencher};
 use gas::config::Ctx;
+use gas::runtime::{Executor, StepInputs};
 use gas::sched::batch::{BatchPlan, LabelSel};
-use gas::runtime::StepInputs;
 use gas::train::Trainer;
 use gas::util::rng::Rng;
 
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         let (ds, art) = ctx.pair(ds_name, &gas_name)?;
         let parts = ds.profile.parts;
         // GAS per-step working set: batch tensors + activations
-        let spec = &art.spec;
+        let spec = art.spec();
         let gas_bytes = spec.nt * spec.f * F32
             + 2 * spec.layers * spec.nb * spec.h * F32
             + spec.hist_layers() * spec.nh * spec.hist_dim * F32
@@ -41,17 +41,18 @@ fn main() -> anyhow::Result<()> {
         // ---- GTTF: traversal + exact execution on the sampled forest -----
         let full_name = format!("{ds_name}_gcn4_full");
         let (ds, art) = ctx.pair(ds_name, &full_name)?;
+        let fspec = art.spec();
         let sampler = GttfSampler::new(3, 4);
         let batch: Vec<u32> = (0..(ds.n() / parts).min(512) as u32).collect();
         let mut rng = Rng::new(7);
         let sample = sampler.traverse(&ds.graph, &batch, &mut rng);
         let plan = BatchPlan::build_full_with_edges(
-            ds, &art.spec, &sample.nodes, &sample.edges, LabelSel::Train,
+            ds, fspec, &sample.nodes, &sample.edges, LabelSel::Train,
             Some(&batch),
         )?;
-        let params = gas::model::ParamStore::init(&art.spec.params, 1)?;
+        let params = gas::model::ParamStore::init(&fspec.params, 1)?;
         let hist = vec![0f32; 1];
-        let noise = vec![0f32; art.spec.n_in() * art.spec.hist_dim.max(art.spec.h)];
+        let noise = vec![0f32; fspec.n_in() * fspec.hist_dim.max(fspec.h)];
         let rep_gttf = b.run(&format!("{ds_name} gttf step"), || {
             let mut rng = Rng::new(7);
             let s = sampler.traverse(&ds.graph, &batch, &mut rng);
@@ -62,8 +63,8 @@ fn main() -> anyhow::Result<()> {
                 edge_dst: &plan.edge_dst,
                 edge_w: &plan.edge_w,
                 hist: &hist,
-                labels_i: if art.spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
-                labels_f: if art.spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
+                labels_i: if fspec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
+                labels_f: if fspec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
                 label_mask: &plan.st.label_mask,
                 deg: &plan.st.deg,
                 noise: &noise,
@@ -73,7 +74,6 @@ fn main() -> anyhow::Result<()> {
         });
         // GTTF working set: full program on the recursive neighborhood +
         // the materialized walk-forest index tensors
-        let fspec = &art.spec;
         let gttf_bytes = sample.nodes.len() * fspec.f * F32
             + 2 * fspec.layers * sample.nodes.len() * fspec.h * F32
             + sample.tensor_bytes;

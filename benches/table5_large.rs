@@ -11,7 +11,7 @@ use gas::baselines::{ClusterGcnTrainer, SageSampler};
 use gas::bench::{epochs_or, filter, print_table};
 use gas::config::Ctx;
 use gas::model::{Adam, Optimizer, ParamStore};
-use gas::runtime::StepInputs;
+use gas::runtime::{Executor, StepInputs};
 use gas::sched::batch::{BatchPlan, LabelSel};
 use gas::train::trainer::score;
 use gas::train::{FullBatchTrainer, Trainer};
@@ -38,6 +38,11 @@ fn main() -> anyhow::Result<()> {
         // --- GAS: GCN / GCNII / PNA ---------------------------------------
         for (model, reg) in [("gcn2", 0.0f32), ("gcnii8", 0.02), ("pna3", 0.0)] {
             let name = format!("{ds_name}_{model}_gas");
+            // e.g. pna is not in the native registry/interpreter
+            if let Err(e) = ctx.artifact(&name).map(|_| ()) {
+                eprintln!("skipping {name}: {e:#}");
+                continue;
+            }
             let (ds, art) = ctx.pair(ds_name, &name)?;
             let mut cfg = gas_config(epochs, 0.01, reg, 0);
             cfg.eval_every = 2;
@@ -68,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         {
             let name = format!("{ds_name}_gcn2_subg");
             let (ds, art) = ctx.pair(ds_name, &name)?;
-            let spec = &art.spec;
+            let spec = art.spec();
             let sampler = SageSampler::new(8, spec.layers);
             let mut params = ParamStore::init(&spec.params, 1)?;
             let mut opt = Adam::new(0.01).with_clip(1.0);
@@ -118,6 +123,10 @@ fn main() -> anyhow::Result<()> {
         for model in ["gcn2", "gcnii8", "pna3"] {
             let name = format!("{ds_name}_{model}_full");
             if !ctx.manifest.artifacts.contains_key(&name) {
+                continue;
+            }
+            if let Err(e) = ctx.artifact(&name).map(|_| ()) {
+                eprintln!("skipping {name}: {e:#}");
                 continue;
             }
             let (ds, art) = ctx.pair(ds_name, &name)?;

@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Gate the CI bench-smoke job on BENCH_fig3.json (native convergence).
+
+The fig3 bench trains panel (a) — GCN-2 on the synthetic cora profile —
+full-batch, naive-history and GAS, on the native backend (real fwd+bwd
+compute, no PJRT). This gate fails when training stops learning: GAS final
+validation accuracy below a floor (chance is 1/7 ~= 0.14), the GAS loss
+not dropping, or GAS drifting away from the full-batch reference. The
+budgets are deliberately loose — this catches "the backend broke", not
+few-point accuracy drift. Overridable via env:
+
+    GAS_FIG3_MIN_GAS_VAL     (default 0.30)
+    GAS_FIG3_MAX_GAP         (default 0.25, |GAS - full| final val acc)
+    GAS_FIG3_MAX_LOSS_RATIO  (default 0.80, final/first GAS train loss)
+
+Usage: python3 ci/check_bench_fig3.py [BENCH_fig3.json]
+"""
+import json
+import os
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_fig3.json"
+    with open(path) as f:
+        rec = json.load(f)
+
+    min_gas_val = float(os.environ.get("GAS_FIG3_MIN_GAS_VAL", "0.30"))
+    max_gap = float(os.environ.get("GAS_FIG3_MAX_GAP", "0.25"))
+    max_loss_ratio = float(os.environ.get("GAS_FIG3_MAX_LOSS_RATIO", "0.80"))
+
+    m = rec["metrics"]
+    failures = []
+
+    gas_val = m["a_gas_val"]
+    print(f"a_gas_val: {gas_val:.4f} (floor {min_gas_val})")
+    if gas_val < min_gas_val:
+        failures.append(f"GAS final val acc {gas_val:.4f} below floor {min_gas_val}")
+
+    gap = abs(m["a_gas_full_gap"])
+    print(f"|a_gas_full_gap|: {gap:.4f} (budget {max_gap})")
+    if gap > max_gap:
+        failures.append(f"|GAS - full| val gap {gap:.4f} over budget {max_gap}")
+
+    ratio = m["a_gas_loss_ratio"]
+    print(f"a_gas_loss_ratio: {ratio:.4f} (budget {max_loss_ratio})")
+    if not ratio == ratio or ratio > max_loss_ratio:  # NaN-safe
+        failures.append(f"GAS loss ratio {ratio} over budget {max_loss_ratio} (loss not dropping)")
+
+    naive = m["a_naive_val"]
+    print(f"a_naive_val: {naive:.4f} (sanity: finite)")
+    if not naive == naive:
+        failures.append("naive-history val acc is NaN")
+
+    if failures:
+        print("\nCONVERGENCE GATE FAILED:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("convergence gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,7 @@
 
 use gas::baselines::naive_history::{gas_config, naive_config};
 use gas::config::Ctx;
+use gas::runtime::Executor;
 use gas::train::Trainer;
 
 fn main() -> anyhow::Result<()> {
@@ -21,9 +22,9 @@ fn main() -> anyhow::Result<()> {
     println!("64-layer GCNII, cora profile, {} epochs", epochs);
     println!(
         "GAS memory note: histories = {} layers x {} nodes x {} dims (host RAM)",
-        art.spec.hist_layers(),
+        art.spec().hist_layers(),
         ds.n(),
-        art.spec.hist_dim
+        art.spec().hist_dim
     );
 
     let mut naive = Trainer::new(ds, art, naive_config(epochs, 0.01, 0))?;

@@ -10,6 +10,7 @@
 use gas::baselines::naive_history::gas_config;
 use gas::config::Ctx;
 use gas::memaccount::MemoryModel;
+use gas::runtime::Executor;
 use gas::train::Trainer;
 use gas::util::timer::Timer;
 
@@ -26,17 +27,17 @@ fn main() -> anyhow::Result<()> {
         ds.n(),
         ds.graph.num_directed_edges(),
         ds.profile.parts,
-        art.spec.nb,
-        art.spec.nh,
-        art.spec.e,
+        art.spec().nb,
+        art.spec().nh,
+        art.spec().e,
         t.elapsed_s()
     );
-    let mem = MemoryModel::new(ds, art.spec.layers, art.spec.h);
+    let mem = MemoryModel::new(ds, art.spec().layers, art.spec().h);
     println!(
         "device memory model: full-batch {:.2} GiB vs GAS {:.3} GiB (histories {:.1} MB in host RAM)",
         mem.full_batch().gib(),
         mem.gas(ds.profile.parts, 0).gib(),
-        (art.spec.hist_layers() * ds.n() * art.spec.hist_dim * 4) as f64 / 1e6,
+        (art.spec().hist_layers() * ds.n() * art.spec().hist_dim * 4) as f64 / 1e6,
     );
 
     let mut cfg = gas_config(epochs, 0.01, 0.0, 0);

@@ -1,0 +1,10 @@
+//! Pluggable execution backends behind [`crate::runtime::Executor`].
+//!
+//! * [`native`] — pure-Rust rayon interpreter of the GAS / full programs
+//!   (no PJRT, no compiled artifacts needed).
+//! * PJRT — [`crate::runtime::LoadedArtifact`], executing AOT-compiled
+//!   HLO through the `xla` bindings (stubbed offline).
+
+pub mod native;
+
+pub use native::{NativeArtifact, NativeStatics};

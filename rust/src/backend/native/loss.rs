@@ -1,0 +1,112 @@
+//! Masked task losses (forward + gradient w.r.t. logits), mirroring
+//! `python/compile/models.py::softmax_ce` / `bce_multilabel` exactly:
+//! per-row loss, weighted by the f32 mask, normalized by `max(Σmask, 1)`.
+
+/// Masked mean cross-entropy. `logits [n,c]`, `labels [n]` (class ids),
+/// `mask [n]`. Returns `(loss, dloss/dlogits)`.
+pub fn softmax_ce(
+    logits: &[f32],
+    n: usize,
+    c: usize,
+    labels: &[i32],
+    mask: &[f32],
+) -> (f32, Vec<f32>) {
+    let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
+    let mut loss = 0f64;
+    let mut dl = vec![0f32; n * c];
+    for v in 0..n {
+        if mask[v] == 0.0 {
+            continue;
+        }
+        let row = &logits[v * c..v * c + c];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for &l in row {
+            denom += (l - mx).exp();
+        }
+        let y = labels[v] as usize;
+        let logp_y = row[y] - mx - denom.ln();
+        loss += (-logp_y * mask[v] / msum) as f64;
+        let scale = mask[v] / msum;
+        let drow = &mut dl[v * c..v * c + c];
+        for j in 0..c {
+            let p = (row[j] - mx).exp() / denom;
+            drow[j] = scale * (p - if j == y { 1.0 } else { 0.0 });
+        }
+    }
+    (loss as f32, dl)
+}
+
+/// Masked mean multilabel binary cross-entropy (per-row mean over
+/// classes). `labels [n,c]` in {0,1}.
+pub fn bce_multilabel(
+    logits: &[f32],
+    n: usize,
+    c: usize,
+    labels: &[f32],
+    mask: &[f32],
+) -> (f32, Vec<f32>) {
+    let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
+    let mut loss = 0f64;
+    let mut dl = vec![0f32; n * c];
+    for v in 0..n {
+        if mask[v] == 0.0 {
+            continue;
+        }
+        let row = &logits[v * c..v * c + c];
+        let yrow = &labels[v * c..v * c + c];
+        let scale = mask[v] / (msum * c as f32);
+        let mut per = 0f64;
+        let drow = &mut dl[v * c..v * c + c];
+        for j in 0..c {
+            let (l, y) = (row[j], yrow[j]);
+            // log σ(l) and log σ(-l), numerically stable
+            let (log_p, log_np) = if l >= 0.0 {
+                (-(1.0 + (-l).exp()).ln(), -l - (1.0 + (-l).exp()).ln())
+            } else {
+                (l - (1.0 + l.exp()).ln(), -(1.0 + l.exp()).ln())
+            };
+            per += -(y * log_p + (1.0 - y) * log_np) as f64;
+            let sig = 1.0 / (1.0 + (-l).exp());
+            drow[j] = scale * (sig - y);
+        }
+        loss += per / c as f64 * (mask[v] / msum) as f64;
+    }
+    (loss as f32, dl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_on_uniform_logits_is_log_c() {
+        let logits = vec![0f32; 2 * 4];
+        let (loss, dl) = softmax_ce(&logits, 2, 4, &[1, 2], &[1.0, 1.0]);
+        assert!((loss - (4f32).ln()).abs() < 1e-6);
+        // gradient rows sum to zero and point away from the true class
+        for v in 0..2 {
+            let row = &dl[v * 4..v * 4 + 4];
+            assert!((row.iter().sum::<f32>()).abs() < 1e-6);
+        }
+        assert!(dl[1] < 0.0 && dl[0] > 0.0);
+    }
+
+    #[test]
+    fn masked_rows_contribute_nothing() {
+        let logits = vec![3.0, -1.0, 5.0, 0.5];
+        let (l1, d1) = softmax_ce(&logits, 2, 2, &[0, 1], &[1.0, 0.0]);
+        let (l2, _) = softmax_ce(&logits[..2], 1, 2, &[0], &[1.0]);
+        assert!((l1 - l2).abs() < 1e-6);
+        assert!(d1[2] == 0.0 && d1[3] == 0.0);
+    }
+
+    #[test]
+    fn bce_matches_hand_computation() {
+        // single row, c=2, labels [1, 0], logits [0, 0] => loss = ln 2
+        let (loss, dl) = bce_multilabel(&[0.0, 0.0], 1, 2, &[1.0, 0.0], &[1.0]);
+        assert!((loss - (2f32).ln()).abs() < 1e-6);
+        assert!((dl[0] + 0.25).abs() < 1e-6); // (σ(0)-1)/2
+        assert!((dl[1] - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,312 @@
+//! Native execution backend: a pure-Rust, rayon-parallel interpreter of
+//! [`ArtifactSpec`] programs — the GAS and full-batch computations for the
+//! `gcn`, `gcnii` and `gin` model families, with CSR scatter-gather
+//! message passing, dense GEMMs, historical-embedding splice at each layer
+//! boundary, masked CE/BCE losses, Lipschitz-noise regularization, and a
+//! hand-written backward pass producing `loss` / per-param `grads` / the
+//! `push` tensor / `logits` in exactly the compiled artifacts' output
+//! order ([`StepOutputs`]).
+//!
+//! This makes the whole GAS loop run end-to-end without PJRT: when no
+//! AOT-compiled artifact directory is present, [`crate::config::Ctx`]
+//! synthesizes specs from [`registry`] and executes them here.
+
+pub mod loss;
+pub mod models;
+pub mod ops;
+pub mod registry;
+
+use crate::runtime::executor::{Executor, Prepared};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::{StepInputs, StepOutputs};
+use anyhow::{bail, ensure, Result};
+use ops::EdgeIndex;
+
+/// GCNII hyperparameters baked into compiled artifacts; the interpreter
+/// carries them explicitly (values mirror python/compile/configs.py).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelHyper {
+    pub alpha: f32,
+    pub lam: f32,
+}
+
+impl Default for ModelHyper {
+    fn default() -> ModelHyper {
+        ModelHyper { alpha: 0.1, lam: 1.0 }
+    }
+}
+
+/// A spec bound to the native interpreter.
+pub struct NativeArtifact {
+    pub spec: ArtifactSpec,
+    hyper: ModelHyper,
+}
+
+/// Owned per-plan statics: the per-epoch-invariant tensors plus the CSR
+/// edge index (built once per plan — the native analog of the PJRT
+/// literal cache).
+pub struct NativeStatics {
+    x: Vec<f32>,
+    deg: Vec<f32>,
+    labels_i: Vec<i32>,
+    labels_f: Vec<f32>,
+    mask: Vec<f32>,
+    edges: EdgeIndex,
+    noise: Option<Vec<f32>>,
+}
+
+impl NativeArtifact {
+    pub fn new(spec: ArtifactSpec) -> Result<NativeArtifact> {
+        NativeArtifact::with_hyper(spec, ModelHyper::default())
+    }
+
+    pub fn with_hyper(spec: ArtifactSpec, hyper: ModelHyper) -> Result<NativeArtifact> {
+        match spec.model.as_str() {
+            "gcn" | "gcnii" | "gin" => {}
+            other => bail!(
+                "model {other:?} ({}) is not supported by the native backend \
+                 (supported: gcn, gcnii, gin); use --backend pjrt",
+                spec.name
+            ),
+        }
+        ensure!(
+            spec.program == "gas" || spec.program == "full",
+            "unknown program {:?} ({})",
+            spec.program,
+            spec.name
+        );
+        ensure!(spec.layers >= 2, "native backend wants >= 2 layers ({})", spec.name);
+        ensure!(
+            spec.loss == "ce" || spec.loss == "bce",
+            "unknown loss {:?} ({})",
+            spec.loss,
+            spec.name
+        );
+        ensure!(
+            spec.hist_dim == spec.h,
+            "hist_dim {} != h {} ({}): unsupported natively",
+            spec.hist_dim,
+            spec.h,
+            spec.name
+        );
+        Ok(NativeArtifact { spec, hyper })
+    }
+
+    fn n_src(&self) -> usize {
+        if self.spec.is_full() {
+            self.spec.nb
+        } else {
+            self.spec.nt
+        }
+    }
+
+    fn build_statics(&self, inp: &StepInputs, cache_noise: bool) -> Result<NativeStatics> {
+        let spec = &self.spec;
+        let rows = self.n_src();
+        ensure!(inp.x.len() == rows * spec.f, "x: want {} values", rows * spec.f);
+        ensure!(inp.deg.len() == rows, "deg: want {rows} values");
+        ensure!(inp.edge_src.len() == spec.e, "edge_src: want {} values", spec.e);
+        ensure!(inp.edge_dst.len() == spec.e, "edge_dst: want {} values", spec.e);
+        ensure!(inp.edge_w.len() == spec.e, "edge_w: want {} values", spec.e);
+        ensure!(inp.label_mask.len() >= spec.nb, "label_mask: want {} values", spec.nb);
+        let labels_i = match (spec.loss.as_str(), inp.labels_i) {
+            ("ce", Some(l)) => {
+                ensure!(l.len() >= spec.nb, "labels_i: want {} values", spec.nb);
+                l.to_vec()
+            }
+            ("ce", None) => bail!("ce loss needs labels_i"),
+            _ => Vec::new(),
+        };
+        let labels_f = match (spec.loss.as_str(), inp.labels_f) {
+            ("bce", Some(l)) => {
+                ensure!(l.len() >= spec.nb * spec.c, "labels_f: want {} values", spec.nb * spec.c);
+                l.to_vec()
+            }
+            ("bce", None) => bail!("bce loss needs labels_f"),
+            _ => Vec::new(),
+        };
+        let edges = EdgeIndex::build(inp.edge_src, inp.edge_dst, inp.edge_w, rows, spec.nb)?;
+        Ok(NativeStatics {
+            x: inp.x.to_vec(),
+            deg: inp.deg.to_vec(),
+            labels_i,
+            labels_f,
+            mask: inp.label_mask.to_vec(),
+            edges,
+            noise: if cache_noise { Some(inp.noise.to_vec()) } else { None },
+        })
+    }
+
+    fn run_impl(
+        &self,
+        params: &[Vec<f32>],
+        st: &NativeStatics,
+        hist: &[f32],
+        noise: &[f32],
+        reg_lambda: f32,
+    ) -> Result<StepOutputs> {
+        let spec = &self.spec;
+        if !spec.is_full() {
+            let want = spec.hist_layers() * spec.nh * spec.hist_dim;
+            ensure!(hist.len() == want, "hist: want {want} values, got {}", hist.len());
+        }
+        if reg_lambda > 0.0 && !spec.is_full() {
+            ensure!(
+                noise.len() >= self.n_src() * spec.h,
+                "noise: want at least {} values for the reg branch",
+                self.n_src() * spec.h
+            );
+        }
+        let cx = models::StepCtx {
+            spec,
+            edges: &st.edges,
+            x: &st.x,
+            deg: &st.deg,
+            labels_i: &st.labels_i,
+            labels_f: &st.labels_f,
+            mask: &st.mask,
+            hist,
+            noise,
+            reg_lambda,
+            alpha: self.hyper.alpha,
+            lam: self.hyper.lam,
+        };
+        models::run_model(&cx, params)
+    }
+}
+
+impl Executor for NativeArtifact {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn prepare_static(&self, inp: &StepInputs, cache_noise: bool) -> Result<Prepared> {
+        Ok(Prepared::new(self.build_statics(inp, cache_noise)?))
+    }
+
+    fn run_prepared(
+        &self,
+        params: &[Vec<f32>],
+        statics: &Prepared,
+        hist: &[f32],
+        noise: &[f32],
+        reg_lambda: f32,
+    ) -> Result<StepOutputs> {
+        let st = statics.downcast::<NativeStatics>()?;
+        let noise = st.noise.as_deref().unwrap_or(noise);
+        self.run_impl(params, st, hist, noise, reg_lambda)
+    }
+
+    fn run(&self, params: &[Vec<f32>], inp: &StepInputs) -> Result<StepOutputs> {
+        let st = self.build_statics(inp, false)?;
+        self.run_impl(params, &st, inp.hist, inp.noise, inp.reg_lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamStore;
+
+    /// Tiny hand-checkable gas spec: 3 batch rows + 2 halo rows.
+    fn tiny_gas_spec(model: &str, layers: usize) -> ArtifactSpec {
+        registry::test_spec(model, layers, "gas", 3, 2, 8, 4, 4, 3, "ce")
+    }
+
+    fn step_inputs<'a>(
+        spec: &ArtifactSpec,
+        x: &'a [f32],
+        edges: &'a (Vec<i32>, Vec<i32>, Vec<f32>),
+        hist: &'a [f32],
+        deg: &'a [f32],
+        labels: &'a [i32],
+        mask: &'a [f32],
+        noise: &'a [f32],
+    ) -> StepInputs<'a> {
+        let _ = spec;
+        StepInputs {
+            x,
+            edge_src: &edges.0,
+            edge_dst: &edges.1,
+            edge_w: &edges.2,
+            hist,
+            labels_i: Some(labels),
+            labels_f: None,
+            label_mask: mask,
+            deg,
+            noise,
+            reg_lambda: 0.0,
+        }
+    }
+
+    #[test]
+    fn native_gas_step_produces_full_outputs() {
+        let spec = tiny_gas_spec("gcn", 2);
+        let art = NativeArtifact::new(spec.clone()).unwrap();
+        let params = ParamStore::init(&spec.params, 1).unwrap();
+        // path 0-1-2 with halo sources 3,4 feeding rows 0 and 2
+        let x: Vec<f32> = (0..spec.nt * spec.f).map(|i| (i % 7) as f32 * 0.1).collect();
+        let mut src = vec![1, 0, 2, 1, 3, 4];
+        let mut dst = vec![0, 1, 1, 2, 0, 2];
+        let mut w = vec![0.5; 6];
+        src.resize(spec.e, 0);
+        dst.resize(spec.e, 0);
+        w.resize(spec.e, 0.0);
+        let edges = (src, dst, w);
+        let hist: Vec<f32> = vec![0.25; spec.hist_layers() * spec.nh * spec.hist_dim];
+        let deg = vec![2.0; spec.nt];
+        let labels = vec![0, 1, 2];
+        let mask = vec![1.0, 1.0, 1.0];
+        let noise = vec![0f32; spec.nt * spec.h];
+        let inp = step_inputs(&spec, &x, &edges, &hist, &deg, &labels, &mask, &noise);
+        let out = art.run(&params.tensors, &inp).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        assert_eq!(out.grads.len(), spec.params.len());
+        assert_eq!(out.push.len(), spec.hist_layers() * spec.nb * spec.hist_dim);
+        assert_eq!(out.logits.len(), spec.nb * spec.c);
+        // histories must actually feed the model: zeroing them changes loss
+        let hist0 = vec![0f32; hist.len()];
+        let inp0 = step_inputs(&spec, &x, &edges, &hist0, &deg, &labels, &mask, &noise);
+        let out0 = art.run(&params.tensors, &inp0).unwrap();
+        assert!((out.loss - out0.loss).abs() > 1e-7, "histories ignored");
+    }
+
+    #[test]
+    fn prepared_statics_match_run_from_scratch() {
+        for model in ["gcn", "gcnii", "gin"] {
+            let spec = tiny_gas_spec(model, 3);
+            let art = NativeArtifact::new(spec.clone()).unwrap();
+            let params = ParamStore::init(&spec.params, 2).unwrap();
+            let x: Vec<f32> = (0..spec.nt * spec.f).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+            let mut src = vec![1, 0, 2, 1, 3, 4];
+            let mut dst = vec![0, 1, 1, 2, 0, 2];
+            let mut w = vec![1.0; 6];
+            src.resize(spec.e, 0);
+            dst.resize(spec.e, 0);
+            w.resize(spec.e, 0.0);
+            let edges = (src, dst, w);
+            let hist: Vec<f32> = (0..spec.hist_layers() * spec.nh * spec.hist_dim)
+                .map(|i| (i % 3) as f32 * 0.1)
+                .collect();
+            let deg = vec![2.0; spec.nt];
+            let labels = vec![0, 1, 2];
+            let mask = vec![1.0, 0.0, 1.0];
+            let noise = vec![0f32; spec.nt * spec.h];
+            let inp = step_inputs(&spec, &x, &edges, &hist, &deg, &labels, &mask, &noise);
+            let direct = art.run(&params.tensors, &inp).unwrap();
+            let prep = art.prepare_static(&inp, true).unwrap();
+            let cached = art.run_prepared(&params.tensors, &prep, &hist, &noise, 0.0).unwrap();
+            assert_eq!(direct.loss, cached.loss, "{model}");
+            assert_eq!(direct.grads, cached.grads, "{model}");
+            assert_eq!(direct.push, cached.push, "{model}");
+            assert_eq!(direct.logits, cached.logits, "{model}");
+        }
+    }
+
+    #[test]
+    fn unsupported_model_is_rejected_with_hint() {
+        let spec = registry::test_spec("gat", 2, "gas", 3, 2, 8, 4, 4, 3, "ce");
+        let err = NativeArtifact::new(spec).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,267 @@
+//! Dense + scatter primitives for the native interpreter, all
+//! rayon-parallel over output rows. Every op accumulates each output row
+//! on a single thread (sequential inner loops), so results are
+//! deterministic for a given input regardless of thread count — the
+//! property the seed-pinned experiment harnesses rely on.
+
+use anyhow::{ensure, Result};
+use rayon::prelude::*;
+
+/// Padded COO edge lists re-indexed into two CSR views: by destination
+/// (forward scatter) and by source (backward scatter-transpose). Edges
+/// with weight 0 are padding and are dropped at build time, so both
+/// scatters touch only real messages.
+pub struct EdgeIndex {
+    pub n_src: usize,
+    pub n_out: usize,
+    dst_off: Vec<u32>,
+    dst_src: Vec<u32>,
+    dst_w: Vec<f32>,
+    src_off: Vec<u32>,
+    src_dst: Vec<u32>,
+    src_w: Vec<f32>,
+}
+
+impl EdgeIndex {
+    /// Build both CSR views from padded COO lists. `n_src` bounds source
+    /// indices (NT for gas programs, NB for full), `n_out` bounds
+    /// destinations (always NB).
+    pub fn build(
+        src: &[i32],
+        dst: &[i32],
+        w: &[f32],
+        n_src: usize,
+        n_out: usize,
+    ) -> Result<EdgeIndex> {
+        ensure!(src.len() == dst.len() && src.len() == w.len(), "edge list length mismatch");
+        let mut dst_cnt = vec![0u32; n_out + 1];
+        let mut src_cnt = vec![0u32; n_src + 1];
+        let mut real = 0usize;
+        for e in 0..src.len() {
+            if w[e] == 0.0 {
+                continue;
+            }
+            let (s, d) = (src[e], dst[e]);
+            ensure!(s >= 0 && (s as usize) < n_src, "edge src {s} out of range {n_src}");
+            ensure!(d >= 0 && (d as usize) < n_out, "edge dst {d} out of range {n_out}");
+            dst_cnt[d as usize + 1] += 1;
+            src_cnt[s as usize + 1] += 1;
+            real += 1;
+        }
+        for v in 0..n_out {
+            dst_cnt[v + 1] += dst_cnt[v];
+        }
+        for v in 0..n_src {
+            src_cnt[v + 1] += src_cnt[v];
+        }
+        let dst_off = dst_cnt.clone();
+        let src_off = src_cnt.clone();
+        let mut dst_src = vec![0u32; real];
+        let mut dst_w = vec![0f32; real];
+        let mut src_dst = vec![0u32; real];
+        let mut src_w = vec![0f32; real];
+        let mut dst_fill = dst_off.clone();
+        let mut src_fill = src_off.clone();
+        for e in 0..src.len() {
+            if w[e] == 0.0 {
+                continue;
+            }
+            let (s, d) = (src[e] as usize, dst[e] as usize);
+            let i = dst_fill[d] as usize;
+            dst_src[i] = s as u32;
+            dst_w[i] = w[e];
+            dst_fill[d] += 1;
+            let i = src_fill[s] as usize;
+            src_dst[i] = d as u32;
+            src_w[i] = w[e];
+            src_fill[s] += 1;
+        }
+        Ok(EdgeIndex { n_src, n_out, dst_off, dst_src, dst_w, src_off, src_dst, src_w })
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.dst_src.len()
+    }
+
+    /// Forward scatter-sum: `out[v] = Σ_{(s,w) -> v} w * z[s]`, `z` is
+    /// `[n_src, d]`, result `[n_out, d]`.
+    pub fn scatter(&self, z: &[f32], d: usize) -> Vec<f32> {
+        debug_assert!(z.len() >= self.n_src * d);
+        let mut out = vec![0f32; self.n_out * d];
+        out.par_chunks_mut(d).enumerate().for_each(|(v, row)| {
+            for e in self.dst_off[v] as usize..self.dst_off[v + 1] as usize {
+                let base = self.dst_src[e] as usize * d;
+                let we = self.dst_w[e];
+                for j in 0..d {
+                    row[j] += we * z[base + j];
+                }
+            }
+        });
+        out
+    }
+
+    /// Backward scatter-transpose, accumulating: `out[s] += Σ_{s -> (d,w)}
+    /// w * dh[d]`, `dh` is `[n_out, d]`, `out` is `[n_src, d]`.
+    pub fn scatter_t_acc(&self, dh: &[f32], d: usize, out: &mut [f32]) {
+        debug_assert!(dh.len() >= self.n_out * d);
+        debug_assert!(out.len() >= self.n_src * d);
+        out.par_chunks_mut(d).enumerate().for_each(|(s, row)| {
+            for e in self.src_off[s] as usize..self.src_off[s + 1] as usize {
+                let base = self.src_dst[e] as usize * d;
+                let we = self.src_w[e];
+                for j in 0..d {
+                    row[j] += we * dh[base + j];
+                }
+            }
+        });
+    }
+}
+
+/// `a [n,k] @ b [k,m] -> [n,m]`, row-major. Zero rows of `a` (shape
+/// padding) are skipped entirely.
+pub fn matmul(a: &[f32], n: usize, k: usize, b: &[f32], m: usize) -> Vec<f32> {
+    debug_assert!(a.len() >= n * k && b.len() >= k * m);
+    let mut out = vec![0f32; n * m];
+    out.par_chunks_mut(m).enumerate().for_each(|(v, row)| {
+        for kk in 0..k {
+            let avk = a[v * k + kk];
+            if avk != 0.0 {
+                let brow = &b[kk * m..kk * m + m];
+                for j in 0..m {
+                    row[j] += avk * brow[j];
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `a [n,m] @ b[k,m]^T -> [n,k]` (used for `dz @ W^T`).
+pub fn matmul_bt(a: &[f32], n: usize, m: usize, b: &[f32], k: usize) -> Vec<f32> {
+    debug_assert!(a.len() >= n * m && b.len() >= k * m);
+    let mut out = vec![0f32; n * k];
+    out.par_chunks_mut(k).enumerate().for_each(|(v, row)| {
+        let arow = &a[v * m..v * m + m];
+        for (i, cell) in row.iter_mut().enumerate() {
+            let brow = &b[i * m..i * m + m];
+            let mut acc = 0f32;
+            for j in 0..m {
+                acc += arow[j] * brow[j];
+            }
+            *cell = acc;
+        }
+    });
+    out
+}
+
+/// `out [k,m] += a[n,k]^T @ da [n,m]` (parameter gradients).
+pub fn matmul_at_b_acc(a: &[f32], n: usize, k: usize, da: &[f32], m: usize, out: &mut [f32]) {
+    debug_assert!(a.len() >= n * k && da.len() >= n * m && out.len() >= k * m);
+    out.par_chunks_mut(m).enumerate().for_each(|(i, row)| {
+        for v in 0..n {
+            let avi = a[v * k + i];
+            if avi != 0.0 {
+                let drow = &da[v * m..v * m + m];
+                for j in 0..m {
+                    row[j] += avi * drow[j];
+                }
+            }
+        }
+    });
+}
+
+/// `out [m] += Σ_rows a [n,m]` (bias gradients).
+pub fn colsum_acc(a: &[f32], n: usize, m: usize, out: &mut [f32]) {
+    debug_assert!(a.len() >= n * m && out.len() >= m);
+    for v in 0..n {
+        let row = &a[v * m..v * m + m];
+        for j in 0..m {
+            out[j] += row[j];
+        }
+    }
+}
+
+/// Broadcast-add a bias row over `n` rows of `x [n,m]`.
+pub fn add_bias(x: &mut [f32], n: usize, m: usize, b: &[f32]) {
+    debug_assert!(x.len() >= n * m && b.len() >= m);
+    for v in 0..n {
+        let row = &mut x[v * m..v * m + m];
+        for j in 0..m {
+            row[j] += b[j];
+        }
+    }
+}
+
+/// Elementwise `max(x, 0)`.
+pub fn relu(pre: &[f32]) -> Vec<f32> {
+    pre.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
+}
+
+/// ReLU backward: `dh ⊙ [pre > 0]` (derivative 0 at exactly 0, as in jax).
+pub fn relu_bwd(dh: &[f32], pre: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(dh.len(), pre.len());
+    dh.iter()
+        .zip(pre.iter())
+        .map(|(&g, &p)| if p > 0.0 { g } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_index_drops_padding_and_scatters() {
+        // 2 real edges into dst 0 (from src 1 w=2, src 2 w=1), padding after
+        let src = [1, 2, 0, 0];
+        let dst = [0, 0, 0, 0];
+        let w = [2.0, 1.0, 0.0, 0.0];
+        let ei = EdgeIndex::build(&src, &dst, &w, 3, 2).unwrap();
+        assert_eq!(ei.num_edges(), 2);
+        let z = [10.0, 20.0, 1.0, 2.0, 100.0, 200.0]; // [3,2]
+        let out = ei.scatter(&z, 2);
+        assert_eq!(out, vec![2.0 * 1.0 + 100.0, 2.0 * 2.0 + 200.0, 0.0, 0.0]);
+        // transpose: dh over 2 dst rows back onto 3 src rows
+        let dh = [1.0, 1.0, 5.0, 5.0];
+        let mut back = vec![0f32; 6];
+        ei.scatter_t_acc(&dh, 2, &mut back);
+        assert_eq!(back, vec![0.0, 0.0, 2.0, 2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn edge_index_rejects_out_of_range() {
+        assert!(EdgeIndex::build(&[5], &[0], &[1.0], 3, 2).is_err());
+        assert!(EdgeIndex::build(&[0], &[7], &[1.0], 3, 2).is_err());
+        // out-of-range padding (w=0) is ignored, matching padded artifacts
+        assert!(EdgeIndex::build(&[0, -1], &[0, 9], &[1.0, 0.0], 3, 2).is_ok());
+    }
+
+    #[test]
+    fn matmul_matches_hand_result() {
+        // [2,3] @ [3,2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let out = matmul(&a, 2, 3, &b, 2);
+        assert_eq!(out, vec![4.0, 5.0, 10.0, 11.0]);
+        // a @ b^T with b [2,3]
+        let bt = matmul_bt(&a, 2, 3, &[1.0, 1.0, 0.0, 0.0, 0.0, 2.0], 2);
+        assert_eq!(bt, vec![3.0, 6.0, 9.0, 12.0]);
+        // a^T @ da accumulates
+        let mut w = vec![0f32; 3 * 2];
+        matmul_at_b_acc(&a, 2, 3, &[1.0, 0.0, 0.0, 1.0], 2, &mut w);
+        assert_eq!(w, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn relu_and_bias_helpers() {
+        let pre = [-1.0, 0.0, 2.0];
+        assert_eq!(relu(&pre), vec![0.0, 0.0, 2.0]);
+        assert_eq!(relu_bwd(&[5.0, 5.0, 5.0], &pre), vec![0.0, 0.0, 5.0]);
+        let mut x = vec![1.0, 1.0, 1.0, 1.0];
+        add_bias(&mut x, 2, 2, &[1.0, -1.0]);
+        assert_eq!(x, vec![2.0, 0.0, 2.0, 0.0]);
+        let mut cs = vec![0f32; 2];
+        colsum_acc(&x, 2, 2, &mut cs);
+        assert_eq!(cs, vec![4.0, 0.0]);
+    }
+}

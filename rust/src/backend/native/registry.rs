@@ -1,0 +1,486 @@
+//! Native artifact registry: synthesizes [`ArtifactSpec`]s (and the
+//! dataset profiles behind them) without a compiled manifest, mirroring
+//! `python/compile/configs.py` — the same padded shapes, parameter specs
+//! and artifact names, restricted to the model families the native
+//! interpreter implements (gcn, gcnii, gin). When an AOT manifest *is*
+//! present it remains the source of truth; this registry is the fallback
+//! that makes `--backend native` work from a bare checkout.
+
+use crate::graph::datasets::Profile;
+use crate::runtime::manifest::{ArtifactSpec, InputKind, InputSpec, Manifest, ParamSpec};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Default layer counts per model family (configs.py MODEL_LAYERS).
+pub fn default_layers(model: &str) -> usize {
+    match model {
+        "gcn" => 2,
+        "gat" => 2,
+        "appnp" => 10,
+        "gcnii" => 8,
+        "gin" => 4,
+        "pna" => 3,
+        _ => 2,
+    }
+}
+
+fn edge_weight_kind(model: &str) -> &'static str {
+    match model {
+        "gcn" | "gcnii" | "appnp" => "gcn_norm",
+        _ => "ones",
+    }
+}
+
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Padded GAS batch shapes for a profile (configs.py `_gas_shapes`).
+fn gas_shapes(p: &Profile) -> (usize, usize, usize) {
+    let nb = (p.n as f64 / p.parts as f64 * 1.5).ceil() as usize;
+    let nh = p.n.min(8 * nb);
+    let e = round_up((p.avg_deg * nb as f64 * 3.0) as usize + 64, 256);
+    (nb, nh, e)
+}
+
+/// Full-program shapes (configs.py `_full_shapes`).
+fn full_shapes(p: &Profile) -> (usize, usize, usize) {
+    let e = round_up((p.n as f64 * p.avg_deg * 1.10) as usize + 64, 256);
+    (p.n, 0, e)
+}
+
+fn glorot(name: &str, shape: &[usize]) -> ParamSpec {
+    ParamSpec { name: name.into(), shape: shape.to_vec(), init: "glorot".into() }
+}
+
+fn zeros(name: &str, shape: &[usize]) -> ParamSpec {
+    ParamSpec { name: name.into(), shape: shape.to_vec(), init: "zeros".into() }
+}
+
+/// Ordered parameter list (models.py `param_specs`) for the native models.
+pub fn param_specs(model: &str, layers: usize, f: usize, h: usize, c: usize) -> Vec<ParamSpec> {
+    let mut specs = Vec::new();
+    match model {
+        "gcn" => {
+            let mut dims = vec![h; layers + 1];
+            dims[0] = f;
+            dims[layers] = c;
+            for l in 0..layers {
+                specs.push(glorot(&format!("w{l}"), &[dims[l], dims[l + 1]]));
+                specs.push(zeros(&format!("b{l}"), &[dims[l + 1]]));
+            }
+        }
+        "gin" => {
+            let mut dims = vec![h; layers + 1];
+            dims[0] = f;
+            for l in 0..layers {
+                specs.push(glorot(&format!("mlp{l}_w1"), &[dims[l], h]));
+                specs.push(zeros(&format!("mlp{l}_b1"), &[h]));
+                specs.push(glorot(&format!("mlp{l}_w2"), &[h, h]));
+                specs.push(zeros(&format!("mlp{l}_b2"), &[h]));
+                specs.push(zeros(&format!("eps{l}"), &[1]));
+            }
+            specs.push(glorot("head_w", &[h, c]));
+            specs.push(zeros("head_b", &[c]));
+        }
+        "gcnii" => {
+            specs.push(glorot("w_in", &[f, h]));
+            specs.push(zeros("b_in", &[h]));
+            specs.push(glorot("w_stack", &[layers, h, h]));
+            specs.push(glorot("w_out", &[h, c]));
+            specs.push(zeros("b_out", &[c]));
+        }
+        _ => {}
+    }
+    specs
+}
+
+/// Input tensor layout in artifact order (models.py `example_inputs`).
+fn input_specs(spec: &ArtifactSpec) -> Vec<InputSpec> {
+    let mut inputs: Vec<InputSpec> = spec
+        .params
+        .iter()
+        .map(|p| InputSpec {
+            name: p.name.clone(),
+            kind: InputKind::Param,
+            shape: p.shape.clone(),
+            dtype: "f32".into(),
+        })
+        .collect();
+    let n_in = spec.n_in();
+    let f32s = |name: &str, kind: InputKind, shape: Vec<usize>| InputSpec {
+        name: name.into(),
+        kind,
+        shape,
+        dtype: "f32".into(),
+    };
+    let i32s = |name: &str, kind: InputKind, shape: Vec<usize>| InputSpec {
+        name: name.into(),
+        kind,
+        shape,
+        dtype: "i32".into(),
+    };
+    inputs.push(f32s("x", InputKind::X, vec![n_in, spec.f]));
+    inputs.push(i32s("edge_src", InputKind::EdgeSrc, vec![spec.e]));
+    inputs.push(i32s("edge_dst", InputKind::EdgeDst, vec![spec.e]));
+    inputs.push(f32s("edge_w", InputKind::EdgeW, vec![spec.e]));
+    if spec.is_full() {
+        inputs.push(f32s("hist", InputKind::Hist, vec![1, 1, 1]));
+    } else {
+        inputs.push(f32s(
+            "hist",
+            InputKind::Hist,
+            vec![spec.hist_layers(), spec.nh, spec.hist_dim],
+        ));
+    }
+    if spec.loss == "ce" {
+        inputs.push(i32s("labels", InputKind::Labels, vec![spec.nb]));
+    } else {
+        inputs.push(f32s("labels", InputKind::Labels, vec![spec.nb, spec.c]));
+    }
+    inputs.push(f32s("label_mask", InputKind::LabelMask, vec![spec.nb]));
+    inputs.push(f32s("deg", InputKind::Deg, vec![n_in]));
+    inputs.push(f32s("noise", InputKind::Noise, vec![n_in, spec.hist_dim.max(spec.h)]));
+    inputs.push(f32s("reg_lambda", InputKind::RegLambda, vec![]));
+    inputs
+}
+
+fn finish_spec(mut spec: ArtifactSpec) -> ArtifactSpec {
+    spec.params = param_specs(&spec.model, spec.layers, spec.f, spec.h, spec.c);
+    spec.inputs = input_specs(&spec);
+    spec
+}
+
+/// Synthesize the spec for `(profile, model, layers, program)` with the
+/// exact shapes `python/compile/configs.py::make_config` would emit.
+pub fn spec_for_profile(
+    p: &Profile,
+    model: &str,
+    layers: usize,
+    program: &str,
+    suffix: &str,
+) -> Result<ArtifactSpec> {
+    match model {
+        "gcn" | "gcnii" | "gin" => {}
+        other => bail!("native registry does not synthesize model {other:?}"),
+    }
+    let (nb, nh, e) = match program {
+        "gas" => gas_shapes(p),
+        "full" => full_shapes(p),
+        other => bail!("unknown program {other:?}"),
+    };
+    let h = 64usize;
+    let loss = if p.multilabel { "bce" } else { "ce" };
+    Ok(finish_spec(ArtifactSpec {
+        name: format!("{}_{model}{layers}_{program}{suffix}", p.name),
+        file: String::new(),
+        model: model.into(),
+        program: program.into(),
+        dataset: p.name.clone(),
+        nb,
+        nh,
+        nt: nb + nh,
+        e,
+        f: p.f,
+        h,
+        c: p.c,
+        layers,
+        hist_dim: h,
+        loss: loss.into(),
+        edge_weight: edge_weight_kind(model).into(),
+        params: Vec::new(),
+        inputs: Vec::new(),
+    }))
+}
+
+/// Cluster-GCN / SAGE subgraph spec: the `full` program padded to the gas
+/// batch size (configs.py `{name}_gcn2_subg`).
+fn subg_spec(p: &Profile) -> ArtifactSpec {
+    let (nb, nh, e) = gas_shapes(p);
+    let loss = if p.multilabel { "bce" } else { "ce" };
+    finish_spec(ArtifactSpec {
+        name: format!("{}_gcn2_subg", p.name),
+        file: String::new(),
+        model: "gcn".into(),
+        program: "full".into(),
+        dataset: p.name.clone(),
+        nb: nb + nh,
+        nh: 0,
+        nt: nb + nh,
+        e,
+        f: p.f,
+        h: 64,
+        c: p.c,
+        layers: 2,
+        hist_dim: 64,
+        loss: loss.into(),
+        edge_weight: "gcn_norm".into(),
+        params: Vec::new(),
+        inputs: Vec::new(),
+    })
+}
+
+/// Fig.-4 synthetic GIN-4 spec with a swept halo size.
+fn fig4_spec(nh: usize) -> ArtifactSpec {
+    let nb = 4096usize;
+    let e = round_up(60 * nb + 60 * nh + 64, 256);
+    finish_spec(ArtifactSpec {
+        name: format!("fig4_gin4_nh{nh}"),
+        file: String::new(),
+        model: "gin".into(),
+        program: "gas".into(),
+        dataset: String::new(),
+        nb,
+        nh,
+        nt: nb + nh,
+        e,
+        f: 64,
+        h: 64,
+        c: 8,
+        layers: 4,
+        hist_dim: 64,
+        loss: "ce".into(),
+        edge_weight: "ones".into(),
+        params: Vec::new(),
+        inputs: Vec::new(),
+    })
+}
+
+fn profile(
+    name: &str,
+    kind: &str,
+    n: usize,
+    f: usize,
+    c: usize,
+    avg_deg: f64,
+    parts: usize,
+    paper_n: usize,
+    train_frac: f64,
+    multilabel: bool,
+) -> Profile {
+    Profile {
+        name: name.into(),
+        kind: kind.into(),
+        n,
+        f,
+        c,
+        avg_deg,
+        multilabel,
+        train_frac,
+        val_frac: 0.15,
+        homophily: 0.8,
+        feat_noise: 1.0,
+        parts,
+        paper_n,
+        seed: 7,
+    }
+}
+
+/// The dataset profiles of configs.py (small transductive + scaled large).
+pub fn profiles() -> Vec<Profile> {
+    vec![
+        profile("cora", "planted", 2708, 256, 7, 3.9, 4, 2708, 0.052, false),
+        profile("citeseer", "planted", 3327, 256, 6, 2.8, 4, 3327, 0.036, false),
+        profile("pubmed", "planted", 6000, 128, 3, 4.5, 6, 19717, 0.02, false),
+        profile("coauthor_cs", "planted", 6000, 256, 15, 8.9, 8, 18333, 0.016, false),
+        profile("coauthor_physics", "planted", 6000, 128, 5, 12.0, 8, 34493, 0.01, false),
+        profile("amazon_computer", "planted", 6000, 128, 10, 16.0, 8, 13752, 0.015, false),
+        profile("amazon_photo", "planted", 5000, 128, 8, 16.0, 8, 7650, 0.021, false),
+        profile("wiki_cs", "planted", 4000, 128, 10, 14.0, 8, 11701, 0.05, false),
+        profile("cluster", "sbm", 24000, 6, 6, 12.0, 32, 1406436, 0.8335, false),
+        profile("reddit", "planted", 40000, 128, 41, 24.0, 40, 232965, 0.65, false),
+        profile("ppi", "planted", 12000, 64, 40, 14.0, 20, 56944, 0.75, true),
+        profile("flickr", "planted", 20000, 128, 7, 10.0, 24, 89250, 0.50, false),
+        profile("yelp", "planted", 40000, 64, 50, 10.0, 40, 716847, 0.70, true),
+        profile("arxiv", "planted", 30000, 128, 40, 7.0, 32, 169343, 0.54, false),
+        profile("products", "planted", 120000, 100, 47, 15.0, 96, 2449029, 0.08, false),
+    ]
+}
+
+const SMALL: [&str; 8] = [
+    "cora",
+    "citeseer",
+    "pubmed",
+    "coauthor_cs",
+    "coauthor_physics",
+    "amazon_computer",
+    "amazon_photo",
+    "wiki_cs",
+];
+const LARGE: [&str; 7] = ["cluster", "reddit", "ppi", "flickr", "yelp", "arxiv", "products"];
+
+/// Build the synthesized manifest: every configs.py artifact whose model
+/// the native interpreter supports, plus all dataset profiles.
+pub fn native_manifest() -> Manifest {
+    let profs = profiles();
+    let by_name: BTreeMap<String, Profile> =
+        profs.iter().map(|p| (p.name.clone(), p.clone())).collect();
+    let mut artifacts: BTreeMap<String, ArtifactSpec> = BTreeMap::new();
+    let mut add = |s: ArtifactSpec| {
+        artifacts.insert(s.name.clone(), s);
+    };
+    // Table 1/2: gcn2 + gcnii8, gas and full, on the small benchmarks
+    for name in SMALL {
+        let p = &by_name[name];
+        for (model, layers) in [("gcn", 2), ("gcnii", 8)] {
+            add(spec_for_profile(p, model, layers, "gas", "").unwrap());
+            add(spec_for_profile(p, model, layers, "full", "").unwrap());
+        }
+    }
+    // Fig. 3: deep GCNII-64 on cora, expressive GIN-4 on CLUSTER
+    add(spec_for_profile(&by_name["cora"], "gcnii", 64, "gas", "_deep").unwrap());
+    add(spec_for_profile(&by_name["cora"], "gcnii", 64, "full", "_deep").unwrap());
+    add(spec_for_profile(&by_name["cluster"], "gin", 4, "gas", "").unwrap());
+    add(spec_for_profile(&by_name["cluster"], "gin", 4, "full", "").unwrap());
+    // Table 4: 4-layer GCN
+    for name in ["cora", "pubmed", "ppi", "flickr"] {
+        let p = &by_name[name];
+        add(spec_for_profile(p, "gcn", 4, "gas", "").unwrap());
+        add(spec_for_profile(p, "gcn", 4, "full", "").unwrap());
+    }
+    // Table 3/5: large datasets via GAS (pna omitted: unsupported natively)
+    for name in LARGE {
+        if name == "cluster" {
+            continue;
+        }
+        let p = &by_name[name];
+        add(spec_for_profile(p, "gcn", 2, "gas", "").unwrap());
+        add(spec_for_profile(p, "gcnii", 8, "gas", "").unwrap());
+    }
+    for name in ["flickr", "arxiv"] {
+        let p = &by_name[name];
+        add(spec_for_profile(p, "gcn", 2, "full", "").unwrap());
+        add(spec_for_profile(p, "gcnii", 8, "full", "").unwrap());
+    }
+    // Cluster-GCN / SAGE subgraph programs
+    for p in &profs {
+        add(subg_spec(p));
+    }
+    // Fig. 4 halo sweep
+    for nh in [512, 1024, 2048, 4096, 8192, 16384] {
+        add(fig4_spec(nh));
+    }
+    Manifest {
+        dir: PathBuf::from("<native-registry>"),
+        artifacts,
+        profiles: by_name,
+    }
+}
+
+/// Hand-sized spec for unit tests (pub so integration tests and the mod
+/// tests can build tiny artifacts without a profile).
+pub fn test_spec(
+    model: &str,
+    layers: usize,
+    program: &str,
+    nb: usize,
+    nh: usize,
+    e: usize,
+    f: usize,
+    h: usize,
+    c: usize,
+    loss: &str,
+) -> ArtifactSpec {
+    finish_spec(ArtifactSpec {
+        name: format!("test_{model}{layers}_{program}"),
+        file: String::new(),
+        model: model.into(),
+        program: program.into(),
+        dataset: "test".into(),
+        nb,
+        nh: if program == "full" { 0 } else { nh },
+        nt: if program == "full" { nb } else { nb + nh },
+        e,
+        f,
+        h,
+        c,
+        layers,
+        hist_dim: h,
+        loss: loss.into(),
+        edge_weight: edge_weight_kind(model).into(),
+        params: Vec::new(),
+        inputs: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_configs_py() {
+        // cora gas: nb = ceil(2708/4*1.5) = 1016, nh = min(2708, 8*1016),
+        // e = round_up(int(3.9*1016*3)+64, 256) = round_up(11951, 256)
+        let m = native_manifest();
+        let s = m.artifact("cora_gcn2_gas").unwrap();
+        assert_eq!(s.nb, 1016);
+        assert_eq!(s.nh, 2708);
+        assert_eq!(s.nt, 1016 + 2708);
+        assert_eq!(s.e, 12032);
+        assert_eq!(s.hist_dim, 64);
+        assert_eq!(s.edge_weight, "gcn_norm");
+        let full = m.artifact("cora_gcn2_full").unwrap();
+        assert_eq!(full.nb, 2708);
+        assert_eq!(full.nh, 0);
+        assert_eq!(full.e, round_up((2708f64 * 3.9 * 1.10) as usize + 64, 256));
+    }
+
+    #[test]
+    fn registry_has_the_bench_artifacts() {
+        let m = native_manifest();
+        for name in [
+            "cora_gcn2_gas",
+            "cora_gcn2_full",
+            "cora_gcnii8_gas",
+            "cora_gcnii64_gas_deep",
+            "cora_gcnii64_full_deep",
+            "cluster_gin4_gas",
+            "cluster_gin4_full",
+            "cora_gcn4_gas",
+            "cora_gcn4_full",
+            "ppi_gcn2_gas",
+            "cora_gcn2_subg",
+            "products_gcn2_gas",
+            "fig4_gin4_nh512",
+            "fig4_gin4_nh16384",
+        ] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+        assert!(m.profile("cora").unwrap().n == 2708);
+        assert!(m.profile("ppi").unwrap().multilabel);
+        // every synthesized artifact parses into a padded, param'd spec
+        for (name, s) in &m.artifacts {
+            assert!(!s.params.is_empty(), "{name} has no params");
+            assert!(!s.inputs.is_empty(), "{name} has no inputs");
+            assert!(s.nt == s.nb + s.nh, "{name} nt mismatch");
+        }
+    }
+
+    #[test]
+    fn param_specs_mirror_models_py() {
+        let gcn = param_specs("gcn", 2, 8, 16, 3);
+        let names: Vec<&str> = gcn.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["w0", "b0", "w1", "b1"]);
+        assert_eq!(gcn[0].shape, vec![8, 16]);
+        assert_eq!(gcn[2].shape, vec![16, 3]);
+        let gcnii = param_specs("gcnii", 8, 8, 16, 3);
+        let names: Vec<&str> = gcnii.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["w_in", "b_in", "w_stack", "w_out", "b_out"]);
+        assert_eq!(gcnii[2].shape, vec![8, 16, 16]);
+        let gin = param_specs("gin", 2, 8, 16, 3);
+        assert_eq!(gin.len(), 2 * 5 + 2);
+        assert_eq!(gin[0].shape, vec![8, 16]);
+        assert_eq!(gin.last().unwrap().name, "head_b");
+    }
+
+    #[test]
+    fn multilabel_profiles_get_bce_artifacts() {
+        let m = native_manifest();
+        // configs.py: loss follows the profile's multilabel flag
+        assert_eq!(m.artifact("ppi_gcn2_gas").unwrap().loss, "bce");
+        assert_eq!(m.artifact("ppi_gcn4_gas").unwrap().loss, "bce");
+        assert_eq!(m.artifact("yelp_gcnii8_gas").unwrap().loss, "bce");
+        assert_eq!(m.artifact("cora_gcn2_gas").unwrap().loss, "ce");
+    }
+}

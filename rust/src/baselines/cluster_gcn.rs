@@ -8,7 +8,7 @@
 use crate::graph::datasets::Dataset;
 use crate::model::{Adam, Optimizer, ParamStore};
 use crate::partition::metis_partition;
-use crate::runtime::{LoadedArtifact, StepInputs};
+use crate::runtime::{Executor, StepInputs};
 use crate::sched::batch::{BatchPlan, LabelSel};
 use crate::sched::scheduler::EpochScheduler;
 use crate::train::curve::Curve;
@@ -17,7 +17,7 @@ use anyhow::{ensure, Result};
 
 pub struct ClusterGcnTrainer<'a> {
     ds: &'a Dataset,
-    art: &'a LoadedArtifact,
+    art: &'a dyn Executor,
     plans: Vec<BatchPlan>,
     pub params: ParamStore,
     opt: Adam,
@@ -40,12 +40,12 @@ impl<'a> ClusterGcnTrainer<'a> {
     /// artifact's padded nb is suitable: clusters are the same parts).
     pub fn new(
         ds: &'a Dataset,
-        art: &'a LoadedArtifact,
+        art: &'a dyn Executor,
         parts: usize,
         lr: f32,
         seed: u64,
     ) -> Result<ClusterGcnTrainer<'a>> {
-        let spec = &art.spec;
+        let spec = art.spec();
         ensure!(spec.program == "full", "ClusterGcnTrainer wants a full artifact");
         let part = metis_partition(&ds.graph, parts, seed);
         let mut groups: Vec<Vec<u32>> = vec![Vec::new(); parts];
@@ -110,7 +110,7 @@ impl<'a> ClusterGcnTrainer<'a> {
     }
 
     fn run_plan(&mut self, b: usize) -> Result<crate::runtime::StepOutputs> {
-        let spec = &self.art.spec;
+        let spec = self.art.spec();
         let plan = &self.plans[b];
         let inputs = StepInputs {
             x: &plan.st.x,
@@ -130,8 +130,7 @@ impl<'a> ClusterGcnTrainer<'a> {
 
     /// Inference also stays intra-cluster (as in the original paper).
     pub fn evaluate(&mut self) -> Result<(f64, f64, f64)> {
-        let spec = &self.art.spec;
-        let c = spec.c;
+        let c = self.art.spec().c;
         let mut logits = vec![0f32; self.ds.n() * c];
         for b in 0..self.plans.len() {
             let out = self.run_plan(b)?;

@@ -1,31 +1,109 @@
-//! Run-level configuration: a shared context bundling the manifest, PJRT
-//! client, and lazily generated datasets / loaded artifacts, so examples,
+//! Run-level configuration: backend selection plus a shared context
+//! bundling the manifest (compiled or synthesized), the optional PJRT
+//! client, and lazily generated datasets / loaded executors, so examples,
 //! benches and the CLI all go through one path.
 
+use crate::backend::native::{registry, NativeArtifact};
 use crate::graph::datasets::Dataset;
-use crate::runtime::{LoadedArtifact, Manifest, RtClient};
-use anyhow::Result;
+use crate::runtime::{Executor, LoadedArtifact, Manifest, RtClient};
+use anyhow::{bail, Context as _, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-/// Shared run context. Artifacts and datasets are cached on first use
+/// Which executor implementation runs the model programs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust rayon interpreter (no PJRT, no compiled artifacts).
+    Native,
+    /// AOT-compiled HLO executed through the PJRT client.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Backend::Native),
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            other => bail!("unknown backend {other:?} (expected native|pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+
+    /// Resolution order: `GAS_BACKEND` env, else PJRT when an AOT artifact
+    /// dir is present, else native — a bare checkout trains natively.
+    pub fn from_env() -> Result<Backend> {
+        Self::from_env_for_dir(&Manifest::default_dir())
+    }
+
+    fn from_env_for_dir(dir: &std::path::Path) -> Result<Backend> {
+        if let Ok(v) = std::env::var("GAS_BACKEND") {
+            return Backend::parse(&v).context("parsing GAS_BACKEND");
+        }
+        if dir.join("manifest.json").exists() {
+            Ok(Backend::Pjrt)
+        } else {
+            Ok(Backend::Native)
+        }
+    }
+}
+
+/// Shared run context. Executors and datasets are cached on first use
 /// (XLA compilation and graph generation are the expensive parts).
 pub struct Ctx {
-    pub client: RtClient,
+    backend: Backend,
+    client: Option<RtClient>,
     pub manifest: Manifest,
     datasets: HashMap<String, Dataset>,
-    artifacts: HashMap<String, LoadedArtifact>,
+    artifacts: HashMap<String, Box<dyn Executor>>,
 }
 
 impl Ctx {
+    /// Backend from env/auto-detection, manifest from the default dir.
     pub fn new() -> Result<Ctx> {
-        Self::with_dir(Manifest::default_dir())
+        let dir = Manifest::default_dir();
+        let backend = Backend::from_env_for_dir(&dir)?;
+        Self::with_backend_and_dir(backend, dir)
+    }
+
+    pub fn with_backend(backend: Backend) -> Result<Ctx> {
+        Self::with_backend_and_dir(backend, Manifest::default_dir())
     }
 
     pub fn with_dir(dir: PathBuf) -> Result<Ctx> {
-        let manifest = Manifest::load(&dir)?;
-        let client = RtClient::cpu()?;
-        Ok(Ctx { client, manifest, datasets: HashMap::new(), artifacts: HashMap::new() })
+        let backend = Backend::from_env_for_dir(&dir)?;
+        Self::with_backend_and_dir(backend, dir)
+    }
+
+    /// When a compiled manifest exists it is the source of truth for both
+    /// backends (shape parity with the AOT artifacts); otherwise the
+    /// native registry synthesizes specs and PJRT is unavailable.
+    pub fn with_backend_and_dir(backend: Backend, dir: PathBuf) -> Result<Ctx> {
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(&dir)?
+        } else if backend == Backend::Native {
+            registry::native_manifest()
+        } else {
+            bail!(
+                "backend pjrt needs compiled artifacts ({} not found); \
+                 run `make artifacts` or use --backend native",
+                dir.join("manifest.json").display()
+            );
+        };
+        let client = match backend {
+            Backend::Pjrt => Some(RtClient::cpu()?),
+            Backend::Native => None,
+        };
+        Ok(Ctx { backend, client, manifest, datasets: HashMap::new(), artifacts: HashMap::new() })
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// Generate (once) and return a dataset by profile name.
@@ -38,33 +116,75 @@ impl Ctx {
         Ok(&self.datasets[name])
     }
 
-    /// Load + XLA-compile (once) an artifact by name.
-    pub fn artifact(&mut self, name: &str) -> Result<&LoadedArtifact> {
+    /// Load (once) an executor for the named artifact on this backend.
+    pub fn artifact(&mut self, name: &str) -> Result<&dyn Executor> {
         if !self.artifacts.contains_key(name) {
-            let art = LoadedArtifact::load(&self.client, &self.manifest, name)?;
-            self.artifacts.insert(name.to_string(), art);
+            let exe: Box<dyn Executor> = match self.backend {
+                Backend::Pjrt => {
+                    let client = self.client.as_ref().expect("pjrt ctx has a client");
+                    Box::new(LoadedArtifact::load(client, &self.manifest, name)?)
+                }
+                Backend::Native => {
+                    let spec = self.manifest.artifact(name)?.clone();
+                    Box::new(NativeArtifact::new(spec)?)
+                }
+            };
+            self.artifacts.insert(name.to_string(), exe);
         }
-        Ok(&self.artifacts[name])
+        Ok(self.artifacts[name].as_ref())
     }
 
     /// Immutable lookups (after a prior `dataset`/`artifact` call) — lets
-    /// multiple datasets/artifacts be borrowed simultaneously.
+    /// multiple datasets/executors be borrowed simultaneously.
     pub fn get_dataset(&self, name: &str) -> Result<&Dataset> {
         self.datasets
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("dataset {name:?} not generated yet"))
     }
 
-    pub fn get_artifact(&self, name: &str) -> Result<&LoadedArtifact> {
+    pub fn get_artifact(&self, name: &str) -> Result<&dyn Executor> {
         self.artifacts
             .get(name)
+            .map(|b| b.as_ref())
             .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded yet"))
     }
 
     /// Both at once (borrow-splitting helper for trainers).
-    pub fn pair(&mut self, dataset: &str, artifact: &str) -> Result<(&Dataset, &LoadedArtifact)> {
+    pub fn pair(&mut self, dataset: &str, artifact: &str) -> Result<(&Dataset, &dyn Executor)> {
         self.dataset(dataset)?;
         self.artifact(artifact)?;
-        Ok((&self.datasets[dataset], &self.artifacts[artifact]))
+        Ok((&self.datasets[dataset], self.artifacts[artifact].as_ref()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_and_names() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("PJRT").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("tpu").is_err());
+        assert_eq!(Backend::Native.name(), "native");
+    }
+
+    #[test]
+    fn native_ctx_works_without_artifacts() {
+        // point at a dir that definitely has no manifest.json
+        let dir = std::env::temp_dir().join("gas_no_artifacts_here");
+        let mut ctx = Ctx::with_backend_and_dir(Backend::Native, dir).unwrap();
+        assert_eq!(ctx.backend(), Backend::Native);
+        assert!(ctx.manifest.artifacts.len() > 40);
+        let art = ctx.artifact("cora_gcn2_gas").unwrap();
+        assert_eq!(art.spec().model, "gcn");
+        assert_eq!(art.spec().layers, 2);
+    }
+
+    #[test]
+    fn pjrt_without_artifacts_is_a_clear_error() {
+        let dir = std::env::temp_dir().join("gas_no_artifacts_here");
+        let err = Ctx::with_backend_and_dir(Backend::Pjrt, dir).unwrap_err().to_string();
+        assert!(err.contains("--backend native"), "{err}");
     }
 }

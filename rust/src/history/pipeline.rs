@@ -59,8 +59,8 @@ impl PullBuffer {
 }
 
 enum Job {
-    Pull { ids: Vec<u32>, reply: Sender<PullBuffer> },
-    Push { layer: usize, ids: Vec<u32>, data: Vec<f32> },
+    Pull { ids: Arc<[u32]>, reply: Sender<PullBuffer> },
+    Push { layer: usize, ids: Arc<[u32]>, data: Vec<f32> },
     /// advance the staleness clock, ordered FIFO with the pushes around it
     Tick,
 }
@@ -153,13 +153,15 @@ impl HistoryPipeline {
     }
 
     /// Begin gathering halo rows for all layers. In `Concurrent` mode this
-    /// returns immediately; `wait_pull` blocks until staged.
-    pub fn request_pull(&mut self, ids: &[u32]) {
+    /// returns immediately; `wait_pull` blocks until staged. Ids are
+    /// shared (`Arc`) so steady-state steps hand the plan's node list to
+    /// the worker without a per-step `Vec` clone.
+    pub fn request_pull(&mut self, ids: Arc<[u32]>) {
         assert!(self.pending_pull.is_none(), "overlapping pulls");
         let (tx, rx) = channel();
         match self.mode {
             PipelineMode::Serial => {
-                let buf = gather(&self.store, ids, &self.pool);
+                let buf = gather(&self.store, &ids, &self.pool);
                 tx.send(buf).unwrap();
             }
             PipelineMode::Concurrent => {
@@ -167,7 +169,7 @@ impl HistoryPipeline {
                 self.pull_tx
                     .as_ref()
                     .unwrap()
-                    .send(Job::Pull { ids: ids.to_vec(), reply: tx })
+                    .send(Job::Pull { ids, reply: tx })
                     .expect("history pull worker alive");
             }
         }
@@ -186,10 +188,11 @@ impl HistoryPipeline {
     }
 
     /// Push layer rows. Concurrent mode applies in the background (FIFO).
-    pub fn push(&mut self, layer: usize, ids: &[u32], data: Vec<f32>) {
+    /// Ids are shared (`Arc`): no per-step id clone on the hot path.
+    pub fn push(&mut self, layer: usize, ids: Arc<[u32]>, data: Vec<f32>) {
         match self.mode {
             PipelineMode::Serial => {
-                self.store.push(layer, ids, &data);
+                self.store.push(layer, &ids, &data);
                 self.pool.lock().unwrap().push(data);
             }
             PipelineMode::Concurrent => {
@@ -197,7 +200,7 @@ impl HistoryPipeline {
                 self.push_tx
                     .as_ref()
                     .unwrap()
-                    .send(Job::Push { layer, ids: ids.to_vec(), data })
+                    .send(Job::Push { layer, ids, data })
                     .expect("history push worker alive");
             }
         }
@@ -326,12 +329,12 @@ mod tests {
     fn roundtrip(mode: PipelineMode, shards: usize) {
         let store = ShardedHistoryStore::with_shards(16, 4, 2, shards);
         let mut p = HistoryPipeline::new(store, mode);
-        let ids = [2u32, 5, 9];
+        let ids: Arc<[u32]> = Arc::from([2u32, 5, 9]);
         let data: Vec<f32> = (0..12).map(|x| x as f32 + 1.0).collect();
-        p.push(0, &ids, data.clone());
-        p.push(1, &ids, data.iter().map(|v| v * 10.0).collect());
+        p.push(0, ids.clone(), data.clone());
+        p.push(1, ids.clone(), data.iter().map(|v| v * 10.0).collect());
         p.sync();
-        p.request_pull(&ids);
+        p.request_pull(ids);
         let buf = p.wait_pull();
         assert_eq!(buf.num_rows, 3);
         assert_eq!(buf.num_layers, 2);
@@ -360,9 +363,9 @@ mod tests {
         let store = ShardedHistoryStore::with_shards(1000, 8, 1, 4);
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
         for step in 0..50u32 {
-            let ids: Vec<u32> = (0..100).map(|i| (step * 7 + i) % 1000).collect();
+            let ids: Arc<[u32]> = (0..100).map(|i| (step * 7 + i) % 1000).collect();
             let data: Vec<f32> = vec![step as f32; 100 * 8];
-            p.push(0, &ids, data);
+            p.push(0, ids, data);
         }
         p.sync();
         p.with_store(|s| {
@@ -380,13 +383,13 @@ mod tests {
         // and sync() must still leave the final state fully applied.
         let store = ShardedHistoryStore::with_shards(5000, 16, 2, 4);
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
-        let ids: Vec<u32> = (0..2048u32).collect();
+        let ids: Arc<[u32]> = (0..2048u32).collect();
         for step in 0..8 {
             for l in 0..2 {
                 let data = vec![(step * 2 + l) as f32; ids.len() * 16];
-                p.push(l, &ids, data);
+                p.push(l, ids.clone(), data);
             }
-            p.request_pull(&ids);
+            p.request_pull(ids.clone());
             let buf = p.wait_pull();
             assert_eq!(buf.num_rows, ids.len());
             p.recycle(buf);
@@ -404,10 +407,10 @@ mod tests {
         // was produced in, even though both apply in the background
         let store = ShardedHistoryStore::with_shards(64, 2, 1, 4);
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
-        let ids: Vec<u32> = (0..64).collect();
-        p.push(0, &ids, vec![1.0; 64 * 2]);
+        let ids: Arc<[u32]> = (0..64).collect();
+        p.push(0, ids, vec![1.0; 64 * 2]);
         p.tick(); // closes the step of the push above
-        p.push(0, &[3], vec![2.0; 2]);
+        p.push(0, Arc::from([3u32]), vec![2.0; 2]);
         p.sync();
         p.with_store(|s| {
             assert_eq!(s.staleness(0, &[5]), 1.0, "pre-tick push aged one step");
@@ -419,7 +422,7 @@ mod tests {
     fn buffer_pool_recycles() {
         let store = ShardedHistoryStore::with_shards(8, 2, 1, 2);
         let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
-        p.request_pull(&[0, 1]);
+        p.request_pull(Arc::from([0u32, 1]));
         let buf = p.wait_pull();
         p.recycle(buf);
         let b = p.take_buffer(4);
@@ -431,7 +434,7 @@ mod tests {
     fn overlapping_pulls_rejected() {
         let store = ShardedHistoryStore::sequential(8, 2, 1);
         let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
-        p.request_pull(&[0]);
-        p.request_pull(&[1]);
+        p.request_pull(Arc::from([0u32]));
+        p.request_pull(Arc::from([1u32]));
     }
 }

@@ -13,12 +13,16 @@
 //!   history injection, AOT-lowered to HLO text (`python/compile/`).
 //! * **L1** — Pallas edge-blocked scatter kernels inside those models.
 //!
-//! The request path is pure Rust: artifacts are loaded via PJRT
-//! ([`runtime`]), histories live in host memory
+//! The request path is pure Rust: models execute through the
+//! backend-agnostic [`runtime::Executor`] trait — either the PJRT
+//! artifact path ([`runtime::LoadedArtifact`]) or the native rayon
+//! interpreter ([`backend::native`], the default when no compiled
+//! artifacts are present), histories live in host memory
 //! ([`history::ShardedHistoryStore`]), batches are assembled by [`sched`],
 //! and [`train::Trainer`] runs the GAS loop with pulls for batch *t+1*
 //! prefetched while the write-backs of batch *t* drain.
 
+pub mod backend;
 pub mod baselines;
 pub mod bench;
 pub mod config;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train      --dataset cora --model gcn2 [--mode gas|full|naive|cluster]
+//!              [--backend native|pjrt]   (default: GAS_BACKEND env, else
+//!              pjrt when compiled artifacts exist, else native)
 //!   gen        --dataset cora            (generate + print dataset stats)
 //!   partition  --dataset cora --parts 4  (METIS vs random quality)
 //!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
@@ -9,9 +11,10 @@
 //!   list                                  (artifacts in the manifest)
 
 use anyhow::{bail, Result};
+use gas::backend::native::registry;
 use gas::baselines::naive_history::{gas_config, naive_config};
 use gas::baselines::ClusterGcnTrainer;
-use gas::config::Ctx;
+use gas::config::{Backend, Ctx};
 use gas::expressive::prop3;
 use gas::memaccount::MemoryModel;
 use gas::partition::{inter_intra_ratio, metis_partition, random_partition};
@@ -35,15 +38,35 @@ fn main() -> Result<()> {
     }
 }
 
+/// `--model gcn` means "gcn at its default depth": artifact names carry
+/// the layer count (`gcn2`, `gcnii8`, ...), so bare family names resolve
+/// through the registry's defaults.
+fn resolve_model(model: &str) -> String {
+    if model.chars().last().is_some_and(|c| c.is_ascii_digit()) {
+        model.to_string()
+    } else {
+        format!("{model}{}", registry::default_layers(model))
+    }
+}
+
+fn backend_for(args: &Args) -> Result<Backend> {
+    match args.get("backend") {
+        Some(s) => Backend::parse(s),
+        None => Backend::from_env(),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "cora");
-    let model = args.str_or("model", "gcn2");
+    let model = resolve_model(&args.str_or("model", "gcn2"));
     let mode = args.str_or("mode", "gas");
     let epochs = args.usize_or("epochs", 30)?;
     let lr = args.f64_or("lr", 0.01)? as f32;
     let reg = args.f64_or("reg", 0.0)? as f32;
     let seed = args.usize_or("seed", 0)? as u64;
-    let mut ctx = Ctx::new()?;
+    let backend = backend_for(args)?;
+    let mut ctx = Ctx::with_backend(backend)?;
+    eprintln!("backend: {}", backend.name());
     match mode.as_str() {
         "gas" | "naive" => {
             let name = format!("{dataset}_{model}_gas");
@@ -164,13 +187,20 @@ fn cmd_prop3() -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    let manifest = gas::runtime::Manifest::load(&gas::runtime::Manifest::default_dir())?;
+    // compiled manifest when present, else the native synthesized registry
+    let ctx = Ctx::new()?;
+    let manifest = &ctx.manifest;
     for (name, spec) in &manifest.artifacts {
         println!(
             "{name:<36} {:>5} model={:<6} L={} nb={} nh={} e={}",
             spec.program, spec.model, spec.layers, spec.nb, spec.nh, spec.e
         );
     }
-    println!("{} artifacts, {} profiles", manifest.artifacts.len(), manifest.profiles.len());
+    println!(
+        "{} artifacts, {} profiles [{} backend]",
+        manifest.artifacts.len(),
+        manifest.profiles.len(),
+        ctx.backend().name()
+    );
     Ok(())
 }

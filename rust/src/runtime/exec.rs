@@ -2,6 +2,7 @@
 //! input order, execute, unpack (loss, grads, push, logits).
 
 use crate::runtime::client::RtClient;
+use crate::runtime::executor::{Executor, Prepared};
 use crate::runtime::manifest::{ArtifactSpec, InputKind, Manifest};
 use anyhow::{ensure, Context, Result};
 
@@ -84,7 +85,7 @@ impl LoadedArtifact {
 
     /// Pre-build the static input literals for a batch plan. `cache_noise`:
     /// also freeze the noise tensor (valid when reg_lambda stays 0).
-    pub fn prepare_static(&self, inp: &StepInputs, cache_noise: bool) -> Result<StaticLits> {
+    fn build_statics(&self, inp: &StepInputs, cache_noise: bool) -> Result<StaticLits> {
         let spec = &self.spec;
         let mut lits = Vec::with_capacity(spec.inputs.len());
         for is in &spec.inputs {
@@ -112,7 +113,7 @@ impl LoadedArtifact {
 
     /// Execute one step reusing cached static literals; only params, hist
     /// (and noise if not cached) are marshalled fresh.
-    pub fn run_prepared(
+    fn run_with_statics(
         &self,
         params: &[Vec<f32>],
         statics: &StaticLits,
@@ -181,9 +182,30 @@ impl LoadedArtifact {
         let logits = it.next().unwrap().to_vec::<f32>()?;
         Ok(StepOutputs { loss, grads, push, logits })
     }
+}
+
+impl Executor for LoadedArtifact {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn prepare_static(&self, inp: &StepInputs, cache_noise: bool) -> Result<Prepared> {
+        Ok(Prepared::new(self.build_statics(inp, cache_noise)?))
+    }
+
+    fn run_prepared(
+        &self,
+        params: &[Vec<f32>],
+        statics: &Prepared,
+        hist: &[f32],
+        noise: &[f32],
+        reg_lambda: f32,
+    ) -> Result<StepOutputs> {
+        self.run_with_statics(params, statics.downcast::<StaticLits>()?, hist, noise, reg_lambda)
+    }
 
     /// Execute one step. `params` must be aligned with `spec.params`.
-    pub fn run(&self, params: &[Vec<f32>], inp: &StepInputs) -> Result<StepOutputs> {
+    fn run(&self, params: &[Vec<f32>], inp: &StepInputs) -> Result<StepOutputs> {
         let spec = &self.spec;
         ensure!(params.len() == spec.params.len(), "param count mismatch");
         let mut literals: Vec<xla::Literal> = Vec::with_capacity(spec.inputs.len());

@@ -1,0 +1,64 @@
+//! Backend-agnostic artifact execution.
+//!
+//! Every trainer, baseline and bench drives a model through [`Executor`]:
+//! the contract the PJRT [`crate::runtime::LoadedArtifact`] has always
+//! exposed (`prepare_static` / `run_prepared` / `run` over [`StepInputs`]
+//! → [`StepOutputs`]), lifted into a trait so the pure-Rust interpreter in
+//! [`crate::backend::native`] can slot in underneath the GAS loop without
+//! PJRT or compiled artifacts being present at all.
+//!
+//! Per-plan prepared state is backend-specific (PJRT caches device
+//! literals, the native backend caches owned tensors plus a CSR edge
+//! index), so it travels through the opaque [`Prepared`] box: each
+//! backend downcasts back to its own type at `run_prepared` time.
+
+use crate::runtime::exec::{StepInputs, StepOutputs};
+use crate::runtime::manifest::ArtifactSpec;
+use anyhow::{Context, Result};
+use std::any::Any;
+
+/// Opaque per-batch-plan prepared statics, produced by
+/// [`Executor::prepare_static`] and only meaningful to the backend that
+/// built them.
+pub struct Prepared(Box<dyn Any + Send + Sync>);
+
+impl Prepared {
+    pub fn new<T: Any + Send + Sync>(inner: T) -> Prepared {
+        Prepared(Box::new(inner))
+    }
+
+    /// Recover the backend-specific statics; errors if these statics were
+    /// built by a different backend than the one now executing.
+    pub fn downcast<T: Any>(&self) -> Result<&T> {
+        self.0
+            .downcast_ref::<T>()
+            .context("prepared statics were built by a different execution backend")
+    }
+}
+
+/// One execution backend bound to a compiled (or synthesized) artifact
+/// spec. Implementations must be pure functions of their inputs so the
+/// training loop stays deterministic per seed.
+pub trait Executor: Send + Sync {
+    /// The shape/IO contract this executor was built for.
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Pre-build the per-epoch-invariant inputs of one batch plan
+    /// (x, edges, weights, labels, masks, degrees). `cache_noise`: also
+    /// freeze the noise tensor (valid while reg_lambda stays 0).
+    fn prepare_static(&self, inp: &StepInputs, cache_noise: bool) -> Result<Prepared>;
+
+    /// Execute one step reusing prepared statics; only params, histories
+    /// (and noise, if not cached) are taken fresh.
+    fn run_prepared(
+        &self,
+        params: &[Vec<f32>],
+        statics: &Prepared,
+        hist: &[f32],
+        noise: &[f32],
+        reg_lambda: f32,
+    ) -> Result<StepOutputs>;
+
+    /// Execute one step from scratch. `params` aligned with `spec.params`.
+    fn run(&self, params: &[Vec<f32>], inp: &StepInputs) -> Result<StepOutputs>;
+}

@@ -7,9 +7,11 @@
 
 pub mod client;
 pub mod exec;
+pub mod executor;
 pub mod literal;
 pub mod manifest;
 
 pub use client::RtClient;
 pub use exec::{LoadedArtifact, StaticLits, StepInputs, StepOutputs};
+pub use executor::{Executor, Prepared};
 pub use manifest::{ArtifactSpec, InputKind, InputSpec, Manifest, ParamSpec};

@@ -10,6 +10,7 @@ use crate::history::pipeline::PullBuffer;
 use crate::runtime::manifest::ArtifactSpec;
 use anyhow::{ensure, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Which label mask to expose to the loss.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,11 +23,15 @@ pub enum LabelSel {
 }
 
 /// Static (per-epoch-invariant) structure of one mini-batch.
+///
+/// Node-id lists are `Arc<[u32]>` so the steady-state training loop can
+/// hand them to the history pipeline's background workers without cloning
+/// a `Vec` per step (the pre-refactor hot-path allocation).
 pub struct BatchPlan {
     /// global ids of in-batch nodes; local row i
-    pub batch_nodes: Vec<u32>,
+    pub batch_nodes: Arc<[u32]>,
     /// global ids of halo nodes; local row nb_pad + j (gas programs only)
-    pub halo_nodes: Vec<u32>,
+    pub halo_nodes: Arc<[u32]>,
     /// padded local edge endpoints (len == spec.e)
     pub edge_src: Vec<i32>,
     pub edge_dst: Vec<i32>,
@@ -106,8 +111,8 @@ impl BatchPlan {
         edge_w.resize(spec.e, 0.0);
         let st = static_tensors(ds, spec, batch_nodes, &halo, sel);
         Ok(BatchPlan {
-            batch_nodes: batch_nodes.to_vec(),
-            halo_nodes: halo,
+            batch_nodes: Arc::from(batch_nodes),
+            halo_nodes: Arc::from(halo),
             edge_src,
             edge_dst,
             edge_w,
@@ -174,8 +179,8 @@ impl BatchPlan {
             }
         }
         Ok(BatchPlan {
-            batch_nodes: nodes.to_vec(),
-            halo_nodes: Vec::new(),
+            batch_nodes: Arc::from(nodes),
+            halo_nodes: Arc::from(Vec::new()),
             edge_src,
             edge_dst,
             edge_w,
@@ -227,8 +232,8 @@ impl BatchPlan {
             }
         }
         Ok(BatchPlan {
-            batch_nodes: nodes.to_vec(),
-            halo_nodes: Vec::new(),
+            batch_nodes: Arc::from(nodes),
+            halo_nodes: Arc::from(Vec::new()),
             edge_src,
             edge_dst,
             edge_w,
@@ -559,7 +564,7 @@ mod tests {
 
         // halo: the only out-of-batch neighbor of {0,1,2,3} is node 4,
         // renumbered to local row nb_pad + 0 == 4
-        assert_eq!(plan.halo_nodes, vec![4]);
+        assert_eq!(plan.halo_nodes.as_ref(), &[4u32][..]);
         assert_eq!(plan.real_edges, 9);
         // exact renumbered edge lists (batch nodes keep their index, halo
         // node 4 -> local 4), in batch-then-sorted-neighbor order:

@@ -3,7 +3,7 @@
 
 use crate::graph::datasets::Dataset;
 use crate::model::{Adam, Optimizer, ParamStore};
-use crate::runtime::{LoadedArtifact, StepInputs};
+use crate::runtime::{Executor, StepInputs};
 use crate::sched::batch::{BatchPlan, LabelSel};
 use crate::train::curve::Curve;
 use crate::train::trainer::score;
@@ -12,7 +12,7 @@ use anyhow::{ensure, Result};
 
 pub struct FullBatchTrainer<'a> {
     ds: &'a Dataset,
-    art: &'a LoadedArtifact,
+    art: &'a dyn Executor,
     plan: BatchPlan,
     pub params: ParamStore,
     opt: Adam,
@@ -32,13 +32,13 @@ pub struct FullBatchResult {
 impl<'a> FullBatchTrainer<'a> {
     pub fn new(
         ds: &'a Dataset,
-        art: &'a LoadedArtifact,
+        art: &'a dyn Executor,
         lr: f32,
         clip: Option<f32>,
         weight_decay: f32,
         seed: u64,
     ) -> Result<FullBatchTrainer<'a>> {
-        let spec = &art.spec;
+        let spec = art.spec();
         ensure!(spec.program == "full", "FullBatchTrainer wants a full artifact");
         let nodes: Vec<u32> = (0..ds.n() as u32).collect();
         let plan = BatchPlan::build_full(ds, spec, &nodes, LabelSel::Train, None)?;
@@ -79,7 +79,7 @@ impl<'a> FullBatchTrainer<'a> {
             r.buckets.add("optim", t.elapsed_s());
             r.loss.push(out.loss as f64);
             if (epoch + 1) % eval_every == 0 || epoch + 1 == epochs {
-                let spec = &self.art.spec;
+                let spec = self.art.spec();
                 let c = spec.c;
                 // logits cover all (real) nodes already
                 let n = self.ds.n();
@@ -97,7 +97,7 @@ impl<'a> FullBatchTrainer<'a> {
     }
 
     fn run_once(&mut self) -> Result<crate::runtime::StepOutputs> {
-        let spec = &self.art.spec;
+        let spec = self.art.spec();
         let inputs = StepInputs {
             x: &self.plan.st.x,
             edge_src: &self.plan.edge_src,

@@ -17,7 +17,7 @@ use crate::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use crate::model::metrics;
 use crate::model::{Adam, Optimizer, ParamStore};
 use crate::partition::{metis_partition, random_partition};
-use crate::runtime::{LoadedArtifact, StepInputs};
+use crate::runtime::{Executor, Prepared, StepInputs};
 use crate::sched::batch::{BatchPlan, LabelSel};
 use crate::sched::scheduler::EpochScheduler;
 use crate::train::curve::Curve;
@@ -92,10 +92,11 @@ pub struct TrainResult {
     pub steps: usize,
 }
 
-/// GAS trainer bound to a dataset + artifact.
+/// GAS trainer bound to a dataset + execution backend (any [`Executor`]:
+/// the PJRT artifact path or the native rayon interpreter).
 pub struct Trainer<'a> {
     ds: &'a Dataset,
-    art: &'a LoadedArtifact,
+    art: &'a dyn Executor,
     cfg: TrainConfig,
     plans: Vec<BatchPlan>,
     pipeline: HistoryPipeline,
@@ -106,14 +107,14 @@ pub struct Trainer<'a> {
     hist_buf: Vec<f32>,
     staleness_acc: Vec<f64>,
     staleness_cnt: u64,
-    /// per-plan cached static input literals (§Perf: avoids re-marshalling
+    /// per-plan cached backend statics (§Perf: avoids re-marshalling
     /// x/edges/labels — megabytes — every step)
-    statics: Vec<Option<crate::runtime::StaticLits>>,
+    statics: Vec<Option<Prepared>>,
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(ds: &'a Dataset, art: &'a LoadedArtifact, cfg: TrainConfig) -> Result<Trainer<'a>> {
-        let spec = &art.spec;
+    pub fn new(ds: &'a Dataset, art: &'a dyn Executor, cfg: TrainConfig) -> Result<Trainer<'a>> {
+        let spec = art.spec();
         ensure!(spec.program == "gas", "Trainer wants a gas artifact");
         let k = cfg.parts.unwrap_or(ds.profile.parts);
         let part = match cfg.partitioner {
@@ -192,8 +193,7 @@ impl<'a> Trainer<'a> {
             let mut nb = 0usize;
             // prime the pipeline with the first pull
             if let Some(b0) = sched.current() {
-                let halo: Vec<u32> = self.plans[b0].halo_nodes.clone();
-                self.pipeline.request_pull(&halo);
+                self.pipeline.request_pull(self.plans[b0].halo_nodes.clone());
             }
             while let Some(b) = sched.current() {
                 let loss = self.step(b, &mut result.buckets, sched.lookahead())?;
@@ -218,7 +218,7 @@ impl<'a> Trainer<'a> {
                 }
             }
         }
-        let hl = self.art.spec.hist_layers();
+        let hl = self.art.spec().hist_layers();
         result.staleness = (0..hl)
             .map(|l| self.staleness_acc[l] / self.staleness_cnt.max(1) as f64)
             .collect();
@@ -230,7 +230,7 @@ impl<'a> Trainer<'a> {
 
     /// One optimizer step on batch `b`. `lookahead`: batch to prefetch.
     fn step(&mut self, b: usize, buckets: &mut Buckets, lookahead: Option<usize>) -> Result<f32> {
-        let spec = &self.art.spec;
+        let spec = self.art.spec();
         let hl = spec.hist_layers();
         let hd = spec.hist_dim;
 
@@ -241,8 +241,7 @@ impl<'a> Trainer<'a> {
 
         // -- prefetch the next batch while this one computes ---------------
         if let Some(nb) = lookahead {
-            let halo: Vec<u32> = self.plans[nb].halo_nodes.clone();
-            self.pipeline.request_pull(&halo);
+            self.pipeline.request_pull(self.plans[nb].halo_nodes.clone());
         }
 
         // staleness probe
@@ -309,8 +308,7 @@ impl<'a> Trainer<'a> {
             let mut buf = self.pipeline.take_buffer(nb_real * hd);
             let base = l * spec.nb * hd;
             buf.copy_from_slice(&out.push[base..base + nb_real * hd]);
-            let ids = plan.batch_nodes.clone();
-            self.pipeline.push(l, &ids, buf);
+            self.pipeline.push(l, plan.batch_nodes.clone(), buf);
         }
         self.pipeline.tick();
         buckets.add("push", t.elapsed_s());
@@ -330,15 +328,14 @@ impl<'a> Trainer<'a> {
     pub fn evaluate(&mut self, buckets: &mut Buckets) -> Result<(f64, f64, f64)> {
         // ensure queued pushes are applied and no pull is left hanging
         self.pipeline.sync();
-        let spec = &self.art.spec;
+        let spec = self.art.spec();
         let t = Timer::start();
         let n = self.ds.n();
         let c = spec.c;
         let mut logits = vec![0f32; n * c];
         for b in 0..self.plans.len() {
             let plan = &self.plans[b];
-            let halo: Vec<u32> = plan.halo_nodes.clone();
-            self.pipeline.request_pull(&halo);
+            self.pipeline.request_pull(plan.halo_nodes.clone());
             let pull = self.pipeline.wait_pull();
             plan.fill_hist(spec, &pull, &mut self.hist_buf);
             self.pipeline.recycle(pull);

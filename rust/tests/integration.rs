@@ -6,6 +6,7 @@ use gas::baselines::naive_history::{gas_config, naive_config};
 use gas::baselines::ClusterGcnTrainer;
 use gas::config::Ctx;
 use gas::history::PipelineMode;
+use gas::runtime::Executor;
 use gas::train::{FullBatchTrainer, Trainer};
 
 fn ctx_or_skip() -> Option<Ctx> {
@@ -113,7 +114,7 @@ fn cluster_gcn_baseline_runs_and_underuses_data() {
 fn multilabel_dataset_trains_with_bce() {
     let Some(mut ctx) = ctx_or_skip() else { return };
     let (ds, art) = ctx.pair("ppi", "ppi_gcn2_gas").unwrap();
-    assert_eq!(art.spec.loss, "bce");
+    assert_eq!(art.spec().loss, "bce");
     let mut tr = Trainer::new(ds, art, gas_config(8, 0.01, 0.0, 0)).unwrap();
     let r = tr.train().unwrap();
     assert!(r.loss.values.iter().all(|l| l.is_finite()));

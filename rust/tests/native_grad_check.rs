@@ -1,0 +1,515 @@
+//! Finite-difference gradient checks for the native backend's hand-written
+//! backward passes, driven through the in-repo `util::prop` shrinking
+//! harness.
+//!
+//! Strategy: an *independent* f64 reference forward (naive edge-list
+//! scatters, no CSR, no rayon) recomputes the loss; central differences in
+//! f64 (eps small, no ReLU-kink flakiness at f32 scale) are compared
+//! against the f32 analytic gradients for **every coordinate of every
+//! parameter** of gcn / gcnii / gin, both programs, both losses, with and
+//! without the Lipschitz reg-noise branch.
+
+use gas::backend::native::{registry, NativeArtifact};
+use gas::model::ParamStore;
+use gas::runtime::manifest::ArtifactSpec;
+use gas::runtime::{Executor, StepInputs};
+use gas::util::prop;
+use gas::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// f64 reference forward (the oracle — mirrors python/compile/models.py)
+// ---------------------------------------------------------------------------
+
+struct RefCase {
+    spec: ArtifactSpec,
+    /// real (unpadded) edges: (src, dst, w)
+    edges: Vec<(usize, usize, f64)>,
+    x: Vec<f64>,
+    deg: Vec<f64>,
+    hist: Vec<f64>,
+    noise: Vec<f64>,
+    labels_i: Vec<i32>,
+    labels_f: Vec<f64>,
+    mask: Vec<f64>,
+    reg_lambda: f64,
+    alpha: f64,
+    lam: f64,
+}
+
+fn matmul(a: &[f64], n: usize, k: usize, b: &[f64], m: usize) -> Vec<f64> {
+    let mut out = vec![0f64; n * m];
+    for v in 0..n {
+        for kk in 0..k {
+            for j in 0..m {
+                out[v * m + j] += a[v * k + kk] * b[kk * m + j];
+            }
+        }
+    }
+    out
+}
+
+fn relu(x: &[f64]) -> Vec<f64> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+impl RefCase {
+    fn full(&self) -> bool {
+        self.spec.is_full()
+    }
+
+    fn rows(&self) -> usize {
+        if self.full() {
+            self.spec.nb
+        } else {
+            self.spec.nt
+        }
+    }
+
+    fn pget<'a>(&self, params: &'a [Vec<f64>], name: &str) -> &'a [f64] {
+        let i = self.spec.params.iter().position(|p| p.name == name).expect("param");
+        &params[i]
+    }
+
+    /// scatter + self-loop propagation onto the nb output rows.
+    fn propagate(&self, z: &[f64], d: usize) -> Vec<f64> {
+        let nb = self.spec.nb;
+        let mut out = vec![0f64; nb * d];
+        for &(s, t, w) in &self.edges {
+            for j in 0..d {
+                out[t * d + j] += w * z[s * d + j];
+            }
+        }
+        for v in 0..nb {
+            let sw = 1.0 / (self.deg[v] + 1.0);
+            for j in 0..d {
+                out[v * d + j] += sw * z[v * d + j];
+            }
+        }
+        out
+    }
+
+    /// plain scatter-sum (GIN — no normalized self loop).
+    fn scatter(&self, z: &[f64], d: usize) -> Vec<f64> {
+        let nb = self.spec.nb;
+        let mut out = vec![0f64; nb * d];
+        for &(s, t, w) in &self.edges {
+            for j in 0..d {
+                out[t * d + j] += w * z[s * d + j];
+            }
+        }
+        out
+    }
+
+    fn concat(&self, h: &[f64], l: usize, d: usize) -> Vec<f64> {
+        let (nb, nh) = (self.spec.nb, self.spec.nh);
+        let mut out = vec![0f64; (nb + nh) * d];
+        out[..nb * d].copy_from_slice(&h[..nb * d]);
+        let span = nh * d;
+        out[nb * d..].copy_from_slice(&self.hist[l * span..(l + 1) * span]);
+        out
+    }
+
+    fn perturbed(&self, srcs: &[f64]) -> Vec<f64> {
+        srcs.iter().zip(self.noise.iter()).map(|(&s, &n)| s + n).collect()
+    }
+
+    fn reg_on(&self) -> bool {
+        !self.full() && self.reg_lambda > 0.0
+    }
+
+    fn task_loss(&self, logits: &[f64]) -> f64 {
+        let (nb, c) = (self.spec.nb, self.spec.c);
+        let msum: f64 = self.mask.iter().sum::<f64>().max(1.0);
+        let mut loss = 0f64;
+        for v in 0..nb {
+            if self.mask[v] == 0.0 {
+                continue;
+            }
+            let row = &logits[v * c..v * c + c];
+            if self.spec.loss == "ce" {
+                let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let denom: f64 = row.iter().map(|&l| (l - mx).exp()).sum();
+                let y = self.labels_i[v] as usize;
+                loss += -(row[y] - mx - denom.ln()) * self.mask[v] / msum;
+            } else {
+                let mut per = 0f64;
+                for j in 0..c {
+                    let (l, y) = (row[j], self.labels_f[v * c + j]);
+                    let log_p = -((-l).exp().ln_1p());
+                    let log_np = -(l.exp().ln_1p());
+                    per += -(y * log_p + (1.0 - y) * log_np);
+                }
+                loss += per / c as f64 * self.mask[v] / msum;
+            }
+        }
+        loss
+    }
+
+    fn loss(&self, params: &[Vec<f64>]) -> f64 {
+        match self.spec.model.as_str() {
+            "gcn" => self.loss_gcn(params),
+            "gcnii" => self.loss_gcnii(params),
+            "gin" => self.loss_gin(params),
+            other => panic!("no reference for {other}"),
+        }
+    }
+
+    fn loss_gcn(&self, params: &[Vec<f64>]) -> f64 {
+        let s = &self.spec;
+        let rows = self.rows();
+        let mut dims = vec![s.h; s.layers + 1];
+        dims[0] = s.f;
+        dims[s.layers] = s.c;
+        let mut src = self.x.clone();
+        let mut logits = Vec::new();
+        for l in 0..s.layers {
+            let (din, dout) = (dims[l], dims[l + 1]);
+            let z = matmul(&src, rows, din, self.pget(params, &format!("w{l}")), dout);
+            let mut pre = self.propagate(&z, dout);
+            let b = self.pget(params, &format!("b{l}"));
+            for v in 0..s.nb {
+                for j in 0..dout {
+                    pre[v * dout + j] += b[j];
+                }
+            }
+            if l + 1 < s.layers {
+                let h = relu(&pre);
+                src = if self.full() { h } else { self.concat(&h, l, dout) };
+            } else {
+                logits = pre;
+            }
+        }
+        self.task_loss(&logits)
+    }
+
+    fn loss_gcnii(&self, params: &[Vec<f64>]) -> f64 {
+        let s = &self.spec;
+        let rows = self.rows();
+        let (nb, hd) = (s.nb, s.h);
+        let mut t0 = matmul(&self.x, rows, s.f, self.pget(params, "w_in"), hd);
+        let b_in = self.pget(params, "b_in");
+        for v in 0..rows {
+            for j in 0..hd {
+                t0[v * hd + j] += b_in[j];
+            }
+        }
+        let h0 = relu(&t0);
+        let w_stack = self.pget(params, "w_stack");
+        let mut h = h0[..nb * hd].to_vec();
+        let mut reg = 0f64;
+        for l in 0..s.layers {
+            let beta = (self.lam / (l + 1) as f64 + 1.0).ln();
+            let wl = &w_stack[l * hd * hd..(l + 1) * hd * hd];
+            let srcs: Vec<f64> = if self.full() {
+                h.clone()
+            } else if l == 0 {
+                h0.clone()
+            } else {
+                self.concat(&h, l - 1, hd)
+            };
+            let fwd = |srcs: &[f64]| -> Vec<f64> {
+                let prop = self.propagate(srcs, hd);
+                let mut hn = vec![0f64; nb * hd];
+                for i in 0..nb * hd {
+                    hn[i] = (1.0 - self.alpha) * prop[i] + self.alpha * h0[i];
+                }
+                let q = matmul(&hn, nb, hd, wl, hd);
+                let mut pre = vec![0f64; nb * hd];
+                for i in 0..nb * hd {
+                    pre[i] = (1.0 - beta) * hn[i] + beta * q[i];
+                }
+                relu(&pre)
+            };
+            let out = fwd(&srcs);
+            if self.reg_on() {
+                let out_p = fwd(&self.perturbed(&srcs));
+                let mut acc = 0f64;
+                for i in 0..nb * hd {
+                    acc += (out[i] - out_p[i]) * (out[i] - out_p[i]);
+                }
+                reg += acc / nb as f64;
+            }
+            h = out;
+        }
+        let mut logits = matmul(&h, nb, hd, self.pget(params, "w_out"), s.c);
+        let b_out = self.pget(params, "b_out");
+        for v in 0..nb {
+            for j in 0..s.c {
+                logits[v * s.c + j] += b_out[j];
+            }
+        }
+        self.task_loss(&logits) + self.reg_lambda * reg
+    }
+
+    fn loss_gin(&self, params: &[Vec<f64>]) -> f64 {
+        let s = &self.spec;
+        let (nb, hd) = (s.nb, s.h);
+        let mut dims = vec![hd; s.layers + 1];
+        dims[0] = s.f;
+        let mut src = self.x.clone();
+        let mut reg = 0f64;
+        let mut h_last = Vec::new();
+        for l in 0..s.layers {
+            let din = dims[l];
+            let layer = |src: &[f64]| -> Vec<f64> {
+                let eps = self.pget(params, &format!("eps{l}"))[0];
+                let mut pre = self.scatter(src, din);
+                for i in 0..nb * din {
+                    pre[i] += (1.0 + eps) * src[i];
+                }
+                let w1 = self.pget(params, &format!("mlp{l}_w1"));
+                let b1 = self.pget(params, &format!("mlp{l}_b1"));
+                let mut u = matmul(&pre, nb, din, w1, hd);
+                for v in 0..nb {
+                    for j in 0..hd {
+                        u[v * hd + j] += b1[j];
+                    }
+                }
+                let a = relu(&u);
+                let w2 = self.pget(params, &format!("mlp{l}_w2"));
+                let b2 = self.pget(params, &format!("mlp{l}_b2"));
+                let mut o = matmul(&a, nb, hd, w2, hd);
+                for v in 0..nb {
+                    for j in 0..hd {
+                        o[v * hd + j] += b2[j];
+                    }
+                }
+                o
+            };
+            let o = layer(&src);
+            if self.reg_on() && l > 0 {
+                let o_p = layer(&self.perturbed(&src));
+                let mut acc = 0f64;
+                for i in 0..nb * hd {
+                    acc += (o[i] - o_p[i]) * (o[i] - o_p[i]);
+                }
+                reg += acc / nb as f64;
+            }
+            let h = relu(&o);
+            if l + 1 < s.layers {
+                src = if self.full() { h } else { self.concat(&h, l, hd) };
+            } else {
+                h_last = h;
+            }
+        }
+        let mut logits = matmul(&h_last, nb, hd, self.pget(params, "head_w"), s.c);
+        let head_b = self.pget(params, "head_b");
+        for v in 0..nb {
+            for j in 0..s.c {
+                logits[v * s.c + j] += head_b[j];
+            }
+        }
+        self.task_loss(&logits) + self.reg_lambda * reg
+    }
+}
+
+// ---------------------------------------------------------------------------
+// case generation + the check itself
+// ---------------------------------------------------------------------------
+
+fn build_case(spec: ArtifactSpec, reg_lambda: f32, seed: u64) -> (RefCase, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let s = &spec;
+    let rows = if s.is_full() { s.nb } else { s.nt };
+    let x: Vec<f64> = (0..rows * s.f).map(|_| rng.normal() * 0.6).collect();
+    let deg: Vec<f64> = (0..rows).map(|_| (1 + rng.below(4)) as f64).collect();
+    let n_real = 12.min(s.e);
+    let mut edges = Vec::new();
+    for _ in 0..n_real {
+        let src = rng.below(rows);
+        let dst = rng.below(s.nb);
+        let w = 0.3 + rng.f64() * 0.7;
+        edges.push((src, dst, w));
+    }
+    let hist: Vec<f64> = (0..s.hist_layers() * s.nh * s.hist_dim)
+        .map(|_| rng.normal() * 0.4)
+        .collect();
+    let noise: Vec<f64> = (0..rows * s.h.max(s.hist_dim)).map(|_| rng.normal() * 0.15).collect();
+    let labels_i: Vec<i32> = (0..s.nb).map(|_| rng.below(s.c) as i32).collect();
+    let labels_f: Vec<f64> = (0..s.nb * s.c)
+        .map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 })
+        .collect();
+    let mut mask: Vec<f64> = (0..s.nb).map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 }).collect();
+    mask[0] = 1.0;
+    let params = ParamStore::init(&s.params, seed ^ 0x51ab).unwrap();
+    let case = RefCase {
+        edges,
+        x,
+        deg,
+        hist,
+        noise,
+        labels_i,
+        labels_f,
+        mask,
+        reg_lambda: reg_lambda as f64,
+        alpha: 0.1,
+        lam: 1.0,
+        spec,
+    };
+    (case, params)
+}
+
+/// Run one config; returns Err with a description on any mismatch.
+fn grad_check(
+    model: &str,
+    layers: usize,
+    program: &str,
+    loss: &str,
+    reg: f32,
+    seed: u64,
+) -> Result<(), String> {
+    let spec = registry::test_spec(model, layers, program, 5, 3, 24, 3, 4, 3, loss);
+    let (case, params) = build_case(spec.clone(), reg, seed);
+    let art = NativeArtifact::new(spec.clone()).map_err(|e| e.to_string())?;
+
+    // f32 inputs for the native executor
+    let to32 = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+    let (mut e_src, mut e_dst, mut e_w) = (Vec::new(), Vec::new(), Vec::new());
+    for &(s, d, w) in &case.edges {
+        e_src.push(s as i32);
+        e_dst.push(d as i32);
+        e_w.push(w as f32);
+    }
+    e_src.resize(spec.e, 0);
+    e_dst.resize(spec.e, 0);
+    e_w.resize(spec.e, 0.0);
+    let x32 = to32(&case.x);
+    let deg32 = to32(&case.deg);
+    let hist32 = if spec.is_full() { vec![0f32] } else { to32(&case.hist) };
+    let noise32 = to32(&case.noise);
+    let labels_f32 = to32(&case.labels_f);
+    let mask32 = to32(&case.mask);
+    let inp = StepInputs {
+        x: &x32,
+        edge_src: &e_src,
+        edge_dst: &e_dst,
+        edge_w: &e_w,
+        hist: &hist32,
+        labels_i: if loss == "ce" { Some(&case.labels_i) } else { None },
+        labels_f: if loss == "bce" { Some(&labels_f32) } else { None },
+        label_mask: &mask32,
+        deg: &deg32,
+        noise: &noise32,
+        reg_lambda: reg,
+    };
+    let out = art.run(&params.tensors, &inp).map_err(|e| e.to_string())?;
+
+    // forward parity: f32 loss vs the f64 oracle
+    let p64: Vec<Vec<f64>> =
+        params.tensors.iter().map(|t| t.iter().map(|&v| v as f64).collect()).collect();
+    let l64 = case.loss(&p64);
+    if (out.loss as f64 - l64).abs() > 1e-3 + 1e-3 * l64.abs() {
+        return Err(format!(
+            "{model}/{program}/{loss} reg={reg}: fwd loss {} vs oracle {l64}",
+            out.loss
+        ));
+    }
+
+    // central differences in f64, every coordinate of every parameter
+    let eps = 1e-5;
+    for (pi, ps) in spec.params.iter().enumerate() {
+        for j in 0..p64[pi].len() {
+            let mut plus = p64.clone();
+            plus[pi][j] += eps;
+            let mut minus = p64.clone();
+            minus[pi][j] -= eps;
+            let fd = (case.loss(&plus) - case.loss(&minus)) / (2.0 * eps);
+            let an = out.grads[pi][j] as f64;
+            let tol = 2e-3 + 2e-2 * an.abs().max(fd.abs());
+            if (an - fd).abs() > tol {
+                return Err(format!(
+                    "{model}/{program}/{loss} reg={reg} seed={seed}: d{}[{j}] analytic {an} vs fd {fd}",
+                    ps.name
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn seed_base(model: &str, program: &str, loss: &str, reg: f32) -> u64 {
+    // FNV-1a over the config so every test walks a distinct seed stream
+    let mut h = 0xcbf29ce484222325u64;
+    for b in model.bytes().chain(program.bytes()).chain(loss.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ reg.to_bits() as u64
+}
+
+fn run_config(
+    model: &'static str,
+    layers: usize,
+    program: &'static str,
+    loss: &'static str,
+    reg: f32,
+) {
+    // property-based over random seeds; failures shrink to a small witness
+    prop::check(
+        seed_base(model, program, loss, reg),
+        3,
+        |r| r.next_u64(),
+        |&seed| match grad_check(model, layers, program, loss, reg, seed) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("gradient mismatch: {e}");
+                false
+            }
+        },
+    );
+}
+
+#[test]
+fn gcn_gas_ce() {
+    run_config("gcn", 2, "gas", "ce", 0.0);
+}
+
+#[test]
+fn gcn_full_ce() {
+    run_config("gcn", 2, "full", "ce", 0.0);
+}
+
+#[test]
+fn gcn_gas_bce() {
+    run_config("gcn", 2, "gas", "bce", 0.0);
+}
+
+#[test]
+fn gcnii_gas_ce_no_reg() {
+    run_config("gcnii", 3, "gas", "ce", 0.0);
+}
+
+#[test]
+fn gcnii_gas_ce_with_reg_noise() {
+    run_config("gcnii", 3, "gas", "ce", 0.3);
+}
+
+#[test]
+fn gcnii_full_ce() {
+    run_config("gcnii", 3, "full", "ce", 0.0);
+}
+
+#[test]
+fn gcnii_gas_bce() {
+    run_config("gcnii", 2, "gas", "bce", 0.0);
+}
+
+#[test]
+fn gin_gas_ce_no_reg() {
+    run_config("gin", 2, "gas", "ce", 0.0);
+}
+
+#[test]
+fn gin_gas_ce_with_reg_noise() {
+    run_config("gin", 3, "gas", "ce", 0.3);
+}
+
+#[test]
+fn gin_full_ce() {
+    run_config("gin", 2, "full", "ce", 0.0);
+}
+
+#[test]
+fn gin_gas_bce() {
+    run_config("gin", 2, "gas", "bce", 0.0);
+}

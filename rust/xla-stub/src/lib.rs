@@ -280,7 +280,9 @@ impl PjRtLoadedExecutable {
     pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(err(format!(
             "the offline `xla` stub cannot execute HLO ({} bytes of module text); \
-             build against the real xla/PJRT bindings to run artifacts",
+             rerun with `--backend native` (or GAS_BACKEND=native) to use the \
+             pure-Rust interpreter, or build against the real xla/PJRT bindings \
+             to run compiled artifacts",
             self.hlo_text.len()
         )))
     }
