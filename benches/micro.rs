@@ -1,6 +1,8 @@
 //! Micro-benchmarks of the L3 hot paths: METIS partitioning, history
-//! pull/push throughput (serial vs concurrent vs sharded), batch assembly,
-//! literal marshalling (§Perf baselines in EXPERIMENTS.md).
+//! pull/push throughput (serial vs concurrent vs sharded), blocked-vs-
+//! scalar GEMM kernels on the dense dims that dominate native step time,
+//! batch assembly, literal marshalling (§Perf baselines in
+//! EXPERIMENTS.md).
 //!
 //!     cargo bench --bench micro
 //!     GAS_MICRO_TINY=1 cargo bench --bench micro   # CI smoke (< 120 s; includes
@@ -10,6 +12,7 @@
 //! override with `GAS_BENCH_JSON`) so the CI bench-smoke job can archive
 //! pull/push throughput and fail loudly on regressions.
 
+use gas::backend::native::{gemm, ops};
 use gas::bench::{write_bench_json, BenchReport, Bencher};
 use gas::graph::generators;
 use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
@@ -135,6 +138,70 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- GEMM: blocked register-tiled kernels vs the scalar oracles ----------
+    // The dense dims that dominate native step time (f=256 in, h=64 out):
+    // fwd = X·W, bwd-bt = dZ·Wᵀ (input grads), bwd-atb = Xᵀ·dZ (param
+    // grads). Both shapes run in tiny mode too — the n=10k speedup is a CI
+    // gate (ci/check_bench_micro.py) — only the iteration count shrinks.
+    let mut gemm_metrics: Vec<(String, f64)> = Vec::new();
+    {
+        let (k_dim, m_dim) = (256usize, 64usize);
+        for (n, tag) in [(1_000usize, "n1k"), (10_000usize, "n10k")] {
+            let mut rng = Rng::new(0x6E);
+            let x: Vec<f32> = (0..n * k_dim).map(|_| rng.normal_f32() * 0.1).collect();
+            let w: Vec<f32> = (0..k_dim * m_dim).map(|_| rng.normal_f32() * 0.1).collect();
+            let dz: Vec<f32> = (0..n * m_dim).map(|_| rng.normal_f32() * 0.1).collect();
+            let flops = 2.0 * (n * k_dim * m_dim) as f64;
+            let mut record = |op: &str, blocked_s: f64, scalar_s: f64| {
+                let gflops = flops / blocked_s / 1e9;
+                gemm_metrics.push((format!("gemm_{op}_{tag}_blocked_gflops"), gflops));
+                gemm_metrics.push((format!("gemm_{op}_{tag}_speedup"), scalar_s / blocked_s));
+            };
+
+            let tb = run(&mut reports, &format!("gemm fwd {tag} k=256 m=64 [blocked]"), &mut || {
+                std::hint::black_box(gemm::matmul(&x, n, k_dim, &w, m_dim));
+            });
+            let ts = run(&mut reports, &format!("gemm fwd {tag} k=256 m=64 [scalar]"), &mut || {
+                std::hint::black_box(ops::matmul_scalar(&x, n, k_dim, &w, m_dim));
+            });
+            record("fwd", tb, ts);
+
+            let tb = run(&mut reports, &format!("gemm bt {tag} k=256 m=64 [blocked]"), &mut || {
+                std::hint::black_box(gemm::matmul_bt(&dz, n, m_dim, &w, k_dim));
+            });
+            let ts = run(&mut reports, &format!("gemm bt {tag} k=256 m=64 [scalar]"), &mut || {
+                std::hint::black_box(ops::matmul_bt_scalar(&dz, n, m_dim, &w, k_dim));
+            });
+            record("bt", tb, ts);
+
+            let mut gw = vec![0f32; k_dim * m_dim];
+            let tb = run(&mut reports, &format!("gemm atb {tag} k=256 m=64 [blocked]"), &mut || {
+                gemm::matmul_at_b_acc(&x, n, k_dim, &dz, m_dim, &mut gw);
+                std::hint::black_box(&gw);
+            });
+            let mut gw = vec![0f32; k_dim * m_dim];
+            let ts = run(&mut reports, &format!("gemm atb {tag} k=256 m=64 [scalar]"), &mut || {
+                ops::matmul_at_b_acc_scalar(&x, n, k_dim, &dz, m_dim, &mut gw);
+                std::hint::black_box(&gw);
+            });
+            record("atb", tb, ts);
+        }
+        let show = |key: &str| {
+            gemm_metrics
+                .iter()
+                .find(|(k, _)| k == &format!("gemm_{key}_n10k_speedup"))
+                .map(|&(_, v)| v)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "\ngemm blocked vs scalar @ n=10k,k=256,m=64: fwd {:.2}x, bt {:.2}x, atb {:.2}x \
+             (CI floor ≥ 2x)",
+            show("fwd"),
+            show("bt"),
+            show("atb")
+        );
+    }
+
     // --- batch assembly on a synthetic graph (no artifacts needed) -----------
     let n_asm = if tiny { 20_000 } else { 100_000 };
     let mut rng = Rng::new(2);
@@ -246,17 +313,14 @@ fn main() -> anyhow::Result<()> {
     );
     let json_path =
         std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".to_string());
-    write_bench_json(
-        &json_path,
-        "micro",
-        &reports,
-        &[
-            ("tiny", if tiny { 1.0 } else { 0.0 }),
-            ("rayon_threads", rayon::current_num_threads() as f64),
-            ("pull_speedup_sharded_vs_serial", pull_speedup),
-            ("push_speedup_sharded_vs_serial", push_speedup),
-        ],
-    )?;
+    let mut metrics: Vec<(&str, f64)> = vec![
+        ("tiny", if tiny { 1.0 } else { 0.0 }),
+        ("rayon_threads", rayon::current_num_threads() as f64),
+        ("pull_speedup_sharded_vs_serial", pull_speedup),
+        ("push_speedup_sharded_vs_serial", push_speedup),
+    ];
+    metrics.extend(gemm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
+    write_bench_json(&json_path, "micro", &reports, &metrics)?;
     println!("wrote {json_path}");
     Ok(())
 }

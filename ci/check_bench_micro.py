@@ -2,21 +2,31 @@
 """Gate the CI bench-smoke job on BENCH_micro.json.
 
 Exits non-zero when the sharded history pull/push medians blow an absolute
-budget, or when the sharded-vs-serial speedup falls below a floor. The
-budgets are deliberately loose: shared CI runners are noisy, so this gate
-catches order-of-magnitude regressions (and near-hangs shorter than the
-job timeout), not few-percent drift. Thresholds are overridable via env
-for local experimentation:
+budget, when the sharded-vs-serial speedup falls below a floor, or when
+the blocked GEMM kernels stop clearing their per-shape GFLOP/s floors and
+the blocked-vs-scalar speedup floor on the gated n=10k,k=256,m=64 shapes.
+The history/GFLOP budgets are deliberately loose: shared CI runners are
+noisy, so those catch order-of-magnitude regressions (and near-hangs
+shorter than the job timeout), not few-percent drift; the GEMM speedup
+floor is a real product claim (the blocked kernels must beat the scalar
+oracles ≥ 2x on the dims that dominate native step time). Thresholds are
+overridable via env for local experimentation:
 
-    GAS_BENCH_MAX_PULL_MS   (default 250)
-    GAS_BENCH_MAX_PUSH_MS   (default 500)
-    GAS_BENCH_MIN_SPEEDUP   (default 0.6)
+    GAS_BENCH_MAX_PULL_MS        (default 250)
+    GAS_BENCH_MAX_PUSH_MS        (default 500)
+    GAS_BENCH_MIN_SPEEDUP        (default 0.6)
+    GAS_BENCH_MIN_GEMM_GFLOPS    (default 1.0, every blocked shape)
+    GAS_BENCH_MIN_GEMM_SPEEDUP   (default 2.0, n=10k shapes)
 
 Usage: python3 ci/check_bench_micro.py [BENCH_micro.json]
 """
 import json
 import os
 import sys
+
+GEMM_OPS = ("fwd", "bt", "atb")
+GEMM_SHAPES = ("n1k", "n10k")
+GEMM_GATED_SHAPE = "n10k"
 
 
 def main() -> int:
@@ -27,6 +37,8 @@ def main() -> int:
     pull_budget_ms = float(os.environ.get("GAS_BENCH_MAX_PULL_MS", "250"))
     push_budget_ms = float(os.environ.get("GAS_BENCH_MAX_PUSH_MS", "500"))
     speedup_floor = float(os.environ.get("GAS_BENCH_MIN_SPEEDUP", "0.6"))
+    gemm_gflops_floor = float(os.environ.get("GAS_BENCH_MIN_GEMM_GFLOPS", "1.0"))
+    gemm_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_GEMM_SPEEDUP", "2.0"))
 
     medians = {r["name"]: r["median_ms"] for r in rec["results"]}
 
@@ -50,6 +62,21 @@ def main() -> int:
         print(f"{key}: {v:.2f}x (floor {speedup_floor}x)")
         if v < speedup_floor:
             failures.append(f"{key} = {v:.2f}x below floor {speedup_floor}x")
+
+    # GEMM section: every blocked shape must clear the GFLOP/s floor; the
+    # big (n=10k) shapes must also clear the blocked-vs-scalar speedup floor
+    for op in GEMM_OPS:
+        for shape in GEMM_SHAPES:
+            key = f"gemm_{op}_{shape}_blocked_gflops"
+            v = metrics[key]
+            print(f"{key}: {v:.2f} GFLOP/s (floor {gemm_gflops_floor})")
+            if v < gemm_gflops_floor:
+                failures.append(f"{key} = {v:.2f} GFLOP/s below floor {gemm_gflops_floor}")
+        key = f"gemm_{op}_{GEMM_GATED_SHAPE}_speedup"
+        v = metrics[key]
+        print(f"{key}: {v:.2f}x (floor {gemm_speedup_floor}x)")
+        if v < gemm_speedup_floor:
+            failures.append(f"{key} = {v:.2f}x below floor {gemm_speedup_floor}x")
 
     if failures:
         print("\nPERF GATE FAILED:")

@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Gate PRs on the bench *trajectory*: fresh BENCH_*.json vs the committed
+previous run.
+
+The bench-smoke job commits its BENCH_micro.json / BENCH_fig3.json to
+`ci/trajectory/` on every push to main (see .github/workflows/ci.yml), so
+every PR can compare its freshly-measured medians against the last
+known-good run of the same tiny-mode smoke on the same runner class. Any
+*gated* median that regresses by more than the threshold fails the job —
+perf is a product surface, and a 25% step is a code change, not runner
+noise smeared over a single sample (absolute budgets in
+check_bench_micro.py already catch order-of-magnitude blowups; this
+catches the slow bleed).
+
+Rules:
+  * missing baseline  -> pass (first run on a fresh branch history)
+  * tiny-mode mismatch between fresh and baseline -> pass with a note
+    (the records are not comparable)
+  * toolchain mismatch -> pass with a note: when the workflow exports
+    GAS_BENCH_TRAJ_FINGERPRINT (the rustc version) and the committed
+    FINGERPRINT next to the baseline differs, kernel codegen changed under
+    the baseline's feet and the medians are not comparable; the main-only
+    refresh step rewrites both together
+  * gated medians: only bench rows matching GATED_SUBSTRINGS for that
+    bench name, and only rows above MIN_GATED_MS (sub-millisecond medians
+    are timer noise)
+  * regression = fresh_median / baseline_median - 1 > threshold, AND the
+    row's min must regress past the threshold too (when both records
+    carry min_ms): a noisy neighbor inflates the median of a 5-sample
+    run long before it inflates the min, so requiring both filters
+    single-run flakes. Residual risk — a genuinely slower runner
+    generation shifts both — is accepted: the threshold is loose, the
+    env override exists, and main refreshes the baseline every push.
+
+Env overrides:
+    GAS_BENCH_TRAJ_MAX_REGRESSION  (default 0.25)
+    GAS_BENCH_TRAJ_MIN_MS          (default 1.0)
+    GAS_BENCH_TRAJ_FINGERPRINT     (default: skip the fingerprint check)
+
+Usage: python3 ci/check_bench_trajectory.py FRESH.json BASELINE.json
+"""
+import json
+import os
+import sys
+
+# substrings selecting the gated rows per bench record name; everything
+# else (scalar oracle baselines, probe micro-rows) is informational
+GATED_SUBSTRINGS = {
+    "micro": [
+        "history pull 8K rows x3 layers [sharded]",
+        "history push 4x8K rows + drain [sharded]",
+        "[blocked]",          # every blocked GEMM row
+        "train step",         # the end-to-end native step
+        "batch assembly",
+    ],
+    # fig3 emits no timed rows today (metrics only, gated absolutely by
+    # check_bench_fig3.py); listing it keeps the trajectory file tracked
+    # and gates any timed rows the bench grows later
+    "fig3_convergence": [
+        "",                   # every timed row fig3 emits
+    ],
+}
+
+
+def gated(bench: str, name: str) -> bool:
+    subs = GATED_SUBSTRINGS.get(bench)
+    if subs is None:
+        return False
+    return any(s in name for s in subs)
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    fresh_path, base_path = sys.argv[1], sys.argv[2]
+    threshold = float(os.environ.get("GAS_BENCH_TRAJ_MAX_REGRESSION", "0.25"))
+    min_ms = float(os.environ.get("GAS_BENCH_TRAJ_MIN_MS", "1.0"))
+
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if not os.path.exists(base_path):
+        print(f"no committed baseline at {base_path} — trajectory starts here, passing")
+        return 0
+    with open(base_path) as f:
+        base = json.load(f)
+
+    bench = fresh.get("bench", "?")
+    if base.get("bench") != bench:
+        print(f"baseline is for bench {base.get('bench')!r}, fresh is {bench!r} — skipping")
+        return 0
+    if fresh.get("metrics", {}).get("tiny") != base.get("metrics", {}).get("tiny"):
+        print("tiny-mode mismatch between fresh and baseline — records not comparable, skipping")
+        return 0
+    fingerprint = os.environ.get("GAS_BENCH_TRAJ_FINGERPRINT", "")
+    fp_path = os.path.join(os.path.dirname(base_path) or ".", "FINGERPRINT")
+    if fingerprint and os.path.exists(fp_path):
+        with open(fp_path) as f:
+            base_fp = f.read().strip()
+        if base_fp and base_fp != fingerprint:
+            print(
+                f"toolchain fingerprint changed ({base_fp!r} -> {fingerprint!r}) — "
+                "baseline medians not comparable, skipping until main refreshes them"
+            )
+            return 0
+
+    base_rows = {r["name"]: r for r in base.get("results", [])}
+    failures = []
+    checked = 0
+    for r in fresh.get("results", []):
+        name, ms = r["name"], r["median_ms"]
+        if not gated(bench, name):
+            continue
+        prev_row = base_rows.get(name)
+        if prev_row is None:
+            print(f"  new gated row (no baseline): {name}: {ms:.3f} ms")
+            continue
+        prev = prev_row["median_ms"]
+        if prev < min_ms and ms < min_ms:
+            continue  # both below the timer-noise floor
+        checked += 1
+        ratio = ms / prev if prev > 0 else float("inf")
+        regressed = ratio - 1.0 > threshold
+        # median regressions must be corroborated by the min (when
+        # recorded): single-run median noise does not move the min
+        if regressed and "min_ms" in r and "min_ms" in prev_row and prev_row["min_ms"] > 0:
+            min_ratio = r["min_ms"] / prev_row["min_ms"]
+            if min_ratio - 1.0 <= threshold:
+                print(
+                    f"  {name}: median {prev:.3f} -> {ms:.3f} ms ({ratio:.2f}x) but min "
+                    f"{prev_row['min_ms']:.3f} -> {r['min_ms']:.3f} ms ({min_ratio:.2f}x) "
+                    "— treating as runner noise"
+                )
+                regressed = False
+        if regressed or ratio - 1.0 <= threshold:
+            flag = "REGRESSED" if regressed else "ok"
+            print(f"  {name}: {prev:.3f} -> {ms:.3f} ms ({ratio:.2f}x) {flag}")
+        if regressed:
+            failures.append(
+                f"{name}: median {prev:.3f} -> {ms:.3f} ms "
+                f"(+{(ratio - 1.0) * 100:.0f}% > {threshold * 100:.0f}%)"
+            )
+
+    print(f"{bench}: {checked} gated medians compared against {base_path}")
+    if failures:
+        print("\nTRAJECTORY GATE FAILED:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("trajectory gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,424 @@
+//! Cache-blocked, register-tiled GEMM kernels — the dense hot path of the
+//! native backend (BLIS-style, scaled to the dims the interpreter actually
+//! sees: depth = F ≤ 256, output width = H ≤ 64 per layer transform).
+//!
+//! Layout and blocking:
+//!
+//! * the B operand is packed once per call into [`NR`]-lane column panels,
+//!   depth-major, so the inner loop reads one aligned 8-wide vector per
+//!   depth step ([`V8`], a `#[repr(align(32))]` fixed-width array whose
+//!   loops autovectorize on stable Rust — no `std::simd`, no intrinsics);
+//! * the output is walked in [`MR`]×(2·[`NR`]) register tiles: MR rows of
+//!   A against a *pair* of packed panels, so each broadcast A value feeds
+//!   16 lanes and the accumulators live in registers across the whole
+//!   depth loop — the explicitly unrolled 8-wide FMA micro-kernel. Tail
+//!   rows (n % MR) and an odd trailing panel are runtime-dispatched to
+//!   narrower const-generic instantiations of the same kernel;
+//! * blocks of [`MC`] output rows fan out over rayon (the MC loop);
+//!   the NC loop is the per-block panel sweep. A dedicated KC loop only
+//!   exists where the depth dimension is actually large — the reduction
+//!   over n in [`matmul_at_b_acc`] is v-blocked by [`VB`] so the A/dA
+//!   blocks stay cache-resident;
+//! * rows of A that are entirely zero (shape padding) are skipped, like
+//!   the scalar oracles this module replaces.
+//!
+//! Determinism and bit-compatibility (property-tested in
+//! `rust/tests/gemm_prop.rs`): each output element is accumulated by
+//! exactly one thread as a chain of `acc + a*b` additions in the same
+//! depth order as the scalar oracles in [`super::ops`] — mul then add, no
+//! `mul_add` fusion, no partial-sum reassociation. For finite inputs the
+//! results are bitwise identical to the oracles up to the sign of zero
+//! (the oracles skip `a == 0.0` terms element-wise, the kernels multiply
+//! through; `-0.0 == 0.0` so values never differ).
+//!
+//! Shape checks here are *real* asserts, release builds included: these
+//! entry points are fed by manifest-derived shapes, and a bad manifest
+//! must fail loudly rather than read OOB-adjacent garbage.
+
+use rayon::prelude::*;
+
+/// Register-tile rows: A rows per micro-kernel call.
+const MR: usize = 3;
+/// Lanes per packed panel (one vector group).
+const NR: usize = 8;
+/// Output rows per rayon task: amortizes the fork while keeping the A
+/// block (MC × depth ≤ 128 KiB at depth 256) cache-hot.
+const MC: usize = 128;
+/// Depth-block rows for the `AᵀB` reduction (its depth is n, the only
+/// genuinely large depth in this backend): one VB×4 column strip of A is
+/// 8 KiB and stays in L1 across the panel sweep.
+const VB: usize = 512;
+/// Below this many flops the packing + fork overhead dominates; run the
+/// tiled kernel on the caller's thread instead of spawning rayon tasks.
+const PAR_MIN_FLOPS: usize = 1 << 16;
+
+/// 8 f32 lanes, 32-byte aligned. Fixed-width loops over the array compile
+/// to vector code on stable Rust without any unsafe or nightly features.
+#[derive(Clone, Copy)]
+#[repr(align(32))]
+struct V8([f32; 8]);
+
+impl V8 {
+    const ZERO: V8 = V8([0.0; 8]);
+
+    /// `self += a * b` lane-wise — mul then add, never `mul_add`, so the
+    /// per-element rounding matches the scalar oracles exactly.
+    #[inline(always)]
+    fn fma(&mut self, a: f32, b: &V8) {
+        for (acc, &bv) in self.0.iter_mut().zip(b.0.iter()) {
+            *acc += a * bv;
+        }
+    }
+
+    /// Load up to 8 lanes from a slice, zero-padding the rest.
+    #[inline(always)]
+    fn load(src: &[f32]) -> V8 {
+        let mut v = V8::ZERO;
+        v.0[..src.len().min(NR)].copy_from_slice(&src[..src.len().min(NR)]);
+        v
+    }
+}
+
+/// Per-row "has any nonzero" mask of the `[n, k]` A operand — zero rows
+/// are shape padding and every kernel skips them wholesale.
+fn nonzero_rows(a: &[f32], n: usize, k: usize) -> Vec<bool> {
+    let scan = |row: &[f32]| row.iter().any(|&x| x != 0.0);
+    if n * k >= PAR_MIN_FLOPS {
+        a[..n * k].par_chunks(k).map(scan).collect()
+    } else {
+        a[..n * k].chunks(k).map(scan).collect()
+    }
+}
+
+/// Pack the `[k, m]` row-major B of `A·B` into `m.div_ceil(NR)` panels:
+/// panel `p` holds output columns `p*NR..`, depth-major (`packed[p*k + kk]`
+/// is the panel's 8 columns at depth `kk`), zero-padded past `m`.
+fn pack_b(b: &[f32], k: usize, m: usize) -> Vec<V8> {
+    let panels = m.div_ceil(NR);
+    let mut out = vec![V8::ZERO; panels * k];
+    for (p, dst) in out.chunks_mut(k).enumerate() {
+        let j0 = p * NR;
+        let w = NR.min(m - j0);
+        for (kk, v) in dst.iter_mut().enumerate() {
+            v.0[..w].copy_from_slice(&b[kk * m + j0..kk * m + j0 + w]);
+        }
+    }
+    out
+}
+
+/// Pack the `[kout, m]` row-major B of `A·Bᵀ` the same way: panel `p`
+/// holds B *rows* `p*NR..` as output columns, depth-major over `m`.
+fn pack_bt(b: &[f32], kout: usize, m: usize) -> Vec<V8> {
+    let panels = kout.div_ceil(NR);
+    let mut out = vec![V8::ZERO; panels * m];
+    for (p, dst) in out.chunks_mut(m).enumerate() {
+        let i0 = p * NR;
+        let w = NR.min(kout - i0);
+        for c in 0..w {
+            let brow = &b[(i0 + c) * m..(i0 + c) * m + m];
+            for (v, &x) in dst.iter_mut().zip(brow.iter()) {
+                v.0[c] = x;
+            }
+        }
+    }
+    out
+}
+
+/// Micro-kernel: `M` A rows × `P` packed panels, accumulators in registers
+/// across the whole depth loop, each element accumulated in depth order.
+/// `out_rows` is the contiguous `[M, w]` output region; `jn` lanes of the
+/// last panel are valid (`NR` for all earlier ones).
+#[allow(clippy::too_many_arguments)] // private micro-kernel: args are the tile coordinates
+#[inline(always)]
+fn micro_tile<const M: usize, const P: usize>(
+    a: &[f32],
+    lda: usize,
+    vbase: usize,
+    depth: usize,
+    panels: [&[V8]; P],
+    j0: usize,
+    jn: usize,
+    w: usize,
+    out_rows: &mut [f32],
+) {
+    let mut arows = [a; M];
+    for (i, r) in arows.iter_mut().enumerate() {
+        *r = &a[(vbase + i) * lda..(vbase + i) * lda + depth];
+    }
+    let mut acc = [[V8::ZERO; P]; M];
+    for kk in 0..depth {
+        let mut bv = [V8::ZERO; P];
+        for (q, pan) in panels.iter().enumerate() {
+            bv[q] = pan[kk];
+        }
+        for (i, accr) in acc.iter_mut().enumerate() {
+            let av = arows[i][kk];
+            for (q, accq) in accr.iter_mut().enumerate() {
+                accq.fma(av, &bv[q]);
+            }
+        }
+    }
+    for (i, accr) in acc.iter().enumerate() {
+        for (q, accq) in accr.iter().enumerate() {
+            let jq = j0 + q * NR;
+            let lanes = if q + 1 == P { jn } else { NR };
+            out_rows[i * w + jq..i * w + jq + lanes].copy_from_slice(&accq.0[..lanes]);
+        }
+    }
+}
+
+/// One MR-row group against every panel, dispatching the widest kernel
+/// that fits: panel pairs first, then the odd trailing panel.
+#[inline(always)]
+fn row_group<const M: usize>(
+    a: &[f32],
+    lda: usize,
+    vbase: usize,
+    depth: usize,
+    packed: &[V8],
+    w: usize,
+    out_rows: &mut [f32],
+) {
+    let panels = w.div_ceil(NR);
+    let mut p = 0;
+    while p + 2 <= panels {
+        let lanes2 = (w - (p + 1) * NR).min(NR);
+        micro_tile::<M, 2>(
+            a,
+            lda,
+            vbase,
+            depth,
+            [&packed[p * depth..(p + 1) * depth], &packed[(p + 1) * depth..(p + 2) * depth]],
+            p * NR,
+            lanes2,
+            w,
+            out_rows,
+        );
+        p += 2;
+    }
+    if p < panels {
+        let lanes = w - p * NR;
+        micro_tile::<M, 1>(
+            a,
+            lda,
+            vbase,
+            depth,
+            [&packed[p * depth..(p + 1) * depth]],
+            p * NR,
+            lanes.min(NR),
+            w,
+            out_rows,
+        );
+    }
+}
+
+/// Shared macro-kernel for [`matmul`] / [`matmul_bt`]: `out [n, w] =
+/// A [n, depth] · packed-panels`, rayon-parallel over MC-row blocks.
+/// Zero A rows leave the (already-zeroed) out rows untouched.
+fn gemm_packed(a: &[f32], n: usize, depth: usize, packed: &[V8], w: usize, out: &mut [f32]) {
+    let row_nz = nonzero_rows(a, n, depth);
+    let block = |(blk, out_blk): (usize, &mut [f32])| {
+        let rows = out_blk.len() / w;
+        let v0 = blk * MC;
+        let mut r = 0;
+        while r < rows {
+            let mr = MR.min(rows - r);
+            let vbase = v0 + r;
+            if row_nz[vbase..vbase + mr].iter().any(|&nz| nz) {
+                let out_rows = &mut out_blk[r * w..(r + mr) * w];
+                match mr {
+                    3 => row_group::<3>(a, depth, vbase, depth, packed, w, out_rows),
+                    2 => row_group::<2>(a, depth, vbase, depth, packed, w, out_rows),
+                    _ => row_group::<1>(a, depth, vbase, depth, packed, w, out_rows),
+                }
+            }
+            r += mr;
+        }
+    };
+    if n * depth * w >= PAR_MIN_FLOPS {
+        out.par_chunks_mut(MC * w).enumerate().for_each(block);
+    } else {
+        out.chunks_mut(MC * w).enumerate().for_each(block);
+    }
+}
+
+/// `a [n,k] @ b [k,m] -> [n,m]`, row-major — the blocked drop-in for
+/// [`super::ops::matmul_scalar`]. Zero rows of `a` (shape padding) are
+/// skipped entirely.
+pub fn matmul(a: &[f32], n: usize, k: usize, b: &[f32], m: usize) -> Vec<f32> {
+    assert!(a.len() >= n * k, "gemm::matmul: a has {} values, n*k = {}", a.len(), n * k);
+    assert!(b.len() >= k * m, "gemm::matmul: b has {} values, k*m = {}", b.len(), k * m);
+    let mut out = vec![0f32; n * m];
+    if n == 0 || k == 0 || m == 0 {
+        return out;
+    }
+    let packed = pack_b(b, k, m);
+    gemm_packed(a, n, k, &packed, m, &mut out);
+    out
+}
+
+/// `a [n,m] @ b [k,m]^T -> [n,k]` (used for `dz @ W^T`) — the blocked
+/// drop-in for [`super::ops::matmul_bt_scalar`].
+pub fn matmul_bt(a: &[f32], n: usize, m: usize, b: &[f32], k: usize) -> Vec<f32> {
+    assert!(a.len() >= n * m, "gemm::matmul_bt: a has {} values, n*m = {}", a.len(), n * m);
+    assert!(b.len() >= k * m, "gemm::matmul_bt: b has {} values, k*m = {}", b.len(), k * m);
+    let mut out = vec![0f32; n * k];
+    if n == 0 || m == 0 || k == 0 {
+        return out;
+    }
+    let packed = pack_bt(b, k, m);
+    gemm_packed(a, n, m, &packed, k, &mut out);
+    out
+}
+
+/// `out [k,m] += a [n,k]^T @ da [n,m]` (parameter gradients) — the blocked
+/// drop-in for [`super::ops::matmul_at_b_acc_scalar`]. Rayon-parallel over
+/// `out` row tiles; every element accumulates over `v` in ascending order
+/// on top of the incoming `out` values, so chains match the oracle.
+pub fn matmul_at_b_acc(a: &[f32], n: usize, k: usize, da: &[f32], m: usize, out: &mut [f32]) {
+    assert!(a.len() >= n * k, "gemm::matmul_at_b_acc: a has {} values, n*k = {}", a.len(), n * k);
+    assert!(
+        da.len() >= n * m,
+        "gemm::matmul_at_b_acc: da has {} values, n*m = {}",
+        da.len(),
+        n * m
+    );
+    assert!(
+        out.len() >= k * m,
+        "gemm::matmul_at_b_acc: out has {} values, k*m = {}",
+        out.len(),
+        k * m
+    );
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    let row_nz = nonzero_rows(a, n, k);
+    let out = &mut out[..k * m];
+    let tile = |(t, out_blk): (usize, &mut [f32])| {
+        at_b_tile(a, n, k, da, m, t * MR, out_blk, &row_nz);
+    };
+    if n * k * m >= PAR_MIN_FLOPS {
+        out.par_chunks_mut(MR * m).enumerate().for_each(tile);
+    } else {
+        out.chunks_mut(MR * m).enumerate().for_each(tile);
+    }
+}
+
+/// One `[mr ≤ MR, m]` tile of the `AᵀB` output: v-blocked ([`VB`]) so the
+/// A column strip stays L1-resident across the panel sweep, accumulators
+/// register-resident per (v-block, panel) with out store/load in between —
+/// the depth chain stays in ascending `v` order.
+#[allow(clippy::too_many_arguments)] // private kernel: args are the tile coordinates
+fn at_b_tile(
+    a: &[f32],
+    n: usize,
+    k: usize,
+    da: &[f32],
+    m: usize,
+    i0: usize,
+    out_blk: &mut [f32],
+    row_nz: &[bool],
+) {
+    let mr = out_blk.len() / m;
+    let panels_full = m / NR;
+    for v0 in (0..n).step_by(VB) {
+        let vend = (v0 + VB).min(n);
+        for p in 0..panels_full {
+            let j0 = p * NR;
+            let mut acc = [V8::ZERO; MR];
+            for (i, accr) in acc.iter_mut().take(mr).enumerate() {
+                accr.0.copy_from_slice(&out_blk[i * m + j0..i * m + j0 + NR]);
+            }
+            for v in v0..vend {
+                if !row_nz[v] {
+                    continue;
+                }
+                let dv = V8::load(&da[v * m + j0..v * m + j0 + NR]);
+                let arow = &a[v * k + i0..v * k + i0 + mr];
+                for (i, &av) in arow.iter().enumerate() {
+                    acc[i].fma(av, &dv);
+                }
+            }
+            for (i, accr) in acc.iter().take(mr).enumerate() {
+                out_blk[i * m + j0..i * m + j0 + NR].copy_from_slice(&accr.0);
+            }
+        }
+        // ragged tail columns (m % NR): plain loops, still v-ordered
+        let j0 = panels_full * NR;
+        if j0 < m {
+            for v in v0..vend {
+                if !row_nz[v] {
+                    continue;
+                }
+                let drow = &da[v * m + j0..v * m + m];
+                let arow = &a[v * k + i0..v * k + i0 + mr];
+                for (i, &av) in arow.iter().enumerate() {
+                    let orow = &mut out_blk[i * m + j0..i * m + m];
+                    for (o, &d) in orow.iter_mut().zip(drow.iter()) {
+                        *o += av * d;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::ops;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn matmul_matches_hand_result() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&a, 2, 3, &b, 2), vec![4.0, 5.0, 10.0, 11.0]);
+        let bt = matmul_bt(&a, 2, 3, &[1.0, 1.0, 0.0, 0.0, 0.0, 2.0], 2);
+        assert_eq!(bt, vec![3.0, 6.0, 9.0, 12.0]);
+        let mut w = vec![0f32; 3 * 2];
+        matmul_at_b_acc(&a, 2, 3, &[1.0, 0.0, 0.0, 1.0], 2, &mut w);
+        assert_eq!(w, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn blocked_matches_scalar_on_tiled_and_ragged_shapes() {
+        // exercises full 2-panel tiles, the odd trailing panel, row tails
+        // and zero-padded rows in one go
+        let mut rng = Rng::new(42);
+        for &(n, k, m) in &[(1, 1, 1), (3, 5, 8), (7, 16, 17), (130, 33, 20), (257, 64, 9)] {
+            let mut a = randv(&mut rng, n * k);
+            // zero-pad the last quarter of rows (shape padding)
+            for v in (n - n / 4)..n {
+                a[v * k..(v + 1) * k].fill(0.0);
+            }
+            let b = randv(&mut rng, k * m);
+            let fwd = matmul(&a, n, k, &b, m);
+            assert_eq!(fwd, ops::matmul_scalar(&a, n, k, &b, m), "{n}x{k}x{m}");
+            let abt = randv(&mut rng, n * m);
+            assert_eq!(
+                matmul_bt(&abt, n, m, &b, k),
+                ops::matmul_bt_scalar(&abt, n, m, &b, k),
+                "{n}x{k}x{m}"
+            );
+            let da = randv(&mut rng, n * m);
+            let mut out_blocked = randv(&mut rng, k * m);
+            let mut out_scalar = out_blocked.clone();
+            matmul_at_b_acc(&a, n, k, &da, m, &mut out_blocked);
+            ops::matmul_at_b_acc_scalar(&a, n, k, &da, m, &mut out_scalar);
+            assert_eq!(out_blocked, out_scalar, "{n}x{k}x{m}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm::matmul: b has")]
+    fn short_b_fails_loudly_in_release_too() {
+        let a = [1.0; 6];
+        let b = [1.0; 5]; // wants 3*2 = 6
+        let _ = matmul(&a, 2, 3, &b, 2);
+    }
+}

@@ -1,6 +1,14 @@
 //! Masked task losses (forward + gradient w.r.t. logits), mirroring
 //! `python/compile/models.py::softmax_ce` / `bce_multilabel` exactly:
 //! per-row loss, weighted by the f32 mask, normalized by `max(Σmask, 1)`.
+//!
+//! Rows are independent, so both losses fan out over rayon (`[n, c]`
+//! gradient rows in parallel); the scalar loss is then reduced **in row
+//! order** on the calling thread, masked rows skipped, so the f64
+//! accumulation chain — and therefore the result, bit for bit — matches
+//! the serial walk for any thread count.
+
+use rayon::prelude::*;
 
 /// Masked mean cross-entropy. `logits [n,c]`, `labels [n]` (class ids),
 /// `mask [n]`. Returns `(loss, dloss/dlogits)`.
@@ -12,26 +20,37 @@ pub fn softmax_ce(
     mask: &[f32],
 ) -> (f32, Vec<f32>) {
     let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
-    let mut loss = 0f64;
     let mut dl = vec![0f32; n * c];
-    for v in 0..n {
-        if mask[v] == 0.0 {
-            continue;
-        }
-        let row = &logits[v * c..v * c + c];
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0f32;
-        for &l in row {
-            denom += (l - mx).exp();
-        }
-        let y = labels[v] as usize;
-        let logp_y = row[y] - mx - denom.ln();
-        loss += (-logp_y * mask[v] / msum) as f64;
-        let scale = mask[v] / msum;
-        let drow = &mut dl[v * c..v * c + c];
-        for j in 0..c {
-            let p = (row[j] - mx).exp() / denom;
-            drow[j] = scale * (p - if j == y { 1.0 } else { 0.0 });
+    let per_row: Vec<f64> = dl
+        .par_chunks_mut(c)
+        .enumerate()
+        .map(|(v, drow)| {
+            if mask[v] == 0.0 {
+                return 0.0;
+            }
+            let row = &logits[v * c..v * c + c];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f32;
+            for &l in row {
+                denom += (l - mx).exp();
+            }
+            let y = labels[v] as usize;
+            let logp_y = row[y] - mx - denom.ln();
+            let scale = mask[v] / msum;
+            for (j, d) in drow.iter_mut().enumerate() {
+                let p = (row[j] - mx).exp() / denom;
+                *d = scale * (p - if j == y { 1.0 } else { 0.0 });
+            }
+            // keep the exact pre-parallel rounding (mul before the msum
+            // divide) so recorded loss curves stay bit-comparable
+            (-logp_y * mask[v] / msum) as f64
+        })
+        .collect();
+    // deterministic reduction: the serial accumulation chain, in row order
+    let mut loss = 0f64;
+    for (v, term) in per_row.iter().enumerate() {
+        if mask[v] != 0.0 {
+            loss += term;
         }
     }
     (loss as f32, dl)
@@ -47,30 +66,38 @@ pub fn bce_multilabel(
     mask: &[f32],
 ) -> (f32, Vec<f32>) {
     let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
-    let mut loss = 0f64;
     let mut dl = vec![0f32; n * c];
-    for v in 0..n {
-        if mask[v] == 0.0 {
-            continue;
+    let per_row: Vec<f64> = dl
+        .par_chunks_mut(c)
+        .enumerate()
+        .map(|(v, drow)| {
+            if mask[v] == 0.0 {
+                return 0.0;
+            }
+            let row = &logits[v * c..v * c + c];
+            let yrow = &labels[v * c..v * c + c];
+            let scale = mask[v] / (msum * c as f32);
+            let mut per = 0f64;
+            for (j, d) in drow.iter_mut().enumerate() {
+                let (l, y) = (row[j], yrow[j]);
+                // log σ(l) and log σ(-l), numerically stable
+                let (log_p, log_np) = if l >= 0.0 {
+                    (-(1.0 + (-l).exp()).ln(), -l - (1.0 + (-l).exp()).ln())
+                } else {
+                    (l - (1.0 + l.exp()).ln(), -(1.0 + l.exp()).ln())
+                };
+                per += -(y * log_p + (1.0 - y) * log_np) as f64;
+                let sig = 1.0 / (1.0 + (-l).exp());
+                *d = scale * (sig - y);
+            }
+            per / c as f64 * (mask[v] / msum) as f64
+        })
+        .collect();
+    let mut loss = 0f64;
+    for (v, term) in per_row.iter().enumerate() {
+        if mask[v] != 0.0 {
+            loss += term;
         }
-        let row = &logits[v * c..v * c + c];
-        let yrow = &labels[v * c..v * c + c];
-        let scale = mask[v] / (msum * c as f32);
-        let mut per = 0f64;
-        let drow = &mut dl[v * c..v * c + c];
-        for j in 0..c {
-            let (l, y) = (row[j], yrow[j]);
-            // log σ(l) and log σ(-l), numerically stable
-            let (log_p, log_np) = if l >= 0.0 {
-                (-(1.0 + (-l).exp()).ln(), -l - (1.0 + (-l).exp()).ln())
-            } else {
-                (l - (1.0 + l.exp()).ln(), -(1.0 + l.exp()).ln())
-            };
-            per += -(y * log_p + (1.0 - y) * log_np) as f64;
-            let sig = 1.0 / (1.0 + (-l).exp());
-            drow[j] = scale * (sig - y);
-        }
-        loss += per / c as f64 * (mask[v] / msum) as f64;
     }
     (loss as f32, dl)
 }
@@ -108,5 +135,20 @@ mod tests {
         assert!((loss - (2f32).ln()).abs() < 1e-6);
         assert!((dl[0] + 0.25).abs() < 1e-6); // (σ(0)-1)/2
         assert!((dl[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parallel_rows_are_deterministic() {
+        // many rows: exercise the rayon fan-out, twice, expecting bitwise
+        // identical results (each row one thread, reduction in row order)
+        let n = 513;
+        let c = 7;
+        let logits: Vec<f32> = (0..n * c).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.07).collect();
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % c as i32).collect();
+        let mask: Vec<f32> = (0..n).map(|v| if v % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let (l1, d1) = softmax_ce(&logits, n, c, &labels, &mask);
+        let (l2, d2) = softmax_ce(&logits, n, c, &labels, &mask);
+        assert_eq!(l1, l2);
+        assert_eq!(d1, d2);
     }
 }

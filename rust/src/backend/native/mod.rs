@@ -5,12 +5,15 @@
 //! boundary, masked CE/BCE losses, Lipschitz-noise regularization, and a
 //! hand-written backward pass producing `loss` / per-param `grads` / the
 //! `push` tensor / `logits` in exactly the compiled artifacts' output
-//! order ([`StepOutputs`]).
+//! order ([`StepOutputs`]). Dense layer transforms run on the blocked,
+//! register-tiled GEMM kernels in [`gemm`] (bit-compatible with the
+//! scalar oracles kept in [`ops`]).
 //!
 //! This makes the whole GAS loop run end-to-end without PJRT: when no
 //! AOT-compiled artifact directory is present, [`crate::config::Ctx`]
 //! synthesizes specs from [`registry`] and executes them here.
 
+pub mod gemm;
 pub mod loss;
 pub mod models;
 pub mod ops;

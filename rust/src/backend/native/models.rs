@@ -16,6 +16,7 @@
 //! output difference; it is computed for gas programs when `reg_lambda >
 //! 0`, matching the `with_reg` artifact variants.
 
+use crate::backend::native::gemm;
 use crate::backend::native::loss;
 use crate::backend::native::ops::{self, EdgeIndex};
 use crate::runtime::manifest::ArtifactSpec;
@@ -191,7 +192,7 @@ fn run_gcn(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
     for l in 0..big_l {
         let (din, dout) = (dims[l], dims[l + 1]);
         let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
-        let z = ops::matmul(src_l, rows, din, p.get(&format!("w{l}"))?, dout);
+        let z = gemm::matmul(src_l, rows, din, p.get(&format!("w{l}"))?, dout);
         let mut pre = cx.edges.scatter(&z, dout);
         for v in 0..nb {
             let zr = &z[v * dout..v * dout + dout];
@@ -231,9 +232,9 @@ fn run_gcn(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
                 zr[j] += self_w[v] * dr[j];
             }
         }
-        ops::matmul_at_b_acc(src_l, rows, din, &dz, dout, &mut grads[p.idx(&format!("w{l}"))?]);
+        gemm::matmul_at_b_acc(src_l, rows, din, &dz, dout, &mut grads[p.idx(&format!("w{l}"))?]);
         if l > 0 {
-            let dsrc = ops::matmul_bt(&dz, rows, dout, p.get(&format!("w{l}"))?, din);
+            let dsrc = gemm::matmul_bt(&dz, rows, dout, p.get(&format!("w{l}"))?, din);
             // history rows are inputs: gradient stops at the batch rows
             dpre = ops::relu_bwd(&dsrc[..nb * din], &pres[l - 1][..nb * din]);
         }
@@ -258,7 +259,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
     let reg_on = cx.reg_on();
 
     // input projection (exact for batch AND halo rows)
-    let mut t0 = ops::matmul(cx.x, rows, spec.f, p.get("w_in")?, hdim);
+    let mut t0 = gemm::matmul(cx.x, rows, spec.f, p.get("w_in")?, hdim);
     ops::add_bias(&mut t0, rows, hdim, p.get("b_in")?);
     let h0 = ops::relu(&t0);
 
@@ -295,7 +296,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
             for v in 0..nb * hdim {
                 hn[v] = (1.0 - alpha) * hn[v] + alpha * h0[v];
             }
-            let q = ops::matmul(&hn, nb, hdim, wl, hdim);
+            let q = gemm::matmul(&hn, nb, hdim, wl, hdim);
             let mut pre = vec![0f32; nb * hdim];
             for i in 0..nb * hdim {
                 pre[i] = (1.0 - beta) * hn[i] + beta * q[i];
@@ -321,7 +322,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
         pres.push(pre);
         outs.push(out);
     }
-    let mut logits = ops::matmul(&outs[big_l - 1], nb, hdim, p.get("w_out")?, spec.c);
+    let mut logits = gemm::matmul(&outs[big_l - 1], nb, hdim, p.get("w_out")?, spec.c);
     ops::add_bias(&mut logits, nb, spec.c, p.get("b_out")?);
     let push_layers: Vec<&[f32]> = outs[..big_l - 1].iter().map(|o| o.as_slice()).collect();
     let push = stack_push(&push_layers, nb, spec.hist_dim);
@@ -330,7 +331,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
     let (task, dlogits) = cx.task_loss(&logits);
     let loss_val = task + cx.reg_lambda * reg;
     let mut grads = zero_grads(spec);
-    ops::matmul_at_b_acc(
+    gemm::matmul_at_b_acc(
         &outs[big_l - 1],
         nb,
         hdim,
@@ -339,7 +340,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
         &mut grads[p.idx("w_out")?],
     );
     ops::colsum_acc(&dlogits, nb, spec.c, &mut grads[p.idx("b_out")?]);
-    let mut dh = ops::matmul_bt(&dlogits, nb, spec.c, p.get("w_out")?, hdim);
+    let mut dh = gemm::matmul_bt(&dlogits, nb, spec.c, p.get("w_out")?, hdim);
     let mut dh0 = vec![0f32; rows * hdim];
     let ws_idx = p.idx("w_stack")?;
     for l in (0..big_l).rev() {
@@ -364,7 +365,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
             for i in 0..nb * hdim {
                 dq[i] = beta * dpre[i];
             }
-            ops::matmul_at_b_acc(
+            gemm::matmul_at_b_acc(
                 hn_b,
                 nb,
                 hdim,
@@ -372,7 +373,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
                 hdim,
                 &mut grads[ws_idx][l * hdim * hdim..(l + 1) * hdim * hdim],
             );
-            let mut dhn = ops::matmul_bt(&dq, nb, hdim, wl, hdim);
+            let mut dhn = gemm::matmul_bt(&dq, nb, hdim, wl, hdim);
             for i in 0..nb * hdim {
                 dhn[i] += (1.0 - beta) * dpre[i];
             }
@@ -409,7 +410,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
         }
     }
     let dt0 = ops::relu_bwd(&dh0, &t0);
-    ops::matmul_at_b_acc(cx.x, rows, spec.f, &dt0, hdim, &mut grads[p.idx("w_in")?]);
+    gemm::matmul_at_b_acc(cx.x, rows, spec.f, &dt0, hdim, &mut grads[p.idx("w_in")?]);
     ops::colsum_acc(&dt0, rows, hdim, &mut grads[p.idx("b_in")?]);
     let _ = dh;
     Ok(StepOutputs { loss: loss_val, grads, push, logits })
@@ -441,10 +442,10 @@ fn run_gin(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
         for i in 0..nb * din {
             pre[i] += (1.0 + eps) * src_l[i];
         }
-        let mut u = ops::matmul(&pre, nb, din, p.get(&format!("mlp{l}_w1"))?, h);
+        let mut u = gemm::matmul(&pre, nb, din, p.get(&format!("mlp{l}_w1"))?, h);
         ops::add_bias(&mut u, nb, h, p.get(&format!("mlp{l}_b1"))?);
         let a = ops::relu(&u);
-        let mut o = ops::matmul(&a, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
+        let mut o = gemm::matmul(&a, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
         ops::add_bias(&mut o, nb, h, p.get(&format!("mlp{l}_b2"))?);
         Ok(GinTape { pre, u, a, o })
     };
@@ -485,7 +486,7 @@ fn run_gin(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
         }
         tapes.push(tape);
     }
-    let mut logits = ops::matmul(&h_last, nb, h, p.get("head_w")?, spec.c);
+    let mut logits = gemm::matmul(&h_last, nb, h, p.get("head_w")?, spec.c);
     ops::add_bias(&mut logits, nb, spec.c, p.get("head_b")?);
     let push_layers: Vec<&[f32]> = srcs.iter().map(|s| s.as_slice()).collect();
     let push = stack_push(&push_layers, nb, spec.hist_dim);
@@ -494,9 +495,9 @@ fn run_gin(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
     let (task, dlogits) = cx.task_loss(&logits);
     let loss_val = task + cx.reg_lambda * reg;
     let mut grads = zero_grads(spec);
-    ops::matmul_at_b_acc(&h_last, nb, h, &dlogits, spec.c, &mut grads[p.idx("head_w")?]);
+    gemm::matmul_at_b_acc(&h_last, nb, h, &dlogits, spec.c, &mut grads[p.idx("head_w")?]);
     ops::colsum_acc(&dlogits, nb, spec.c, &mut grads[p.idx("head_b")?]);
-    let mut dh = ops::matmul_bt(&dlogits, nb, spec.c, p.get("head_w")?, h);
+    let mut dh = gemm::matmul_bt(&dlogits, nb, spec.c, p.get("head_w")?, h);
     for l in (0..big_l).rev() {
         let din = dims[l];
         let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
@@ -544,13 +545,13 @@ fn gin_branch_bwd(
     let spec = cx.spec;
     let (nb, h) = (spec.nb, spec.h);
     let eps = p.get(&format!("eps{l}"))?[0];
-    ops::matmul_at_b_acc(&tape.a, nb, h, do_, h, &mut grads[p.idx(&format!("mlp{l}_w2"))?]);
+    gemm::matmul_at_b_acc(&tape.a, nb, h, do_, h, &mut grads[p.idx(&format!("mlp{l}_w2"))?]);
     ops::colsum_acc(do_, nb, h, &mut grads[p.idx(&format!("mlp{l}_b2"))?]);
-    let da = ops::matmul_bt(do_, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
+    let da = gemm::matmul_bt(do_, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
     let du = ops::relu_bwd(&da, &tape.u);
-    ops::matmul_at_b_acc(&tape.pre, nb, din, &du, h, &mut grads[p.idx(&format!("mlp{l}_w1"))?]);
+    gemm::matmul_at_b_acc(&tape.pre, nb, din, &du, h, &mut grads[p.idx(&format!("mlp{l}_w1"))?]);
     ops::colsum_acc(&du, nb, h, &mut grads[p.idx(&format!("mlp{l}_b1"))?]);
-    let dpre = ops::matmul_bt(&du, nb, h, p.get(&format!("mlp{l}_w1"))?, din);
+    let dpre = gemm::matmul_bt(&du, nb, h, p.get(&format!("mlp{l}_w1"))?, din);
     let mut deps = 0f32;
     for i in 0..nb * din {
         deps += dpre[i] * src_l[i];

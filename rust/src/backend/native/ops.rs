@@ -1,8 +1,14 @@
-//! Dense + scatter primitives for the native interpreter, all
-//! rayon-parallel over output rows. Every op accumulates each output row
-//! on a single thread (sequential inner loops), so results are
+//! Scatter primitives + scalar GEMM oracles for the native interpreter,
+//! all rayon-parallel over output rows. Every op accumulates each output
+//! row on a single thread (sequential inner loops), so results are
 //! deterministic for a given input regardless of thread count — the
 //! property the seed-pinned experiment harnesses rely on.
+//!
+//! The three `*_scalar` GEMMs are no longer on the hot path — the model
+//! interpreter runs the blocked kernels in [`super::gemm`] — but stay
+//! here as the reference oracles for the kernel property tests
+//! (`rust/tests/gemm_prop.rs`) and the scalar baseline rows of the
+//! `benches/micro.rs` GEMM section.
 
 use anyhow::{ensure, Result};
 use rayon::prelude::*;
@@ -118,9 +124,12 @@ impl EdgeIndex {
 }
 
 /// `a [n,k] @ b [k,m] -> [n,m]`, row-major. Zero rows of `a` (shape
-/// padding) are skipped entirely.
-pub fn matmul(a: &[f32], n: usize, k: usize, b: &[f32], m: usize) -> Vec<f32> {
-    debug_assert!(a.len() >= n * k && b.len() >= k * m);
+/// padding) are skipped entirely. Scalar oracle for [`super::gemm::matmul`];
+/// shape checks are real asserts so a bad manifest fails loudly in release
+/// builds too.
+pub fn matmul_scalar(a: &[f32], n: usize, k: usize, b: &[f32], m: usize) -> Vec<f32> {
+    assert!(a.len() >= n * k, "matmul_scalar: a has {} values, n*k = {}", a.len(), n * k);
+    assert!(b.len() >= k * m, "matmul_scalar: b has {} values, k*m = {}", b.len(), k * m);
     let mut out = vec![0f32; n * m];
     out.par_chunks_mut(m).enumerate().for_each(|(v, row)| {
         for kk in 0..k {
@@ -136,9 +145,11 @@ pub fn matmul(a: &[f32], n: usize, k: usize, b: &[f32], m: usize) -> Vec<f32> {
     out
 }
 
-/// `a [n,m] @ b[k,m]^T -> [n,k]` (used for `dz @ W^T`).
-pub fn matmul_bt(a: &[f32], n: usize, m: usize, b: &[f32], k: usize) -> Vec<f32> {
-    debug_assert!(a.len() >= n * m && b.len() >= k * m);
+/// `a [n,m] @ b[k,m]^T -> [n,k]` (used for `dz @ W^T`). Scalar oracle for
+/// [`super::gemm::matmul_bt`].
+pub fn matmul_bt_scalar(a: &[f32], n: usize, m: usize, b: &[f32], k: usize) -> Vec<f32> {
+    assert!(a.len() >= n * m, "matmul_bt_scalar: a has {} values, n*m = {}", a.len(), n * m);
+    assert!(b.len() >= k * m, "matmul_bt_scalar: b has {} values, k*m = {}", b.len(), k * m);
     let mut out = vec![0f32; n * k];
     out.par_chunks_mut(k).enumerate().for_each(|(v, row)| {
         let arow = &a[v * m..v * m + m];
@@ -154,9 +165,29 @@ pub fn matmul_bt(a: &[f32], n: usize, m: usize, b: &[f32], k: usize) -> Vec<f32>
     out
 }
 
-/// `out [k,m] += a[n,k]^T @ da [n,m]` (parameter gradients).
-pub fn matmul_at_b_acc(a: &[f32], n: usize, k: usize, da: &[f32], m: usize, out: &mut [f32]) {
-    debug_assert!(a.len() >= n * k && da.len() >= n * m && out.len() >= k * m);
+/// `out [k,m] += a[n,k]^T @ da [n,m]` (parameter gradients). Scalar oracle
+/// for [`super::gemm::matmul_at_b_acc`].
+pub fn matmul_at_b_acc_scalar(
+    a: &[f32],
+    n: usize,
+    k: usize,
+    da: &[f32],
+    m: usize,
+    out: &mut [f32],
+) {
+    assert!(a.len() >= n * k, "matmul_at_b_acc_scalar: a has {} values, n*k = {}", a.len(), n * k);
+    assert!(
+        da.len() >= n * m,
+        "matmul_at_b_acc_scalar: da has {} values, n*m = {}",
+        da.len(),
+        n * m
+    );
+    assert!(
+        out.len() >= k * m,
+        "matmul_at_b_acc_scalar: out has {} values, k*m = {}",
+        out.len(),
+        k * m
+    );
     out.par_chunks_mut(m).enumerate().for_each(|(i, row)| {
         for v in 0..n {
             let avi = a[v * k + i];
@@ -241,15 +272,24 @@ mod tests {
         // [2,3] @ [3,2]
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
-        let out = matmul(&a, 2, 3, &b, 2);
+        let out = matmul_scalar(&a, 2, 3, &b, 2);
         assert_eq!(out, vec![4.0, 5.0, 10.0, 11.0]);
         // a @ b^T with b [2,3]
-        let bt = matmul_bt(&a, 2, 3, &[1.0, 1.0, 0.0, 0.0, 0.0, 2.0], 2);
+        let bt = matmul_bt_scalar(&a, 2, 3, &[1.0, 1.0, 0.0, 0.0, 0.0, 2.0], 2);
         assert_eq!(bt, vec![3.0, 6.0, 9.0, 12.0]);
         // a^T @ da accumulates
         let mut w = vec![0f32; 3 * 2];
-        matmul_at_b_acc(&a, 2, 3, &[1.0, 0.0, 0.0, 1.0], 2, &mut w);
+        matmul_at_b_acc_scalar(&a, 2, 3, &[1.0, 0.0, 0.0, 1.0], 2, &mut w);
         assert_eq!(w, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_at_b_acc_scalar: out has")]
+    fn short_out_fails_loudly_in_release_too() {
+        let a = [1.0; 6];
+        let da = [1.0; 4];
+        let mut out = vec![0f32; 5]; // wants 3*2 = 6
+        matmul_at_b_acc_scalar(&a, 2, 3, &da, 2, &mut out);
     }
 
     #[test]

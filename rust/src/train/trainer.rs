@@ -10,10 +10,14 @@
 //!
 //! Evaluation runs the same artifact over all batches (histories synced),
 //! collecting logits for every node — mirroring the paper's
-//! constant-memory layer-wise inference.
+//! constant-memory layer-wise inference. Because histories are synced and
+//! read-only during eval and the backend is a plain `&dyn Executor`, eval
+//! batches fan out over rayon ([`Trainer::evaluate`]); metrics reduce in
+//! batch order, so the result is bit-identical to the serial walk
+//! ([`Trainer::evaluate_serial`]).
 
 use crate::graph::datasets::Dataset;
-use crate::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
+use crate::history::{HistoryPipeline, PipelineMode, PullBuffer, ShardedHistoryStore};
 use crate::model::metrics;
 use crate::model::{Adam, Optimizer, ParamStore};
 use crate::partition::{metis_partition, random_partition};
@@ -24,6 +28,7 @@ use crate::train::curve::Curve;
 use crate::util::rng::Rng;
 use crate::util::timer::{Buckets, Timer};
 use anyhow::{ensure, Result};
+use rayon::prelude::*;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionKind {
@@ -270,23 +275,7 @@ impl<'a> Trainer<'a> {
 
         // -- execute -------------------------------------------------------
         let t = Timer::start();
-        if self.statics[b].is_none() {
-            let inputs = StepInputs {
-                x: &plan.st.x,
-                edge_src: &plan.edge_src,
-                edge_dst: &plan.edge_dst,
-                edge_w: &plan.edge_w,
-                hist: &self.hist_buf,
-                labels_i: if spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
-                labels_f: if spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
-                label_mask: &plan.st.label_mask,
-                deg: &plan.st.deg,
-                noise: &self.noise_buf,
-                reg_lambda: self.cfg.reg_lambda,
-            };
-            let cache_noise = self.cfg.reg_lambda == 0.0;
-            self.statics[b] = Some(self.art.prepare_static(&inputs, cache_noise)?);
-        }
+        self.ensure_statics(b)?;
         let out = self.art.run_prepared(
             &self.params.tensors,
             self.statics[b].as_ref().unwrap(),
@@ -303,6 +292,7 @@ impl<'a> Trainer<'a> {
 
         // -- push fresh embeddings back ------------------------------------
         let t = Timer::start();
+        let plan = &self.plans[b];
         let nb_real = plan.batch_nodes.len();
         for l in 0..hl {
             let mut buf = self.pipeline.take_buffer(nb_real * hd);
@@ -323,39 +313,111 @@ impl<'a> Trainer<'a> {
         self.pipeline.with_store(f)
     }
 
+    /// Build (once) the backend statics of plan `b` — the per-epoch-
+    /// invariant tensors the executor caches per batch plan.
+    fn ensure_statics(&mut self, b: usize) -> Result<()> {
+        if self.statics[b].is_some() {
+            return Ok(());
+        }
+        let spec = self.art.spec();
+        let plan = &self.plans[b];
+        let inputs = StepInputs {
+            x: &plan.st.x,
+            edge_src: &plan.edge_src,
+            edge_dst: &plan.edge_dst,
+            edge_w: &plan.edge_w,
+            hist: &self.hist_buf,
+            labels_i: if spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
+            labels_f: if spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
+            label_mask: &plan.st.label_mask,
+            deg: &plan.st.deg,
+            noise: &self.noise_buf,
+            reg_lambda: self.cfg.reg_lambda,
+        };
+        let cache_noise = self.cfg.reg_lambda == 0.0;
+        self.statics[b] = Some(self.art.prepare_static(&inputs, cache_noise)?);
+        Ok(())
+    }
+
     /// Evaluate over all batches (histories synced first): returns
     /// (train, val, test) metric — accuracy or micro-F1 per dataset kind.
+    ///
+    /// Batches fan out over rayon: during eval the histories are synced
+    /// and read-only, so every task gathers its halo rows straight from
+    /// the store, splices its own padded hist tensor, and runs the
+    /// executor (`&dyn Executor` is `Sync`). Per-batch logits merge and
+    /// metrics reduce in batch order, so the result is bit-identical to
+    /// [`Trainer::evaluate_serial`] for any thread count.
     pub fn evaluate(&mut self, buckets: &mut Buckets) -> Result<(f64, f64, f64)> {
         // ensure queued pushes are applied and no pull is left hanging
         self.pipeline.sync();
-        let spec = self.art.spec();
+        let t = Timer::start();
+        for b in 0..self.plans.len() {
+            self.ensure_statics(b)?;
+        }
+        let art = self.art;
+        let spec = art.spec();
+        let (hl, hd, c) = (spec.hist_layers(), spec.hist_dim, spec.c);
+        let params = &self.params.tensors;
+        let noise = &self.noise_buf;
+        let plans = &self.plans;
+        let statics = &self.statics;
+        let outs: Vec<Result<Vec<f32>>> = self.pipeline.with_store(|store| {
+            plans
+                .par_iter()
+                .zip(statics.par_iter())
+                .map(|(plan, st)| {
+                    let ids = &plan.halo_nodes;
+                    let mut pull = PullBuffer {
+                        data: vec![0f32; hl * ids.len() * hd],
+                        num_rows: ids.len(),
+                        num_layers: hl,
+                        h: hd,
+                    };
+                    store.pull_all(ids, &mut pull.data);
+                    let mut hist = Vec::new();
+                    plan.fill_hist(spec, &pull, &mut hist);
+                    let st = st.as_ref().expect("statics prepared above");
+                    let out = art.run_prepared(params, st, &hist, noise, 0.0)?;
+                    Ok(out.logits)
+                })
+                .collect()
+        });
+        // deterministic merge in batch order (each node is in exactly one
+        // batch; order still pins the error path and the metric reduction)
+        let n = self.ds.n();
+        let mut logits = vec![0f32; n * c];
+        for (plan, out) in plans.iter().zip(outs) {
+            let out = out?;
+            for (i, &v) in plan.batch_nodes.iter().enumerate() {
+                logits[v as usize * c..(v as usize + 1) * c]
+                    .copy_from_slice(&out[i * c..(i + 1) * c]);
+            }
+        }
+        buckets.add("eval", t.elapsed_s());
+        Ok(score(self.ds, &logits, c))
+    }
+
+    /// The serial reference walk of [`Trainer::evaluate`]: one batch at a
+    /// time through the pull pipeline. Kept as the oracle for the
+    /// eval-parallelism parity test (`rust/tests/native_e2e.rs`) and for
+    /// debugging backend issues without rayon in the way.
+    pub fn evaluate_serial(&mut self, buckets: &mut Buckets) -> Result<(f64, f64, f64)> {
+        // ensure queued pushes are applied and no pull is left hanging
+        self.pipeline.sync();
+        let art = self.art;
+        let spec = art.spec();
         let t = Timer::start();
         let n = self.ds.n();
         let c = spec.c;
         let mut logits = vec![0f32; n * c];
         for b in 0..self.plans.len() {
-            let plan = &self.plans[b];
-            self.pipeline.request_pull(plan.halo_nodes.clone());
+            self.pipeline.request_pull(self.plans[b].halo_nodes.clone());
             let pull = self.pipeline.wait_pull();
-            plan.fill_hist(spec, &pull, &mut self.hist_buf);
+            self.plans[b].fill_hist(spec, &pull, &mut self.hist_buf);
             self.pipeline.recycle(pull);
-            if self.statics[b].is_none() {
-                let inputs = StepInputs {
-                    x: &plan.st.x,
-                    edge_src: &plan.edge_src,
-                    edge_dst: &plan.edge_dst,
-                    edge_w: &plan.edge_w,
-                    hist: &self.hist_buf,
-                    labels_i: if spec.loss == "ce" { Some(&plan.st.labels_i) } else { None },
-                    labels_f: if spec.loss == "bce" { Some(&plan.st.labels_f) } else { None },
-                    label_mask: &plan.st.label_mask,
-                    deg: &plan.st.deg,
-                    noise: &self.noise_buf,
-                    reg_lambda: 0.0,
-                };
-                let cache_noise = self.cfg.reg_lambda == 0.0;
-                self.statics[b] = Some(self.art.prepare_static(&inputs, cache_noise)?);
-            }
+            self.ensure_statics(b)?;
+            let plan = &self.plans[b];
             let out = self.art.run_prepared(
                 &self.params.tensors,
                 self.statics[b].as_ref().unwrap(),

@@ -1,0 +1,144 @@
+//! Property tests for the blocked GEMM kernels (`backend::native::gemm`)
+//! against the scalar oracles (`backend::native::ops`): random shapes —
+//! including ragged tails in every dimension and zero-padded rows — must
+//! match bitwise or within 1 ulp. The kernels are designed for *exact*
+//! bit-compatibility up to the sign of zero (same per-element accumulation
+//! order, mul-then-add, no reassociation), so `x == y` (which equates
+//! ±0.0) is the expected outcome and the 1-ulp allowance is slack, not a
+//! tolerance being leaned on.
+
+use gas::backend::native::{gemm, ops};
+use gas::util::prop;
+use gas::util::rng::Rng;
+
+/// Bitwise-or-within-1-ulp comparison. `==` first: it equates -0.0 and
+/// +0.0, the only divergence the kernels' zero-skip granularity allows.
+fn ulp_close(x: f32, y: f32) -> bool {
+    if x == y {
+        return true;
+    }
+    if x.is_nan() || y.is_nan() {
+        return false;
+    }
+    // map bit patterns onto a monotonic unsigned line so adjacency is a
+    // difference of 1 across the whole float range
+    fn key(v: f32) -> u32 {
+        let b = v.to_bits();
+        if b & 0x8000_0000 != 0 {
+            !b
+        } else {
+            b | 0x8000_0000
+        }
+    }
+    key(x).abs_diff(key(y)) <= 1
+}
+
+fn all_close(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(&x, &y)| ulp_close(x, y))
+}
+
+/// Random `[n, k]` operand with ~10% zero elements (exercising the
+/// oracles' element-level zero skip) and a zero-padded row suffix plus a
+/// few random interior zero rows (exercising the kernels' row skip).
+fn padded_operand(rng: &mut Rng, n: usize, k: usize) -> Vec<f32> {
+    let mut a: Vec<f32> = (0..n * k)
+        .map(|_| if rng.chance(0.1) { 0.0 } else { rng.normal_f32() })
+        .collect();
+    let pad_rows = rng.below(n / 3 + 1);
+    for v in (n - pad_rows)..n {
+        a[v * k..(v + 1) * k].fill(0.0);
+    }
+    for _ in 0..2 {
+        let v = rng.below(n);
+        a[v * k..(v + 1) * k].fill(0.0);
+    }
+    a
+}
+
+/// Shape + data-seed case; dims are clamped to ≥ 1 inside the property so
+/// shrinking stays within the kernels' (and oracles') contracts.
+type Case = ((usize, usize), (usize, u64));
+
+fn gen_case(r: &mut Rng) -> Case {
+    // spans several MR row groups, both panel-pair and odd-panel paths
+    // (m crosses 8 and 16), and ragged tails in every dim
+    ((r.below(200) + 1, r.below(68) + 1), (r.below(68) + 1, r.next_u64()))
+}
+
+#[test]
+fn blocked_matmul_matches_scalar_oracle() {
+    prop::check(0xA0, 48, gen_case, |&((n, k), (m, seed))| {
+        let (n, k, m) = (n.max(1), k.max(1), m.max(1));
+        let mut rng = Rng::new(seed ^ 0x11);
+        let a = padded_operand(&mut rng, n, k);
+        let b: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
+        all_close(&gemm::matmul(&a, n, k, &b, m), &ops::matmul_scalar(&a, n, k, &b, m))
+    });
+}
+
+#[test]
+fn blocked_matmul_bt_matches_scalar_oracle() {
+    prop::check(0xB0, 48, gen_case, |&((n, k), (m, seed))| {
+        let (n, k, m) = (n.max(1), k.max(1), m.max(1));
+        let mut rng = Rng::new(seed ^ 0x22);
+        let a = padded_operand(&mut rng, n, m);
+        let b: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
+        all_close(&gemm::matmul_bt(&a, n, m, &b, k), &ops::matmul_bt_scalar(&a, n, m, &b, k))
+    });
+}
+
+#[test]
+fn blocked_at_b_acc_matches_scalar_oracle() {
+    prop::check(0xC0, 48, gen_case, |&((n, k), (m, seed))| {
+        let (n, k, m) = (n.max(1), k.max(1), m.max(1));
+        let mut rng = Rng::new(seed ^ 0x33);
+        let a = padded_operand(&mut rng, n, k);
+        let da: Vec<f32> = (0..n * m).map(|_| rng.normal_f32()).collect();
+        // accumulate on top of a shared random prefix: both entry points
+        // must chain new terms onto the incoming values identically
+        let init: Vec<f32> = (0..k * m).map(|_| rng.normal_f32() * 0.5).collect();
+        let mut blocked = init.clone();
+        let mut scalar = init;
+        gemm::matmul_at_b_acc(&a, n, k, &da, m, &mut blocked);
+        ops::matmul_at_b_acc_scalar(&a, n, k, &da, m, &mut scalar);
+        all_close(&blocked, &scalar)
+    });
+}
+
+#[test]
+fn paper_dense_dims_match_exactly() {
+    // the exact shapes that dominate native step time (f=256 → h=64),
+    // with a ragged batch row count, fwd and both backward variants
+    let (n, k, m) = (1003usize, 256usize, 64usize);
+    let mut rng = Rng::new(9);
+    let a = padded_operand(&mut rng, n, k);
+    let w: Vec<f32> = (0..k * m).map(|_| rng.normal_f32() * 0.05).collect();
+    assert!(all_close(&gemm::matmul(&a, n, k, &w, m), &ops::matmul_scalar(&a, n, k, &w, m)));
+    let dz: Vec<f32> = (0..n * m).map(|_| rng.normal_f32()).collect();
+    let bt_blocked = gemm::matmul_bt(&dz, n, m, &w, k);
+    assert!(all_close(&bt_blocked, &ops::matmul_bt_scalar(&dz, n, m, &w, k)));
+    let mut gw_b = vec![0f32; k * m];
+    let mut gw_s = vec![0f32; k * m];
+    gemm::matmul_at_b_acc(&a, n, k, &dz, m, &mut gw_b);
+    ops::matmul_at_b_acc_scalar(&a, n, k, &dz, m, &mut gw_s);
+    assert!(all_close(&gw_b, &gw_s));
+}
+
+#[test]
+fn zero_padded_rows_stay_exactly_zero() {
+    // padding rows must come out as +0.0 bits — downstream scatter relies
+    // on padded rows contributing nothing
+    let (n, k, m) = (37usize, 19usize, 11usize);
+    let mut rng = Rng::new(4);
+    let mut a: Vec<f32> = (0..n * k).map(|_| rng.normal_f32()).collect();
+    for v in 30..n {
+        a[v * k..(v + 1) * k].fill(0.0);
+    }
+    let b: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
+    let out = gemm::matmul(&a, n, k, &b, m);
+    for v in 30..n {
+        for &x in &out[v * m..(v + 1) * m] {
+            assert_eq!(x.to_bits(), 0, "padding row {v} leaked {x}");
+        }
+    }
+}
