@@ -114,19 +114,19 @@ fn main() -> anyhow::Result<()> {
             let mut io_wait = 0f64;
             let mut push_wait = 0f64;
             let t_all = Timer::start();
-            pipe.request_pull(plan.halo_nodes.clone()); // prime (serial: inline gather)
+            pipe.request_pull(plan.halo_nodes.clone())?; // prime (serial: inline gather)
             for s in 0..steps {
                 // serial: the gather happens here, blocking (I/O overhead);
                 // concurrent: the worker prefetched it during the last exec.
                 let t = Timer::start();
                 if mode == PipelineMode::Serial && s > 0 {
-                    pipe.request_pull(plan.halo_nodes.clone());
+                    pipe.request_pull(plan.halo_nodes.clone())?;
                 }
-                let pull = pipe.wait_pull();
+                let pull = pipe.wait_pull()?;
                 io_wait += t.elapsed_s();
                 if mode == PipelineMode::Concurrent && s + 1 < steps {
                     // prefetch the next step's histories during exec
-                    pipe.request_pull(plan.halo_nodes.clone());
+                    pipe.request_pull(plan.halo_nodes.clone())?;
                 }
                 plan.fill_hist(&spec, &pull, &mut hist_buf);
                 pipe.recycle(pull);

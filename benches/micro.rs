@@ -1,7 +1,9 @@
 //! Micro-benchmarks of the L3 hot paths: METIS partitioning, history
 //! pull/push throughput (serial vs concurrent vs sharded), blocked-vs-
 //! scalar GEMM kernels on the dense dims that dominate native step time,
-//! batch assembly, literal marshalling (§Perf baselines in
+//! blocked-vs-scalar SpMM (CSR scatter) kernels on the sparse dims that
+//! dominate at scale, the serial-vs-pipelined training epoch (pull_depth
+//! overlap), batch assembly, literal marshalling (§Perf baselines in
 //! EXPERIMENTS.md).
 //!
 //!     cargo bench --bench micro
@@ -12,7 +14,7 @@
 //! override with `GAS_BENCH_JSON`) so the CI bench-smoke job can archive
 //! pull/push throughput and fail loudly on regressions.
 
-use gas::backend::native::{gemm, ops};
+use gas::backend::native::{gemm, ops, registry, spmm, NativeArtifact};
 use gas::bench::{write_bench_json, BenchReport, Bencher};
 use gas::graph::generators;
 use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
@@ -105,8 +107,8 @@ fn main() -> anyhow::Result<()> {
             &mut reports,
             &format!("history pull 8K rows x3 layers [{label}]"),
             &mut || {
-                pipe.request_pull(ids_arc.clone());
-                let buf = pipe.wait_pull();
+                pipe.request_pull(ids_arc.clone()).expect("pull slot free");
+                let buf = pipe.wait_pull().expect("pull staged");
                 pipe.recycle(buf);
             },
         );
@@ -202,6 +204,73 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- SpMM: blocked CSR scatter kernels vs the scalar oracles -------------
+    // The sparse dims that dominate at scale (Duan et al.: neighbor
+    // aggregation, not the GEMM, is the large-graph bottleneck): d=64
+    // features, average degrees bracketing the paper's datasets. fwd =
+    // destination-major scatter-sum, bwd = source-major scatter-transpose
+    // accumulate. Both sizes run in tiny mode too — the n=10k speedups are
+    // a CI gate (ci/check_bench_micro.py) — only iteration count shrinks.
+    let mut spmm_metrics: Vec<(String, f64)> = Vec::new();
+    {
+        let d = 64usize;
+        for (n, ntag) in [(1_000usize, "n1k"), (10_000usize, "n10k")] {
+            for deg in [8usize, 32] {
+                let mut rng = Rng::new(0x5B ^ (n + deg) as u64);
+                let e = n * deg;
+                let src: Vec<i32> = (0..e).map(|_| rng.below(n) as i32).collect();
+                let dst: Vec<i32> = (0..e).map(|_| rng.below(n) as i32).collect();
+                // strictly positive weights: every edge is real
+                let w: Vec<f32> = (0..e).map(|_| 0.25 + rng.normal_f32().abs()).collect();
+                let ei = ops::EdgeIndex::build(&src, &dst, &w, n, n).unwrap();
+                let z: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.1).collect();
+                let dh: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.1).collect();
+                let gedges = ei.num_edges() as f64 / 1e9;
+                let tag = format!("{ntag}_deg{deg}");
+                let mut record = |op: &str, blocked_s: f64, scalar_s: f64| {
+                    spmm_metrics
+                        .push((format!("spmm_{op}_{tag}_blocked_gedges"), gedges / blocked_s));
+                    spmm_metrics.push((format!("spmm_{op}_{tag}_speedup"), scalar_s / blocked_s));
+                };
+
+                let tb = run(&mut reports, &format!("spmm fwd {tag} d=64 [blocked]"), &mut || {
+                    std::hint::black_box(spmm::scatter(&ei, &z, d));
+                });
+                let ts = run(&mut reports, &format!("spmm fwd {tag} d=64 [scalar]"), &mut || {
+                    std::hint::black_box(ei.scatter_scalar(&z, d));
+                });
+                record("fwd", tb, ts);
+
+                let mut acc = vec![0f32; n * d];
+                let tb = run(&mut reports, &format!("spmm bwd {tag} d=64 [blocked]"), &mut || {
+                    spmm::scatter_t_acc(&ei, &dh, d, &mut acc);
+                    std::hint::black_box(&acc);
+                });
+                let mut acc = vec![0f32; n * d];
+                let ts = run(&mut reports, &format!("spmm bwd {tag} d=64 [scalar]"), &mut || {
+                    ei.scatter_t_acc_scalar(&dh, d, &mut acc);
+                    std::hint::black_box(&acc);
+                });
+                record("bwd", tb, ts);
+            }
+        }
+        let show = |key: &str| {
+            spmm_metrics
+                .iter()
+                .find(|(k, _)| k == &format!("spmm_{key}_speedup"))
+                .map(|&(_, v)| v)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "\nspmm blocked vs scalar @ n=10k,d=64: fwd deg8 {:.2}x / deg32 {:.2}x, \
+             bwd deg8 {:.2}x / deg32 {:.2}x (CI floor ≥ 2x)",
+            show("fwd_n10k_deg8"),
+            show("fwd_n10k_deg32"),
+            show("bwd_n10k_deg8"),
+            show("bwd_n10k_deg32")
+        );
+    }
+
     // --- batch assembly on a synthetic graph (no artifacts needed) -----------
     let n_asm = if tiny { 20_000 } else { 100_000 };
     let mut rng = Rng::new(2);
@@ -294,6 +363,124 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- epoch software pipeline: serial vs pull_depth=2 overlap --------------
+    // A full multi-batch training epoch through the native backend (the
+    // trainer's exact schedule: prime pull_depth gathers, wait/refill per
+    // step, background pushes, epoch-end sync). "serial" is the inline
+    // baseline (depth 1, Serial mode); "pull_depth=2" overlaps gather,
+    // compute and push. The speedup metric is a CI floor
+    // (ci/check_bench_micro.py) and both rows feed the trajectory gate.
+    let overlap_speedup = {
+        let n = if tiny { 4_000 } else { 12_000 };
+        let parts = 8usize;
+        let profile = gas::graph::datasets::Profile {
+            name: "micro_pipe".into(),
+            kind: "planted".into(),
+            n,
+            f: 64,
+            c: 8,
+            avg_deg: 16.0,
+            multilabel: false,
+            train_frac: 1.0,
+            val_frac: 0.0,
+            homophily: 0.8,
+            feat_noise: 1.0,
+            parts,
+            paper_n: n,
+            seed: 5,
+        };
+        let ds = gas::graph::datasets::Dataset::generate(&profile);
+        let spec = registry::spec_for_profile(&profile, "gcn", 2, "gas", "")?;
+        let art = NativeArtifact::new(spec)?;
+        let spec = art.spec().clone();
+        let part = metis_partition(&ds.graph, parts, 1);
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); parts];
+        for (v, &p) in part.iter().enumerate() {
+            groups[p as usize].push(v as u32);
+        }
+        let plans: Vec<BatchPlan> = groups
+            .iter()
+            .map(|g| BatchPlan::build_gas(&ds, &spec, g, LabelSel::Train))
+            .collect::<anyhow::Result<_>>()?;
+        let params = gas::model::ParamStore::init(&spec.params, 1)?;
+        let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
+        let hist0 = vec![0f32; spec.hist_layers() * spec.nh * spec.hist_dim];
+        let statics: Vec<_> = plans
+            .iter()
+            .map(|plan| {
+                let inputs = gas::runtime::StepInputs {
+                    x: &plan.st.x,
+                    edge_src: &plan.edge_src,
+                    edge_dst: &plan.edge_dst,
+                    edge_w: &plan.edge_w,
+                    hist: &hist0,
+                    labels_i: Some(&plan.st.labels_i),
+                    labels_f: None,
+                    label_mask: &plan.st.label_mask,
+                    deg: &plan.st.deg,
+                    noise: &noise,
+                    reg_lambda: 0.0,
+                };
+                art.prepare_static(&inputs, true)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let (hl, hd) = (spec.hist_layers(), spec.hist_dim);
+        let epoch = |pipe: &mut HistoryPipeline, hist_buf: &mut Vec<f32>| {
+            let depth = pipe.pull_depth();
+            for k in 0..depth.min(plans.len()) {
+                pipe.request_pull(plans[k].halo_nodes.clone()).expect("pull slot free");
+            }
+            for (b, plan) in plans.iter().enumerate() {
+                let pull = pipe.wait_pull().expect("pull staged");
+                if let Some(next) = plans.get(b + depth) {
+                    pipe.request_pull(next.halo_nodes.clone()).expect("pull slot free");
+                }
+                plan.fill_hist(&spec, &pull, hist_buf);
+                pipe.recycle(pull);
+                let out = art
+                    .run_prepared(&params.tensors, &statics[b], hist_buf, &noise, 0.0)
+                    .expect("native step");
+                let nb_real = plan.batch_nodes.len();
+                for l in 0..hl {
+                    let mut buf = pipe.take_buffer(nb_real * hd);
+                    let base = l * spec.nb * hd;
+                    buf.copy_from_slice(&out.push[base..base + nb_real * hd]);
+                    pipe.push(l, plan.batch_nodes.clone(), buf);
+                }
+                pipe.tick();
+            }
+            pipe.sync();
+        };
+        let mut hist_buf = Vec::new();
+        let mut pipe_serial = HistoryPipeline::with_depth(
+            ShardedHistoryStore::new(ds.n(), hd, hl),
+            PipelineMode::Serial,
+            1,
+        );
+        let serial_s = run(
+            &mut reports,
+            &format!("pipeline epoch {parts} parts n={n} [serial]"),
+            &mut || epoch(&mut pipe_serial, &mut hist_buf),
+        );
+        let mut pipe_depth2 = HistoryPipeline::with_depth(
+            ShardedHistoryStore::new(ds.n(), hd, hl),
+            PipelineMode::Concurrent,
+            2,
+        );
+        let piped_s = run(
+            &mut reports,
+            &format!("pipeline epoch {parts} parts n={n} [pull_depth=2]"),
+            &mut || epoch(&mut pipe_depth2, &mut hist_buf),
+        );
+        let speedup = serial_s / piped_s;
+        println!(
+            "\npipelined epoch (pull_depth=2) vs serial: {speedup:.2}x \
+             (CI floor ≥ 0.9x, win tracked by trajectory; threads={})",
+            rayon::current_num_threads()
+        );
+        speedup
+    };
+
     // --- summary + JSON -------------------------------------------------------
     let hist = |label: &str| -> (f64, f64) {
         let &(_, pull_s, push_s) = hist_medians
@@ -318,8 +505,10 @@ fn main() -> anyhow::Result<()> {
         ("rayon_threads", rayon::current_num_threads() as f64),
         ("pull_speedup_sharded_vs_serial", pull_speedup),
         ("push_speedup_sharded_vs_serial", push_speedup),
+        ("pipeline_overlap_speedup", overlap_speedup),
     ];
     metrics.extend(gemm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
+    metrics.extend(spmm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
     write_bench_json(&json_path, "micro", &reports, &metrics)?;
     println!("wrote {json_path}");
     Ok(())

@@ -2,21 +2,29 @@
 """Gate the CI bench-smoke job on BENCH_micro.json.
 
 Exits non-zero when the sharded history pull/push medians blow an absolute
-budget, when the sharded-vs-serial speedup falls below a floor, or when
-the blocked GEMM kernels stop clearing their per-shape GFLOP/s floors and
-the blocked-vs-scalar speedup floor on the gated n=10k,k=256,m=64 shapes.
-The history/GFLOP budgets are deliberately loose: shared CI runners are
-noisy, so those catch order-of-magnitude regressions (and near-hangs
-shorter than the job timeout), not few-percent drift; the GEMM speedup
-floor is a real product claim (the blocked kernels must beat the scalar
-oracles ≥ 2x on the dims that dominate native step time). Thresholds are
-overridable via env for local experimentation:
+budget, when the sharded-vs-serial speedup falls below a floor, when the
+blocked GEMM/SpMM kernels stop clearing their per-shape throughput floors
+or the blocked-vs-scalar speedup floors on the gated n=10k shapes, or
+when the pull_depth=2 pipelined epoch falls behind the serial epoch.
+The history/throughput budgets are deliberately loose: shared CI runners
+are noisy, so those catch order-of-magnitude regressions (and near-hangs
+shorter than the job timeout), not few-percent drift; the GEMM/SpMM
+speedup floors are real product claims (the blocked kernels must beat the
+scalar oracles ≥ 2x on the dims that dominate native step time), while
+the pipeline-overlap floor only catches "pipelining made epochs clearly
+slower" (0.9, leaving margin for runner noise on saturated 2-vCPU
+runners) — the actual overlap win is tracked by the trajectory gate on
+the two pipeline-epoch rows. Thresholds are overridable via env for
+local experimentation:
 
-    GAS_BENCH_MAX_PULL_MS        (default 250)
-    GAS_BENCH_MAX_PUSH_MS        (default 500)
-    GAS_BENCH_MIN_SPEEDUP        (default 0.6)
-    GAS_BENCH_MIN_GEMM_GFLOPS    (default 1.0, every blocked shape)
-    GAS_BENCH_MIN_GEMM_SPEEDUP   (default 2.0, n=10k shapes)
+    GAS_BENCH_MAX_PULL_MS          (default 250)
+    GAS_BENCH_MAX_PUSH_MS          (default 500)
+    GAS_BENCH_MIN_SPEEDUP          (default 0.6)
+    GAS_BENCH_MIN_GEMM_GFLOPS      (default 1.0, every blocked shape)
+    GAS_BENCH_MIN_GEMM_SPEEDUP     (default 2.0, n=10k shapes)
+    GAS_BENCH_MIN_SPMM_GEDGES      (default 0.02, every blocked shape)
+    GAS_BENCH_MIN_SPMM_SPEEDUP     (default 2.0, n=10k shapes)
+    GAS_BENCH_MIN_OVERLAP_SPEEDUP  (default 0.9, pipelined vs serial epoch)
 
 Usage: python3 ci/check_bench_micro.py [BENCH_micro.json]
 """
@@ -27,6 +35,9 @@ import sys
 GEMM_OPS = ("fwd", "bt", "atb")
 GEMM_SHAPES = ("n1k", "n10k")
 GEMM_GATED_SHAPE = "n10k"
+SPMM_OPS = ("fwd", "bwd")
+SPMM_SHAPES = ("n1k_deg8", "n1k_deg32", "n10k_deg8", "n10k_deg32")
+SPMM_GATED_SHAPES = ("n10k_deg8", "n10k_deg32")
 
 
 def main() -> int:
@@ -39,6 +50,9 @@ def main() -> int:
     speedup_floor = float(os.environ.get("GAS_BENCH_MIN_SPEEDUP", "0.6"))
     gemm_gflops_floor = float(os.environ.get("GAS_BENCH_MIN_GEMM_GFLOPS", "1.0"))
     gemm_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_GEMM_SPEEDUP", "2.0"))
+    spmm_gedges_floor = float(os.environ.get("GAS_BENCH_MIN_SPMM_GEDGES", "0.02"))
+    spmm_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_SPMM_SPEEDUP", "2.0"))
+    overlap_floor = float(os.environ.get("GAS_BENCH_MIN_OVERLAP_SPEEDUP", "0.9"))
 
     medians = {r["name"]: r["median_ms"] for r in rec["results"]}
 
@@ -77,6 +91,29 @@ def main() -> int:
         print(f"{key}: {v:.2f}x (floor {gemm_speedup_floor}x)")
         if v < gemm_speedup_floor:
             failures.append(f"{key} = {v:.2f}x below floor {gemm_speedup_floor}x")
+
+    # SpMM section: every blocked shape must clear the GEdge/s floor; the
+    # big (n=10k) shapes must also clear the blocked-vs-scalar speedup floor
+    for op in SPMM_OPS:
+        for shape in SPMM_SHAPES:
+            key = f"spmm_{op}_{shape}_blocked_gedges"
+            v = metrics[key]
+            print(f"{key}: {v:.3f} GEdge/s (floor {spmm_gedges_floor})")
+            if v < spmm_gedges_floor:
+                failures.append(f"{key} = {v:.3f} GEdge/s below floor {spmm_gedges_floor}")
+        for shape in SPMM_GATED_SHAPES:
+            key = f"spmm_{op}_{shape}_speedup"
+            v = metrics[key]
+            print(f"{key}: {v:.2f}x (floor {spmm_speedup_floor}x)")
+            if v < spmm_speedup_floor:
+                failures.append(f"{key} = {v:.2f}x below floor {spmm_speedup_floor}x")
+
+    # pipelined (pull_depth=2) epoch must not fall clearly behind serial
+    # (loose floor; the overlap *win* is gated by the trajectory check)
+    v = metrics["pipeline_overlap_speedup"]
+    print(f"pipeline_overlap_speedup: {v:.2f}x (floor {overlap_floor}x)")
+    if v < overlap_floor:
+        failures.append(f"pipeline_overlap_speedup = {v:.2f}x below floor {overlap_floor}x")
 
     if failures:
         print("\nPERF GATE FAILED:")

@@ -49,9 +49,10 @@ GATED_SUBSTRINGS = {
     "micro": [
         "history pull 8K rows x3 layers [sharded]",
         "history push 4x8K rows + drain [sharded]",
-        "[blocked]",          # every blocked GEMM row
+        "[blocked]",          # every blocked GEMM and SpMM row
         "train step",         # the end-to-end native step
         "batch assembly",
+        "pipeline epoch",     # serial + pull_depth=2 software-pipeline rows
     ],
     # fig3 emits no timed rows today (metrics only, gated absolutely by
     # check_bench_fig3.py); listing it keeps the trajectory file tracked

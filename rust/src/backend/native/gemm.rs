@@ -54,6 +54,9 @@ const PAR_MIN_FLOPS: usize = 1 << 16;
 
 /// 8 f32 lanes, 32-byte aligned. Fixed-width loops over the array compile
 /// to vector code on stable Rust without any unsafe or nightly features.
+/// ([`super::spmm`] keeps its own private copy; the two `fma` bodies
+/// share the mul-then-add bit-compatibility contract and must stay in
+/// sync.)
 #[derive(Clone, Copy)]
 #[repr(align(32))]
 struct V8([f32; 8]);

@@ -6,7 +6,8 @@
 //! hand-written backward pass producing `loss` / per-param `grads` / the
 //! `push` tensor / `logits` in exactly the compiled artifacts' output
 //! order ([`StepOutputs`]). Dense layer transforms run on the blocked,
-//! register-tiled GEMM kernels in [`gemm`] (bit-compatible with the
+//! register-tiled GEMM kernels in [`gemm`]; CSR message aggregation runs
+//! on the blocked SpMM kernels in [`spmm`] (both bit-compatible with the
 //! scalar oracles kept in [`ops`]).
 //!
 //! This makes the whole GAS loop run end-to-end without PJRT: when no
@@ -18,6 +19,7 @@ pub mod loss;
 pub mod models;
 pub mod ops;
 pub mod registry;
+pub mod spmm;
 
 use crate::runtime::executor::{Executor, Prepared};
 use crate::runtime::manifest::ArtifactSpec;

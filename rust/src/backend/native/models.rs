@@ -19,6 +19,7 @@
 use crate::backend::native::gemm;
 use crate::backend::native::loss;
 use crate::backend::native::ops::{self, EdgeIndex};
+use crate::backend::native::spmm;
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::StepOutputs;
 use anyhow::{bail, ensure, Context, Result};
@@ -193,7 +194,7 @@ fn run_gcn(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
         let (din, dout) = (dims[l], dims[l + 1]);
         let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
         let z = gemm::matmul(src_l, rows, din, p.get(&format!("w{l}"))?, dout);
-        let mut pre = cx.edges.scatter(&z, dout);
+        let mut pre = spmm::scatter(cx.edges, &z, dout);
         for v in 0..nb {
             let zr = &z[v * dout..v * dout + dout];
             let pr = &mut pre[v * dout..v * dout + dout];
@@ -224,7 +225,7 @@ fn run_gcn(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
         let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
         ops::colsum_acc(&dpre, nb, dout, &mut grads[p.idx(&format!("b{l}"))?]);
         let mut dz = vec![0f32; rows * dout];
-        cx.edges.scatter_t_acc(&dpre, dout, &mut dz);
+        spmm::scatter_t_acc(cx.edges, &dpre, dout, &mut dz);
         for v in 0..nb {
             let dr = &dpre[v * dout..v * dout + dout];
             let zr = &mut dz[v * dout..v * dout + dout];
@@ -284,7 +285,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
             concat_sources(h_prev, cx.hist_layer(l - 1), nb, nh, hdim)
         };
         let layer_fwd = |s: &[f32]| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-            let mut prop = cx.edges.scatter(s, hdim);
+            let mut prop = spmm::scatter(cx.edges, s, hdim);
             for v in 0..nb {
                 let sr = &s[v * hdim..v * hdim + hdim];
                 let pr = &mut prop[v * hdim..v * hdim + hdim];
@@ -384,7 +385,7 @@ fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
             for v in dprop.iter_mut() {
                 *v *= 1.0 - alpha;
             }
-            cx.edges.scatter_t_acc(&dprop, hdim, &mut dsrc);
+            spmm::scatter_t_acc(cx.edges, &dprop, hdim, &mut dsrc);
             for v in 0..nb {
                 let dr = &dprop[v * hdim..v * hdim + hdim];
                 let sr = &mut dsrc[v * hdim..v * hdim + hdim];
@@ -438,7 +439,7 @@ fn run_gin(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
 
     let gin_fwd = |l: usize, src_l: &[f32], din: usize| -> Result<GinTape> {
         let eps = p.get(&format!("eps{l}"))?[0];
-        let mut pre = cx.edges.scatter(src_l, din);
+        let mut pre = spmm::scatter(cx.edges, src_l, din);
         for i in 0..nb * din {
             pre[i] += (1.0 + eps) * src_l[i];
         }
@@ -560,6 +561,6 @@ fn gin_branch_bwd(
     for i in 0..nb * din {
         dsrc[i] += (1.0 + eps) * dpre[i];
     }
-    cx.edges.scatter_t_acc(&dpre, din, dsrc);
+    spmm::scatter_t_acc(cx.edges, &dpre, din, dsrc);
     Ok(())
 }

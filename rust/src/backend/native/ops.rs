@@ -1,14 +1,15 @@
-//! Scatter primitives + scalar GEMM oracles for the native interpreter,
-//! all rayon-parallel over output rows. Every op accumulates each output
+//! Scatter primitives + scalar oracles for the native interpreter, all
+//! rayon-parallel over output rows. Every op accumulates each output
 //! row on a single thread (sequential inner loops), so results are
 //! deterministic for a given input regardless of thread count — the
 //! property the seed-pinned experiment harnesses rely on.
 //!
-//! The three `*_scalar` GEMMs are no longer on the hot path — the model
-//! interpreter runs the blocked kernels in [`super::gemm`] — but stay
-//! here as the reference oracles for the kernel property tests
-//! (`rust/tests/gemm_prop.rs`) and the scalar baseline rows of the
-//! `benches/micro.rs` GEMM section.
+//! None of the `*_scalar` ops are on the hot path anymore — the model
+//! interpreter runs the blocked GEMM kernels in [`super::gemm`] and the
+//! blocked SpMM kernels in [`super::spmm`] — but they stay here as the
+//! reference oracles for the kernel property tests
+//! (`rust/tests/gemm_prop.rs`, `rust/tests/spmm_prop.rs`) and the scalar
+//! baseline rows of the `benches/micro.rs` GEMM/SpMM sections.
 
 use anyhow::{ensure, Result};
 use rayon::prelude::*;
@@ -89,9 +90,26 @@ impl EdgeIndex {
         self.dst_src.len()
     }
 
+    /// Destination-major CSR view `(offsets, sources, weights)` — row `v`
+    /// of the forward scatter reads edges `offsets[v]..offsets[v+1]`.
+    /// Consumed by the blocked kernels in [`super::spmm`].
+    pub(crate) fn dst_csr(&self) -> (&[u32], &[u32], &[f32]) {
+        (&self.dst_off, &self.dst_src, &self.dst_w)
+    }
+
+    /// Source-major CSR view `(offsets, destinations, weights)` — row `s`
+    /// of the backward scatter-transpose reads edges
+    /// `offsets[s]..offsets[s+1]`. Consumed by [`super::spmm`].
+    pub(crate) fn src_csr(&self) -> (&[u32], &[u32], &[f32]) {
+        (&self.src_off, &self.src_dst, &self.src_w)
+    }
+
     /// Forward scatter-sum: `out[v] = Σ_{(s,w) -> v} w * z[s]`, `z` is
-    /// `[n_src, d]`, result `[n_out, d]`.
-    pub fn scatter(&self, z: &[f32], d: usize) -> Vec<f32> {
+    /// `[n_src, d]`, result `[n_out, d]`. Scalar oracle for
+    /// [`super::spmm::scatter`] — no longer on the hot path, kept for the
+    /// property tests (`rust/tests/spmm_prop.rs`) and the scalar baseline
+    /// rows of the `benches/micro.rs` SpMM section.
+    pub fn scatter_scalar(&self, z: &[f32], d: usize) -> Vec<f32> {
         debug_assert!(z.len() >= self.n_src * d);
         let mut out = vec![0f32; self.n_out * d];
         out.par_chunks_mut(d).enumerate().for_each(|(v, row)| {
@@ -107,8 +125,9 @@ impl EdgeIndex {
     }
 
     /// Backward scatter-transpose, accumulating: `out[s] += Σ_{s -> (d,w)}
-    /// w * dh[d]`, `dh` is `[n_out, d]`, `out` is `[n_src, d]`.
-    pub fn scatter_t_acc(&self, dh: &[f32], d: usize, out: &mut [f32]) {
+    /// w * dh[d]`, `dh` is `[n_out, d]`, `out` is `[n_src, d]`. Scalar
+    /// oracle for [`super::spmm::scatter_t_acc`].
+    pub fn scatter_t_acc_scalar(&self, dh: &[f32], d: usize, out: &mut [f32]) {
         debug_assert!(dh.len() >= self.n_out * d);
         debug_assert!(out.len() >= self.n_src * d);
         out.par_chunks_mut(d).enumerate().for_each(|(s, row)| {
@@ -250,12 +269,12 @@ mod tests {
         let ei = EdgeIndex::build(&src, &dst, &w, 3, 2).unwrap();
         assert_eq!(ei.num_edges(), 2);
         let z = [10.0, 20.0, 1.0, 2.0, 100.0, 200.0]; // [3,2]
-        let out = ei.scatter(&z, 2);
+        let out = ei.scatter_scalar(&z, 2);
         assert_eq!(out, vec![2.0 * 1.0 + 100.0, 2.0 * 2.0 + 200.0, 0.0, 0.0]);
         // transpose: dh over 2 dst rows back onto 3 src rows
         let dh = [1.0, 1.0, 5.0, 5.0];
         let mut back = vec![0f32; 6];
-        ei.scatter_t_acc(&dh, 2, &mut back);
+        ei.scatter_t_acc_scalar(&dh, 2, &mut back);
         assert_eq!(back, vec![0.0, 0.0, 2.0, 2.0, 1.0, 1.0]);
     }
 

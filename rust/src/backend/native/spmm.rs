@@ -1,0 +1,289 @@
+//! Blocked, register-accumulated SpMM kernels — the sparse hot path of
+//! the native backend, the CSR sibling of [`super::gemm`]. Per the
+//! large-scale GNN-training literature (and this repo's own step-time
+//! buckets once the dense transforms went blocked), neighbor aggregation
+//! — not the GEMM — dominates step time at scale, so the two scatters the
+//! interpreter runs per layer get the same treatment the dense kernels
+//! got:
+//!
+//! * **forward scatter-sum** (`out[v] = Σ_{(s,w)→v} w·z[s]`) walks the
+//!   destination-major CSR; **backward scatter-transpose accumulate**
+//!   (`out[s] += Σ_{s→(d,w)} w·dh[d]`) walks the source-major CSR. Both
+//!   views are built once per batch plan by [`EdgeIndex`];
+//! * the output is blocked in [`RB`]-row chunks that fan out over rayon
+//!   (row-block tasks instead of per-row tasks: one fork per 64 rows, and
+//!   each task walks its rows' edge slices sequentially);
+//! * the feature dimension is walked in aligned 8-lane panels ([`V8`], a
+//!   `#[repr(align(32))]` fixed-width array whose loops autovectorize on
+//!   stable Rust — no `std::simd`, no intrinsics, no `unsafe`), up to
+//!   [`NP`] panels held in register accumulators across the row's whole
+//!   edge sweep — so each edge costs panel *loads* of the message row
+//!   only, instead of the scalar loop's load+store of the output row per
+//!   edge. Ragged feature tails (d % 8) dispatch to a partial-lane
+//!   instantiation of the same const-generic kernel;
+//! * rows with no edges are skipped wholesale (forward output rows are
+//!   pre-zeroed; backward rows are left untouched, like the oracles).
+//!
+//! Determinism and bit-compatibility (property-tested in
+//! `rust/tests/spmm_prop.rs`): each output row is owned by exactly one
+//! thread, and each output element is accumulated as a chain of
+//! `acc + w*z` additions over the row's edges in CSR order — the *same*
+//! per-element chain, in the same order, as the scalar loops kept in
+//! [`super::ops`] (`scatter_scalar` / `scatter_t_acc_scalar`). Per-row
+//! edge order is preserved by construction, so results are bitwise
+//! identical to the oracles at any thread count. The backward kernel
+//! seeds its accumulators from the incoming `out` values, so accumulation
+//! chains onto prior contents exactly as the oracle's `+=` does.
+//!
+//! Shape checks are *real* asserts, release builds included: these entry
+//! points are fed by manifest-derived shapes, and a bad manifest must
+//! fail loudly rather than read OOB-adjacent garbage.
+
+use super::ops::EdgeIndex;
+use rayon::prelude::*;
+
+/// Lanes per feature panel (one vector group).
+const NR: usize = 8;
+/// Max panels held in register accumulators per edge sweep (32 lanes —
+/// d = 64 takes two sweeps over a row's edge slice).
+const NP: usize = 4;
+/// Output rows per rayon task: amortizes the fork while keeping each
+/// task's edge slices contiguous in the CSR arrays.
+const RB: usize = 64;
+/// Below this many f32 lanes of total work the fork overhead dominates;
+/// run the blocked kernel on the caller's thread instead.
+const PAR_MIN_LANES: usize = 1 << 15;
+
+/// 8 f32 lanes, 32-byte aligned. Fixed-width loops over the array compile
+/// to vector code on stable Rust without any unsafe or nightly features.
+///
+/// Deliberately a private copy of the `V8` in [`super::gemm`] (each
+/// kernel family keeps its micro-kernel primitives self-contained), but
+/// the two `fma` bodies implement the SAME bit-compatibility contract —
+/// mul then add, never `mul_add` — and must stay in sync: fusing either
+/// one would silently break that family's bitwise-oracle property tests.
+#[derive(Clone, Copy)]
+#[repr(align(32))]
+struct V8([f32; 8]);
+
+impl V8 {
+    const ZERO: V8 = V8([0.0; 8]);
+
+    /// `self += a * b` lane-wise — mul then add, never `mul_add`, so the
+    /// per-element rounding matches the scalar oracles exactly.
+    #[inline(always)]
+    fn fma(&mut self, a: f32, b: &V8) {
+        for (acc, &bv) in self.0.iter_mut().zip(b.0.iter()) {
+            *acc += a * bv;
+        }
+    }
+
+    /// Load a full 8-lane group (`src.len() >= 8`); the constant-width
+    /// copy compiles to one unmasked vector load.
+    #[inline(always)]
+    fn load8(src: &[f32]) -> V8 {
+        let mut v = V8::ZERO;
+        v.0.copy_from_slice(&src[..8]);
+        v
+    }
+
+    /// Load up to 8 lanes, zero-padding the rest (ragged feature tail).
+    #[inline(always)]
+    fn loadp(src: &[f32]) -> V8 {
+        let mut v = V8::ZERO;
+        let n = src.len().min(NR);
+        v.0[..n].copy_from_slice(&src[..n]);
+        v
+    }
+
+    /// Store the first `dst.len().min(8)` lanes.
+    #[inline(always)]
+    fn storep(&self, dst: &mut [f32]) {
+        let n = dst.len().min(NR);
+        dst[..n].copy_from_slice(&self.0[..n]);
+    }
+}
+
+/// One row × `P` panels of the output: seed the accumulators from the
+/// current `out_row` values (zeros for the forward path, prior partials
+/// for the accumulating backward path), sweep the row's edges once in CSR
+/// order, store back. `span` is the number of valid lanes starting at
+/// column `j0` (`P*NR` for all-full groups); `TAIL_FULL` selects the
+/// unmasked load for the last panel when the group has no ragged tail.
+#[inline(always)]
+fn row_group<const P: usize, const TAIL_FULL: bool>(
+    idx: &[u32],
+    wts: &[f32],
+    src: &[f32],
+    d: usize,
+    j0: usize,
+    span: usize,
+    out_row: &mut [f32],
+) {
+    let tail0 = (P - 1) * NR;
+    let mut acc = [V8::ZERO; P];
+    for (q, a) in acc.iter_mut().enumerate() {
+        let c0 = j0 + q * NR;
+        *a = V8::loadp(&out_row[c0..(c0 + NR).min(j0 + span)]);
+    }
+    for (&s, &we) in idx.iter().zip(wts.iter()) {
+        let base = s as usize * d + j0;
+        let zrow = &src[base..base + span];
+        for (q, a) in acc.iter_mut().enumerate().take(P - 1) {
+            a.fma(we, &V8::load8(&zrow[q * NR..q * NR + NR]));
+        }
+        if TAIL_FULL {
+            acc[P - 1].fma(we, &V8::load8(&zrow[tail0..tail0 + NR]));
+        } else {
+            acc[P - 1].fma(we, &V8::loadp(&zrow[tail0..span]));
+        }
+    }
+    for (q, a) in acc.iter().enumerate() {
+        let c0 = j0 + q * NR;
+        a.storep(&mut out_row[c0..(c0 + NR).min(j0 + span)]);
+    }
+}
+
+/// One output row: walk the feature dim in groups of up to [`NP`] panels,
+/// re-sweeping the row's (cache-resident) edge slice once per group. The
+/// per-element accumulation chain stays in ascending edge order.
+#[inline(always)]
+fn scatter_row(idx: &[u32], wts: &[f32], src: &[f32], d: usize, out_row: &mut [f32]) {
+    let panels = d.div_ceil(NR);
+    let mut p = 0;
+    while p < panels {
+        let pg = (panels - p).min(NP);
+        let j0 = p * NR;
+        let span = (d - j0).min(pg * NR);
+        match (pg, span == pg * NR) {
+            (4, true) => row_group::<4, true>(idx, wts, src, d, j0, span, out_row),
+            (4, false) => row_group::<4, false>(idx, wts, src, d, j0, span, out_row),
+            (3, true) => row_group::<3, true>(idx, wts, src, d, j0, span, out_row),
+            (3, false) => row_group::<3, false>(idx, wts, src, d, j0, span, out_row),
+            (2, true) => row_group::<2, true>(idx, wts, src, d, j0, span, out_row),
+            (2, false) => row_group::<2, false>(idx, wts, src, d, j0, span, out_row),
+            (_, true) => row_group::<1, true>(idx, wts, src, d, j0, span, out_row),
+            (_, false) => row_group::<1, false>(idx, wts, src, d, j0, span, out_row),
+        }
+        p += pg;
+    }
+}
+
+/// Shared macro-kernel: `out` is `[rows, d]` in the CSR's row numbering,
+/// rayon-parallel over [`RB`]-row blocks. Rows with an empty edge slice
+/// are skipped (their `out` values are left untouched).
+fn run_csr(off: &[u32], idx: &[u32], wts: &[f32], src: &[f32], d: usize, out: &mut [f32]) {
+    if d == 0 || out.is_empty() {
+        return;
+    }
+    let block = |(blk, out_blk): (usize, &mut [f32])| {
+        let r0 = blk * RB;
+        for (i, out_row) in out_blk.chunks_mut(d).enumerate() {
+            let r = r0 + i;
+            let (e0, e1) = (off[r] as usize, off[r + 1] as usize);
+            if e0 < e1 {
+                scatter_row(&idx[e0..e1], &wts[e0..e1], src, d, out_row);
+            }
+        }
+    };
+    let rows = out.len() / d;
+    if (idx.len() + rows) * d >= PAR_MIN_LANES {
+        out.par_chunks_mut(RB * d).enumerate().for_each(block);
+    } else {
+        out.chunks_mut(RB * d).enumerate().for_each(block);
+    }
+}
+
+/// Forward scatter-sum `out[v] = Σ_{(s,w) -> v} w * z[s]`; `z` is
+/// `[n_src, d]`, result `[n_out, d]` — the blocked drop-in for
+/// [`EdgeIndex::scatter_scalar`].
+pub fn scatter(ei: &EdgeIndex, z: &[f32], d: usize) -> Vec<f32> {
+    assert!(
+        z.len() >= ei.n_src * d,
+        "spmm::scatter: z has {} values, n_src*d = {}",
+        z.len(),
+        ei.n_src * d
+    );
+    let mut out = vec![0f32; ei.n_out * d];
+    let (off, idx, wts) = ei.dst_csr();
+    run_csr(off, idx, wts, z, d, &mut out);
+    out
+}
+
+/// Backward scatter-transpose, accumulating: `out[s] += Σ_{s -> (d,w)}
+/// w * dh[d]`; `dh` is `[n_out, d]`, `out` is `[n_src, d]` — the blocked
+/// drop-in for [`EdgeIndex::scatter_t_acc_scalar`]. Accumulator chains
+/// seed from the incoming `out` values, in source-row CSR edge order.
+pub fn scatter_t_acc(ei: &EdgeIndex, dh: &[f32], d: usize, out: &mut [f32]) {
+    assert!(
+        dh.len() >= ei.n_out * d,
+        "spmm::scatter_t_acc: dh has {} values, n_out*d = {}",
+        dh.len(),
+        ei.n_out * d
+    );
+    assert!(
+        out.len() >= ei.n_src * d,
+        "spmm::scatter_t_acc: out has {} values, n_src*d = {}",
+        out.len(),
+        ei.n_src * d
+    );
+    let (off, idx, wts) = ei.src_csr();
+    run_csr(off, idx, wts, dh, d, &mut out[..ei.n_src * d]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n_src: usize, n_out: usize, edges: usize) -> EdgeIndex {
+        let src: Vec<i32> = (0..edges).map(|_| rng.below(n_src) as i32).collect();
+        let dst: Vec<i32> = (0..edges).map(|_| rng.below(n_out) as i32).collect();
+        // ~15% padding edges (w = 0), dropped at build time like the
+        // padded artifacts'
+        let w: Vec<f32> = (0..edges)
+            .map(|_| if rng.chance(0.15) { 0.0 } else { rng.normal_f32() })
+            .collect();
+        EdgeIndex::build(&src, &dst, &w, n_src, n_out).unwrap()
+    }
+
+    #[test]
+    fn blocked_scatter_matches_hand_result() {
+        // 2 real edges into dst 0 (src 1 w=2, src 2 w=1), padding after
+        let ei =
+            EdgeIndex::build(&[1, 2, 0, 0], &[0, 0, 0, 0], &[2.0, 1.0, 0.0, 0.0], 3, 2).unwrap();
+        let z = [10.0, 20.0, 1.0, 2.0, 100.0, 200.0]; // [3,2]
+        assert_eq!(scatter(&ei, &z, 2), vec![102.0, 204.0, 0.0, 0.0]);
+        let dh = [1.0, 1.0, 5.0, 5.0];
+        let mut back = vec![1f32; 6]; // accumulates on top
+        scatter_t_acc(&ei, &dh, 2, &mut back);
+        assert_eq!(back, vec![1.0, 1.0, 3.0, 3.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn blocked_matches_scalar_on_ragged_dims() {
+        // crosses the panel-group boundaries: tails in d (vs NR and
+        // NP*NR), empty rows, duplicate edges
+        let mut rng = Rng::new(7);
+        for &d in &[1usize, 5, 8, 9, 16, 31, 32, 33, 64] {
+            let ei = random_graph(&mut rng, 97, 61, 700);
+            let z: Vec<f32> = (0..97 * d).map(|_| rng.normal_f32()).collect();
+            assert_eq!(scatter(&ei, &z, d), ei.scatter_scalar(&z, d), "fwd d={d}");
+            let dh: Vec<f32> = (0..61 * d).map(|_| rng.normal_f32()).collect();
+            let init: Vec<f32> = (0..97 * d).map(|_| rng.normal_f32() * 0.5).collect();
+            let mut blocked = init.clone();
+            let mut scalar = init;
+            scatter_t_acc(&ei, &dh, d, &mut blocked);
+            ei.scatter_t_acc_scalar(&dh, d, &mut scalar);
+            assert_eq!(blocked, scalar, "bwd d={d}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "spmm::scatter: z has")]
+    fn short_z_fails_loudly_in_release_too() {
+        let ei = EdgeIndex::build(&[0], &[0], &[1.0], 3, 2).unwrap();
+        let z = [1.0; 5]; // wants 3*2 = 6
+        let _ = scatter(&ei, &z, 2);
+    }
+}

@@ -24,6 +24,9 @@ pub fn naive_config(epochs: usize, lr: f32, seed: u64) -> TrainConfig {
         label_sel: LabelSel::Train,
         parts: None,
         history_shards: None,
+        // serial I/O and no prefetch overlap: the ablated baseline keeps
+        // the classic one-pull-at-a-time schedule
+        pull_depth: 1,
     }
 }
 
@@ -44,6 +47,7 @@ pub fn gas_config(epochs: usize, lr: f32, reg_lambda: f32, seed: u64) -> TrainCo
         label_sel: LabelSel::Train,
         parts: None,
         history_shards: None,
+        pull_depth: crate::config::default_pull_depth(),
     }
 }
 
@@ -62,5 +66,7 @@ mod tests {
         assert!(n.clip.is_none() && g.clip.is_some());
         assert_eq!(n.reg_lambda, 0.0);
         assert!(g.reg_lambda > 0.0);
+        assert_eq!(n.pull_depth, 1, "naive baseline keeps the serial pull schedule");
+        assert!(g.pull_depth >= 1);
     }
 }

@@ -53,6 +53,22 @@ impl Backend {
     }
 }
 
+/// Default history-pipeline pull depth (max halo gathers in flight /
+/// trainer prefetch distance): `GAS_PULL_DEPTH` env when set, else
+/// [`crate::history::DEFAULT_PULL_DEPTH`] (2). Matches the CLI's
+/// `--pull-depth` on every input: 0 clamps to 1, and an unparseable
+/// value fails loudly instead of silently training at the default depth.
+/// The CLI's `--pull-depth` overrides both per run.
+pub fn default_pull_depth() -> usize {
+    match std::env::var("GAS_PULL_DEPTH") {
+        Err(_) => crate::history::DEFAULT_PULL_DEPTH,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(d) => d.max(1),
+            Err(_) => panic!("GAS_PULL_DEPTH must be a non-negative integer, got {v:?}"),
+        },
+    }
+}
+
 /// Shared run context. Executors and datasets are cached on first use
 /// (XLA compilation and graph generation are the expensive parts).
 pub struct Ctx {
@@ -160,6 +176,13 @@ impl Ctx {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pull_depth_default_is_sane() {
+        // no env manipulation here (tests run in parallel): unset, this is
+        // the library default; set, it is whatever the operator chose ≥ 1
+        assert!(default_pull_depth() >= 1);
+    }
 
     #[test]
     fn backend_parse_and_names() {

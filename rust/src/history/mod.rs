@@ -12,13 +12,14 @@
 //! serializing on one lock.
 //!
 //! [`pipeline::HistoryPipeline`] is the concurrent push/pull engine of
-//! §5 "Fast Historical Embeddings": a FIFO push applier plus a pool of
-//! pull workers with reusable staging buffers (the pinned-memory analog)
-//! overlap history I/O with executable compute; `Serial` mode reproduces
-//! the naive blocking pattern for the Fig. 4 comparison.
+//! §5 "Fast Historical Embeddings": a FIFO push applier plus a depth-K
+//! pool of pull stagers with reusable staging buffers (the pinned-memory
+//! analog) keep up to `pull_depth` gathers in flight while executable
+//! compute runs; `Serial` mode reproduces the naive blocking pattern for
+//! the Fig. 4 comparison.
 
 pub mod pipeline;
 pub mod store;
 
-pub use pipeline::{HistoryPipeline, PipelineMode, PullBuffer};
+pub use pipeline::{HistoryPipeline, PipelineError, PipelineMode, PullBuffer, DEFAULT_PULL_DEPTH};
 pub use store::{HistoryStore, ShardedHistoryStore};

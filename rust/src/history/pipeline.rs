@@ -1,35 +1,44 @@
 //! Concurrent history access engine (paper §5 "Fast Historical Embeddings").
 //!
 //! GPU original: a worker thread gathers history rows into *pinned* CPU
-//! buffers, CUDA streams overlap H2D copies with kernel execution. CPU-PJRT
+//! buffers, CUDA streams overlap H2D copies with kernel execution. CPU
 //! adaptation (DESIGN.md §Hardware-Adaptation): a worker *pool* gathers
 //! rows from the [`ShardedHistoryStore`] into reusable staging buffers
-//! (the pinned-pool analog) while the PJRT executable runs the previous
-//! batch; write-backs drain in the background.
+//! (the pinned-pool analog) while the executor runs the previous batch;
+//! write-backs drain in the background.
 //!
-//! Pool layout (two dedicated workers, each fanning out over rayon):
+//! Pool layout (one push applier + `pull_depth` pull stagers, each
+//! fanning out over rayon inside the store):
 //!
 //! * a **push applier** consumes write-backs (and clock ticks) in FIFO
 //!   order, so repeated pushes to the same rows land last-write-wins
 //!   exactly as the single-worker engine did, and the staleness clock
 //!   never advances in the middle of a scatter — rayon-parallel scatter
 //!   inside each push supplies the multi-core scaling;
-//! * a **pull stager** services gathers — the pull for batch *t+1*
-//!   proceeds while the pushes of batch *t* drain. (One stager suffices:
-//!   the pipeline allows a single pull in flight; widen this to a pool if
-//!   a WaveGAS-style multi-pull schedule ever lifts that invariant.)
+//! * a pool of **pull stagers** services up to `pull_depth` outstanding
+//!   gathers at once (requests are dealt round-robin; results are
+//!   consumed strictly in request order via [`HistoryPipeline::wait_pull`]).
+//!   Depth 1 reproduces the single-stager engine exactly; depth K > 1 is
+//!   what a software-pipelined train loop (prefetch distance K) and
+//!   WaveGAS-style multi-pull schedules need. Exceeding the depth is a
+//!   typed error ([`PipelineError::PullQueueFull`]), not a panic.
 //!
 //! `Serial` mode performs both operations inline — the baseline whose I/O
 //! overhead Fig. 4 quantifies.
 //!
 //! Ordering semantics match the paper: pulls see the most recent *applied*
-//! push. A prefetched pull for batch t+1 may race ahead of the push of
-//! batch t by design — that is exactly the one-step staleness historical
-//! embeddings already tolerate (Theorem 2). `sync()` drains every queued
-//! job across all shards; the trainer calls it at epoch boundaries so
+//! push, and never a partially-applied one (the store's all-shard lock
+//! discipline makes every push atomic with respect to every gather —
+//! regression-tested below across pull depths). A prefetched pull for
+//! batch t+k (k ≤ `pull_depth`) may race ahead of the pushes of batches
+//! t..t+k-1 by design — bounded staleness is exactly what historical
+//! embeddings tolerate (Theorem 2), and the trainer's epoch-boundary
+//! `sync()` still re-bounds it every epoch. `sync()` drains every queued
+//! job across all workers; the trainer calls it at epoch boundaries so
 //! evaluation reads fully-applied histories.
 
 use crate::history::store::ShardedHistoryStore;
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -40,14 +49,55 @@ pub enum PipelineMode {
     Concurrent,
 }
 
+/// Default number of pulls the engine keeps in flight (matches
+/// `TrainConfig::pull_depth`'s default: prefetch distance 2).
+pub const DEFAULT_PULL_DEPTH: usize = 2;
+
+/// Typed pipeline misuse/failure conditions — callers schedule pulls, so
+/// queue pressure is theirs to handle (it is not a crash).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineError {
+    /// `request_pull` would exceed the configured pull depth.
+    PullQueueFull { depth: usize },
+    /// `wait_pull` was called with no pull in flight.
+    NoPullInFlight,
+    /// A background worker died (its channel closed underneath us).
+    WorkerGone,
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::PullQueueFull { depth } => {
+                write!(f, "pull queue full: {depth} pulls already in flight (pull_depth)")
+            }
+            PipelineError::NoPullInFlight => write!(f, "no pull in flight"),
+            PipelineError::WorkerGone => write!(f, "history worker thread is gone"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
 /// A staged pull result: the gathered halo rows for every history layer in
 /// one flat buffer, laid out `[num_layers][num_rows * h]` (one allocation,
 /// recycled through the staging pool).
+#[derive(Debug)]
 pub struct PullBuffer {
     pub data: Vec<f32>,
     pub num_rows: usize,
     pub num_layers: usize,
     pub h: usize,
+    /// mean staleness (steps since last push) of the gathered rows, per
+    /// layer, measured under the gather's own shard read guards — with K
+    /// pulls in flight the store's clocks advance under later pushes
+    /// before the pull is consumed, so probing the store at consume time
+    /// (or even right after the gather's guards drop) would understate
+    /// the staleness the model actually trains on. Filled only when the
+    /// engine's staleness probe is enabled
+    /// ([`HistoryPipeline::set_staleness_probe`], on for the trainer's
+    /// pipeline); empty otherwise (benches, eval, ad-hoc buffers).
+    pub staleness: Vec<f64>,
 }
 
 impl PullBuffer {
@@ -59,7 +109,7 @@ impl PullBuffer {
 }
 
 enum Job {
-    Pull { ids: Arc<[u32]>, reply: Sender<PullBuffer> },
+    Pull { ids: Arc<[u32]>, reply: Sender<PullBuffer>, probe: bool },
     Push { layer: usize, ids: Arc<[u32]>, data: Vec<f32> },
     /// advance the staleness clock, ordered FIFO with the pushes around it
     Tick,
@@ -97,23 +147,46 @@ impl Inflight {
 pub struct HistoryPipeline {
     store: Arc<ShardedHistoryStore>,
     mode: PipelineMode,
+    depth: usize,
     push_tx: Option<Sender<Job>>,
-    pull_tx: Option<Sender<Job>>,
+    /// one channel per pull stager; requests are dealt round-robin
+    pull_txs: Vec<Sender<Job>>,
+    next_stager: usize,
     workers: Vec<JoinHandle<()>>,
-    pending_pull: Option<Receiver<PullBuffer>>,
+    /// receivers of in-flight pulls, in request order (FIFO consumption)
+    pending_pulls: VecDeque<Receiver<PullBuffer>>,
+    /// when true, every pull also records gather-time staleness in the
+    /// buffer (the trainer's probe); off by default so bench/eval pulls
+    /// skip the extra clock scan inside the gather's read guards
+    probe_staleness: bool,
     /// staging-buffer pool (pinned-memory analog): recycled Vec<f32>
     pool: Arc<Mutex<Vec<Vec<f32>>>>,
     inflight: Arc<Inflight>,
 }
 
 impl HistoryPipeline {
+    /// Engine with the default pull depth ([`DEFAULT_PULL_DEPTH`]).
     pub fn new(store: ShardedHistoryStore, mode: PipelineMode) -> HistoryPipeline {
+        Self::with_depth(store, mode, DEFAULT_PULL_DEPTH)
+    }
+
+    /// Engine with an explicit pull depth: up to `pull_depth` pulls may be
+    /// in flight at once (clamped to ≥ 1). In `Concurrent` mode one stager
+    /// thread is spawned per slot so outstanding gathers genuinely
+    /// overlap; in `Serial` mode the depth only caps the request queue.
+    pub fn with_depth(
+        store: ShardedHistoryStore,
+        mode: PipelineMode,
+        pull_depth: usize,
+    ) -> HistoryPipeline {
+        let depth = pull_depth.max(1);
         let store = Arc::new(store);
         let pool = Arc::new(Mutex::new(Vec::new()));
         let inflight = Arc::new(Inflight::default());
         let mut workers = Vec::new();
-        let (push_tx, pull_tx) = match mode {
-            PipelineMode::Serial => (None, None),
+        let mut pull_txs = Vec::new();
+        let push_tx = match mode {
+            PipelineMode::Serial => None,
             PipelineMode::Concurrent => {
                 // dedicated FIFO push applier
                 let (ptx, prx) = channel::<Job>();
@@ -124,62 +197,90 @@ impl HistoryPipeline {
                         .spawn(move || push_worker(prx, st, pl, inf))
                         .expect("spawn history push worker"),
                 );
-                // dedicated pull stager
-                let (gtx, grx) = channel::<Job>();
-                let (st, pl, inf) = (Arc::clone(&store), Arc::clone(&pool), Arc::clone(&inflight));
-                workers.push(
-                    std::thread::Builder::new()
-                        .name("gas-history-pull".into())
-                        .spawn(move || pull_worker(grx, st, pl, inf))
-                        .expect("spawn history pull worker"),
-                );
-                (Some(ptx), Some(gtx))
+                // pull stager pool: one thread per in-flight slot
+                for slot in 0..depth {
+                    let (gtx, grx) = channel::<Job>();
+                    let (st, pl, inf) =
+                        (Arc::clone(&store), Arc::clone(&pool), Arc::clone(&inflight));
+                    workers.push(
+                        std::thread::Builder::new()
+                            .name(format!("gas-history-pull-{slot}"))
+                            .spawn(move || pull_worker(grx, st, pl, inf))
+                            .expect("spawn history pull worker"),
+                    );
+                    pull_txs.push(gtx);
+                }
+                Some(ptx)
             }
         };
         HistoryPipeline {
             store,
             mode,
+            depth,
             push_tx,
-            pull_tx,
+            pull_txs,
+            next_stager: 0,
             workers,
-            pending_pull: None,
+            pending_pulls: VecDeque::with_capacity(depth),
+            probe_staleness: false,
             pool,
             inflight,
         }
+    }
+
+    /// Enable/disable the gather-time staleness probe on future pulls.
+    pub fn set_staleness_probe(&mut self, on: bool) {
+        self.probe_staleness = on;
     }
 
     pub fn mode(&self) -> PipelineMode {
         self.mode
     }
 
+    /// The configured pull depth (max pulls in flight).
+    pub fn pull_depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of pulls currently in flight (requested, not yet waited).
+    pub fn pulls_in_flight(&self) -> usize {
+        self.pending_pulls.len()
+    }
+
     /// Begin gathering halo rows for all layers. In `Concurrent` mode this
-    /// returns immediately; `wait_pull` blocks until staged. Ids are
-    /// shared (`Arc`) so steady-state steps hand the plan's node list to
-    /// the worker without a per-step `Vec` clone.
-    pub fn request_pull(&mut self, ids: Arc<[u32]>) {
-        assert!(self.pending_pull.is_none(), "overlapping pulls");
+    /// returns immediately; `wait_pull` blocks until staged. Up to
+    /// `pull_depth` pulls may be outstanding; results are consumed in
+    /// request order. Ids are shared (`Arc`) so steady-state steps hand
+    /// the plan's node list to the worker without a per-step `Vec` clone.
+    pub fn request_pull(&mut self, ids: Arc<[u32]>) -> Result<(), PipelineError> {
+        if self.pending_pulls.len() >= self.depth {
+            return Err(PipelineError::PullQueueFull { depth: self.depth });
+        }
         let (tx, rx) = channel();
+        let probe = self.probe_staleness;
         match self.mode {
             PipelineMode::Serial => {
-                let buf = gather(&self.store, &ids, &self.pool);
+                let buf = gather(&self.store, &ids, &self.pool, probe);
                 tx.send(buf).unwrap();
             }
             PipelineMode::Concurrent => {
                 self.inflight.begin();
-                self.pull_tx
-                    .as_ref()
-                    .unwrap()
-                    .send(Job::Pull { ids, reply: tx })
-                    .expect("history pull worker alive");
+                let stager = &self.pull_txs[self.next_stager];
+                self.next_stager = (self.next_stager + 1) % self.pull_txs.len();
+                if stager.send(Job::Pull { ids, reply: tx, probe }).is_err() {
+                    self.inflight.end();
+                    return Err(PipelineError::WorkerGone);
+                }
             }
         }
-        self.pending_pull = Some(rx);
+        self.pending_pulls.push_back(rx);
+        Ok(())
     }
 
-    /// Block until the staged pull is ready.
-    pub fn wait_pull(&mut self) -> PullBuffer {
-        let rx = self.pending_pull.take().expect("no pull in flight");
-        rx.recv().expect("history pull worker alive")
+    /// Block until the oldest in-flight pull is staged (FIFO).
+    pub fn wait_pull(&mut self) -> Result<PullBuffer, PipelineError> {
+        let rx = self.pending_pulls.pop_front().ok_or(PipelineError::NoPullInFlight)?;
+        rx.recv().map_err(|_| PipelineError::WorkerGone)
     }
 
     /// Return a staging buffer to the pool (models pinned-buffer reuse).
@@ -253,7 +354,7 @@ impl Drop for HistoryPipeline {
     fn drop(&mut self) {
         // closing the channels ends the worker loops
         self.push_tx.take();
-        self.pull_tx.take();
+        self.pull_txs.clear();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -264,6 +365,7 @@ fn gather(
     store: &ShardedHistoryStore,
     ids: &[u32],
     pool: &Arc<Mutex<Vec<Vec<f32>>>>,
+    probe: bool,
 ) -> PullBuffer {
     let h = store.h();
     let num_layers = store.num_layers();
@@ -273,8 +375,13 @@ fn gather(
     };
     buf.clear();
     buf.resize(num_layers * ids.len() * h, 0.0);
-    store.pull_all(ids, &mut buf);
-    PullBuffer { data: buf, num_rows: ids.len(), num_layers, h }
+    let staleness = if probe {
+        store.pull_all_with_staleness(ids, &mut buf)
+    } else {
+        store.pull_all(ids, &mut buf);
+        Vec::new()
+    };
+    PullBuffer { data: buf, num_rows: ids.len(), num_layers, h, staleness }
 }
 
 /// Applies write-backs and clock ticks strictly in arrival order.
@@ -291,16 +398,16 @@ fn push_worker(
                 pool.lock().unwrap().push(data);
             }
             Job::Tick => store.tick(),
-            Job::Pull { ids, reply } => {
+            Job::Pull { ids, reply, probe } => {
                 // not routed here in practice, but harmless to serve
-                let _ = reply.send(gather(&store, &ids, &pool));
+                let _ = reply.send(gather(&store, &ids, &pool, probe));
             }
         }
         inflight.end();
     }
 }
 
-/// Stages halo gathers for the (single) in-flight pull request.
+/// Stages halo gathers for one in-flight pull slot of the stager pool.
 fn pull_worker(
     rx: Receiver<Job>,
     store: Arc<ShardedHistoryStore>,
@@ -309,8 +416,8 @@ fn pull_worker(
 ) {
     while let Ok(job) = rx.recv() {
         match job {
-            Job::Pull { ids, reply } => {
-                let _ = reply.send(gather(&store, &ids, &pool));
+            Job::Pull { ids, reply, probe } => {
+                let _ = reply.send(gather(&store, &ids, &pool, probe));
             }
             Job::Push { layer, ids, data } => {
                 store.push(layer, &ids, &data);
@@ -334,8 +441,8 @@ mod tests {
         p.push(0, ids.clone(), data.clone());
         p.push(1, ids.clone(), data.iter().map(|v| v * 10.0).collect());
         p.sync();
-        p.request_pull(ids);
-        let buf = p.wait_pull();
+        p.request_pull(ids).unwrap();
+        let buf = p.wait_pull().unwrap();
         assert_eq!(buf.num_rows, 3);
         assert_eq!(buf.num_layers, 2);
         assert_eq!(buf.layer(0), &data[..]);
@@ -376,29 +483,81 @@ mod tests {
         });
     }
 
+    /// K concurrent pulls racing a push burst must (a) never deadlock,
+    /// (b) never observe a *partially-applied* push — every push writes a
+    /// layer-wide constant, so any gathered layer must be uniform — and
+    /// (c) leave the store fully applied after `sync()`. Swept over the
+    /// pull depths the trainer can configure.
     #[test]
-    fn pulls_are_serviced_while_pushes_drain() {
-        // queue a burst of pushes, then interleave pulls — the pull worker
-        // pool must answer without waiting for the push queue to empty,
-        // and sync() must still leave the final state fully applied.
-        let store = ShardedHistoryStore::with_shards(5000, 16, 2, 4);
-        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
-        let ids: Arc<[u32]> = (0..2048u32).collect();
-        for step in 0..8 {
-            for l in 0..2 {
-                let data = vec![(step * 2 + l) as f32; ids.len() * 16];
-                p.push(l, ids.clone(), data);
+    fn depth_k_pulls_never_observe_partial_pushes() {
+        for depth in [1usize, 2, 4] {
+            // watchdog: a pool regression here hangs rather than fails —
+            // abort with an attributed message instead of eating the CI
+            // job timeout
+            let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+            let watchdog = std::thread::spawn(move || {
+                use std::sync::mpsc::RecvTimeoutError;
+                let wait = done_rx.recv_timeout(std::time::Duration::from_secs(120));
+                if let Err(RecvTimeoutError::Timeout) = wait {
+                    eprintln!(
+                        "depth_k_pulls_never_observe_partial_pushes: still running \
+                         after 120s at depth {depth}, deadlock suspected — aborting"
+                    );
+                    std::process::abort();
+                }
+            });
+            let store = ShardedHistoryStore::with_shards(5000, 16, 2, 4);
+            let mut p = HistoryPipeline::with_depth(store, PipelineMode::Concurrent, depth);
+            assert_eq!(p.pull_depth(), depth);
+            let ids: Arc<[u32]> = (0..2048u32).collect();
+            // max value observed in *completed* steps: all of step t's
+            // gathers finish before step t+1's requests are issued, so
+            // step t+1 must see at least this much. (Within one step's
+            // batch of K racing pulls there is no ordering guarantee —
+            // two stagers may gather in either order.)
+            let mut floor = [0f32; 2];
+            for step in 0..8 {
+                for l in 0..2 {
+                    let data = vec![(step * 2 + l + 1) as f32; ids.len() * 16];
+                    p.push(l, ids.clone(), data);
+                }
+                // fill every pull slot, racing the queued push burst
+                for _ in 0..depth {
+                    p.request_pull(ids.clone()).unwrap();
+                }
+                assert_eq!(p.pulls_in_flight(), depth);
+                let mut step_max = floor;
+                for _ in 0..depth {
+                    let buf = p.wait_pull().unwrap();
+                    assert_eq!(buf.num_rows, ids.len());
+                    for l in 0..2 {
+                        let layer = buf.layer(l);
+                        let v = layer[0];
+                        // uniform => the push landed atomically w.r.t. us
+                        assert!(
+                            layer.iter().all(|&x| x == v),
+                            "depth {depth}: partially-applied push visible in layer {l}"
+                        );
+                        assert!(
+                            v >= floor[l],
+                            "depth {depth}: layer {l} went backwards: {} -> {v}",
+                            floor[l]
+                        );
+                        step_max[l] = step_max[l].max(v);
+                    }
+                    p.recycle(buf);
+                }
+                floor = step_max;
             }
-            p.request_pull(ids.clone());
-            let buf = p.wait_pull();
-            assert_eq!(buf.num_rows, ids.len());
-            p.recycle(buf);
+            p.sync();
+            p.with_store(|s| {
+                assert!(s.row(0, 100).iter().all(|&v| v == 15.0));
+                assert!(s.row(1, 100).iter().all(|&v| v == 16.0));
+            });
+            drop(p);
+            done_tx.send(()).unwrap();
+            watchdog.join().unwrap();
         }
-        p.sync();
-        p.with_store(|s| {
-            assert!(s.row(0, 100).iter().all(|&v| v == 14.0));
-            assert!(s.row(1, 100).iter().all(|&v| v == 15.0));
-        });
     }
 
     #[test]
@@ -422,19 +581,32 @@ mod tests {
     fn buffer_pool_recycles() {
         let store = ShardedHistoryStore::with_shards(8, 2, 1, 2);
         let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
-        p.request_pull(Arc::from([0u32, 1]));
-        let buf = p.wait_pull();
+        p.request_pull(Arc::from([0u32, 1])).unwrap();
+        let buf = p.wait_pull().unwrap();
         p.recycle(buf);
         let b = p.take_buffer(4);
         assert_eq!(b.len(), 4);
     }
 
     #[test]
-    #[should_panic(expected = "overlapping pulls")]
-    fn overlapping_pulls_rejected() {
+    fn depth_overflow_and_empty_wait_are_typed_errors() {
         let store = ShardedHistoryStore::sequential(8, 2, 1);
-        let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
-        p.request_pull(Arc::from([0u32]));
-        p.request_pull(Arc::from([1u32]));
+        let mut p = HistoryPipeline::with_depth(store, PipelineMode::Serial, 1);
+        assert_eq!(p.wait_pull().unwrap_err(), PipelineError::NoPullInFlight);
+        p.request_pull(Arc::from([0u32])).unwrap();
+        assert_eq!(
+            p.request_pull(Arc::from([1u32])).unwrap_err(),
+            PipelineError::PullQueueFull { depth: 1 }
+        );
+        // draining the slot frees it again
+        let buf = p.wait_pull().unwrap();
+        p.recycle(buf);
+        p.request_pull(Arc::from([1u32])).unwrap();
+        let buf = p.wait_pull().unwrap();
+        p.recycle(buf);
+        // depth is clamped to >= 1
+        let store = ShardedHistoryStore::sequential(8, 2, 1);
+        let p = HistoryPipeline::with_depth(store, PipelineMode::Serial, 0);
+        assert_eq!(p.pull_depth(), 1);
     }
 }

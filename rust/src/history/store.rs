@@ -17,7 +17,12 @@
 //! Rayon pool tasks never block on a lock — otherwise blocked scatter
 //! tasks could occupy every pool thread while a concurrent pull (holding
 //! all read guards) waits for its gather chunks to be scheduled on the
-//! same pool, deadlocking both workers.
+//! same pool, deadlocking both workers. A corollary of the all-shard
+//! guard acquisition: pushes are *atomic* with respect to gathers — a
+//! `pull`/`pull_all` (holding every read lock for its whole gather) can
+//! never observe a partially-applied push. The depth-K pull pool in
+//! [`crate::history::pipeline`] leans on exactly this invariant, and its
+//! `depth_k_pulls_never_observe_partial_pushes` test regresses it.
 
 use rayon::prelude::*;
 use std::sync::{RwLock, RwLockReadGuard};
@@ -325,8 +330,8 @@ impl ShardedHistoryStore {
     }
 
     /// Gather rows `ids` for *all* layers into the flat buffer `out`,
-    /// laid out `[num_layers][ids.len() * h]` — the pipeline's pull path
-    /// (one buffer, one pass over the shard locks).
+    /// laid out `[num_layers][ids.len() * h]` (one buffer, one pass over
+    /// the shard locks).
     pub fn pull_all(&self, ids: &[u32], out: &mut [f32]) {
         let span = ids.len() * self.h;
         debug_assert!(out.len() >= self.num_layers * span);
@@ -334,6 +339,24 @@ impl ShardedHistoryStore {
         for l in 0..self.num_layers {
             self.gather_layer(&guards, l, ids, &mut out[l * span..(l + 1) * span]);
         }
+    }
+
+    /// [`Self::pull_all`] plus the per-layer mean staleness of the same
+    /// rows, measured under the *same* read-guard acquisition as the
+    /// gather — the pipeline's pull path. Probing with a separate
+    /// `staleness()` call would leave a window where a racing push
+    /// freshens the clocks after the rows were copied, making the probe
+    /// mis-describe the data actually gathered.
+    pub fn pull_all_with_staleness(&self, ids: &[u32], out: &mut [f32]) -> Vec<f64> {
+        let span = ids.len() * self.h;
+        debug_assert!(out.len() >= self.num_layers * span);
+        let guards = self.read_all();
+        for l in 0..self.num_layers {
+            self.gather_layer(&guards, l, ids, &mut out[l * span..(l + 1) * span]);
+        }
+        (0..self.num_layers)
+            .map(|l| staleness_locked(&guards, self.num_shards, l, ids))
+            .collect()
     }
 
     fn read_all(&self) -> Vec<RwLockReadGuard<'_, Shard>> {
@@ -431,19 +454,7 @@ impl ShardedHistoryStore {
 
     /// Mean staleness (steps since last push) of given rows at layer `l`.
     pub fn staleness(&self, l: usize, ids: &[u32]) -> f64 {
-        if ids.is_empty() {
-            return 0.0;
-        }
-        let guards = self.read_all();
-        let ns = self.num_shards;
-        let s: u64 = ids
-            .iter()
-            .map(|&id| {
-                let g = &guards[id as usize % ns];
-                g.step - g.last_push[l][id as usize / ns]
-            })
-            .sum();
-        s as f64 / ids.len() as f64
+        staleness_locked(&self.read_all(), self.num_shards, l, ids)
     }
 
     /// Mean ||h̄_new - h̄_old|| per push since start, per layer,
@@ -470,6 +481,26 @@ impl ShardedHistoryStore {
             g.delta_cnt.iter_mut().for_each(|x| *x = 0);
         }
     }
+}
+
+/// Mean staleness of `ids` at layer `l` over already-held shard guards.
+fn staleness_locked(
+    guards: &[RwLockReadGuard<'_, Shard>],
+    ns: usize,
+    l: usize,
+    ids: &[u32],
+) -> f64 {
+    if ids.is_empty() {
+        return 0.0;
+    }
+    let s: u64 = ids
+        .iter()
+        .map(|&id| {
+            let g = &guards[id as usize % ns];
+            g.step - g.last_push[l][id as usize / ns]
+        })
+        .sum();
+    s as f64 / ids.len() as f64
 }
 
 fn default_shards() -> usize {
@@ -658,6 +689,24 @@ mod tests {
         done_tx.send(()).unwrap();
         watchdog.join().unwrap();
         assert_eq!(store.row(0, ids[0] as usize), vec![1.0; h]);
+    }
+
+    #[test]
+    fn pull_all_with_staleness_matches_separate_probes() {
+        let s = ShardedHistoryStore::with_shards(40, 3, 2, 4);
+        s.push(0, &[1, 9, 30], &[1.0; 9]);
+        s.tick();
+        s.push(1, &[9], &[2.0; 3]);
+        let ids = [1u32, 9, 30, 5];
+        let mut a = vec![0f32; 2 * ids.len() * 3];
+        let mut b = vec![0f32; 2 * ids.len() * 3];
+        let st = s.pull_all_with_staleness(&ids, &mut a);
+        s.pull_all(&ids, &mut b);
+        assert_eq!(a, b, "combined gather must match the plain gather");
+        // quiescent store: the one-lock-pass probe equals separate probes
+        assert_eq!(st, vec![s.staleness(0, &ids), s.staleness(1, &ids)]);
+        assert_eq!(st[0], 1.0);
+        assert_eq!(st[1], 0.75);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //!   train      --dataset cora --model gcn2 [--mode gas|full|naive|cluster]
 //!              [--backend native|pjrt]   (default: GAS_BACKEND env, else
 //!              pjrt when compiled artifacts exist, else native)
+//!              [--pull-depth K]          (halo pulls in flight / prefetch
+//!              distance; default GAS_PULL_DEPTH env, else 2)
 //!   gen        --dataset cora            (generate + print dataset stats)
 //!   partition  --dataset cora --parts 4  (METIS vs random quality)
 //!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
@@ -71,11 +73,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         "gas" | "naive" => {
             let name = format!("{dataset}_{model}_gas");
             let (ds, art) = ctx.pair(&dataset, &name)?;
-            let cfg = if mode == "gas" {
+            let mut cfg = if mode == "gas" {
                 gas_config(epochs, lr, reg, seed)
             } else {
                 naive_config(epochs, lr, seed)
             };
+            // --pull-depth overrides the preset (which read GAS_PULL_DEPTH)
+            cfg.pull_depth = args.usize_or("pull-depth", cfg.pull_depth)?.max(1);
             let mut tr = Trainer::new(ds, art, cfg)?;
             let r = tr.train()?;
             println!(

@@ -508,6 +508,7 @@ mod tests {
             num_rows: nh_real,
             num_layers: 1,
             h: 8,
+            staleness: Vec::new(),
         };
         let mut out = Vec::new();
         plan.fill_hist(&spec, &pull, &mut out);

@@ -1,6 +1,6 @@
-//! Epoch scheduler: shuffled batch order with one-step prefetch lookahead
-//! (pairs with the concurrent history pipeline: the pull for batch t+1 is
-//! requested while batch t executes).
+//! Epoch scheduler: shuffled batch order with k-step prefetch lookahead
+//! (pairs with the concurrent history pipeline: the pull for batch t+k is
+//! requested while batch t executes, k = the trainer's `pull_depth`).
 
 use crate::util::rng::Rng;
 
@@ -47,7 +47,14 @@ impl EpochScheduler {
 
     /// The batch after the current one (prefetch target).
     pub fn lookahead(&self) -> Option<usize> {
-        self.order.get(self.pos + 1).copied()
+        self.lookahead_at(1)
+    }
+
+    /// The batch `k` positions ahead of the current one (`lookahead_at(0)`
+    /// is the current batch) — the prefetch target of a depth-`k` software
+    /// pipeline.
+    pub fn lookahead_at(&self, k: usize) -> Option<usize> {
+        self.order.get(self.pos + k).copied()
     }
 
     pub fn advance(&mut self) {
@@ -80,6 +87,9 @@ mod tests {
         let mut s = EpochScheduler::new(4, 2, false);
         assert_eq!(s.current(), Some(0));
         assert_eq!(s.lookahead(), Some(1));
+        assert_eq!(s.lookahead_at(0), Some(0));
+        assert_eq!(s.lookahead_at(2), Some(2));
+        assert_eq!(s.lookahead_at(4), None);
         s.advance();
         s.advance();
         s.advance();

@@ -8,6 +8,17 @@
 //!   3. optimizer step (Adam + global-norm clip),
 //!   4. *push* fresh in-batch layer embeddings back to the history store.
 //!
+//! The epoch is a depth-`pull_depth` software pipeline: the first
+//! `pull_depth` halo gathers are primed at epoch start, every step waits
+//! on the oldest staged pull, requests the gather for batch t+depth, and
+//! hands its write-backs to the background push applier — so gather,
+//! compute and push overlap steady-state, with an epoch-boundary
+//! `sync()` barrier so evaluation always sees a fully-applied store.
+//! `pull_depth = 1` reproduces the classic one-step-lookahead schedule
+//! exactly; deeper prefetch trades (bounded, Theorem-2-tolerated)
+//! staleness for more gather/compute overlap, and is the prerequisite
+//! for WaveGAS-style multi-pull refinement passes.
+//!
 //! Evaluation runs the same artifact over all batches (histories synced),
 //! collecting logits for every node — mirroring the paper's
 //! constant-memory layer-wise inference. Because histories are synced and
@@ -57,6 +68,11 @@ pub struct TrainConfig {
     /// history-store shard count (None = one stripe per core, capped at 8;
     /// Some(1) still runs the rayon gather/scatter on a single stripe)
     pub history_shards: Option<usize>,
+    /// max halo pulls in flight = the epoch pipeline's prefetch distance
+    /// (clamped to ≥ 1). 1 reproduces the classic one-step-lookahead
+    /// schedule bit-for-bit; the default (2, or `GAS_PULL_DEPTH`) keeps a
+    /// second gather in flight while each batch computes.
+    pub pull_depth: usize,
 }
 
 impl Default for TrainConfig {
@@ -76,6 +92,7 @@ impl Default for TrainConfig {
             label_sel: LabelSel::Train,
             parts: None,
             history_shards: None,
+            pull_depth: crate::config::default_pull_depth(),
         }
     }
 }
@@ -89,7 +106,8 @@ pub struct TrainResult {
     /// test metric at the best-val epoch (the paper's reporting protocol)
     pub test_at_best_val: f64,
     pub buckets: Buckets,
-    /// mean staleness (steps) of pulled rows, per layer
+    /// mean staleness (steps) of pulled rows, per layer, measured at
+    /// gather time (what the consumed pulls actually saw)
     pub staleness: Vec<f64>,
     /// mean push delta ||h_new - h_old|| per layer (empirical epsilon)
     pub push_delta: Vec<f64>,
@@ -138,7 +156,10 @@ impl<'a> Trainer<'a> {
             Some(s) => ShardedHistoryStore::with_shards(ds.n(), spec.hist_dim, spec.hist_layers(), s),
             None => ShardedHistoryStore::new(ds.n(), spec.hist_dim, spec.hist_layers()),
         };
-        let pipeline = HistoryPipeline::new(store, cfg.pipeline);
+        let mut pipeline = HistoryPipeline::with_depth(store, cfg.pipeline, cfg.pull_depth);
+        // the trainer consumes the gather-time staleness probe (TrainResult
+        // + the Theorem-2 error-bound harnesses); benches/eval leave it off
+        pipeline.set_staleness_probe(true);
         let params = ParamStore::init(&spec.params, cfg.seed ^ 0x9e37)?;
         let opt = {
             let mut a = Adam::new(cfg.lr).with_weight_decay(cfg.weight_decay);
@@ -196,20 +217,26 @@ impl<'a> Trainer<'a> {
             sched.next_epoch();
             let mut epoch_loss = 0f64;
             let mut nb = 0usize;
-            // prime the pipeline with the first pull
-            if let Some(b0) = sched.current() {
-                self.pipeline.request_pull(self.plans[b0].halo_nodes.clone());
+            // prime the software pipeline: fill every pull slot with the
+            // first `pull_depth` batches of the epoch order
+            let depth = self.pipeline.pull_depth();
+            for k in 0..depth {
+                match sched.lookahead_at(k) {
+                    Some(b) => self.pipeline.request_pull(self.plans[b].halo_nodes.clone())?,
+                    None => break,
+                }
             }
             while let Some(b) = sched.current() {
-                let loss = self.step(b, &mut result.buckets, sched.lookahead())?;
+                let loss = self.step(b, &mut result.buckets, sched.lookahead_at(depth))?;
                 epoch_loss += loss as f64;
                 nb += 1;
                 result.steps += 1;
                 sched.advance();
             }
-            // epoch boundary: drain queued write-backs across all shards so
-            // the next epoch (and any evaluation) reads applied histories —
-            // this bounds staleness at one step exactly as in the paper
+            // epoch boundary: every staged pull was consumed (prefetch never
+            // reaches past the epoch order) — drain queued write-backs
+            // across all shards so the next epoch (and any evaluation)
+            // reads applied histories, re-bounding staleness every epoch
             self.pipeline.sync();
             result.loss.push(epoch_loss / nb.max(1) as f64);
             if (epoch + 1) % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
@@ -233,32 +260,32 @@ impl<'a> Trainer<'a> {
         Ok(result)
     }
 
-    /// One optimizer step on batch `b`. `lookahead`: batch to prefetch.
-    fn step(&mut self, b: usize, buckets: &mut Buckets, lookahead: Option<usize>) -> Result<f32> {
+    /// One optimizer step on batch `b`. `prefetch`: the batch `pull_depth`
+    /// positions ahead, whose gather is requested as soon as this batch's
+    /// staged pull is claimed (keeping every pull slot full steady-state).
+    fn step(&mut self, b: usize, buckets: &mut Buckets, prefetch: Option<usize>) -> Result<f32> {
         let spec = self.art.spec();
         let hl = spec.hist_layers();
         let hd = spec.hist_dim;
 
         // -- wait for the staged pull (I/O wait = the Fig. 4 overhead) -----
         let t = Timer::start();
-        let pull = self.pipeline.wait_pull();
+        let pull = self.pipeline.wait_pull()?;
         buckets.add("pull_wait", t.elapsed_s());
 
-        // -- prefetch the next batch while this one computes ---------------
-        if let Some(nb) = lookahead {
-            self.pipeline.request_pull(self.plans[nb].halo_nodes.clone());
+        // -- refill the freed pull slot while this batch computes ----------
+        if let Some(nb) = prefetch {
+            self.pipeline.request_pull(self.plans[nb].halo_nodes.clone())?;
         }
 
-        // staleness probe
-        {
-            let plan = &self.plans[b];
-            self.pipeline.with_store(|s| {
-                for l in 0..hl {
-                    self.staleness_acc[l] += s.staleness(l, &plan.halo_nodes);
-                }
-            });
-            self.staleness_cnt += 1;
+        // staleness probe: recorded at gather time inside the pull (with K
+        // pulls in flight the store's clocks have already moved on by the
+        // time the pull is consumed — probing the store here would
+        // understate the staleness the model actually trained on)
+        for (l, s) in pull.staleness.iter().enumerate() {
+            self.staleness_acc[l] += *s;
         }
+        self.staleness_cnt += 1;
 
         // -- assemble ------------------------------------------------------
         let t = Timer::start();
@@ -373,6 +400,7 @@ impl<'a> Trainer<'a> {
                         num_rows: ids.len(),
                         num_layers: hl,
                         h: hd,
+                        staleness: Vec::new(),
                     };
                     store.pull_all(ids, &mut pull.data);
                     let mut hist = Vec::new();
@@ -412,8 +440,8 @@ impl<'a> Trainer<'a> {
         let c = spec.c;
         let mut logits = vec![0f32; n * c];
         for b in 0..self.plans.len() {
-            self.pipeline.request_pull(self.plans[b].halo_nodes.clone());
-            let pull = self.pipeline.wait_pull();
+            self.pipeline.request_pull(self.plans[b].halo_nodes.clone())?;
+            let pull = self.pipeline.wait_pull()?;
             self.plans[b].fill_hist(spec, &pull, &mut self.hist_buf);
             self.pipeline.recycle(pull);
             self.ensure_statics(b)?;

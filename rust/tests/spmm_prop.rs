@@ -1,0 +1,122 @@
+//! Property tests for the blocked SpMM kernels (`backend::native::spmm`)
+//! against the scalar oracles (`EdgeIndex::scatter_scalar` /
+//! `scatter_t_acc_scalar` in `backend::native::ops`): random CSR shapes —
+//! ragged feature dims crossing every panel-group boundary, empty rows,
+//! duplicate/parallel edges, zero-weight padding edges (including
+//! out-of-range ones, as padded artifacts produce) — must match
+//! *bitwise*. Unlike the GEMM kernels (whose zero-skip granularity allows
+//! a ±0.0 divergence), the blocked scatters run the exact same
+//! per-element `acc + w*z` chain in the exact same CSR edge order as the
+//! oracles, so full bit equality — signs of zero included — is the
+//! contract, and `to_bits` equality is what we assert.
+
+use gas::backend::native::ops::EdgeIndex;
+use gas::backend::native::spmm;
+use gas::util::prop;
+use gas::util::rng::Rng;
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(&x, &y)| x.to_bits() == y.to_bits())
+}
+
+/// Random padded COO edge list over `n_src x n_out`: ~15% zero-weight
+/// padding (some with deliberately out-of-range endpoints, which the
+/// builder must drop), duplicate edges likely, plus whole dst/src ranges
+/// left empty when the rng draws small index bounds.
+fn random_edges(rng: &mut Rng, n_src: usize, n_out: usize, e: usize) -> EdgeIndex {
+    // sometimes restrict the index ranges so entire row suffixes are empty
+    let src_bound = if rng.chance(0.3) { n_src / 2 + 1 } else { n_src };
+    let dst_bound = if rng.chance(0.3) { n_out / 2 + 1 } else { n_out };
+    let mut src = Vec::with_capacity(e);
+    let mut dst = Vec::with_capacity(e);
+    let mut w = Vec::with_capacity(e);
+    for _ in 0..e {
+        if rng.chance(0.15) {
+            // padding edge: weight 0, endpoints may be garbage
+            src.push(if rng.chance(0.3) { -1 } else { rng.below(n_src) as i32 });
+            dst.push(if rng.chance(0.3) { (n_out + 7) as i32 } else { rng.below(n_out) as i32 });
+            w.push(0.0);
+        } else {
+            src.push(rng.below(src_bound) as i32);
+            dst.push(rng.below(dst_bound) as i32);
+            w.push(rng.normal_f32());
+        }
+    }
+    EdgeIndex::build(&src, &dst, &w, n_src, n_out).unwrap()
+}
+
+/// Shape + data-seed case; dims are clamped to ≥ 1 inside the property so
+/// shrinking stays within the kernels' (and oracles') contracts.
+type Case = ((usize, usize), ((usize, usize), u64));
+
+fn gen_case(r: &mut Rng) -> Case {
+    // d spans sub-panel (d < 8), exact-panel, and multi-group (d > 32)
+    // tails; node counts cross the RB=64 row-block boundary
+    ((r.below(150) + 1, r.below(150) + 1), ((r.below(70) + 1, r.below(1200)), r.next_u64()))
+}
+
+#[test]
+fn blocked_scatter_matches_scalar_oracle() {
+    prop::check(0xD0, 48, gen_case, |&((n_src, n_out), ((d, e), seed))| {
+        let (n_src, n_out, d) = (n_src.max(1), n_out.max(1), d.max(1));
+        let mut rng = Rng::new(seed ^ 0x44);
+        let ei = random_edges(&mut rng, n_src, n_out, e);
+        let z: Vec<f32> = (0..n_src * d).map(|_| rng.normal_f32()).collect();
+        bits_eq(&spmm::scatter(&ei, &z, d), &ei.scatter_scalar(&z, d))
+    });
+}
+
+#[test]
+fn blocked_scatter_t_acc_matches_scalar_oracle() {
+    prop::check(0xE0, 48, gen_case, |&((n_src, n_out), ((d, e), seed))| {
+        let (n_src, n_out, d) = (n_src.max(1), n_out.max(1), d.max(1));
+        let mut rng = Rng::new(seed ^ 0x55);
+        let ei = random_edges(&mut rng, n_src, n_out, e);
+        let dh: Vec<f32> = (0..n_out * d).map(|_| rng.normal_f32()).collect();
+        // accumulate on top of a shared random prefix: both entry points
+        // must chain new terms onto the incoming values identically
+        let init: Vec<f32> = (0..n_src * d).map(|_| rng.normal_f32() * 0.5).collect();
+        let mut blocked = init.clone();
+        let mut scalar = init;
+        spmm::scatter_t_acc(&ei, &dh, d, &mut blocked);
+        ei.scatter_t_acc_scalar(&dh, d, &mut scalar);
+        bits_eq(&blocked, &scalar)
+    });
+}
+
+#[test]
+fn paper_sparse_dims_match_exactly() {
+    // the exact shapes the micro bench gates (d = 64, degrees 8 and 32),
+    // big enough to engage the rayon row-block path
+    let d = 64usize;
+    for &deg in &[8usize, 32] {
+        let n = 5003usize; // ragged vs RB = 64
+        let mut rng = Rng::new(13 + deg as u64);
+        let ei = random_edges(&mut rng, n, n, n * deg);
+        let z: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+        assert!(bits_eq(&spmm::scatter(&ei, &z, d), &ei.scatter_scalar(&z, d)), "fwd deg={deg}");
+        let dh: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+        let init: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.5).collect();
+        let mut blocked = init.clone();
+        let mut scalar = init;
+        spmm::scatter_t_acc(&ei, &dh, d, &mut blocked);
+        ei.scatter_t_acc_scalar(&dh, d, &mut scalar);
+        assert!(bits_eq(&blocked, &scalar), "bwd deg={deg}");
+    }
+}
+
+#[test]
+fn empty_rows_and_all_padding_lists_are_exact() {
+    // an edge list that is 100% padding builds an empty CSR: forward must
+    // return exact +0.0 rows, backward must leave the accumulator alone
+    let ei = EdgeIndex::build(&[0, -1, 5], &[0, 9, 1], &[0.0, 0.0, 0.0], 6, 4).unwrap();
+    assert_eq!(ei.num_edges(), 0);
+    let z = vec![1.5f32; 6 * 9];
+    let out = spmm::scatter(&ei, &z, 9);
+    assert!(out.iter().all(|&v| v.to_bits() == 0), "forward must be exact +0.0");
+    let dh = vec![2.5f32; 4 * 9];
+    let init: Vec<f32> = (0..6 * 9).map(|i| i as f32 - 3.0).collect();
+    let mut acc = init.clone();
+    spmm::scatter_t_acc(&ei, &dh, 9, &mut acc);
+    assert!(bits_eq(&acc, &init), "backward must not touch edgeless rows");
+}
