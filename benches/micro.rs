@@ -2,7 +2,9 @@
 //! pull/push throughput (serial vs concurrent vs sharded), blocked-vs-
 //! scalar GEMM kernels on the dense dims that dominate native step time,
 //! blocked-vs-scalar SpMM (CSR scatter) kernels on the sparse dims that
-//! dominate at scale, the serial-vs-pipelined training epoch (pull_depth
+//! dominate at scale, blocked-vs-scalar edge-softmax attention (the
+//! native GAT core), per-model native train steps (gcn2 / gat2 /
+//! appnp10), the serial-vs-pipelined training epoch (pull_depth
 //! overlap), batch assembly, literal marshalling (§Perf baselines in
 //! EXPERIMENTS.md).
 //!
@@ -14,7 +16,7 @@
 //! override with `GAS_BENCH_JSON`) so the CI bench-smoke job can archive
 //! pull/push throughput and fail loudly on regressions.
 
-use gas::backend::native::{gemm, ops, registry, spmm, NativeArtifact};
+use gas::backend::native::{attn, gemm, ops, registry, spmm, NativeArtifact};
 use gas::bench::{write_bench_json, BenchReport, Bencher};
 use gas::graph::generators;
 use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
@@ -271,6 +273,65 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- edge softmax: blocked attention kernels vs the scalar oracles -------
+    // The sparse core of native GAT (backend/native/attn.rs): per-head
+    // softmax over N(v) ∪ {v} plus the attention-weighted aggregation, on
+    // the gat2 hidden shape (K=4 heads x dh=16) over the same n/deg grid
+    // as the SpMM section. Rows are gated: GEdge/s floors on every blocked
+    // shape and a blocked-vs-scalar floor on n=10k
+    // (ci/check_bench_micro.py); the [blocked] rows also feed the
+    // trajectory gate.
+    let mut attn_metrics: Vec<(String, f64)> = Vec::new();
+    {
+        let (heads, dh) = (4usize, 16usize);
+        for (n, ntag) in [(1_000usize, "n1k"), (10_000usize, "n10k")] {
+            for deg in [8usize, 32] {
+                let mut rng = Rng::new(0xa7 ^ (n + deg) as u64);
+                let e = n * deg;
+                let src: Vec<i32> = (0..e).map(|_| rng.below(n) as i32).collect();
+                let dst: Vec<i32> = (0..e).map(|_| rng.below(n) as i32).collect();
+                let w = vec![1.0f32; e];
+                let ei = ops::EdgeIndex::build(&src, &dst, &w, n, n).unwrap();
+                let z: Vec<f32> = (0..n * heads * dh).map(|_| rng.normal_f32() * 0.1).collect();
+                let s_src: Vec<f32> = (0..n * heads).map(|_| rng.normal_f32()).collect();
+                let s_dst: Vec<f32> = (0..n * heads).map(|_| rng.normal_f32()).collect();
+                let gedges = ei.num_edges() as f64 / 1e9;
+                let tag = format!("{ntag}_deg{deg}");
+                let tb = run(
+                    &mut reports,
+                    &format!("attn softmax+scatter {tag} h4x16 [blocked]"),
+                    &mut || {
+                        let sm = attn::edge_softmax(&ei, &s_src, &s_dst, heads);
+                        std::hint::black_box(attn::attn_scatter(&ei, &sm, &z, heads, dh));
+                    },
+                );
+                let ts = run(
+                    &mut reports,
+                    &format!("attn softmax+scatter {tag} h4x16 [scalar]"),
+                    &mut || {
+                        let sm = attn::edge_softmax_scalar(&ei, &s_src, &s_dst, heads);
+                        std::hint::black_box(attn::attn_scatter_scalar(&ei, &sm, &z, heads, dh));
+                    },
+                );
+                attn_metrics.push((format!("attn_fwd_{tag}_blocked_gedges"), gedges / tb));
+                attn_metrics.push((format!("attn_fwd_{tag}_speedup"), ts / tb));
+            }
+        }
+        let show = |key: &str| {
+            attn_metrics
+                .iter()
+                .find(|(k, _)| k == &format!("attn_fwd_n10k_{key}_speedup"))
+                .map(|&(_, v)| v)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "\nattn blocked vs scalar @ n=10k,K=4,dh=16: deg8 {:.2}x, deg32 {:.2}x \
+             (CI floor ≥ 1.2x)",
+            show("deg8"),
+            show("deg32")
+        );
+    }
+
     // --- batch assembly on a synthetic graph (no artifacts needed) -----------
     let n_asm = if tiny { 20_000 } else { 100_000 };
     let mut rng = Rng::new(2);
@@ -318,50 +379,77 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- real train-step compute through the Executor trait ------------------
-    // (native backend needs no artifacts; PJRT benches too when compiled
-    // artifacts + real bindings are present, and skips on the stub)
-    {
+    // One row per native model family on cora: gcn2 (the historical gated
+    // row), gat2 (edge-softmax attention) and appnp10 (10 teleport steps,
+    // C-dim histories). All three are budget-gated and trajectory-gated
+    // ("train step" rows). (Native backend needs no artifacts; PJRT
+    // benches too when compiled artifacts + real bindings are present,
+    // and skips on the stub.)
+    let backend_native = {
         let mut ctx = gas::config::Ctx::new()?;
         let backend = ctx.backend().name();
-        let (ds, art) = ctx.pair("cora", "cora_gcn2_gas")?;
-        let part = metis_partition(&ds.graph, ds.profile.parts, 1);
-        let batch: Vec<u32> = (0..ds.n() as u32).filter(|&v| part[v as usize] == 0).collect();
-        let spec = art.spec().clone();
-        run(&mut reports, "batch assembly (cora part 0)", &mut || {
-            std::hint::black_box(
-                BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train).unwrap(),
-            );
-        });
-        let plan = BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train)?;
-        let params = gas::model::ParamStore::init(&spec.params, 1)?;
-        let hist = vec![0f32; spec.hist_layers() * spec.nh * spec.hist_dim];
-        let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
-        let inputs = gas::runtime::StepInputs {
-            x: &plan.st.x,
-            edge_src: &plan.edge_src,
-            edge_dst: &plan.edge_dst,
-            edge_w: &plan.edge_w,
-            hist: &hist,
-            labels_i: Some(&plan.st.labels_i),
-            labels_f: None,
-            label_mask: &plan.st.label_mask,
-            deg: &plan.st.deg,
-            noise: &noise,
-            reg_lambda: 0.0,
-        };
-        match art.run(&params.tensors, &inputs) {
-            Ok(_) => {
-                let statics = art.prepare_static(&inputs, true)?;
-                run(&mut reports, &format!("{backend} train step (cora_gcn2_gas)"), &mut || {
+        let mut assembly_done = false;
+        for name in ["cora_gcn2_gas", "cora_gat2_gas", "cora_appnp10_gas"] {
+            let (ds, art) = match ctx.pair("cora", name) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("skipping {name} step bench (artifact unavailable): {e:#}");
+                    continue;
+                }
+            };
+            let part = metis_partition(&ds.graph, ds.profile.parts, 1);
+            let batch: Vec<u32> =
+                (0..ds.n() as u32).filter(|&v| part[v as usize] == 0).collect();
+            let spec = art.spec().clone();
+            if !assembly_done {
+                run(&mut reports, "batch assembly (cora part 0)", &mut || {
                     std::hint::black_box(
-                        art.run_prepared(&params.tensors, &statics, &hist, &noise, 0.0)
-                            .unwrap(),
+                        BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train).unwrap(),
                     );
                 });
+                assembly_done = true;
             }
-            Err(e) => eprintln!("skipping {backend} step bench (runtime unavailable): {e:#}"),
+            let plan = BatchPlan::build_gas(ds, &spec, &batch, LabelSel::Train)?;
+            let params = gas::model::ParamStore::init(&spec.params, 1)?;
+            let hist = vec![0f32; spec.hist_layers() * spec.nh * spec.hist_dim];
+            let noise = vec![0f32; spec.n_in() * spec.hist_dim.max(spec.h)];
+            let inputs = gas::runtime::StepInputs {
+                x: &plan.st.x,
+                edge_src: &plan.edge_src,
+                edge_dst: &plan.edge_dst,
+                edge_w: &plan.edge_w,
+                hist: &hist,
+                labels_i: Some(&plan.st.labels_i),
+                labels_f: None,
+                label_mask: &plan.st.label_mask,
+                deg: &plan.st.deg,
+                noise: &noise,
+                reg_lambda: 0.0,
+            };
+            match art.run(&params.tensors, &inputs) {
+                Ok(_) => {
+                    let statics = art.prepare_static(&inputs, true)?;
+                    run(&mut reports, &format!("{backend} train step ({name})"), &mut || {
+                        std::hint::black_box(
+                            art.run_prepared(&params.tensors, &statics, &hist, &noise, 0.0)
+                                .unwrap(),
+                        );
+                    });
+                }
+                Err(e) => {
+                    eprintln!("skipping {backend} step bench (runtime unavailable): {e:#}")
+                }
+            }
         }
-    }
+        // recorded so the CI gate can REQUIRE the per-model step rows on
+        // native runs (a missing row = a model silently not running)
+        // instead of inferring the backend from row presence
+        if backend == "native" {
+            1.0
+        } else {
+            0.0
+        }
+    };
 
     // --- epoch software pipeline: serial vs pull_depth=2 overlap --------------
     // A full multi-batch training epoch through the native backend (the
@@ -502,6 +590,7 @@ fn main() -> anyhow::Result<()> {
         std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".to_string());
     let mut metrics: Vec<(&str, f64)> = vec![
         ("tiny", if tiny { 1.0 } else { 0.0 }),
+        ("backend_native", backend_native),
         ("rayon_threads", rayon::current_num_threads() as f64),
         ("pull_speedup_sharded_vs_serial", pull_speedup),
         ("push_speedup_sharded_vs_serial", push_speedup),
@@ -509,6 +598,7 @@ fn main() -> anyhow::Result<()> {
     ];
     metrics.extend(gemm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
     metrics.extend(spmm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
+    metrics.extend(attn_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
     write_bench_json(&json_path, "micro", &reports, &metrics)?;
     println!("wrote {json_path}");
     Ok(())

@@ -1,7 +1,8 @@
-//! Paper Table 5: large-graph performance — GCN / GCNII / PNA trained via
-//! GAS, plus Cluster-GCN and GraphSAGE baselines (GCN) and full-batch
-//! where it fits. Reproduction target: deep/expressive + GAS >= GCN+GAS >=
-//! edge-dropping baselines.
+//! Paper Table 5: large-graph performance — GCN / GAT / APPNP / GCNII /
+//! PNA trained via GAS, plus Cluster-GCN and GraphSAGE baselines (GCN)
+//! and full-batch where it fits. Reproduction target: deep/expressive +
+//! GAS >= GCN+GAS >= edge-dropping baselines. (pna3 rows need the PJRT
+//! backend; everything else runs natively.)
 //!
 //!     GAS_FILTER=flickr cargo bench --bench table5_large
 //!     GAS_EPOCHS=10 cargo bench --bench table5_large
@@ -35,10 +36,14 @@ fn main() -> anyhow::Result<()> {
         if !filt_match(ds_name) {
             continue;
         }
-        // --- GAS: GCN / GCNII / PNA ---------------------------------------
-        for (model, reg) in [("gcn2", 0.0f32), ("gcnii8", 0.02), ("pna3", 0.0)] {
+        // --- GAS: GCN / GAT / APPNP / GCNII / PNA -------------------------
+        // gat2/appnp10 run natively since the layer-op tape grew them;
+        // pna3 remains PJRT-only (no native 3x3 aggregator/scaler tensor
+        // product yet) and is skipped with a message on the native backend
+        for (model, reg) in
+            [("gcn2", 0.0f32), ("gat2", 0.0), ("appnp10", 0.0), ("gcnii8", 0.02), ("pna3", 0.0)]
+        {
             let name = format!("{ds_name}_{model}_gas");
-            // e.g. pna is not in the native registry/interpreter
             if let Err(e) = ctx.artifact(&name).map(|_| ()) {
                 eprintln!("skipping {name}: {e:#}");
                 continue;
@@ -120,7 +125,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("done {ds_name} sage: {te:.4}");
         }
         // --- full-batch where compiled (flickr, arxiv) --------------------
-        for model in ["gcn2", "gcnii8", "pna3"] {
+        for model in ["gcn2", "gat2", "appnp10", "gcnii8", "pna3"] {
             let name = format!("{ds_name}_{model}_full");
             if !ctx.manifest.artifacts.contains_key(&name) {
                 continue;

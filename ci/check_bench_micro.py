@@ -3,9 +3,12 @@
 
 Exits non-zero when the sharded history pull/push medians blow an absolute
 budget, when the sharded-vs-serial speedup falls below a floor, when the
-blocked GEMM/SpMM kernels stop clearing their per-shape throughput floors
-or the blocked-vs-scalar speedup floors on the gated n=10k shapes, or
-when the pull_depth=2 pipelined epoch falls behind the serial epoch.
+blocked GEMM/SpMM/edge-softmax kernels stop clearing their per-shape
+throughput floors or the blocked-vs-scalar speedup floors on the gated
+n=10k shapes, when any native per-model train-step row (gcn2 / gat2 /
+appnp10 — their presence also proves the models actually run natively)
+blows its budget or goes missing, or when the pull_depth=2 pipelined
+epoch falls behind the serial epoch.
 The history/throughput budgets are deliberately loose: shared CI runners
 are noisy, so those catch order-of-magnitude regressions (and near-hangs
 shorter than the job timeout), not few-percent drift; the GEMM/SpMM
@@ -24,6 +27,13 @@ local experimentation:
     GAS_BENCH_MIN_GEMM_SPEEDUP     (default 2.0, n=10k shapes)
     GAS_BENCH_MIN_SPMM_GEDGES      (default 0.02, every blocked shape)
     GAS_BENCH_MIN_SPMM_SPEEDUP     (default 2.0, n=10k shapes)
+    GAS_BENCH_MIN_ATTN_GEDGES      (default 0.005, every blocked shape)
+    GAS_BENCH_MIN_ATTN_SPEEDUP     (default 1.2, n=10k shapes; the scalar
+                                    oracle is serial softmax math, so the
+                                    floor is looser than the SpMM one —
+                                    the win is tracked by the trajectory)
+    GAS_BENCH_MAX_STEP_MS          (default 2000, every native train-step
+                                    row; loose — catches hangs, not drift)
     GAS_BENCH_MIN_OVERLAP_SPEEDUP  (default 0.9, pipelined vs serial epoch)
 
 Usage: python3 ci/check_bench_micro.py [BENCH_micro.json]
@@ -38,6 +48,11 @@ GEMM_GATED_SHAPE = "n10k"
 SPMM_OPS = ("fwd", "bwd")
 SPMM_SHAPES = ("n1k_deg8", "n1k_deg32", "n10k_deg8", "n10k_deg32")
 SPMM_GATED_SHAPES = ("n10k_deg8", "n10k_deg32")
+ATTN_SHAPES = ("n1k_deg8", "n1k_deg32", "n10k_deg8", "n10k_deg32")
+ATTN_GATED_SHAPES = ("n10k_deg8", "n10k_deg32")
+# the per-model native train-step rows that must exist (and fit the
+# budget) whenever the bench ran on the native backend
+STEP_MODELS = ("cora_gcn2_gas", "cora_gat2_gas", "cora_appnp10_gas")
 
 
 def main() -> int:
@@ -52,6 +67,9 @@ def main() -> int:
     gemm_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_GEMM_SPEEDUP", "2.0"))
     spmm_gedges_floor = float(os.environ.get("GAS_BENCH_MIN_SPMM_GEDGES", "0.02"))
     spmm_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_SPMM_SPEEDUP", "2.0"))
+    attn_gedges_floor = float(os.environ.get("GAS_BENCH_MIN_ATTN_GEDGES", "0.005"))
+    attn_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_ATTN_SPEEDUP", "1.2"))
+    step_budget_ms = float(os.environ.get("GAS_BENCH_MAX_STEP_MS", "2000"))
     overlap_floor = float(os.environ.get("GAS_BENCH_MIN_OVERLAP_SPEEDUP", "0.9"))
 
     medians = {r["name"]: r["median_ms"] for r in rec["results"]}
@@ -107,6 +125,39 @@ def main() -> int:
             print(f"{key}: {v:.2f}x (floor {spmm_speedup_floor}x)")
             if v < spmm_speedup_floor:
                 failures.append(f"{key} = {v:.2f}x below floor {spmm_speedup_floor}x")
+
+    # edge-softmax attention: every blocked shape must clear the GEdge/s
+    # floor; the big (n=10k) shapes must also beat the serial oracle
+    for shape in ATTN_SHAPES:
+        key = f"attn_fwd_{shape}_blocked_gedges"
+        v = metrics[key]
+        print(f"{key}: {v:.3f} GEdge/s (floor {attn_gedges_floor})")
+        if v < attn_gedges_floor:
+            failures.append(f"{key} = {v:.3f} GEdge/s below floor {attn_gedges_floor}")
+    for shape in ATTN_GATED_SHAPES:
+        key = f"attn_fwd_{shape}_speedup"
+        v = metrics[key]
+        print(f"{key}: {v:.2f}x (floor {attn_speedup_floor}x)")
+        if v < attn_speedup_floor:
+            failures.append(f"{key} = {v:.2f}x below floor {attn_speedup_floor}x")
+
+    # native per-model train steps: present (the artifact loaded and the
+    # interpreter ran it) and within the hang budget. Keyed off the
+    # bench's explicit backend marker — NOT off row presence, which would
+    # let "every artifact failed to load" pass silently.
+    step_rows = {k: v for k, v in medians.items() if "train step" in k}
+    if metrics.get("backend_native", 0.0) == 1.0:
+        for model in STEP_MODELS:
+            hits = [(k, v) for k, v in step_rows.items() if model in k]
+            if not hits:
+                failures.append(f"no native train-step row for {model} — model not running?")
+                continue
+            name, ms = hits[0]
+            print(f"{name}: median {ms:.3f} ms (budget {step_budget_ms:.0f} ms)")
+            if ms > step_budget_ms:
+                failures.append(f"{name}: median {ms:.3f} ms over budget {step_budget_ms:.0f} ms")
+    else:
+        print("non-native backend per the bench record — step budgets skipped")
 
     # pipelined (pull_depth=2) epoch must not fall clearly behind serial
     # (loose floor; the overlap *win* is gated by the trajectory check)

@@ -49,8 +49,10 @@ GATED_SUBSTRINGS = {
     "micro": [
         "history pull 8K rows x3 layers [sharded]",
         "history push 4x8K rows + drain [sharded]",
-        "[blocked]",          # every blocked GEMM and SpMM row
-        "train step",         # the end-to-end native step
+        "[blocked]",          # every blocked GEMM, SpMM and edge-softmax row
+        # (the attn softmax rows ride the "[blocked]" substring — their
+        # "[scalar]" oracle baselines stay informational, like GEMM/SpMM's)
+        "train step",         # the per-model end-to-end native steps
         "batch assembly",
         "pipeline epoch",     # serial + pull_depth=2 software-pipeline rows
     ],

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Fail CI when a test file exists that cargo will never run.
+
+`rust/tests/` is NOT auto-discovered: the workspace sets `autotests =
+false`, so every integration-test file needs an explicit `[[test]]` entry
+in Cargo.toml. PR 3 shipped `gemm_prop.rs` without one and the suite
+silently never ran in CI until PR 4 noticed — this check makes that class
+of omission impossible. It also flags the reverse (a `[[test]]` entry
+whose path no longer exists, which `cargo build` would catch later and
+more confusingly), and the same drift for `benches/` (`autobenches =
+false` too).
+
+Usage: python3 ci/check_test_targets.py [repo-root]
+"""
+import os
+import re
+import sys
+
+
+def registered(manifest: str, section: str) -> dict:
+    """Map of path -> name for every [[<section>]] entry in Cargo.toml."""
+    out = {}
+    blocks = re.split(r"^\[", manifest, flags=re.M)
+    for block in blocks:
+        if not block.startswith(f"[{section}]]"):
+            continue
+        name = re.search(r'^name\s*=\s*"([^"]+)"', block, flags=re.M)
+        path = re.search(r'^path\s*=\s*"([^"]+)"', block, flags=re.M)
+        if path:
+            out[path.group(1)] = name.group(1) if name else "?"
+    return out
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    with open(os.path.join(root, "Cargo.toml")) as f:
+        manifest = f.read()
+
+    failures = []
+    for section, d in [("test", "rust/tests"), ("bench", "benches")]:
+        entries = registered(manifest, section)
+        on_disk = sorted(
+            f"{d}/{name}"
+            for name in os.listdir(os.path.join(root, d))
+            if name.endswith(".rs")
+        )
+        for path in on_disk:
+            if path not in entries:
+                failures.append(
+                    f"{path} has no [[{section}]] entry in Cargo.toml — "
+                    f"it will never build or run in CI"
+                )
+        for path in entries:
+            if not os.path.exists(os.path.join(root, path)):
+                failures.append(
+                    f"Cargo.toml [[{section}]] entry points at missing file {path}"
+                )
+        print(f"[[{section}]]: {len(on_disk)} files on disk, {len(entries)} registered")
+
+    if failures:
+        print("\nTEST-TARGET GATE FAILED:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("every test/bench file is a registered cargo target")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

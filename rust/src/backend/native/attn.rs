@@ -1,0 +1,586 @@
+//! CSR edge-softmax attention kernels — the sparse core of the native GAT
+//! operator (`python/compile/models.py::gat_layer`, paper appendix §10).
+//!
+//! A GAT layer attends over `N(v) ∪ {v}` per head: per-edge scores
+//! `leaky_relu(s_src[src] + s_dst[dst])` are softmax-normalized across
+//! each destination row (self score included), and the normalized
+//! coefficients weight the per-head message aggregation. The kernels here
+//! follow the same discipline as [`super::spmm`]:
+//!
+//! * the **destination-major CSR view** ([`super::ops::EdgeIndex`]) drives
+//!   the softmax (max / exp / sum / divide per row, per head) and the
+//!   forward aggregation; the **source-major view** plus the cross-view
+//!   edge map (`src_csr_dst_pos`) drives the backward scatter of message
+//!   gradients into source rows — every output row is owned by exactly
+//!   one rayon task, so results are deterministic at any thread count;
+//! * the forward aggregation reuses the blocked 8-lane panel SpMM
+//!   macro-kernel via [`super::spmm::scatter_weighted`] (attention
+//!   coefficients are per-edge weights in dst-CSR order), one head at a
+//!   time over contiguous per-head column gathers — pure copies, so the
+//!   per-element accumulation chains are exactly the blocked SpMM's;
+//! * scalar oracles ([`edge_softmax_scalar`], [`attn_scatter_scalar`])
+//!   re-implement the same per-row chains serially and are property-tested
+//!   bitwise against the blocked paths in `rust/tests/attn_prop.rs`
+//!   (blocked == scalar `to_bits`, rows sum to one, empty / padded-edge
+//!   rows).
+//!
+//! Numerics mirror the jax reference exactly: the per-row max is
+//! stop-gradiented (softmax is shift-invariant, so the true gradient
+//! equals the stop-gradient one), the denominator is guarded with
+//! `max(denom, 1e-16)` (mathematically `denom >= 1` since the max member
+//! contributes `exp(0)`), and `leaky_relu` uses slope 0.2 with the
+//! `x >= 0` branch convention of `jax.nn.leaky_relu`.
+
+use super::ops::EdgeIndex;
+use super::{gemm, spmm};
+use rayon::prelude::*;
+
+/// Destination rows per rayon task (same blocking as [`super::spmm`]).
+const RB: usize = 64;
+/// Below this many score lanes the fork overhead dominates; run the
+/// blocked kernels on the caller's thread instead.
+const PAR_MIN_LANES: usize = 1 << 14;
+/// LeakyReLU negative slope (jax.nn.leaky_relu default in the reference).
+const LEAKY_SLOPE: f32 = 0.2;
+
+#[inline(always)]
+fn leaky(x: f32) -> f32 {
+    if x >= 0.0 {
+        x
+    } else {
+        LEAKY_SLOPE * x
+    }
+}
+
+#[inline(always)]
+fn leaky_grad(pre: f32, g: f32) -> f32 {
+    if pre >= 0.0 {
+        g
+    } else {
+        LEAKY_SLOPE * g
+    }
+}
+
+/// Normalized attention coefficients of one edge-softmax evaluation.
+pub struct Softmax {
+    /// `[num_edges, heads]` — per real edge, in dst-major CSR order.
+    pub alpha: Vec<f32>,
+    /// `[n_out, heads]` — the self-loop (`v ∈ N(v) ∪ {v}`) coefficient.
+    pub salpha: Vec<f32>,
+}
+
+/// Per-head attention scores `s[n, k] = Σ_d z[n, k·dh + d] · a[k, d]`
+/// (the `einsum("nkd,kd->nk")` of the reference), rayon over rows.
+pub fn head_scores(z: &[f32], rows: usize, heads: usize, dh: usize, a: &[f32]) -> Vec<f32> {
+    let w = heads * dh;
+    assert!(
+        z.len() >= rows * w,
+        "attn::head_scores: z has {} values, rows*K*dh = {}",
+        z.len(),
+        rows * w
+    );
+    assert!(a.len() >= w, "attn::head_scores: a has {} values, K*dh = {}", a.len(), w);
+    let mut s = vec![0f32; rows * heads];
+    let body = |(n, srow): (usize, &mut [f32])| {
+        let zrow = &z[n * w..n * w + w];
+        for (kk, cell) in srow.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for d in 0..dh {
+                acc += zrow[kk * dh + d] * a[kk * dh + d];
+            }
+            *cell = acc;
+        }
+    };
+    if rows * w >= PAR_MIN_LANES {
+        s.par_chunks_mut(heads).enumerate().for_each(body);
+    } else {
+        s.chunks_mut(heads).enumerate().for_each(body);
+    }
+    s
+}
+
+/// One destination row of the softmax: scores stashed, max folded (self
+/// included), exp/sum in CSR edge order then self, divide by the guarded
+/// denominator. `arow` is the row's `[edges, heads]` alpha slice, `srow`
+/// its `[heads]` salpha slice.
+#[inline(always)]
+fn softmax_row(
+    idx_row: &[u32],
+    s_src: &[f32],
+    s_dst: &[f32],
+    v: usize,
+    heads: usize,
+    arow: &mut [f32],
+    srow: &mut [f32],
+) {
+    let c = idx_row.len();
+    for kk in 0..heads {
+        let sd = s_dst[v * heads + kk];
+        let es_pre = s_src[v * heads + kk] + sd;
+        let es = leaky(es_pre);
+        let mut mx = es;
+        for (j, &s) in idx_row.iter().enumerate() {
+            let act = leaky(s_src[s as usize * heads + kk] + sd);
+            arow[j * heads + kk] = act;
+            mx = mx.max(act);
+        }
+        let mut denom = 0f32;
+        for j in 0..c {
+            let ex = (arow[j * heads + kk] - mx).exp();
+            arow[j * heads + kk] = ex;
+            denom += ex;
+        }
+        let ex_self = (es - mx).exp();
+        denom += ex_self;
+        let dg = denom.max(1e-16);
+        for j in 0..c {
+            arow[j * heads + kk] /= dg;
+        }
+        srow[kk] = ex_self / dg;
+    }
+}
+
+/// Blocked edge softmax over `N(v) ∪ {v}` per destination row and head.
+/// `s_src` is `[n_src, heads]`, `s_dst` is `[n_out, heads]`. Rayon tasks
+/// own disjoint [`RB`]-row blocks (and the matching contiguous slices of
+/// the edge-indexed `alpha`), so the result is bitwise identical to
+/// [`edge_softmax_scalar`] at any thread count.
+pub fn edge_softmax(ei: &EdgeIndex, s_src: &[f32], s_dst: &[f32], heads: usize) -> Softmax {
+    let nb = ei.n_out;
+    assert!(
+        s_src.len() >= ei.n_src * heads,
+        "attn::edge_softmax: s_src has {} values, n_src*K = {}",
+        s_src.len(),
+        ei.n_src * heads
+    );
+    assert!(
+        s_dst.len() >= nb * heads,
+        "attn::edge_softmax: s_dst has {} values, n_out*K = {}",
+        s_dst.len(),
+        nb * heads
+    );
+    let (off, idx, _) = ei.dst_csr();
+    let e_real = ei.num_edges();
+    let mut alpha = vec![0f32; e_real * heads];
+    let mut salpha = vec![0f32; nb * heads];
+    // carve disjoint per-block slices of both outputs (edge ranges per
+    // row block are contiguous in dst-CSR order) — no unsafe needed
+    let nblocks = nb.div_ceil(RB);
+    let mut tasks: Vec<(usize, &mut [f32], &mut [f32])> = Vec::with_capacity(nblocks);
+    let mut alpha_rest = &mut alpha[..];
+    let mut sal_rest = &mut salpha[..];
+    let mut e_prev = 0usize;
+    for blk in 0..nblocks {
+        let r0 = blk * RB;
+        let r1 = (r0 + RB).min(nb);
+        let e1 = off[r1] as usize;
+        let (a_blk, rest) = alpha_rest.split_at_mut((e1 - e_prev) * heads);
+        alpha_rest = rest;
+        let (s_blk, rest) = sal_rest.split_at_mut((r1 - r0) * heads);
+        sal_rest = rest;
+        tasks.push((blk, a_blk, s_blk));
+        e_prev = e1;
+    }
+    let body = |(blk, a_blk, s_blk): (usize, &mut [f32], &mut [f32])| {
+        let r0 = blk * RB;
+        let mut a_off = 0usize;
+        for (i, srow) in s_blk.chunks_mut(heads).enumerate() {
+            let v = r0 + i;
+            let (e0, e1) = (off[v] as usize, off[v + 1] as usize);
+            let c = e1 - e0;
+            let arow = &mut a_blk[a_off..a_off + c * heads];
+            softmax_row(&idx[e0..e1], s_src, s_dst, v, heads, arow, srow);
+            a_off += c * heads;
+        }
+    };
+    if (e_real + nb) * heads >= PAR_MIN_LANES {
+        tasks.into_par_iter().for_each(body);
+    } else {
+        tasks.into_iter().for_each(body);
+    }
+    Softmax { alpha, salpha }
+}
+
+/// Serial reference for [`edge_softmax`]: one row at a time, plain loops.
+/// Kept as the oracle for the property tests and the scalar baseline rows
+/// of the `benches/micro.rs` attention section.
+pub fn edge_softmax_scalar(ei: &EdgeIndex, s_src: &[f32], s_dst: &[f32], heads: usize) -> Softmax {
+    let nb = ei.n_out;
+    let (off, idx, _) = ei.dst_csr();
+    let mut alpha = vec![0f32; ei.num_edges() * heads];
+    let mut salpha = vec![0f32; nb * heads];
+    for v in 0..nb {
+        let (e0, e1) = (off[v] as usize, off[v + 1] as usize);
+        for kk in 0..heads {
+            let sd = s_dst[v * heads + kk];
+            let es = leaky(s_src[v * heads + kk] + sd);
+            let mut mx = es;
+            for e in e0..e1 {
+                let act = leaky(s_src[idx[e] as usize * heads + kk] + sd);
+                alpha[e * heads + kk] = act;
+                mx = mx.max(act);
+            }
+            let mut denom = 0f32;
+            for e in e0..e1 {
+                let ex = (alpha[e * heads + kk] - mx).exp();
+                alpha[e * heads + kk] = ex;
+                denom += ex;
+            }
+            let ex_self = (es - mx).exp();
+            denom += ex_self;
+            let dg = denom.max(1e-16);
+            for e in e0..e1 {
+                alpha[e * heads + kk] /= dg;
+            }
+            salpha[v * heads + kk] = ex_self / dg;
+        }
+    }
+    Softmax { alpha, salpha }
+}
+
+/// Attention-weighted message aggregation: `out[v, k·dh + d] =
+/// Σ_{e -> v} alpha[e, k] · z[src_e, k·dh + d] + salpha[v, k] · z[v, ...]`.
+/// One head at a time: the per-head columns of `z` are gathered into a
+/// contiguous `[n_src, dh]` panel and fed through the blocked SpMM
+/// macro-kernel ([`spmm::scatter_weighted`]); the self messages are added
+/// after the edge sums, matching the reference's `scatter_sum + self_msg`
+/// order. Pure copies aside, the accumulation chains are the SpMM's.
+pub fn attn_scatter(ei: &EdgeIndex, sm: &Softmax, z: &[f32], heads: usize, dh: usize) -> Vec<f32> {
+    let w = heads * dh;
+    let (nb, rows) = (ei.n_out, ei.n_src);
+    let e_real = ei.num_edges();
+    assert!(
+        z.len() >= rows * w,
+        "attn::attn_scatter: z has {} values, n_src*K*dh = {}",
+        z.len(),
+        rows * w
+    );
+    assert!(
+        sm.alpha.len() == e_real * heads && sm.salpha.len() == nb * heads,
+        "attn::attn_scatter: softmax shaped for a different graph"
+    );
+    let par = (e_real + nb) * w >= PAR_MIN_LANES;
+    let mut out = vec![0f32; nb * w];
+    let mut zh = vec![0f32; rows * dh];
+    for kk in 0..heads {
+        let gather = |(n, row): (usize, &mut [f32])| {
+            row.copy_from_slice(&z[n * w + kk * dh..n * w + kk * dh + dh]);
+        };
+        if par {
+            zh.par_chunks_mut(dh).enumerate().for_each(gather);
+        } else {
+            zh.chunks_mut(dh).enumerate().for_each(gather);
+        }
+        let wk: Vec<f32> = (0..e_real).map(|e| sm.alpha[e * heads + kk]).collect();
+        let oh = spmm::scatter_weighted(ei, &wk, &zh, dh);
+        for (orow, hrow) in out.chunks_mut(w).zip(oh.chunks(dh)) {
+            orow[kk * dh..kk * dh + dh].copy_from_slice(hrow);
+        }
+    }
+    let self_body = |(v, orow): (usize, &mut [f32])| {
+        for kk in 0..heads {
+            let sa = sm.salpha[v * heads + kk];
+            for d in 0..dh {
+                orow[kk * dh + d] += sa * z[v * w + kk * dh + d];
+            }
+        }
+    };
+    if par {
+        out.par_chunks_mut(w).enumerate().for_each(self_body);
+    } else {
+        out.chunks_mut(w).enumerate().for_each(self_body);
+    }
+    out
+}
+
+/// Serial reference for [`attn_scatter`]: per destination row, per head,
+/// the same edge-order chains then the self message.
+pub fn attn_scatter_scalar(
+    ei: &EdgeIndex,
+    sm: &Softmax,
+    z: &[f32],
+    heads: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let w = heads * dh;
+    let nb = ei.n_out;
+    let (off, idx, _) = ei.dst_csr();
+    let mut out = vec![0f32; nb * w];
+    for v in 0..nb {
+        let orow = &mut out[v * w..v * w + w];
+        for kk in 0..heads {
+            for e in off[v] as usize..off[v + 1] as usize {
+                let a = sm.alpha[e * heads + kk];
+                let zrow = &z[idx[e] as usize * w + kk * dh..];
+                for d in 0..dh {
+                    orow[kk * dh + d] += a * zrow[d];
+                }
+            }
+        }
+        for kk in 0..heads {
+            let sa = sm.salpha[v * heads + kk];
+            for d in 0..dh {
+                orow[kk * dh + d] += sa * z[v * w + kk * dh + d];
+            }
+        }
+    }
+    out
+}
+
+/// Saved forward state of one GAT layer (consumed by [`gat_bwd`]).
+pub(crate) struct GatSaved {
+    pub z: Vec<f32>,
+    pub s_src: Vec<f32>,
+    pub s_dst: Vec<f32>,
+    pub sm: Softmax,
+}
+
+/// One multi-head GAT layer forward (bias excluded — it is its own tape
+/// op): projection, per-head scores, edge softmax, weighted aggregation.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gat_fwd(
+    ei: &EdgeIndex,
+    h_src: &[f32],
+    rows: usize,
+    din: usize,
+    w: &[f32],
+    asrc: &[f32],
+    adst: &[f32],
+    heads: usize,
+    dh: usize,
+) -> (Vec<f32>, GatSaved) {
+    let z = gemm::matmul(h_src, rows, din, w, heads * dh);
+    let s_src = head_scores(&z, rows, heads, dh, asrc);
+    let s_dst = head_scores(&z, ei.n_out, heads, dh, adst);
+    let sm = edge_softmax(ei, &s_src, &s_dst, heads);
+    let out = attn_scatter(ei, &sm, &z, heads, dh);
+    (out, GatSaved { z, s_src, s_dst, sm })
+}
+
+/// GAT layer backward: given `dout` `[nb, K·dh]`, produce `dz`
+/// `[rows, K·dh]` and accumulate the attention-vector gradients.
+///
+/// Phase A walks destination rows (dst-major CSR): per-edge `dalpha`
+/// (message-gradient · message dot products), the softmax VJP
+/// `de = alpha · (dalpha - Σ_j alpha_j · dalpha_j)` with the self member
+/// included (the stop-gradiented max contributes nothing), and the
+/// leaky-slope chain back to the pre-activations; the destination-side
+/// score gradient accumulates per owned row. Phase B walks source rows
+/// (src-major CSR + the cross-view edge map): message gradients
+/// `alpha · dout[dst]` and the source-side score gradients scatter into
+/// rows each task owns. The final (cheap, serial) pass folds the score
+/// gradients through the per-head projections into `dz` / `dasrc` /
+/// `dadst`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gat_bwd(
+    ei: &EdgeIndex,
+    dout: &[f32],
+    sv: &GatSaved,
+    asrc: &[f32],
+    adst: &[f32],
+    dasrc: &mut [f32],
+    dadst: &mut [f32],
+    heads: usize,
+    dh: usize,
+    rows: usize,
+) -> Vec<f32> {
+    let w = heads * dh;
+    let nb = ei.n_out;
+    let e_real = ei.num_edges();
+    debug_assert!(dout.len() >= nb * w && sv.z.len() >= rows * w);
+    let par = (e_real + nb) * w >= PAR_MIN_LANES;
+    let (off, idx, _) = ei.dst_csr();
+    let z = &sv.z[..];
+    let (alpha, salpha) = (&sv.sm.alpha[..], &sv.sm.salpha[..]);
+
+    // --- phase A: dst-major — de_pre per edge, des_pre + ds_dst per row --
+    let mut de_pre = vec![0f32; e_real * heads];
+    let mut des_pre = vec![0f32; nb * heads];
+    let mut ds_dst = vec![0f32; nb * heads];
+    {
+        let nblocks = nb.div_ceil(RB);
+        let mut tasks: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> =
+            Vec::with_capacity(nblocks);
+        let mut de_rest = &mut de_pre[..];
+        let mut des_rest = &mut des_pre[..];
+        let mut dd_rest = &mut ds_dst[..];
+        let mut e_prev = 0usize;
+        for blk in 0..nblocks {
+            let r0 = blk * RB;
+            let r1 = (r0 + RB).min(nb);
+            let e1 = off[r1] as usize;
+            let (de_blk, rest) = de_rest.split_at_mut((e1 - e_prev) * heads);
+            de_rest = rest;
+            let (des_blk, rest) = des_rest.split_at_mut((r1 - r0) * heads);
+            des_rest = rest;
+            let (dd_blk, rest) = dd_rest.split_at_mut((r1 - r0) * heads);
+            dd_rest = rest;
+            tasks.push((blk, de_blk, des_blk, dd_blk));
+            e_prev = e1;
+        }
+        let body = |(blk, de_blk, des_blk, dd_blk): (usize, &mut [f32], &mut [f32], &mut [f32])| {
+            let r0 = blk * RB;
+            let mut a_off = 0usize;
+            for i in 0..des_blk.len() / heads {
+                let v = r0 + i;
+                let (e0, e1) = (off[v] as usize, off[v + 1] as usize);
+                let c = e1 - e0;
+                let de_row = &mut de_blk[a_off..a_off + c * heads];
+                for kk in 0..heads {
+                    let dorow = &dout[v * w + kk * dh..v * w + kk * dh + dh];
+                    // dalpha per member + the softmax inner product g
+                    let mut g = 0f32;
+                    for (j, e) in (e0..e1).enumerate() {
+                        let s = idx[e] as usize;
+                        let zrow = &z[s * w + kk * dh..s * w + kk * dh + dh];
+                        let mut da = 0f32;
+                        for d in 0..dh {
+                            da += dorow[d] * zrow[d];
+                        }
+                        de_row[j * heads + kk] = da; // stash dalpha
+                        g += da * alpha[e * heads + kk];
+                    }
+                    let mut dsa = 0f32;
+                    for d in 0..dh {
+                        dsa += dorow[d] * z[v * w + kk * dh + d];
+                    }
+                    let sa = salpha[v * heads + kk];
+                    g += dsa * sa;
+                    // softmax VJP, then the leaky slope back to the pre-acts
+                    let sdv = sv.s_dst[v * heads + kk];
+                    let mut acc = 0f32;
+                    for (j, e) in (e0..e1).enumerate() {
+                        let da = de_row[j * heads + kk];
+                        let de = alpha[e * heads + kk] * (da - g);
+                        let pre = sv.s_src[idx[e] as usize * heads + kk] + sdv;
+                        let dp = leaky_grad(pre, de);
+                        de_row[j * heads + kk] = dp;
+                        acc += dp;
+                    }
+                    let des = sa * (dsa - g);
+                    let es_pre = sv.s_src[v * heads + kk] + sdv;
+                    let dsp = leaky_grad(es_pre, des);
+                    des_blk[i * heads + kk] = dsp;
+                    dd_blk[i * heads + kk] = acc + dsp;
+                }
+                a_off += c * heads;
+            }
+        };
+        if par {
+            tasks.into_par_iter().for_each(body);
+        } else {
+            tasks.into_iter().for_each(body);
+        }
+    }
+
+    // --- phase B: src-major — dz message grads + ds_src per source row --
+    let mut dz = vec![0f32; rows * w];
+    let mut ds_src = vec![0f32; rows * heads];
+    {
+        let (s_off, s_dst_arr, _) = ei.src_csr();
+        let pos = ei.src_csr_dst_pos();
+        let body = |(blk, (dz_blk, dss_blk)): (usize, (&mut [f32], &mut [f32]))| {
+            let r0 = blk * RB;
+            for i in 0..dz_blk.len() / w {
+                let s = r0 + i;
+                let dzr = &mut dz_blk[i * w..(i + 1) * w];
+                let dsr = &mut dss_blk[i * heads..(i + 1) * heads];
+                for p in s_off[s] as usize..s_off[s + 1] as usize {
+                    let e = pos[p] as usize;
+                    let v = s_dst_arr[p] as usize;
+                    for kk in 0..heads {
+                        dsr[kk] += de_pre[e * heads + kk];
+                        let a = alpha[e * heads + kk];
+                        let dorow = &dout[v * w + kk * dh..v * w + kk * dh + dh];
+                        for d in 0..dh {
+                            dzr[kk * dh + d] += a * dorow[d];
+                        }
+                    }
+                }
+                if s < nb {
+                    for kk in 0..heads {
+                        dsr[kk] += des_pre[s * heads + kk];
+                        let sa = salpha[s * heads + kk];
+                        let dorow = &dout[s * w + kk * dh..s * w + kk * dh + dh];
+                        for d in 0..dh {
+                            dzr[kk * dh + d] += sa * dorow[d];
+                        }
+                    }
+                }
+            }
+        };
+        if par {
+            dz.par_chunks_mut(RB * w)
+                .zip(ds_src.par_chunks_mut(RB * heads))
+                .enumerate()
+                .for_each(body);
+        } else {
+            dz.chunks_mut(RB * w)
+                .zip(ds_src.chunks_mut(RB * heads))
+                .enumerate()
+                .for_each(body);
+        }
+    }
+
+    // --- score-projection backward (serial: O(rows · K · dh), tiny) -----
+    for n in 0..rows {
+        for kk in 0..heads {
+            let g = ds_src[n * heads + kk];
+            for d in 0..dh {
+                dasrc[kk * dh + d] += g * z[n * w + kk * dh + d];
+                dz[n * w + kk * dh + d] += g * asrc[kk * dh + d];
+            }
+        }
+    }
+    for v in 0..nb {
+        for kk in 0..heads {
+            let g = ds_dst[v * heads + kk];
+            for d in 0..dh {
+                dadst[kk * dh + d] += g * z[v * w + kk * dh + d];
+                dz[v * w + kk * dh + d] += g * adst[kk * dh + d];
+            }
+        }
+    }
+    dz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> EdgeIndex {
+        // edges into dst 0 from src 1 and 2, one padding edge; dst 1 empty
+        EdgeIndex::build(&[1, 2, 0], &[0, 0, 1], &[1.0, 1.0, 0.0], 3, 2).unwrap()
+    }
+
+    #[test]
+    fn rows_sum_to_one_and_empty_rows_self_attend() {
+        let ei = tiny_graph();
+        let s_src = [0.3f32, -0.2, 0.9, 0.1, -0.5, 0.7]; // [3, 2]
+        let s_dst = [0.1f32, 0.4, -0.3, 0.2]; // [2, 2]
+        let sm = edge_softmax(&ei, &s_src, &s_dst, 2);
+        for kk in 0..2 {
+            let total: f32 = (0..2).map(|e| sm.alpha[e * 2 + kk]).sum::<f32>() + sm.salpha[kk];
+            assert!((total - 1.0).abs() < 1e-6, "row 0 head {kk}: {total}");
+            // empty row: the self member takes all the mass, exactly
+            assert_eq!(sm.salpha[2 + kk], 1.0, "empty row head {kk}");
+        }
+    }
+
+    #[test]
+    fn scatter_matches_scalar_on_tiny_graph() {
+        let ei = tiny_graph();
+        let s_src = [0.3f32, -0.2, 0.9, 0.1, -0.5, 0.7];
+        let s_dst = [0.1f32, 0.4, -0.3, 0.2];
+        let sm = edge_softmax(&ei, &s_src, &s_dst, 2);
+        let sm2 = edge_softmax_scalar(&ei, &s_src, &s_dst, 2);
+        assert_eq!(sm.alpha, sm2.alpha);
+        assert_eq!(sm.salpha, sm2.salpha);
+        let z: Vec<f32> = (0..3 * 6).map(|i| (i as f32 - 8.0) * 0.25).collect(); // dh = 3
+        let blocked = attn_scatter(&ei, &sm, &z, 2, 3);
+        let scalar = attn_scatter_scalar(&ei, &sm, &z, 2, 3);
+        assert_eq!(blocked, scalar);
+        // the empty dst row is exactly its own (self-attended) message
+        assert_eq!(&blocked[6..12], &z[6..12]);
+    }
+}

@@ -1,0 +1,1098 @@
+//! Composable layer-op tape — the native interpreter's execution core.
+//!
+//! Every model family is compiled (at [`Tape`] build time, from its
+//! [`ArtifactSpec`]) into a linear list of **layer ops** ([`Op`]): each op
+//! has a forward that reads value slots, records what its VJP needs, and
+//! writes its output slot; the backward walks the same ops in reverse,
+//! turning output cotangents into input cotangents and accumulating
+//! parameter gradients. `run_model` is then uniformly "build op list →
+//! run tape forward → task loss → walk tape backward" for every family —
+//! adding a model means assembling ~40 lines of ops instead of deriving a
+//! bespoke 400-line fwd+bwd monolith.
+//!
+//! **Bit-compatibility contract.** The tape replays the exact per-element
+//! arithmetic chains of the hand-unrolled interpreters it replaced (and of
+//! `python/compile/models.py` they mirror): the same blocked kernel calls
+//! ([`gemm`], [`spmm`], [`attn`]) on the same operands in the same order,
+//! the same history-splice points, and — where several contributions meet
+//! in one cotangent buffer — the same accumulation grouping:
+//!
+//! * cotangent slots are **assign-then-add**: the first contribution
+//!   moves its freshly built vector in (no `0 +` prepended), later ones
+//!   add elementwise — matching the monoliths' `let dsrc = matmul_bt(…)`
+//!   assignments followed by `+=` accumulation;
+//! * accumulate-style VJPs (the CSR scatter-transpose, the GIN `(1+ε)`
+//!   self term) chain **in place** onto the shared buffer via
+//!   [`St::acc_buf`], never into a temporary that is added later — so a
+//!   Lipschitz pair's two branches extend one chain exactly like the old
+//!   shared `dsrc`;
+//! * a reg-paired segment's *input* cotangent collects in a zeroed local
+//!   buffer across both branch walks and merges into the producer's slot
+//!   once, at segment end — the monoliths' `dsrc` + `truncate`/`dh0 +=
+//!   dsrc` pattern, grouping included.
+//!
+//! The regression harness (`rust/tests/tape_regression.rs`) holds the
+//! pre-refactor interpreters verbatim and asserts `to_bits` equality of
+//! loss/grads/push/logits per step and of end-to-end training curves.
+//!
+//! **Segments and the Lipschitz pair.** Ops are grouped into contiguous
+//! [`Segment`]s. A segment with a [`Pair`] is one GNN layer whose
+//! forward may be re-run on noise-perturbed sources (Eq. 3 of the paper):
+//! when `reg_lambda > 0` (gas programs, reg-eligible layers) the segment
+//! runs again with its input perturbed, shadow values recorded per slot,
+//! and the squared output difference joins the loss; the backward then
+//! walks the segment twice (main branch first, then the shadow branch),
+//! both branches feeding the same parameter-gradient and segment-input
+//! buffers — exactly the old `branch(main); branch(perturbed)` scheme.
+
+use crate::backend::native::attn;
+use crate::backend::native::gemm;
+use crate::backend::native::models::{Params, StepCtx};
+use crate::backend::native::ops;
+use crate::backend::native::spmm;
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::StepOutputs;
+use anyhow::{ensure, Context, Result};
+
+/// Index of a value slot (an op input/output tensor) in the tape.
+pub(crate) type ValId = usize;
+
+/// A parameter reference resolved at tape-build time: index into the
+/// spec's ordered parameter list plus an element range, so stacked
+/// weights (gcnii's `w_stack`) slice per layer without copies.
+#[derive(Clone)]
+pub(crate) struct ParamRef {
+    idx: usize,
+    off: usize,
+    len: usize,
+}
+
+impl ParamRef {
+    fn get<'a>(&self, p: &Params<'a>) -> &'a [f32] {
+        &p.tensor(self.idx)[self.off..self.off + self.len]
+    }
+
+    fn grad<'g>(&self, grads: &'g mut [Vec<f32>]) -> &'g mut [f32] {
+        &mut grads[self.idx][self.off..self.off + self.len]
+    }
+}
+
+fn pref(spec: &ArtifactSpec, name: &str) -> Result<ParamRef> {
+    let idx = spec
+        .params
+        .iter()
+        .position(|ps| ps.name == name)
+        .with_context(|| format!("artifact {} has no param {name}", spec.name))?;
+    let len = spec.params[idx].shape.iter().product();
+    Ok(ParamRef { idx, off: 0, len })
+}
+
+/// The GIN layer's five parameters (MLP + learnable ε).
+pub(crate) struct GinRefs {
+    w1: ParamRef,
+    b1: ParamRef,
+    w2: ParamRef,
+    b2: ParamRef,
+    eps: ParamRef,
+}
+
+/// The GAT layer's projection + attention vectors (bias is its own op).
+pub(crate) struct GatRefs {
+    w: ParamRef,
+    asrc: ParamRef,
+    adst: ParamRef,
+}
+
+/// One layer op. Shapes are carried by the tape's value table; parameter
+/// operands are pre-resolved [`ParamRef`]s.
+pub(crate) enum Op {
+    /// `out = x @ W` over all of `x`'s rows. `needs_dx = false` skips the
+    /// input-cotangent GEMM for leaf inputs (the feature matrix).
+    Linear { x: ValId, w: ParamRef, out: ValId, needs_dx: bool },
+    /// `out = x + b` (bias broadcast over rows).
+    Bias { x: ValId, b: ParamRef, out: ValId },
+    /// `out = max(x, 0)`.
+    Relu { x: ValId, out: ValId },
+    /// `out = elu(x)` (GAT inter-layer activation).
+    Elu { x: ValId, out: ValId },
+    /// Symmetric-normalized propagation incl. the `1/(deg+1)` self loop:
+    /// `out[v] = Σ w·x[s] + self_w[v]·x[v]` — gcn_norm edge weights.
+    PropagateGcn { x: ValId, out: ValId },
+    /// gas programs: `out = concat(x, hist[layer])` — fresh in-batch rows
+    /// over the historical halo rows; gradients stop at the history.
+    HistSplice { x: ValId, layer: usize, out: ValId },
+    /// Teleport / initial-residual mix: `out = (1-α)·x + α·h0[..nb]`
+    /// (GCNII's ĥ, APPNP's propagation step).
+    InitialResidual { x: ValId, h0: ValId, alpha: f32, out: ValId },
+    /// GCNII identity mapping: `out = (1-β)·x + β·q`.
+    Mix { x: ValId, q: ValId, beta: f32, out: ValId },
+    /// Whole GIN layer: `MLP((1+ε)·x_self + Σ_{N(v)} x)` (pre-activation).
+    GinLayer { x: ValId, refs: GinRefs, out: ValId },
+    /// Whole multi-head GAT layer (edge-softmax attention, bias excluded).
+    GatLayer { x: ValId, heads: usize, dh: usize, refs: GatRefs, out: ValId, needs_dx: bool },
+}
+
+/// A reg-pairable segment's distinguished input/output.
+pub(crate) struct Pair {
+    input: ValId,
+    output: ValId,
+    /// Lipschitz-eligible: re-run on perturbed input when reg is active.
+    reg: bool,
+}
+
+/// A contiguous run of ops walked (and, when paired and reg is on,
+/// double-walked) as a unit.
+pub(crate) struct Segment {
+    start: usize,
+    end: usize,
+    pair: Option<Pair>,
+}
+
+/// A compiled model: ops, segments, value shapes, output markers.
+pub(crate) struct Tape {
+    ops: Vec<Op>,
+    segs: Vec<Segment>,
+    /// (rows, cols) per value slot.
+    shapes: Vec<(usize, usize)>,
+    x_val: ValId,
+    logits: ValId,
+    push_vals: Vec<ValId>,
+    uses_self_w: bool,
+    /// gcnii/gin compile the reg branch: the loss is always
+    /// `task + reg_lambda · reg` (monolith-exact even when reg is 0).
+    reg_model: bool,
+}
+
+// ---------------------------------------------------------------------------
+// tape builder
+// ---------------------------------------------------------------------------
+
+struct Builder {
+    ops: Vec<Op>,
+    segs: Vec<Segment>,
+    shapes: Vec<(usize, usize)>,
+    seg_start: usize,
+    push_vals: Vec<ValId>,
+    x_val: ValId,
+    uses_self_w: bool,
+}
+
+impl Builder {
+    fn new(rows: usize, f: usize) -> Builder {
+        Builder {
+            ops: Vec::new(),
+            segs: Vec::new(),
+            shapes: vec![(rows, f)],
+            seg_start: 0,
+            push_vals: Vec::new(),
+            x_val: 0,
+            uses_self_w: false,
+        }
+    }
+
+    fn val(&mut self, rows: usize, cols: usize) -> ValId {
+        self.shapes.push((rows, cols));
+        self.shapes.len() - 1
+    }
+
+    fn op(&mut self, op: Op) {
+        self.ops.push(op);
+    }
+
+    /// Close the current (unpaired) segment, if any ops are pending.
+    fn seal(&mut self) {
+        if self.ops.len() > self.seg_start {
+            self.segs.push(Segment { start: self.seg_start, end: self.ops.len(), pair: None });
+            self.seg_start = self.ops.len();
+        }
+    }
+
+    /// Close the current segment as a reg-pairable layer.
+    fn seal_pair(&mut self, input: ValId, output: ValId, reg: bool) {
+        self.segs.push(Segment {
+            start: self.seg_start,
+            end: self.ops.len(),
+            pair: Some(Pair { input, output, reg }),
+        });
+        self.seg_start = self.ops.len();
+    }
+
+    fn finish(mut self, logits: ValId, reg_model: bool) -> Tape {
+        self.seal();
+        Tape {
+            ops: self.ops,
+            segs: self.segs,
+            shapes: self.shapes,
+            x_val: self.x_val,
+            logits,
+            push_vals: self.push_vals,
+            uses_self_w: self.uses_self_w,
+            reg_model,
+        }
+    }
+}
+
+fn in_rows(spec: &ArtifactSpec) -> usize {
+    if spec.is_full() {
+        spec.nb
+    } else {
+        spec.nt
+    }
+}
+
+/// GCN (paper appendix §10): `h = P̂(h_src W) + b`, ReLU between layers.
+pub(crate) fn build_gcn(spec: &ArtifactSpec) -> Result<Tape> {
+    let full = spec.is_full();
+    let rows = in_rows(spec);
+    let (nb, big_l) = (spec.nb, spec.layers);
+    let mut dims = vec![spec.h; big_l + 1];
+    dims[0] = spec.f;
+    dims[big_l] = spec.c;
+    let mut b = Builder::new(rows, spec.f);
+    b.uses_self_w = true;
+    let mut cur = b.x_val;
+    let mut logits = b.x_val;
+    for l in 0..big_l {
+        let dout = dims[l + 1];
+        let v_z = b.val(rows, dout);
+        b.op(Op::Linear { x: cur, w: pref(spec, &format!("w{l}"))?, out: v_z, needs_dx: l > 0 });
+        let v_p = b.val(nb, dout);
+        b.op(Op::PropagateGcn { x: v_z, out: v_p });
+        let v_pre = b.val(nb, dout);
+        b.op(Op::Bias { x: v_p, b: pref(spec, &format!("b{l}"))?, out: v_pre });
+        if l + 1 < big_l {
+            let v_h = b.val(nb, dout);
+            b.op(Op::Relu { x: v_pre, out: v_h });
+            b.push_vals.push(v_h);
+            cur = if full {
+                v_h
+            } else {
+                let v_s = b.val(spec.nt, dout);
+                b.op(Op::HistSplice { x: v_h, layer: l, out: v_s });
+                v_s
+            };
+        } else {
+            logits = v_pre;
+        }
+    }
+    Ok(b.finish(logits, false))
+}
+
+/// GCNII: `h_{l+1} = ReLU((1-β_l)ĥ + β_l ĥ W_l)`, `ĥ = (1-α) P̂ srcs + α h0`.
+pub(crate) fn build_gcnii(spec: &ArtifactSpec, alpha: f32, lam: f32) -> Result<Tape> {
+    let full = spec.is_full();
+    let rows = in_rows(spec);
+    let (nb, h, big_l) = (spec.nb, spec.h, spec.layers);
+    let betas: Vec<f32> = (1..=big_l).map(|l| (lam / l as f32 + 1.0).ln()).collect();
+    let mut b = Builder::new(rows, spec.f);
+    b.uses_self_w = true;
+    let v_t0p = b.val(rows, h);
+    b.op(Op::Linear { x: b.x_val, w: pref(spec, "w_in")?, out: v_t0p, needs_dx: false });
+    let v_t0 = b.val(rows, h);
+    b.op(Op::Bias { x: v_t0p, b: pref(spec, "b_in")?, out: v_t0 });
+    let v_h0 = b.val(rows, h);
+    b.op(Op::Relu { x: v_t0, out: v_h0 });
+    b.seal();
+    let ws = pref(spec, "w_stack")?;
+    ensure!(ws.len == big_l * h * h, "w_stack len {} != L*h*h ({})", ws.len, spec.name);
+    let mut prev = v_h0;
+    for l in 0..big_l {
+        // layer-1 halo sources are the exact h0 rows (no staleness);
+        // layers 2..L read halo rows from history
+        let input = if l == 0 {
+            v_h0
+        } else if full {
+            prev
+        } else {
+            let v_s = b.val(spec.nt, h);
+            b.op(Op::HistSplice { x: prev, layer: l - 1, out: v_s });
+            b.seal();
+            v_s
+        };
+        let v_prop = b.val(nb, h);
+        b.op(Op::PropagateGcn { x: input, out: v_prop });
+        let v_hn = b.val(nb, h);
+        b.op(Op::InitialResidual { x: v_prop, h0: v_h0, alpha, out: v_hn });
+        let v_q = b.val(nb, h);
+        let wl = ParamRef { idx: ws.idx, off: l * h * h, len: h * h };
+        b.op(Op::Linear { x: v_hn, w: wl, out: v_q, needs_dx: true });
+        let v_pre = b.val(nb, h);
+        b.op(Op::Mix { x: v_hn, q: v_q, beta: betas[l], out: v_pre });
+        let v_out = b.val(nb, h);
+        b.op(Op::Relu { x: v_pre, out: v_out });
+        b.seal_pair(input, v_out, true);
+        if l + 1 < big_l {
+            b.push_vals.push(v_out);
+        }
+        prev = v_out;
+    }
+    let v_lg = b.val(nb, spec.c);
+    b.op(Op::Linear { x: prev, w: pref(spec, "w_out")?, out: v_lg, needs_dx: true });
+    let v_logits = b.val(nb, spec.c);
+    b.op(Op::Bias { x: v_lg, b: pref(spec, "b_out")?, out: v_logits });
+    Ok(b.finish(v_logits, true))
+}
+
+/// GIN: `h = MLP((1+ε) h_v + Σ_{w∈N(v)} h_w)`, ReLU between layers,
+/// linear head. The Lipschitz pair covers layers 1.. (H-dim inputs).
+pub(crate) fn build_gin(spec: &ArtifactSpec) -> Result<Tape> {
+    let full = spec.is_full();
+    let rows = in_rows(spec);
+    let (nb, h, big_l) = (spec.nb, spec.h, spec.layers);
+    let mut dims = vec![h; big_l + 1];
+    dims[0] = spec.f;
+    let mut b = Builder::new(rows, spec.f);
+    let mut cur = b.x_val;
+    let mut h_last = b.x_val;
+    for l in 0..big_l {
+        let refs = GinRefs {
+            w1: pref(spec, &format!("mlp{l}_w1"))?,
+            b1: pref(spec, &format!("mlp{l}_b1"))?,
+            w2: pref(spec, &format!("mlp{l}_w2"))?,
+            b2: pref(spec, &format!("mlp{l}_b2"))?,
+            eps: pref(spec, &format!("eps{l}"))?,
+        };
+        b.seal();
+        let v_o = b.val(nb, h);
+        b.op(Op::GinLayer { x: cur, refs, out: v_o });
+        // reg only from layer 1 on: layer-0 inputs are F-dim features
+        b.seal_pair(cur, v_o, l > 0);
+        let v_h = b.val(nb, h);
+        b.op(Op::Relu { x: v_o, out: v_h });
+        if l + 1 < big_l {
+            b.push_vals.push(v_h);
+            cur = if full {
+                v_h
+            } else {
+                let v_s = b.val(spec.nt, dims[l + 1]);
+                b.op(Op::HistSplice { x: v_h, layer: l, out: v_s });
+                v_s
+            };
+        } else {
+            h_last = v_h;
+        }
+    }
+    let v_lg = b.val(nb, spec.c);
+    b.op(Op::Linear { x: h_last, w: pref(spec, "head_w")?, out: v_lg, needs_dx: true });
+    let v_logits = b.val(nb, spec.c);
+    b.op(Op::Bias { x: v_lg, b: pref(spec, "head_b")?, out: v_logits });
+    Ok(b.finish(v_logits, true))
+}
+
+/// APPNP: predict with an MLP (exact for batch and halo rows), then K
+/// teleport propagation steps over the shared [`Op::PropagateGcn`] /
+/// [`Op::InitialResidual`] ops. `hist_dim = C`.
+pub(crate) fn build_appnp(spec: &ArtifactSpec, alpha: f32) -> Result<Tape> {
+    let full = spec.is_full();
+    let rows = in_rows(spec);
+    let (nb, h, c, big_l) = (spec.nb, spec.h, spec.c, spec.layers);
+    let mut b = Builder::new(rows, spec.f);
+    b.uses_self_w = true;
+    let v_u = b.val(rows, h);
+    b.op(Op::Linear { x: b.x_val, w: pref(spec, "mlp_w1")?, out: v_u, needs_dx: false });
+    let v_ub = b.val(rows, h);
+    b.op(Op::Bias { x: v_u, b: pref(spec, "mlp_b1")?, out: v_ub });
+    let v_z = b.val(rows, h);
+    b.op(Op::Relu { x: v_ub, out: v_z });
+    let v_o = b.val(rows, c);
+    b.op(Op::Linear { x: v_z, w: pref(spec, "mlp_w2")?, out: v_o, needs_dx: true });
+    let v_h0 = b.val(rows, c);
+    b.op(Op::Bias { x: v_o, b: pref(spec, "mlp_b2")?, out: v_h0 });
+    let mut prev = v_h0;
+    for l in 0..big_l {
+        // step-0 sources are exact h0 rows for the halo too (no staleness)
+        let input = if l == 0 {
+            v_h0
+        } else if full {
+            prev
+        } else {
+            let v_s = b.val(spec.nt, c);
+            b.op(Op::HistSplice { x: prev, layer: l - 1, out: v_s });
+            v_s
+        };
+        let v_prop = b.val(nb, c);
+        b.op(Op::PropagateGcn { x: input, out: v_prop });
+        let v_h = b.val(nb, c);
+        b.op(Op::InitialResidual { x: v_prop, h0: v_h0, alpha, out: v_h });
+        if l + 1 < big_l {
+            b.push_vals.push(v_h);
+        }
+        prev = v_h;
+    }
+    Ok(b.finish(prev, false))
+}
+
+/// GAT: multi-head edge-softmax attention layers ([`attn`]), ELU between
+/// layers, single-head output layer. Head counts are read off the
+/// artifact's `asrc{l}` parameter shapes, so compiled manifests with any
+/// head configuration interpret correctly.
+pub(crate) fn build_gat(spec: &ArtifactSpec) -> Result<Tape> {
+    let full = spec.is_full();
+    let rows = in_rows(spec);
+    let (nb, big_l) = (spec.nb, spec.layers);
+    let mut dims = vec![spec.h; big_l + 1];
+    dims[0] = spec.f;
+    dims[big_l] = spec.c;
+    let mut b = Builder::new(rows, spec.f);
+    let mut cur = b.x_val;
+    let mut logits = b.x_val;
+    for l in 0..big_l {
+        let asrc = pref(spec, &format!("asrc{l}"))?;
+        let shape = &spec.params[asrc.idx].shape;
+        ensure!(shape.len() == 2, "asrc{l} must be [heads, dh] ({})", spec.name);
+        let (heads, dh) = (shape[0], shape[1]);
+        ensure!(
+            heads * dh == dims[l + 1],
+            "gat layer {l}: {heads} heads x {dh} != out dim {} ({})",
+            dims[l + 1],
+            spec.name
+        );
+        let refs = GatRefs {
+            w: pref(spec, &format!("w{l}"))?,
+            asrc,
+            adst: pref(spec, &format!("adst{l}"))?,
+        };
+        ensure!(
+            refs.w.len == dims[l] * heads * dh,
+            "gat layer {l}: w{l} len {} != {}x{} ({})",
+            refs.w.len,
+            dims[l],
+            heads * dh,
+            spec.name
+        );
+        let v_g = b.val(nb, heads * dh);
+        b.op(Op::GatLayer { x: cur, heads, dh, refs, out: v_g, needs_dx: l > 0 });
+        let v_b = b.val(nb, heads * dh);
+        b.op(Op::Bias { x: v_g, b: pref(spec, &format!("b{l}"))?, out: v_b });
+        if l + 1 < big_l {
+            let v_e = b.val(nb, heads * dh);
+            b.op(Op::Elu { x: v_b, out: v_e });
+            b.push_vals.push(v_e);
+            cur = if full {
+                v_e
+            } else {
+                let v_s = b.val(spec.nt, heads * dh);
+                b.op(Op::HistSplice { x: v_e, layer: l, out: v_s });
+                v_s
+            };
+        } else {
+            logits = v_b;
+        }
+    }
+    Ok(b.finish(logits, false))
+}
+
+// ---------------------------------------------------------------------------
+// tape execution
+// ---------------------------------------------------------------------------
+
+/// Per-op saved tensors a composite op's VJP needs beyond its value slots.
+enum Saved {
+    None,
+    Gin { pre: Vec<f32>, u: Vec<f32>, a: Vec<f32> },
+    Gat(attn::GatSaved),
+}
+
+/// Immutable execution environment: the step context, parameter views,
+/// the tape, and the (precomputed) self-loop weights.
+struct Env<'r, 'a> {
+    cx: &'r StepCtx<'a>,
+    p: &'r Params<'a>,
+    tape: &'r Tape,
+    self_w: Vec<f32>,
+}
+
+/// Mutable tape state: main + shadow value tables, saved tensors, the
+/// cotangent tables, and the current segment's shared input buffer.
+struct St {
+    vals: Vec<Option<Vec<f32>>>,
+    shadow: Vec<Option<Vec<f32>>>,
+    saved: Vec<Saved>,
+    saved_sh: Vec<Saved>,
+    pin: Vec<Option<Vec<f32>>>,
+    dvals: Vec<Option<Vec<f32>>>,
+    dshadow: Vec<Option<Vec<f32>>>,
+    local: Option<(ValId, Vec<f32>)>,
+    cur_seg: usize,
+}
+
+impl St {
+    fn new(n_vals: usize, n_ops: usize, n_segs: usize) -> St {
+        St {
+            vals: (0..n_vals).map(|_| None).collect(),
+            shadow: (0..n_vals).map(|_| None).collect(),
+            saved: (0..n_ops).map(|_| Saved::None).collect(),
+            saved_sh: (0..n_ops).map(|_| Saved::None).collect(),
+            pin: (0..n_segs).map(|_| None).collect(),
+            dvals: (0..n_vals).map(|_| None).collect(),
+            dshadow: (0..n_vals).map(|_| None).collect(),
+            local: None,
+            cur_seg: 0,
+        }
+    }
+
+    /// Read a value slot. During a shadow pass the segment's distinguished
+    /// input resolves to the perturbed copy *only* for the segment's first
+    /// op (the layer-source consumer — e.g. the teleport term keeps
+    /// reading the unperturbed h0); other in-segment slots resolve to
+    /// their shadow values, everything else to the main table.
+    fn src_val<'s>(&'s self, env: &'s Env, oi: usize, v: ValId, sh: bool) -> &'s [f32] {
+        if sh {
+            let seg = &env.tape.segs[self.cur_seg];
+            if oi == seg.start {
+                if let Some(pair) = &seg.pair {
+                    if pair.input == v {
+                        if let Some(pin) = &self.pin[self.cur_seg] {
+                            return pin;
+                        }
+                    }
+                }
+            }
+            if let Some(s) = &self.shadow[v] {
+                return s;
+            }
+        }
+        if v == env.tape.x_val {
+            return env.cx.x;
+        }
+        self.vals[v].as_ref().expect("tape value not yet computed")
+    }
+
+    fn set(&mut self, v: ValId, data: Vec<f32>, sh: bool) {
+        if sh {
+            self.shadow[v] = Some(data);
+        } else {
+            self.vals[v] = Some(data);
+        }
+    }
+
+    fn set_saved(&mut self, oi: usize, s: Saved, sh: bool) {
+        if sh {
+            self.saved_sh[oi] = s;
+        } else {
+            self.saved[oi] = s;
+        }
+    }
+
+    fn get_saved(&self, oi: usize, sh: bool) -> &Saved {
+        if sh {
+            &self.saved_sh[oi]
+        } else {
+            &self.saved[oi]
+        }
+    }
+
+    /// Take (consume) the cotangent of an op's output slot.
+    fn take_d(&mut self, v: ValId, sh: bool) -> Vec<f32> {
+        if sh {
+            if let Some(d) = self.dshadow[v].take() {
+                return d;
+            }
+        }
+        self.dvals[v].take().expect("missing output cotangent")
+    }
+
+    /// Route a contribution to `v`'s cotangent: the segment-local input
+    /// buffer when `v` is the paired input consumed by the segment's first
+    /// op, the shadow table for shadow-produced slots, the main table
+    /// otherwise. First contribution moves in; later ones add.
+    fn contribute(&mut self, v: ValId, data: Vec<f32>, at_seg_start: bool, sh: bool) {
+        if at_seg_start {
+            if let Some((lv, buf)) = &mut self.local {
+                if *lv == v {
+                    for (b, d) in buf.iter_mut().zip(data.iter()) {
+                        *b += d;
+                    }
+                    return;
+                }
+            }
+        }
+        let slot = if sh && self.shadow[v].is_some() {
+            &mut self.dshadow[v]
+        } else {
+            &mut self.dvals[v]
+        };
+        match slot {
+            None => *slot = Some(data),
+            Some(buf) => {
+                for (b, d) in buf.iter_mut().zip(data.iter()) {
+                    *b += d;
+                }
+            }
+        }
+    }
+
+    /// Borrow `v`'s cotangent buffer for in-place accumulation (creating
+    /// it zeroed if absent) — the shared-chain path for scatter-style
+    /// VJPs. Routing rules match [`St::contribute`].
+    fn acc_buf(&mut self, v: ValId, len: usize, at_seg_start: bool, sh: bool) -> &mut [f32] {
+        let use_local = at_seg_start && matches!(&self.local, Some((lv, _)) if *lv == v);
+        if use_local {
+            return &mut self.local.as_mut().expect("local buffer").1;
+        }
+        let slot = if sh && self.shadow[v].is_some() {
+            &mut self.dshadow[v]
+        } else {
+            &mut self.dvals[v]
+        };
+        slot.get_or_insert_with(|| vec![0f32; len])
+    }
+}
+
+fn zero_grads(spec: &ArtifactSpec) -> Vec<Vec<f32>> {
+    spec.params
+        .iter()
+        .map(|p| vec![0f32; p.shape.iter().product()])
+        .collect()
+}
+
+/// Concatenate fresh in-batch rows with the halo history rows of layer
+/// `l` into one `[NT, d]` source tensor (gas programs).
+pub(crate) fn concat_sources(
+    h_batch: &[f32],
+    hist_l: &[f32],
+    nb: usize,
+    nh: usize,
+    d: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; (nb + nh) * d];
+    out[..nb * d].copy_from_slice(&h_batch[..nb * d]);
+    out[nb * d..].copy_from_slice(&hist_l[..nh * d]);
+    out
+}
+
+/// Assemble the flat `[(L-1) * NB * hd]` push tensor from per-layer
+/// in-batch embeddings.
+fn stack_push(layers: &[&[f32]], nb: usize, hd: usize) -> Vec<f32> {
+    let mut out = vec![0f32; layers.len() * nb * hd];
+    for (l, h) in layers.iter().enumerate() {
+        out[l * nb * hd..(l + 1) * nb * hd].copy_from_slice(&h[..nb * hd]);
+    }
+    out
+}
+
+fn fwd_op(st: &mut St, env: &Env, oi: usize, sh: bool) {
+    let tape = env.tape;
+    let spec = env.cx.spec;
+    let nb = spec.nb;
+    match &tape.ops[oi] {
+        Op::Linear { x, w, out, .. } => {
+            let (rows, din) = tape.shapes[*x];
+            let dout = tape.shapes[*out].1;
+            let z = gemm::matmul(st.src_val(env, oi, *x, sh), rows, din, w.get(env.p), dout);
+            st.set(*out, z, sh);
+        }
+        Op::Bias { x, b, out } => {
+            let (rows, cols) = tape.shapes[*out];
+            let mut o = st.src_val(env, oi, *x, sh).to_vec();
+            ops::add_bias(&mut o, rows, cols, b.get(env.p));
+            st.set(*out, o, sh);
+        }
+        Op::Relu { x, out } => {
+            let o = ops::relu(st.src_val(env, oi, *x, sh));
+            st.set(*out, o, sh);
+        }
+        Op::Elu { x, out } => {
+            let o = ops::elu(st.src_val(env, oi, *x, sh));
+            st.set(*out, o, sh);
+        }
+        Op::PropagateGcn { x, out } => {
+            let d = tape.shapes[*out].1;
+            let z = st.src_val(env, oi, *x, sh);
+            let mut pre = spmm::scatter(env.cx.edges, z, d);
+            for v in 0..nb {
+                let zr = &z[v * d..v * d + d];
+                let pr = &mut pre[v * d..v * d + d];
+                for j in 0..d {
+                    pr[j] += env.self_w[v] * zr[j];
+                }
+            }
+            st.set(*out, pre, sh);
+        }
+        Op::HistSplice { x, layer, out } => {
+            let d = tape.shapes[*out].1;
+            let o = concat_sources(
+                st.src_val(env, oi, *x, sh),
+                env.cx.hist_layer(*layer),
+                nb,
+                spec.nh,
+                d,
+            );
+            st.set(*out, o, sh);
+        }
+        Op::InitialResidual { x, h0, alpha, out } => {
+            let (rows, cols) = tape.shapes[*out];
+            let n = rows * cols;
+            let px = st.src_val(env, oi, *x, sh);
+            let h0v = st.src_val(env, oi, *h0, sh);
+            let mut o = vec![0f32; n];
+            for i in 0..n {
+                o[i] = (1.0 - alpha) * px[i] + alpha * h0v[i];
+            }
+            st.set(*out, o, sh);
+        }
+        Op::Mix { x, q, beta, out } => {
+            let (rows, cols) = tape.shapes[*out];
+            let n = rows * cols;
+            let xv = st.src_val(env, oi, *x, sh);
+            let qv = st.src_val(env, oi, *q, sh);
+            let mut o = vec![0f32; n];
+            for i in 0..n {
+                o[i] = (1.0 - beta) * xv[i] + beta * qv[i];
+            }
+            st.set(*out, o, sh);
+        }
+        Op::GinLayer { x, refs, out } => {
+            let din = tape.shapes[*x].1;
+            let h = tape.shapes[*out].1;
+            let eps = refs.eps.get(env.p)[0];
+            let (pre, u, a, o) = {
+                let src = st.src_val(env, oi, *x, sh);
+                let mut pre = spmm::scatter(env.cx.edges, src, din);
+                for i in 0..nb * din {
+                    pre[i] += (1.0 + eps) * src[i];
+                }
+                let mut u = gemm::matmul(&pre, nb, din, refs.w1.get(env.p), h);
+                ops::add_bias(&mut u, nb, h, refs.b1.get(env.p));
+                let a = ops::relu(&u);
+                let mut o = gemm::matmul(&a, nb, h, refs.w2.get(env.p), h);
+                ops::add_bias(&mut o, nb, h, refs.b2.get(env.p));
+                (pre, u, a, o)
+            };
+            st.set_saved(oi, Saved::Gin { pre, u, a }, sh);
+            st.set(*out, o, sh);
+        }
+        Op::GatLayer { x, heads, dh, refs, out, .. } => {
+            let (rows, din) = tape.shapes[*x];
+            let (o, sv) = {
+                let src = st.src_val(env, oi, *x, sh);
+                attn::gat_fwd(
+                    env.cx.edges,
+                    src,
+                    rows,
+                    din,
+                    refs.w.get(env.p),
+                    refs.asrc.get(env.p),
+                    refs.adst.get(env.p),
+                    *heads,
+                    *dh,
+                )
+            };
+            st.set_saved(oi, Saved::Gat(sv), sh);
+            st.set(*out, o, sh);
+        }
+    }
+}
+
+fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
+    let tape = env.tape;
+    let spec = env.cx.spec;
+    let nb = spec.nb;
+    let seg_start = tape.segs[st.cur_seg].start == oi;
+    match &tape.ops[oi] {
+        Op::Linear { x, w, out, needs_dx } => {
+            let dout = st.take_d(*out, sh);
+            let (rows, din) = tape.shapes[*x];
+            let dcols = tape.shapes[*out].1;
+            {
+                let a = st.src_val(env, oi, *x, sh);
+                gemm::matmul_at_b_acc(a, rows, din, &dout, dcols, w.grad(grads));
+            }
+            if *needs_dx {
+                let dx = gemm::matmul_bt(&dout, rows, dcols, w.get(env.p), din);
+                st.contribute(*x, dx, seg_start, sh);
+            }
+        }
+        Op::Bias { x, b, out } => {
+            let dout = st.take_d(*out, sh);
+            let (rows, cols) = tape.shapes[*out];
+            ops::colsum_acc(&dout, rows, cols, b.grad(grads));
+            st.contribute(*x, dout, seg_start, sh);
+        }
+        Op::Relu { x, out } => {
+            let dout = st.take_d(*out, sh);
+            let dx = ops::relu_bwd(&dout, st.src_val(env, oi, *x, sh));
+            st.contribute(*x, dx, seg_start, sh);
+        }
+        Op::Elu { x, out } => {
+            let dout = st.take_d(*out, sh);
+            let dx = ops::elu_bwd(&dout, st.src_val(env, oi, *x, sh));
+            st.contribute(*x, dx, seg_start, sh);
+        }
+        Op::PropagateGcn { x, out } => {
+            let dout = st.take_d(*out, sh);
+            let d = tape.shapes[*out].1;
+            let (rows_in, _) = tape.shapes[*x];
+            let buf = st.acc_buf(*x, rows_in * d, seg_start, sh);
+            spmm::scatter_t_acc(env.cx.edges, &dout, d, buf);
+            for v in 0..nb {
+                let dr = &dout[v * d..v * d + d];
+                let br = &mut buf[v * d..v * d + d];
+                for j in 0..d {
+                    br[j] += env.self_w[v] * dr[j];
+                }
+            }
+        }
+        Op::HistSplice { x, out, .. } => {
+            // history rows are inputs: the gradient stops at the batch rows
+            let mut dout = st.take_d(*out, sh);
+            let (rows_x, d) = tape.shapes[*x];
+            dout.truncate(rows_x * d);
+            st.contribute(*x, dout, seg_start, sh);
+        }
+        Op::InitialResidual { x, h0, alpha, out } => {
+            let mut dout = st.take_d(*out, sh);
+            let n = dout.len();
+            {
+                let (h0r, h0c) = tape.shapes[*h0];
+                let buf = st.acc_buf(*h0, h0r * h0c, seg_start, sh);
+                for i in 0..n {
+                    buf[i] += alpha * dout[i];
+                }
+            }
+            for v in dout.iter_mut() {
+                *v *= 1.0 - alpha;
+            }
+            st.contribute(*x, dout, seg_start, sh);
+        }
+        Op::Mix { x, q, beta, out } => {
+            let dout = st.take_d(*out, sh);
+            let n = dout.len();
+            let mut dq = vec![0f32; n];
+            for i in 0..n {
+                dq[i] = beta * dout[i];
+            }
+            st.contribute(*q, dq, seg_start, sh);
+            let mut dx = vec![0f32; n];
+            for i in 0..n {
+                dx[i] = (1.0 - beta) * dout[i];
+            }
+            st.contribute(*x, dx, seg_start, sh);
+        }
+        Op::GinLayer { x, refs, out } => {
+            let do_ = st.take_d(*out, sh);
+            let din = tape.shapes[*x].1;
+            let (rows_in, _) = tape.shapes[*x];
+            let h = tape.shapes[*out].1;
+            let eps = refs.eps.get(env.p)[0];
+            let dpre = {
+                let Saved::Gin { pre, u, a } = st.get_saved(oi, sh) else {
+                    unreachable!("gin layer without saved tensors")
+                };
+                gemm::matmul_at_b_acc(a, nb, h, &do_, h, refs.w2.grad(grads));
+                ops::colsum_acc(&do_, nb, h, refs.b2.grad(grads));
+                let da = gemm::matmul_bt(&do_, nb, h, refs.w2.get(env.p), h);
+                let du = ops::relu_bwd(&da, u);
+                gemm::matmul_at_b_acc(pre, nb, din, &du, h, refs.w1.grad(grads));
+                ops::colsum_acc(&du, nb, h, refs.b1.grad(grads));
+                gemm::matmul_bt(&du, nb, h, refs.w1.get(env.p), din)
+            };
+            let deps = {
+                let src = st.src_val(env, oi, *x, sh);
+                let mut acc = 0f32;
+                for i in 0..nb * din {
+                    acc += dpre[i] * src[i];
+                }
+                acc
+            };
+            refs.eps.grad(grads)[0] += deps;
+            let buf = st.acc_buf(*x, rows_in * din, seg_start, sh);
+            for i in 0..nb * din {
+                buf[i] += (1.0 + eps) * dpre[i];
+            }
+            spmm::scatter_t_acc(env.cx.edges, &dpre, din, buf);
+        }
+        Op::GatLayer { x, heads, dh, refs, out, needs_dx } => {
+            let dout = st.take_d(*out, sh);
+            let (rows, din) = tape.shapes[*x];
+            // attention-vector grads land in temporaries (two &mut slices
+            // of `grads` can't be borrowed at once), then fold in
+            let mut dasrc = vec![0f32; refs.asrc.len];
+            let mut dadst = vec![0f32; refs.adst.len];
+            let dz = {
+                let Saved::Gat(sv) = st.get_saved(oi, sh) else {
+                    unreachable!("gat layer without saved tensors")
+                };
+                attn::gat_bwd(
+                    env.cx.edges,
+                    &dout,
+                    sv,
+                    refs.asrc.get(env.p),
+                    refs.adst.get(env.p),
+                    &mut dasrc,
+                    &mut dadst,
+                    *heads,
+                    *dh,
+                    rows,
+                )
+            };
+            for (g, v) in refs.asrc.grad(grads).iter_mut().zip(dasrc.iter()) {
+                *g += v;
+            }
+            for (g, v) in refs.adst.grad(grads).iter_mut().zip(dadst.iter()) {
+                *g += v;
+            }
+            let w_cols = heads * dh;
+            {
+                let a = st.src_val(env, oi, *x, sh);
+                gemm::matmul_at_b_acc(a, rows, din, &dz, w_cols, refs.w.grad(grads));
+            }
+            if *needs_dx {
+                let dx = gemm::matmul_bt(&dz, rows, w_cols, refs.w.get(env.p), din);
+                st.contribute(*x, dx, seg_start, sh);
+            }
+        }
+    }
+}
+
+/// Execute a built tape: forward over all segments (shadow branches for
+/// reg-paired layers when the Lipschitz regularizer is active), task loss
+/// on the logits, then the reverse walk producing gradients and the push
+/// tensor — `StepOutputs` in the compiled artifacts' output order.
+pub(crate) fn run_tape(cx: &StepCtx, p: &Params, tape: &Tape) -> Result<StepOutputs> {
+    let spec = cx.spec;
+    let nb = spec.nb;
+    let env = Env {
+        cx,
+        p,
+        tape,
+        self_w: if tape.uses_self_w { cx.self_weights() } else { Vec::new() },
+    };
+    let mut st = St::new(tape.shapes.len(), tape.ops.len(), tape.segs.len());
+    let reg_active = cx.reg_on();
+    let mut reg = 0f32;
+
+    // -- forward ----------------------------------------------------------
+    for si in 0..tape.segs.len() {
+        st.cur_seg = si;
+        let seg = &tape.segs[si];
+        for oi in seg.start..seg.end {
+            fwd_op(&mut st, &env, oi, false);
+        }
+        if let Some(pair) = &seg.pair {
+            if pair.reg && reg_active {
+                let (rows, cols) = tape.shapes[pair.input];
+                let pin = cx.perturb(st.src_val(&env, seg.start, pair.input, false), rows, cols);
+                st.pin[si] = Some(pin);
+                for oi in seg.start..seg.end {
+                    fwd_op(&mut st, &env, oi, true);
+                }
+                let out = st.vals[pair.output].as_ref().expect("segment output");
+                let out_p = st.shadow[pair.output].as_ref().expect("shadow output");
+                let mut acc = 0f64;
+                for i in 0..out.len() {
+                    let d = (out[i] - out_p[i]) as f64;
+                    acc += d * d;
+                }
+                reg += (acc / nb as f64) as f32;
+            }
+        }
+    }
+    let logits = st.vals[tape.logits].as_ref().expect("logits")[..nb * spec.c].to_vec();
+    let push_layers: Vec<&[f32]> = tape
+        .push_vals
+        .iter()
+        .map(|&v| st.vals[v].as_ref().expect("push value").as_slice())
+        .collect();
+    let push = stack_push(&push_layers, nb, spec.hist_dim);
+
+    // -- loss + backward --------------------------------------------------
+    let (task, dlogits) = cx.task_loss(&logits);
+    let loss = if tape.reg_model { task + cx.reg_lambda * reg } else { task };
+    let mut grads = zero_grads(spec);
+    st.dvals[tape.logits] = Some(dlogits);
+    for si in (0..tape.segs.len()).rev() {
+        st.cur_seg = si;
+        let seg = &tape.segs[si];
+        let mut pair_active = false;
+        if let Some(pair) = &seg.pair {
+            if pair.reg && reg_active {
+                pair_active = true;
+                // inject the Lipschitz gradient into both branch outputs
+                let coef = cx.reg_lambda * 2.0 / nb as f32;
+                let out = st.vals[pair.output].as_ref().expect("segment output");
+                let out_p = st.shadow[pair.output].as_ref().expect("shadow output");
+                let dout = st.dvals[pair.output].as_mut().expect("output cotangent");
+                let mut dp = vec![0f32; out.len()];
+                for i in 0..out.len() {
+                    let g = coef * (out[i] - out_p[i]);
+                    dout[i] += g;
+                    dp[i] = -g;
+                }
+                st.dshadow[pair.output] = Some(dp);
+            }
+            let (rows, cols) = tape.shapes[pair.input];
+            st.local = Some((pair.input, vec![0f32; rows * cols]));
+        }
+        for oi in (seg.start..seg.end).rev() {
+            bwd_op(&mut st, &env, &mut grads, oi, false);
+        }
+        if pair_active {
+            for oi in (seg.start..seg.end).rev() {
+                bwd_op(&mut st, &env, &mut grads, oi, true);
+            }
+        }
+        if let Some((v, buf)) = st.local.take() {
+            match &mut st.dvals[v] {
+                None => st.dvals[v] = Some(buf),
+                Some(d) => {
+                    for (a, b) in d.iter_mut().zip(buf.iter()) {
+                        *a += b;
+                    }
+                }
+            }
+        }
+    }
+    Ok(StepOutputs { loss, grads, push, logits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::registry;
+
+    #[test]
+    fn tapes_build_for_every_native_model() {
+        for (model, layers) in [("gcn", 2), ("gcnii", 4), ("gin", 3), ("gat", 2), ("appnp", 4)] {
+            for program in ["gas", "full"] {
+                let spec = registry::test_spec(model, layers, program, 3, 2, 8, 4, 8, 3, "ce");
+                let tape = match model {
+                    "gcn" => build_gcn(&spec),
+                    "gcnii" => build_gcnii(&spec, 0.1, 1.0),
+                    "gin" => build_gin(&spec),
+                    "gat" => build_gat(&spec),
+                    "appnp" => build_appnp(&spec, 0.1),
+                    _ => unreachable!(),
+                }
+                .unwrap_or_else(|e| panic!("{model}/{program}: {e:#}"));
+                // push slots cover L-1 layers; ops partition into segments
+                assert_eq!(tape.push_vals.len(), layers - 1, "{model}/{program}");
+                assert_eq!(tape.segs.last().unwrap().end, tape.ops.len(), "{model}/{program}");
+                let mut covered = 0;
+                for s in &tape.segs {
+                    assert_eq!(s.start, covered, "{model}/{program}: segment gap");
+                    covered = s.end;
+                }
+                // logits slot is [nb, c]
+                assert_eq!(tape.shapes[tape.logits], (3, 3), "{model}/{program}");
+            }
+        }
+    }
+
+    #[test]
+    fn reg_models_pair_their_layers() {
+        let spec = registry::test_spec("gcnii", 4, "gas", 3, 2, 8, 4, 8, 3, "ce");
+        let tape = build_gcnii(&spec, 0.1, 1.0).unwrap();
+        let pairs: Vec<bool> =
+            tape.segs.iter().filter_map(|s| s.pair.as_ref()).map(|p| p.reg).collect();
+        assert_eq!(pairs, vec![true; 4], "every gcnii layer is reg-eligible");
+        let spec = registry::test_spec("gin", 3, "gas", 3, 2, 8, 4, 8, 3, "ce");
+        let tape = build_gin(&spec).unwrap();
+        let pairs: Vec<bool> =
+            tape.segs.iter().filter_map(|s| s.pair.as_ref()).map(|p| p.reg).collect();
+        assert_eq!(pairs, vec![false, true, true], "gin pairs layers 1..");
+        // gat/appnp compile no reg branch at all
+        let spec = registry::test_spec("gat", 2, "gas", 3, 2, 8, 4, 8, 3, "ce");
+        assert!(build_gat(&spec).unwrap().segs.iter().all(|s| s.pair.is_none()));
+    }
+}

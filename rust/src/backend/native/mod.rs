@@ -1,20 +1,31 @@
 //! Native execution backend: a pure-Rust, rayon-parallel interpreter of
 //! [`ArtifactSpec`] programs — the GAS and full-batch computations for the
-//! `gcn`, `gcnii` and `gin` model families, with CSR scatter-gather
-//! message passing, dense GEMMs, historical-embedding splice at each layer
-//! boundary, masked CE/BCE losses, Lipschitz-noise regularization, and a
-//! hand-written backward pass producing `loss` / per-param `grads` / the
-//! `push` tensor / `logits` in exactly the compiled artifacts' output
-//! order ([`StepOutputs`]). Dense layer transforms run on the blocked,
-//! register-tiled GEMM kernels in [`gemm`]; CSR message aggregation runs
-//! on the blocked SpMM kernels in [`spmm`] (both bit-compatible with the
-//! scalar oracles kept in [`ops`]).
+//! `gcn`, `gcnii`, `gin`, `gat` and `appnp` model families, with CSR
+//! scatter-gather message passing, dense GEMMs, edge-softmax attention,
+//! historical-embedding splice at each layer boundary, masked CE/BCE
+//! losses, Lipschitz-noise regularization, and hand-written backward
+//! passes producing `loss` / per-param `grads` / the `push` tensor /
+//! `logits` in exactly the compiled artifacts' output order
+//! ([`StepOutputs`]).
+//!
+//! Model programs are interpreted through the **composable layer-op
+//! tape** in [`layers`]: each family compiles into a list of layer ops
+//! (Linear / Propagate / HistSplice / attention / …), each op pairing a
+//! forward with a hand-written VJP; `run_model` runs the tape forward,
+//! applies the task loss, and walks the tape backward. Dense layer
+//! transforms run on the blocked, register-tiled GEMM kernels in
+//! [`gemm`]; CSR message aggregation runs on the blocked SpMM kernels in
+//! [`spmm`] (both bit-compatible with the scalar oracles kept in
+//! [`ops`]); GAT's edge softmax runs on the CSR attention kernels in
+//! [`attn`] (property-tested against their own scalar oracles).
 //!
 //! This makes the whole GAS loop run end-to-end without PJRT: when no
 //! AOT-compiled artifact directory is present, [`crate::config::Ctx`]
 //! synthesizes specs from [`registry`] and executes them here.
 
+pub mod attn;
 pub mod gemm;
+pub(crate) mod layers;
 pub mod loss;
 pub mod models;
 pub mod ops;
@@ -41,10 +52,15 @@ impl Default for ModelHyper {
     }
 }
 
-/// A spec bound to the native interpreter.
+/// A spec bound to the native interpreter. The layer-op tape is compiled
+/// once here, at spec-bind time (it is a pure function of the spec and
+/// the baked hyperparameters), and reused by every step — binding also
+/// validates the whole op assembly (parameter names, head/shape layout)
+/// up front instead of on the first training step.
 pub struct NativeArtifact {
     pub spec: ArtifactSpec,
     hyper: ModelHyper,
+    tape: layers::Tape,
 }
 
 /// Owned per-plan statics: the per-epoch-invariant tensors plus the CSR
@@ -67,10 +83,10 @@ impl NativeArtifact {
 
     pub fn with_hyper(spec: ArtifactSpec, hyper: ModelHyper) -> Result<NativeArtifact> {
         match spec.model.as_str() {
-            "gcn" | "gcnii" | "gin" => {}
+            "gcn" | "gcnii" | "gin" | "gat" | "appnp" => {}
             other => bail!(
                 "model {other:?} ({}) is not supported by the native backend \
-                 (supported: gcn, gcnii, gin); use --backend pjrt",
+                 (supported: gcn, gcnii, gin, gat, appnp); use --backend pjrt",
                 spec.name
             ),
         }
@@ -87,14 +103,17 @@ impl NativeArtifact {
             spec.loss,
             spec.name
         );
+        // APPNP propagates class-dim predictions, so its histories are
+        // C-dim (configs.py: hist_dim = c if model == "appnp" else h)
+        let want_hd = registry::hist_dim_for(&spec.model, spec.h, spec.c);
         ensure!(
-            spec.hist_dim == spec.h,
-            "hist_dim {} != h {} ({}): unsupported natively",
+            spec.hist_dim == want_hd,
+            "hist_dim {} != {want_hd} ({}): unsupported natively",
             spec.hist_dim,
-            spec.h,
             spec.name
         );
-        Ok(NativeArtifact { spec, hyper })
+        let tape = models::build_tape(&spec, hyper.alpha, hyper.lam)?;
+        Ok(NativeArtifact { spec, hyper, tape })
     }
 
     fn n_src(&self) -> usize {
@@ -176,7 +195,7 @@ impl NativeArtifact {
             alpha: self.hyper.alpha,
             lam: self.hyper.lam,
         };
-        models::run_model(&cx, params)
+        models::run_on_tape(&cx, params, &self.tape)
     }
 }
 
@@ -278,7 +297,7 @@ mod tests {
 
     #[test]
     fn prepared_statics_match_run_from_scratch() {
-        for model in ["gcn", "gcnii", "gin"] {
+        for model in ["gcn", "gcnii", "gin", "gat", "appnp"] {
             let spec = tiny_gas_spec(model, 3);
             let art = NativeArtifact::new(spec.clone()).unwrap();
             let params = ParamStore::init(&spec.params, 2).unwrap();
@@ -310,8 +329,49 @@ mod tests {
 
     #[test]
     fn unsupported_model_is_rejected_with_hint() {
-        let spec = registry::test_spec("gat", 2, "gas", 3, 2, 8, 4, 4, 3, "ce");
+        let spec = registry::test_spec("pna", 3, "gas", 3, 2, 8, 4, 4, 3, "ce");
         let err = NativeArtifact::new(spec).unwrap_err().to_string();
         assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn gat_and_appnp_gas_steps_produce_full_outputs() {
+        // 4 batch rows + 2 halo rows; h = 8 so gat runs 4 heads x dh 2
+        for (model, layers) in [("gat", 2), ("appnp", 3)] {
+            let spec = registry::test_spec(model, layers, "gas", 4, 2, 8, 4, 8, 3, "ce");
+            let art = NativeArtifact::new(spec.clone())
+                .unwrap_or_else(|e| panic!("{model}: {e:#}"));
+            let params = ParamStore::init(&spec.params, 3).unwrap();
+            let x: Vec<f32> = (0..spec.nt * spec.f).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+            let mut src = vec![1, 0, 2, 1, 4, 5];
+            let mut dst = vec![0, 1, 1, 2, 0, 3];
+            let mut w = vec![1.0; 6];
+            src.resize(spec.e, 0);
+            dst.resize(spec.e, 0);
+            w.resize(spec.e, 0.0);
+            let edges = (src, dst, w);
+            let hist: Vec<f32> = (0..spec.hist_layers() * spec.nh * spec.hist_dim)
+                .map(|i| (i % 3) as f32 * 0.2)
+                .collect();
+            let deg = vec![2.0; spec.nt];
+            let labels = vec![0, 1, 2, 0];
+            let mask = vec![1.0; spec.nb];
+            let noise = vec![0f32; spec.nt * spec.hist_dim.max(spec.h)];
+            let inp = step_inputs(&spec, &x, &edges, &hist, &deg, &labels, &mask, &noise);
+            let out = art.run(&params.tensors, &inp).unwrap();
+            assert!(out.loss.is_finite() && out.loss > 0.0, "{model}");
+            assert_eq!(out.grads.len(), spec.params.len(), "{model}");
+            assert_eq!(out.push.len(), spec.hist_layers() * spec.nb * spec.hist_dim, "{model}");
+            assert_eq!(out.logits.len(), spec.nb * spec.c, "{model}");
+            // gradients actually flow into every parameter tensor
+            for (g, ps) in out.grads.iter().zip(spec.params.iter()) {
+                assert!(g.iter().any(|&v| v != 0.0), "{model}: zero grad for {}", ps.name);
+            }
+            // histories must actually feed the model: zeroing changes loss
+            let hist0 = vec![0f32; hist.len()];
+            let inp0 = step_inputs(&spec, &x, &edges, &hist0, &deg, &labels, &mask, &noise);
+            let out0 = art.run(&params.tensors, &inp0).unwrap();
+            assert!((out.loss - out0.loss).abs() > 1e-7, "{model}: histories ignored");
+        }
     }
 }

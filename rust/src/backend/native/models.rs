@@ -1,5 +1,13 @@
-//! Native fwd+bwd interpreters for the GCN / GCNII / GIN programs,
-//! mirroring `python/compile/models.py` operation by operation:
+//! Model dispatch for the native interpreter: validated parameter views,
+//! the per-step context, and `run_model` — which compiles the spec's
+//! model family into a [`layers::Tape`] of composable layer ops and
+//! executes it ("build op list → run tape forward → task loss → walk
+//! tape backward"). The former hand-unrolled fwd+bwd monoliths live on
+//! verbatim in `rust/tests/tape_regression.rs`, which asserts the tape
+//! reproduces them bit for bit (loss/grads/push/logits per step, and
+//! end-to-end training curves).
+//!
+//! Program families (mirroring `python/compile/models.py`):
 //!
 //! * **gas** — each layer computes embeddings for the NB in-batch rows;
 //!   message sources are the freshly-computed in-batch rows concatenated
@@ -9,17 +17,17 @@
 //! * **full** — exact computation on the induced (sub)graph; every row is
 //!   computed at every layer.
 //!
-//! The backward passes are hand-written reverse-mode chains over the same
-//! intermediates (finite-difference-checked in
-//! `rust/tests/native_grad_check.rs`). The Lipschitz regularizer (Eq. 3)
-//! re-runs a layer on noise-perturbed sources and penalizes the squared
-//! output difference; it is computed for gas programs when `reg_lambda >
+//! Backward passes are the ops' hand-written VJPs, walked in reverse tape
+//! order (finite-difference-checked for every parameter of every family
+//! in `rust/tests/native_grad_check.rs`). The Lipschitz regularizer
+//! (Eq. 3) re-runs reg-paired layer segments on noise-perturbed sources
+//! and penalizes the squared output difference; it is computed for gas
+//! programs of the reg-compiled families (gcnii, gin) when `reg_lambda >
 //! 0`, matching the `with_reg` artifact variants.
 
-use crate::backend::native::gemm;
+use crate::backend::native::layers::{self, Tape};
 use crate::backend::native::loss;
-use crate::backend::native::ops::{self, EdgeIndex};
-use crate::backend::native::spmm;
+use crate::backend::native::ops::EdgeIndex;
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::StepOutputs;
 use anyhow::{bail, ensure, Context, Result};
@@ -62,6 +70,12 @@ impl<'a> Params<'a> {
     pub fn get(&self, name: &str) -> Result<&'a [f32]> {
         Ok(&self.t[self.idx(name)?])
     }
+
+    /// The flat tensor at parameter index `idx` (resolved at tape-build
+    /// time by [`layers`]'s `ParamRef`s).
+    pub(crate) fn tensor(&self, idx: usize) -> &'a [f32] {
+        self.t[idx].as_slice()
+    }
 }
 
 /// Borrowed per-step tensors, already validated by the caller.
@@ -76,19 +90,19 @@ pub struct StepCtx<'a> {
     pub hist: &'a [f32],
     pub noise: &'a [f32],
     pub reg_lambda: f32,
-    /// GCNII teleport / identity-map hyperparameters (baked into compiled
-    /// artifacts; carried here for the interpreter).
+    /// GCNII / APPNP teleport and identity-map hyperparameters (baked into
+    /// compiled artifacts; carried here for the interpreter).
     pub alpha: f32,
     pub lam: f32,
 }
 
 impl<'a> StepCtx<'a> {
-    fn full(&self) -> bool {
+    pub fn full(&self) -> bool {
         self.spec.is_full()
     }
 
     /// Rows of the layer-input (source) tensors.
-    fn rows(&self) -> usize {
+    pub fn rows(&self) -> usize {
         if self.full() {
             self.spec.nb
         } else {
@@ -97,17 +111,17 @@ impl<'a> StepCtx<'a> {
     }
 
     /// History rows for layer `l` of the concatenated source tensor.
-    fn hist_layer(&self, l: usize) -> &'a [f32] {
+    pub fn hist_layer(&self, l: usize) -> &'a [f32] {
         let span = self.spec.nh * self.spec.hist_dim;
         &self.hist[l * span..(l + 1) * span]
     }
 
     /// `1/(deg_v + 1)` self-loop weights for the output rows.
-    fn self_weights(&self) -> Vec<f32> {
+    pub fn self_weights(&self) -> Vec<f32> {
         self.deg[..self.spec.nb].iter().map(|&d| 1.0 / (d + 1.0)).collect()
     }
 
-    fn task_loss(&self, logits: &[f32]) -> (f32, Vec<f32>) {
+    pub fn task_loss(&self, logits: &[f32]) -> (f32, Vec<f32>) {
         let (nb, c) = (self.spec.nb, self.spec.c);
         if self.spec.loss == "bce" {
             loss::bce_multilabel(logits, nb, c, self.labels_f, self.mask)
@@ -118,12 +132,12 @@ impl<'a> StepCtx<'a> {
 
     /// The regularizer is only compiled into gas artifacts (`with_reg`)
     /// and only bites when the runtime scalar is non-zero.
-    fn reg_on(&self) -> bool {
+    pub fn reg_on(&self) -> bool {
         !self.full() && self.reg_lambda > 0.0
     }
 
     /// `srcs + noise` for a perturbed branch over `rows x d` values.
-    fn perturb(&self, srcs: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    pub fn perturb(&self, srcs: &[f32], rows: usize, d: usize) -> Vec<f32> {
         let mut out = srcs[..rows * d].to_vec();
         for (o, n) in out.iter_mut().zip(self.noise[..rows * d].iter()) {
             *o += n;
@@ -132,435 +146,36 @@ impl<'a> StepCtx<'a> {
     }
 }
 
-/// Dispatch on the spec's model family.
-pub fn run_model(cx: &StepCtx, params: &[Vec<f32>]) -> Result<StepOutputs> {
-    let p = Params::new(cx.spec, params)?;
-    match cx.spec.model.as_str() {
-        "gcn" => run_gcn(cx, &p),
-        "gcnii" => run_gcnii(cx, &p),
-        "gin" => run_gin(cx, &p),
+/// Compile a spec's model family into a layer-op tape (pure function of
+/// the spec and the baked hyperparameters, so executors build it once at
+/// spec-bind time and reuse it every step). Adding a native model is
+/// adding a builder here (~40 lines of op assembly) — the
+/// forward/backward machinery is shared.
+pub(crate) fn build_tape(spec: &ArtifactSpec, alpha: f32, lam: f32) -> Result<Tape> {
+    match spec.model.as_str() {
+        "gcn" => layers::build_gcn(spec),
+        "gcnii" => layers::build_gcnii(spec, alpha, lam),
+        "gin" => layers::build_gin(spec),
+        "gat" => layers::build_gat(spec),
+        "appnp" => layers::build_appnp(spec, alpha),
         other => bail!(
             "model {other:?} is not supported by the native backend \
-             (supported: gcn, gcnii, gin); use --backend pjrt"
+             (supported: gcn, gcnii, gin, gat, appnp); use --backend pjrt"
         ),
     }
 }
 
-fn zero_grads(spec: &ArtifactSpec) -> Vec<Vec<f32>> {
-    spec.params
-        .iter()
-        .map(|p| vec![0f32; p.shape.iter().product()])
-        .collect()
+/// One training step on a prebuilt tape: run it forward, apply the task
+/// loss, walk it backward. The tape must have been built from `cx.spec`
+/// with the same hyperparameters.
+pub(crate) fn run_on_tape(cx: &StepCtx, params: &[Vec<f32>], tape: &Tape) -> Result<StepOutputs> {
+    let p = Params::new(cx.spec, params)?;
+    layers::run_tape(cx, &p, tape)
 }
 
-/// Concatenate fresh in-batch rows with the halo history rows of layer
-/// `l` into one `[NT, d]` source tensor (gas programs).
-fn concat_sources(h_batch: &[f32], hist_l: &[f32], nb: usize, nh: usize, d: usize) -> Vec<f32> {
-    let mut out = vec![0f32; (nb + nh) * d];
-    out[..nb * d].copy_from_slice(&h_batch[..nb * d]);
-    out[nb * d..].copy_from_slice(&hist_l[..nh * d]);
-    out
-}
-
-/// Assemble the flat `[(L-1) * NB * hd]` push tensor from per-layer
-/// in-batch embeddings.
-fn stack_push(layers: &[&[f32]], nb: usize, hd: usize) -> Vec<f32> {
-    let mut out = vec![0f32; layers.len() * nb * hd];
-    for (l, h) in layers.iter().enumerate() {
-        out[l * nb * hd..(l + 1) * nb * hd].copy_from_slice(&h[..nb * hd]);
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// GCN (paper appendix §10): h = P̂ (h_src W) + b, ReLU between layers.
-// ---------------------------------------------------------------------------
-
-fn run_gcn(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
-    let spec = cx.spec;
-    let big_l = spec.layers;
-    let (nb, nh, hd) = (spec.nb, spec.nh, spec.hist_dim);
-    let rows = cx.rows();
-    let full = cx.full();
-    let self_w = cx.self_weights();
-    let mut dims = vec![spec.h; big_l + 1];
-    dims[0] = spec.f;
-    dims[big_l] = spec.c;
-
-    // forward, keeping layer inputs + pre-activations for the backward
-    let mut srcs: Vec<Vec<f32>> = Vec::with_capacity(big_l - 1); // input of layer l>=1
-    let mut pres: Vec<Vec<f32>> = Vec::with_capacity(big_l);
-    for l in 0..big_l {
-        let (din, dout) = (dims[l], dims[l + 1]);
-        let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
-        let z = gemm::matmul(src_l, rows, din, p.get(&format!("w{l}"))?, dout);
-        let mut pre = spmm::scatter(cx.edges, &z, dout);
-        for v in 0..nb {
-            let zr = &z[v * dout..v * dout + dout];
-            let pr = &mut pre[v * dout..v * dout + dout];
-            for j in 0..dout {
-                pr[j] += self_w[v] * zr[j];
-            }
-        }
-        ops::add_bias(&mut pre, nb, dout, p.get(&format!("b{l}"))?);
-        if l + 1 < big_l {
-            let h = ops::relu(&pre);
-            srcs.push(if full {
-                h
-            } else {
-                concat_sources(&h, cx.hist_layer(l), nb, nh, dout)
-            });
-        }
-        pres.push(pre);
-    }
-    let logits = pres[big_l - 1][..nb * spec.c].to_vec();
-    let push_layers: Vec<&[f32]> = srcs.iter().map(|s| s.as_slice()).collect();
-    let push = stack_push(&push_layers, nb, hd);
-
-    // backward
-    let (task, mut dpre) = cx.task_loss(&logits);
-    let mut grads = zero_grads(spec);
-    for l in (0..big_l).rev() {
-        let (din, dout) = (dims[l], dims[l + 1]);
-        let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
-        ops::colsum_acc(&dpre, nb, dout, &mut grads[p.idx(&format!("b{l}"))?]);
-        let mut dz = vec![0f32; rows * dout];
-        spmm::scatter_t_acc(cx.edges, &dpre, dout, &mut dz);
-        for v in 0..nb {
-            let dr = &dpre[v * dout..v * dout + dout];
-            let zr = &mut dz[v * dout..v * dout + dout];
-            for j in 0..dout {
-                zr[j] += self_w[v] * dr[j];
-            }
-        }
-        gemm::matmul_at_b_acc(src_l, rows, din, &dz, dout, &mut grads[p.idx(&format!("w{l}"))?]);
-        if l > 0 {
-            let dsrc = gemm::matmul_bt(&dz, rows, dout, p.get(&format!("w{l}"))?, din);
-            // history rows are inputs: gradient stops at the batch rows
-            dpre = ops::relu_bwd(&dsrc[..nb * din], &pres[l - 1][..nb * din]);
-        }
-    }
-    Ok(StepOutputs { loss: task, grads, push, logits })
-}
-
-// ---------------------------------------------------------------------------
-// GCNII: h_{l+1} = ReLU((1-β_l)ĥ + β_l ĥ W_l), ĥ = (1-α) P̂ srcs + α h0.
-// ---------------------------------------------------------------------------
-
-fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
-    let spec = cx.spec;
-    let big_l = spec.layers;
-    let (nb, nh, hdim) = (spec.nb, spec.nh, spec.h);
-    let rows = cx.rows();
-    let full = cx.full();
-    let (alpha, lam) = (cx.alpha, cx.lam);
-    let self_w = cx.self_weights();
-    let betas: Vec<f32> = (1..=big_l).map(|l| (lam / l as f32 + 1.0).ln()).collect();
-    let w_stack = p.get("w_stack")?;
-    let reg_on = cx.reg_on();
-
-    // input projection (exact for batch AND halo rows)
-    let mut t0 = gemm::matmul(cx.x, rows, spec.f, p.get("w_in")?, hdim);
-    ops::add_bias(&mut t0, rows, hdim, p.get("b_in")?);
-    let h0 = ops::relu(&t0);
-
-    // forward scan
-    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(big_l); // h_1..h_L [nb, hdim]
-    let mut hns: Vec<Vec<f32>> = Vec::with_capacity(big_l);
-    let mut pres: Vec<Vec<f32>> = Vec::with_capacity(big_l);
-    let mut hns_p: Vec<Vec<f32>> = Vec::new();
-    let mut pres_p: Vec<Vec<f32>> = Vec::new();
-    let mut outs_p: Vec<Vec<f32>> = Vec::new();
-    let mut reg = 0f32;
-    for l in 0..big_l {
-        let beta = betas[l];
-        let wl = &w_stack[l * hdim * hdim..(l + 1) * hdim * hdim];
-        let h_prev: &[f32] = if l == 0 { &h0 } else { &outs[l - 1] };
-        let srcs: Vec<f32> = if full {
-            h_prev[..rows * hdim].to_vec()
-        } else if l == 0 {
-            // layer-1 halo sources are the exact h0 rows (no staleness)
-            h0.clone()
-        } else {
-            concat_sources(h_prev, cx.hist_layer(l - 1), nb, nh, hdim)
-        };
-        let layer_fwd = |s: &[f32]| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-            let mut prop = spmm::scatter(cx.edges, s, hdim);
-            for v in 0..nb {
-                let sr = &s[v * hdim..v * hdim + hdim];
-                let pr = &mut prop[v * hdim..v * hdim + hdim];
-                for j in 0..hdim {
-                    pr[j] += self_w[v] * sr[j];
-                }
-            }
-            let mut hn = prop;
-            for v in 0..nb * hdim {
-                hn[v] = (1.0 - alpha) * hn[v] + alpha * h0[v];
-            }
-            let q = gemm::matmul(&hn, nb, hdim, wl, hdim);
-            let mut pre = vec![0f32; nb * hdim];
-            for i in 0..nb * hdim {
-                pre[i] = (1.0 - beta) * hn[i] + beta * q[i];
-            }
-            let out = ops::relu(&pre);
-            (hn, pre, out)
-        };
-        let (hn, pre, out) = layer_fwd(&srcs);
-        if reg_on {
-            let srcs_p = cx.perturb(&srcs, rows, hdim);
-            let (hn_p, pre_p, out_p) = layer_fwd(&srcs_p);
-            let mut acc = 0f64;
-            for i in 0..nb * hdim {
-                let d = (out[i] - out_p[i]) as f64;
-                acc += d * d;
-            }
-            reg += (acc / nb as f64) as f32;
-            hns_p.push(hn_p);
-            pres_p.push(pre_p);
-            outs_p.push(out_p);
-        }
-        hns.push(hn);
-        pres.push(pre);
-        outs.push(out);
-    }
-    let mut logits = gemm::matmul(&outs[big_l - 1], nb, hdim, p.get("w_out")?, spec.c);
-    ops::add_bias(&mut logits, nb, spec.c, p.get("b_out")?);
-    let push_layers: Vec<&[f32]> = outs[..big_l - 1].iter().map(|o| o.as_slice()).collect();
-    let push = stack_push(&push_layers, nb, spec.hist_dim);
-
-    // backward
-    let (task, dlogits) = cx.task_loss(&logits);
-    let loss_val = task + cx.reg_lambda * reg;
-    let mut grads = zero_grads(spec);
-    gemm::matmul_at_b_acc(
-        &outs[big_l - 1],
-        nb,
-        hdim,
-        &dlogits,
-        spec.c,
-        &mut grads[p.idx("w_out")?],
-    );
-    ops::colsum_acc(&dlogits, nb, spec.c, &mut grads[p.idx("b_out")?]);
-    let mut dh = gemm::matmul_bt(&dlogits, nb, spec.c, p.get("w_out")?, hdim);
-    let mut dh0 = vec![0f32; rows * hdim];
-    let ws_idx = p.idx("w_stack")?;
-    for l in (0..big_l).rev() {
-        let beta = betas[l];
-        let wl = &w_stack[l * hdim * hdim..(l + 1) * hdim * hdim];
-        let mut dout = dh;
-        let mut dout_p: Option<Vec<f32>> = None;
-        if reg_on {
-            let coef = cx.reg_lambda * 2.0 / nb as f32;
-            let mut dp = vec![0f32; nb * hdim];
-            for i in 0..nb * hdim {
-                let g = coef * (outs[l][i] - outs_p[l][i]);
-                dout[i] += g;
-                dp[i] = -g;
-            }
-            dout_p = Some(dp);
-        }
-        let mut dsrc = vec![0f32; rows * hdim];
-        let mut branch = |do_b: &[f32], hn_b: &[f32], pre_b: &[f32], grads: &mut Vec<Vec<f32>>| {
-            let dpre = ops::relu_bwd(do_b, pre_b);
-            let mut dq = vec![0f32; nb * hdim];
-            for i in 0..nb * hdim {
-                dq[i] = beta * dpre[i];
-            }
-            gemm::matmul_at_b_acc(
-                hn_b,
-                nb,
-                hdim,
-                &dq,
-                hdim,
-                &mut grads[ws_idx][l * hdim * hdim..(l + 1) * hdim * hdim],
-            );
-            let mut dhn = gemm::matmul_bt(&dq, nb, hdim, wl, hdim);
-            for i in 0..nb * hdim {
-                dhn[i] += (1.0 - beta) * dpre[i];
-            }
-            for i in 0..nb * hdim {
-                dh0[i] += alpha * dhn[i];
-            }
-            let mut dprop = dhn;
-            for v in dprop.iter_mut() {
-                *v *= 1.0 - alpha;
-            }
-            spmm::scatter_t_acc(cx.edges, &dprop, hdim, &mut dsrc);
-            for v in 0..nb {
-                let dr = &dprop[v * hdim..v * hdim + hdim];
-                let sr = &mut dsrc[v * hdim..v * hdim + hdim];
-                for j in 0..hdim {
-                    sr[j] += self_w[v] * dr[j];
-                }
-            }
-        };
-        branch(&dout, &hns[l], &pres[l], &mut grads);
-        if let Some(dp) = dout_p {
-            branch(&dp, &hns_p[l], &pres_p[l], &mut grads);
-        }
-        if l == 0 {
-            // h_0 sources: batch rows are h0b, halo rows (gas) are h0 too
-            for i in 0..rows * hdim {
-                dh0[i] += dsrc[i];
-            }
-            dh = Vec::new();
-        } else {
-            // layers 2..L read halo rows from history: gradient stops there
-            dsrc.truncate(nb * hdim);
-            dh = dsrc;
-        }
-    }
-    let dt0 = ops::relu_bwd(&dh0, &t0);
-    gemm::matmul_at_b_acc(cx.x, rows, spec.f, &dt0, hdim, &mut grads[p.idx("w_in")?]);
-    ops::colsum_acc(&dt0, rows, hdim, &mut grads[p.idx("b_in")?]);
-    let _ = dh;
-    Ok(StepOutputs { loss: loss_val, grads, push, logits })
-}
-
-// ---------------------------------------------------------------------------
-// GIN: h = MLP((1+ε) h_v + Σ_{w∈N(v)} h_w), ReLU between layers, linear head.
-// ---------------------------------------------------------------------------
-
-struct GinTape {
-    pre: Vec<f32>,
-    u: Vec<f32>,
-    a: Vec<f32>,
-    o: Vec<f32>,
-}
-
-fn run_gin(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
-    let spec = cx.spec;
-    let big_l = spec.layers;
-    let (nb, nh, h) = (spec.nb, spec.nh, spec.h);
-    let rows = cx.rows();
-    let full = cx.full();
-    let mut dims = vec![h; big_l + 1];
-    dims[0] = spec.f;
-
-    let gin_fwd = |l: usize, src_l: &[f32], din: usize| -> Result<GinTape> {
-        let eps = p.get(&format!("eps{l}"))?[0];
-        let mut pre = spmm::scatter(cx.edges, src_l, din);
-        for i in 0..nb * din {
-            pre[i] += (1.0 + eps) * src_l[i];
-        }
-        let mut u = gemm::matmul(&pre, nb, din, p.get(&format!("mlp{l}_w1"))?, h);
-        ops::add_bias(&mut u, nb, h, p.get(&format!("mlp{l}_b1"))?);
-        let a = ops::relu(&u);
-        let mut o = gemm::matmul(&a, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
-        ops::add_bias(&mut o, nb, h, p.get(&format!("mlp{l}_b2"))?);
-        Ok(GinTape { pre, u, a, o })
-    };
-
-    // forward
-    let mut srcs: Vec<Vec<f32>> = Vec::with_capacity(big_l); // input of layer l>=1
-    let mut tapes: Vec<GinTape> = Vec::with_capacity(big_l);
-    let mut tapes_p: Vec<Option<(Vec<f32>, GinTape)>> = Vec::with_capacity(big_l);
-    let mut h_last = Vec::new();
-    let mut reg = 0f32;
-    for l in 0..big_l {
-        let din = dims[l];
-        let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
-        let tape = gin_fwd(l, src_l, din)?;
-        // reg only from layer 1 on: layer-0 inputs are F-dim features
-        if cx.reg_on() && l > 0 {
-            let src_p = cx.perturb(src_l, rows, din);
-            let tape_p = gin_fwd(l, &src_p, din)?;
-            let mut acc = 0f64;
-            for i in 0..nb * h {
-                let d = (tape.o[i] - tape_p.o[i]) as f64;
-                acc += d * d;
-            }
-            reg += (acc / nb as f64) as f32;
-            tapes_p.push(Some((src_p, tape_p)));
-        } else {
-            tapes_p.push(None);
-        }
-        let hn = ops::relu(&tape.o);
-        if l + 1 < big_l {
-            srcs.push(if full {
-                hn
-            } else {
-                concat_sources(&hn, cx.hist_layer(l), nb, nh, h)
-            });
-        } else {
-            h_last = hn;
-        }
-        tapes.push(tape);
-    }
-    let mut logits = gemm::matmul(&h_last, nb, h, p.get("head_w")?, spec.c);
-    ops::add_bias(&mut logits, nb, spec.c, p.get("head_b")?);
-    let push_layers: Vec<&[f32]> = srcs.iter().map(|s| s.as_slice()).collect();
-    let push = stack_push(&push_layers, nb, spec.hist_dim);
-
-    // backward
-    let (task, dlogits) = cx.task_loss(&logits);
-    let loss_val = task + cx.reg_lambda * reg;
-    let mut grads = zero_grads(spec);
-    gemm::matmul_at_b_acc(&h_last, nb, h, &dlogits, spec.c, &mut grads[p.idx("head_w")?]);
-    ops::colsum_acc(&dlogits, nb, spec.c, &mut grads[p.idx("head_b")?]);
-    let mut dh = gemm::matmul_bt(&dlogits, nb, spec.c, p.get("head_w")?, h);
-    for l in (0..big_l).rev() {
-        let din = dims[l];
-        let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
-        let tape = &tapes[l];
-        let mut do_ = ops::relu_bwd(&dh, &tape.o);
-        let mut do_p: Option<Vec<f32>> = None;
-        if let Some((_, tape_p)) = &tapes_p[l] {
-            let coef = cx.reg_lambda * 2.0 / nb as f32;
-            let mut dp = vec![0f32; nb * h];
-            for i in 0..nb * h {
-                let g = coef * (tape.o[i] - tape_p.o[i]);
-                do_[i] += g;
-                dp[i] = -g;
-            }
-            do_p = Some(dp);
-        }
-        let mut dsrc = vec![0f32; rows * din];
-        gin_branch_bwd(cx, p, l, din, &do_, tape, src_l, &mut grads, &mut dsrc)?;
-        if let (Some(dp), Some((src_p, tape_p))) = (do_p, &tapes_p[l]) {
-            gin_branch_bwd(cx, p, l, din, &dp, tape_p, src_p, &mut grads, &mut dsrc)?;
-        }
-        if l > 0 {
-            // dsrc[:nb] is the gradient w.r.t. h_l = relu(o_{l-1}); the
-            // relu' mask is applied at the top of the next iteration
-            dsrc.truncate(nb * din);
-            dh = dsrc;
-        }
-    }
-    Ok(StepOutputs { loss: loss_val, grads, push, logits })
-}
-
-/// Reverse one GIN layer branch (main or noise-perturbed), accumulating
-/// parameter grads and the gradient w.r.t. the layer's source rows.
-fn gin_branch_bwd(
-    cx: &StepCtx,
-    p: &Params,
-    l: usize,
-    din: usize,
-    do_: &[f32],
-    tape: &GinTape,
-    src_l: &[f32],
-    grads: &mut [Vec<f32>],
-    dsrc: &mut [f32],
-) -> Result<()> {
-    let spec = cx.spec;
-    let (nb, h) = (spec.nb, spec.h);
-    let eps = p.get(&format!("eps{l}"))?[0];
-    gemm::matmul_at_b_acc(&tape.a, nb, h, do_, h, &mut grads[p.idx(&format!("mlp{l}_w2"))?]);
-    ops::colsum_acc(do_, nb, h, &mut grads[p.idx(&format!("mlp{l}_b2"))?]);
-    let da = gemm::matmul_bt(do_, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
-    let du = ops::relu_bwd(&da, &tape.u);
-    gemm::matmul_at_b_acc(&tape.pre, nb, din, &du, h, &mut grads[p.idx(&format!("mlp{l}_w1"))?]);
-    ops::colsum_acc(&du, nb, h, &mut grads[p.idx(&format!("mlp{l}_b1"))?]);
-    let dpre = gemm::matmul_bt(&du, nb, h, p.get(&format!("mlp{l}_w1"))?, din);
-    let mut deps = 0f32;
-    for i in 0..nb * din {
-        deps += dpre[i] * src_l[i];
-    }
-    grads[p.idx(&format!("eps{l}"))?][0] += deps;
-    for i in 0..nb * din {
-        dsrc[i] += (1.0 + eps) * dpre[i];
-    }
-    spmm::scatter_t_acc(cx.edges, &dpre, din, dsrc);
-    Ok(())
+/// One-shot convenience: build the op tape for the spec's family, then
+/// run one step on it (the executor path caches the tape instead).
+pub fn run_model(cx: &StepCtx, params: &[Vec<f32>]) -> Result<StepOutputs> {
+    let tape = build_tape(cx.spec, cx.alpha, cx.lam)?;
+    run_on_tape(cx, params, &tape)
 }

@@ -27,6 +27,11 @@ pub struct EdgeIndex {
     src_off: Vec<u32>,
     src_dst: Vec<u32>,
     src_w: Vec<f32>,
+    /// For each source-major edge position, the position of the *same*
+    /// edge in the destination-major view — so backward kernels that walk
+    /// the source view can look up per-edge values (e.g. GAT attention
+    /// coefficients) stored in destination-CSR order.
+    src_pos: Vec<u32>,
 }
 
 impl EdgeIndex {
@@ -67,6 +72,7 @@ impl EdgeIndex {
         let mut dst_w = vec![0f32; real];
         let mut src_dst = vec![0u32; real];
         let mut src_w = vec![0f32; real];
+        let mut src_pos = vec![0u32; real];
         let mut dst_fill = dst_off.clone();
         let mut src_fill = src_off.clone();
         for e in 0..src.len() {
@@ -74,16 +80,17 @@ impl EdgeIndex {
                 continue;
             }
             let (s, d) = (src[e] as usize, dst[e] as usize);
-            let i = dst_fill[d] as usize;
-            dst_src[i] = s as u32;
-            dst_w[i] = w[e];
+            let di = dst_fill[d] as usize;
+            dst_src[di] = s as u32;
+            dst_w[di] = w[e];
             dst_fill[d] += 1;
             let i = src_fill[s] as usize;
             src_dst[i] = d as u32;
             src_w[i] = w[e];
+            src_pos[i] = di as u32;
             src_fill[s] += 1;
         }
-        Ok(EdgeIndex { n_src, n_out, dst_off, dst_src, dst_w, src_off, src_dst, src_w })
+        Ok(EdgeIndex { n_src, n_out, dst_off, dst_src, dst_w, src_off, src_dst, src_w, src_pos })
     }
 
     pub fn num_edges(&self) -> usize {
@@ -102,6 +109,14 @@ impl EdgeIndex {
     /// `offsets[s]..offsets[s+1]`. Consumed by [`super::spmm`].
     pub(crate) fn src_csr(&self) -> (&[u32], &[u32], &[f32]) {
         (&self.src_off, &self.src_dst, &self.src_w)
+    }
+
+    /// For each source-major edge position, the destination-major position
+    /// of the same edge (parallel to `src_csr().1`). Consumed by the GAT
+    /// backward kernels in [`super::attn`], which walk the source view but
+    /// read attention coefficients stored in destination-CSR order.
+    pub(crate) fn src_csr_dst_pos(&self) -> &[u32] {
+        &self.src_pos
     }
 
     /// Forward scatter-sum: `out[v] = Σ_{(s,w) -> v} w * z[s]`, `z` is
@@ -256,6 +271,22 @@ pub fn relu_bwd(dh: &[f32], pre: &[f32]) -> Vec<f32> {
         .collect()
 }
 
+/// Elementwise ELU (α = 1): `x` if positive, `exp(x) - 1` otherwise —
+/// the inter-layer activation of the GAT operator (`jax.nn.elu`).
+pub fn elu(pre: &[f32]) -> Vec<f32> {
+    pre.iter().map(|&v| if v > 0.0 { v } else { v.exp_m1() }).collect()
+}
+
+/// ELU backward: `dh` where positive, `dh · exp(pre)` otherwise
+/// (derivative `exp(0) = 1` at exactly 0, consistent with both branches).
+pub fn elu_bwd(dh: &[f32], pre: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(dh.len(), pre.len());
+    dh.iter()
+        .zip(pre.iter())
+        .map(|(&g, &p)| if p > 0.0 { g } else { g * p.exp() })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,6 +340,45 @@ mod tests {
         let da = [1.0; 4];
         let mut out = vec![0f32; 5]; // wants 3*2 = 6
         matmul_at_b_acc_scalar(&a, 2, 3, &da, 2, &mut out);
+    }
+
+    #[test]
+    fn src_view_maps_back_to_dst_positions() {
+        // every source-major position must name the dst-major slot holding
+        // the same (src, dst, w) edge — padding edges excluded from both
+        let src = [1, 2, 0, 1, 0];
+        let dst = [0, 0, 1, 1, 0];
+        let w = [2.0, 1.0, 0.5, 0.0, 3.0];
+        let ei = EdgeIndex::build(&src, &dst, &w, 3, 2).unwrap();
+        assert_eq!(ei.num_edges(), 4);
+        let (s_off, s_dst, s_w) = ei.src_csr();
+        let (d_off, d_src, d_w) = ei.dst_csr();
+        let pos = ei.src_csr_dst_pos();
+        for s in 0..3 {
+            for p in s_off[s] as usize..s_off[s + 1] as usize {
+                let i = pos[p] as usize;
+                assert_eq!(d_src[i] as usize, s, "src mismatch at {p}");
+                assert_eq!(s_w[p], d_w[i], "weight mismatch at {p}");
+                let v = s_dst[p] as usize;
+                assert!(
+                    (d_off[v] as usize..d_off[v + 1] as usize).contains(&i),
+                    "pos {i} not in dst row {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn elu_helpers_match_definition() {
+        let pre = [-1.0f32, 0.0, 2.0];
+        let e = elu(&pre);
+        assert_eq!(e[1], 0.0);
+        assert_eq!(e[2], 2.0);
+        assert!((e[0] - ((-1.0f32).exp() - 1.0)).abs() < 1e-7);
+        let g = elu_bwd(&[5.0, 5.0, 5.0], &pre);
+        assert_eq!(g[2], 5.0);
+        assert_eq!(g[1], 5.0); // exp(0) = 1
+        assert!((g[0] - 5.0 * (-1.0f32).exp()).abs() < 1e-6);
     }
 
     #[test]

@@ -2,9 +2,9 @@
 //! dataset profiles behind them) without a compiled manifest, mirroring
 //! `python/compile/configs.py` — the same padded shapes, parameter specs
 //! and artifact names, restricted to the model families the native
-//! interpreter implements (gcn, gcnii, gin). When an AOT manifest *is*
-//! present it remains the source of truth; this registry is the fallback
-//! that makes `--backend native` work from a bare checkout.
+//! interpreter implements (gcn, gcnii, gin, gat, appnp). When an AOT
+//! manifest *is* present it remains the source of truth; this registry is
+//! the fallback that makes `--backend native` work from a bare checkout.
 
 use crate::graph::datasets::Profile;
 use crate::runtime::manifest::{ArtifactSpec, InputKind, InputSpec, Manifest, ParamSpec};
@@ -34,6 +34,23 @@ fn edge_weight_kind(model: &str) -> &'static str {
 
 fn round_up(x: usize, m: usize) -> usize {
     x.div_ceil(m) * m
+}
+
+/// GAT attention heads on hidden layers (configs.py `heads` default; the
+/// output layer is always single-head).
+pub const GAT_HEADS: usize = 4;
+
+/// History feature dim per model: APPNP propagates class-dim predictions,
+/// everything else pushes H-dim hidden states (configs.py
+/// `ArtifactConfig.__post_init__`). The single source of this rule — the
+/// spec synthesis here and [`super::NativeArtifact`]'s validation both
+/// call it.
+pub(crate) fn hist_dim_for(model: &str, h: usize, c: usize) -> usize {
+    if model == "appnp" {
+        c
+    } else {
+        h
+    }
 }
 
 /// Padded GAS batch shapes for a profile (configs.py `_gas_shapes`).
@@ -90,6 +107,25 @@ pub fn param_specs(model: &str, layers: usize, f: usize, h: usize, c: usize) -> 
             specs.push(glorot("w_stack", &[layers, h, h]));
             specs.push(glorot("w_out", &[h, c]));
             specs.push(zeros("b_out", &[c]));
+        }
+        "gat" => {
+            let mut dims = vec![h; layers + 1];
+            dims[0] = f;
+            dims[layers] = c;
+            for l in 0..layers {
+                let heads_l = if l + 1 < layers { GAT_HEADS } else { 1 };
+                let dh = dims[l + 1] / heads_l;
+                specs.push(glorot(&format!("w{l}"), &[dims[l], heads_l * dh]));
+                specs.push(glorot(&format!("asrc{l}"), &[heads_l, dh]));
+                specs.push(glorot(&format!("adst{l}"), &[heads_l, dh]));
+                specs.push(zeros(&format!("b{l}"), &[heads_l * dh]));
+            }
+        }
+        "appnp" => {
+            specs.push(glorot("mlp_w1", &[f, h]));
+            specs.push(zeros("mlp_b1", &[h]));
+            specs.push(glorot("mlp_w2", &[h, c]));
+            specs.push(zeros("mlp_b2", &[c]));
         }
         _ => {}
     }
@@ -162,7 +198,7 @@ pub fn spec_for_profile(
     suffix: &str,
 ) -> Result<ArtifactSpec> {
     match model {
-        "gcn" | "gcnii" | "gin" => {}
+        "gcn" | "gcnii" | "gin" | "gat" | "appnp" => {}
         other => bail!("native registry does not synthesize model {other:?}"),
     }
     let (nb, nh, e) = match program {
@@ -186,7 +222,7 @@ pub fn spec_for_profile(
         h,
         c: p.c,
         layers,
-        hist_dim: h,
+        hist_dim: hist_dim_for(model, h, p.c),
         loss: loss.into(),
         edge_weight: edge_weight_kind(model).into(),
         params: Vec::new(),
@@ -320,10 +356,11 @@ pub fn native_manifest() -> Manifest {
     let mut add = |s: ArtifactSpec| {
         artifacts.insert(s.name.clone(), s);
     };
-    // Table 1/2: gcn2 + gcnii8, gas and full, on the small benchmarks
+    // Table 1/2: all four table-1 models, gas and full, on the small
+    // benchmarks (configs.py order: gcn, gat, appnp, gcnii)
     for name in SMALL {
         let p = &by_name[name];
-        for (model, layers) in [("gcn", 2), ("gcnii", 8)] {
+        for (model, layers) in [("gcn", 2), ("gat", 2), ("appnp", 10), ("gcnii", 8)] {
             add(spec_for_profile(p, model, layers, "gas", "").unwrap());
             add(spec_for_profile(p, model, layers, "full", "").unwrap());
         }
@@ -339,18 +376,25 @@ pub fn native_manifest() -> Manifest {
         add(spec_for_profile(p, "gcn", 4, "gas", "").unwrap());
         add(spec_for_profile(p, "gcn", 4, "full", "").unwrap());
     }
-    // Table 3/5: large datasets via GAS (pna omitted: unsupported natively)
+    // Table 3/5: large datasets via GAS. pna stays PJRT-only — its 3x3
+    // aggregator/scaler tensor product is not implemented natively yet
+    // (the one remaining configs.py family; see ROADMAP), so table5
+    // skips those rows with an explicit message rather than silently.
     for name in LARGE {
         if name == "cluster" {
             continue;
         }
         let p = &by_name[name];
         add(spec_for_profile(p, "gcn", 2, "gas", "").unwrap());
+        add(spec_for_profile(p, "gat", 2, "gas", "").unwrap());
+        add(spec_for_profile(p, "appnp", 10, "gas", "").unwrap());
         add(spec_for_profile(p, "gcnii", 8, "gas", "").unwrap());
     }
     for name in ["flickr", "arxiv"] {
         let p = &by_name[name];
         add(spec_for_profile(p, "gcn", 2, "full", "").unwrap());
+        add(spec_for_profile(p, "gat", 2, "full", "").unwrap());
+        add(spec_for_profile(p, "appnp", 10, "full", "").unwrap());
         add(spec_for_profile(p, "gcnii", 8, "full", "").unwrap());
     }
     // Cluster-GCN / SAGE subgraph programs
@@ -396,7 +440,7 @@ pub fn test_spec(
         h,
         c,
         layers,
-        hist_dim: h,
+        hist_dim: hist_dim_for(model, h, c),
         loss: loss.into(),
         edge_weight: edge_weight_kind(model).into(),
         params: Vec::new(),
@@ -433,6 +477,10 @@ mod tests {
             "cora_gcn2_gas",
             "cora_gcn2_full",
             "cora_gcnii8_gas",
+            "cora_gat2_gas",
+            "cora_gat2_full",
+            "cora_appnp10_gas",
+            "cora_appnp10_full",
             "cora_gcnii64_gas_deep",
             "cora_gcnii64_full_deep",
             "cluster_gin4_gas",
@@ -440,6 +488,10 @@ mod tests {
             "cora_gcn4_gas",
             "cora_gcn4_full",
             "ppi_gcn2_gas",
+            "reddit_gat2_gas",
+            "reddit_appnp10_gas",
+            "flickr_gat2_full",
+            "arxiv_appnp10_full",
             "cora_gcn2_subg",
             "products_gcn2_gas",
             "fig4_gin4_nh512",
@@ -472,6 +524,37 @@ mod tests {
         assert_eq!(gin.len(), 2 * 5 + 2);
         assert_eq!(gin[0].shape, vec![8, 16]);
         assert_eq!(gin.last().unwrap().name, "head_b");
+        // gat: K=4 heads on hidden layers, single-head output layer
+        let gat = param_specs("gat", 2, 8, 16, 3);
+        let names: Vec<&str> = gat.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["w0", "asrc0", "adst0", "b0", "w1", "asrc1", "adst1", "b1"]);
+        assert_eq!(gat[0].shape, vec![8, 16]); // f x (4 heads * dh 4)
+        assert_eq!(gat[1].shape, vec![4, 4]);
+        assert_eq!(gat[4].shape, vec![16, 3]); // h x (1 head * dh c)
+        assert_eq!(gat[5].shape, vec![1, 3]);
+        // appnp: a plain 2-layer MLP, propagation has no parameters
+        let appnp = param_specs("appnp", 10, 8, 16, 3);
+        let names: Vec<&str> = appnp.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["mlp_w1", "mlp_b1", "mlp_w2", "mlp_b2"]);
+        assert_eq!(appnp[2].shape, vec![16, 3]);
+    }
+
+    #[test]
+    fn appnp_histories_are_class_dim() {
+        // configs.py: hist_dim = c if model == "appnp" else h
+        let m = native_manifest();
+        let s = m.artifact("cora_appnp10_gas").unwrap();
+        assert_eq!(s.hist_dim, s.c);
+        assert_eq!(s.layers, 10);
+        assert_eq!(s.edge_weight, "gcn_norm");
+        let hist = s.inputs.iter().find(|i| i.name == "hist").unwrap();
+        assert_eq!(hist.shape, vec![9, s.nh, s.c]);
+        // noise stays H-wide (max(hist_dim, h)) for shape parity
+        let noise = s.inputs.iter().find(|i| i.name == "noise").unwrap();
+        assert_eq!(noise.shape, vec![s.nt, s.h]);
+        let gat = m.artifact("cora_gat2_gas").unwrap();
+        assert_eq!(gat.hist_dim, gat.h);
+        assert_eq!(gat.edge_weight, "ones");
     }
 
     #[test]

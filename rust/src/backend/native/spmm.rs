@@ -210,6 +210,34 @@ pub fn scatter(ei: &EdgeIndex, z: &[f32], d: usize) -> Vec<f32> {
     out
 }
 
+/// Forward scatter-sum with *external* per-edge weights: `out[v] =
+/// Σ_{e -> v} edge_w[e] * z[src_e]`, where `edge_w` is indexed in the
+/// destination-major CSR edge order ([`EdgeIndex::dst_csr`]) and the
+/// index's own weights are ignored. This is the aggregation core of the
+/// GAT edge-softmax ([`super::attn`]): attention coefficients are
+/// per-edge values computed fresh every step, so they ride in as a weight
+/// array instead of being baked into the index. Same blocked macro-kernel
+/// (and therefore the same per-element CSR-order accumulation chains) as
+/// [`scatter`].
+pub fn scatter_weighted(ei: &EdgeIndex, edge_w: &[f32], z: &[f32], d: usize) -> Vec<f32> {
+    assert!(
+        edge_w.len() == ei.num_edges(),
+        "spmm::scatter_weighted: {} weights for {} edges",
+        edge_w.len(),
+        ei.num_edges()
+    );
+    assert!(
+        z.len() >= ei.n_src * d,
+        "spmm::scatter_weighted: z has {} values, n_src*d = {}",
+        z.len(),
+        ei.n_src * d
+    );
+    let mut out = vec![0f32; ei.n_out * d];
+    let (off, idx, _) = ei.dst_csr();
+    run_csr(off, idx, edge_w, z, d, &mut out);
+    out
+}
+
 /// Backward scatter-transpose, accumulating: `out[s] += Σ_{s -> (d,w)}
 /// w * dh[d]`; `dh` is `[n_out, d]`, `out` is `[n_src, d]` — the blocked
 /// drop-in for [`EdgeIndex::scatter_t_acc_scalar`]. Accumulator chains
@@ -277,6 +305,21 @@ mod tests {
             ei.scatter_t_acc_scalar(&dh, d, &mut scalar);
             assert_eq!(blocked, scalar, "bwd d={d}");
         }
+    }
+
+    #[test]
+    fn weighted_scatter_overrides_index_weights() {
+        // same index as above, but external weights [10, 100] replace the
+        // baked-in [2, 1]
+        let ei =
+            EdgeIndex::build(&[1, 2, 0, 0], &[0, 0, 0, 0], &[2.0, 1.0, 0.0, 0.0], 3, 2).unwrap();
+        let z = [10.0, 20.0, 1.0, 2.0, 100.0, 200.0]; // [3,2]
+        let out = scatter_weighted(&ei, &[10.0, 100.0], &z, 2);
+        assert_eq!(out, vec![10.0 * 1.0 + 100.0 * 100.0, 10.0 * 2.0 + 100.0 * 200.0, 0.0, 0.0]);
+        // passing the index's own weights reproduces the plain scatter
+        let (_, _, w) = ei.dst_csr();
+        let w = w.to_vec();
+        assert_eq!(scatter_weighted(&ei, &w, &z, 2), scatter(&ei, &z, 2));
     }
 
     #[test]

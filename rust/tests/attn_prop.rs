@@ -1,0 +1,164 @@
+//! Property tests for the CSR edge-softmax attention kernels
+//! (`backend/native/attn.rs`), in the same mold as `spmm_prop.rs` /
+//! `gemm_prop.rs`: the blocked, rayon-parallel paths must be **bitwise**
+//! identical to their serial scalar oracles on random graphs — ragged
+//! head dims, empty destination rows, padding edges included — and the
+//! normalized coefficients must actually be a softmax (rows sum to one,
+//! empty rows self-attend with weight exactly 1).
+
+use gas::backend::native::attn;
+use gas::backend::native::ops::EdgeIndex;
+use gas::util::prop;
+use gas::util::rng::Rng;
+
+struct Case {
+    ei: EdgeIndex,
+    /// the same edges rebuilt without any padding entries
+    ei_clean: EdgeIndex,
+    s_src: Vec<f32>,
+    s_dst: Vec<f32>,
+    z: Vec<f32>,
+    heads: usize,
+    dh: usize,
+    n_src: usize,
+    n_out: usize,
+}
+
+fn gen_case(rng: &mut Rng, big: bool) -> Case {
+    let (n_src, n_out, edges) = if big {
+        // clears the kernels' parallel thresholds (PAR_MIN_LANES) for
+        // every head/dh draw below: exercises the rayon block-splitting,
+        // not just the serial fallback
+        (1700, 1500, 4000)
+    } else {
+        (40 + rng.below(80), 20 + rng.below(60), rng.below(600))
+    };
+    // big cases pin heads*dh high enough that both edge_softmax
+    // ((e+nb)*K >= 2^14) and attn_scatter ((e+nb)*K*dh >= 2^14) go parallel
+    let heads = if big { 4 } else { [1, 2, 4][rng.below(3)] };
+    let dh = if big { [8, 16][rng.below(2)] } else { [1, 3, 8, 16][rng.below(4)] };
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    let mut w = Vec::new();
+    let (mut src_c, mut dst_c, mut w_c) = (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..edges {
+        let (s, d) = (rng.below(n_src) as i32, rng.below(n_out) as i32);
+        // ~15% padding edges (w = 0), dropped at build time like the
+        // padded artifacts'
+        let we = if rng.chance(0.15) { 0.0 } else { 1.0 };
+        src.push(s);
+        dst.push(d);
+        w.push(we);
+        if we != 0.0 {
+            src_c.push(s);
+            dst_c.push(d);
+            w_c.push(we);
+        }
+    }
+    let ei = EdgeIndex::build(&src, &dst, &w, n_src, n_out).unwrap();
+    let ei_clean = EdgeIndex::build(&src_c, &dst_c, &w_c, n_src, n_out).unwrap();
+    let s_src: Vec<f32> = (0..n_src * heads).map(|_| rng.normal_f32()).collect();
+    let s_dst: Vec<f32> = (0..n_out * heads).map(|_| rng.normal_f32()).collect();
+    let z: Vec<f32> = (0..n_src * heads * dh).map(|_| rng.normal_f32() * 0.5).collect();
+    Case { ei, ei_clean, s_src, s_dst, z, heads, dh, n_src, n_out }
+}
+
+fn check_case(c: &Case) -> bool {
+    let sm = attn::edge_softmax(&c.ei, &c.s_src, &c.s_dst, c.heads);
+    let sm_ref = attn::edge_softmax_scalar(&c.ei, &c.s_src, &c.s_dst, c.heads);
+    if sm.alpha.iter().map(|v| v.to_bits()).ne(sm_ref.alpha.iter().map(|v| v.to_bits())) {
+        eprintln!("blocked alpha != scalar alpha");
+        return false;
+    }
+    if sm.salpha.iter().map(|v| v.to_bits()).ne(sm_ref.salpha.iter().map(|v| v.to_bits())) {
+        eprintln!("blocked salpha != scalar salpha");
+        return false;
+    }
+    // padding edges contribute nothing: the padded and clean builds agree
+    let sm_clean = attn::edge_softmax(&c.ei_clean, &c.s_src, &c.s_dst, c.heads);
+    if sm.alpha != sm_clean.alpha || sm.salpha != sm_clean.salpha {
+        eprintln!("padding edges leaked into the softmax");
+        return false;
+    }
+    // each (row, head) is a distribution over N(v) ∪ {v}. Row degrees and
+    // the dst-CSR edge→row map are recovered through the public scatter
+    // (a 1-dim all-ones scatter counts each row's real edges; expanding
+    // the counts reproduces dst-major edge order).
+    let deg: Vec<usize> = {
+        let ones = vec![1f32; c.n_src];
+        let w = vec![1f32; c.ei.num_edges()];
+        gas::backend::native::spmm::scatter_weighted(&c.ei, &w, &ones, 1)
+            .iter()
+            .map(|&d| d as usize)
+            .collect()
+    };
+    let mut dst_of = Vec::with_capacity(c.ei.num_edges());
+    for (v, &dv) in deg.iter().enumerate() {
+        dst_of.extend(std::iter::repeat(v).take(dv));
+    }
+    let mut per_row = vec![0f64; c.n_out * c.heads];
+    for (e, a) in sm_ref.alpha.chunks(c.heads).enumerate() {
+        let v = dst_of[e];
+        for (kk, &av) in a.iter().enumerate() {
+            if av < 0.0 {
+                eprintln!("negative alpha at edge {e} head {kk}");
+                return false;
+            }
+            per_row[v * c.heads + kk] += av as f64;
+        }
+    }
+    for v in 0..c.n_out {
+        for kk in 0..c.heads {
+            let sa = sm.salpha[v * c.heads + kk];
+            let total = per_row[v * c.heads + kk] + sa as f64;
+            if (total - 1.0).abs() > 1e-5 {
+                eprintln!("row {v} head {kk} sums to {total}");
+                return false;
+            }
+            if deg[v] == 0 && sa != 1.0 {
+                eprintln!("empty row {v} head {kk}: salpha {sa} != 1");
+                return false;
+            }
+        }
+    }
+    // blocked aggregation == scalar aggregation, bit for bit
+    let blocked = attn::attn_scatter(&c.ei, &sm, &c.z, c.heads, c.dh);
+    let scalar = attn::attn_scatter_scalar(&c.ei, &sm_ref, &c.z, c.heads, c.dh);
+    if blocked.iter().map(|v| v.to_bits()).ne(scalar.iter().map(|v| v.to_bits())) {
+        eprintln!("blocked attn_scatter != scalar");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn blocked_softmax_and_scatter_match_scalar_bitwise() {
+    prop::check(0xa77_50f7, 12, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        check_case(&gen_case(&mut rng, false))
+    });
+}
+
+#[test]
+fn parallel_path_matches_scalar_bitwise() {
+    // one deterministic big case per seed: clears PAR_MIN_LANES
+    prop::check(0xb16_a77, 3, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        check_case(&gen_case(&mut rng, true))
+    });
+}
+
+#[test]
+fn all_padding_graph_is_pure_self_attention() {
+    // every edge is padding: each row attends only to itself
+    let ei = EdgeIndex::build(&[0, 1, 2], &[0, 1, 2], &[0.0, 0.0, 0.0], 3, 3).unwrap();
+    assert_eq!(ei.num_edges(), 0);
+    let s_src = [0.5f32, -1.0, 2.0];
+    let s_dst = [0.1f32, 0.2, 0.3];
+    let sm = attn::edge_softmax(&ei, &s_src, &s_dst, 1);
+    assert!(sm.alpha.is_empty());
+    assert_eq!(sm.salpha, vec![1.0, 1.0, 1.0]);
+    let z = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
+    let out = attn::attn_scatter(&ei, &sm, &z, 1, 2);
+    assert_eq!(out, z.to_vec());
+}

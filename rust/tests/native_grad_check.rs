@@ -6,8 +6,10 @@
 //! scatters, no CSR, no rayon) recomputes the loss; central differences in
 //! f64 (eps small, no ReLU-kink flakiness at f32 scale) are compared
 //! against the f32 analytic gradients for **every coordinate of every
-//! parameter** of gcn / gcnii / gin, both programs, both losses, with and
-//! without the Lipschitz reg-noise branch.
+//! parameter** of gcn / gcnii / gin / gat / appnp, both programs, both
+//! losses, with and without the Lipschitz reg-noise branch (a no-op for
+//! gat/appnp, whose artifacts compile no reg branch — checked too, since
+//! a spurious reg contribution would break the FD match).
 
 use gas::backend::native::{registry, NativeArtifact};
 use gas::model::ParamStore;
@@ -150,6 +152,8 @@ impl RefCase {
             "gcn" => self.loss_gcn(params),
             "gcnii" => self.loss_gcnii(params),
             "gin" => self.loss_gin(params),
+            "gat" => self.loss_gat(params),
+            "appnp" => self.loss_appnp(params),
             other => panic!("no reference for {other}"),
         }
     }
@@ -301,6 +305,110 @@ impl RefCase {
         }
         self.task_loss(&logits) + self.reg_lambda * reg
     }
+
+    /// GAT: per head, softmax(leaky(s_src + s_dst)) over N(v) ∪ {v}, the
+    /// max stop-gradiented (softmax is shift-invariant), ELU between
+    /// layers. Mirrors python/compile/models.py::gat_layer in f64.
+    fn loss_gat(&self, params: &[Vec<f64>]) -> f64 {
+        let s = &self.spec;
+        let rows = self.rows();
+        let nb = s.nb;
+        let leaky = |x: f64| if x >= 0.0 { x } else { 0.2 * x };
+        let mut dims = vec![s.h; s.layers + 1];
+        dims[0] = s.f;
+        dims[s.layers] = s.c;
+        let mut src_t = self.x.clone();
+        let mut logits = Vec::new();
+        for l in 0..s.layers {
+            let asrc = self.pget(params, &format!("asrc{l}"));
+            let ai = s.params.iter().position(|p| p.name == format!("asrc{l}")).unwrap();
+            let (k, dh) = (s.params[ai].shape[0], s.params[ai].shape[1]);
+            let wc = k * dh;
+            let adst = self.pget(params, &format!("adst{l}"));
+            let b = self.pget(params, &format!("b{l}"));
+            let z = matmul(&src_t, rows, dims[l], self.pget(params, &format!("w{l}")), wc);
+            let score = |n: usize, kk: usize, a: &[f64]| -> f64 {
+                (0..dh).map(|d| z[n * wc + kk * dh + d] * a[kk * dh + d]).sum()
+            };
+            let mut out = vec![0f64; nb * wc];
+            for v in 0..nb {
+                for kk in 0..k {
+                    let sd = score(v, kk, adst);
+                    let es = leaky(score(v, kk, asrc) + sd);
+                    let mut mx = es;
+                    for &(sn, t, _) in &self.edges {
+                        if t == v {
+                            mx = mx.max(leaky(score(sn, kk, asrc) + sd));
+                        }
+                    }
+                    let mut denom = 0f64;
+                    let mut num = vec![0f64; dh];
+                    for &(sn, t, _) in &self.edges {
+                        if t == v {
+                            let ex = (leaky(score(sn, kk, asrc) + sd) - mx).exp();
+                            denom += ex;
+                            for d in 0..dh {
+                                num[d] += ex * z[sn * wc + kk * dh + d];
+                            }
+                        }
+                    }
+                    let ex_self = (es - mx).exp();
+                    denom += ex_self;
+                    let dg = denom.max(1e-16);
+                    for d in 0..dh {
+                        out[v * wc + kk * dh + d] =
+                            (num[d] + ex_self * z[v * wc + kk * dh + d]) / dg + b[kk * dh + d];
+                    }
+                }
+            }
+            if l + 1 < s.layers {
+                let h: Vec<f64> =
+                    out.iter().map(|&x| if x > 0.0 { x } else { x.exp() - 1.0 }).collect();
+                src_t = if self.full() { h } else { self.concat(&h, l, wc) };
+            } else {
+                logits = out;
+            }
+        }
+        self.task_loss(&logits)
+    }
+
+    /// APPNP: MLP prediction (exact for all rows), then `layers` teleport
+    /// propagation steps over C-dim states; histories are C-dim.
+    fn loss_appnp(&self, params: &[Vec<f64>]) -> f64 {
+        let s = &self.spec;
+        let rows = self.rows();
+        let (nb, c, hd) = (s.nb, s.c, s.h);
+        let mut u = matmul(&self.x, rows, s.f, self.pget(params, "mlp_w1"), hd);
+        let b1 = self.pget(params, "mlp_b1");
+        for v in 0..rows {
+            for j in 0..hd {
+                u[v * hd + j] += b1[j];
+            }
+        }
+        let z = relu(&u);
+        let mut h0 = matmul(&z, rows, hd, self.pget(params, "mlp_w2"), c);
+        let b2 = self.pget(params, "mlp_b2");
+        for v in 0..rows {
+            for j in 0..c {
+                h0[v * c + j] += b2[j];
+            }
+        }
+        let mut h = h0[..nb * c].to_vec();
+        for l in 0..s.layers {
+            let srcs: Vec<f64> = if self.full() {
+                h.clone()
+            } else if l == 0 {
+                h0.clone()
+            } else {
+                self.concat(&h, l - 1, c)
+            };
+            let prop = self.propagate(&srcs, c);
+            for i in 0..nb * c {
+                h[i] = (1.0 - self.alpha) * prop[i] + self.alpha * h0[i];
+            }
+        }
+        self.task_loss(&h)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -358,7 +466,9 @@ fn grad_check(
     reg: f32,
     seed: u64,
 ) -> Result<(), String> {
-    let spec = registry::test_spec(model, layers, program, 5, 3, 24, 3, 4, 3, loss);
+    // gat runs multi-dim heads (h = 8 -> 4 heads x dh 2); others keep h = 4
+    let h = if model == "gat" { 8 } else { 4 };
+    let spec = registry::test_spec(model, layers, program, 5, 3, 24, 3, h, 3, loss);
     let (case, params) = build_case(spec.clone(), reg, seed);
     let art = NativeArtifact::new(spec.clone()).map_err(|e| e.to_string())?;
 
@@ -512,4 +622,52 @@ fn gin_full_ce() {
 #[test]
 fn gin_gas_bce() {
     run_config("gin", 2, "gas", "bce", 0.0);
+}
+
+#[test]
+fn gat_gas_ce() {
+    run_config("gat", 3, "gas", "ce", 0.0);
+}
+
+#[test]
+fn gat_full_ce() {
+    run_config("gat", 2, "full", "ce", 0.0);
+}
+
+#[test]
+fn gat_gas_bce() {
+    run_config("gat", 2, "gas", "bce", 0.0);
+}
+
+#[test]
+fn gat_gas_ce_reg_is_noop() {
+    // gat artifacts compile no reg branch: grads must still match the
+    // (reg-free) reference with reg_lambda > 0
+    run_config("gat", 2, "gas", "ce", 0.3);
+}
+
+#[test]
+fn appnp_gas_ce() {
+    run_config("appnp", 4, "gas", "ce", 0.0);
+}
+
+#[test]
+fn appnp_full_ce() {
+    run_config("appnp", 4, "full", "ce", 0.0);
+}
+
+#[test]
+fn appnp_gas_bce() {
+    run_config("appnp", 3, "gas", "bce", 0.0);
+}
+
+#[test]
+fn appnp_gas_ce_reg_is_noop() {
+    run_config("appnp", 4, "gas", "ce", 0.3);
+}
+
+#[test]
+fn appnp_gas_ce_paper_depth() {
+    // the table-1 configuration: 10 teleport steps
+    run_config("appnp", 10, "gas", "ce", 0.0);
 }

@@ -1,0 +1,799 @@
+//! Tape-refactor regression harness.
+//!
+//! The layer-op tape (`backend/native/layers.rs`) replaced three
+//! hand-unrolled fwd+bwd interpreters. Its contract is *bit-compatibility*:
+//! same kernels, same operand order, same history-splice points, same
+//! gradient-accumulation grouping. This file keeps the pre-refactor
+//! interpreters **verbatim** (module [`legacy`] below — only `use` paths
+//! changed) and asserts:
+//!
+//! 1. per-step `to_bits` equality of loss / grads / push / logits between
+//!    the tape and the legacy code, across models × programs × losses ×
+//!    reg on/off × seeds;
+//! 2. bit-identical end-to-end training curves when the whole GAS loop
+//!    (partition → halo → history pipeline → Adam) runs on either
+//!    interpreter;
+//! 3. the tape's curves against **recorded seed curves**
+//!    (`rust/tests/data/tape_seed_curves.json`), guarding the refactored
+//!    code itself against future drift — not just parity between two
+//!    in-tree code paths. Record with `GAS_RECORD_SEED_CURVES=1 cargo
+//!    test --test tape_regression` (CI's main-only refresh step seeds the
+//!    file the same way when it is absent).
+
+use gas::backend::native::models::StepCtx;
+use gas::backend::native::ops::EdgeIndex;
+use gas::backend::native::{registry, NativeArtifact};
+use gas::baselines::naive_history::gas_config;
+use gas::graph::datasets::{Dataset, Profile};
+use gas::history::PipelineMode;
+use gas::model::ParamStore;
+use gas::runtime::manifest::ArtifactSpec;
+use gas::runtime::{Executor, Prepared, StepInputs, StepOutputs};
+use gas::train::Trainer;
+use gas::util::rng::Rng;
+
+/// The pre-refactor interpreters, kept verbatim (imports aside) as the
+/// reference the tape must reproduce bit for bit.
+mod legacy {
+    use gas::backend::native::gemm;
+    use gas::backend::native::models::{Params, StepCtx};
+    use gas::backend::native::ops;
+    use gas::backend::native::spmm;
+    use gas::runtime::manifest::ArtifactSpec;
+    use gas::runtime::StepOutputs;
+    use anyhow::{bail, Result};
+
+    pub fn run_model(cx: &StepCtx, params: &[Vec<f32>]) -> Result<StepOutputs> {
+        let p = Params::new(cx.spec, params)?;
+        match cx.spec.model.as_str() {
+            "gcn" => run_gcn(cx, &p),
+            "gcnii" => run_gcnii(cx, &p),
+            "gin" => run_gin(cx, &p),
+            other => bail!("legacy interpreter covers gcn/gcnii/gin, not {other:?}"),
+        }
+    }
+
+    fn zero_grads(spec: &ArtifactSpec) -> Vec<Vec<f32>> {
+        spec.params
+            .iter()
+            .map(|p| vec![0f32; p.shape.iter().product()])
+            .collect()
+    }
+
+    fn concat_sources(h_batch: &[f32], hist_l: &[f32], nb: usize, nh: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0f32; (nb + nh) * d];
+        out[..nb * d].copy_from_slice(&h_batch[..nb * d]);
+        out[nb * d..].copy_from_slice(&hist_l[..nh * d]);
+        out
+    }
+
+    fn stack_push(layers: &[&[f32]], nb: usize, hd: usize) -> Vec<f32> {
+        let mut out = vec![0f32; layers.len() * nb * hd];
+        for (l, h) in layers.iter().enumerate() {
+            out[l * nb * hd..(l + 1) * nb * hd].copy_from_slice(&h[..nb * hd]);
+        }
+        out
+    }
+
+    fn run_gcn(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
+        let spec = cx.spec;
+        let big_l = spec.layers;
+        let (nb, nh, hd) = (spec.nb, spec.nh, spec.hist_dim);
+        let rows = cx.rows();
+        let full = cx.full();
+        let self_w = cx.self_weights();
+        let mut dims = vec![spec.h; big_l + 1];
+        dims[0] = spec.f;
+        dims[big_l] = spec.c;
+
+        // forward, keeping layer inputs + pre-activations for the backward
+        let mut srcs: Vec<Vec<f32>> = Vec::with_capacity(big_l - 1); // input of layer l>=1
+        let mut pres: Vec<Vec<f32>> = Vec::with_capacity(big_l);
+        for l in 0..big_l {
+            let (din, dout) = (dims[l], dims[l + 1]);
+            let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
+            let z = gemm::matmul(src_l, rows, din, p.get(&format!("w{l}"))?, dout);
+            let mut pre = spmm::scatter(cx.edges, &z, dout);
+            for v in 0..nb {
+                let zr = &z[v * dout..v * dout + dout];
+                let pr = &mut pre[v * dout..v * dout + dout];
+                for j in 0..dout {
+                    pr[j] += self_w[v] * zr[j];
+                }
+            }
+            ops::add_bias(&mut pre, nb, dout, p.get(&format!("b{l}"))?);
+            if l + 1 < big_l {
+                let h = ops::relu(&pre);
+                srcs.push(if full {
+                    h
+                } else {
+                    concat_sources(&h, cx.hist_layer(l), nb, nh, dout)
+                });
+            }
+            pres.push(pre);
+        }
+        let logits = pres[big_l - 1][..nb * spec.c].to_vec();
+        let push_layers: Vec<&[f32]> = srcs.iter().map(|s| s.as_slice()).collect();
+        let push = stack_push(&push_layers, nb, hd);
+
+        // backward
+        let (task, mut dpre) = cx.task_loss(&logits);
+        let mut grads = zero_grads(spec);
+        for l in (0..big_l).rev() {
+            let (din, dout) = (dims[l], dims[l + 1]);
+            let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
+            ops::colsum_acc(&dpre, nb, dout, &mut grads[p.idx(&format!("b{l}"))?]);
+            let mut dz = vec![0f32; rows * dout];
+            spmm::scatter_t_acc(cx.edges, &dpre, dout, &mut dz);
+            for v in 0..nb {
+                let dr = &dpre[v * dout..v * dout + dout];
+                let zr = &mut dz[v * dout..v * dout + dout];
+                for j in 0..dout {
+                    zr[j] += self_w[v] * dr[j];
+                }
+            }
+            gemm::matmul_at_b_acc(
+                src_l,
+                rows,
+                din,
+                &dz,
+                dout,
+                &mut grads[p.idx(&format!("w{l}"))?],
+            );
+            if l > 0 {
+                let dsrc = gemm::matmul_bt(&dz, rows, dout, p.get(&format!("w{l}"))?, din);
+                // history rows are inputs: gradient stops at the batch rows
+                dpre = ops::relu_bwd(&dsrc[..nb * din], &pres[l - 1][..nb * din]);
+            }
+        }
+        Ok(StepOutputs { loss: task, grads, push, logits })
+    }
+
+    fn run_gcnii(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
+        let spec = cx.spec;
+        let big_l = spec.layers;
+        let (nb, nh, hdim) = (spec.nb, spec.nh, spec.h);
+        let rows = cx.rows();
+        let full = cx.full();
+        let (alpha, lam) = (cx.alpha, cx.lam);
+        let self_w = cx.self_weights();
+        let betas: Vec<f32> = (1..=big_l).map(|l| (lam / l as f32 + 1.0).ln()).collect();
+        let w_stack = p.get("w_stack")?;
+        let reg_on = cx.reg_on();
+
+        // input projection (exact for batch AND halo rows)
+        let mut t0 = gemm::matmul(cx.x, rows, spec.f, p.get("w_in")?, hdim);
+        ops::add_bias(&mut t0, rows, hdim, p.get("b_in")?);
+        let h0 = ops::relu(&t0);
+
+        // forward scan
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(big_l); // h_1..h_L [nb, hdim]
+        let mut hns: Vec<Vec<f32>> = Vec::with_capacity(big_l);
+        let mut pres: Vec<Vec<f32>> = Vec::with_capacity(big_l);
+        let mut hns_p: Vec<Vec<f32>> = Vec::new();
+        let mut pres_p: Vec<Vec<f32>> = Vec::new();
+        let mut outs_p: Vec<Vec<f32>> = Vec::new();
+        let mut reg = 0f32;
+        for l in 0..big_l {
+            let beta = betas[l];
+            let wl = &w_stack[l * hdim * hdim..(l + 1) * hdim * hdim];
+            let h_prev: &[f32] = if l == 0 { &h0 } else { &outs[l - 1] };
+            let srcs: Vec<f32> = if full {
+                h_prev[..rows * hdim].to_vec()
+            } else if l == 0 {
+                // layer-1 halo sources are the exact h0 rows (no staleness)
+                h0.clone()
+            } else {
+                concat_sources(h_prev, cx.hist_layer(l - 1), nb, nh, hdim)
+            };
+            let layer_fwd = |s: &[f32]| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+                let mut prop = spmm::scatter(cx.edges, s, hdim);
+                for v in 0..nb {
+                    let sr = &s[v * hdim..v * hdim + hdim];
+                    let pr = &mut prop[v * hdim..v * hdim + hdim];
+                    for j in 0..hdim {
+                        pr[j] += self_w[v] * sr[j];
+                    }
+                }
+                let mut hn = prop;
+                for v in 0..nb * hdim {
+                    hn[v] = (1.0 - alpha) * hn[v] + alpha * h0[v];
+                }
+                let q = gemm::matmul(&hn, nb, hdim, wl, hdim);
+                let mut pre = vec![0f32; nb * hdim];
+                for i in 0..nb * hdim {
+                    pre[i] = (1.0 - beta) * hn[i] + beta * q[i];
+                }
+                let out = ops::relu(&pre);
+                (hn, pre, out)
+            };
+            let (hn, pre, out) = layer_fwd(&srcs);
+            if reg_on {
+                let srcs_p = cx.perturb(&srcs, rows, hdim);
+                let (hn_p, pre_p, out_p) = layer_fwd(&srcs_p);
+                let mut acc = 0f64;
+                for i in 0..nb * hdim {
+                    let d = (out[i] - out_p[i]) as f64;
+                    acc += d * d;
+                }
+                reg += (acc / nb as f64) as f32;
+                hns_p.push(hn_p);
+                pres_p.push(pre_p);
+                outs_p.push(out_p);
+            }
+            hns.push(hn);
+            pres.push(pre);
+            outs.push(out);
+        }
+        let mut logits = gemm::matmul(&outs[big_l - 1], nb, hdim, p.get("w_out")?, spec.c);
+        ops::add_bias(&mut logits, nb, spec.c, p.get("b_out")?);
+        let push_layers: Vec<&[f32]> = outs[..big_l - 1].iter().map(|o| o.as_slice()).collect();
+        let push = stack_push(&push_layers, nb, spec.hist_dim);
+
+        // backward
+        let (task, dlogits) = cx.task_loss(&logits);
+        let loss_val = task + cx.reg_lambda * reg;
+        let mut grads = zero_grads(spec);
+        gemm::matmul_at_b_acc(
+            &outs[big_l - 1],
+            nb,
+            hdim,
+            &dlogits,
+            spec.c,
+            &mut grads[p.idx("w_out")?],
+        );
+        ops::colsum_acc(&dlogits, nb, spec.c, &mut grads[p.idx("b_out")?]);
+        let mut dh = gemm::matmul_bt(&dlogits, nb, spec.c, p.get("w_out")?, hdim);
+        let mut dh0 = vec![0f32; rows * hdim];
+        let ws_idx = p.idx("w_stack")?;
+        for l in (0..big_l).rev() {
+            let beta = betas[l];
+            let wl = &w_stack[l * hdim * hdim..(l + 1) * hdim * hdim];
+            let mut dout = dh;
+            let mut dout_p: Option<Vec<f32>> = None;
+            if reg_on {
+                let coef = cx.reg_lambda * 2.0 / nb as f32;
+                let mut dp = vec![0f32; nb * hdim];
+                for i in 0..nb * hdim {
+                    let g = coef * (outs[l][i] - outs_p[l][i]);
+                    dout[i] += g;
+                    dp[i] = -g;
+                }
+                dout_p = Some(dp);
+            }
+            let mut dsrc = vec![0f32; rows * hdim];
+            let mut branch =
+                |do_b: &[f32], hn_b: &[f32], pre_b: &[f32], grads: &mut Vec<Vec<f32>>| {
+                    let dpre = ops::relu_bwd(do_b, pre_b);
+                    let mut dq = vec![0f32; nb * hdim];
+                    for i in 0..nb * hdim {
+                        dq[i] = beta * dpre[i];
+                    }
+                    gemm::matmul_at_b_acc(
+                        hn_b,
+                        nb,
+                        hdim,
+                        &dq,
+                        hdim,
+                        &mut grads[ws_idx][l * hdim * hdim..(l + 1) * hdim * hdim],
+                    );
+                    let mut dhn = gemm::matmul_bt(&dq, nb, hdim, wl, hdim);
+                    for i in 0..nb * hdim {
+                        dhn[i] += (1.0 - beta) * dpre[i];
+                    }
+                    for i in 0..nb * hdim {
+                        dh0[i] += alpha * dhn[i];
+                    }
+                    let mut dprop = dhn;
+                    for v in dprop.iter_mut() {
+                        *v *= 1.0 - alpha;
+                    }
+                    spmm::scatter_t_acc(cx.edges, &dprop, hdim, &mut dsrc);
+                    for v in 0..nb {
+                        let dr = &dprop[v * hdim..v * hdim + hdim];
+                        let sr = &mut dsrc[v * hdim..v * hdim + hdim];
+                        for j in 0..hdim {
+                            sr[j] += self_w[v] * dr[j];
+                        }
+                    }
+                };
+            branch(&dout, &hns[l], &pres[l], &mut grads);
+            if let Some(dp) = dout_p {
+                branch(&dp, &hns_p[l], &pres_p[l], &mut grads);
+            }
+            if l == 0 {
+                // h_0 sources: batch rows are h0b, halo rows (gas) are h0 too
+                for i in 0..rows * hdim {
+                    dh0[i] += dsrc[i];
+                }
+                dh = Vec::new();
+            } else {
+                // layers 2..L read halo rows from history: gradient stops there
+                dsrc.truncate(nb * hdim);
+                dh = dsrc;
+            }
+        }
+        let dt0 = ops::relu_bwd(&dh0, &t0);
+        gemm::matmul_at_b_acc(cx.x, rows, spec.f, &dt0, hdim, &mut grads[p.idx("w_in")?]);
+        ops::colsum_acc(&dt0, rows, hdim, &mut grads[p.idx("b_in")?]);
+        let _ = dh;
+        Ok(StepOutputs { loss: loss_val, grads, push, logits })
+    }
+
+    struct GinTape {
+        pre: Vec<f32>,
+        u: Vec<f32>,
+        a: Vec<f32>,
+        o: Vec<f32>,
+    }
+
+    fn run_gin(cx: &StepCtx, p: &Params) -> Result<StepOutputs> {
+        let spec = cx.spec;
+        let big_l = spec.layers;
+        let (nb, nh, h) = (spec.nb, spec.nh, spec.h);
+        let rows = cx.rows();
+        let full = cx.full();
+        let mut dims = vec![h; big_l + 1];
+        dims[0] = spec.f;
+
+        let gin_fwd = |l: usize, src_l: &[f32], din: usize| -> Result<GinTape> {
+            let eps = p.get(&format!("eps{l}"))?[0];
+            let mut pre = spmm::scatter(cx.edges, src_l, din);
+            for i in 0..nb * din {
+                pre[i] += (1.0 + eps) * src_l[i];
+            }
+            let mut u = gemm::matmul(&pre, nb, din, p.get(&format!("mlp{l}_w1"))?, h);
+            ops::add_bias(&mut u, nb, h, p.get(&format!("mlp{l}_b1"))?);
+            let a = ops::relu(&u);
+            let mut o = gemm::matmul(&a, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
+            ops::add_bias(&mut o, nb, h, p.get(&format!("mlp{l}_b2"))?);
+            Ok(GinTape { pre, u, a, o })
+        };
+
+        // forward
+        let mut srcs: Vec<Vec<f32>> = Vec::with_capacity(big_l); // input of layer l>=1
+        let mut tapes: Vec<GinTape> = Vec::with_capacity(big_l);
+        let mut tapes_p: Vec<Option<(Vec<f32>, GinTape)>> = Vec::with_capacity(big_l);
+        let mut h_last = Vec::new();
+        let mut reg = 0f32;
+        for l in 0..big_l {
+            let din = dims[l];
+            let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
+            let tape = gin_fwd(l, src_l, din)?;
+            // reg only from layer 1 on: layer-0 inputs are F-dim features
+            if cx.reg_on() && l > 0 {
+                let src_p = cx.perturb(src_l, rows, din);
+                let tape_p = gin_fwd(l, &src_p, din)?;
+                let mut acc = 0f64;
+                for i in 0..nb * h {
+                    let d = (tape.o[i] - tape_p.o[i]) as f64;
+                    acc += d * d;
+                }
+                reg += (acc / nb as f64) as f32;
+                tapes_p.push(Some((src_p, tape_p)));
+            } else {
+                tapes_p.push(None);
+            }
+            let hn = ops::relu(&tape.o);
+            if l + 1 < big_l {
+                srcs.push(if full {
+                    hn
+                } else {
+                    concat_sources(&hn, cx.hist_layer(l), nb, nh, h)
+                });
+            } else {
+                h_last = hn;
+            }
+            tapes.push(tape);
+        }
+        let mut logits = gemm::matmul(&h_last, nb, h, p.get("head_w")?, spec.c);
+        ops::add_bias(&mut logits, nb, spec.c, p.get("head_b")?);
+        let push_layers: Vec<&[f32]> = srcs.iter().map(|s| s.as_slice()).collect();
+        let push = stack_push(&push_layers, nb, spec.hist_dim);
+
+        // backward
+        let (task, dlogits) = cx.task_loss(&logits);
+        let loss_val = task + cx.reg_lambda * reg;
+        let mut grads = zero_grads(spec);
+        gemm::matmul_at_b_acc(&h_last, nb, h, &dlogits, spec.c, &mut grads[p.idx("head_w")?]);
+        ops::colsum_acc(&dlogits, nb, spec.c, &mut grads[p.idx("head_b")?]);
+        let mut dh = gemm::matmul_bt(&dlogits, nb, spec.c, p.get("head_w")?, h);
+        for l in (0..big_l).rev() {
+            let din = dims[l];
+            let src_l: &[f32] = if l == 0 { cx.x } else { &srcs[l - 1] };
+            let tape = &tapes[l];
+            let mut do_ = ops::relu_bwd(&dh, &tape.o);
+            let mut do_p: Option<Vec<f32>> = None;
+            if let Some((_, tape_p)) = &tapes_p[l] {
+                let coef = cx.reg_lambda * 2.0 / nb as f32;
+                let mut dp = vec![0f32; nb * h];
+                for i in 0..nb * h {
+                    let g = coef * (tape.o[i] - tape_p.o[i]);
+                    do_[i] += g;
+                    dp[i] = -g;
+                }
+                do_p = Some(dp);
+            }
+            let mut dsrc = vec![0f32; rows * din];
+            gin_branch_bwd(cx, p, l, din, &do_, tape, src_l, &mut grads, &mut dsrc)?;
+            if let (Some(dp), Some((src_p, tape_p))) = (do_p, &tapes_p[l]) {
+                gin_branch_bwd(cx, p, l, din, &dp, tape_p, src_p, &mut grads, &mut dsrc)?;
+            }
+            if l > 0 {
+                // dsrc[:nb] is the gradient w.r.t. h_l = relu(o_{l-1}); the
+                // relu' mask is applied at the top of the next iteration
+                dsrc.truncate(nb * din);
+                dh = dsrc;
+            }
+        }
+        Ok(StepOutputs { loss: loss_val, grads, push, logits })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gin_branch_bwd(
+        cx: &StepCtx,
+        p: &Params,
+        l: usize,
+        din: usize,
+        do_: &[f32],
+        tape: &GinTape,
+        src_l: &[f32],
+        grads: &mut [Vec<f32>],
+        dsrc: &mut [f32],
+    ) -> Result<()> {
+        let spec = cx.spec;
+        let (nb, h) = (spec.nb, spec.h);
+        let eps = p.get(&format!("eps{l}"))?[0];
+        gemm::matmul_at_b_acc(&tape.a, nb, h, do_, h, &mut grads[p.idx(&format!("mlp{l}_w2"))?]);
+        ops::colsum_acc(do_, nb, h, &mut grads[p.idx(&format!("mlp{l}_b2"))?]);
+        let da = gemm::matmul_bt(do_, nb, h, p.get(&format!("mlp{l}_w2"))?, h);
+        let du = ops::relu_bwd(&da, &tape.u);
+        gemm::matmul_at_b_acc(
+            &tape.pre,
+            nb,
+            din,
+            &du,
+            h,
+            &mut grads[p.idx(&format!("mlp{l}_w1"))?],
+        );
+        ops::colsum_acc(&du, nb, h, &mut grads[p.idx(&format!("mlp{l}_b1"))?]);
+        let dpre = gemm::matmul_bt(&du, nb, h, p.get(&format!("mlp{l}_w1"))?, din);
+        let mut deps = 0f32;
+        for i in 0..nb * din {
+            deps += dpre[i] * src_l[i];
+        }
+        grads[p.idx(&format!("eps{l}"))?][0] += deps;
+        for i in 0..nb * din {
+            dsrc[i] += (1.0 + eps) * dpre[i];
+        }
+        spmm::scatter_t_acc(cx.edges, &dpre, din, dsrc);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// a legacy-backed Executor, so the whole GAS loop can run on the old code
+// ---------------------------------------------------------------------------
+
+struct LegacyStatics {
+    x: Vec<f32>,
+    deg: Vec<f32>,
+    labels_i: Vec<i32>,
+    labels_f: Vec<f32>,
+    mask: Vec<f32>,
+    edges: EdgeIndex,
+    noise: Option<Vec<f32>>,
+}
+
+struct LegacyArtifact {
+    spec: ArtifactSpec,
+}
+
+impl LegacyArtifact {
+    fn n_src(&self) -> usize {
+        if self.spec.is_full() {
+            self.spec.nb
+        } else {
+            self.spec.nt
+        }
+    }
+
+    fn statics(&self, inp: &StepInputs, cache_noise: bool) -> anyhow::Result<LegacyStatics> {
+        let edges = EdgeIndex::build(
+            inp.edge_src,
+            inp.edge_dst,
+            inp.edge_w,
+            self.n_src(),
+            self.spec.nb,
+        )?;
+        Ok(LegacyStatics {
+            x: inp.x.to_vec(),
+            deg: inp.deg.to_vec(),
+            labels_i: inp.labels_i.map(|l| l.to_vec()).unwrap_or_default(),
+            labels_f: inp.labels_f.map(|l| l.to_vec()).unwrap_or_default(),
+            mask: inp.label_mask.to_vec(),
+            edges,
+            noise: if cache_noise { Some(inp.noise.to_vec()) } else { None },
+        })
+    }
+
+    fn run_on(
+        &self,
+        params: &[Vec<f32>],
+        st: &LegacyStatics,
+        hist: &[f32],
+        noise: &[f32],
+        reg_lambda: f32,
+    ) -> anyhow::Result<StepOutputs> {
+        let cx = StepCtx {
+            spec: &self.spec,
+            edges: &st.edges,
+            x: &st.x,
+            deg: &st.deg,
+            labels_i: &st.labels_i,
+            labels_f: &st.labels_f,
+            mask: &st.mask,
+            hist,
+            noise,
+            reg_lambda,
+            alpha: 0.1,
+            lam: 1.0,
+        };
+        legacy::run_model(&cx, params)
+    }
+}
+
+impl Executor for LegacyArtifact {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn prepare_static(&self, inp: &StepInputs, cache_noise: bool) -> anyhow::Result<Prepared> {
+        Ok(Prepared::new(self.statics(inp, cache_noise)?))
+    }
+
+    fn run_prepared(
+        &self,
+        params: &[Vec<f32>],
+        statics: &Prepared,
+        hist: &[f32],
+        noise: &[f32],
+        reg_lambda: f32,
+    ) -> anyhow::Result<StepOutputs> {
+        let st = statics.downcast::<LegacyStatics>()?;
+        let noise = st.noise.as_deref().unwrap_or(noise);
+        self.run_on(params, st, hist, noise, reg_lambda)
+    }
+
+    fn run(&self, params: &[Vec<f32>], inp: &StepInputs) -> anyhow::Result<StepOutputs> {
+        let st = self.statics(inp, false)?;
+        self.run_on(params, &st, inp.hist, inp.noise, inp.reg_lambda)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. per-step bitwise parity on random inputs
+// ---------------------------------------------------------------------------
+
+struct CaseInputs {
+    x: Vec<f32>,
+    e_src: Vec<i32>,
+    e_dst: Vec<i32>,
+    e_w: Vec<f32>,
+    hist: Vec<f32>,
+    deg: Vec<f32>,
+    labels_i: Vec<i32>,
+    labels_f: Vec<f32>,
+    mask: Vec<f32>,
+    noise: Vec<f32>,
+}
+
+fn gen_inputs(spec: &ArtifactSpec, seed: u64) -> CaseInputs {
+    let mut rng = Rng::new(seed);
+    let rows = if spec.is_full() { spec.nb } else { spec.nt };
+    let x: Vec<f32> = (0..rows * spec.f).map(|_| rng.normal_f32() * 0.6).collect();
+    let n_real = 14.min(spec.e);
+    let (mut e_src, mut e_dst, mut e_w) = (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..n_real {
+        e_src.push(rng.below(rows) as i32);
+        e_dst.push(rng.below(spec.nb) as i32);
+        e_w.push(0.3 + rng.f32() * 0.7);
+    }
+    e_src.resize(spec.e, 0);
+    e_dst.resize(spec.e, 0);
+    e_w.resize(spec.e, 0.0);
+    let hist: Vec<f32> = (0..spec.hist_layers() * spec.nh * spec.hist_dim)
+        .map(|_| rng.normal_f32() * 0.4)
+        .collect();
+    let deg: Vec<f32> = (0..rows).map(|_| (1 + rng.below(4)) as f32).collect();
+    let labels_i: Vec<i32> = (0..spec.nb).map(|_| rng.below(spec.c) as i32).collect();
+    let labels_f: Vec<f32> = (0..spec.nb * spec.c)
+        .map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 })
+        .collect();
+    let mut mask: Vec<f32> =
+        (0..spec.nb).map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 }).collect();
+    mask[0] = 1.0;
+    let noise: Vec<f32> = (0..rows * spec.h.max(spec.hist_dim))
+        .map(|_| rng.normal_f32() * 0.15)
+        .collect();
+    CaseInputs { x, e_src, e_dst, e_w, hist, deg, labels_i, labels_f, mask, noise }
+}
+
+fn step_inputs<'a>(spec: &ArtifactSpec, c: &'a CaseInputs, reg: f32) -> StepInputs<'a> {
+    StepInputs {
+        x: &c.x,
+        edge_src: &c.e_src,
+        edge_dst: &c.e_dst,
+        edge_w: &c.e_w,
+        hist: &c.hist,
+        labels_i: if spec.loss == "ce" { Some(&c.labels_i) } else { None },
+        labels_f: if spec.loss == "bce" { Some(&c.labels_f) } else { None },
+        label_mask: &c.mask,
+        deg: &c.deg,
+        noise: &c.noise,
+        reg_lambda: reg,
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn step_outputs_match_legacy_bitwise() {
+    let configs: [(&str, usize, &str, &str, f32); 11] = [
+        ("gcn", 2, "gas", "ce", 0.0),
+        ("gcn", 3, "full", "ce", 0.0),
+        ("gcn", 2, "gas", "bce", 0.0),
+        ("gcnii", 3, "gas", "ce", 0.0),
+        ("gcnii", 3, "gas", "ce", 0.3),
+        ("gcnii", 2, "full", "ce", 0.0),
+        ("gcnii", 2, "gas", "bce", 0.3),
+        ("gin", 2, "gas", "ce", 0.0),
+        ("gin", 3, "gas", "ce", 0.3),
+        ("gin", 2, "full", "ce", 0.0),
+        ("gin", 2, "gas", "bce", 0.0),
+    ];
+    for (model, layers, program, loss, reg) in configs {
+        for seed in [1u64, 2, 3] {
+            let spec = registry::test_spec(model, layers, program, 5, 3, 24, 3, 4, 3, loss);
+            let case = gen_inputs(&spec, seed ^ 0xcafe);
+            let params = ParamStore::init(&spec.params, seed ^ 0x51ab).unwrap();
+            let inp = step_inputs(&spec, &case, reg);
+            let tape_art = NativeArtifact::new(spec.clone()).unwrap();
+            let tape_out = tape_art.run(&params.tensors, &inp).unwrap();
+            let legacy_art = LegacyArtifact { spec: spec.clone() };
+            let legacy_out = legacy_art.run(&params.tensors, &inp).unwrap();
+            let tag = format!("{model}/{layers}/{program}/{loss} reg={reg} seed={seed}");
+            assert_eq!(tape_out.loss.to_bits(), legacy_out.loss.to_bits(), "{tag}: loss");
+            assert_eq!(bits(&tape_out.push), bits(&legacy_out.push), "{tag}: push");
+            assert_eq!(bits(&tape_out.logits), bits(&legacy_out.logits), "{tag}: logits");
+            assert_eq!(tape_out.grads.len(), legacy_out.grads.len(), "{tag}");
+            for (i, (gt, gl)) in tape_out.grads.iter().zip(legacy_out.grads.iter()).enumerate() {
+                assert_eq!(bits(gt), bits(gl), "{tag}: grad {}", spec.params[i].name);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. + 3. end-to-end curves: tape vs legacy executor, and vs the recorded
+//    seed curves committed alongside the tests
+// ---------------------------------------------------------------------------
+
+fn synth_profile() -> Profile {
+    Profile {
+        name: "tape_reg_pp".into(),
+        kind: "planted".into(),
+        n: 400,
+        f: 16,
+        c: 4,
+        avg_deg: 6.0,
+        multilabel: false,
+        train_frac: 0.5,
+        val_frac: 0.2,
+        homophily: 0.9,
+        feat_noise: 0.5,
+        parts: 4,
+        paper_n: 400,
+        seed: 11,
+    }
+}
+
+/// One deterministic (Serial pipeline, depth 1) short training run on the
+/// given executor; returns the per-epoch loss curve.
+fn run_curves(ds: &Dataset, art: &dyn Executor, reg: f32) -> (Vec<f64>, Vec<f64>) {
+    let mut cfg = gas_config(6, 0.01, reg, 9);
+    cfg.pipeline = PipelineMode::Serial; // concurrency reorders pushes
+    cfg.pull_depth = 1;
+    cfg.eval_every = 2;
+    let mut tr = Trainer::new(ds, art, cfg).unwrap();
+    let r = tr.train().unwrap();
+    (r.loss.values.clone(), r.val_acc.values.clone())
+}
+
+/// The three curve configurations the harness pins: one per legacy model
+/// family, gcnii with the Lipschitz branch active.
+fn curve_configs() -> Vec<(&'static str, usize, f32)> {
+    vec![("gcn", 2, 0.0), ("gcnii", 3, 0.02), ("gin", 3, 0.0)]
+}
+
+fn tape_curves() -> Vec<(String, Vec<f64>, Vec<f64>)> {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    curve_configs()
+        .into_iter()
+        .map(|(model, layers, reg)| {
+            let spec = registry::spec_for_profile(&profile, model, layers, "gas", "").unwrap();
+            let art = NativeArtifact::new(spec).unwrap();
+            let (loss, val) = run_curves(&ds, &art, reg);
+            (model.to_string(), loss, val)
+        })
+        .collect()
+}
+
+#[test]
+fn e2e_curves_match_legacy_bitwise() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    for (model, layers, reg) in curve_configs() {
+        let spec = registry::spec_for_profile(&profile, model, layers, "gas", "").unwrap();
+        let tape_art = NativeArtifact::new(spec.clone()).unwrap();
+        let (tape_loss, tape_val) = run_curves(&ds, &tape_art, reg);
+        let legacy_art = LegacyArtifact { spec };
+        let (leg_loss, leg_val) = run_curves(&ds, &legacy_art, reg);
+        let lb = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(lb(&tape_loss), lb(&leg_loss), "{model}: loss curves diverged");
+        assert_eq!(lb(&tape_val), lb(&leg_val), "{model}: val curves diverged");
+        // the runs actually trained (a flat curve would vacuously match)
+        assert!(
+            tape_loss.last().unwrap() < tape_loss.first().unwrap(),
+            "{model}: loss did not decrease"
+        );
+    }
+}
+
+const SEED_CURVES: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/tape_seed_curves.json");
+
+#[test]
+fn seed_curves_match_recorded() {
+    let curves = tape_curves();
+    if std::env::var("GAS_RECORD_SEED_CURVES").is_ok() {
+        let mut body = String::from("{\n  \"curves\": {\n");
+        for (i, (model, loss, _)) in curves.iter().enumerate() {
+            let hex: Vec<String> =
+                loss.iter().map(|v| format!("\"{:016x}\"", v.to_bits())).collect();
+            body.push_str(&format!("    \"{model}\": [{}]", hex.join(", ")));
+            body.push_str(if i + 1 < curves.len() { ",\n" } else { "\n" });
+        }
+        body.push_str("  }\n}\n");
+        std::fs::create_dir_all(std::path::Path::new(SEED_CURVES).parent().unwrap()).unwrap();
+        std::fs::write(SEED_CURVES, body).unwrap();
+        eprintln!("recorded seed curves to {SEED_CURVES}");
+        return;
+    }
+    let Ok(text) = std::fs::read_to_string(SEED_CURVES) else {
+        // not recorded yet (the main-only CI refresh step seeds it); the
+        // legacy-parity test above still guards the refactor meanwhile
+        eprintln!(
+            "no recorded seed curves at {SEED_CURVES}; run with \
+             GAS_RECORD_SEED_CURVES=1 to record"
+        );
+        return;
+    };
+    let j = gas::util::json::Json::parse(&text).expect("parsing recorded seed curves");
+    let rec = j.get("curves").unwrap();
+    for (model, loss, _) in &curves {
+        let want: Vec<u64> = rec
+            .get(model)
+            .unwrap_or_else(|_| panic!("recorded curves missing {model}"))
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| u64::from_str_radix(v.as_str().unwrap(), 16).unwrap())
+            .collect();
+        let got: Vec<u64> = loss.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "{model}: tape loss curve drifted from the recorded seed");
+    }
+}
