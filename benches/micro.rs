@@ -19,7 +19,7 @@
 use gas::backend::native::{attn, gemm, ops, registry, spmm, NativeArtifact};
 use gas::bench::{write_bench_json, BenchReport, Bencher};
 use gas::graph::generators;
-use gas::history::{HistoryPipeline, PipelineMode, ShardedHistoryStore};
+use gas::history::{BackingSpec, HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use gas::partition::metis_partition;
 use gas::runtime::{ArtifactSpec, Executor, InputSpec, ParamSpec};
 use gas::sched::batch::{BatchPlan, LabelSel};
@@ -82,27 +82,37 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(metis_partition(&g, k, 1));
     });
 
-    // --- history pull/push: serial vs concurrent vs sharded ------------------
+    // --- history pull/push: serial vs concurrent vs sharded vs mmap ----------
     // 100K-node store, 8K-row transfers x 64 dims x 3 layers (≥ the paper's
     // halo sizes). "serial"/"concurrent" run the single-stripe store (the
-    // old engine); "sharded" adds row striping + rayon gather/scatter.
+    // old engine); "sharded" adds row striping + rayon gather/scatter;
+    // "mmap" is the sharded store on the out-of-core file backing (~77 MB
+    // of shard files), so its push row also pays the sync-barrier msync.
+    let mmap_dir = std::env::temp_dir().join(format!("gas-micro-mmap-{}", std::process::id()));
     let ids: Vec<u32> = (0..PULL_ROWS as u32)
         .map(|i| (i * 7) % HIST_N as u32)
         .collect();
     // shared once, cloned per step — the hot path does no per-step id copy
     let ids_arc: Arc<[u32]> = Arc::from(&ids[..]);
     let data = vec![1.0f32; PULL_ROWS * HIST_H];
-    let configs: [(&str, PipelineMode, bool); 3] = [
-        ("serial", PipelineMode::Serial, false),
-        ("concurrent", PipelineMode::Concurrent, false),
-        ("sharded", PipelineMode::Concurrent, true),
+    let configs: [(&str, PipelineMode); 4] = [
+        ("serial", PipelineMode::Serial),
+        ("concurrent", PipelineMode::Concurrent),
+        ("sharded", PipelineMode::Concurrent),
+        ("mmap", PipelineMode::Concurrent),
     ];
     let mut hist_medians: Vec<(&str, f64, f64)> = Vec::new(); // (label, pull_s, push_s)
-    for (label, mode, sharded) in configs {
-        let store = if sharded {
-            ShardedHistoryStore::new(HIST_N, HIST_H, HIST_LAYERS)
-        } else {
-            ShardedHistoryStore::sequential(HIST_N, HIST_H, HIST_LAYERS)
+    for (label, mode) in configs {
+        let store = match label {
+            "sharded" => ShardedHistoryStore::new(HIST_N, HIST_H, HIST_LAYERS),
+            "mmap" => ShardedHistoryStore::with_backing(
+                HIST_N,
+                HIST_H,
+                HIST_LAYERS,
+                None,
+                &BackingSpec::Mmap { dir: mmap_dir.clone(), reopen: false },
+            )?,
+            _ => ShardedHistoryStore::sequential(HIST_N, HIST_H, HIST_LAYERS),
         };
         let mut pipe = HistoryPipeline::new(store, mode);
         let pull_s = run(
@@ -579,6 +589,7 @@ fn main() -> anyhow::Result<()> {
     };
     let (serial_pull, serial_push) = hist("serial");
     let (sharded_pull, sharded_push) = hist("sharded");
+    let (mmap_pull, mmap_push) = hist("mmap");
     let pull_speedup = serial_pull / sharded_pull;
     let push_speedup = serial_push / sharded_push;
     println!(
@@ -586,6 +597,13 @@ fn main() -> anyhow::Result<()> {
          (target ≥ 2x at 4+ threads; threads={})",
         rayon::current_num_threads()
     );
+    println!(
+        "mmap backing vs sharded ram: pull {:.2}x, push {:.2}x slower \
+         (push includes the msync flush barrier; absolute medians trajectory-gated)",
+        mmap_pull / sharded_pull,
+        mmap_push / sharded_push
+    );
+    let _ = std::fs::remove_dir_all(&mmap_dir);
     let json_path =
         std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".to_string());
     let mut metrics: Vec<(&str, f64)> = vec![
@@ -594,6 +612,8 @@ fn main() -> anyhow::Result<()> {
         ("rayon_threads", rayon::current_num_threads() as f64),
         ("pull_speedup_sharded_vs_serial", pull_speedup),
         ("push_speedup_sharded_vs_serial", push_speedup),
+        ("pull_mmap_over_ram_ratio", mmap_pull / sharded_pull),
+        ("push_mmap_over_ram_ratio", mmap_push / sharded_push),
         ("pipeline_overlap_speedup", overlap_speedup),
     ];
     metrics.extend(gemm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));

@@ -32,6 +32,7 @@ fn cfg(metis: bool, reg: bool, epochs: usize) -> TrainConfig {
         label_sel: LabelSel::Train,
         parts: None,
         history_shards: None,
+        history_backing: gas::config::default_history_backing(),
         pull_depth: gas::config::default_pull_depth(),
     }
 }

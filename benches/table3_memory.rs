@@ -1,22 +1,102 @@
-//! Paper Table 3: device-memory consumption + % data used per execution
-//! strategy (full-batch / GraphSAGE / Cluster-GCN / GAS) at L in {2,3,4}.
+//! Paper Table 3: memory per execution strategy — now in two parts.
 //!
-//! Memory is the analytic device-resident model of memaccount (DESIGN.md
-//! §3: CPU testbed, so "GPU GB" is modeled, not measured); the reproduction
-//! target is the *shape*: GAS ~ Cluster-GCN << SAGE << full-batch, with
-//! GAS at 100% data and Cluster-GCN at a fraction.
+//! Part 1 (analytic): device-memory consumption + % data used per strategy
+//! (full-batch / GraphSAGE / Cluster-GCN / GAS) at L in {2,3,4}, from the
+//! memaccount model (DESIGN.md §3: CPU testbed, so "GPU GB" is modeled,
+//! not measured). The reproduction target is the *shape*: GAS ~
+//! Cluster-GCN << SAGE << full-batch, with GAS at 100% data.
 //!
-//!     cargo bench --bench table3_memory
+//! Part 2 (measured, out-of-core smoke): train a planted-partition graph
+//! whose histories exceed a configured RAM budget
+//! (`GAS_BENCH_MAX_HISTORY_RSS_MB`, default 64 MiB) three ways —
+//!   [ram]                in-RAM backing, serial pipeline, pull_depth=1
+//!   [mmap]               mmap backing, identical schedule (bit-compared)
+//!   [mmap pull_depth=2]  mmap backing, concurrent pipeline (timed only)
+//! — and emit `BENCH_table3.json` with wall-clock rows plus history-bytes
+//! and RSS metrics. `ci/check_bench_table3.py` gates the JSON: the mmap
+//! run must report resident history bytes under the budget while total
+//! history bytes exceed it, and the [ram]/[mmap] runs must match
+//! bit-for-bit (loss/val/test curves, staleness probes, push deltas, and
+//! every history row).
+//!
+//!     cargo bench --bench table3_memory           # full size
+//!     GAS_TABLE3_TINY=1 cargo bench --bench table3_memory   # CI smoke
+//!
+//! Knobs: `GAS_BENCH_JSON` (output path), `GAS_TABLE3_TINY` (smaller
+//! graph + fewer epochs + analytic part trimmed to yelp/arxiv).
 
-use gas::bench::print_table;
+use gas::backend::native::{registry, NativeArtifact};
+use gas::baselines::naive_history::gas_config;
+use gas::bench::{print_table, write_bench_json, BenchReport};
 use gas::config::Ctx;
-use gas::memaccount::MemoryModel;
+use gas::graph::datasets::{Dataset, Profile};
+use gas::history::{BackingSpec, PipelineMode};
+use gas::memaccount::{current_rss_bytes, peak_rss_bytes, MemoryModel};
+use gas::train::{TrainResult, Trainer};
+use gas::util::timer::Timer;
 
-fn main() -> anyhow::Result<()> {
+const MIB: f64 = (1u64 << 20) as f64;
+
+/// A wall-clock measurement as a single-sample report: training runs are
+/// too expensive to repeat, so iters=1 and std=0 by construction.
+fn one_shot(name: &str, secs: f64) -> BenchReport {
+    BenchReport {
+        name: name.to_string(),
+        iters: 1,
+        mean_s: secs,
+        std_s: 0.0,
+        median_s: secs,
+        min_s: secs,
+        samples: vec![secs],
+    }
+}
+
+/// Synthetic profile sized so gcnii8 histories (7 layers x n x 64 x f32)
+/// overflow the CI RAM budget: n=60k -> ~102 MiB, n=150k -> ~256 MiB.
+fn ooc_profile(n: usize) -> Profile {
+    Profile {
+        name: "ooc_synth".into(),
+        kind: "planted".into(),
+        n,
+        f: 16,
+        c: 8,
+        avg_deg: 8.0,
+        multilabel: false,
+        train_frac: 0.5,
+        val_frac: 0.2,
+        homophily: 0.9,
+        feat_noise: 0.5,
+        parts: 8,
+        paper_n: n,
+        seed: 17,
+    }
+}
+
+/// Everything the run produced that must be schedule-deterministic, as
+/// bit patterns: training curves, staleness probes, and push deltas.
+fn curve_bits(r: &TrainResult) -> Vec<u64> {
+    r.loss
+        .values
+        .iter()
+        .chain(&r.train_acc.values)
+        .chain(&r.val_acc.values)
+        .chain(&r.test_acc.values)
+        .chain(&r.staleness)
+        .chain(&r.push_delta)
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+fn analytic_table(tiny: bool) -> anyhow::Result<()> {
     let mut ctx = Ctx::new()?;
+    let datasets: &[&str] = if tiny {
+        &["yelp", "arxiv"]
+    } else {
+        &["yelp", "arxiv", "products"]
+    };
     let mut rows = Vec::new();
     for layers in [2usize, 3, 4] {
-        for ds_name in ["yelp", "arxiv", "products"] {
+        for ds_name in datasets {
             let ds = ctx.dataset(ds_name)?;
             let m = MemoryModel::new(ds, layers, 64);
             let parts = ds.profile.parts;
@@ -43,5 +123,125 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\npaper shape check: GAS uses ~100% data at Cluster-GCN-like memory;");
     println!("GraphSAGE grows exponentially with L; full-batch is OOM-scale.");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let tiny = std::env::var("GAS_TABLE3_TINY").is_ok();
+    let t_all = Timer::start();
+    analytic_table(tiny)?;
+
+    // ---- Part 2: measured out-of-core smoke --------------------------
+    let n = if tiny { 60_000 } else { 150_000 };
+    let epochs = if tiny { 2 } else { 3 };
+    let budget_mb: f64 = std::env::var("GAS_BENCH_MAX_HISTORY_RSS_MB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64.0);
+    let profile = ooc_profile(n);
+    println!("\n=== out-of-core smoke: gcnii8 on {n}-node planted graph ===");
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcnii", 8, "gas", "")?;
+    let (hl, hd) = (spec.hist_layers(), spec.hist_dim);
+    let hist_total = hl * n * hd * 4;
+    println!(
+        "history footprint: {hl} layers x {n} x {hd} f32 = {:.1} MiB (budget {budget_mb:.0} MiB)",
+        hist_total as f64 / MIB
+    );
+    let art = NativeArtifact::new(spec)?;
+    let base = std::env::temp_dir().join(format!("gas-table3-{}", std::process::id()));
+
+    // identical schedules: serial pipeline, one-step lookahead, same seed
+    let serial = |backing: BackingSpec| {
+        let mut cfg = gas_config(epochs, 0.01, 0.0, 9);
+        cfg.pipeline = PipelineMode::Serial;
+        cfg.pull_depth = 1;
+        cfg.eval_every = epochs;
+        cfg.history_backing = backing;
+        cfg
+    };
+
+    let t = Timer::start();
+    let mut tr_ram = Trainer::new(&ds, &art, serial(BackingSpec::Ram))?;
+    let r_ram = tr_ram.train()?;
+    let ram_s = t.elapsed_s();
+
+    let t = Timer::start();
+    let mmap_spec = BackingSpec::Mmap { dir: base.join("serial"), reopen: false };
+    let mut tr_mm = Trainer::new(&ds, &art, serial(mmap_spec))?;
+    let r_mm = tr_mm.train()?;
+    let mmap_s = t.elapsed_s();
+
+    // bit-for-bit: curves + probes, then every history row of every layer
+    let curves_equal = curve_bits(&r_ram) == curve_bits(&r_mm);
+    let ids: Vec<u32> = (0..n as u32).collect();
+    let mut a = vec![0f32; n * hd];
+    let mut b = vec![0f32; n * hd];
+    let mut rows_equal = true;
+    for l in 0..hl {
+        tr_ram.with_history(|s| s.pull(l, &ids, &mut a));
+        tr_mm.with_history(|s| s.pull(l, &ids, &mut b));
+        rows_equal &= a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+    }
+    let equal = curves_equal && rows_equal;
+    drop(tr_mm);
+    drop(tr_ram);
+
+    // concurrent mmap run: write-behind pushes + depth-2 pulls, timed only
+    let t = Timer::start();
+    let mut cfg = gas_config(epochs, 0.01, 0.0, 9);
+    cfg.eval_every = epochs;
+    cfg.history_backing = BackingSpec::Mmap { dir: base.join("conc"), reopen: false };
+    let mut tr_conc = Trainer::new(&ds, &art, cfg)?;
+    let r_conc = tr_conc.train()?;
+    let conc_s = t.elapsed_s();
+    drop(tr_conc);
+    let _ = std::fs::remove_dir_all(&base);
+
+    let reports = vec![
+        one_shot("table3 train gcnii8 [ram]", ram_s),
+        one_shot("table3 train gcnii8 [mmap]", mmap_s),
+        one_shot("table3 train gcnii8 [mmap pull_depth=2]", conc_s),
+    ];
+    for r in &reports {
+        println!("{}", r.line());
+    }
+    println!(
+        "history bytes: ram resident {:.1} MiB | mmap resident {:.1} MiB + mapped {:.1} MiB",
+        r_ram.history_resident_bytes as f64 / MIB,
+        r_mm.history_resident_bytes as f64 / MIB,
+        r_mm.history_mapped_bytes as f64 / MIB
+    );
+    println!(
+        "mmap == ram bit-for-bit: {} (curves {}, history rows {})",
+        equal, curves_equal, rows_equal
+    );
+    println!(
+        "final losses: ram {:.4} | mmap {:.4} | mmap concurrent {:.4}",
+        r_ram.loss.last().unwrap_or(0.0),
+        r_mm.loss.last().unwrap_or(0.0),
+        r_conc.loss.last().unwrap_or(0.0)
+    );
+
+    let peak_rss_mb = peak_rss_bytes().map(|b| b as f64 / MIB).unwrap_or(-1.0);
+    let current_rss_mb = current_rss_bytes().map(|b| b as f64 / MIB).unwrap_or(-1.0);
+    let metrics: Vec<(&str, f64)> = vec![
+        ("tiny", tiny as usize as f64),
+        ("nodes", n as f64),
+        ("epochs", epochs as f64),
+        ("history_total_bytes", hist_total as f64),
+        ("history_budget_mb", budget_mb),
+        ("ram_resident_bytes", r_ram.history_resident_bytes as f64),
+        ("mmap_resident_bytes", r_mm.history_resident_bytes as f64),
+        ("mmap_mapped_bytes", r_mm.history_mapped_bytes as f64),
+        ("mmap_equals_ram", equal as usize as f64),
+        ("peak_rss_mb", peak_rss_mb),
+        ("current_rss_mb", current_rss_mb),
+        ("wall_s", t_all.elapsed_s()),
+    ];
+    let json_path =
+        std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_table3.json".to_string());
+    write_bench_json(&json_path, "table3_memory", &reports, &metrics)?;
+    println!("wrote {json_path}");
     Ok(())
 }

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Gate the CI bench-smoke job on BENCH_table3.json (out-of-core smoke).
+
+The table3 bench trains the same gcnii8 schedule three times (in-RAM
+serial, mmap serial, mmap concurrent) on a planted graph whose histories
+deliberately overflow the RAM budget. This script makes the out-of-core
+claim enforceable:
+
+  * the run must not be vacuous — total history bytes must EXCEED the
+    budget (otherwise "fits under budget" proves nothing), and the RAM
+    backing's resident bytes must be >= the logical history size;
+  * the mmap run's self-reported resident history bytes (heap the store
+    cannot evict: staleness metadata) must fit UNDER the budget while its
+    mapped bytes cover the full logical history;
+  * the mmap run must be bit-for-bit equal to the RAM run — curves,
+    staleness probes, push deltas, and every history row (the bench
+    computes this; we gate on its verdict);
+  * the whole bench must finish inside a wall-clock budget (near-hang
+    guard, far looser than the job timeout).
+
+Thresholds are overridable via env for local experimentation:
+
+    GAS_BENCH_MAX_HISTORY_RSS_MB   (default 64; also read by the bench,
+                                    which echoes it into the record)
+    GAS_BENCH_MAX_TABLE3_WALL_S    (default 240)
+
+Usage: python3 ci/check_bench_table3.py [BENCH_table3.json]
+"""
+import json
+import os
+import sys
+
+MIB = float(1 << 20)
+
+# the three wall-clock rows the bench must always emit
+ROWS = (
+    "table3 train gcnii8 [ram]",
+    "table3 train gcnii8 [mmap]",
+    "table3 train gcnii8 [mmap pull_depth=2]",
+)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_table3.json"
+    with open(path) as f:
+        rec = json.load(f)
+
+    budget_mb = float(os.environ.get("GAS_BENCH_MAX_HISTORY_RSS_MB", "64"))
+    wall_budget_s = float(os.environ.get("GAS_BENCH_MAX_TABLE3_WALL_S", "240"))
+
+    medians = {r["name"]: r["median_ms"] for r in rec["results"]}
+    metrics = rec["metrics"]
+    failures = []
+
+    for name in ROWS:
+        if name not in medians:
+            failures.append(f"missing bench row {name!r} — a backing did not run")
+        else:
+            print(f"{name}: {medians[name] / 1e3:.1f} s")
+
+    total_mb = metrics["history_total_bytes"] / MIB
+    ram_resident_mb = metrics["ram_resident_bytes"] / MIB
+    mmap_resident_mb = metrics["mmap_resident_bytes"] / MIB
+    mmap_mapped_mb = metrics["mmap_mapped_bytes"] / MIB
+    print(f"history total: {total_mb:.1f} MiB (budget {budget_mb:.0f} MiB)")
+    print(f"ram resident: {ram_resident_mb:.1f} MiB")
+    print(f"mmap resident: {mmap_resident_mb:.1f} MiB | mapped {mmap_mapped_mb:.1f} MiB")
+
+    # not vacuous: the workload genuinely does not fit in the budget
+    if total_mb <= budget_mb:
+        failures.append(
+            f"history total {total_mb:.1f} MiB fits the {budget_mb:.0f} MiB budget — "
+            "out-of-core smoke is vacuous; grow the graph or shrink the budget"
+        )
+    if ram_resident_mb < total_mb:
+        failures.append(
+            f"ram backing resident {ram_resident_mb:.1f} MiB < logical {total_mb:.1f} MiB — "
+            "residency accounting is broken"
+        )
+
+    # the out-of-core claim: unevictable heap under budget, file holds the rest
+    if mmap_resident_mb > budget_mb:
+        failures.append(
+            f"mmap resident history {mmap_resident_mb:.1f} MiB over the "
+            f"{budget_mb:.0f} MiB budget — backing is not out-of-core"
+        )
+    if mmap_mapped_mb < total_mb:
+        failures.append(
+            f"mmap mapped {mmap_mapped_mb:.1f} MiB < logical {total_mb:.1f} MiB — "
+            "shard files do not cover the history"
+        )
+
+    # the correctness claim: same schedule, same bits
+    if metrics["mmap_equals_ram"] != 1.0:
+        failures.append("mmap run is NOT bit-for-bit equal to the ram run")
+    else:
+        print("mmap == ram bit-for-bit: ok")
+
+    wall_s = metrics["wall_s"]
+    print(f"bench wall clock: {wall_s:.1f} s (budget {wall_budget_s:.0f} s)")
+    if wall_s > wall_budget_s:
+        failures.append(f"bench took {wall_s:.1f} s, over the {wall_budget_s:.0f} s budget")
+
+    if failures:
+        print("\nOUT-OF-CORE GATE FAILED:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("out-of-core gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

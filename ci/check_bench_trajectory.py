@@ -49,6 +49,8 @@ GATED_SUBSTRINGS = {
     "micro": [
         "history pull 8K rows x3 layers [sharded]",
         "history push 4x8K rows + drain [sharded]",
+        "history pull 8K rows x3 layers [mmap]",
+        "history push 4x8K rows + drain [mmap]",
         "[blocked]",          # every blocked GEMM, SpMM and edge-softmax row
         # (the attn softmax rows ride the "[blocked]" substring — their
         # "[scalar]" oracle baselines stay informational, like GEMM/SpMM's)
@@ -61,6 +63,12 @@ GATED_SUBSTRINGS = {
     # and gates any timed rows the bench grows later
     "fig3_convergence": [
         "",                   # every timed row fig3 emits
+    ],
+    # table3's out-of-core smoke: the three end-to-end train rows
+    # (ram / mmap serial / mmap concurrent); correctness + residency are
+    # gated absolutely by check_bench_table3.py, this tracks wall clock
+    "table3_memory": [
+        "table3 train",
     ],
 }
 

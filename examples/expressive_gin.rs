@@ -27,6 +27,7 @@ fn run(ctx: &mut Ctx, metis: bool, reg: bool, epochs: usize) -> anyhow::Result<(
         label_sel: LabelSel::Train,
         parts: None,
         history_shards: None,
+        history_backing: gas::config::default_history_backing(),
         pull_depth: gas::config::default_pull_depth(),
     };
     let mut t = Trainer::new(ds, art, cfg)?;

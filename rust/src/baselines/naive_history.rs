@@ -24,6 +24,7 @@ pub fn naive_config(epochs: usize, lr: f32, seed: u64) -> TrainConfig {
         label_sel: LabelSel::Train,
         parts: None,
         history_shards: None,
+        history_backing: crate::config::default_history_backing(),
         // serial I/O and no prefetch overlap: the ablated baseline keeps
         // the classic one-pull-at-a-time schedule
         pull_depth: 1,
@@ -47,6 +48,7 @@ pub fn gas_config(epochs: usize, lr: f32, reg_lambda: f32, seed: u64) -> TrainCo
         label_sel: LabelSel::Train,
         parts: None,
         history_shards: None,
+        history_backing: crate::config::default_history_backing(),
         pull_depth: crate::config::default_pull_depth(),
     }
 }

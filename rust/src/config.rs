@@ -69,6 +69,48 @@ pub fn default_pull_depth() -> usize {
     }
 }
 
+/// Default history backing: `GAS_HISTORY_BACKING` env (`ram` | `mmap`)
+/// when set, else in-RAM. For `mmap`, the shard directory comes from
+/// [`default_history_dir`]. Like `GAS_PULL_DEPTH`, garbage fails loudly
+/// instead of silently training on the default backing. The CLI's
+/// `--history-backing` / `--history-dir` override both per run.
+pub fn default_history_backing() -> crate::history::BackingSpec {
+    match std::env::var("GAS_HISTORY_BACKING") {
+        Err(_) => crate::history::BackingSpec::Ram,
+        Ok(v) => match parse_history_backing(&v, None) {
+            Ok(spec) => spec,
+            Err(e) => panic!("GAS_HISTORY_BACKING: {e}"),
+        },
+    }
+}
+
+/// Shard-file directory for mmap histories: `GAS_HISTORY_DIR` env when
+/// set, else a per-process path under the system temp dir (safe for
+/// concurrent runs; files are zeroed at store construction unless a
+/// reopen is requested).
+pub fn default_history_dir() -> PathBuf {
+    match std::env::var("GAS_HISTORY_DIR") {
+        Ok(v) if !v.is_empty() => PathBuf::from(v),
+        _ => std::env::temp_dir().join(format!("gas-history-{}", std::process::id())),
+    }
+}
+
+/// Parse a backing name (`ram` | `mmap`) into a [`BackingSpec`], with an
+/// optional explicit shard directory for the mmap case.
+pub fn parse_history_backing(
+    name: &str,
+    dir: Option<PathBuf>,
+) -> Result<crate::history::BackingSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "ram" => Ok(crate::history::BackingSpec::Ram),
+        "mmap" => Ok(crate::history::BackingSpec::Mmap {
+            dir: dir.unwrap_or_else(default_history_dir),
+            reopen: false,
+        }),
+        other => bail!("unknown history backing {other:?} (expected ram|mmap)"),
+    }
+}
+
 /// Shared run context. Executors and datasets are cached on first use
 /// (XLA compilation and graph generation are the expensive parts).
 pub struct Ctx {
@@ -182,6 +224,25 @@ mod tests {
         // no env manipulation here (tests run in parallel): unset, this is
         // the library default; set, it is whatever the operator chose ≥ 1
         assert!(default_pull_depth() >= 1);
+    }
+
+    #[test]
+    fn history_backing_parses() {
+        use crate::history::BackingSpec;
+        assert_eq!(parse_history_backing("ram", None).unwrap(), BackingSpec::Ram);
+        let want = PathBuf::from("/tmp/gas-spec-test");
+        match parse_history_backing("MMAP", Some(want.clone())).unwrap() {
+            BackingSpec::Mmap { dir, reopen } => {
+                assert_eq!(dir, want);
+                assert!(!reopen, "CLI parse must default to fresh shards");
+            }
+            other => panic!("expected an mmap spec, got {other:?}"),
+        }
+        assert!(parse_history_backing("disk", None).is_err());
+        // no env manipulation (tests run in parallel): whatever the
+        // operator set, the default must be one of the two known kinds
+        assert!(["ram", "mmap"].contains(&default_history_backing().kind()));
+        assert!(!default_history_dir().as_os_str().is_empty());
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Storage backings for history shards.
+//!
+//! [`HistoryBacking`] abstracts *where a shard's embedding rows live* —
+//! the striped gather/scatter, per-shard locks, staleness clocks and
+//! delta probes in [`crate::history::store`] are backing-agnostic. Two
+//! implementations:
+//!
+//! * [`RamBacking`] — one flat layer-major `Vec<f32>` per shard; the
+//!   existing in-core behaviour.
+//! * [`MmapBacking`] — one file per shard, mapped with
+//!   [`crate::history::mmap::MappedFile`]; layout is identical
+//!   (`[num_layers][rows * h]`, matching `PullBuffer`), so gathers copy
+//!   straight from the mapping into staging buffers. `flush` makes the
+//!   file durable and drops page residency — the out-of-core mode.
+//!
+//! Hot-path note: callers hoist `layer`/`layer_mut` to one virtual call
+//! per (shard, layer) and then index plain slices, so the `dyn` dispatch
+//! never lands inside the per-row copy loop.
+
+use std::io;
+use std::path::PathBuf;
+
+use super::mmap::MappedFile;
+
+/// Where the `[num_layers][rows * h]` embedding block of each shard lives.
+pub trait HistoryBacking: Send + Sync {
+    /// The full layer-major block of layer `l`: `rows * h` floats.
+    fn layer(&self, l: usize) -> &[f32];
+    fn layer_mut(&mut self, l: usize) -> &mut [f32];
+    /// Durability barrier: after `flush` returns, every row pushed so far
+    /// is recoverable from stable storage (no-op for RAM).
+    fn flush(&mut self) -> io::Result<()>;
+    /// Unevictable heap bytes held for the embedding block.
+    fn resident_bytes(&self) -> usize;
+    /// File-backed mapped bytes (evictable by the kernel / on `flush`).
+    fn mapped_bytes(&self) -> usize;
+    fn kind(&self) -> &'static str;
+}
+
+/// Which backing a store should construct, plus its knobs. Carried by
+/// `TrainConfig` and parsed from `--history-backing` / `GAS_HISTORY_BACKING`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackingSpec {
+    /// In-core: rows live on the heap (the default, PR-1 behaviour).
+    Ram,
+    /// Out-of-core: one mapped file per shard under `dir`. With `reopen`
+    /// set, existing shard files of matching geometry are mapped as-is
+    /// (recovery from a previous flushed run) instead of being zeroed.
+    Mmap { dir: PathBuf, reopen: bool },
+}
+
+impl BackingSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BackingSpec::Ram => "ram",
+            BackingSpec::Mmap { .. } => "mmap",
+        }
+    }
+}
+
+/// Construct the backing for shard `shard_idx` (`rows` striped rows).
+pub fn make_backing(
+    spec: &BackingSpec,
+    shard_idx: usize,
+    rows: usize,
+    h: usize,
+    num_layers: usize,
+) -> io::Result<Box<dyn HistoryBacking>> {
+    match spec {
+        BackingSpec::Ram => Ok(Box::new(RamBacking::new(rows, h, num_layers))),
+        BackingSpec::Mmap { dir, reopen } => {
+            std::fs::create_dir_all(dir)?;
+            let path = dir.join(format!("shard{shard_idx:03}.bin"));
+            let bytes = num_layers * rows * h * 4;
+            let map = if *reopen && path.exists() {
+                MappedFile::reopen(&path, bytes)?
+            } else {
+                MappedFile::create(&path, bytes)?
+            };
+            Ok(Box::new(MmapBacking { span: rows * h, map }))
+        }
+    }
+}
+
+/// Heap backing: flat layer-major block, identical layout to the mapping.
+pub struct RamBacking {
+    span: usize,
+    data: Vec<f32>,
+}
+
+impl RamBacking {
+    pub fn new(rows: usize, h: usize, num_layers: usize) -> RamBacking {
+        RamBacking {
+            span: rows * h,
+            data: vec![0f32; num_layers * rows * h],
+        }
+    }
+}
+
+impl HistoryBacking for RamBacking {
+    fn layer(&self, l: usize) -> &[f32] {
+        &self.data[l * self.span..(l + 1) * self.span]
+    }
+
+    fn layer_mut(&mut self, l: usize) -> &mut [f32] {
+        &mut self.data[l * self.span..(l + 1) * self.span]
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    fn mapped_bytes(&self) -> usize {
+        0
+    }
+
+    fn kind(&self) -> &'static str {
+        "ram"
+    }
+}
+
+/// File backing: the same block, mapped from one shard file.
+pub struct MmapBacking {
+    span: usize,
+    map: MappedFile,
+}
+
+impl HistoryBacking for MmapBacking {
+    fn layer(&self, l: usize) -> &[f32] {
+        &self.map.as_f32()[l * self.span..(l + 1) * self.span]
+    }
+
+    fn layer_mut(&mut self, l: usize) -> &mut [f32] {
+        &mut self.map.as_f32_mut()[l * self.span..(l + 1) * self.span]
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.map.flush()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        // rows live in the page cache, not on the unevictable heap
+        0
+    }
+
+    fn mapped_bytes(&self) -> usize {
+        self.map.len_bytes()
+    }
+
+    fn kind(&self) -> &'static str {
+        "mmap"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<BackingSpec> {
+        let dir = std::env::temp_dir().join(format!("gas-backing-test-{}", std::process::id()));
+        vec![BackingSpec::Ram, BackingSpec::Mmap { dir, reopen: false }]
+    }
+
+    #[test]
+    fn both_backings_store_layer_major_rows() {
+        for spec in specs() {
+            let mut b = make_backing(&spec, 0, 3, 2, 2).unwrap();
+            assert_eq!(b.kind(), spec.kind());
+            assert!(b.layer(0).iter().all(|&v| v == 0.0), "{}", spec.kind());
+            b.layer_mut(1)[2..4].copy_from_slice(&[5.0, 6.0]);
+            assert_eq!(&b.layer(1)[2..4], &[5.0, 6.0]);
+            assert!(b.layer(0).iter().all(|&v| v == 0.0));
+            b.flush().unwrap();
+            assert_eq!(&b.layer(1)[2..4], &[5.0, 6.0], "flush must not lose rows");
+        }
+    }
+
+    #[test]
+    fn residency_accounting_splits_heap_from_mapping() {
+        for spec in specs() {
+            let b = make_backing(&spec, 1, 4, 2, 3).unwrap();
+            let bytes = 3 * 4 * 2 * 4;
+            match spec {
+                BackingSpec::Ram => {
+                    assert_eq!(b.resident_bytes(), bytes);
+                    assert_eq!(b.mapped_bytes(), 0);
+                }
+                BackingSpec::Mmap { .. } => {
+                    assert_eq!(b.resident_bytes(), 0);
+                    assert_eq!(b.mapped_bytes(), bytes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mmap_reopen_recovers_flushed_rows_and_checks_geometry() {
+        let dir = std::env::temp_dir().join(format!("gas-backing-reopen-{}", std::process::id()));
+        let fresh = BackingSpec::Mmap { dir: dir.clone(), reopen: false };
+        let reopen = BackingSpec::Mmap { dir: dir.clone(), reopen: true };
+        let mut b = make_backing(&fresh, 2, 3, 2, 1).unwrap();
+        b.layer_mut(0).fill(4.5);
+        b.flush().unwrap();
+        drop(b);
+        // fresh create zeroes; reopen recovers
+        let again = make_backing(&reopen, 2, 3, 2, 1).unwrap();
+        assert!(again.layer(0).iter().all(|&v| v == 4.5));
+        drop(again);
+        // geometry mismatch on reopen is an error, not silent corruption
+        assert!(make_backing(&reopen, 2, 5, 2, 1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

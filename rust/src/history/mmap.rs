@@ -1,0 +1,389 @@
+//! Minimal file-backed memory mapping for out-of-core history shards.
+//!
+//! The container policy forbids new crate dependencies, so on Linux
+//! (x86_64 / aarch64) this maps shard files with raw `mmap`/`msync`/
+//! `madvise`/`munmap` syscalls issued through `core::arch::asm!`. Every
+//! other platform falls back to a plain heap buffer that is loaded from
+//! the file at open and written back on [`MappedFile::flush`] — same API,
+//! same durability contract, no residency benefit.
+//!
+//! Safety model: a [`MappedFile`] is owned by exactly one history shard,
+//! which lives behind that shard's `RwLock` (see
+//! [`crate::history::store`]). Mutable access to the mapping therefore
+//! always flows through `&mut Shard`, so the usual aliasing rules hold and
+//! the `unsafe impl Send + Sync` below only asserts what the lock already
+//! enforces.
+
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Page-aligned `f32` buffer backed by a file of exactly `len_bytes`.
+pub struct MappedFile {
+    inner: Inner,
+    len_bytes: usize,
+    path: PathBuf,
+}
+
+impl MappedFile {
+    /// Create (or truncate) `path` to `len_bytes` of zeros and map it.
+    pub fn create(path: &Path, len_bytes: usize) -> io::Result<MappedFile> {
+        assert_eq!(len_bytes % 4, 0, "mapped length must hold whole f32 rows");
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        // a hole-backed file reads as zeros — identical to RAM zero-init
+        file.set_len(len_bytes as u64)?;
+        Ok(MappedFile {
+            inner: Inner::map(&file, len_bytes)?,
+            len_bytes,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Map an existing shard file, requiring its size to match the
+    /// expected geometry exactly (a mismatch means the directory holds
+    /// shards written with different `n`/`h`/layers/shard-count).
+    pub fn reopen(path: &Path, len_bytes: usize) -> io::Result<MappedFile> {
+        assert_eq!(len_bytes % 4, 0, "mapped length must hold whole f32 rows");
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        let on_disk = file.metadata()?.len();
+        if on_disk != len_bytes as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "history shard {} holds {on_disk} bytes but the requested \
+                     geometry needs {len_bytes} — refusing to reopen",
+                    path.display()
+                ),
+            ));
+        }
+        Ok(MappedFile {
+            inner: Inner::map(&file, len_bytes)?,
+            len_bytes,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.len_bytes
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        self.inner.as_f32(self.len_bytes / 4)
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        self.inner.as_f32_mut(self.len_bytes / 4)
+    }
+
+    /// Durability + residency barrier: synchronously write dirty pages to
+    /// the file (`msync(MS_SYNC)`), then drop the resident pages
+    /// (`madvise(MADV_DONTNEED)`) so the process's RSS no longer charges
+    /// for the shard. Later reads fault pages back in from page cache or
+    /// disk. On the portable fallback this rewrites the whole buffer.
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush(self.len_bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// real mmap (Linux x86_64 / aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+struct Inner {
+    /// page-aligned mapping base; dangling (never dereferenced) when the
+    /// shard has zero rows — `mmap` of length 0 is EINVAL
+    ptr: *mut u8,
+    map_len: usize,
+    _file: File,
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+unsafe impl Send for Inner {}
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+unsafe impl Sync for Inner {}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+impl Inner {
+    fn map(file: &File, len_bytes: usize) -> io::Result<Inner> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = if len_bytes == 0 {
+            std::ptr::NonNull::<u8>::dangling().as_ptr()
+        } else {
+            sys::mmap_shared(file.as_raw_fd(), len_bytes)?
+        };
+        Ok(Inner {
+            ptr,
+            map_len: len_bytes,
+            _file: file.try_clone()?,
+        })
+    }
+
+    fn as_f32(&self, len: usize) -> &[f32] {
+        // page alignment (4096) satisfies f32 alignment; the shard's
+        // RwLock serializes this against as_f32_mut
+        unsafe { std::slice::from_raw_parts(self.ptr as *const f32, len) }
+    }
+
+    fn as_f32_mut(&mut self, len: usize) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr as *mut f32, len) }
+    }
+
+    fn flush(&mut self, len_bytes: usize) -> io::Result<()> {
+        if len_bytes == 0 {
+            return Ok(());
+        }
+        sys::msync_sync(self.ptr, len_bytes)?;
+        sys::madvise_dontneed(self.ptr, len_bytes)
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // best-effort: Drop has no error channel, and the file itself
+        // still holds every msync'd byte
+        if self.map_len > 0 {
+            let _ = sys::munmap(self.ptr, self.map_len);
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    //! Raw Linux syscalls — just enough of libc's mmap surface for the
+    //! shard files, with errno decoding (`-4095..=-1` return range).
+
+    use std::io;
+
+    const PROT_READ: usize = 0x1;
+    const PROT_WRITE: usize = 0x2;
+    const MAP_SHARED: usize = 0x1;
+    const MS_SYNC: usize = 0x4;
+    const MADV_DONTNEED: usize = 0x4;
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const MMAP: usize = 9;
+        pub const MUNMAP: usize = 11;
+        pub const MSYNC: usize = 26;
+        pub const MADVISE: usize = 28;
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const MMAP: usize = 222;
+        pub const MUNMAP: usize = 215;
+        pub const MSYNC: usize = 227;
+        pub const MADVISE: usize = 233;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall6(
+        n: usize,
+        a1: usize,
+        a2: usize,
+        a3: usize,
+        a4: usize,
+        a5: usize,
+        a6: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            in("x8") n,
+            options(nostack)
+        );
+        ret
+    }
+
+    fn check(ret: isize) -> io::Result<isize> {
+        if (-4095..0).contains(&ret) {
+            Err(io::Error::from_raw_os_error(-ret as i32))
+        } else {
+            Ok(ret)
+        }
+    }
+
+    pub fn mmap_shared(fd: i32, len: usize) -> io::Result<*mut u8> {
+        let ret = unsafe {
+            syscall6(
+                nr::MMAP,
+                0,
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED,
+                fd as usize,
+                0,
+            )
+        };
+        check(ret).map(|p| p as *mut u8)
+    }
+
+    pub fn munmap(ptr: *mut u8, len: usize) -> io::Result<()> {
+        check(unsafe { syscall6(nr::MUNMAP, ptr as usize, len, 0, 0, 0, 0) }).map(|_| ())
+    }
+
+    pub fn msync_sync(ptr: *mut u8, len: usize) -> io::Result<()> {
+        check(unsafe { syscall6(nr::MSYNC, ptr as usize, len, MS_SYNC, 0, 0, 0) }).map(|_| ())
+    }
+
+    pub fn madvise_dontneed(ptr: *mut u8, len: usize) -> io::Result<()> {
+        check(unsafe { syscall6(nr::MADVISE, ptr as usize, len, MADV_DONTNEED, 0, 0, 0) })
+            .map(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// portable fallback: heap mirror, load at open / write-back at flush
+// ---------------------------------------------------------------------------
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+struct Inner {
+    data: Vec<f32>,
+    file: File,
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+impl Inner {
+    fn map(file: &File, len_bytes: usize) -> io::Result<Inner> {
+        use std::io::Read;
+        let mut bytes = vec![0u8; len_bytes];
+        let mut f = file.try_clone()?;
+        {
+            use std::io::Seek;
+            f.seek(std::io::SeekFrom::Start(0))?;
+        }
+        f.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Inner { data, file: f })
+    }
+
+    fn as_f32(&self, len: usize) -> &[f32] {
+        &self.data[..len]
+    }
+
+    fn as_f32_mut(&mut self, len: usize) -> &mut [f32] {
+        &mut self.data[..len]
+    }
+
+    fn flush(&mut self, len_bytes: usize) -> io::Result<()> {
+        use std::io::{Seek, Write};
+        let mut bytes = Vec::with_capacity(len_bytes);
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_ne_bytes());
+        }
+        self.file.seek(std::io::SeekFrom::Start(0))?;
+        self.file.write_all(&bytes)?;
+        self.file.sync_data()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gas-mmap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn create_is_zeroed_and_roundtrips_through_flush() {
+        let p = tmp("roundtrip.bin");
+        let mut m = MappedFile::create(&p, 16 * 4).unwrap();
+        assert!(m.as_f32().iter().all(|&v| v == 0.0));
+        m.as_f32_mut()
+            .iter_mut()
+            .enumerate()
+            .for_each(|(i, v)| *v = i as f32 - 7.5);
+        m.flush().unwrap();
+        drop(m);
+        let m2 = MappedFile::reopen(&p, 16 * 4).unwrap();
+        let want: Vec<f32> = (0..16).map(|i| i as f32 - 7.5).collect();
+        assert_eq!(m2.as_f32(), &want[..]);
+    }
+
+    #[test]
+    fn reads_after_flush_still_see_the_data() {
+        // MADV_DONTNEED must not lose msync'd pages
+        let p = tmp("postflush.bin");
+        let mut m = MappedFile::create(&p, 1024 * 4).unwrap();
+        m.as_f32_mut().iter_mut().for_each(|v| *v = 3.25);
+        m.flush().unwrap();
+        assert!(m.as_f32().iter().all(|&v| v == 3.25));
+    }
+
+    #[test]
+    fn zero_length_mapping_is_fine() {
+        let p = tmp("empty.bin");
+        let mut m = MappedFile::create(&p, 0).unwrap();
+        assert!(m.as_f32().is_empty());
+        m.flush().unwrap();
+    }
+
+    #[test]
+    fn reopen_rejects_geometry_mismatch() {
+        let p = tmp("mismatch.bin");
+        MappedFile::create(&p, 8 * 4).unwrap();
+        let err = MappedFile::reopen(&p, 16 * 4).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn create_truncates_stale_contents() {
+        let p = tmp("stale.bin");
+        let mut m = MappedFile::create(&p, 4 * 4).unwrap();
+        m.as_f32_mut().fill(9.0);
+        m.flush().unwrap();
+        drop(m);
+        let m2 = MappedFile::create(&p, 4 * 4).unwrap();
+        assert!(m2.as_f32().iter().all(|&v| v == 0.0));
+    }
+}

@@ -17,9 +17,17 @@
 //! analog) keep up to `pull_depth` gathers in flight while executable
 //! compute runs; `Serial` mode reproduces the naive blocking pattern for
 //! the Fig. 4 comparison.
+//!
+//! [`backing::HistoryBacking`] abstracts where a shard's rows live:
+//! in-RAM heap blocks (default) or mmap'd files ([`mmap::MappedFile`]) for
+//! out-of-core histories whose total size exceeds host RAM — select with
+//! [`backing::BackingSpec`] / `--history-backing`.
 
+pub mod backing;
+pub mod mmap;
 pub mod pipeline;
 pub mod store;
 
+pub use backing::{BackingSpec, HistoryBacking};
 pub use pipeline::{HistoryPipeline, PipelineError, PipelineMode, PullBuffer, DEFAULT_PULL_DEPTH};
 pub use store::{HistoryStore, ShardedHistoryStore};

@@ -36,6 +36,15 @@
 //! `sync()` still re-bounds it every epoch. `sync()` drains every queued
 //! job across all workers; the trainer calls it at epoch boundaries so
 //! evaluation reads fully-applied histories.
+//!
+//! Out-of-core backings slot into this engine unchanged: the push applier
+//! *is* the write-behind queue (write-backs land on whatever backing the
+//! store was built with — for mmap shards, on dirty mapped pages), and
+//! `sync()` doubles as the flush barrier — after draining, it calls
+//! `ShardedHistoryStore::flush()` so every applied push is durable on the
+//! shard files (and the dirty pages stop charging RSS) before the trainer
+//! reads, checkpoints, or starts the next epoch. RAM backings flush as a
+//! no-op, so the pre-existing sync contract is unchanged there.
 
 use crate::history::store::ShardedHistoryStore;
 use std::collections::VecDeque;
@@ -320,11 +329,17 @@ impl HistoryPipeline {
         }
     }
 
-    /// Drain all queued work (epoch boundary / before evaluation).
+    /// Drain all queued work (epoch boundary / before evaluation), then
+    /// flush the store's backing — the write-behind barrier: once `sync`
+    /// returns, every requested push has been applied *and* is durable on
+    /// the shard files (mmap backings; RAM backings flush as a no-op).
+    /// A storage failure here means the durability contract is broken
+    /// mid-epoch, which nothing downstream can reason about — panic.
     pub fn sync(&mut self) {
         if self.mode == PipelineMode::Concurrent {
             self.inflight.wait_idle();
         }
+        self.store.flush().expect("history backing flush failed at sync barrier");
     }
 
     /// Advance the staleness clock. In `Concurrent` mode the tick is
@@ -575,6 +590,28 @@ mod tests {
             assert_eq!(s.staleness(0, &[5]), 1.0, "pre-tick push aged one step");
             assert_eq!(s.staleness(0, &[3]), 0.0, "post-tick push is fresh");
         });
+    }
+
+    #[test]
+    fn sync_flushes_mmap_backing_durably() {
+        use crate::history::backing::BackingSpec;
+        let dir = std::env::temp_dir().join(format!("gas-pipe-mmap-{}", std::process::id()));
+        let spec = BackingSpec::Mmap { dir: dir.clone(), reopen: false };
+        let store = ShardedHistoryStore::with_backing(16, 4, 2, Some(2), &spec).unwrap();
+        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
+        let ids: Arc<[u32]> = Arc::from([2u32, 5, 9]);
+        let data: Vec<f32> = (0..12).map(|x| x as f32 + 1.0).collect();
+        p.push(0, ids.clone(), data.clone());
+        p.sync(); // write-behind barrier: applied AND durable
+        drop(p);
+        // a fresh store reopening the same shard files sees the pushed rows
+        let spec = BackingSpec::Mmap { dir: dir.clone(), reopen: true };
+        let store = ShardedHistoryStore::with_backing(16, 4, 2, Some(2), &spec).unwrap();
+        let mut out = vec![0f32; 12];
+        store.pull(0, &ids, &mut out);
+        assert_eq!(out, data);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

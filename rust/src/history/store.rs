@@ -23,7 +23,16 @@
 //! never observe a partially-applied push. The depth-K pull pool in
 //! [`crate::history::pipeline`] leans on exactly this invariant, and its
 //! `depth_k_pulls_never_observe_partial_pushes` test regresses it.
+//!
+//! Where the embedding rows *live* is a separate axis: each shard owns a
+//! [`HistoryBacking`] (in-RAM heap block or an mmap'd file — see
+//! [`crate::history::backing`]) selected by [`BackingSpec`]. Striping,
+//! locks, staleness clocks and delta probes are backing-agnostic; the
+//! gather/scatter hot loops hoist one `layer()` slice per (shard, layer)
+//! so the `dyn` dispatch stays off the per-row path.
 
+use super::backing::{make_backing, BackingSpec, HistoryBacking};
+use crate::memaccount::host::HistoryFootprint;
 use rayon::prelude::*;
 use std::sync::{RwLock, RwLockReadGuard};
 
@@ -93,7 +102,16 @@ impl HistoryStore {
     /// L2 delta vs previous value); when off, the old values are never read.
     pub fn push(&mut self, l: usize, ids: &[u32], data: &[f32]) {
         let h = self.h;
-        debug_assert!(data.len() >= ids.len() * h);
+        // release assert: a short buffer would scatter adjacent garbage
+        // rows into the histories (same OOB class as the PR-3 GEMM fix)
+        assert_eq!(
+            data.len(),
+            ids.len() * h,
+            "push: data holds {} floats but {} ids want rows of h={}",
+            data.len(),
+            ids.len(),
+            h
+        );
         let dst = &mut self.layers[l];
         if self.track_deltas {
             let mut dsum = 0f64;
@@ -159,10 +177,12 @@ impl HistoryStore {
 // ---------------------------------------------------------------------------
 
 /// Rows of one stripe: the same fields as [`HistoryStore`], in local
-/// (striped) numbering.
+/// (striped) numbering. The embedding rows live in `backing`; the
+/// staleness/probe metadata always stays on the heap (it is tiny — 8
+/// bytes per row per layer — and touched on every push).
 struct Shard {
     rows: usize,
-    layers: Vec<Vec<f32>>,
+    backing: Box<dyn HistoryBacking>,
     last_push: Vec<Vec<u64>>,
     step: u64,
     delta_sum: Vec<f64>,
@@ -170,20 +190,32 @@ struct Shard {
 }
 
 impl Shard {
-    fn new(rows: usize, h: usize, num_layers: usize) -> Shard {
-        Shard {
+    fn with_backing(
+        spec: &BackingSpec,
+        idx: usize,
+        rows: usize,
+        h: usize,
+        num_layers: usize,
+    ) -> std::io::Result<Shard> {
+        Ok(Shard {
             rows,
-            layers: (0..num_layers).map(|_| vec![0f32; rows * h]).collect(),
+            backing: make_backing(spec, idx, rows, h, num_layers)?,
             last_push: (0..num_layers).map(|_| vec![0u64; rows]).collect(),
             step: 0,
             delta_sum: vec![0.0; num_layers],
             delta_cnt: vec![0; num_layers],
-        }
+        })
     }
 
     #[inline]
     fn row(&self, l: usize, local: usize, h: usize) -> &[f32] {
-        &self.layers[l][local * h..(local + 1) * h]
+        &self.backing.layer(l)[local * h..(local + 1) * h]
+    }
+
+    /// Heap bytes of the staleness/probe metadata (backing-independent).
+    fn meta_bytes(&self) -> usize {
+        self.last_push.iter().map(|v| v.len() * 8).sum::<usize>()
+            + (self.delta_sum.len() + self.delta_cnt.len()) * 8
     }
 
     /// Scatter `(local_row, data_row)` pairs into layer `l`. Callers hand
@@ -197,7 +229,8 @@ impl Shard {
         h: usize,
         track_deltas: bool,
     ) {
-        let dst = &mut self.layers[l];
+        // one virtual call per scatter; the row loop writes a plain slice
+        let dst = self.backing.layer_mut(l);
         let mut dsum = 0f64;
         let mut cnt = 0u64;
         for (local, i) in rows {
@@ -244,6 +277,7 @@ pub struct ShardedHistoryStore {
     num_shards: usize,
     parallel: bool,
     track_deltas: bool,
+    backing_kind: &'static str,
     shards: Vec<RwLock<Shard>>,
 }
 
@@ -259,23 +293,40 @@ impl ShardedHistoryStore {
         num_layers: usize,
         num_shards: usize,
     ) -> ShardedHistoryStore {
+        // RAM backings never touch the filesystem, so this cannot fail
+        Self::with_backing(n, h, num_layers, Some(num_shards), &BackingSpec::Ram)
+            .expect("in-RAM store construction is infallible")
+    }
+
+    /// Construct with an explicit [`BackingSpec`] — the general form
+    /// behind `--history-backing`. `num_shards: None` uses the default
+    /// core-derived stripe count.
+    pub fn with_backing(
+        n: usize,
+        h: usize,
+        num_layers: usize,
+        num_shards: Option<usize>,
+        spec: &BackingSpec,
+    ) -> std::io::Result<ShardedHistoryStore> {
+        let num_shards = num_shards.unwrap_or_else(default_shards);
         assert!(num_shards >= 1, "need at least one shard");
         let shards = (0..num_shards)
             .map(|s| {
                 // stripe s holds ids {s, s+S, s+2S, ...} below n
                 let rows = if n > s { (n - s).div_ceil(num_shards) } else { 0 };
-                RwLock::new(Shard::new(rows, h, num_layers))
+                Ok(RwLock::new(Shard::with_backing(spec, s, rows, h, num_layers)?))
             })
-            .collect();
-        ShardedHistoryStore {
+            .collect::<std::io::Result<Vec<_>>>()?;
+        Ok(ShardedHistoryStore {
             n,
             h,
             num_layers,
             num_shards,
             parallel: true,
             track_deltas: true,
+            backing_kind: spec.kind(),
             shards,
-        }
+        })
     }
 
     /// Single shard, no rayon: the serial baseline the Fig. 4 / micro
@@ -307,9 +358,43 @@ impl ShardedHistoryStore {
         self.num_shards
     }
 
-    /// Bytes of host memory held by the embedding matrices.
+    /// Bytes of *logical* history state (`num_layers * n * h * 4`),
+    /// independent of where the rows live. See [`Self::footprint`] for
+    /// the resident-vs-mapped split.
     pub fn bytes(&self) -> usize {
         self.num_layers * self.n * self.h * 4
+    }
+
+    /// Which backing the shards were built on (`"ram"` or `"mmap"`).
+    pub fn backing_kind(&self) -> &'static str {
+        self.backing_kind
+    }
+
+    /// Durability barrier: flush every shard's backing, in shard order,
+    /// under the write locks (no gather or scatter can interleave). For
+    /// RAM backings this is a no-op; for mmap backings every row pushed
+    /// so far becomes recoverable from the shard files and the dirty
+    /// pages stop charging against the process's RSS. The pipeline calls
+    /// this from `sync()`, i.e. at every epoch boundary.
+    pub fn flush(&self) -> std::io::Result<()> {
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        for g in guards.iter_mut() {
+            g.backing.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Host-memory footprint split into unevictable heap bytes (embedding
+    /// rows for RAM backings + staleness metadata for both) and mapped
+    /// file bytes (mmap backings only).
+    pub fn footprint(&self) -> HistoryFootprint {
+        let mut fp = HistoryFootprint::default();
+        for s in &self.shards {
+            let g = s.read().unwrap();
+            fp.resident_bytes += g.backing.resident_bytes() + g.meta_bytes();
+            fp.mapped_bytes += g.backing.mapped_bytes();
+        }
+        fp
     }
 
     /// Advance the staleness clock on every shard, atomically: all write
@@ -373,20 +458,24 @@ impl ShardedHistoryStore {
         let h = self.h;
         let ns = self.num_shards;
         debug_assert_eq!(out.len(), ids.len() * h);
+        // hoist the backing dispatch: one `layer()` virtual call per
+        // shard, then the row loops below index plain slices
+        let layers: Vec<&[f32]> = guards.iter().map(|g| g.backing.layer(l)).collect();
         if self.parallel && ids.len() >= PAR_MIN_ROWS {
             out.par_chunks_mut(GATHER_CHUNK_ROWS * h)
                 .zip(ids.par_chunks(GATHER_CHUNK_ROWS))
                 .for_each(|(dst, idc)| {
                     for (k, &id) in idc.iter().enumerate() {
                         let id = id as usize;
-                        dst[k * h..(k + 1) * h]
-                            .copy_from_slice(guards[id % ns].row(l, id / ns, h));
+                        let s = (id / ns) * h;
+                        dst[k * h..(k + 1) * h].copy_from_slice(&layers[id % ns][s..s + h]);
                     }
                 });
         } else {
             for (k, &id) in ids.iter().enumerate() {
                 let id = id as usize;
-                out[k * h..(k + 1) * h].copy_from_slice(guards[id % ns].row(l, id / ns, h));
+                let s = (id / ns) * h;
+                out[k * h..(k + 1) * h].copy_from_slice(&layers[id % ns][s..s + h]);
             }
         }
     }
@@ -395,7 +484,16 @@ impl ShardedHistoryStore {
     /// Shards are updated in parallel; rows within one push land exactly
     /// as the reference [`HistoryStore::push`] would place them.
     pub fn push(&self, l: usize, ids: &[u32], data: &[f32]) {
-        debug_assert!(data.len() >= ids.len() * self.h);
+        // release assert (mirrors [`HistoryStore::push`]): a short buffer
+        // would scatter adjacent garbage rows into the histories
+        assert_eq!(
+            data.len(),
+            ids.len() * self.h,
+            "push: data holds {} floats but {} ids want rows of h={}",
+            data.len(),
+            ids.len(),
+            self.h
+        );
         let h = self.h;
         let ns = self.num_shards;
         let track = self.track_deltas;
@@ -707,6 +805,59 @@ mod tests {
         assert_eq!(st, vec![s.staleness(0, &ids), s.staleness(1, &ids)]);
         assert_eq!(st[0], 1.0);
         assert_eq!(st[1], 0.75);
+    }
+
+    #[test]
+    fn mmap_backing_matches_ram_bit_for_bit() {
+        let dir = std::env::temp_dir().join(format!("gas-store-mmap-{}", std::process::id()));
+        let spec = BackingSpec::Mmap { dir: dir.clone(), reopen: false };
+        let ram = ShardedHistoryStore::with_shards(97, 6, 2, 4);
+        let mm = ShardedHistoryStore::with_backing(97, 6, 2, Some(4), &spec).unwrap();
+        assert_eq!(ram.backing_kind(), "ram");
+        assert_eq!(mm.backing_kind(), "mmap");
+        let mut rng = Rng::new(3);
+        for step in 0..20 {
+            let l = step % 2;
+            let k = 1 + rng.below(60);
+            let ids: Vec<u32> = (0..k).map(|_| rng.below(97) as u32).collect();
+            let data: Vec<f32> = (0..k * 6).map(|_| rng.normal_f32()).collect();
+            ram.push(l, &ids, &data);
+            mm.push(l, &ids, &data);
+            ram.tick();
+            mm.tick();
+            if step % 7 == 0 {
+                mm.flush().unwrap(); // mid-run flushes must not perturb rows
+            }
+        }
+        let all: Vec<u32> = (0..97u32).collect();
+        let mut a = vec![0f32; 2 * 97 * 6];
+        let mut b = vec![0f32; 2 * 97 * 6];
+        let sa = ram.pull_all_with_staleness(&all, &mut a);
+        let sb = mm.pull_all_with_staleness(&all, &mut b);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a), bits(&b), "mmap rows diverged from ram rows");
+        assert_eq!(sa, sb, "staleness probes diverged across backings");
+        // accounting: mmap charges the mapping, ram charges the heap
+        assert_eq!(mm.footprint().mapped_bytes, mm.bytes());
+        assert!(mm.footprint().resident_bytes < ram.footprint().resident_bytes);
+        assert_eq!(ram.footprint().mapped_bytes, 0);
+        assert!(ram.footprint().resident_bytes >= ram.bytes());
+        drop(mm);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "push: data holds")]
+    fn short_push_buffer_is_rejected() {
+        let s = ShardedHistoryStore::with_shards(10, 4, 1, 2);
+        s.push(0, &[1, 2], &[0.0; 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "push: data holds")]
+    fn short_push_buffer_is_rejected_by_reference_store() {
+        let mut s = HistoryStore::new(10, 4, 1);
+        s.push(0, &[1, 2], &[0.0; 7]);
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //!              pjrt when compiled artifacts exist, else native)
 //!              [--pull-depth K]          (halo pulls in flight / prefetch
 //!              distance; default GAS_PULL_DEPTH env, else 2)
+//!              [--history-backing ram|mmap] [--history-dir PATH]
+//!              (where history rows live; mmap = out-of-core shard files,
+//!              default GAS_HISTORY_BACKING / GAS_HISTORY_DIR, else ram;
+//!              --history-dir alone implies mmap)
 //!   gen        --dataset cora            (generate + print dataset stats)
 //!   partition  --dataset cora --parts 4  (METIS vs random quality)
 //!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
@@ -16,7 +20,7 @@ use anyhow::{bail, Result};
 use gas::backend::native::registry;
 use gas::baselines::naive_history::{gas_config, naive_config};
 use gas::baselines::ClusterGcnTrainer;
-use gas::config::{Backend, Ctx};
+use gas::config::{parse_history_backing, Backend, Ctx};
 use gas::expressive::prop3;
 use gas::memaccount::MemoryModel;
 use gas::partition::{inter_intra_ratio, metis_partition, random_partition};
@@ -80,6 +84,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
             // --pull-depth overrides the preset (which read GAS_PULL_DEPTH)
             cfg.pull_depth = args.usize_or("pull-depth", cfg.pull_depth)?.max(1);
+            // --history-backing/--history-dir override the preset (which
+            // read GAS_HISTORY_BACKING); a dir alone implies mmap
+            let dir = args.get("history-dir").map(std::path::PathBuf::from);
+            if let Some(kind) = args.get("history-backing") {
+                cfg.history_backing = parse_history_backing(kind, dir)?;
+            } else if let Some(dir) = dir {
+                cfg.history_backing = parse_history_backing("mmap", Some(dir))?;
+            }
+            let backing = cfg.history_backing.kind();
             let mut tr = Trainer::new(ds, art, cfg)?;
             let r = tr.train()?;
             println!(
@@ -89,6 +102,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                 r.test_at_best_val,
                 r.steps,
                 r.staleness
+            );
+            println!(
+                "  history [{backing}] {:.1} MiB total | {:.1} MiB resident | {:.1} MiB mapped",
+                r.history_bytes as f64 / (1 << 20) as f64,
+                r.history_resident_bytes as f64 / (1 << 20) as f64,
+                r.history_mapped_bytes as f64 / (1 << 20) as f64
             );
             for (k, v) in r.buckets.entries() {
                 println!("  {k:<12} {:.3}s", v);

@@ -1,0 +1,75 @@
+//! Host-memory accounting for the history store (out-of-core mode).
+//!
+//! The analytic model in [`super::account`] covers *device* bytes; this
+//! module covers the *host* side, where the histories live. Two numbers
+//! matter and they are deliberately kept apart:
+//!
+//! * **resident** — unevictable heap bytes (RAM-backed embedding rows
+//!   plus the staleness metadata both backings keep in RAM). This is what
+//!   the CI RAM-budget gate (`GAS_BENCH_MAX_HISTORY_RSS_MB`) bounds.
+//! * **mapped** — file-backed mmap bytes. The kernel may cache them, but
+//!   it can also evict them under pressure, and the store's epoch-boundary
+//!   `flush()` actively drops them — they are not a RAM floor.
+//!
+//! [`current_rss_bytes`]/[`peak_rss_bytes`] read the process-level truth
+//! from `/proc/self/status` for cross-checking the self-reported split
+//! (Linux only; `None` elsewhere).
+
+/// Resident-vs-mapped byte split of a history store. Produced by
+/// `ShardedHistoryStore::footprint`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct HistoryFootprint {
+    /// Unevictable heap bytes (embedding rows for RAM backings, plus
+    /// staleness/probe metadata for every backing).
+    pub resident_bytes: usize,
+    /// File-backed mapped bytes (mmap backings only; evictable).
+    pub mapped_bytes: usize,
+}
+
+impl HistoryFootprint {
+    /// Everything addressable: heap + mapping.
+    pub fn total_bytes(&self) -> usize {
+        self.resident_bytes + self.mapped_bytes
+    }
+}
+
+/// Current VmRSS of this process, from `/proc/self/status`.
+pub fn current_rss_bytes() -> Option<usize> {
+    proc_status_kib("VmRSS:").map(|k| k * 1024)
+}
+
+/// Peak VmHWM (high-water mark) of this process.
+pub fn peak_rss_bytes() -> Option<usize> {
+    proc_status_kib("VmHWM:").map(|k| k * 1024)
+}
+
+/// Parse a `kB` line out of `/proc/self/status` (Linux only).
+fn proc_status_kib(key: &str) -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with(key))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_totals_add_up() {
+        let fp = HistoryFootprint {
+            resident_bytes: 10,
+            mapped_bytes: 32,
+        };
+        assert_eq!(fp.total_bytes(), 42);
+        assert_eq!(HistoryFootprint::default().total_bytes(), 0);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn proc_rss_is_reported_on_linux() {
+        let rss = current_rss_bytes().expect("VmRSS missing from /proc/self/status");
+        let peak = peak_rss_bytes().expect("VmHWM missing from /proc/self/status");
+        assert!(rss > 0);
+        assert!(peak >= rss, "high-water mark below current RSS");
+    }
+}

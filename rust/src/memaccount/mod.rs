@@ -7,6 +7,12 @@
 //! O(|∪_{v∈B} N(v) ∪ {v}| · L) for GAS vs O(N · L) full-batch vs
 //! O(B · fanout^L) for node-wise sampling.
 
+//! [`host`] complements the device model with *host*-side accounting for
+//! the history store: resident (unevictable heap) vs mapped (mmap'd,
+//! evictable) bytes, plus `/proc`-based RSS readings to cross-check them.
+
 pub mod account;
+pub mod host;
 
 pub use account::{MemoryModel, MethodMemory};
+pub use host::{current_rss_bytes, peak_rss_bytes, HistoryFootprint};

@@ -28,7 +28,9 @@
 //! ([`Trainer::evaluate_serial`]).
 
 use crate::graph::datasets::Dataset;
-use crate::history::{HistoryPipeline, PipelineMode, PullBuffer, ShardedHistoryStore};
+use crate::history::{
+    BackingSpec, HistoryPipeline, PipelineMode, PullBuffer, ShardedHistoryStore,
+};
 use crate::model::metrics;
 use crate::model::{Adam, Optimizer, ParamStore};
 use crate::partition::{metis_partition, random_partition};
@@ -68,6 +70,9 @@ pub struct TrainConfig {
     /// history-store shard count (None = one stripe per core, capped at 8;
     /// Some(1) still runs the rayon gather/scatter on a single stripe)
     pub history_shards: Option<usize>,
+    /// where the history rows live: in-RAM (default) or mmap'd shard
+    /// files (out-of-core; see `--history-backing` / `GAS_HISTORY_BACKING`)
+    pub history_backing: BackingSpec,
     /// max halo pulls in flight = the epoch pipeline's prefetch distance
     /// (clamped to ≥ 1). 1 reproduces the classic one-step-lookahead
     /// schedule bit-for-bit; the default (2, or `GAS_PULL_DEPTH`) keeps a
@@ -92,6 +97,7 @@ impl Default for TrainConfig {
             label_sel: LabelSel::Train,
             parts: None,
             history_shards: None,
+            history_backing: crate::config::default_history_backing(),
             pull_depth: crate::config::default_pull_depth(),
         }
     }
@@ -111,7 +117,13 @@ pub struct TrainResult {
     pub staleness: Vec<f64>,
     /// mean push delta ||h_new - h_old|| per layer (empirical epsilon)
     pub push_delta: Vec<f64>,
+    /// logical history bytes (`layers * n * h * 4`), backing-independent
     pub history_bytes: usize,
+    /// unevictable heap bytes the store held at the end of the run (for
+    /// mmap backings this is just the staleness metadata)
+    pub history_resident_bytes: usize,
+    /// mmap'd shard-file bytes (0 for the RAM backing)
+    pub history_mapped_bytes: usize,
     pub steps: usize,
 }
 
@@ -152,10 +164,13 @@ impl<'a> Trainer<'a> {
         for g in &groups {
             plans.push(BatchPlan::build_gas(ds, spec, g, cfg.label_sel)?);
         }
-        let store = match cfg.history_shards {
-            Some(s) => ShardedHistoryStore::with_shards(ds.n(), spec.hist_dim, spec.hist_layers(), s),
-            None => ShardedHistoryStore::new(ds.n(), spec.hist_dim, spec.hist_layers()),
-        };
+        let store = ShardedHistoryStore::with_backing(
+            ds.n(),
+            spec.hist_dim,
+            spec.hist_layers(),
+            cfg.history_shards,
+            &cfg.history_backing,
+        )?;
         let mut pipeline = HistoryPipeline::with_depth(store, cfg.pipeline, cfg.pull_depth);
         // the trainer consumes the gather-time staleness probe (TrainResult
         // + the Theorem-2 error-bound harnesses); benches/eval leave it off
@@ -209,6 +224,8 @@ impl<'a> Trainer<'a> {
             staleness: Vec::new(),
             push_delta: Vec::new(),
             history_bytes: self.pipeline.with_store(|s| s.bytes()),
+            history_resident_bytes: 0,
+            history_mapped_bytes: 0,
             steps: 0,
         };
         let mut sched = EpochScheduler::new(self.plans.len(), self.cfg.seed ^ 0x5eed, self.cfg.shuffle);
@@ -257,6 +274,11 @@ impl<'a> Trainer<'a> {
         result.push_delta = self
             .pipeline
             .with_store(|s| (0..hl).map(|l| s.mean_push_delta(l)).collect());
+        // end-of-run footprint (post-sync): what the store still pins in
+        // RAM vs what lives on the mapped shard files
+        let fp = self.pipeline.with_store(|s| s.footprint());
+        result.history_resident_bytes = fp.resident_bytes;
+        result.history_mapped_bytes = fp.mapped_bytes;
         Ok(result)
     }
 

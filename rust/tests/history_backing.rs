@@ -1,0 +1,225 @@
+//! Backing parity + durability for the out-of-core history store.
+//!
+//! The mmap backing's contract is "exact drop-in": any schedule of
+//! pushes, ticks and flushes must be observationally identical to the
+//! in-RAM striped shards, bit for bit — rows, staleness clocks, and
+//! delta probes alike. This file checks that three ways:
+//!
+//! 1. a property test driving random push/tick/flush schedules through
+//!    both backings and comparing every observable;
+//! 2. a drop-and-reopen test proving flushed shard files are the whole
+//!    durable state (rows recoverable, geometry changes rejected);
+//! 3. end-to-end training on the tape-regression configs (Serial
+//!    pipeline, pull_depth=1 — the bit-deterministic schedule), ram vs
+//!    mmap, comparing curves, probes, and the final history itself.
+
+use gas::backend::native::{registry, NativeArtifact};
+use gas::baselines::naive_history::gas_config;
+use gas::graph::datasets::{Dataset, Profile};
+use gas::history::{BackingSpec, PipelineMode, ShardedHistoryStore};
+use gas::train::Trainer;
+use gas::util::prop;
+use gas::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gas-backing-{tag}-{}", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn fbits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn mmap_spec(dir: &Path, reopen: bool) -> BackingSpec {
+    BackingSpec::Mmap { dir: dir.to_path_buf(), reopen }
+}
+
+fn store(
+    n: usize,
+    h: usize,
+    layers: usize,
+    shards: usize,
+    spec: &BackingSpec,
+) -> ShardedHistoryStore {
+    ShardedHistoryStore::with_backing(n, h, layers, Some(shards), spec).unwrap()
+}
+
+/// Drive one random schedule through a ram store and an mmap store and
+/// demand identical observable behavior: pulled rows, staleness clocks,
+/// delta probes — including identical re-pushes (the delta-skip path)
+/// and mid-run flush barriers (a no-op for ram, msync for mmap).
+fn backings_agree(seed: u64) -> bool {
+    let mut rng = Rng::new(seed ^ 0xBAC1);
+    let n = 16 + rng.below(180);
+    let h = 1 + rng.below(9);
+    let layers = 1 + rng.below(3);
+    let shards = 1 + rng.below(5);
+    let dir = tmp(&format!("prop-{seed}"));
+    let mut ram = store(n, h, layers, shards, &BackingSpec::Ram);
+    let mut mm = store(n, h, layers, shards, &mmap_spec(&dir, false));
+    let track = rng.chance(0.5);
+    ram.set_delta_tracking(track);
+    mm.set_delta_tracking(track);
+    let mut ok = true;
+    for _ in 0..12 {
+        let l = rng.below(layers);
+        let k = 1 + rng.below(n);
+        let ids: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&i| i as u32).collect();
+        let data: Vec<f32> = (0..ids.len() * h).map(|_| rng.normal_f32()).collect();
+        ram.push(l, &ids, &data);
+        mm.push(l, &ids, &data);
+        if rng.chance(0.3) {
+            // identical re-push: the delta probe sees a zero-delta batch
+            ram.push(l, &ids, &data);
+            mm.push(l, &ids, &data);
+        }
+        if rng.chance(0.7) {
+            ram.tick();
+            mm.tick();
+        }
+        if rng.chance(0.3) {
+            ram.flush().unwrap();
+            mm.flush().unwrap();
+        }
+        let p = 1 + rng.below(n);
+        let probe: Vec<u32> = rng.sample_distinct(n, p).iter().map(|&i| i as u32).collect();
+        let mut a = vec![0f32; layers * probe.len() * h];
+        let mut b = vec![0f32; layers * probe.len() * h];
+        let sa = ram.pull_all_with_staleness(&probe, &mut a);
+        let sb = mm.pull_all_with_staleness(&probe, &mut b);
+        ok &= bits(&a) == bits(&b) && fbits(&sa) == fbits(&sb);
+        for ll in 0..layers {
+            ok &= ram.staleness(ll, &probe).to_bits() == mm.staleness(ll, &probe).to_bits();
+            ok &= ram.mean_push_delta(ll).to_bits() == mm.mean_push_delta(ll).to_bits();
+        }
+    }
+    // the whole store, row by row
+    let all: Vec<u32> = (0..n as u32).collect();
+    for l in 0..layers {
+        let mut a = vec![0f32; n * h];
+        let mut b = vec![0f32; n * h];
+        ram.pull(l, &all, &mut a);
+        mm.pull(l, &all, &mut b);
+        ok &= bits(&a) == bits(&b);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    ok
+}
+
+#[test]
+fn random_schedules_agree_across_backings() {
+    prop::check(0x0C17, 24, |r| r.next_u64(), |&seed| backings_agree(seed));
+}
+
+#[test]
+fn flushed_shards_reopen_from_disk() {
+    let dir = tmp("reopen");
+    let (n, h, layers) = (37usize, 5usize, 2usize);
+    let mut rng = Rng::new(7);
+    let all: Vec<u32> = (0..n as u32).collect();
+    let data: Vec<f32> = (0..n * h).map(|_| rng.normal_f32()).collect();
+    {
+        let st = store(n, h, layers, 3, &mmap_spec(&dir, false));
+        st.push(1, &all, &data);
+        st.flush().unwrap();
+    } // dropped: the shard files are all that survives
+    let st = store(n, h, layers, 3, &mmap_spec(&dir, true));
+    assert_eq!(st.backing_kind(), "mmap");
+    let mut out = vec![0f32; n * h];
+    st.pull(1, &all, &mut out);
+    assert_eq!(bits(&out), bits(&data), "flushed rows did not survive the drop");
+    // layer 0 was never pushed: still the zero pages create() made
+    st.pull(0, &all, &mut out);
+    assert!(out.iter().all(|&v| v == 0.0));
+    // a geometry change is an error, not silent reinterpretation
+    let err = ShardedHistoryStore::with_backing(n, h + 1, layers, Some(3), &mmap_spec(&dir, true));
+    assert!(err.is_err(), "reopen with a different row width must fail");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn synth_profile() -> Profile {
+    Profile {
+        name: "backing_pp".into(),
+        kind: "planted".into(),
+        n: 400,
+        f: 16,
+        c: 4,
+        avg_deg: 6.0,
+        multilabel: false,
+        train_frac: 0.5,
+        val_frac: 0.2,
+        homophily: 0.9,
+        feat_noise: 0.5,
+        parts: 4,
+        paper_n: 400,
+        seed: 11,
+    }
+}
+
+/// The bit-deterministic schedule of the tape-regression harness: Serial
+/// pipeline (concurrency reorders pushes), one-step lookahead.
+fn serial_cfg(reg: f32, backing: BackingSpec) -> gas::train::TrainConfig {
+    let mut cfg = gas_config(6, 0.01, reg, 9);
+    cfg.pipeline = PipelineMode::Serial;
+    cfg.pull_depth = 1;
+    cfg.eval_every = 2;
+    cfg.history_backing = backing;
+    cfg
+}
+
+#[test]
+fn training_is_bit_identical_across_backings() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    for (model, layers, reg) in [("gcn", 2, 0.0f32), ("gcnii", 3, 0.02), ("gin", 3, 0.0)] {
+        let spec = registry::spec_for_profile(&profile, model, layers, "gas", "").unwrap();
+        let (hl, hd) = (spec.hist_layers(), spec.hist_dim);
+        let art = NativeArtifact::new(spec).unwrap();
+        let dir = tmp(&format!("e2e-{model}"));
+
+        let mut tr_ram = Trainer::new(&ds, &art, serial_cfg(reg, BackingSpec::Ram)).unwrap();
+        let r_ram = tr_ram.train().unwrap();
+        let mut tr_mm = Trainer::new(&ds, &art, serial_cfg(reg, mmap_spec(&dir, false))).unwrap();
+        let r_mm = tr_mm.train().unwrap();
+
+        assert_eq!(fbits(&r_ram.loss.values), fbits(&r_mm.loss.values), "{model}: loss diverged");
+        assert_eq!(fbits(&r_ram.val_acc.values), fbits(&r_mm.val_acc.values), "{model}: val");
+        assert_eq!(fbits(&r_ram.test_acc.values), fbits(&r_mm.test_acc.values), "{model}: test");
+        assert_eq!(fbits(&r_ram.staleness), fbits(&r_mm.staleness), "{model}: staleness");
+        assert_eq!(fbits(&r_ram.push_delta), fbits(&r_mm.push_delta), "{model}: push delta");
+        // not vacuous: the runs actually trained
+        assert!(
+            r_ram.loss.values.last().unwrap() < r_ram.loss.values.first().unwrap(),
+            "{model}: loss did not decrease"
+        );
+
+        // the final histories themselves, every row of every layer
+        let all: Vec<u32> = (0..ds.n() as u32).collect();
+        let mut a = vec![0f32; ds.n() * hd];
+        let mut b = vec![0f32; ds.n() * hd];
+        for l in 0..hl {
+            tr_ram.with_history(|s| s.pull(l, &all, &mut a));
+            tr_mm.with_history(|s| s.pull(l, &all, &mut b));
+            assert_eq!(bits(&a), bits(&b), "{model}: layer {l} history rows diverged");
+        }
+
+        // residency accounting: ram holds everything on the heap, mmap
+        // holds only staleness metadata (the rows live in the mapping)
+        assert_eq!(r_ram.history_mapped_bytes, 0);
+        assert!(r_ram.history_resident_bytes >= r_ram.history_bytes);
+        assert_eq!(r_mm.history_mapped_bytes, r_mm.history_bytes);
+        assert!(
+            r_mm.history_resident_bytes < r_mm.history_bytes,
+            "{model}: mmap resident {} not below logical {}",
+            r_mm.history_resident_bytes,
+            r_mm.history_bytes
+        );
+
+        drop(tr_mm);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
