@@ -8,11 +8,22 @@
 //!     tightening techniques, §3);
 //!   * error grows with layer index (Theorem 2's error propagation).
 //!
+//! Plus the quantized-history convergence sweep: gcn2 and gcnii8 on cora
+//! trained at equal steps under f32 / f16 / int8 histories (Serial
+//! pipeline, pull_depth=1 — bit-deterministic, so the codec is the only
+//! difference), recording final accuracy, stored-vs-logical bytes, and
+//! the per-epoch quantization-error telemetry. The summary lands in
+//! `BENCH_error_bounds.json` where `ci/check_bench_error_bounds.py`
+//! fails the build if a compressed codec costs more than a small epsilon
+//! of accuracy — the codec analog of the Theorem-2 bounded-error claim.
+//!
 //!     cargo bench --bench error_bounds
+//!     GAS_EB_TINY=1 cargo bench --bench error_bounds   # CI smoke
 
 use gas::baselines::naive_history::{gas_config, naive_config};
-use gas::bench::{epochs_or, print_table};
+use gas::bench::{epochs_or, print_table, write_bench_json, BenchReport, Bencher};
 use gas::config::Ctx;
+use gas::history::{BackingSpec, Codec, PipelineMode};
 use gas::runtime::{Executor, StepInputs};
 use gas::sched::batch::{BatchPlan, LabelSel};
 use gas::train::Trainer;
@@ -84,8 +95,29 @@ fn probe(ctx: &mut Ctx, epochs: usize, naive: bool) -> anyhow::Result<(Vec<f64>,
     Ok((err, r.push_delta))
 }
 
+/// Train one (model, codec) cell at equal steps on the deterministic
+/// Serial schedule; returns the finished result.
+fn codec_run(
+    ctx: &mut Ctx,
+    art_name: &str,
+    epochs: usize,
+    codec: Codec,
+) -> anyhow::Result<gas::train::TrainResult> {
+    ctx.dataset("cora")?;
+    ctx.artifact(art_name)?;
+    let ds = ctx.get_dataset("cora")?;
+    let art = ctx.get_artifact(art_name)?;
+    let mut cfg = gas_config(epochs, 0.01, 0.0, 0);
+    cfg.pipeline = PipelineMode::Serial;
+    cfg.pull_depth = 1;
+    cfg.history_backing = BackingSpec::ram().with_codec(codec);
+    let mut tr = Trainer::new(ds, art, cfg)?;
+    tr.train()
+}
+
 fn main() -> anyhow::Result<()> {
-    let epochs = epochs_or(20);
+    let tiny = std::env::var("GAS_EB_TINY").is_ok();
+    let epochs = if tiny { 8 } else { epochs_or(20) };
     let mut ctx = Ctx::new()?;
     let mut rows = Vec::new();
     for (name, naive) in [("GAS (METIS+clip)", false), ("naive (random)", true)] {
@@ -103,5 +135,61 @@ fn main() -> anyhow::Result<()> {
         &rows,
     );
     println!("\nexpect: GAS row < naive row at every layer; error grows with depth");
+
+    // --- quantized-history convergence sweep ---------------------------------
+    // Equal steps, identical schedule, only the history codec varies. The
+    // "codec train" rows are trajectory-gated; the accuracy deltas and
+    // stored-byte ratios are floor-gated by ci/check_bench_error_bounds.py.
+    let b = Bencher::new(0, 1);
+    let mut reports: Vec<BenchReport> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    let mut codec_rows = Vec::new();
+    for model in ["gcn2", "gcnii8"] {
+        let art_name = format!("cora_{model}_gas");
+        for codec in [Codec::F32, Codec::F16, Codec::Int8] {
+            let mut out = None;
+            let r = b.run(&format!("codec train {model} [{}]", codec.name()), || {
+                out = Some(codec_run(&mut ctx, &art_name, epochs, codec));
+            });
+            println!("{}", r.line());
+            reports.push(r);
+            let res = out.expect("bencher ran the closure")?;
+            let val = res.val_acc.last().unwrap_or(0.0);
+            let stored_ratio = res.history_stored_bytes as f64 / res.history_bytes as f64;
+            let qmax = res.quant_err_max.last().unwrap_or(0.0);
+            let qmean = res.quant_err_mean.last().unwrap_or(0.0);
+            codec_rows.push(vec![
+                format!("{model} [{}]", codec.name()),
+                format!("{val:.4}"),
+                format!("{:.4}", res.test_at_best_val),
+                format!("{stored_ratio:.3}"),
+                format!("{qmax:.2e}"),
+                format!("{qmean:.2e}"),
+            ]);
+            let tag = format!("{model}_{}", codec.name());
+            metrics.push((format!("{tag}_val_acc"), val));
+            metrics.push((format!("{tag}_test_at_best_val"), res.test_at_best_val));
+            metrics.push((format!("{tag}_stored_ratio"), stored_ratio));
+            metrics.push((format!("{tag}_quant_err_max"), qmax));
+            metrics.push((format!("{tag}_quant_err_mean"), qmean));
+            metrics.push((format!("{tag}_steps"), res.steps as f64));
+        }
+    }
+    print_table(
+        "Quantized-history convergence (cora, equal steps, Serial schedule)",
+        &["model [codec]", "final val", "test@best", "stored/logical", "qerr max", "qerr mean"],
+        &codec_rows,
+    );
+    println!(
+        "\nexpect: f16/int8 val accuracy within a small epsilon of f32 at equal \
+         steps (gated); stored/logical ≈ 0.50 for f16, ≈ 0.28 for int8 at h=64"
+    );
+    metrics.push(("tiny".to_string(), if tiny { 1.0 } else { 0.0 }));
+    metrics.push(("epochs".to_string(), epochs as f64));
+    let json_path = std::env::var("GAS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_error_bounds.json".to_string());
+    let metric_refs: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json(&json_path, "error_bounds", &reports, &metric_refs)?;
+    println!("wrote {json_path}");
     Ok(())
 }

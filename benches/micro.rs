@@ -1,5 +1,6 @@
 //! Micro-benchmarks of the L3 hot paths: METIS partitioning, history
-//! pull/push throughput (serial vs concurrent vs sharded), blocked-vs-
+//! pull/push throughput (serial vs concurrent vs sharded vs mmap vs the
+//! f16/int8 quantized codecs), blocked-vs-
 //! scalar GEMM kernels on the dense dims that dominate native step time,
 //! blocked-vs-scalar SpMM (CSR scatter) kernels on the sparse dims that
 //! dominate at scale, blocked-vs-scalar edge-softmax attention (the
@@ -19,7 +20,7 @@
 use gas::backend::native::{attn, gemm, ops, registry, spmm, NativeArtifact};
 use gas::bench::{write_bench_json, BenchReport, Bencher};
 use gas::graph::generators;
-use gas::history::{BackingSpec, HistoryPipeline, PipelineMode, ShardedHistoryStore};
+use gas::history::{BackingSpec, Codec, HistoryPipeline, PipelineMode, ShardedHistoryStore};
 use gas::partition::metis_partition;
 use gas::runtime::{ArtifactSpec, Executor, InputSpec, ParamSpec};
 use gas::sched::batch::{BatchPlan, LabelSel};
@@ -82,12 +83,15 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(metis_partition(&g, k, 1));
     });
 
-    // --- history pull/push: serial vs concurrent vs sharded vs mmap ----------
+    // --- history pull/push: serial vs concurrent vs sharded vs mmap vs codec --
     // 100K-node store, 8K-row transfers x 64 dims x 3 layers (≥ the paper's
     // halo sizes). "serial"/"concurrent" run the single-stripe store (the
     // old engine); "sharded" adds row striping + rayon gather/scatter;
     // "mmap" is the sharded store on the out-of-core file backing (~77 MB
-    // of shard files), so its push row also pays the sync-barrier msync.
+    // of shard files), so its push row also pays the sync-barrier msync;
+    // "f16"/"int8" are the sharded RAM store on the compressed codecs, so
+    // pull pays dequantize-on-gather and push pays encode-on-apply —
+    // their slowdown over the f32 sharded rows is a CI-capped ratio.
     let mmap_dir = std::env::temp_dir().join(format!("gas-micro-mmap-{}", std::process::id()));
     let ids: Vec<u32> = (0..PULL_ROWS as u32)
         .map(|i| (i * 7) % HIST_N as u32)
@@ -95,11 +99,13 @@ fn main() -> anyhow::Result<()> {
     // shared once, cloned per step — the hot path does no per-step id copy
     let ids_arc: Arc<[u32]> = Arc::from(&ids[..]);
     let data = vec![1.0f32; PULL_ROWS * HIST_H];
-    let configs: [(&str, PipelineMode); 4] = [
+    let configs: [(&str, PipelineMode); 6] = [
         ("serial", PipelineMode::Serial),
         ("concurrent", PipelineMode::Concurrent),
         ("sharded", PipelineMode::Concurrent),
         ("mmap", PipelineMode::Concurrent),
+        ("f16", PipelineMode::Concurrent),
+        ("int8", PipelineMode::Concurrent),
     ];
     let mut hist_medians: Vec<(&str, f64, f64)> = Vec::new(); // (label, pull_s, push_s)
     for (label, mode) in configs {
@@ -110,8 +116,18 @@ fn main() -> anyhow::Result<()> {
                 HIST_H,
                 HIST_LAYERS,
                 None,
-                &BackingSpec::Mmap { dir: mmap_dir.clone(), reopen: false },
+                &BackingSpec::mmap(mmap_dir.clone(), false),
             )?,
+            "f16" | "int8" => {
+                let codec = if label == "f16" { Codec::F16 } else { Codec::Int8 };
+                ShardedHistoryStore::with_backing(
+                    HIST_N,
+                    HIST_H,
+                    HIST_LAYERS,
+                    None,
+                    &BackingSpec::ram().with_codec(codec),
+                )?
+            }
             _ => ShardedHistoryStore::sequential(HIST_N, HIST_H, HIST_LAYERS),
         };
         let mut pipe = HistoryPipeline::new(store, mode);
@@ -590,6 +606,8 @@ fn main() -> anyhow::Result<()> {
     let (serial_pull, serial_push) = hist("serial");
     let (sharded_pull, sharded_push) = hist("sharded");
     let (mmap_pull, mmap_push) = hist("mmap");
+    let (f16_pull, f16_push) = hist("f16");
+    let (int8_pull, int8_push) = hist("int8");
     let pull_speedup = serial_pull / sharded_pull;
     let push_speedup = serial_push / sharded_push;
     println!(
@@ -603,6 +621,15 @@ fn main() -> anyhow::Result<()> {
         mmap_pull / sharded_pull,
         mmap_push / sharded_push
     );
+    println!(
+        "codec backings vs sharded f32 ram: f16 pull {:.2}x / push {:.2}x, \
+         int8 pull {:.2}x / push {:.2}x slower (CI caps the ratios; absolute \
+         medians trajectory-gated)",
+        f16_pull / sharded_pull,
+        f16_push / sharded_push,
+        int8_pull / sharded_pull,
+        int8_push / sharded_push
+    );
     let _ = std::fs::remove_dir_all(&mmap_dir);
     let json_path =
         std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_micro.json".to_string());
@@ -614,6 +641,10 @@ fn main() -> anyhow::Result<()> {
         ("push_speedup_sharded_vs_serial", push_speedup),
         ("pull_mmap_over_ram_ratio", mmap_pull / sharded_pull),
         ("push_mmap_over_ram_ratio", mmap_push / sharded_push),
+        ("pull_f16_over_ram_ratio", f16_pull / sharded_pull),
+        ("push_f16_over_ram_ratio", f16_push / sharded_push),
+        ("pull_int8_over_ram_ratio", int8_pull / sharded_pull),
+        ("push_int8_over_ram_ratio", int8_push / sharded_push),
         ("pipeline_overlap_speedup", overlap_speedup),
     ];
     metrics.extend(gemm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));

@@ -8,16 +8,19 @@
 //!
 //! Part 2 (measured, out-of-core smoke): train a planted-partition graph
 //! whose histories exceed a configured RAM budget
-//! (`GAS_BENCH_MAX_HISTORY_RSS_MB`, default 64 MiB) three ways —
+//! (`GAS_BENCH_MAX_HISTORY_RSS_MB`, default 64 MiB) five ways —
 //!   [ram]                in-RAM backing, serial pipeline, pull_depth=1
 //!   [mmap]               mmap backing, identical schedule (bit-compared)
 //!   [mmap pull_depth=2]  mmap backing, concurrent pipeline (timed only)
+//!   [mmap f16]           compressed mmap backing, same serial schedule
+//!   [mmap int8]          compressed mmap backing, same serial schedule
 //! — and emit `BENCH_table3.json` with wall-clock rows plus history-bytes
 //! and RSS metrics. `ci/check_bench_table3.py` gates the JSON: the mmap
 //! run must report resident history bytes under the budget while total
-//! history bytes exceed it, and the [ram]/[mmap] runs must match
-//! bit-for-bit (loss/val/test curves, staleness probes, push deltas, and
-//! every history row).
+//! history bytes exceed it, the [ram]/[mmap] runs must match bit-for-bit
+//! (loss/val/test curves, staleness probes, push deltas, and every
+//! history row), and the compressed runs must store at most 0.55x (f16)
+//! / 0.30x (int8) of the logical f32 bytes.
 //!
 //!     cargo bench --bench table3_memory           # full size
 //!     GAS_TABLE3_TINY=1 cargo bench --bench table3_memory   # CI smoke
@@ -30,7 +33,7 @@ use gas::baselines::naive_history::gas_config;
 use gas::bench::{print_table, write_bench_json, BenchReport};
 use gas::config::Ctx;
 use gas::graph::datasets::{Dataset, Profile};
-use gas::history::{BackingSpec, PipelineMode};
+use gas::history::{BackingSpec, Codec, PipelineMode};
 use gas::memaccount::{current_rss_bytes, peak_rss_bytes, MemoryModel};
 use gas::train::{TrainResult, Trainer};
 use gas::util::timer::Timer;
@@ -162,12 +165,12 @@ fn main() -> anyhow::Result<()> {
     };
 
     let t = Timer::start();
-    let mut tr_ram = Trainer::new(&ds, &art, serial(BackingSpec::Ram))?;
+    let mut tr_ram = Trainer::new(&ds, &art, serial(BackingSpec::ram()))?;
     let r_ram = tr_ram.train()?;
     let ram_s = t.elapsed_s();
 
     let t = Timer::start();
-    let mmap_spec = BackingSpec::Mmap { dir: base.join("serial"), reopen: false };
+    let mmap_spec = BackingSpec::mmap(base.join("serial"), false);
     let mut tr_mm = Trainer::new(&ds, &art, serial(mmap_spec))?;
     let r_mm = tr_mm.train()?;
     let mmap_s = t.elapsed_s();
@@ -191,18 +194,35 @@ fn main() -> anyhow::Result<()> {
     let t = Timer::start();
     let mut cfg = gas_config(epochs, 0.01, 0.0, 9);
     cfg.eval_every = epochs;
-    cfg.history_backing = BackingSpec::Mmap { dir: base.join("conc"), reopen: false };
+    cfg.history_backing = BackingSpec::mmap(base.join("conc"), false);
     let mut tr_conc = Trainer::new(&ds, &art, cfg)?;
     let r_conc = tr_conc.train()?;
     let conc_s = t.elapsed_s();
     drop(tr_conc);
+
+    // compressed mmap runs: same serial schedule, only the codec differs.
+    // The stored-vs-logical ratio is the acceptance gate for the codecs'
+    // space claim; the quant-error telemetry rides along as metrics.
+    let mut codec_runs: Vec<(&'static str, f64, TrainResult)> = Vec::new();
+    for (label, codec) in [("f16", Codec::F16), ("int8", Codec::Int8)] {
+        let t = Timer::start();
+        let spec = BackingSpec::mmap(base.join(label), false).with_codec(codec);
+        let mut tr = Trainer::new(&ds, &art, serial(spec))?;
+        let r = tr.train()?;
+        let secs = t.elapsed_s();
+        drop(tr);
+        codec_runs.push((label, secs, r));
+    }
     let _ = std::fs::remove_dir_all(&base);
 
-    let reports = vec![
+    let mut reports = vec![
         one_shot("table3 train gcnii8 [ram]", ram_s),
         one_shot("table3 train gcnii8 [mmap]", mmap_s),
         one_shot("table3 train gcnii8 [mmap pull_depth=2]", conc_s),
     ];
+    for (label, secs, _) in &codec_runs {
+        reports.push(one_shot(&format!("table3 train gcnii8 [mmap {label}]"), *secs));
+    }
     for r in &reports {
         println!("{}", r.line());
     }
@@ -222,10 +242,22 @@ fn main() -> anyhow::Result<()> {
         r_mm.loss.last().unwrap_or(0.0),
         r_conc.loss.last().unwrap_or(0.0)
     );
+    for (label, _, r) in &codec_runs {
+        println!(
+            "[{label}] stored {:.1} MiB = {:.3}x of logical {:.1} MiB | loss {:.4} | \
+             quant err max {:.2e} mean {:.2e}",
+            r.history_stored_bytes as f64 / MIB,
+            r.history_stored_bytes as f64 / r.history_bytes as f64,
+            r.history_bytes as f64 / MIB,
+            r.loss.last().unwrap_or(0.0),
+            r.quant_err_max.last().unwrap_or(0.0),
+            r.quant_err_mean.last().unwrap_or(0.0)
+        );
+    }
 
     let peak_rss_mb = peak_rss_bytes().map(|b| b as f64 / MIB).unwrap_or(-1.0);
     let current_rss_mb = current_rss_bytes().map(|b| b as f64 / MIB).unwrap_or(-1.0);
-    let metrics: Vec<(&str, f64)> = vec![
+    let mut metrics: Vec<(&str, f64)> = vec![
         ("tiny", tiny as usize as f64),
         ("nodes", n as f64),
         ("epochs", epochs as f64),
@@ -239,6 +271,22 @@ fn main() -> anyhow::Result<()> {
         ("current_rss_mb", current_rss_mb),
         ("wall_s", t_all.elapsed_s()),
     ];
+    let codec_metrics: Vec<(String, f64)> = codec_runs
+        .iter()
+        .flat_map(|(label, _, r)| {
+            vec![
+                (format!("{label}_stored_bytes"), r.history_stored_bytes as f64),
+                (
+                    format!("{label}_stored_ratio"),
+                    r.history_stored_bytes as f64 / r.history_bytes as f64,
+                ),
+                (format!("{label}_quant_err_max"), r.quant_err_max.last().unwrap_or(0.0)),
+                (format!("{label}_quant_err_mean"), r.quant_err_mean.last().unwrap_or(0.0)),
+                (format!("{label}_final_loss"), r.loss.last().unwrap_or(0.0)),
+            ]
+        })
+        .collect();
+    metrics.extend(codec_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
     let json_path =
         std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_table3.json".to_string());
     write_bench_json(&json_path, "table3_memory", &reports, &metrics)?;

@@ -4,12 +4,21 @@
 //! GAS >= GCN+GAS >= edge-dropping baselines. (pna3 rows need the PJRT
 //! backend; everything else runs natively.)
 //!
+//! The GAS rows honor the history-backing env knobs (`GAS_HISTORY_BACKING`
+//! / `GAS_HISTORY_DIR` / `GAS_HISTORY_CODEC`): under `mmap` every row gets
+//! its own shard subdirectory (model geometries differ, so one directory
+//! cannot be shared), and each row reports its stored-vs-logical history
+//! footprint — the out-of-core + compressed path at Table-5 scale.
+//!
 //!     GAS_FILTER=flickr cargo bench --bench table5_large
 //!     GAS_EPOCHS=10 cargo bench --bench table5_large
+//!     GAS_HISTORY_BACKING=mmap GAS_HISTORY_CODEC=int8 \
+//!         cargo bench --bench table5_large   # out-of-core compressed rows
 
 use gas::baselines::naive_history::gas_config;
 use gas::baselines::{ClusterGcnTrainer, SageSampler};
 use gas::bench::{epochs_or, filter, print_table};
+use gas::history::Media;
 use gas::config::Ctx;
 use gas::model::{Adam, Optimizer, ParamStore};
 use gas::runtime::{Executor, StepInputs};
@@ -51,6 +60,12 @@ fn main() -> anyhow::Result<()> {
             let (ds, art) = ctx.pair(ds_name, &name)?;
             let mut cfg = gas_config(epochs, 0.01, reg, 0);
             cfg.eval_every = 2;
+            // rows have different history geometries (hist_dim, layers),
+            // so under the mmap media each gets its own shard subdir
+            if let Media::Mmap { dir, .. } = &mut cfg.history_backing.media {
+                *dir = dir.join(&name);
+            }
+            let hist_label = cfg.history_backing.label();
             let mut tr = Trainer::new(ds, art, cfg)?;
             let r = tr.train()?;
             rows.push(vec![
@@ -58,7 +73,12 @@ fn main() -> anyhow::Result<()> {
                 format!("GAS {model}"),
                 format!("{:.4}", r.test_at_best_val),
             ]);
-            eprintln!("done {name}: {:.4}", r.test_at_best_val);
+            eprintln!(
+                "done {name}: {:.4} | history [{hist_label}] {:.1} MiB stored / {:.1} MiB logical",
+                r.test_at_best_val,
+                r.history_stored_bytes as f64 / (1u64 << 20) as f64,
+                r.history_bytes as f64 / (1u64 << 20) as f64
+            );
         }
         // --- Cluster-GCN baseline (GCN, intra-cluster only) ---------------
         {

@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Gate the CI bench-smoke job on BENCH_error_bounds.json (codec parity).
+
+The error_bounds bench trains gcn2 and gcnii8 on cora at equal steps under
+f32 / f16 / int8 history codecs on the bit-deterministic Serial schedule
+(pull_depth=1), so the history codec is the ONLY difference between the
+runs of one model. This script makes the quantized-history claim
+enforceable — compressed histories buy their storage win without giving
+back convergence:
+
+  * equal footing — each compressed run must report exactly the same step
+    count as its f32 sibling (otherwise the accuracy comparison is
+    meaningless);
+  * convergence parity — final validation accuracy under f16 and int8
+    must not drop more than a small epsilon below the f32 run of the same
+    model at equal steps (the codec analog of the Theorem-2 bounded-error
+    claim);
+  * real compression — stored/logical byte ratios must clear the same
+    caps the table3 gate enforces (<= 0.55x for f16, <= 0.30x for int8)
+    and sit at ~1.0 for f32;
+  * live telemetry — the compressed runs must report a positive
+    quantization error with mean <= max (a zero reading means the sampled
+    push-error probe is dead), and the f32 runs must report zero.
+
+Thresholds are overridable via env for local experimentation:
+
+    GAS_EB_MAX_ACC_DROP    (default 0.05 absolute val-accuracy points;
+                            cora val accuracy lands ~0.7x, so 0.05 is a
+                            real-regression threshold, not seed noise on
+                            this fixed-seed deterministic schedule)
+    GAS_BENCH_MAX_F16_RATIO   (default 0.55, shared with the table3 gate)
+    GAS_BENCH_MAX_INT8_RATIO  (default 0.30, shared with the table3 gate)
+
+Usage: python3 ci/check_bench_error_bounds.py [BENCH_error_bounds.json]
+"""
+import json
+import os
+import sys
+
+MODELS = ("gcn2", "gcnii8")
+COMPRESSED = ("f16", "int8")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_error_bounds.json"
+    with open(path) as f:
+        rec = json.load(f)
+
+    max_drop = float(os.environ.get("GAS_EB_MAX_ACC_DROP", "0.05"))
+    ratio_caps = {
+        "f16": float(os.environ.get("GAS_BENCH_MAX_F16_RATIO", "0.55")),
+        "int8": float(os.environ.get("GAS_BENCH_MAX_INT8_RATIO", "0.30")),
+    }
+
+    metrics = rec["metrics"]
+    failures = []
+
+    for model in MODELS:
+        f32_val = metrics[f"{model}_f32_val_acc"]
+        f32_steps = metrics[f"{model}_f32_steps"]
+        f32_ratio = metrics[f"{model}_f32_stored_ratio"]
+        print(f"{model} [f32]: val {f32_val:.4f} @ {f32_steps:.0f} steps, "
+              f"stored/logical {f32_ratio:.3f}")
+        if abs(f32_ratio - 1.0) > 1e-6:
+            failures.append(
+                f"{model} f32 stored/logical {f32_ratio:.4f} != 1.0 — "
+                "the uncompressed backing's byte accounting is broken"
+            )
+        if metrics[f"{model}_f32_quant_err_max"] != 0.0:
+            failures.append(
+                f"{model} f32 reports nonzero quantization error — the f32 "
+                "path must be exact"
+            )
+
+        for codec in COMPRESSED:
+            val = metrics[f"{model}_{codec}_val_acc"]
+            steps = metrics[f"{model}_{codec}_steps"]
+            ratio = metrics[f"{model}_{codec}_stored_ratio"]
+            qmax = metrics[f"{model}_{codec}_quant_err_max"]
+            qmean = metrics[f"{model}_{codec}_quant_err_mean"]
+            drop = f32_val - val
+            print(f"{model} [{codec}]: val {val:.4f} (drop {drop:+.4f}, "
+                  f"budget {max_drop}) @ {steps:.0f} steps, "
+                  f"stored/logical {ratio:.3f} (cap {ratio_caps[codec]}), "
+                  f"qerr max {qmax:.3e} mean {qmean:.3e}")
+            if steps != f32_steps:
+                failures.append(
+                    f"{model} {codec} ran {steps:.0f} steps vs f32's "
+                    f"{f32_steps:.0f} — accuracy comparison is not at equal steps"
+                )
+            if drop > max_drop:
+                failures.append(
+                    f"{model} {codec} val accuracy {val:.4f} drops "
+                    f"{drop:.4f} below f32's {f32_val:.4f} "
+                    f"(budget {max_drop}) — quantized history hurts convergence"
+                )
+            if ratio > ratio_caps[codec]:
+                failures.append(
+                    f"{model} {codec} stored/logical {ratio:.4f} over the "
+                    f"{ratio_caps[codec]} cap — codec is not compressing"
+                )
+            if not (0.0 < qmean <= qmax):
+                failures.append(
+                    f"{model} {codec} quantization telemetry broken: "
+                    f"mean {qmean:.3e}, max {qmax:.3e} (expected 0 < mean <= max)"
+                )
+
+    if failures:
+        print("\nCODEC PARITY GATE FAILED:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("codec parity gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

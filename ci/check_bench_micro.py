@@ -35,6 +35,11 @@ local experimentation:
     GAS_BENCH_MAX_STEP_MS          (default 2000, every native train-step
                                     row; loose — catches hangs, not drift)
     GAS_BENCH_MIN_OVERLAP_SPEEDUP  (default 0.9, pipelined vs serial epoch)
+    GAS_BENCH_MAX_CODEC_RATIO      (default 4.0, f16/int8 pull+push medians
+                                    vs the sharded f32 rows; dequantize math
+                                    is allowed to cost, but not an order of
+                                    magnitude — the actual trend is tracked
+                                    by the trajectory gate on the codec rows)
 
 Usage: python3 ci/check_bench_micro.py [BENCH_micro.json]
 """
@@ -71,6 +76,7 @@ def main() -> int:
     attn_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_ATTN_SPEEDUP", "1.2"))
     step_budget_ms = float(os.environ.get("GAS_BENCH_MAX_STEP_MS", "2000"))
     overlap_floor = float(os.environ.get("GAS_BENCH_MIN_OVERLAP_SPEEDUP", "0.9"))
+    codec_ratio_cap = float(os.environ.get("GAS_BENCH_MAX_CODEC_RATIO", "4.0"))
 
     medians = {r["name"]: r["median_ms"] for r in rec["results"]}
 
@@ -158,6 +164,20 @@ def main() -> int:
                 failures.append(f"{name}: median {ms:.3f} ms over budget {step_budget_ms:.0f} ms")
     else:
         print("non-native backend per the bench record — step budgets skipped")
+
+    # quantized backings: dequantize-on-gather may cost, but a pull/push
+    # through f16 or int8 must stay within a small constant factor of the
+    # plain sharded f32 rows (same rows, ram media — pure codec overhead)
+    for key in (
+        "pull_f16_over_ram_ratio",
+        "push_f16_over_ram_ratio",
+        "pull_int8_over_ram_ratio",
+        "push_int8_over_ram_ratio",
+    ):
+        v = metrics[key]
+        print(f"{key}: {v:.2f}x (cap {codec_ratio_cap}x)")
+        if v > codec_ratio_cap:
+            failures.append(f"{key} = {v:.2f}x over cap {codec_ratio_cap}x")
 
     # pipelined (pull_depth=2) epoch must not fall clearly behind serial
     # (loose floor; the overlap *win* is gated by the trajectory check)

@@ -1,10 +1,11 @@
 #!/usr/bin/env python3
 """Gate the CI bench-smoke job on BENCH_table3.json (out-of-core smoke).
 
-The table3 bench trains the same gcnii8 schedule three times (in-RAM
-serial, mmap serial, mmap concurrent) on a planted graph whose histories
-deliberately overflow the RAM budget. This script makes the out-of-core
-claim enforceable:
+The table3 bench trains the same gcnii8 schedule five times (in-RAM
+serial, mmap serial, mmap concurrent, mmap+f16 serial, mmap+int8 serial)
+on a planted graph whose histories deliberately overflow the RAM budget.
+This script makes the out-of-core and compressed-storage claims
+enforceable:
 
   * the run must not be vacuous — total history bytes must EXCEED the
     budget (otherwise "fits under budget" proves nothing), and the RAM
@@ -15,6 +16,11 @@ claim enforceable:
   * the mmap run must be bit-for-bit equal to the RAM run — curves,
     staleness probes, push deltas, and every history row (the bench
     computes this; we gate on its verdict);
+  * the quantized runs must actually compress: stored bytes of the
+    encoded embedding block <= 0.55x logical for f16 and <= 0.30x for
+    int8 (at h=64 the exact ratios are 0.5 and 0.28125; the caps leave
+    room for per-shard GASQ headers), with a finite positive
+    quantization-error telemetry reading and a finite final loss;
   * the whole bench must finish inside a wall-clock budget (near-hang
     guard, far looser than the job timeout).
 
@@ -22,21 +28,26 @@ Thresholds are overridable via env for local experimentation:
 
     GAS_BENCH_MAX_HISTORY_RSS_MB   (default 64; also read by the bench,
                                     which echoes it into the record)
-    GAS_BENCH_MAX_TABLE3_WALL_S    (default 240)
+    GAS_BENCH_MAX_TABLE3_WALL_S    (default 360)
+    GAS_BENCH_MAX_F16_RATIO        (default 0.55)
+    GAS_BENCH_MAX_INT8_RATIO       (default 0.30)
 
 Usage: python3 ci/check_bench_table3.py [BENCH_table3.json]
 """
 import json
+import math
 import os
 import sys
 
 MIB = float(1 << 20)
 
-# the three wall-clock rows the bench must always emit
+# the five wall-clock rows the bench must always emit
 ROWS = (
     "table3 train gcnii8 [ram]",
     "table3 train gcnii8 [mmap]",
     "table3 train gcnii8 [mmap pull_depth=2]",
+    "table3 train gcnii8 [mmap f16]",
+    "table3 train gcnii8 [mmap int8]",
 )
 
 
@@ -46,7 +57,9 @@ def main() -> int:
         rec = json.load(f)
 
     budget_mb = float(os.environ.get("GAS_BENCH_MAX_HISTORY_RSS_MB", "64"))
-    wall_budget_s = float(os.environ.get("GAS_BENCH_MAX_TABLE3_WALL_S", "240"))
+    wall_budget_s = float(os.environ.get("GAS_BENCH_MAX_TABLE3_WALL_S", "360"))
+    f16_ratio_cap = float(os.environ.get("GAS_BENCH_MAX_F16_RATIO", "0.55"))
+    int8_ratio_cap = float(os.environ.get("GAS_BENCH_MAX_INT8_RATIO", "0.30"))
 
     medians = {r["name"]: r["median_ms"] for r in rec["results"]}
     metrics = rec["metrics"]
@@ -89,6 +102,28 @@ def main() -> int:
             f"mmap mapped {mmap_mapped_mb:.1f} MiB < logical {total_mb:.1f} MiB — "
             "shard files do not cover the history"
         )
+
+    # the compression claim: quantized backings store the encoded block
+    # well under the f32 logical size, and the error telemetry is live
+    for label, cap in [("f16", f16_ratio_cap), ("int8", int8_ratio_cap)]:
+        ratio = metrics[f"{label}_stored_ratio"]
+        qmax = metrics[f"{label}_quant_err_max"]
+        qmean = metrics[f"{label}_quant_err_mean"]
+        loss = metrics[f"{label}_final_loss"]
+        print(f"{label}: stored/logical {ratio:.4f} (cap {cap}), "
+              f"qerr max {qmax:.3e} mean {qmean:.3e}, final loss {loss:.4f}")
+        if ratio > cap:
+            failures.append(
+                f"{label} stored/logical {ratio:.4f} over the {cap} cap — "
+                "codec is not compressing the stored history"
+            )
+        if not (0.0 < qmean <= qmax):
+            failures.append(
+                f"{label} quantization telemetry broken: mean {qmean:.3e}, "
+                f"max {qmax:.3e} (expected 0 < mean <= max)"
+            )
+        if not math.isfinite(loss):
+            failures.append(f"{label} final loss is not finite — training diverged")
 
     # the correctness claim: same schedule, same bits
     if metrics["mmap_equals_ram"] != 1.0:

@@ -51,6 +51,10 @@ GATED_SUBSTRINGS = {
         "history push 4x8K rows + drain [sharded]",
         "history pull 8K rows x3 layers [mmap]",
         "history push 4x8K rows + drain [mmap]",
+        "history pull 8K rows x3 layers [f16]",
+        "history push 4x8K rows + drain [f16]",
+        "history pull 8K rows x3 layers [int8]",
+        "history push 4x8K rows + drain [int8]",
         "[blocked]",          # every blocked GEMM, SpMM and edge-softmax row
         # (the attn softmax rows ride the "[blocked]" substring — their
         # "[scalar]" oracle baselines stay informational, like GEMM/SpMM's)
@@ -64,11 +68,19 @@ GATED_SUBSTRINGS = {
     "fig3_convergence": [
         "",                   # every timed row fig3 emits
     ],
-    # table3's out-of-core smoke: the three end-to-end train rows
-    # (ram / mmap serial / mmap concurrent); correctness + residency are
-    # gated absolutely by check_bench_table3.py, this tracks wall clock
+    # table3's out-of-core smoke: the five end-to-end train rows
+    # (ram / mmap serial / mmap concurrent / mmap f16 / mmap int8);
+    # correctness + residency + compression are gated absolutely by
+    # check_bench_table3.py, this tracks wall clock
     "table3_memory": [
         "table3 train",
+    ],
+    # error_bounds' quantized-convergence sweep: the six equal-step
+    # "codec train {model} [{codec}]" rows; the accuracy-vs-f32 epsilon
+    # is gated absolutely by check_bench_error_bounds.py, this tracks
+    # the wall clock of the codec cells
+    "error_bounds": [
+        "codec train",
     ],
 }
 

@@ -70,16 +70,31 @@ pub fn default_pull_depth() -> usize {
 }
 
 /// Default history backing: `GAS_HISTORY_BACKING` env (`ram` | `mmap`)
-/// when set, else in-RAM. For `mmap`, the shard directory comes from
+/// crossed with the `GAS_HISTORY_CODEC` env (`f32` | `f16` | `int8`)
+/// when set, else in-RAM f32. For `mmap`, the shard directory comes from
 /// [`default_history_dir`]. Like `GAS_PULL_DEPTH`, garbage fails loudly
 /// instead of silently training on the default backing. The CLI's
-/// `--history-backing` / `--history-dir` override both per run.
+/// `--history-backing` / `--history-dir` / `--history-codec` override
+/// each per run.
 pub fn default_history_backing() -> crate::history::BackingSpec {
-    match std::env::var("GAS_HISTORY_BACKING") {
-        Err(_) => crate::history::BackingSpec::Ram,
+    let spec = match std::env::var("GAS_HISTORY_BACKING") {
+        Err(_) => crate::history::BackingSpec::ram(),
         Ok(v) => match parse_history_backing(&v, None) {
             Ok(spec) => spec,
             Err(e) => panic!("GAS_HISTORY_BACKING: {e}"),
+        },
+    };
+    spec.with_codec(default_history_codec())
+}
+
+/// Default history codec: `GAS_HISTORY_CODEC` env when set, else exact
+/// f32. Garbage fails loudly.
+pub fn default_history_codec() -> crate::history::Codec {
+    match std::env::var("GAS_HISTORY_CODEC") {
+        Err(_) => crate::history::Codec::F32,
+        Ok(v) => match parse_history_codec(&v) {
+            Ok(codec) => codec,
+            Err(e) => panic!("GAS_HISTORY_CODEC: {e}"),
         },
     }
 }
@@ -95,19 +110,33 @@ pub fn default_history_dir() -> PathBuf {
     }
 }
 
-/// Parse a backing name (`ram` | `mmap`) into a [`BackingSpec`], with an
-/// optional explicit shard directory for the mmap case.
+/// Parse a backing name (`ram` | `mmap`) into a
+/// [`crate::history::BackingSpec`], with an optional explicit shard
+/// directory for the mmap case. The codec comes from
+/// [`default_history_codec`] (i.e. the env) — `--history-codec`
+/// overrides it afterwards via `BackingSpec::with_codec`.
 pub fn parse_history_backing(
     name: &str,
     dir: Option<PathBuf>,
 ) -> Result<crate::history::BackingSpec> {
-    match name.to_ascii_lowercase().as_str() {
-        "ram" => Ok(crate::history::BackingSpec::Ram),
-        "mmap" => Ok(crate::history::BackingSpec::Mmap {
-            dir: dir.unwrap_or_else(default_history_dir),
-            reopen: false,
-        }),
+    let media = match name.to_ascii_lowercase().as_str() {
+        "ram" => crate::history::BackingSpec::ram(),
+        "mmap" => {
+            crate::history::BackingSpec::mmap(dir.unwrap_or_else(default_history_dir), false)
+        }
         other => bail!("unknown history backing {other:?} (expected ram|mmap)"),
+    };
+    Ok(media.with_codec(default_history_codec()))
+}
+
+/// Parse a codec name (`f32` | `f16` | `int8`) into a
+/// [`crate::history::Codec`].
+pub fn parse_history_codec(name: &str) -> Result<crate::history::Codec> {
+    match name.to_ascii_lowercase().as_str() {
+        "f32" | "fp32" => Ok(crate::history::Codec::F32),
+        "f16" | "fp16" | "half" => Ok(crate::history::Codec::F16),
+        "int8" | "i8" | "u8" => Ok(crate::history::Codec::Int8),
+        other => bail!("unknown history codec {other:?} (expected f32|f16|int8)"),
     }
 }
 
@@ -228,11 +257,11 @@ mod tests {
 
     #[test]
     fn history_backing_parses() {
-        use crate::history::BackingSpec;
-        assert_eq!(parse_history_backing("ram", None).unwrap(), BackingSpec::Ram);
+        use crate::history::Media;
+        assert_eq!(parse_history_backing("ram", None).unwrap().kind(), "ram");
         let want = PathBuf::from("/tmp/gas-spec-test");
-        match parse_history_backing("MMAP", Some(want.clone())).unwrap() {
-            BackingSpec::Mmap { dir, reopen } => {
+        match parse_history_backing("MMAP", Some(want.clone())).unwrap().media {
+            Media::Mmap { dir, reopen } => {
                 assert_eq!(dir, want);
                 assert!(!reopen, "CLI parse must default to fresh shards");
             }
@@ -243,6 +272,23 @@ mod tests {
         // operator set, the default must be one of the two known kinds
         assert!(["ram", "mmap"].contains(&default_history_backing().kind()));
         assert!(!default_history_dir().as_os_str().is_empty());
+    }
+
+    #[test]
+    fn history_codec_parses() {
+        use crate::history::Codec;
+        assert_eq!(parse_history_codec("f32").unwrap(), Codec::F32);
+        assert_eq!(parse_history_codec("F16").unwrap(), Codec::F16);
+        assert_eq!(parse_history_codec("half").unwrap(), Codec::F16);
+        assert_eq!(parse_history_codec("int8").unwrap(), Codec::Int8);
+        assert!(parse_history_codec("int4").is_err());
+        // no env manipulation (tests run in parallel): the env-derived
+        // default must be a known codec, and the parsed backing must
+        // carry it
+        let codec = default_history_codec();
+        assert!([Codec::F32, Codec::F16, Codec::Int8].contains(&codec));
+        assert_eq!(parse_history_backing("ram", None).unwrap().codec(), codec);
+        assert_eq!(default_history_backing().codec(), codec);
     }
 
     #[test]

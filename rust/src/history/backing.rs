@@ -1,9 +1,9 @@
 //! Storage backings for history shards.
 //!
-//! [`HistoryBacking`] abstracts *where a shard's embedding rows live* —
-//! the striped gather/scatter, per-shard locks, staleness clocks and
-//! delta probes in [`crate::history::store`] are backing-agnostic. Two
-//! implementations:
+//! [`HistoryBacking`] abstracts *where a shard's embedding rows live and
+//! how they are encoded* — the striped gather/scatter, per-shard locks,
+//! staleness clocks and delta probes in [`crate::history::store`] are
+//! backing-agnostic. Implementations:
 //!
 //! * [`RamBacking`] — one flat layer-major `Vec<f32>` per shard; the
 //!   existing in-core behaviour.
@@ -12,21 +12,108 @@
 //!   (`[num_layers][rows * h]`, matching `PullBuffer`), so gathers copy
 //!   straight from the mapping into staging buffers. `flush` makes the
 //!   file durable and drops page residency — the out-of-core mode.
+//! * [`crate::history::quant::QuantBacking`] — f16 or per-row-affine
+//!   int8 encoded rows on the heap or in a header-carrying mapped file;
+//!   decodes inside the gather panel loop instead of materializing a
+//!   full-precision copy.
 //!
-//! Hot-path note: callers hoist `layer`/`layer_mut` to one virtual call
-//! per (shard, layer) and then index plain slices, so the `dyn` dispatch
-//! never lands inside the per-row copy loop.
+//! Hot-path note: the store buckets each gather/scatter panel by shard
+//! and issues one [`HistoryBacking::gather_rows`] /
+//! [`HistoryBacking::scatter_rows`] call per (shard, layer, panel), so
+//! `dyn` dispatch never lands inside the per-row decode/copy loop. The
+//! default impls route through `layer`/`layer_mut` and reproduce the
+//! pre-codec `RamBacking`/`MmapBacking` behaviour byte-for-byte;
+//! quantized backings override them and panic on the dense-view
+//! accessors instead.
 
 use std::io;
 use std::path::PathBuf;
 
 use super::mmap::MappedFile;
+use super::quant::{Codec, QuantBacking};
 
-/// Where the `[num_layers][rows * h]` embedding block of each shard lives.
+/// Cumulative quantization-error telemetry, accumulated at push time:
+/// `|decode(encode(v)) - v|` over every value scattered since the last
+/// reset. Identically zero for the exact (f32) backings.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct QuantStats {
+    pub max_abs: f64,
+    pub sum_abs: f64,
+    pub count: u64,
+}
+
+impl QuantStats {
+    pub fn mean_abs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_abs / self.count as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &QuantStats) {
+        self.max_abs = self.max_abs.max(other.max_abs);
+        self.sum_abs += other.sum_abs;
+        self.count += other.count;
+    }
+}
+
+/// Where (and how) the `[num_layers][rows * h]` embedding block of each
+/// shard lives.
 pub trait HistoryBacking: Send + Sync {
-    /// The full layer-major block of layer `l`: `rows * h` floats.
+    /// The full layer-major block of layer `l`: `rows * h` floats. Only
+    /// backings that store rows as f32 have such a view; quantized
+    /// backings panic — every store path goes through
+    /// [`HistoryBacking::gather_rows`] / [`HistoryBacking::scatter_rows`].
     fn layer(&self, l: usize) -> &[f32];
     fn layer_mut(&mut self, l: usize) -> &mut [f32];
+
+    /// Panel-granular gather: for each `(local, dst)` pair, decode local
+    /// row `local` of layer `l` into `out[dst*h .. (dst+1)*h]`. The
+    /// layer index is bounds-checked in release builds (out-of-range
+    /// `l` means the caller's plan is corrupt, never silent garbage).
+    fn gather_rows(&self, l: usize, h: usize, pairs: &[(u32, u32)], out: &mut [f32]) {
+        let src = self.layer(l); // slicing release-asserts the layer bound
+        for &(local, dst) in pairs {
+            let s = local as usize * h;
+            let d = dst as usize * h;
+            out[d..d + h].copy_from_slice(&src[s..s + h]);
+        }
+    }
+
+    /// Panel-granular scatter (encoding if applicable): for each
+    /// `(local, src)` pair, row `src` of `data` becomes local row
+    /// `local` of layer `l`. When `track_deltas`, returns the summed L2
+    /// distance between each new row and the previously *readable*
+    /// (i.e. decoded) row — the push-delta probe the staleness metrics
+    /// build on; quantized backings therefore measure the drift a
+    /// puller would actually have observed.
+    fn scatter_rows(
+        &mut self,
+        l: usize,
+        h: usize,
+        pairs: &[(u32, u32)],
+        data: &[f32],
+        track_deltas: bool,
+    ) -> f64 {
+        let dst = self.layer_mut(l); // slicing release-asserts the layer bound
+        let mut dsum = 0f64;
+        for &(local, src) in pairs {
+            let row = &data[src as usize * h..(src as usize + 1) * h];
+            let cell = &mut dst[local as usize * h..(local as usize + 1) * h];
+            if track_deltas {
+                let mut diff = 0f64;
+                for (o, n) in cell.iter().zip(row) {
+                    let d = (*n - *o) as f64;
+                    diff += d * d;
+                }
+                dsum += diff.sqrt();
+            }
+            cell.copy_from_slice(row);
+        }
+        dsum
+    }
+
     /// Durability barrier: after `flush` returns, every row pushed so far
     /// is recoverable from stable storage (no-op for RAM).
     fn flush(&mut self) -> io::Result<()>;
@@ -34,26 +121,83 @@ pub trait HistoryBacking: Send + Sync {
     fn resident_bytes(&self) -> usize;
     /// File-backed mapped bytes (evictable by the kernel / on `flush`).
     fn mapped_bytes(&self) -> usize;
+    /// Bytes physically dedicated to the encoded embedding block (codes,
+    /// per-row codec params, codec header) — the numerator of the
+    /// compression ratio against the logical `num_layers * rows * h * 4`.
+    fn stored_bytes(&self) -> usize {
+        self.resident_bytes() + self.mapped_bytes()
+    }
+    /// How rows are encoded (`F32` for the exact backings).
+    fn codec(&self) -> Codec {
+        Codec::F32
+    }
+    /// Quantization error accumulated at push since the last reset;
+    /// identically zero for exact backings.
+    fn quant_error(&self) -> QuantStats {
+        QuantStats::default()
+    }
+    fn reset_quant_error(&mut self) {}
     fn kind(&self) -> &'static str;
 }
 
-/// Which backing a store should construct, plus its knobs. Carried by
-/// `TrainConfig` and parsed from `--history-backing` / `GAS_HISTORY_BACKING`.
+/// Storage medium for a backing: in-core heap or a mapped shard file.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub enum BackingSpec {
+pub enum Media {
     /// In-core: rows live on the heap (the default, PR-1 behaviour).
     Ram,
     /// Out-of-core: one mapped file per shard under `dir`. With `reopen`
-    /// set, existing shard files of matching geometry are mapped as-is
+    /// set, existing shard files of matching geometry (and, for
+    /// compressed codecs, matching codec header) are mapped as-is
     /// (recovery from a previous flushed run) instead of being zeroed.
     Mmap { dir: PathBuf, reopen: bool },
 }
 
+/// Which backing a store should construct: a [`Media`] (where rows
+/// live) crossed with a [`Codec`] (how they are encoded). Carried by
+/// `TrainConfig` and parsed from `--history-backing` /
+/// `GAS_HISTORY_BACKING` and `--history-codec` / `GAS_HISTORY_CODEC`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackingSpec {
+    pub codec: Codec,
+    pub media: Media,
+}
+
 impl BackingSpec {
+    /// Uncompressed in-core rows (the default).
+    pub fn ram() -> BackingSpec {
+        BackingSpec { codec: Codec::F32, media: Media::Ram }
+    }
+
+    /// Uncompressed mapped shard files under `dir`.
+    pub fn mmap(dir: impl Into<PathBuf>, reopen: bool) -> BackingSpec {
+        BackingSpec {
+            codec: Codec::F32,
+            media: Media::Mmap { dir: dir.into(), reopen },
+        }
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> BackingSpec {
+        self.codec = codec;
+        self
+    }
+
+    /// The medium name (`ram`/`mmap`) — what `--history-backing` selects.
     pub fn kind(&self) -> &'static str {
-        match self {
-            BackingSpec::Ram => "ram",
-            BackingSpec::Mmap { .. } => "mmap",
+        match self.media {
+            Media::Ram => "ram",
+            Media::Mmap { .. } => "mmap",
+        }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// `ram`, `mmap`, `ram/int8`, `mmap/f16`, ... — for log lines.
+    pub fn label(&self) -> String {
+        match self.codec {
+            Codec::F32 => self.kind().to_string(),
+            c => format!("{}/{}", self.kind(), c.name()),
         }
     }
 }
@@ -66,18 +210,26 @@ pub fn make_backing(
     h: usize,
     num_layers: usize,
 ) -> io::Result<Box<dyn HistoryBacking>> {
-    match spec {
-        BackingSpec::Ram => Ok(Box::new(RamBacking::new(rows, h, num_layers))),
-        BackingSpec::Mmap { dir, reopen } => {
+    match (&spec.media, spec.codec) {
+        (Media::Ram, Codec::F32) => Ok(Box::new(RamBacking::new(rows, h, num_layers))),
+        (Media::Ram, codec) => Ok(Box::new(QuantBacking::heap(codec, rows, h, num_layers))),
+        (Media::Mmap { dir, reopen }, codec) => {
             std::fs::create_dir_all(dir)?;
             let path = dir.join(format!("shard{shard_idx:03}.bin"));
-            let bytes = num_layers * rows * h * 4;
-            let map = if *reopen && path.exists() {
-                MappedFile::reopen(&path, bytes)?
-            } else {
-                MappedFile::create(&path, bytes)?
-            };
-            Ok(Box::new(MmapBacking { span: rows * h, map }))
+            match codec {
+                Codec::F32 => {
+                    let bytes = num_layers * rows * h * 4;
+                    let map = if *reopen && path.exists() {
+                        MappedFile::reopen(&path, bytes)?
+                    } else {
+                        MappedFile::create(&path, bytes)?
+                    };
+                    Ok(Box::new(MmapBacking { span: rows * h, map }))
+                }
+                codec => Ok(Box::new(QuantBacking::mapped(
+                    codec, &path, rows, h, num_layers, *reopen,
+                )?)),
+            }
         }
     }
 }
@@ -162,7 +314,7 @@ mod tests {
 
     fn specs() -> Vec<BackingSpec> {
         let dir = std::env::temp_dir().join(format!("gas-backing-test-{}", std::process::id()));
-        vec![BackingSpec::Ram, BackingSpec::Mmap { dir, reopen: false }]
+        vec![BackingSpec::ram(), BackingSpec::mmap(dir, false)]
     }
 
     #[test]
@@ -180,28 +332,69 @@ mod tests {
     }
 
     #[test]
+    fn default_gather_scatter_route_through_the_dense_view() {
+        for spec in specs() {
+            let mut b = make_backing(&spec, 0, 4, 3, 2).unwrap();
+            let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+            let dsum = b.scatter_rows(1, 3, &[(3, 0), (1, 1)], &data, true);
+            // rows were zero, so the tracked delta is the sum of row norms
+            let want = (1f64 + 4.0 + 9.0).sqrt() + (16f64 + 25.0 + 36.0).sqrt();
+            assert!((dsum - want).abs() < 1e-9, "{}", spec.kind());
+            let mut out = vec![0f32; 6];
+            b.gather_rows(1, 3, &[(1, 0), (3, 1)], &mut out);
+            assert_eq!(out, vec![4.0, 5.0, 6.0, 1.0, 2.0, 3.0]);
+            // exact backings report no quantization error and f32 codec
+            assert_eq!(b.codec(), Codec::F32);
+            assert_eq!(b.quant_error(), QuantStats::default());
+            assert_eq!(b.stored_bytes(), 2 * 4 * 3 * 4);
+        }
+    }
+
+    #[test]
     fn residency_accounting_splits_heap_from_mapping() {
         for spec in specs() {
             let b = make_backing(&spec, 1, 4, 2, 3).unwrap();
             let bytes = 3 * 4 * 2 * 4;
-            match spec {
-                BackingSpec::Ram => {
+            match spec.media {
+                Media::Ram => {
                     assert_eq!(b.resident_bytes(), bytes);
                     assert_eq!(b.mapped_bytes(), 0);
                 }
-                BackingSpec::Mmap { .. } => {
+                Media::Mmap { .. } => {
                     assert_eq!(b.resident_bytes(), 0);
                     assert_eq!(b.mapped_bytes(), bytes);
                 }
             }
+            assert_eq!(b.stored_bytes(), bytes);
         }
+    }
+
+    #[test]
+    fn quant_specs_build_compressed_backings_on_both_media() {
+        let dir = std::env::temp_dir().join(format!("gas-backing-quant-{}", std::process::id()));
+        let (rows, h, layers) = (8, 4, 2);
+        let logical = layers * rows * h * 4;
+        for media_spec in [BackingSpec::ram(), BackingSpec::mmap(&dir, false)] {
+            for codec in [Codec::F16, Codec::Int8] {
+                let spec = media_spec.clone().with_codec(codec);
+                let b = make_backing(&spec, 0, rows, h, layers).unwrap();
+                assert_eq!(b.codec(), codec);
+                assert!(
+                    b.stored_bytes() < logical,
+                    "[{}] stored {} >= logical {logical}",
+                    spec.label(),
+                    b.stored_bytes()
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn mmap_reopen_recovers_flushed_rows_and_checks_geometry() {
         let dir = std::env::temp_dir().join(format!("gas-backing-reopen-{}", std::process::id()));
-        let fresh = BackingSpec::Mmap { dir: dir.clone(), reopen: false };
-        let reopen = BackingSpec::Mmap { dir: dir.clone(), reopen: true };
+        let fresh = BackingSpec::mmap(&dir, false);
+        let reopen = BackingSpec::mmap(&dir, true);
         let mut b = make_backing(&fresh, 2, 3, 2, 1).unwrap();
         b.layer_mut(0).fill(4.5);
         b.flush().unwrap();
@@ -213,5 +406,17 @@ mod tests {
         // geometry mismatch on reopen is an error, not silent corruption
         assert!(make_backing(&reopen, 2, 5, 2, 1).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spec_labels_name_medium_and_codec() {
+        assert_eq!(BackingSpec::ram().label(), "ram");
+        assert_eq!(BackingSpec::ram().with_codec(Codec::Int8).label(), "ram/int8");
+        let dir = std::env::temp_dir();
+        assert_eq!(BackingSpec::mmap(&dir, false).label(), "mmap");
+        assert_eq!(
+            BackingSpec::mmap(&dir, false).with_codec(Codec::F16).label(),
+            "mmap/f16"
+        );
     }
 }

@@ -84,6 +84,24 @@ impl MappedFile {
         self.inner.as_f32_mut(self.len_bytes / 4)
     }
 
+    /// Raw byte view of the mapping — for backings whose payload is not
+    /// f32 (quantized shards store u8/u16 codes plus a codec header).
+    /// The file length is still a whole number of words, so this is the
+    /// same memory as [`MappedFile::as_f32`], reinterpreted.
+    pub fn as_bytes(&self) -> &[u8] {
+        let words = self.inner.as_f32(self.len_bytes / 4);
+        // safety: u8 has no alignment requirement and the slice covers
+        // exactly the mapped bytes; the shard's RwLock serializes this
+        // against as_bytes_mut just like the f32 views
+        unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, self.len_bytes) }
+    }
+
+    pub fn as_bytes_mut(&mut self) -> &mut [u8] {
+        let len = self.len_bytes;
+        let words = self.inner.as_f32_mut(len / 4);
+        unsafe { std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len) }
+    }
+
     /// Durability + residency barrier: synchronously write dirty pages to
     /// the file (`msync(MS_SYNC)`), then drop the resident pages
     /// (`madvise(MADV_DONTNEED)`) so the process's RSS no longer charges
@@ -374,6 +392,20 @@ mod tests {
         MappedFile::create(&p, 8 * 4).unwrap();
         let err = MappedFile::reopen(&p, 16 * 4).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn byte_view_aliases_the_word_view_and_survives_flush() {
+        let p = tmp("bytes.bin");
+        let mut m = MappedFile::create(&p, 8 * 4).unwrap();
+        m.as_bytes_mut()[..4].copy_from_slice(&1.5f32.to_ne_bytes());
+        m.as_bytes_mut()[4] = 0xAB;
+        assert_eq!(m.as_f32()[0], 1.5);
+        m.flush().unwrap();
+        drop(m);
+        let m2 = MappedFile::reopen(&p, 8 * 4).unwrap();
+        assert_eq!(m2.as_f32()[0], 1.5);
+        assert_eq!(m2.as_bytes()[4], 0xAB);
     }
 
     #[test]

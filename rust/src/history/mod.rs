@@ -18,16 +18,21 @@
 //! compute runs; `Serial` mode reproduces the naive blocking pattern for
 //! the Fig. 4 comparison.
 //!
-//! [`backing::HistoryBacking`] abstracts where a shard's rows live:
-//! in-RAM heap blocks (default) or mmap'd files ([`mmap::MappedFile`]) for
-//! out-of-core histories whose total size exceeds host RAM — select with
-//! [`backing::BackingSpec`] / `--history-backing`.
+//! [`backing::HistoryBacking`] abstracts where a shard's rows live and
+//! how they are encoded: in-RAM heap blocks (default) or mmap'd files
+//! ([`mmap::MappedFile`]) for out-of-core histories whose total size
+//! exceeds host RAM, each storing rows as exact f32 or compressed with
+//! the [`quant::Codec`] codecs (IEEE binary16, per-row-affine int8) that
+//! dequantize inside the gather panel loop — select with
+//! [`backing::BackingSpec`] / `--history-backing` / `--history-codec`.
 
 pub mod backing;
 pub mod mmap;
 pub mod pipeline;
+pub mod quant;
 pub mod store;
 
-pub use backing::{BackingSpec, HistoryBacking};
+pub use backing::{BackingSpec, HistoryBacking, Media, QuantStats};
 pub use pipeline::{HistoryPipeline, PipelineError, PipelineMode, PullBuffer, DEFAULT_PULL_DEPTH};
+pub use quant::Codec;
 pub use store::{HistoryStore, ShardedHistoryStore};

@@ -299,6 +299,10 @@ impl HistoryPipeline {
 
     /// Push layer rows. Concurrent mode applies in the background (FIFO).
     /// Ids are shared (`Arc`): no per-step id clone on the hot path.
+    /// With a quantized backing the apply (here in Serial mode, on the
+    /// push-applier thread in Concurrent mode) is also where rows are
+    /// encoded — the write-behind queue doubles as the quantization
+    /// stage, so the training step never spends time in the codec.
     pub fn push(&mut self, layer: usize, ids: Arc<[u32]>, data: Vec<f32>) {
         match self.mode {
             PipelineMode::Serial => {
@@ -596,7 +600,7 @@ mod tests {
     fn sync_flushes_mmap_backing_durably() {
         use crate::history::backing::BackingSpec;
         let dir = std::env::temp_dir().join(format!("gas-pipe-mmap-{}", std::process::id()));
-        let spec = BackingSpec::Mmap { dir: dir.clone(), reopen: false };
+        let spec = BackingSpec::mmap(&dir, false);
         let store = ShardedHistoryStore::with_backing(16, 4, 2, Some(2), &spec).unwrap();
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
         let ids: Arc<[u32]> = Arc::from([2u32, 5, 9]);
@@ -605,11 +609,39 @@ mod tests {
         p.sync(); // write-behind barrier: applied AND durable
         drop(p);
         // a fresh store reopening the same shard files sees the pushed rows
-        let spec = BackingSpec::Mmap { dir: dir.clone(), reopen: true };
+        let spec = BackingSpec::mmap(&dir, true);
         let store = ShardedHistoryStore::with_backing(16, 4, 2, Some(2), &spec).unwrap();
         let mut out = vec![0f32; 12];
         store.pull(0, &ids, &mut out);
         assert_eq!(out, data);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sync_flushes_quantized_shards_durably() {
+        // the write-behind applier is the quantization stage: rows pushed
+        // through the concurrent queue land encoded, survive sync+drop,
+        // and reopen under the same codec
+        use crate::history::backing::BackingSpec;
+        use crate::history::quant::{f16_round, Codec};
+        let dir = std::env::temp_dir().join(format!("gas-pipe-quant-{}", std::process::id()));
+        let spec = BackingSpec::mmap(&dir, false).with_codec(Codec::F16);
+        let store = ShardedHistoryStore::with_backing(16, 4, 2, Some(2), &spec).unwrap();
+        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
+        let ids: Arc<[u32]> = Arc::from([2u32, 5, 9]);
+        let data: Vec<f32> = (0..12).map(|x| x as f32 * 0.3 - 1.0).collect();
+        p.push(0, ids.clone(), data.clone());
+        p.sync();
+        // the applier thread sampled the quantization error at push
+        p.with_store(|s| assert_eq!(s.quant_error().count, 12));
+        drop(p);
+        let spec = BackingSpec::mmap(&dir, true).with_codec(Codec::F16);
+        let store = ShardedHistoryStore::with_backing(16, 4, 2, Some(2), &spec).unwrap();
+        let mut out = vec![0f32; 12];
+        store.pull(0, &ids, &mut out);
+        let want: Vec<f32> = data.iter().map(|&v| f16_round(v)).collect();
+        assert_eq!(out, want, "f16 rows must round-trip the half conversion exactly");
         drop(store);
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -1,0 +1,704 @@
+//! Compressed history codecs: IEEE binary16 and per-row affine int8.
+//!
+//! GAS already accepts bounded approximation error in pulled histories
+//! (PAPER.md Theorem 2 bounds it by staleness); VQ-GNN shows message
+//! passing survives quantizing exactly this stored state. These codecs
+//! shrink the dominant data movement of the gather→splice→SpMM path:
+//!
+//! * [`Codec::F16`] — each value stored as an IEEE 754 binary16. Values
+//!   representable in half precision round-trip **bit-exactly**; the
+//!   rest round to nearest-even. 2 bytes/value (0.5x f32).
+//! * [`Codec::Int8`] — each row stored as `h` u8 codes plus an f32
+//!   `(scale, offset)` pair: `value ≈ offset + scale * code` with
+//!   `|error| ≤ scale/2` where `scale = (row_max - row_min)/255`.
+//!   `h + 8` bytes/row (~0.28x f32 at h=64).
+//!
+//! The container policy forbids new crates, so the binary16 conversion
+//! is done with explicit bit twiddling below (round-to-nearest-even,
+//! subnormals, signed zeros, inf and NaN all handled); the logic was
+//! cross-checked against numpy's binary16 conversion exhaustively over
+//! all 65536 half patterns (decode + round-trip) and on 2M random f32
+//! bit patterns (encode).
+//!
+//! [`QuantBacking`] composes either codec with either medium: a heap
+//! buffer, or a mapped shard file carrying a 16-byte header (magic,
+//! codec tag, geometry) that `reopen()` validates so a directory of
+//! int8 shards can never be silently misread as f16 — mirroring the
+//! geometry check on plain f32 shards.
+
+use std::io;
+use std::path::Path;
+
+use super::backing::{HistoryBacking, QuantStats};
+use super::mmap::MappedFile;
+
+/// How embedding rows are encoded inside a backing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Uncompressed f32 rows (bit-exact; the PR-1/PR-6 behaviour).
+    F32,
+    /// IEEE binary16 per value: exact where representable, else
+    /// round-to-nearest-even. 2 bytes/value.
+    F16,
+    /// Per-row affine u8 codes + f32 (scale, offset): error within
+    /// `scale/2`, `scale = row_range/255`. `h + 8` bytes/row.
+    Int8,
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::Int8 => "int8",
+        }
+    }
+
+    /// Stable on-disk tag for the shard-file header.
+    fn tag(&self) -> u8 {
+        match self {
+            Codec::F32 => 0,
+            Codec::F16 => 1,
+            Codec::Int8 => 2,
+        }
+    }
+
+    /// Payload bytes of one layer of `rows * h` values.
+    pub fn layer_span_bytes(&self, rows: usize, h: usize) -> usize {
+        match self {
+            Codec::F32 => rows * h * 4,
+            Codec::F16 => rows * h * 2,
+            Codec::Int8 => rows * (h + 8),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// binary16 conversion (pure bit twiddling, no crates)
+// ---------------------------------------------------------------------------
+
+/// f32 -> binary16 bits, round-to-nearest-even; overflow saturates to
+/// ±inf, NaN stays NaN (quiet bit forced so the payload can't shift to
+/// all-zero mantissa), |x| < 2^-25 flushes to a signed zero.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let m = b & 0x007f_ffff;
+    if exp == 0xff {
+        if m == 0 {
+            return sign | 0x7c00; // ±inf
+        }
+        return sign | 0x7c00 | ((m >> 13) as u16 & 0x03ff) | 0x0200; // NaN
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // subnormal half: shift the (implicit-bit) mantissa into place,
+        // rounding to nearest-even; a carry out of q lands exactly on
+        // the smallest normal's bit pattern, so `sign | q` stays right
+        let mm = m | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rest = mm & ((1u32 << shift) - 1);
+        let mut q = mm >> shift;
+        if rest > half || (rest == half && (q & 1) == 1) {
+            q += 1;
+        }
+        return sign | q as u16;
+    }
+    // normal: round the 23-bit mantissa down to 10 bits
+    let half = 1u32 << 12;
+    let rest = m & 0x1fff;
+    let mut q = m >> 13;
+    if rest > half || (rest == half && (q & 1) == 1) {
+        q += 1;
+    }
+    let mut e = e;
+    if q == 0x400 {
+        q = 0;
+        e += 1;
+        if e >= 0x1f {
+            return sign | 0x7c00;
+        }
+    }
+    sign | ((e as u16) << 10) | q as u16
+}
+
+/// binary16 bits -> f32 (exact: every half is representable in f32).
+#[inline]
+pub fn f16_bits_to_f32(hb: u16) -> f32 {
+    let sign = ((hb & 0x8000) as u32) << 16;
+    let e = ((hb >> 10) & 0x1f) as u32;
+    let m = (hb & 0x03ff) as u32;
+    let bits = if e == 0 {
+        if m == 0 {
+            sign // signed zero
+        } else {
+            // subnormal half: normalize into an f32 exponent
+            let mut e2 = 113u32; // 127 - 15 + 1
+            let mut m2 = m;
+            while m2 & 0x400 == 0 {
+                m2 <<= 1;
+                e2 -= 1;
+            }
+            sign | (e2 << 23) | ((m2 & 0x3ff) << 13)
+        }
+    } else if e == 0x1f {
+        sign | 0x7f80_0000 | (m << 13) // inf / NaN
+    } else {
+        sign | ((e + 112) << 23) | (m << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// What a value becomes after an f16 store+load round trip.
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+// ---------------------------------------------------------------------------
+// per-row affine int8
+// ---------------------------------------------------------------------------
+
+/// Quantize one row to u8 codes; returns `(scale, offset)`. The scale is
+/// computed in f64 so extreme ranges can't overflow to inf, and a
+/// constant (or empty) row gets `scale = 0` with the value in `offset` —
+/// which also makes all-zero storage decode to exactly 0.0, matching
+/// the zero-init contract of the f32 backings.
+#[inline]
+pub fn int8_encode_row(row: &[f32], codes: &mut [u8]) -> (f32, f32) {
+    debug_assert_eq!(row.len(), codes.len());
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in row {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    let scale64 = (hi as f64 - lo as f64) / 255.0;
+    if !(scale64 > 0.0) || !scale64.is_finite() {
+        // constant, empty, or non-finite-range row
+        let off = if lo.is_finite() { lo } else { 0.0 };
+        codes.fill(0);
+        return (0.0, off);
+    }
+    let inv = 1.0 / scale64;
+    let lo64 = lo as f64;
+    for (c, &v) in codes.iter_mut().zip(row) {
+        let q = ((v as f64 - lo64) * inv).round();
+        *c = q.clamp(0.0, 255.0) as u8;
+    }
+    (scale64 as f32, lo)
+}
+
+/// Decode one int8 code against its row's `(scale, offset)`.
+#[inline]
+pub fn int8_decode(code: u8, scale: f32, offset: f32) -> f32 {
+    offset + scale * code as f32
+}
+
+// ---------------------------------------------------------------------------
+// quantized backing (heap or mapped file)
+// ---------------------------------------------------------------------------
+
+/// Byte length of the codec header at the front of a quantized shard
+/// file: magic `GASQ`, format version, codec tag, pad, h, num_layers.
+/// Heap-backed stores carry no header. 16 keeps the payload 4-aligned.
+const HEADER_BYTES: usize = 16;
+const MAGIC: &[u8; 4] = b"GASQ";
+const VERSION: u8 = 1;
+
+fn encode_header(codec: Codec, h: usize, num_layers: usize) -> [u8; HEADER_BYTES] {
+    let mut hd = [0u8; HEADER_BYTES];
+    hd[..4].copy_from_slice(MAGIC);
+    hd[4] = VERSION;
+    hd[5] = codec.tag();
+    hd[8..12].copy_from_slice(&(h as u32).to_le_bytes());
+    hd[12..16].copy_from_slice(&(num_layers as u32).to_le_bytes());
+    hd
+}
+
+fn check_header(
+    path: &Path,
+    bytes: &[u8],
+    codec: Codec,
+    h: usize,
+    num_layers: usize,
+) -> io::Result<()> {
+    let want = encode_header(codec, h, num_layers);
+    let got = &bytes[..HEADER_BYTES];
+    if got == want {
+        return Ok(());
+    }
+    let detail = if &got[..4] != MAGIC {
+        "no GASQ codec header (was it written as an uncompressed f32 shard?)".to_string()
+    } else if got[5] != want[5] {
+        format!("codec tag {} on disk but {} requested", got[5], want[5])
+    } else {
+        "geometry header mismatch".to_string()
+    };
+    Err(io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!(
+            "history shard {} cannot be reopened as [{} h={h} layers={num_layers}]: {detail}",
+            path.display(),
+            codec.name()
+        ),
+    ))
+}
+
+/// Total shard-file length for a quantized backing: header + payload,
+/// padded so `MappedFile`'s whole-word invariant holds.
+fn file_len(codec: Codec, rows: usize, h: usize, num_layers: usize) -> usize {
+    let len = HEADER_BYTES + num_layers * codec.layer_span_bytes(rows, h);
+    len.div_ceil(4) * 4
+}
+
+enum ByteStore {
+    Heap(Vec<u8>),
+    Mapped(MappedFile),
+}
+
+impl ByteStore {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            ByteStore::Heap(v) => v,
+            ByteStore::Mapped(m) => m.as_bytes(),
+        }
+    }
+
+    fn bytes_mut(&mut self) -> &mut [u8] {
+        match self {
+            ByteStore::Heap(v) => v,
+            ByteStore::Mapped(m) => m.as_bytes_mut(),
+        }
+    }
+}
+
+/// Compressed shard storage: `[num_layers]` blocks of encoded rows. For
+/// `Int8` each layer block is `rows*h` codes followed by `rows` little-
+/// endian `(scale: f32, offset: f32)` pairs (read byte-wise, so the
+/// unaligned region is fine); for `F16` it is `rows*h` native-endian
+/// u16s. Decode runs inside `gather_rows`' panel loop — one virtual
+/// call per (shard, layer, panel), never per row.
+pub struct QuantBacking {
+    codec: Codec,
+    rows: usize,
+    h: usize,
+    num_layers: usize,
+    /// byte offset where layer 0 starts (0 heap, HEADER_BYTES mapped)
+    payload: usize,
+    store: ByteStore,
+    stats: QuantStats,
+}
+
+impl QuantBacking {
+    pub fn heap(codec: Codec, rows: usize, h: usize, num_layers: usize) -> QuantBacking {
+        let len = num_layers * codec.layer_span_bytes(rows, h);
+        QuantBacking {
+            codec,
+            rows,
+            h,
+            num_layers,
+            payload: 0,
+            store: ByteStore::Heap(vec![0u8; len]),
+            stats: QuantStats::default(),
+        }
+    }
+
+    pub fn mapped(
+        codec: Codec,
+        path: &Path,
+        rows: usize,
+        h: usize,
+        num_layers: usize,
+        reopen: bool,
+    ) -> io::Result<QuantBacking> {
+        let len = file_len(codec, rows, h, num_layers);
+        let map = if reopen && path.exists() {
+            let map = MappedFile::reopen(path, len)?;
+            check_header(path, map.as_bytes(), codec, h, num_layers)?;
+            map
+        } else {
+            let mut map = MappedFile::create(path, len)?;
+            map.as_bytes_mut()[..HEADER_BYTES]
+                .copy_from_slice(&encode_header(codec, h, num_layers));
+            map
+        };
+        Ok(QuantBacking {
+            codec,
+            rows,
+            h,
+            num_layers,
+            payload: HEADER_BYTES,
+            store: ByteStore::Mapped(map),
+            stats: QuantStats::default(),
+        })
+    }
+
+    #[inline]
+    fn layer_bytes(&self, l: usize) -> (usize, usize) {
+        let span = self.codec.layer_span_bytes(self.rows, self.h);
+        (self.payload + l * span, span)
+    }
+}
+
+impl HistoryBacking for QuantBacking {
+    fn layer(&self, _l: usize) -> &[f32] {
+        panic!(
+            "history backing [{}] stores no dense f32 view — use gather_rows",
+            self.kind()
+        );
+    }
+
+    fn layer_mut(&mut self, _l: usize) -> &mut [f32] {
+        panic!(
+            "history backing [{}] stores no dense f32 view — use scatter_rows",
+            self.kind()
+        );
+    }
+
+    fn gather_rows(&self, l: usize, h: usize, pairs: &[(u32, u32)], out: &mut [f32]) {
+        assert!(
+            l < self.num_layers,
+            "gather_rows: layer {l} out of range ({} layers)",
+            self.num_layers
+        );
+        assert_eq!(h, self.h, "gather_rows: h mismatch");
+        let (off, span) = self.layer_bytes(l);
+        let src = &self.store.bytes()[off..off + span];
+        match self.codec {
+            Codec::F32 => unreachable!("f32 uses RamBacking/MmapBacking"),
+            Codec::F16 => {
+                for &(local, dst) in pairs {
+                    let s = local as usize * h * 2;
+                    let row = &src[s..s + 2 * h];
+                    let o = &mut out[dst as usize * h..][..h];
+                    for (j, v) in o.iter_mut().enumerate() {
+                        *v = f16_bits_to_f32(u16::from_ne_bytes([row[2 * j], row[2 * j + 1]]));
+                    }
+                }
+            }
+            Codec::Int8 => {
+                let (codes, params) = src.split_at(self.rows * h);
+                for &(local, dst) in pairs {
+                    let li = local as usize;
+                    let p = &params[li * 8..li * 8 + 8];
+                    let scale = f32::from_le_bytes([p[0], p[1], p[2], p[3]]);
+                    let offset = f32::from_le_bytes([p[4], p[5], p[6], p[7]]);
+                    let row = &codes[li * h..(li + 1) * h];
+                    let o = &mut out[dst as usize * h..][..h];
+                    for (v, &c) in o.iter_mut().zip(row) {
+                        *v = int8_decode(c, scale, offset);
+                    }
+                }
+            }
+        }
+    }
+
+    fn scatter_rows(
+        &mut self,
+        l: usize,
+        h: usize,
+        pairs: &[(u32, u32)],
+        data: &[f32],
+        track_deltas: bool,
+    ) -> f64 {
+        assert!(
+            l < self.num_layers,
+            "scatter_rows: layer {l} out of range ({} layers)",
+            self.num_layers
+        );
+        assert_eq!(h, self.h, "scatter_rows: h mismatch");
+        let (off, span) = self.layer_bytes(l);
+        let rows = self.rows;
+        let codec = self.codec;
+        let mut dsum = 0f64;
+        let mut qmax = self.stats.max_abs;
+        let mut qsum = 0f64;
+        let dst = &mut self.store.bytes_mut()[off..off + span];
+        match codec {
+            Codec::F32 => unreachable!("f32 uses RamBacking/MmapBacking"),
+            Codec::F16 => {
+                for &(local, src) in pairs {
+                    let row = &data[src as usize * h..][..h];
+                    let cell = &mut dst[local as usize * h * 2..][..2 * h];
+                    if track_deltas {
+                        let mut diff = 0f64;
+                        for (j, &v) in row.iter().enumerate() {
+                            let old =
+                                f16_bits_to_f32(u16::from_ne_bytes([cell[2 * j], cell[2 * j + 1]]));
+                            let d = (v - old) as f64;
+                            diff += d * d;
+                        }
+                        dsum += diff.sqrt();
+                    }
+                    for (j, &v) in row.iter().enumerate() {
+                        let bits = f32_to_f16_bits(v);
+                        cell[2 * j..2 * j + 2].copy_from_slice(&bits.to_ne_bytes());
+                        let err = (f16_bits_to_f32(bits) as f64 - v as f64).abs();
+                        qsum += err;
+                        if err > qmax {
+                            qmax = err;
+                        }
+                    }
+                }
+            }
+            Codec::Int8 => {
+                let (codes, params) = dst.split_at_mut(rows * h);
+                for &(local, src) in pairs {
+                    let li = local as usize;
+                    let row = &data[src as usize * h..][..h];
+                    let cell = &mut codes[li * h..(li + 1) * h];
+                    let p = &mut params[li * 8..li * 8 + 8];
+                    if track_deltas {
+                        let scale = f32::from_le_bytes([p[0], p[1], p[2], p[3]]);
+                        let offset = f32::from_le_bytes([p[4], p[5], p[6], p[7]]);
+                        let mut diff = 0f64;
+                        for (&v, &c) in row.iter().zip(cell.iter()) {
+                            let d = (v - int8_decode(c, scale, offset)) as f64;
+                            diff += d * d;
+                        }
+                        dsum += diff.sqrt();
+                    }
+                    let (scale, offset) = int8_encode_row(row, cell);
+                    p[..4].copy_from_slice(&scale.to_le_bytes());
+                    p[4..].copy_from_slice(&offset.to_le_bytes());
+                    for (&v, &c) in row.iter().zip(cell.iter()) {
+                        let err = (int8_decode(c, scale, offset) as f64 - v as f64).abs();
+                        qsum += err;
+                        if err > qmax {
+                            qmax = err;
+                        }
+                    }
+                }
+            }
+        }
+        self.stats.max_abs = qmax;
+        self.stats.sum_abs += qsum;
+        self.stats.count += (pairs.len() * h) as u64;
+        dsum
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match &mut self.store {
+            ByteStore::Heap(_) => Ok(()),
+            ByteStore::Mapped(m) => m.flush(),
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match &self.store {
+            ByteStore::Heap(v) => v.len(),
+            ByteStore::Mapped(_) => 0,
+        }
+    }
+
+    fn mapped_bytes(&self) -> usize {
+        match &self.store {
+            ByteStore::Heap(_) => 0,
+            ByteStore::Mapped(m) => m.len_bytes(),
+        }
+    }
+
+    fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    fn quant_error(&self) -> QuantStats {
+        self.stats
+    }
+
+    fn reset_quant_error(&mut self) {
+        self.stats = QuantStats::default();
+    }
+
+    fn kind(&self) -> &'static str {
+        match (&self.store, self.codec) {
+            (ByteStore::Heap(_), Codec::F16) => "ram/f16",
+            (ByteStore::Heap(_), Codec::Int8) => "ram/int8",
+            (ByteStore::Mapped(_), Codec::F16) => "mmap/f16",
+            (ByteStore::Mapped(_), Codec::Int8) => "mmap/int8",
+            (_, Codec::F32) => "f32",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrips_every_representable_half() {
+        for hb in 0u16..=u16::MAX {
+            let exp = (hb >> 10) & 0x1f;
+            let man = hb & 0x3ff;
+            if exp == 0x1f && man != 0 {
+                // NaN: only NaN-ness must survive
+                let back = f32_to_f16_bits(f16_bits_to_f32(hb));
+                assert_eq!(back >> 10 & 0x1f, 0x1f);
+                assert_ne!(back & 0x3ff, 0, "NaN collapsed to inf for {hb:04x}");
+                continue;
+            }
+            let v = f16_bits_to_f32(hb);
+            assert_eq!(
+                f32_to_f16_bits(v),
+                hb,
+                "half {hb:04x} (= {v}) did not round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next half up
+        // (1 + 2^-10): ties go to the even mantissa, i.e. 1.0
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3c00);
+        // one ulp above the tie rounds up
+        assert_eq!(
+            f32_to_f16_bits(f32::from_bits((1.0f32 + 2f32.powi(-11)).to_bits() + 1)),
+            0x3c01
+        );
+        // overflow saturates to inf, not garbage
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-65520.0), 0xfc00);
+        // largest finite half
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        // underflow flushes to signed zero
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000);
+        // smallest subnormal half survives
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001);
+    }
+
+    #[test]
+    fn int8_error_stays_within_half_scale() {
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            (rng >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for h in [1usize, 3, 17, 64] {
+            for mag in [1.0f64, 1e-6, 1e4] {
+                let row: Vec<f32> = (0..h).map(|_| ((next() - 0.5) * 2.0 * mag) as f32).collect();
+                let mut codes = vec![0u8; h];
+                let (scale, offset) = int8_encode_row(&row, &mut codes);
+                let bound = scale as f64 * 0.5 * (1.0 + 1e-5)
+                    + 2e-7 * (offset.abs() as f64).max(scale as f64 * 255.0)
+                    + 1e-30;
+                for (&v, &c) in row.iter().zip(&codes) {
+                    let err = (int8_decode(c, scale, offset) as f64 - v as f64).abs();
+                    assert!(err <= bound, "h={h} mag={mag}: err {err} > bound {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_constant_and_zero_rows_are_exact() {
+        let mut codes = vec![0u8; 5];
+        let (scale, offset) = int8_encode_row(&[4.25; 5], &mut codes);
+        assert_eq!(scale, 0.0);
+        assert_eq!(offset, 4.25);
+        assert!(codes.iter().all(|&c| c == 0));
+        assert_eq!(int8_decode(0, scale, offset), 4.25);
+        // zero-initialised storage (all-zero codes and params) decodes
+        // to exactly 0.0, matching the f32 backings' zero-init
+        assert_eq!(int8_decode(0, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn heap_backing_roundtrips_both_codecs() {
+        for codec in [Codec::F16, Codec::Int8] {
+            let (rows, h, layers) = (6, 5, 3);
+            let mut b = QuantBacking::heap(codec, rows, h, layers);
+            let data: Vec<f32> = (0..2 * h).map(|i| i as f32 * 0.37 - 1.5).collect();
+            b.scatter_rows(1, h, &[(2, 0), (5, 1)], &data, false);
+            let mut out = vec![0f32; 2 * h];
+            b.gather_rows(1, h, &[(2, 0), (5, 1)], &mut out);
+            for (j, (&got, &want)) in out.iter().zip(&data).enumerate() {
+                match codec {
+                    Codec::F16 => assert_eq!(got, f16_round(want), "j={j}"),
+                    _ => assert!((got - want).abs() <= 0.3, "j={j}: {got} vs {want}"),
+                }
+            }
+            // untouched layers still decode to zero-init
+            b.gather_rows(0, h, &[(2, 0)], &mut out[..h]);
+            assert!(out[..h].iter().all(|&v| v == 0.0));
+            // telemetry counted 2 rows * h values
+            assert_eq!(b.quant_error().count, (2 * h) as u64);
+        }
+    }
+
+    #[test]
+    fn mapped_backing_reopens_and_rejects_codec_mismatch() {
+        let dir = std::env::temp_dir().join(format!("gas-quant-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard000.bin");
+        let (rows, h, layers) = (4, 3, 2);
+        let mut b = QuantBacking::mapped(Codec::F16, &path, rows, h, layers, false).unwrap();
+        let data: Vec<f32> = vec![1.5, -2.25, 3.0];
+        b.scatter_rows(0, h, &[(1, 0)], &data, false);
+        b.flush().unwrap();
+        drop(b);
+        let b2 = QuantBacking::mapped(Codec::F16, &path, rows, h, layers, true).unwrap();
+        let mut out = vec![0f32; h];
+        b2.gather_rows(0, h, &[(1, 0)], &mut out);
+        assert_eq!(out, data); // all three are f16-representable
+        drop(b2);
+        // same file reopened under a different codec must be refused
+        // (here the lengths already differ; the header test below covers
+        // the equal-length collision)
+        assert!(QuantBacking::mapped(Codec::Int8, &path, rows, h, layers, true).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "gather_rows: layer")]
+    fn out_of_range_gather_layer_panics() {
+        let b = QuantBacking::heap(Codec::F16, 4, 3, 2);
+        let mut out = vec![0f32; 3];
+        b.gather_rows(2, 3, &[(0, 0)], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scatter_rows: layer")]
+    fn out_of_range_scatter_layer_panics() {
+        let mut b = QuantBacking::heap(Codec::Int8, 4, 3, 2);
+        b.scatter_rows(2, 3, &[(0, 0)], &[1.0, 2.0, 3.0], false);
+    }
+
+    #[test]
+    fn codec_mismatch_is_rejected_even_at_equal_length() {
+        // rows*(h+8) == rows*h*2 at h=8: length check alone can't tell
+        // int8 from f16 — the header tag must
+        let dir = std::env::temp_dir().join(format!("gas-quant-tag-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard000.bin");
+        let (rows, h, layers) = (4, 8, 2);
+        assert_eq!(
+            file_len(Codec::F16, rows, h, layers),
+            file_len(Codec::Int8, rows, h, layers)
+        );
+        let mut b = QuantBacking::mapped(Codec::F16, &path, rows, h, layers, false).unwrap();
+        b.flush().unwrap();
+        drop(b);
+        let err = QuantBacking::mapped(Codec::Int8, &path, rows, h, layers, true).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("codec"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

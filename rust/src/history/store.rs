@@ -24,14 +24,20 @@
 //! [`crate::history::pipeline`] leans on exactly this invariant, and its
 //! `depth_k_pulls_never_observe_partial_pushes` test regresses it.
 //!
-//! Where the embedding rows *live* is a separate axis: each shard owns a
-//! [`HistoryBacking`] (in-RAM heap block or an mmap'd file — see
-//! [`crate::history::backing`]) selected by [`BackingSpec`]. Striping,
-//! locks, staleness clocks and delta probes are backing-agnostic; the
-//! gather/scatter hot loops hoist one `layer()` slice per (shard, layer)
-//! so the `dyn` dispatch stays off the per-row path.
+//! Where the embedding rows *live and how they are encoded* is a
+//! separate axis: each shard owns a [`HistoryBacking`] (in-RAM heap
+//! block, an mmap'd file, or an f16/int8-quantized variant of either —
+//! see [`crate::history::backing`] and [`crate::history::quant`])
+//! selected by [`BackingSpec`]. Striping, locks, staleness clocks and
+//! delta probes are backing-agnostic; the gather/scatter hot loops
+//! bucket each panel by shard and issue one
+//! `gather_rows`/`scatter_rows` call per (shard, layer, panel), so the
+//! `dyn` dispatch — and for compressed codecs the decode — stays off
+//! the per-row path while never materializing a full-precision copy of
+//! a quantized shard.
 
-use super::backing::{make_backing, BackingSpec, HistoryBacking};
+use super::backing::{make_backing, BackingSpec, HistoryBacking, QuantStats};
+use super::quant::Codec;
 use crate::memaccount::host::HistoryFootprint;
 use rayon::prelude::*;
 use std::sync::{RwLock, RwLockReadGuard};
@@ -207,11 +213,6 @@ impl Shard {
         })
     }
 
-    #[inline]
-    fn row(&self, l: usize, local: usize, h: usize) -> &[f32] {
-        &self.backing.layer(l)[local * h..(local + 1) * h]
-    }
-
     /// Heap bytes of the staleness/probe metadata (backing-independent).
     fn meta_bytes(&self) -> usize {
         self.last_push.iter().map(|v| v.len() * 8).sum::<usize>()
@@ -219,40 +220,19 @@ impl Shard {
     }
 
     /// Scatter `(local_row, data_row)` pairs into layer `l`. Callers hand
-    /// each shard only its own rows (pre-bucketed on the pushing thread),
-    /// so with the delta probe off this is a pure memcpy loop.
-    fn scatter(
-        &mut self,
-        l: usize,
-        rows: impl Iterator<Item = (usize, usize)>,
-        data: &[f32],
-        h: usize,
-        track_deltas: bool,
-    ) {
-        // one virtual call per scatter; the row loop writes a plain slice
-        let dst = self.backing.layer_mut(l);
-        let mut dsum = 0f64;
-        let mut cnt = 0u64;
-        for (local, i) in rows {
-            debug_assert!(local < self.rows);
-            let d = local * h;
-            let row = &data[i * h..(i + 1) * h];
-            if track_deltas {
-                let old = &dst[d..d + h];
-                let mut diff = 0f64;
-                for j in 0..h {
-                    let e = (row[j] - old[j]) as f64;
-                    diff += e * e;
-                }
-                dsum += diff.sqrt();
-            }
-            dst[d..d + h].copy_from_slice(row);
-            self.last_push[l][local] = self.step;
-            cnt += 1;
+    /// each shard only its own rows (pre-bucketed on the pushing thread);
+    /// the backing's `scatter_rows` does the row writes (and any
+    /// encoding) in one virtual call, returning the delta-probe sum, and
+    /// the staleness clocks stay here on the heap.
+    fn scatter(&mut self, l: usize, pairs: &[(u32, u32)], data: &[f32], h: usize, track: bool) {
+        debug_assert!(pairs.iter().all(|&(local, _)| (local as usize) < self.rows));
+        let dsum = self.backing.scatter_rows(l, h, pairs, data, track);
+        for &(local, _) in pairs {
+            self.last_push[l][local as usize] = self.step;
         }
-        if track_deltas {
+        if track {
             self.delta_sum[l] += dsum;
-            self.delta_cnt[l] += cnt;
+            self.delta_cnt[l] += pairs.len() as u64;
         }
     }
 }
@@ -278,6 +258,7 @@ pub struct ShardedHistoryStore {
     parallel: bool,
     track_deltas: bool,
     backing_kind: &'static str,
+    codec: Codec,
     shards: Vec<RwLock<Shard>>,
 }
 
@@ -294,7 +275,7 @@ impl ShardedHistoryStore {
         num_shards: usize,
     ) -> ShardedHistoryStore {
         // RAM backings never touch the filesystem, so this cannot fail
-        Self::with_backing(n, h, num_layers, Some(num_shards), &BackingSpec::Ram)
+        Self::with_backing(n, h, num_layers, Some(num_shards), &BackingSpec::ram())
             .expect("in-RAM store construction is infallible")
     }
 
@@ -325,6 +306,7 @@ impl ShardedHistoryStore {
             parallel: true,
             track_deltas: true,
             backing_kind: spec.kind(),
+            codec: spec.codec(),
             shards,
         })
     }
@@ -365,9 +347,38 @@ impl ShardedHistoryStore {
         self.num_layers * self.n * self.h * 4
     }
 
-    /// Which backing the shards were built on (`"ram"` or `"mmap"`).
+    /// Which backing medium the shards were built on (`"ram"` or `"mmap"`).
     pub fn backing_kind(&self) -> &'static str {
         self.backing_kind
+    }
+
+    /// How embedding rows are encoded in the shards (`F32` = exact).
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Cumulative quantization error sampled at push (`|decode(encode(v))
+    /// - v|` per value) aggregated over shards; identically zero for the
+    /// exact f32 backings.
+    pub fn quant_error(&self) -> QuantStats {
+        let mut stats = QuantStats::default();
+        for s in &self.shards {
+            stats.merge(&s.read().unwrap().backing.quant_error());
+        }
+        stats
+    }
+
+    /// Read-and-reset form of [`Self::quant_error`]: the trainer calls
+    /// this at each epoch boundary so the telemetry curves are per-epoch
+    /// max/mean rather than run-cumulative.
+    pub fn take_quant_error(&self) -> QuantStats {
+        let mut stats = QuantStats::default();
+        for s in &self.shards {
+            let mut g = s.write().unwrap();
+            stats.merge(&g.backing.quant_error());
+            g.backing.reset_quant_error();
+        }
+        stats
     }
 
     /// Durability barrier: flush every shard's backing, in shard order,
@@ -386,13 +397,17 @@ impl ShardedHistoryStore {
 
     /// Host-memory footprint split into unevictable heap bytes (embedding
     /// rows for RAM backings + staleness metadata for both) and mapped
-    /// file bytes (mmap backings only).
+    /// file bytes (mmap backings only). `stored_bytes` is the physical
+    /// size of the encoded embedding block alone — compare against
+    /// [`Self::bytes`] (logical f32 size) for the codec compression
+    /// ratio (~0.5x for f16, ~0.28x for int8 at h=64).
     pub fn footprint(&self) -> HistoryFootprint {
         let mut fp = HistoryFootprint::default();
         for s in &self.shards {
             let g = s.read().unwrap();
             fp.resident_bytes += g.backing.resident_bytes() + g.meta_bytes();
             fp.mapped_bytes += g.backing.mapped_bytes();
+            fp.stored_bytes += g.backing.stored_bytes();
         }
         fp
     }
@@ -410,6 +425,13 @@ impl ShardedHistoryStore {
 
     /// Gather rows `ids` of layer `l` into `out` (len >= ids.len() * h).
     pub fn pull(&self, l: usize, ids: &[u32], out: &mut [f32]) {
+        // release assert (mirrors the short-buffer push assert): an
+        // out-of-range layer means the caller's plan is corrupt
+        assert!(
+            l < self.num_layers,
+            "pull: layer {l} out of range ({} history layers)",
+            self.num_layers
+        );
         let guards = self.read_all();
         self.gather_layer(&guards, l, ids, &mut out[..ids.len() * self.h]);
     }
@@ -458,25 +480,32 @@ impl ShardedHistoryStore {
         let h = self.h;
         let ns = self.num_shards;
         debug_assert_eq!(out.len(), ids.len() * h);
-        // hoist the backing dispatch: one `layer()` virtual call per
-        // shard, then the row loops below index plain slices
-        let layers: Vec<&[f32]> = guards.iter().map(|g| g.backing.layer(l)).collect();
+        // Bucket each panel's rows by shard, then hand every shard its
+        // whole sub-panel in ONE `gather_rows` virtual call: the row
+        // copy — and for quantized backings the decode — runs in a
+        // monomorphic loop inside the backing, with `dyn` dispatch per
+        // (shard, layer, panel) only. Chunks of `out` are disjoint, so
+        // shards write their interleaved rows without coordination.
+        let gather_panel = |dst: &mut [f32], idc: &[u32]| {
+            let mut buckets: Vec<Vec<(u32, u32)>> = (0..ns)
+                .map(|_| Vec::with_capacity(idc.len() / ns + 1))
+                .collect();
+            for (k, &id) in idc.iter().enumerate() {
+                let id = id as usize;
+                buckets[id % ns].push(((id / ns) as u32, k as u32));
+            }
+            for (shard, bucket) in guards.iter().zip(&buckets) {
+                if !bucket.is_empty() {
+                    shard.backing.gather_rows(l, h, bucket, dst);
+                }
+            }
+        };
         if self.parallel && ids.len() >= PAR_MIN_ROWS {
             out.par_chunks_mut(GATHER_CHUNK_ROWS * h)
                 .zip(ids.par_chunks(GATHER_CHUNK_ROWS))
-                .for_each(|(dst, idc)| {
-                    for (k, &id) in idc.iter().enumerate() {
-                        let id = id as usize;
-                        let s = (id / ns) * h;
-                        dst[k * h..(k + 1) * h].copy_from_slice(&layers[id % ns][s..s + h]);
-                    }
-                });
+                .for_each(|(dst, idc)| gather_panel(dst, idc));
         } else {
-            for (k, &id) in ids.iter().enumerate() {
-                let id = id as usize;
-                let s = (id / ns) * h;
-                out[k * h..(k + 1) * h].copy_from_slice(&layers[id % ns][s..s + h]);
-            }
+            gather_panel(out, ids);
         }
     }
 
@@ -494,17 +523,18 @@ impl ShardedHistoryStore {
             ids.len(),
             self.h
         );
+        assert!(
+            l < self.num_layers,
+            "push: layer {l} out of range ({} history layers)",
+            self.num_layers
+        );
         let h = self.h;
         let ns = self.num_shards;
         let track = self.track_deltas;
         if ns == 1 {
-            self.shards[0].write().unwrap().scatter(
-                l,
-                ids.iter().enumerate().map(|(i, &id)| (id as usize, i)),
-                data,
-                h,
-                track,
-            );
+            let pairs: Vec<(u32, u32)> =
+                ids.iter().enumerate().map(|(i, &id)| (id, i as u32)).collect();
+            self.shards[0].write().unwrap().scatter(l, &pairs, data, h, track);
             return;
         }
         // One O(|ids|) pass buckets (local_row, data_row) pairs per shard,
@@ -522,15 +552,8 @@ impl ShardedHistoryStore {
         // cannot starve a concurrent pull's gather chunks (deadlock).
         let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
         let mut locked: Vec<&mut Shard> = guards.iter_mut().map(|g| &mut **g).collect();
-        let scatter_bucket = |shard: &mut Shard, bucket: &[(u32, u32)]| {
-            shard.scatter(
-                l,
-                bucket.iter().map(|&(local, i)| (local as usize, i as usize)),
-                data,
-                h,
-                track,
-            );
-        };
+        let scatter_bucket =
+            |shard: &mut Shard, bucket: &[(u32, u32)]| shard.scatter(l, bucket, data, h, track);
         if self.parallel && ids.len() >= PAR_MIN_ROWS.min(ns * 64) {
             locked
                 .par_iter_mut()
@@ -544,10 +567,13 @@ impl ShardedHistoryStore {
     }
 
     /// Copy of one row (the sharded store cannot hand out references
-    /// across its locks).
+    /// across its locks; quantized backings decode on the way out).
     pub fn row(&self, l: usize, id: usize) -> Vec<f32> {
         let g = self.shards[id % self.num_shards].read().unwrap();
-        g.row(l, id / self.num_shards, self.h).to_vec()
+        let mut out = vec![0f32; self.h];
+        let local = (id / self.num_shards) as u32;
+        g.backing.gather_rows(l, self.h, &[(local, 0)], &mut out);
+        out
     }
 
     /// Mean staleness (steps since last push) of given rows at layer `l`.
@@ -810,7 +836,7 @@ mod tests {
     #[test]
     fn mmap_backing_matches_ram_bit_for_bit() {
         let dir = std::env::temp_dir().join(format!("gas-store-mmap-{}", std::process::id()));
-        let spec = BackingSpec::Mmap { dir: dir.clone(), reopen: false };
+        let spec = BackingSpec::mmap(&dir, false);
         let ram = ShardedHistoryStore::with_shards(97, 6, 2, 4);
         let mm = ShardedHistoryStore::with_backing(97, 6, 2, Some(4), &spec).unwrap();
         assert_eq!(ram.backing_kind(), "ram");
@@ -847,10 +873,66 @@ mod tests {
     }
 
     #[test]
+    fn quantized_store_roundtrips_within_codec_bounds() {
+        for codec in [Codec::F16, Codec::Int8] {
+            let spec = BackingSpec::ram().with_codec(codec);
+            let s = ShardedHistoryStore::with_backing(50, 7, 2, Some(3), &spec).unwrap();
+            assert_eq!(s.codec(), codec);
+            let ids = [3u32, 49, 0, 17];
+            let data: Vec<f32> = (0..ids.len() * 7).map(|x| x as f32 * 0.13 - 1.8).collect();
+            s.push(1, &ids, &data);
+            let mut out = vec![0f32; ids.len() * 7];
+            s.pull(1, &ids, &mut out);
+            for (k, (&got, &want)) in out.iter().zip(&data).enumerate() {
+                match codec {
+                    Codec::F16 => assert_eq!(
+                        got,
+                        crate::history::quant::f16_round(want),
+                        "k={k}"
+                    ),
+                    _ => assert!((got - want).abs() < 0.05, "k={k}: {got} vs {want}"),
+                }
+            }
+            // untouched layer still decodes to zero-init
+            s.pull(0, &ids, &mut out);
+            assert!(out.iter().all(|&v| v == 0.0));
+            // push-time telemetry counted every scattered value; reading
+            // it out resets the per-epoch window
+            let stats = s.take_quant_error();
+            assert_eq!(stats.count, (ids.len() * 7) as u64);
+            assert!(stats.max_abs >= stats.mean_abs());
+            assert_eq!(s.quant_error().count, 0);
+            // stored bytes beat the logical f32 footprint
+            let fp = s.footprint();
+            assert!(fp.stored_bytes < s.bytes(), "{} vs {}", fp.stored_bytes, s.bytes());
+        }
+        // exact stores report a zero error stream and full-size storage
+        let s = ShardedHistoryStore::with_shards(50, 7, 2, 3);
+        s.push(0, &[1], &[0.5; 7]);
+        assert_eq!(s.quant_error(), QuantStats::default());
+        assert_eq!(s.footprint().stored_bytes, s.bytes());
+    }
+
+    #[test]
     #[should_panic(expected = "push: data holds")]
     fn short_push_buffer_is_rejected() {
         let s = ShardedHistoryStore::with_shards(10, 4, 1, 2);
         s.push(0, &[1, 2], &[0.0; 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pull: layer 3 out of range")]
+    fn out_of_range_pull_layer_is_rejected() {
+        let s = ShardedHistoryStore::with_shards(10, 4, 2, 2);
+        let mut out = vec![0f32; 4];
+        s.pull(3, &[1], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "push: layer 2 out of range")]
+    fn out_of_range_push_layer_is_rejected() {
+        let s = ShardedHistoryStore::with_shards(10, 4, 2, 2);
+        s.push(2, &[1], &[0.0; 4]);
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //!              (where history rows live; mmap = out-of-core shard files,
 //!              default GAS_HISTORY_BACKING / GAS_HISTORY_DIR, else ram;
 //!              --history-dir alone implies mmap)
+//!              [--history-codec f32|f16|int8]
+//!              (how history rows are encoded; f16/int8 dequantize inside
+//!              the gather, default GAS_HISTORY_CODEC, else exact f32)
 //!   gen        --dataset cora            (generate + print dataset stats)
 //!   partition  --dataset cora --parts 4  (METIS vs random quality)
 //!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
@@ -20,7 +23,7 @@ use anyhow::{bail, Result};
 use gas::backend::native::registry;
 use gas::baselines::naive_history::{gas_config, naive_config};
 use gas::baselines::ClusterGcnTrainer;
-use gas::config::{parse_history_backing, Backend, Ctx};
+use gas::config::{parse_history_backing, parse_history_codec, Backend, Ctx};
 use gas::expressive::prop3;
 use gas::memaccount::MemoryModel;
 use gas::partition::{inter_intra_ratio, metis_partition, random_partition};
@@ -92,7 +95,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             } else if let Some(dir) = dir {
                 cfg.history_backing = parse_history_backing("mmap", Some(dir))?;
             }
-            let backing = cfg.history_backing.kind();
+            // --history-codec composes with whichever media won above
+            if let Some(codec) = args.get("history-codec") {
+                let codec = parse_history_codec(codec)?;
+                cfg.history_backing = cfg.history_backing.clone().with_codec(codec);
+            }
+            let backing = cfg.history_backing.label();
             let mut tr = Trainer::new(ds, art, cfg)?;
             let r = tr.train()?;
             println!(
@@ -104,11 +112,19 @@ fn cmd_train(args: &Args) -> Result<()> {
                 r.staleness
             );
             println!(
-                "  history [{backing}] {:.1} MiB total | {:.1} MiB resident | {:.1} MiB mapped",
+                "  history [{backing}] {:.1} MiB logical | {:.1} MiB stored | {:.1} MiB resident | {:.1} MiB mapped",
                 r.history_bytes as f64 / (1 << 20) as f64,
+                r.history_stored_bytes as f64 / (1 << 20) as f64,
                 r.history_resident_bytes as f64 / (1 << 20) as f64,
                 r.history_mapped_bytes as f64 / (1 << 20) as f64
             );
+            if let Some(q) = r.quant_err_max.last() {
+                println!(
+                    "  quant err (last epoch) max={:.3e} mean={:.3e}",
+                    q,
+                    r.quant_err_mean.last().unwrap_or(0.0)
+                );
+            }
             for (k, v) in r.buckets.entries() {
                 println!("  {k:<12} {:.3}s", v);
             }

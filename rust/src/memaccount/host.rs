@@ -24,10 +24,17 @@ pub struct HistoryFootprint {
     pub resident_bytes: usize,
     /// File-backed mapped bytes (mmap backings only; evictable).
     pub mapped_bytes: usize,
+    /// Physical bytes of the *encoded* embedding block alone (codes,
+    /// per-row codec params, codec headers; no staleness metadata).
+    /// Compare against the store's logical `num_layers * n * h * 4` for
+    /// the codec compression ratio: equal for f32, ~0.5x for f16, ~0.28x
+    /// for per-row-affine int8 at h=64.
+    pub stored_bytes: usize,
 }
 
 impl HistoryFootprint {
-    /// Everything addressable: heap + mapping.
+    /// Everything addressable: heap + mapping. (`stored_bytes` is a
+    /// subset of that union, not an extra term.)
     pub fn total_bytes(&self) -> usize {
         self.resident_bytes + self.mapped_bytes
     }
@@ -59,8 +66,9 @@ mod tests {
         let fp = HistoryFootprint {
             resident_bytes: 10,
             mapped_bytes: 32,
+            stored_bytes: 24,
         };
-        assert_eq!(fp.total_bytes(), 42);
+        assert_eq!(fp.total_bytes(), 42, "stored bytes are a subset, not a term");
         assert_eq!(HistoryFootprint::default().total_bytes(), 0);
     }
 

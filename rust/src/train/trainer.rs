@@ -29,7 +29,7 @@
 
 use crate::graph::datasets::Dataset;
 use crate::history::{
-    BackingSpec, HistoryPipeline, PipelineMode, PullBuffer, ShardedHistoryStore,
+    BackingSpec, Codec, HistoryPipeline, PipelineMode, PullBuffer, ShardedHistoryStore,
 };
 use crate::model::metrics;
 use crate::model::{Adam, Optimizer, ParamStore};
@@ -70,8 +70,10 @@ pub struct TrainConfig {
     /// history-store shard count (None = one stripe per core, capped at 8;
     /// Some(1) still runs the rayon gather/scatter on a single stripe)
     pub history_shards: Option<usize>,
-    /// where the history rows live: in-RAM (default) or mmap'd shard
-    /// files (out-of-core; see `--history-backing` / `GAS_HISTORY_BACKING`)
+    /// where the history rows live — in-RAM (default) or mmap'd shard
+    /// files (out-of-core) — and how they are encoded — exact f32
+    /// (default) or compressed f16/int8. See `--history-backing` /
+    /// `GAS_HISTORY_BACKING` and `--history-codec` / `GAS_HISTORY_CODEC`.
     pub history_backing: BackingSpec,
     /// max halo pulls in flight = the epoch pipeline's prefetch distance
     /// (clamped to ≥ 1). 1 reproduces the classic one-step-lookahead
@@ -124,6 +126,15 @@ pub struct TrainResult {
     pub history_resident_bytes: usize,
     /// mmap'd shard-file bytes (0 for the RAM backing)
     pub history_mapped_bytes: usize,
+    /// physical bytes of the encoded embedding block alone — compare to
+    /// `history_bytes` for the codec compression ratio (1.0 for f32)
+    pub history_stored_bytes: usize,
+    /// per-epoch max |decode(encode(x)) - x| over every pushed value, for
+    /// quantized codecs (empty for f32; the Theorem-2 epsilon floor the
+    /// codec itself contributes)
+    pub quant_err_max: Curve,
+    /// per-epoch mean |decode(encode(x)) - x| companion of `quant_err_max`
+    pub quant_err_mean: Curve,
     pub steps: usize,
 }
 
@@ -226,8 +237,12 @@ impl<'a> Trainer<'a> {
             history_bytes: self.pipeline.with_store(|s| s.bytes()),
             history_resident_bytes: 0,
             history_mapped_bytes: 0,
+            history_stored_bytes: 0,
+            quant_err_max: Curve::new("quant_err_max"),
+            quant_err_mean: Curve::new("quant_err_mean"),
             steps: 0,
         };
+        let codec = self.pipeline.with_store(|s| s.codec());
         let mut sched = EpochScheduler::new(self.plans.len(), self.cfg.seed ^ 0x5eed, self.cfg.shuffle);
         let mut best_val = f64::NEG_INFINITY;
         for epoch in 0..self.cfg.epochs {
@@ -256,6 +271,13 @@ impl<'a> Trainer<'a> {
             // reads applied histories, re-bounding staleness every epoch
             self.pipeline.sync();
             result.loss.push(epoch_loss / nb.max(1) as f64);
+            if codec != Codec::F32 {
+                // post-sync: every push of the epoch has been quantized by
+                // the applier, so this window is exactly one epoch of pushes
+                let qs = self.pipeline.with_store(|s| s.take_quant_error());
+                result.quant_err_max.push(qs.max_abs);
+                result.quant_err_mean.push(qs.mean_abs());
+            }
             if (epoch + 1) % self.cfg.eval_every == 0 || epoch + 1 == self.cfg.epochs {
                 let (tr, va, te) = self.evaluate(&mut result.buckets)?;
                 result.train_acc.push(tr);
@@ -279,6 +301,7 @@ impl<'a> Trainer<'a> {
         let fp = self.pipeline.with_store(|s| s.footprint());
         result.history_resident_bytes = fp.resident_bytes;
         result.history_mapped_bytes = fp.mapped_bytes;
+        result.history_stored_bytes = fp.stored_bytes;
         Ok(result)
     }
 

@@ -3,20 +3,31 @@
 //! The mmap backing's contract is "exact drop-in": any schedule of
 //! pushes, ticks and flushes must be observationally identical to the
 //! in-RAM striped shards, bit for bit — rows, staleness clocks, and
-//! delta probes alike. This file checks that three ways:
+//! delta probes alike. The quantized backings (f16, int8) relax only
+//! the *values*, and only by their codec's documented bound: f16 rows
+//! read back as exactly `f16_round(pushed)`, int8 rows within half a
+//! per-row scale step — on either medium, which must agree bit-for-bit
+//! with each other. This file checks all of that four ways:
 //!
 //! 1. a property test driving random push/tick/flush schedules through
-//!    both backings and comparing every observable;
-//! 2. a drop-and-reopen test proving flushed shard files are the whole
-//!    durable state (rows recoverable, geometry changes rejected);
-//! 3. end-to-end training on the tape-regression configs (Serial
-//!    pipeline, pull_depth=1 — the bit-deterministic schedule), ram vs
-//!    mmap, comparing curves, probes, and the final history itself.
+//!    both f32 backings and comparing every observable;
+//! 2. the same harness against the scalar codec reference: a quantized
+//!    ram store, a quantized mmap store, and an exact shadow must agree
+//!    (quant pulls bit-equal to re-encoding the shadow; staleness
+//!    clocks bit-equal to an f32 store on the same schedule);
+//! 3. drop-and-reopen tests proving flushed shard files are the whole
+//!    durable state (rows recoverable; geometry *and codec* changes
+//!    rejected, never silently reinterpreted);
+//! 4. end-to-end training on the tape-regression configs (Serial
+//!    pipeline, pull_depth=1 — the bit-deterministic schedule): ram vs
+//!    mmap bit-identical at every codec, compressed footprints at the
+//!    documented ratios, and quantization-error telemetry populated.
 
 use gas::backend::native::{registry, NativeArtifact};
 use gas::baselines::naive_history::gas_config;
 use gas::graph::datasets::{Dataset, Profile};
-use gas::history::{BackingSpec, PipelineMode, ShardedHistoryStore};
+use gas::history::quant::{f16_round, int8_decode, int8_encode_row};
+use gas::history::{BackingSpec, Codec, PipelineMode, ShardedHistoryStore};
 use gas::train::Trainer;
 use gas::util::prop;
 use gas::util::rng::Rng;
@@ -35,7 +46,7 @@ fn fbits(v: &[f64]) -> Vec<u64> {
 }
 
 fn mmap_spec(dir: &Path, reopen: bool) -> BackingSpec {
-    BackingSpec::Mmap { dir: dir.to_path_buf(), reopen }
+    BackingSpec::mmap(dir, reopen)
 }
 
 fn store(
@@ -59,7 +70,7 @@ fn backings_agree(seed: u64) -> bool {
     let layers = 1 + rng.below(3);
     let shards = 1 + rng.below(5);
     let dir = tmp(&format!("prop-{seed}"));
-    let mut ram = store(n, h, layers, shards, &BackingSpec::Ram);
+    let mut ram = store(n, h, layers, shards, &BackingSpec::ram());
     let mut mm = store(n, h, layers, shards, &mmap_spec(&dir, false));
     let track = rng.chance(0.5);
     ram.set_delta_tracking(track);
@@ -115,6 +126,142 @@ fn random_schedules_agree_across_backings() {
     prop::check(0x0C17, 24, |r| r.next_u64(), |&seed| backings_agree(seed));
 }
 
+/// What a quantized store must return for layer `l`: every pushed row
+/// re-encoded through the scalar codec reference, never-pushed rows
+/// exactly zero (the zero-init contract).
+fn expected_rows(codec: Codec, raw: &[f32], pushed: &[bool], n: usize, h: usize) -> Vec<f32> {
+    let mut exp = vec![0f32; n * h];
+    let mut codes = vec![0u8; h];
+    for id in 0..n {
+        if !pushed[id] {
+            continue;
+        }
+        let row = &raw[id * h..(id + 1) * h];
+        let out = &mut exp[id * h..(id + 1) * h];
+        match codec {
+            Codec::F32 => out.copy_from_slice(row),
+            Codec::F16 => {
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = f16_round(v);
+                }
+            }
+            Codec::Int8 => {
+                let (scale, offset) = int8_encode_row(row, &mut codes);
+                for (o, &c) in out.iter_mut().zip(&codes) {
+                    *o = int8_decode(c, scale, offset);
+                }
+            }
+        }
+    }
+    exp
+}
+
+/// One random schedule through a quantized ram store, a quantized mmap
+/// store, an exact-f32 store, and a plain shadow of the raw pushes:
+/// * ram-quant and mmap-quant agree bit-for-bit on every observable
+///   (rows, staleness, delta probes, telemetry counts);
+/// * quant pulls equal the scalar codec reference of the shadow, bit
+///   for bit, and sit within the codec's error bound of the raw data;
+/// * staleness clocks are codec-independent (bit-equal to the f32
+///   store's on the same schedule).
+fn quantized_backings_track_reference(seed: u64, codec: Codec) -> bool {
+    let mut rng = Rng::new(seed ^ 0x9A17);
+    let n = 16 + rng.below(120);
+    let h = 1 + rng.below(9);
+    let layers = 1 + rng.below(3);
+    let shards = 1 + rng.below(5);
+    let dir = tmp(&format!("qprop-{}-{seed}", codec.name()));
+    let qram = store(n, h, layers, shards, &BackingSpec::ram().with_codec(codec));
+    let qmm = store(n, h, layers, shards, &mmap_spec(&dir, false).with_codec(codec));
+    let exact = store(n, h, layers, shards, &BackingSpec::ram());
+    let mut raw: Vec<Vec<f32>> = (0..layers).map(|_| vec![0f32; n * h]).collect();
+    let mut pushed: Vec<Vec<bool>> = (0..layers).map(|_| vec![false; n]).collect();
+    let mut values_pushed = 0u64;
+    let mut ok = true;
+    for _ in 0..10 {
+        let l = rng.below(layers);
+        let k = 1 + rng.below(n);
+        let ids: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&i| i as u32).collect();
+        let data: Vec<f32> = (0..ids.len() * h).map(|_| rng.normal_f32()).collect();
+        qram.push(l, &ids, &data);
+        qmm.push(l, &ids, &data);
+        exact.push(l, &ids, &data);
+        values_pushed += (ids.len() * h) as u64;
+        for (i, &id) in ids.iter().enumerate() {
+            raw[l][id as usize * h..(id as usize + 1) * h]
+                .copy_from_slice(&data[i * h..(i + 1) * h]);
+            pushed[l][id as usize] = true;
+        }
+        if rng.chance(0.7) {
+            qram.tick();
+            qmm.tick();
+            exact.tick();
+        }
+        if rng.chance(0.3) {
+            qram.flush().unwrap();
+            qmm.flush().unwrap();
+        }
+        let p = 1 + rng.below(n);
+        let probe: Vec<u32> = rng.sample_distinct(n, p).iter().map(|&i| i as u32).collect();
+        let mut a = vec![0f32; layers * probe.len() * h];
+        let mut b = vec![0f32; layers * probe.len() * h];
+        let sa = qram.pull_all_with_staleness(&probe, &mut a);
+        let sb = qmm.pull_all_with_staleness(&probe, &mut b);
+        ok &= bits(&a) == bits(&b) && fbits(&sa) == fbits(&sb);
+        for ll in 0..layers {
+            ok &= qram.staleness(ll, &probe).to_bits() == exact.staleness(ll, &probe).to_bits();
+            ok &= qram.mean_push_delta(ll).to_bits() == qmm.mean_push_delta(ll).to_bits();
+        }
+    }
+    // every row of every layer against the scalar reference + the bound
+    let all: Vec<u32> = (0..n as u32).collect();
+    for l in 0..layers {
+        let exp = expected_rows(codec, &raw[l], &pushed[l], n, h);
+        let mut got = vec![0f32; n * h];
+        qram.pull(l, &all, &mut got);
+        ok &= bits(&got) == bits(&exp);
+        let mut codes = vec![0u8; h];
+        for id in 0..n {
+            let rrow = &raw[l][id * h..(id + 1) * h];
+            let grow = &got[id * h..(id + 1) * h];
+            let bound = match codec {
+                Codec::F32 => 0.0,
+                // half precision: ~2^-11 relative error on normals
+                Codec::F16 => 1e-3_f64,
+                Codec::Int8 => {
+                    let (scale, offset) = int8_encode_row(rrow, &mut codes);
+                    scale as f64 * 0.5 * (1.0 + 1e-5)
+                        + 2e-7 * (offset.abs() as f64).max(scale as f64 * 255.0)
+                        + 1e-30
+                }
+            };
+            for (&g, &r) in grow.iter().zip(rrow) {
+                let err = (g as f64 - r as f64).abs();
+                let rel = err / r.abs().max(1.0) as f64;
+                ok &= match codec {
+                    Codec::Int8 => err <= bound,
+                    _ => rel <= bound || err == 0.0,
+                };
+            }
+        }
+    }
+    // telemetry: both media counted every pushed value, identically
+    let (qa, qb) = (qram.quant_error(), qmm.quant_error());
+    ok &= qa.count == values_pushed && qb.count == values_pushed;
+    ok &= qa.max_abs.to_bits() == qb.max_abs.to_bits()
+        && qa.sum_abs.to_bits() == qb.sum_abs.to_bits();
+    let _ = std::fs::remove_dir_all(&dir);
+    ok
+}
+
+#[test]
+fn quantized_schedules_match_the_scalar_codec_reference() {
+    prop::check(0x0C18, 10, |r| r.next_u64(), |&seed| {
+        quantized_backings_track_reference(seed, Codec::F16)
+            && quantized_backings_track_reference(seed, Codec::Int8)
+    });
+}
+
 #[test]
 fn flushed_shards_reopen_from_disk() {
     let dir = tmp("reopen");
@@ -139,6 +286,53 @@ fn flushed_shards_reopen_from_disk() {
     let err = ShardedHistoryStore::with_backing(n, h + 1, layers, Some(3), &mmap_spec(&dir, true));
     assert!(err.is_err(), "reopen with a different row width must fail");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flushed_quantized_shards_reopen_and_reject_codec_mismatch() {
+    for codec in [Codec::F16, Codec::Int8] {
+        let dir = tmp(&format!("qreopen-{}", codec.name()));
+        let (n, h, layers) = (33usize, 7usize, 2usize);
+        let mut rng = Rng::new(13);
+        let all: Vec<u32> = (0..n as u32).collect();
+        let data: Vec<f32> = (0..n * h).map(|_| rng.normal_f32()).collect();
+        let spec = mmap_spec(&dir, false).with_codec(codec);
+        {
+            let st = store(n, h, layers, 3, &spec);
+            st.push(1, &all, &data);
+            st.flush().unwrap();
+        } // dropped: the compressed shard files are all that survives
+        let st = store(n, h, layers, 3, &mmap_spec(&dir, true).with_codec(codec));
+        let mut out = vec![0f32; n * h];
+        st.pull(1, &all, &mut out);
+        let exp = expected_rows(codec, &data, &vec![true; n], n, h);
+        assert_eq!(bits(&out), bits(&exp), "{}: reopened rows drifted", codec.name());
+        // never-pushed layer still decodes to the zero-init contract
+        st.pull(0, &all, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+        drop(st);
+        // reopening under any *other* codec is refused (the GASQ header
+        // tag, not just the file length, carries the codec)
+        for other in [Codec::F32, Codec::F16, Codec::Int8] {
+            if other == codec {
+                continue;
+            }
+            let err = ShardedHistoryStore::with_backing(
+                n,
+                h,
+                layers,
+                Some(3),
+                &mmap_spec(&dir, true).with_codec(other),
+            );
+            assert!(
+                err.is_err(),
+                "{} shards reopened as {} without complaint",
+                codec.name(),
+                other.name()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 fn synth_profile() -> Profile {
@@ -181,7 +375,7 @@ fn training_is_bit_identical_across_backings() {
         let art = NativeArtifact::new(spec).unwrap();
         let dir = tmp(&format!("e2e-{model}"));
 
-        let mut tr_ram = Trainer::new(&ds, &art, serial_cfg(reg, BackingSpec::Ram)).unwrap();
+        let mut tr_ram = Trainer::new(&ds, &art, serial_cfg(reg, BackingSpec::ram())).unwrap();
         let r_ram = tr_ram.train().unwrap();
         let mut tr_mm = Trainer::new(&ds, &art, serial_cfg(reg, mmap_spec(&dir, false))).unwrap();
         let r_mm = tr_mm.train().unwrap();
@@ -218,6 +412,82 @@ fn training_is_bit_identical_across_backings() {
             r_mm.history_resident_bytes,
             r_mm.history_bytes
         );
+        // exact f32 backings: stored == logical, no quant telemetry
+        assert_eq!(r_ram.history_stored_bytes, r_ram.history_bytes);
+        assert!(r_ram.quant_err_max.values.is_empty());
+        assert!(r_mm.quant_err_max.values.is_empty());
+
+        drop(tr_mm);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// End-to-end training on the compressed codecs: ram and mmap media
+/// stay bit-identical per codec (the f32 drop-in contract, one level
+/// up), stored bytes land at the documented compression ratios, and
+/// the per-epoch quantization-error telemetry is populated and within
+/// each codec's bound.
+#[test]
+fn quantized_training_converges_with_bounded_error() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcn", 2, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+    for codec in [Codec::F16, Codec::Int8] {
+        let dir = tmp(&format!("qe2e-{}", codec.name()));
+        let ram_spec = BackingSpec::ram().with_codec(codec);
+        let mut tr_ram = Trainer::new(&ds, &art, serial_cfg(0.0, ram_spec)).unwrap();
+        let r_ram = tr_ram.train().unwrap();
+        let mm_spec = mmap_spec(&dir, false).with_codec(codec);
+        let mut tr_mm = Trainer::new(&ds, &art, serial_cfg(0.0, mm_spec)).unwrap();
+        let r_mm = tr_mm.train().unwrap();
+        let name = codec.name();
+
+        // media parity at the quantized codec, end to end
+        assert_eq!(fbits(&r_ram.loss.values), fbits(&r_mm.loss.values), "{name}: loss");
+        assert_eq!(fbits(&r_ram.val_acc.values), fbits(&r_mm.val_acc.values), "{name}: val");
+        assert_eq!(
+            fbits(&r_ram.quant_err_max.values),
+            fbits(&r_mm.quant_err_max.values),
+            "{name}: telemetry diverged across media"
+        );
+        assert!(
+            r_ram.loss.values.last().unwrap() < r_ram.loss.values.first().unwrap(),
+            "{name}: loss did not decrease"
+        );
+
+        // compressed footprint at the documented ratio (h=64 here):
+        // f16 = 0.5x exactly on the heap, int8 = (64+8)/256 = 0.28125x;
+        // mmap adds only the 16-byte GASQ headers + word padding
+        let (lo, hi) = match codec {
+            Codec::F16 => (45usize, 55usize),
+            _ => (20, 30),
+        };
+        for r in [&r_ram, &r_mm] {
+            assert!(
+                r.history_stored_bytes * 100 <= r.history_bytes * hi
+                    && r.history_stored_bytes * 100 >= r.history_bytes * lo,
+                "{name}: stored {} vs logical {} outside [{lo}%, {hi}%]",
+                r.history_stored_bytes,
+                r.history_bytes
+            );
+        }
+        // mmap media: everything stored lives in the mapping, and the
+        // resident side is metadata only — far below the logical size
+        assert!(r_mm.history_mapped_bytes >= r_mm.history_stored_bytes);
+        assert!(r_mm.history_resident_bytes < r_mm.history_bytes);
+
+        // telemetry: one sample per epoch, positive, mean <= max, and
+        // within the codec's worst-case bound for unit-scale activations
+        assert_eq!(r_ram.quant_err_max.values.len(), r_ram.loss.values.len());
+        for (&mx, &mn) in r_ram
+            .quant_err_max
+            .values
+            .iter()
+            .zip(&r_ram.quant_err_mean.values)
+        {
+            assert!(mx > 0.0 && mn > 0.0 && mn <= mx, "{name}: max={mx} mean={mn}");
+        }
 
         drop(tr_mm);
         let _ = std::fs::remove_dir_all(&dir);
