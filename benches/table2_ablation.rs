@@ -1,14 +1,26 @@
 //! Paper Table 2: relative improvement of individual GAS techniques within
 //! GCNII, in points vs full-batch: naive baseline / +regularization /
-//! +METIS / full GAS.
+//! +METIS / full GAS — plus the staleness-control sweep: round-robin vs
+//! staleness-ordered scheduling, delta-skip pushes, and the between-epoch
+//! priority refresh, all at an equal optimizer-step budget on cora.
 //!
 //!     cargo bench --bench table2_ablation
+//!     GAS_T2_TINY=1 cargo bench --bench table2_ablation   # CI smoke:
+//!         skips the 8-dataset points table, runs only the staleness
+//!         sweep at a reduced epoch budget
+//!
+//! Knobs: `GAS_BENCH_JSON` (output path, default BENCH_table2.json),
+//! `GAS_T2_DELTA_MIN` (explicit delta-skip threshold; default adapts to
+//! half the round-robin arm's mean push delta, which guarantees skips
+//! once convergence shrinks the late-epoch deltas below the from-zero
+//! first-epoch pushes that dominate the mean).
 
-use gas::bench::{epochs_or, filter, print_table};
+use gas::bench::{epochs_or, filter, print_table, write_bench_json, Bencher};
 use gas::config::Ctx;
 use gas::history::PipelineMode;
 use gas::sched::batch::LabelSel;
-use gas::train::trainer::{PartitionKind, TrainConfig, Trainer};
+use gas::sched::SchedulePolicy;
+use gas::train::trainer::{PartitionKind, RefreshBy, TrainConfig, TrainResult, Trainer};
 use gas::train::FullBatchTrainer;
 
 const DATASETS: [&str; 8] = [
@@ -34,35 +46,164 @@ fn cfg(metis: bool, reg: bool, epochs: usize) -> TrainConfig {
         history_shards: None,
         history_backing: gas::config::default_history_backing(),
         pull_depth: gas::config::default_pull_depth(),
+        sched_policy: SchedulePolicy::RoundRobin,
+        refresh_top_k: 0,
+        refresh_by: RefreshBy::Staleness,
+        push_delta_min: 0.0,
+        delta_tracking: true,
     }
 }
 
+/// One staleness-sweep arm on cora/gcnii8: full GAS settings, forced to
+/// the fully deterministic schedule (Serial + depth 1) so the arms
+/// differ ONLY in the control-loop knob under test, eval every epoch so
+/// best-val tracking has the same resolution in every arm.
+fn run_arm(
+    ctx: &mut Ctx,
+    epochs: usize,
+    mutate: impl FnOnce(&mut TrainConfig),
+) -> anyhow::Result<TrainResult> {
+    let (ds, art) = ctx.pair("cora", "cora_gcnii8_gas")?;
+    let mut c = cfg(true, true, epochs);
+    c.pipeline = PipelineMode::Serial;
+    c.pull_depth = 1;
+    c.eval_every = 1;
+    mutate(&mut c);
+    let mut t = Trainer::new(ds, art, c)?;
+    t.train()
+}
+
 fn main() -> anyhow::Result<()> {
+    let tiny = std::env::var("GAS_T2_TINY").is_ok();
     let epochs = epochs_or(30);
     let filt = filter();
     let mut ctx = Ctx::new()?;
+
+    // ---- the paper's Table 2 points table (skipped in tiny mode) -------
+    if !tiny {
+        let mut rows = Vec::new();
+        for ds_name in DATASETS {
+            if !filt.is_empty() && !ds_name.contains(&filt) {
+                continue;
+            }
+            let (ds, art) = ctx.pair(ds_name, &format!("{ds_name}_gcnii8_full"))?;
+            let mut fb = FullBatchTrainer::new(ds, art, 0.01, Some(1.0), 0.0, 0)?;
+            let full = fb.train(epochs, 2)?.test_at_best_val;
+            let mut row = vec![ds_name.to_string(), format!("{full:.4}")];
+            for (metis, reg) in [(false, false), (false, true), (true, false), (true, true)] {
+                let (ds, art) = ctx.pair(ds_name, &format!("{ds_name}_gcnii8_gas"))?;
+                let mut t = Trainer::new(ds, art, cfg(metis, reg, epochs))?;
+                let r = t.train()?;
+                row.push(format!("{:+.2}", 100.0 * (r.test_at_best_val - full)));
+            }
+            eprintln!("done {ds_name}");
+            rows.push(row);
+        }
+        print_table(
+            "Table 2: GCNII ablation (points vs full-batch; paper: Baseline < Reg/METIS < GAS ~ 0)",
+            &["dataset", "full", "Baseline", "+Reg", "+METIS", "GAS"],
+            &rows,
+        );
+    }
+
+    // ---- staleness-control sweep at equal step budget ------------------
+    let sweep_epochs = if tiny { 8 } else { epochs };
+    let b = Bencher::new(0, 1);
+    let mut reports = Vec::new();
+
+    let mut rr = None;
+    reports.push(b.run("table2 train gcnii8 cora [round-robin]", || {
+        rr = Some(run_arm(&mut ctx, sweep_epochs, |_| {}));
+    }));
+    let rr = rr.unwrap()?;
+
+    let mut stale = None;
+    reports.push(b.run("table2 train gcnii8 cora [staleness]", || {
+        stale = Some(run_arm(&mut ctx, sweep_epochs, |c| {
+            c.sched_policy = SchedulePolicy::StalenessOrdered;
+        }));
+    }));
+    let stale = stale.unwrap()?;
+
+    // delta-skip threshold: explicit env, else half the round-robin arm's
+    // layer-mean push delta — from-zero first-epoch pushes inflate that
+    // mean well above the converged per-step deltas, so late epochs are
+    // guaranteed to skip
+    let delta_min = match std::env::var("GAS_T2_DELTA_MIN") {
+        Ok(v) => v.parse::<f32>().expect("GAS_T2_DELTA_MIN must be a float"),
+        Err(_) => {
+            let mean = rr.push_delta.iter().sum::<f64>() / rr.push_delta.len().max(1) as f64;
+            (0.5 * mean) as f32
+        }
+    };
+    let mut skip = None;
+    reports.push(b.run("table2 train gcnii8 cora [delta-skip]", || {
+        skip = Some(run_arm(&mut ctx, sweep_epochs, |c| {
+            c.push_delta_min = delta_min;
+        }));
+    }));
+    let skip = skip.unwrap()?;
+
+    let refresh_k = if tiny { 64 } else { 256 };
+    let mut refresh = None;
+    reports.push(b.run("table2 train gcnii8 cora [refresh]", || {
+        refresh = Some(run_arm(&mut ctx, sweep_epochs, |c| {
+            c.refresh_top_k = refresh_k;
+            c.refresh_by = RefreshBy::Staleness;
+        }));
+    }));
+    let refresh = refresh.unwrap()?;
+
+    let last = |r: &TrainResult| r.val_acc.last().unwrap_or(0.0);
+    let skipped_total: f64 = skip.skipped_pushes.values.iter().sum();
     let mut rows = Vec::new();
-    for ds_name in DATASETS {
-        if !filt.is_empty() && !ds_name.contains(&filt) {
-            continue;
-        }
-        let (ds, art) = ctx.pair(ds_name, &format!("{ds_name}_gcnii8_full"))?;
-        let mut fb = FullBatchTrainer::new(ds, art, 0.01, Some(1.0), 0.0, 0)?;
-        let full = fb.train(epochs, 2)?.test_at_best_val;
-        let mut row = vec![ds_name.to_string(), format!("{full:.4}")];
-        for (metis, reg) in [(false, false), (false, true), (true, false), (true, true)] {
-            let (ds, art) = ctx.pair(ds_name, &format!("{ds_name}_gcnii8_gas"))?;
-            let mut t = Trainer::new(ds, art, cfg(metis, reg, epochs))?;
-            let r = t.train()?;
-            row.push(format!("{:+.2}", 100.0 * (r.test_at_best_val - full)));
-        }
-        eprintln!("done {ds_name}");
-        rows.push(row);
+    for (name, r) in [
+        ("round-robin", &rr),
+        ("staleness", &stale),
+        ("delta-skip", &skip),
+        ("refresh", &refresh),
+    ] {
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", r.steps),
+            format!("{:.4}", last(r)),
+            format!("{:.4}", r.test_at_best_val),
+            format!("{:.3}", r.staleness_epoch.last().unwrap_or(0.0)),
+            format!("{}", r.skipped_pushes.values.iter().sum::<f64>() as u64),
+            format!("{}", r.refreshed_rows),
+        ]);
     }
     print_table(
-        "Table 2: GCNII ablation (points vs full-batch; paper: Baseline < Reg/METIS < GAS ~ 0)",
-        &["dataset", "full", "Baseline", "+Reg", "+METIS", "GAS"],
+        "Table 2b: staleness control loop on cora/gcnii8 (equal step budget)",
+        &["arm", "steps", "val", "test@best", "stale(last)", "skipped", "refreshed"],
         &rows,
     );
+    for r in &reports {
+        println!("{}", r.line());
+    }
+
+    let metrics: Vec<(&str, f64)> = vec![
+        ("tiny", if tiny { 1.0 } else { 0.0 }),
+        ("epochs", sweep_epochs as f64),
+        ("rr_steps", rr.steps as f64),
+        ("rr_val_acc", last(&rr)),
+        ("rr_test_at_best_val", rr.test_at_best_val),
+        ("stale_steps", stale.steps as f64),
+        ("stale_val_acc", last(&stale)),
+        ("stale_test_at_best_val", stale.test_at_best_val),
+        ("stale_staleness_last", stale.staleness_epoch.last().unwrap_or(0.0)),
+        ("rr_staleness_last", rr.staleness_epoch.last().unwrap_or(0.0)),
+        ("skip_steps", skip.steps as f64),
+        ("skip_val_acc", last(&skip)),
+        ("skip_skipped_pushes", skipped_total),
+        ("skip_delta_min", delta_min as f64),
+        ("refresh_steps", refresh.steps as f64),
+        ("refresh_val_acc", last(&refresh)),
+        ("refresh_rows", refresh.refreshed_rows as f64),
+    ];
+    let json_path =
+        std::env::var("GAS_BENCH_JSON").unwrap_or_else(|_| "BENCH_table2.json".to_string());
+    write_bench_json(&json_path, "table2_ablation", &reports, &metrics)?;
+    eprintln!("wrote {json_path}");
     Ok(())
 }

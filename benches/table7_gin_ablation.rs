@@ -8,7 +8,8 @@ use gas::bench::{epochs_or, print_table};
 use gas::config::Ctx;
 use gas::history::PipelineMode;
 use gas::sched::batch::LabelSel;
-use gas::train::trainer::{PartitionKind, TrainConfig, Trainer};
+use gas::sched::SchedulePolicy;
+use gas::train::trainer::{PartitionKind, RefreshBy, TrainConfig, Trainer};
 use gas::train::FullBatchTrainer;
 
 fn cfg(metis: bool, reg: bool, epochs: usize) -> TrainConfig {
@@ -29,6 +30,12 @@ fn cfg(metis: bool, reg: bool, epochs: usize) -> TrainConfig {
         history_shards: None,
         history_backing: gas::config::default_history_backing(),
         pull_depth: gas::config::default_pull_depth(),
+        // the paper ablation axes only: pin the staleness control loop off
+        sched_policy: SchedulePolicy::RoundRobin,
+        refresh_top_k: 0,
+        refresh_by: RefreshBy::Staleness,
+        push_delta_min: 0.0,
+        delta_tracking: true,
     }
 }
 

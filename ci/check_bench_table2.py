@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Gate the CI bench-smoke job on BENCH_table2.json (staleness control loop).
+
+The table2 bench's staleness sweep trains cora/gcnii8 four times on the
+bit-deterministic Serial schedule (pull_depth=1) at an equal epoch budget,
+varying ONLY the control-loop knob per arm: round-robin scheduling (the
+default path), staleness-ordered scheduling, delta-skip pushes, and the
+between-epoch priority refresh. This script makes the "staleness is a
+control knob, not just a diagnostic" claim enforceable:
+
+  * equal footing — every arm must report exactly the same optimizer-step
+    count as the round-robin arm (a refresh pass or a reordered schedule
+    that sneaks in extra optimization makes the comparison meaningless);
+  * scheduling parity — staleness-ordered val accuracy must not drop more
+    than GAS_T2_MAX_ACC_DROP below round-robin at equal steps (reordering
+    epochs by accumulated halo staleness must not cost convergence);
+  * delta-skip is live AND cheap — the delta-skip arm must report > 0
+    skipped pushes (the filter actually fired; the bench's adaptive
+    threshold guarantees skippable late-epoch pushes) at a val accuracy
+    within the same tolerance, and its threshold must be positive (a 0.0
+    threshold is the exact unfiltered path — the arm tested nothing);
+  * refresh is live and free — the refresh arm must report > 0 refreshed
+    rows at a val accuracy within tolerance, on the same step budget
+    (refresh passes are forward-only; they must never tick the optimizer).
+
+Thresholds are overridable via env for local experimentation:
+
+    GAS_T2_MAX_ACC_DROP    (default 0.05 absolute val-accuracy points —
+                            the same fixed-seed, deterministic-schedule
+                            regression threshold the codec-parity gate
+                            uses; cora val accuracy lands ~0.7x)
+
+Usage: python3 ci/check_bench_table2.py [BENCH_table2.json]
+"""
+import json
+import os
+import sys
+
+# arms compared against the round-robin reference, with the liveness
+# metric proving the knob under test actually engaged
+ARMS = (
+    ("stale", "staleness-ordered scheduling", None),
+    ("skip", "delta-skip pushes", "skip_skipped_pushes"),
+    ("refresh", "priority refresh", "refresh_rows"),
+)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_table2.json"
+    with open(path) as f:
+        rec = json.load(f)
+
+    max_drop = float(os.environ.get("GAS_T2_MAX_ACC_DROP", "0.05"))
+    metrics = rec["metrics"]
+    failures = []
+
+    rr_val = metrics["rr_val_acc"]
+    rr_steps = metrics["rr_steps"]
+    print(f"round-robin: val {rr_val:.4f} @ {rr_steps:.0f} steps, "
+          f"staleness(last) {metrics['rr_staleness_last']:.3f}")
+    if rr_steps <= 0:
+        failures.append("round-robin arm reports no optimizer steps — the sweep did not run")
+
+    for key, label, liveness in ARMS:
+        val = metrics[f"{key}_val_acc"]
+        steps = metrics[f"{key}_steps"]
+        drop = rr_val - val
+        extra = ""
+        if liveness:
+            extra = f", {liveness} {metrics[liveness]:.0f}"
+        print(f"{key}: val {val:.4f} (drop {drop:+.4f}, budget {max_drop}) "
+              f"@ {steps:.0f} steps{extra}")
+        if steps != rr_steps:
+            failures.append(
+                f"{label} ran {steps:.0f} steps vs round-robin's {rr_steps:.0f} — "
+                "accuracy comparison is not at equal steps"
+            )
+        if drop > max_drop:
+            failures.append(
+                f"{label} val accuracy {val:.4f} drops {drop:.4f} below "
+                f"round-robin's {rr_val:.4f} (budget {max_drop}) — the control "
+                "loop hurts convergence"
+            )
+        if liveness and metrics[liveness] <= 0:
+            failures.append(
+                f"{label} reports {liveness} = {metrics[liveness]:.0f} — the "
+                "knob under test never engaged, the arm is vacuous"
+            )
+
+    if metrics["skip_delta_min"] <= 0.0:
+        failures.append(
+            f"delta-skip threshold {metrics['skip_delta_min']:.3e} <= 0 — "
+            "a non-positive threshold is the exact unfiltered push path, "
+            "the delta-skip arm tested nothing"
+        )
+    # the staleness curve itself must be live: an all-zero reading means
+    # the per-step staleness feedback into the tracker is dead
+    if metrics["rr_staleness_last"] <= 0.0:
+        failures.append(
+            f"round-robin final-epoch staleness {metrics['rr_staleness_last']:.3f} "
+            "<= 0 — the staleness telemetry feeding the scheduler is dead"
+        )
+
+    if failures:
+        print("\nSTALENESS CONTROL-LOOP GATE FAILED:")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("staleness control-loop gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -82,6 +82,15 @@ GATED_SUBSTRINGS = {
     "error_bounds": [
         "codec train",
     ],
+    # table2's staleness-control sweep: the four equal-budget
+    # "table2 train gcnii8 cora [<arm>]" rows (round-robin / staleness /
+    # delta-skip / refresh); accuracy parity + knob liveness are gated
+    # absolutely by check_bench_table2.py, this tracks the wall clock —
+    # the refresh row in particular, whose between-epoch forward passes
+    # are the one arm that adds real compute
+    "table2_ablation": [
+        "table2 train",
+    ],
 }
 
 

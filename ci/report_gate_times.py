@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Render the run_gate.py ledger as a markdown wall-time table.
+
+Reads the JSONL ledger written by ci/run_gate.py and appends a per-gate
+wall-time table to $GITHUB_STEP_SUMMARY (stdout when unset, so it is
+useful locally too). Designed to run with `if: always()` — it reports the
+gates that did run even when one of them failed, and a missing/empty
+ledger is a note, not an error (the job may have died before any gate).
+
+Usage: python3 ci/report_gate_times.py [gate_times.jsonl]
+"""
+import json
+import os
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else os.environ.get(
+        "GAS_GATE_TIMES", "gate_times.jsonl"
+    )
+    rows = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    rows.append(json.loads(line))
+
+    lines = ["### CI gate wall times", ""]
+    if not rows:
+        lines.append(f"_no gate timings recorded ({path} missing or empty)_")
+    else:
+        lines.append("| gate | seconds | budget (s) | used | status |")
+        lines.append("|---|---:|---:|---:|---|")
+        total = 0.0
+        for r in rows:
+            seconds, budget, rc = r["seconds"], r["budget"], r["rc"]
+            total += seconds
+            used = f"{100.0 * seconds / budget:.0f}%" if budget > 0 else "-"
+            if rc != 0:
+                status = f"FAILED (rc={rc})"
+            elif budget > 0 and seconds > budget:
+                status = "OVER BUDGET"
+            else:
+                status = "ok"
+            lines.append(
+                f"| {r['name']} | {seconds:.1f} | {budget:.0f} | {used} | {status} |"
+            )
+        lines.append(f"| **total** | **{total:.1f}** | | | |")
+    out = "\n".join(lines) + "\n"
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(out)
+    print(out, end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Run one CI gate under a wall-time budget and record how long it took.
+
+Every bench/gate step in the bench-smoke job runs through this wrapper so
+CI wall time is a *measured, budgeted* quantity instead of folklore: the
+step's duration lands in a JSONL ledger (rendered into the job summary by
+ci/report_gate_times.py), and a step that overruns its budget fails the
+job even when the gate itself passed — a silently slowing smoke is a perf
+regression in the CI product surface, caught here rather than when the
+job-level timeout-minutes starts flaking.
+
+Budgets: the per-gate default is given on the command line; the env var
+GAS_GATE_BUDGET_<NAME> (name upper-cased, '-' -> '_') overrides it, so a
+known-slow runner class can loosen one gate without editing the workflow.
+A budget <= 0 disables the overrun check (the duration is still recorded).
+
+The ledger path defaults to gate_times.jsonl; GAS_GATE_TIMES overrides.
+One JSON object per line: {"name", "seconds", "budget", "rc"}.
+
+Exit code: the wrapped command's, or 1 if the command passed but overran
+its budget.
+
+Usage: python3 ci/run_gate.py NAME DEFAULT_BUDGET_S -- cmd [args...]
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    if len(argv) < 4 or argv[2] != "--":
+        print(__doc__)
+        return 2
+    name, default_budget = argv[0], float(argv[1])
+    cmd = argv[3:]
+
+    env_key = "GAS_GATE_BUDGET_" + name.upper().replace("-", "_")
+    budget = float(os.environ.get(env_key, default_budget))
+
+    start = time.monotonic()
+    rc = subprocess.call(cmd)
+    seconds = time.monotonic() - start
+
+    ledger = os.environ.get("GAS_GATE_TIMES", "gate_times.jsonl")
+    with open(ledger, "a") as f:
+        f.write(json.dumps(
+            {"name": name, "seconds": round(seconds, 3), "budget": budget, "rc": rc}
+        ) + "\n")
+
+    status = "ok" if rc == 0 else f"rc={rc}"
+    print(f"[gate {name}] {seconds:.1f}s of {budget:.0f}s budget ({status})")
+    if rc != 0:
+        return rc
+    if budget > 0 and seconds > budget:
+        print(
+            f"[gate {name}] BUDGET OVERRUN: {seconds:.1f}s > {budget:.0f}s "
+            f"(override with {env_key}) — the gate passed but is too slow"
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

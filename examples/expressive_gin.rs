@@ -8,7 +8,8 @@
 use gas::config::Ctx;
 use gas::history::PipelineMode;
 use gas::sched::batch::LabelSel;
-use gas::train::trainer::{PartitionKind, TrainConfig, Trainer};
+use gas::sched::SchedulePolicy;
+use gas::train::trainer::{PartitionKind, RefreshBy, TrainConfig, Trainer};
 
 fn run(ctx: &mut Ctx, metis: bool, reg: bool, epochs: usize) -> anyhow::Result<(f64, f64)> {
     let (ds, art) = ctx.pair("cluster", "cluster_gin4_gas")?;
@@ -29,6 +30,13 @@ fn run(ctx: &mut Ctx, metis: bool, reg: bool, epochs: usize) -> anyhow::Result<(
         history_shards: None,
         history_backing: gas::config::default_history_backing(),
         pull_depth: gas::config::default_pull_depth(),
+        // the two paper techniques are the only toggles here: keep the
+        // staleness control loop off
+        sched_policy: SchedulePolicy::RoundRobin,
+        refresh_top_k: 0,
+        refresh_by: RefreshBy::Staleness,
+        push_delta_min: 0.0,
+        delta_tracking: true,
     };
     let mut t = Trainer::new(ds, art, cfg)?;
     let r = t.train()?;

@@ -5,7 +5,8 @@
 
 use crate::history::PipelineMode;
 use crate::sched::batch::LabelSel;
-use crate::train::trainer::{PartitionKind, TrainConfig};
+use crate::sched::scheduler::SchedulePolicy;
+use crate::train::trainer::{PartitionKind, RefreshBy, TrainConfig};
 
 /// TrainConfig preset for the naive baseline.
 pub fn naive_config(epochs: usize, lr: f32, seed: u64) -> TrainConfig {
@@ -28,6 +29,13 @@ pub fn naive_config(epochs: usize, lr: f32, seed: u64) -> TrainConfig {
         // serial I/O and no prefetch overlap: the ablated baseline keeps
         // the classic one-pull-at-a-time schedule
         pull_depth: 1,
+        // and none of the staleness control loop: classic shuffle order,
+        // no refresh pass, no delta-skip
+        sched_policy: SchedulePolicy::RoundRobin,
+        refresh_top_k: 0,
+        refresh_by: RefreshBy::Staleness,
+        push_delta_min: 0.0,
+        delta_tracking: true,
     }
 }
 
@@ -50,6 +58,11 @@ pub fn gas_config(epochs: usize, lr: f32, reg_lambda: f32, seed: u64) -> TrainCo
         history_shards: None,
         history_backing: crate::config::default_history_backing(),
         pull_depth: crate::config::default_pull_depth(),
+        sched_policy: crate::config::default_sched_policy(),
+        refresh_top_k: crate::config::default_refresh_top_k(),
+        refresh_by: crate::config::default_refresh_by(),
+        push_delta_min: crate::config::default_push_delta_min(),
+        delta_tracking: true,
     }
 }
 

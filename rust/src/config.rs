@@ -69,6 +69,80 @@ pub fn default_pull_depth() -> usize {
     }
 }
 
+/// Default epoch schedule policy: `GAS_SCHED_POLICY` env when set, else
+/// round-robin (the paper's seeded reshuffle). Garbage fails loudly; the
+/// CLI's `--sched-policy` overrides per run.
+pub fn default_sched_policy() -> crate::sched::SchedulePolicy {
+    match std::env::var("GAS_SCHED_POLICY") {
+        Err(_) => crate::sched::SchedulePolicy::RoundRobin,
+        Ok(v) => match parse_sched_policy(&v) {
+            Ok(p) => p,
+            Err(e) => panic!("GAS_SCHED_POLICY: {e}"),
+        },
+    }
+}
+
+/// Parse a schedule-policy name (`round-robin` | `staleness`) into a
+/// [`crate::sched::SchedulePolicy`].
+pub fn parse_sched_policy(name: &str) -> Result<crate::sched::SchedulePolicy> {
+    match name.to_ascii_lowercase().as_str() {
+        "round-robin" | "roundrobin" | "rr" => Ok(crate::sched::SchedulePolicy::RoundRobin),
+        "staleness" | "staleness-ordered" | "stale" => {
+            Ok(crate::sched::SchedulePolicy::StalenessOrdered)
+        }
+        other => bail!("unknown schedule policy {other:?} (expected round-robin|staleness)"),
+    }
+}
+
+/// Default between-epoch refresh budget: `GAS_REFRESH_TOP_K` env when
+/// set, else 0 (pass disabled). Garbage fails loudly; `--refresh-top-k`
+/// overrides per run.
+pub fn default_refresh_top_k() -> usize {
+    match std::env::var("GAS_REFRESH_TOP_K") {
+        Err(_) => 0,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(k) => k,
+            Err(_) => panic!("GAS_REFRESH_TOP_K must be a non-negative integer, got {v:?}"),
+        },
+    }
+}
+
+/// Default refresh ranking: `GAS_REFRESH_BY` env when set, else the
+/// staleness clocks. Garbage fails loudly; `--refresh-by` overrides.
+pub fn default_refresh_by() -> crate::train::RefreshBy {
+    match std::env::var("GAS_REFRESH_BY") {
+        Err(_) => crate::train::RefreshBy::Staleness,
+        Ok(v) => match parse_refresh_by(&v) {
+            Ok(r) => r,
+            Err(e) => panic!("GAS_REFRESH_BY: {e}"),
+        },
+    }
+}
+
+/// Parse a refresh ranking name (`staleness` | `degree`) into a
+/// [`crate::train::RefreshBy`].
+pub fn parse_refresh_by(name: &str) -> Result<crate::train::RefreshBy> {
+    match name.to_ascii_lowercase().as_str() {
+        "staleness" | "stale" => Ok(crate::train::RefreshBy::Staleness),
+        "degree" | "deg" => Ok(crate::train::RefreshBy::Degree),
+        other => bail!("unknown refresh ranking {other:?} (expected staleness|degree)"),
+    }
+}
+
+/// Default delta-skip threshold for the push applier:
+/// `GAS_PUSH_DELTA_MIN` env when set, else 0.0 (filter off — pushes stay
+/// bit-identical to the unfiltered path). Must parse to a finite value
+/// ≥ 0; garbage fails loudly. `--push-delta-min` overrides per run.
+pub fn default_push_delta_min() -> f32 {
+    match std::env::var("GAS_PUSH_DELTA_MIN") {
+        Err(_) => 0.0,
+        Ok(v) => match v.parse::<f32>() {
+            Ok(m) if m >= 0.0 && m.is_finite() => m,
+            _ => panic!("GAS_PUSH_DELTA_MIN must be a finite float >= 0, got {v:?}"),
+        },
+    }
+}
+
 /// Default history backing: `GAS_HISTORY_BACKING` env (`ram` | `mmap`)
 /// crossed with the `GAS_HISTORY_CODEC` env (`f32` | `f16` | `int8`)
 /// when set, else in-RAM f32. For `mmap`, the shard directory comes from
@@ -289,6 +363,37 @@ mod tests {
         assert!([Codec::F32, Codec::F16, Codec::Int8].contains(&codec));
         assert_eq!(parse_history_backing("ram", None).unwrap().codec(), codec);
         assert_eq!(default_history_backing().codec(), codec);
+    }
+
+    #[test]
+    fn sched_policy_parses() {
+        use crate::sched::SchedulePolicy;
+        assert_eq!(parse_sched_policy("round-robin").unwrap(), SchedulePolicy::RoundRobin);
+        assert_eq!(parse_sched_policy("RR").unwrap(), SchedulePolicy::RoundRobin);
+        assert_eq!(parse_sched_policy("staleness").unwrap(), SchedulePolicy::StalenessOrdered);
+        assert_eq!(
+            parse_sched_policy("Staleness-Ordered").unwrap(),
+            SchedulePolicy::StalenessOrdered
+        );
+        assert!(parse_sched_policy("lifo").is_err());
+        // no env manipulation (tests run in parallel): the env-derived
+        // default must be one of the two known policies
+        let p = default_sched_policy();
+        assert!([SchedulePolicy::RoundRobin, SchedulePolicy::StalenessOrdered].contains(&p));
+    }
+
+    #[test]
+    fn refresh_knobs_parse() {
+        use crate::train::RefreshBy;
+        assert_eq!(parse_refresh_by("staleness").unwrap(), RefreshBy::Staleness);
+        assert_eq!(parse_refresh_by("DEGREE").unwrap(), RefreshBy::Degree);
+        assert!(parse_refresh_by("pagerank").is_err());
+        // env-derived defaults (no env manipulation in parallel tests):
+        // whatever the operator set must be valid
+        let _ = default_refresh_by();
+        let _ = default_refresh_top_k(); // usize: any parse result is valid
+        let m = default_push_delta_min();
+        assert!(m >= 0.0 && m.is_finite());
     }
 
     #[test]

@@ -647,6 +647,30 @@ mod tests {
     }
 
     #[test]
+    fn delta_skipped_pushes_do_not_stamp_clocks() {
+        // A push dropped by the delta-skip filter wrote nothing, so it
+        // must not tick the staleness clock of the rows it skipped —
+        // through the full concurrent write-behind path, not just the
+        // store API.
+        let mut store = ShardedHistoryStore::with_shards(64, 4, 1, 4);
+        store.set_push_delta_min(0.5);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
+        let ids: Arc<[u32]> = (0..32u32).collect();
+        p.push(0, ids.clone(), vec![1.0; 32 * 4]); // delta 2.0 per row: kept
+        p.tick();
+        p.push(0, ids.clone(), vec![1.0; 32 * 4]); // delta 0: all skipped
+        p.tick();
+        p.sync();
+        p.with_store(|s| {
+            assert_eq!(s.skipped_pushes(), 32);
+            // clocks still say "last written at step 0" => staleness 2,
+            // even though a (skipped) push arrived at step 1
+            assert_eq!(s.staleness(0, &ids), 2.0);
+            assert_eq!(s.row(0, 5), vec![1.0; 4]);
+        });
+    }
+
+    #[test]
     fn buffer_pool_recycles() {
         let store = ShardedHistoryStore::with_shards(8, 2, 1, 2);
         let mut p = HistoryPipeline::new(store, PipelineMode::Serial);

@@ -193,6 +193,8 @@ struct Shard {
     step: u64,
     delta_sum: Vec<f64>,
     delta_cnt: Vec<u64>,
+    /// rows dropped by the delta-skip filter (all layers)
+    skipped: u64,
 }
 
 impl Shard {
@@ -210,6 +212,7 @@ impl Shard {
             step: 0,
             delta_sum: vec![0.0; num_layers],
             delta_cnt: vec![0; num_layers],
+            skipped: 0,
         })
     }
 
@@ -223,9 +226,23 @@ impl Shard {
     /// each shard only its own rows (pre-bucketed on the pushing thread);
     /// the backing's `scatter_rows` does the row writes (and any
     /// encoding) in one virtual call, returning the delta-probe sum, and
-    /// the staleness clocks stay here on the heap.
-    fn scatter(&mut self, l: usize, pairs: &[(u32, u32)], data: &[f32], h: usize, track: bool) {
+    /// the staleness clocks stay here on the heap. With `delta_min > 0`
+    /// the push is filtered first (see [`Shard::scatter_filtered`]);
+    /// `delta_min <= 0` keeps this exact unfiltered path, byte for byte.
+    fn scatter(
+        &mut self,
+        l: usize,
+        pairs: &[(u32, u32)],
+        data: &[f32],
+        h: usize,
+        track: bool,
+        delta_min: f32,
+    ) {
         debug_assert!(pairs.iter().all(|&(local, _)| (local as usize) < self.rows));
+        if delta_min > 0.0 {
+            self.scatter_filtered(l, pairs, data, h, track, delta_min);
+            return;
+        }
         let dsum = self.backing.scatter_rows(l, h, pairs, data, track);
         for &(local, _) in pairs {
             self.last_push[l][local as usize] = self.step;
@@ -233,6 +250,62 @@ impl Shard {
         if track {
             self.delta_sum[l] += dsum;
             self.delta_cnt[l] += pairs.len() as u64;
+        }
+    }
+
+    /// Delta-skip scatter: rows whose L2 distance to the *readable* (i.e.
+    /// decoded — matching the [`HistoryBacking::scatter_rows`] probe
+    /// contract) old row falls under `delta_min` are dropped. Skipped
+    /// rows keep their old bytes AND their old staleness clock — a push
+    /// that wrote nothing must not claim the row is fresh, or the
+    /// staleness probes would under-report exactly the rows delta-skip
+    /// touches most. The delta probe counts kept rows only, so
+    /// `mean_push_delta` stays the mean drift of rows actually written.
+    fn scatter_filtered(
+        &mut self,
+        l: usize,
+        pairs: &[(u32, u32)],
+        data: &[f32],
+        h: usize,
+        track: bool,
+        delta_min: f32,
+    ) {
+        let old_pairs: Vec<(u32, u32)> = pairs
+            .iter()
+            .enumerate()
+            .map(|(k, &(local, _))| (local, k as u32))
+            .collect();
+        let mut old = vec![0f32; pairs.len() * h];
+        self.backing.gather_rows(l, h, &old_pairs, &mut old);
+        let mut kept: Vec<(u32, u32)> = Vec::with_capacity(pairs.len());
+        let mut dsum = 0f64;
+        for (k, &(local, src)) in pairs.iter().enumerate() {
+            let row = &data[src as usize * h..(src as usize + 1) * h];
+            let prev = &old[k * h..(k + 1) * h];
+            let mut diff = 0f64;
+            for (n, o) in row.iter().zip(prev) {
+                let d = (*n - *o) as f64;
+                diff += d * d;
+            }
+            let delta = diff.sqrt();
+            if delta < delta_min as f64 {
+                self.skipped += 1;
+            } else {
+                kept.push((local, src));
+                dsum += delta;
+            }
+        }
+        if !kept.is_empty() {
+            // deltas were measured against the decoded rows above — the
+            // backing's own probe would double the work
+            self.backing.scatter_rows(l, h, &kept, data, false);
+            for &(local, _) in &kept {
+                self.last_push[l][local as usize] = self.step;
+            }
+        }
+        if track {
+            self.delta_sum[l] += dsum;
+            self.delta_cnt[l] += kept.len() as u64;
         }
     }
 }
@@ -257,6 +330,8 @@ pub struct ShardedHistoryStore {
     num_shards: usize,
     parallel: bool,
     track_deltas: bool,
+    /// pushes with row delta under this threshold are dropped (0 = off)
+    push_delta_min: f32,
     backing_kind: &'static str,
     codec: Codec,
     shards: Vec<RwLock<Shard>>,
@@ -305,6 +380,7 @@ impl ShardedHistoryStore {
             num_shards,
             parallel: true,
             track_deltas: true,
+            push_delta_min: 0.0,
             backing_kind: spec.kind(),
             codec: spec.codec(),
             shards,
@@ -322,6 +398,23 @@ impl ShardedHistoryStore {
 
     pub fn set_delta_tracking(&mut self, on: bool) {
         self.track_deltas = on;
+    }
+
+    /// Arm the delta-skip filter: pushes whose per-row
+    /// `||h_new - h_old||_2` (old = the decoded, readable row) falls
+    /// under `min` are dropped — neither the bytes nor the staleness
+    /// clock of a skipped row change. `0.0` (the default) disables the
+    /// filter and keeps the push path bit-identical to the unfiltered
+    /// store.
+    pub fn set_push_delta_min(&mut self, min: f32) {
+        assert!(min >= 0.0 && min.is_finite(), "push_delta_min must be finite and >= 0");
+        self.push_delta_min = min;
+    }
+
+    /// How many row-pushes the delta-skip filter dropped since
+    /// construction, over all shards and layers.
+    pub fn skipped_pushes(&self) -> u64 {
+        self.shards.iter().map(|s| s.read().unwrap().skipped).sum()
     }
 
     pub fn n(&self) -> usize {
@@ -531,10 +624,11 @@ impl ShardedHistoryStore {
         let h = self.h;
         let ns = self.num_shards;
         let track = self.track_deltas;
+        let dmin = self.push_delta_min;
         if ns == 1 {
             let pairs: Vec<(u32, u32)> =
                 ids.iter().enumerate().map(|(i, &id)| (id, i as u32)).collect();
-            self.shards[0].write().unwrap().scatter(l, &pairs, data, h, track);
+            self.shards[0].write().unwrap().scatter(l, &pairs, data, h, track, dmin);
             return;
         }
         // One O(|ids|) pass buckets (local_row, data_row) pairs per shard,
@@ -553,7 +647,7 @@ impl ShardedHistoryStore {
         let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
         let mut locked: Vec<&mut Shard> = guards.iter_mut().map(|g| &mut **g).collect();
         let scatter_bucket =
-            |shard: &mut Shard, bucket: &[(u32, u32)]| shard.scatter(l, bucket, data, h, track);
+            |shard: &mut Shard, bucket: &[(u32, u32)]| shard.scatter(l, bucket, data, h, track, dmin);
         if self.parallel && ids.len() >= PAR_MIN_ROWS.min(ns * 64) {
             locked
                 .par_iter_mut()
@@ -579,6 +673,33 @@ impl ShardedHistoryStore {
     /// Mean staleness (steps since last push) of given rows at layer `l`.
     pub fn staleness(&self, l: usize, ids: &[u32]) -> f64 {
         staleness_locked(&self.read_all(), self.num_shards, l, ids)
+    }
+
+    /// The `k` globally stalest rows: each row is keyed by its *worst*
+    /// (max over layers) staleness, ranked descending with ascending-id
+    /// tie-break so seeded runs pick a deterministic refresh set. One
+    /// read-guard pass over all shards — the trainer calls this once per
+    /// epoch boundary, not per step.
+    pub fn top_stale_rows(&self, k: usize) -> Vec<u32> {
+        if k == 0 || self.n == 0 {
+            return Vec::new();
+        }
+        let guards = self.read_all();
+        let ns = self.num_shards;
+        let mut rows: Vec<(u64, u32)> = (0..self.n as u32)
+            .map(|id| {
+                let g = &guards[id as usize % ns];
+                let local = id as usize / ns;
+                let worst = (0..self.num_layers)
+                    .map(|l| g.step - g.last_push[l][local])
+                    .max()
+                    .unwrap_or(0);
+                (worst, id)
+            })
+            .collect();
+        rows.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        rows.truncate(k);
+        rows.into_iter().map(|(_, id)| id).collect()
     }
 
     /// Mean ||h̄_new - h̄_old|| per push since start, per layer,
@@ -940,6 +1061,75 @@ mod tests {
     fn short_push_buffer_is_rejected_by_reference_store() {
         let mut s = HistoryStore::new(10, 4, 1);
         s.push(0, &[1, 2], &[0.0; 7]);
+    }
+
+    #[test]
+    fn delta_skip_drops_small_pushes_without_touching_clocks_or_rows() {
+        let mut s = ShardedHistoryStore::with_shards(10, 2, 1, 2);
+        s.set_push_delta_min(0.5);
+        s.tick(); // step 1: fresh stamps are now distinguishable from init
+        // row 1 moves by 5.0 (kept); row 2 moves by 0.1 (skipped)
+        s.push(0, &[1, 2], &[3.0, 4.0, 0.1, 0.0]);
+        assert_eq!(s.skipped_pushes(), 1);
+        assert_eq!(s.row(0, 1), vec![3.0, 4.0], "kept row landed");
+        assert_eq!(s.row(0, 2), vec![0.0, 0.0], "skipped row keeps old bytes");
+        assert_eq!(s.staleness(0, &[1]), 0.0, "kept row's clock stamped");
+        assert_eq!(s.staleness(0, &[2]), 1.0, "skipped row's clock untouched");
+        // the probe counts kept rows only: mean = 5.0, not (5.0 + 0.1) / 2
+        assert!((s.mean_push_delta(0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_skip_off_by_default_even_for_identical_pushes() {
+        let s = ShardedHistoryStore::with_shards(10, 2, 1, 2);
+        s.push(0, &[1], &[0.0, 0.0]); // zero delta, but no threshold armed
+        assert_eq!(s.skipped_pushes(), 0);
+        assert_eq!(s.staleness(0, &[1]), 0.0);
+    }
+
+    #[test]
+    fn delta_skip_measures_against_decoded_rows_for_quantized_backings() {
+        let spec = BackingSpec::ram().with_codec(Codec::F16);
+        let mut s = ShardedHistoryStore::with_backing(8, 4, 1, Some(2), &spec).unwrap();
+        s.set_push_delta_min(1e-3);
+        let data = [0.5f32, -1.25, 2.0, 0.75]; // exactly f16-representable
+        s.push(0, &[3], &data);
+        assert_eq!(s.skipped_pushes(), 0, "first push from zeros is kept");
+        // re-pushing the same values: decode(encode(old)) == new, delta 0
+        s.push(0, &[3], &data);
+        assert_eq!(s.skipped_pushes(), 1);
+        let mut out = vec![0f32; 4];
+        s.pull(0, &[3], &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn top_stale_rows_ranks_by_worst_layer_with_id_tie_break() {
+        let s = ShardedHistoryStore::with_shards(5, 2, 1, 2);
+        s.push(0, &[0, 1, 2, 3, 4], &[1.0; 10]);
+        s.tick(); // step 1
+        s.push(0, &[1, 3], &[2.0; 4]);
+        s.tick();
+        s.tick(); // step 3
+        s.push(0, &[3], &[3.0; 2]);
+        // staleness now: rows {0,2,4} = 3, row 1 = 2, row 3 = 0
+        assert_eq!(s.top_stale_rows(3), vec![0, 2, 4]);
+        assert_eq!(s.top_stale_rows(10), vec![0, 2, 4, 1, 3]);
+        assert_eq!(s.top_stale_rows(0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn top_stale_rows_uses_the_worst_layer_per_row() {
+        let s = ShardedHistoryStore::with_shards(3, 2, 2, 2);
+        s.push(0, &[0, 1, 2], &[1.0; 6]);
+        s.push(1, &[0, 1, 2], &[1.0; 6]);
+        s.tick();
+        s.tick(); // step 2
+        s.push(0, &[2], &[2.0; 2]); // row 2: layer 0 fresh, layer 1 stays 2-stale
+        s.push(0, &[1], &[2.0; 2]);
+        s.push(1, &[1], &[2.0; 2]); // row 1: fully fresh
+        // worst-layer keys: row 0 = 2, row 2 = 2 (layer 1), row 1 = 0
+        assert_eq!(s.top_stale_rows(3), vec![0, 2, 1]);
     }
 
     #[test]

@@ -13,6 +13,16 @@
 //!              [--history-codec f32|f16|int8]
 //!              (how history rows are encoded; f16/int8 dequantize inside
 //!              the gather, default GAS_HISTORY_CODEC, else exact f32)
+//!              [--sched-policy round-robin|staleness]
+//!              (epoch batch order: seeded reshuffle, or most-stale-first
+//!              from the previous epoch's probes; default GAS_SCHED_POLICY,
+//!              else round-robin)
+//!              [--refresh-top-k K] [--refresh-by staleness|degree]
+//!              (between-epoch priority refresh of the K worst rows;
+//!              default GAS_REFRESH_TOP_K / GAS_REFRESH_BY, else off)
+//!              [--push-delta-min X]
+//!              (drop pushes moving a row by less than X in L2; default
+//!              GAS_PUSH_DELTA_MIN, else 0 = keep every push)
 //!   gen        --dataset cora            (generate + print dataset stats)
 //!   partition  --dataset cora --parts 4  (METIS vs random quality)
 //!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
@@ -23,7 +33,9 @@ use anyhow::{bail, Result};
 use gas::backend::native::registry;
 use gas::baselines::naive_history::{gas_config, naive_config};
 use gas::baselines::ClusterGcnTrainer;
-use gas::config::{parse_history_backing, parse_history_codec, Backend, Ctx};
+use gas::config::{
+    parse_history_backing, parse_history_codec, parse_refresh_by, parse_sched_policy, Backend, Ctx,
+};
 use gas::expressive::prop3;
 use gas::memaccount::MemoryModel;
 use gas::partition::{inter_intra_ratio, metis_partition, random_partition};
@@ -100,7 +112,20 @@ fn cmd_train(args: &Args) -> Result<()> {
                 let codec = parse_history_codec(codec)?;
                 cfg.history_backing = cfg.history_backing.clone().with_codec(codec);
             }
+            // staleness-control knobs override the presets (which read the
+            // GAS_SCHED_POLICY / GAS_REFRESH_* / GAS_PUSH_DELTA_MIN envs)
+            if let Some(policy) = args.get("sched-policy") {
+                cfg.sched_policy = parse_sched_policy(policy)?;
+            }
+            cfg.refresh_top_k = args.usize_or("refresh-top-k", cfg.refresh_top_k)?;
+            if let Some(by) = args.get("refresh-by") {
+                cfg.refresh_by = parse_refresh_by(by)?;
+            }
+            cfg.push_delta_min = args.f64_or("push-delta-min", cfg.push_delta_min as f64)? as f32;
             let backing = cfg.history_backing.label();
+            let sched = cfg.sched_policy;
+            let (refresh_k, refresh_by) = (cfg.refresh_top_k, cfg.refresh_by);
+            let delta_min = cfg.push_delta_min;
             let mut tr = Trainer::new(ds, art, cfg)?;
             let r = tr.train()?;
             println!(
@@ -123,6 +148,23 @@ fn cmd_train(args: &Args) -> Result<()> {
                     "  quant err (last epoch) max={:.3e} mean={:.3e}",
                     q,
                     r.quant_err_mean.last().unwrap_or(0.0)
+                );
+            }
+            // staleness-control telemetry: only printed when a knob is on
+            // (the default path's output stays byte-identical)
+            if sched != gas::sched::SchedulePolicy::RoundRobin
+                || refresh_k > 0
+                || delta_min > 0.0
+            {
+                let skipped: f64 = r.skipped_pushes.values.iter().sum();
+                println!(
+                    "  sched [{}] staleness(last epoch)={:.3} refreshed_rows={} (top-{} by {}) skipped_pushes={}",
+                    sched.name(),
+                    r.staleness_epoch.last().unwrap_or(0.0),
+                    r.refreshed_rows,
+                    refresh_k,
+                    refresh_by.name(),
+                    skipped as u64
                 );
             }
             for (k, v) in r.buckets.entries() {

@@ -1,29 +1,133 @@
-//! Epoch scheduler: shuffled batch order with k-step prefetch lookahead
+//! Epoch scheduler: batch ordering with k-step prefetch lookahead
 //! (pairs with the concurrent history pipeline: the pull for batch t+k is
 //! requested while batch t executes, k = the trainer's `pull_depth`).
+//!
+//! Two ordering policies ([`SchedulePolicy`]):
+//!
+//! * `RoundRobin` — a fresh seeded shuffle every epoch (the classic
+//!   schedule; bit-identical to the pre-policy scheduler for the same
+//!   seed, RNG call for RNG call).
+//! * `StalenessOrdered` — each epoch's batches are ordered by the halo
+//!   staleness their pulls *actually observed* in the previous epoch,
+//!   most-stale first, fed back per step through a
+//!   [`BatchStalenessTracker`]. The worst-served batches run right after
+//!   the epoch-boundary sync, when histories are freshest ("Haste Makes
+//!   Waste": uncontrolled staleness, not sub-sampling, is the accuracy
+//!   tax of historical-embedding training). Ties break by ascending
+//!   batch index and the first epoch (no feedback yet) is the identity
+//!   order, so seeded runs are fully deterministic without touching the
+//!   RNG. `lookahead_at` semantics are unchanged — only `order` differs
+//!   — so `pull_depth`-deep prefetch works identically under both
+//!   policies.
 
 use crate::util::rng::Rng;
 
-/// Yields batch indices in a fresh random order each epoch, exposing the
-/// next batch for prefetching.
+/// How [`EpochScheduler::next_epoch`] derives each epoch's batch order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Seeded reshuffle every epoch (the default, the paper's schedule).
+    RoundRobin,
+    /// Previous epoch's accumulated per-batch halo staleness, descending;
+    /// ties by ascending batch index; identity order on the first epoch.
+    StalenessOrdered,
+}
+
+impl SchedulePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulePolicy::RoundRobin => "round-robin",
+            SchedulePolicy::StalenessOrdered => "staleness",
+        }
+    }
+}
+
+/// Per-batch staleness feedback accumulator: the trainer records each
+/// consumed pull's probe result against the batch it served; at epoch
+/// roll the accumulated scores become the next epoch's priority key.
+#[derive(Debug, Clone)]
+pub struct BatchStalenessTracker {
+    /// scores accumulating over the current epoch
+    scores: Vec<f64>,
+    /// the previous epoch's completed totals (the ordering key)
+    prev: Vec<f64>,
+}
+
+impl BatchStalenessTracker {
+    pub fn new(num_batches: usize) -> BatchStalenessTracker {
+        BatchStalenessTracker { scores: vec![0.0; num_batches], prev: vec![0.0; num_batches] }
+    }
+
+    /// Accumulate a staleness observation for `batch` (the trainer feeds
+    /// the gather-time probe of the pull that batch consumed).
+    pub fn record(&mut self, batch: usize, staleness: f64) {
+        self.scores[batch] += staleness;
+    }
+
+    /// Close the epoch: current scores become the ordering key, the
+    /// accumulator resets.
+    pub fn roll_epoch(&mut self) {
+        std::mem::swap(&mut self.prev, &mut self.scores);
+        self.scores.iter_mut().for_each(|s| *s = 0.0);
+    }
+
+    /// Batch indices by descending previous-epoch staleness, ties by
+    /// ascending index — deterministic for a given feedback history.
+    pub fn priority_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.prev.len()).collect();
+        // stable sort on the descending key keeps ascending-index ties
+        order.sort_by(|&a, &b| {
+            self.prev[b].partial_cmp(&self.prev[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order
+    }
+
+    /// The previous epoch's accumulated score of one batch.
+    pub fn prev_score(&self, batch: usize) -> f64 {
+        self.prev[batch]
+    }
+}
+
+/// Yields batch indices in a policy-derived order each epoch, exposing
+/// upcoming batches for prefetching.
 pub struct EpochScheduler {
     num_batches: usize,
     order: Vec<usize>,
     pos: usize,
     rng: Rng,
     shuffle: bool,
+    policy: SchedulePolicy,
+    tracker: BatchStalenessTracker,
 }
 
 impl EpochScheduler {
+    /// The classic round-robin scheduler (identical behaviour and RNG
+    /// stream to the pre-policy scheduler).
     pub fn new(num_batches: usize, seed: u64, shuffle: bool) -> EpochScheduler {
+        Self::with_policy(num_batches, seed, shuffle, SchedulePolicy::RoundRobin)
+    }
+
+    pub fn with_policy(
+        num_batches: usize,
+        seed: u64,
+        shuffle: bool,
+        policy: SchedulePolicy,
+    ) -> EpochScheduler {
         let mut s = EpochScheduler {
             num_batches,
             order: (0..num_batches).collect(),
             pos: 0,
             rng: Rng::new(seed),
             shuffle,
+            policy,
+            tracker: BatchStalenessTracker::new(num_batches),
         };
-        s.reshuffle();
+        match policy {
+            // preserve the historical RNG call sequence exactly: the
+            // constructor consumes one shuffle, every next_epoch another
+            SchedulePolicy::RoundRobin => s.reshuffle(),
+            // staleness ordering never touches the RNG
+            SchedulePolicy::StalenessOrdered => {}
+        }
         s
     }
 
@@ -35,9 +139,28 @@ impl EpochScheduler {
         self.pos = 0;
     }
 
-    /// Start a new epoch (new order).
+    /// Start a new epoch (new order under the configured policy).
     pub fn next_epoch(&mut self) {
-        self.reshuffle();
+        match self.policy {
+            SchedulePolicy::RoundRobin => self.reshuffle(),
+            SchedulePolicy::StalenessOrdered => {
+                // the epoch just finished supplies the ordering key
+                self.tracker.roll_epoch();
+                self.order = self.tracker.priority_order();
+                self.pos = 0;
+            }
+        }
+    }
+
+    /// Feed back the staleness a batch's consumed pull observed (no-op
+    /// key under `RoundRobin`; tracked either way so policies can be
+    /// compared on the same run).
+    pub fn record_staleness(&mut self, batch: usize, staleness: f64) {
+        self.tracker.record(batch, staleness);
+    }
+
+    pub fn policy(&self) -> SchedulePolicy {
+        self.policy
     }
 
     /// Current batch, or None at epoch end.
@@ -109,5 +232,97 @@ mod tests {
     fn no_shuffle_mode_is_sequential() {
         let s = EpochScheduler::new(5, 4, false);
         assert_eq!(s.order, vec![0, 1, 2, 3, 4]);
+    }
+
+    /// Drain one epoch, returning the order served.
+    fn drain(s: &mut EpochScheduler) -> Vec<usize> {
+        let mut seen = Vec::new();
+        while let Some(b) = s.current() {
+            seen.push(b);
+            s.advance();
+        }
+        seen
+    }
+
+    #[test]
+    fn staleness_ordered_first_epoch_is_identity() {
+        // no feedback yet: deterministic identity order, RNG untouched
+        let mut s = EpochScheduler::with_policy(6, 7, true, SchedulePolicy::StalenessOrdered);
+        assert_eq!(s.policy(), SchedulePolicy::StalenessOrdered);
+        s.next_epoch();
+        assert_eq!(drain(&mut s), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn staleness_ordered_sorts_by_feedback_with_index_tie_break() {
+        let mut s = EpochScheduler::with_policy(5, 0, true, SchedulePolicy::StalenessOrdered);
+        s.next_epoch();
+        // epoch 1 feedback: batch 3 most stale, 1 next; 0, 2, 4 tie at 0.5
+        for (b, sc) in [(0, 0.5), (1, 2.0), (2, 0.5), (3, 9.0), (4, 0.5)] {
+            s.record_staleness(b, sc);
+        }
+        s.next_epoch();
+        assert_eq!(drain(&mut s), vec![3, 1, 0, 2, 4]);
+        // no fresh feedback in epoch 2: all scores 0 -> identity again
+        s.next_epoch();
+        assert_eq!(drain(&mut s), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn staleness_ordered_is_deterministic_and_covers_every_batch_once() {
+        let run = || {
+            let mut s = EpochScheduler::with_policy(8, 42, true, SchedulePolicy::StalenessOrdered);
+            let mut orders = Vec::new();
+            for epoch in 0..4 {
+                s.next_epoch();
+                let mut seen = Vec::new();
+                while let Some(b) = s.current() {
+                    seen.push(b);
+                    // synthetic but deterministic feedback stream
+                    s.record_staleness(b, ((b * 13 + epoch * 7) % 11) as f64);
+                    s.advance();
+                }
+                let mut sorted = seen.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "epoch {epoch} is a permutation");
+                orders.push(seen);
+            }
+            orders
+        };
+        assert_eq!(run(), run(), "same seed + same feedback must replay identically");
+    }
+
+    #[test]
+    fn lookahead_is_consistent_with_reordered_sequence_at_depths_1_2_4() {
+        for policy in [SchedulePolicy::RoundRobin, SchedulePolicy::StalenessOrdered] {
+            let mut s = EpochScheduler::with_policy(9, 5, true, policy);
+            for (b, sc) in [(2usize, 4.0), (7, 3.0), (5, 8.0)] {
+                s.record_staleness(b, sc);
+            }
+            for epoch in 0..3 {
+                s.next_epoch();
+                // snapshot this epoch's order through lookahead_at alone
+                let probe: Vec<usize> = (0..9).filter_map(|k| s.lookahead_at(k)).collect();
+                assert_eq!(probe.len(), 9);
+                // lookahead_at(k) must always equal the batch served k
+                // advances later, for every depth the trainer configures
+                let mut pos = 0;
+                while let Some(b) = s.current() {
+                    assert_eq!(b, probe[pos], "{policy:?} epoch {epoch}");
+                    for depth in [1usize, 2, 4] {
+                        match s.lookahead_at(depth) {
+                            Some(nb) => assert_eq!(nb, probe[pos + depth], "depth {depth}"),
+                            None => assert!(pos + depth >= probe.len(), "depth {depth}"),
+                        }
+                    }
+                    s.record_staleness(b, ((b * 13 + epoch * 7) % 11) as f64);
+                    s.advance();
+                    pos += 1;
+                }
+                let mut sorted = probe;
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..9).collect::<Vec<_>>(), "epoch covers every batch once");
+            }
+        }
     }
 }

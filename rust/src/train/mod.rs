@@ -8,4 +8,4 @@ pub mod trainer;
 
 pub use curve::Curve;
 pub use full_batch::FullBatchTrainer;
-pub use trainer::{PartitionKind, TrainConfig, TrainResult, Trainer};
+pub use trainer::{PartitionKind, RefreshBy, TrainConfig, TrainResult, Trainer};

@@ -36,7 +36,7 @@ use crate::model::{Adam, Optimizer, ParamStore};
 use crate::partition::{metis_partition, random_partition};
 use crate::runtime::{Executor, Prepared, StepInputs};
 use crate::sched::batch::{BatchPlan, LabelSel};
-use crate::sched::scheduler::EpochScheduler;
+use crate::sched::scheduler::{EpochScheduler, SchedulePolicy};
 use crate::train::curve::Curve;
 use crate::util::rng::Rng;
 use crate::util::timer::{Buckets, Timer};
@@ -47,6 +47,27 @@ use rayon::prelude::*;
 pub enum PartitionKind {
     Metis,
     Random,
+}
+
+/// How the between-epoch priority-refresh pass picks its target rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefreshBy {
+    /// The store's staleness clocks: re-push the rows whose worst-layer
+    /// staleness is highest (the control-loop default — refresh exactly
+    /// what the probes say is most out of date).
+    Staleness,
+    /// Graph degree: re-push the highest-degree rows — the rows that
+    /// appear in the most halos, regardless of what the clocks say.
+    Degree,
+}
+
+impl RefreshBy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefreshBy::Staleness => "staleness",
+            RefreshBy::Degree => "degree",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -80,6 +101,29 @@ pub struct TrainConfig {
     /// schedule bit-for-bit; the default (2, or `GAS_PULL_DEPTH`) keeps a
     /// second gather in flight while each batch computes.
     pub pull_depth: usize,
+    /// epoch batch-order policy: seeded round-robin reshuffle (default,
+    /// the paper's schedule) or staleness-ordered — most-stale batches
+    /// first, keyed by the previous epoch's gather-time probes. See
+    /// `--sched-policy` / `GAS_SCHED_POLICY`.
+    pub sched_policy: SchedulePolicy,
+    /// between-epoch priority refresh: re-pull + re-push the batches
+    /// owning the top-K priority rows so they enter the next epoch
+    /// fresh. 0 (default) disables the pass. See `--refresh-top-k` /
+    /// `GAS_REFRESH_TOP_K`.
+    pub refresh_top_k: usize,
+    /// how the refresh pass ranks rows (staleness clocks or degree).
+    /// See `--refresh-by` / `GAS_REFRESH_BY`.
+    pub refresh_by: RefreshBy,
+    /// delta-skip threshold for the push applier: pushes whose per-row
+    /// `||h_new - h_old||_2` falls under this are dropped (bytes and
+    /// staleness clock untouched). 0 (default) disables the filter and
+    /// keeps pushes bit-identical to the unfiltered path. See
+    /// `--push-delta-min` / `GAS_PUSH_DELTA_MIN`.
+    pub push_delta_min: f32,
+    /// per-push delta probe (the empirical Theorem-2 epsilon). On by
+    /// default; disabling removes the O(h) compare from every push at
+    /// the price of `TrainResult::push_delta` reading all-zero.
+    pub delta_tracking: bool,
 }
 
 impl Default for TrainConfig {
@@ -101,6 +145,11 @@ impl Default for TrainConfig {
             history_shards: None,
             history_backing: crate::config::default_history_backing(),
             pull_depth: crate::config::default_pull_depth(),
+            sched_policy: crate::config::default_sched_policy(),
+            refresh_top_k: crate::config::default_refresh_top_k(),
+            refresh_by: crate::config::default_refresh_by(),
+            push_delta_min: crate::config::default_push_delta_min(),
+            delta_tracking: true,
         }
     }
 }
@@ -117,6 +166,15 @@ pub struct TrainResult {
     /// mean staleness (steps) of pulled rows, per layer, measured at
     /// gather time (what the consumed pulls actually saw)
     pub staleness: Vec<f64>,
+    /// per-epoch mean staleness of the consumed pulls (averaged across
+    /// layers and steps) — the curve the staleness control loop bends
+    pub staleness_epoch: Curve,
+    /// per-epoch count of row-pushes dropped by the delta-skip filter
+    /// (all-zero unless `push_delta_min > 0`)
+    pub skipped_pushes: Curve,
+    /// total rows re-pushed by the between-epoch priority-refresh pass
+    /// (0 unless `refresh_top_k > 0`)
+    pub refreshed_rows: usize,
     /// mean push delta ||h_new - h_old|| per layer (empirical epsilon)
     pub push_delta: Vec<f64>,
     /// logical history bytes (`layers * n * h * 4`), backing-independent
@@ -153,6 +211,12 @@ pub struct Trainer<'a> {
     hist_buf: Vec<f32>,
     staleness_acc: Vec<f64>,
     staleness_cnt: u64,
+    /// node -> owning batch (plan) index — the refresh pass maps its
+    /// priority rows back to the batches whose forward pass re-computes
+    /// them
+    owner: Vec<u32>,
+    /// node ids by descending degree, built lazily for `RefreshBy::Degree`
+    degree_order: Vec<u32>,
     /// per-plan cached backend statics (§Perf: avoids re-marshalling
     /// x/edges/labels — megabytes — every step)
     statics: Vec<Option<Prepared>>,
@@ -175,13 +239,15 @@ impl<'a> Trainer<'a> {
         for g in &groups {
             plans.push(BatchPlan::build_gas(ds, spec, g, cfg.label_sel)?);
         }
-        let store = ShardedHistoryStore::with_backing(
+        let mut store = ShardedHistoryStore::with_backing(
             ds.n(),
             spec.hist_dim,
             spec.hist_layers(),
             cfg.history_shards,
             &cfg.history_backing,
         )?;
+        store.set_delta_tracking(cfg.delta_tracking);
+        store.set_push_delta_min(cfg.push_delta_min);
         let mut pipeline = HistoryPipeline::with_depth(store, cfg.pipeline, cfg.pull_depth);
         // the trainer consumes the gather-time staleness probe (TrainResult
         // + the Theorem-2 error-bound harnesses); benches/eval leave it off
@@ -198,6 +264,12 @@ impl<'a> Trainer<'a> {
         let noise_dim = spec.hist_dim.max(spec.h);
         let hl = spec.hist_layers();
         let n_plans = plans.len();
+        let mut owner = vec![0u32; ds.n()];
+        for (p, plan) in plans.iter().enumerate() {
+            for &v in plan.batch_nodes.iter() {
+                owner[v as usize] = p as u32;
+            }
+        }
         Ok(Trainer {
             statics: (0..n_plans).map(|_| None).collect(),
             ds,
@@ -212,6 +284,8 @@ impl<'a> Trainer<'a> {
             hist_buf: Vec::new(),
             staleness_acc: vec![0.0; hl],
             staleness_cnt: 0,
+            owner,
+            degree_order: Vec::new(),
         })
     }
 
@@ -233,6 +307,9 @@ impl<'a> Trainer<'a> {
             test_at_best_val: 0.0,
             buckets: Buckets::new(),
             staleness: Vec::new(),
+            staleness_epoch: Curve::new("staleness_epoch"),
+            skipped_pushes: Curve::new("skipped_pushes"),
+            refreshed_rows: 0,
             push_delta: Vec::new(),
             history_bytes: self.pipeline.with_store(|s| s.bytes()),
             history_resident_bytes: 0,
@@ -243,11 +320,18 @@ impl<'a> Trainer<'a> {
             steps: 0,
         };
         let codec = self.pipeline.with_store(|s| s.codec());
-        let mut sched = EpochScheduler::new(self.plans.len(), self.cfg.seed ^ 0x5eed, self.cfg.shuffle);
+        let mut sched = EpochScheduler::with_policy(
+            self.plans.len(),
+            self.cfg.seed ^ 0x5eed,
+            self.cfg.shuffle,
+            self.cfg.sched_policy,
+        );
         let mut best_val = f64::NEG_INFINITY;
+        let mut skipped_so_far = 0u64;
         for epoch in 0..self.cfg.epochs {
             sched.next_epoch();
             let mut epoch_loss = 0f64;
+            let mut epoch_stale = 0f64;
             let mut nb = 0usize;
             // prime the software pipeline: fill every pull slot with the
             // first `pull_depth` batches of the epoch order
@@ -259,8 +343,13 @@ impl<'a> Trainer<'a> {
                 }
             }
             while let Some(b) = sched.current() {
-                let loss = self.step(b, &mut result.buckets, sched.lookahead_at(depth))?;
+                let (loss, stale) = self.step(b, &mut result.buckets, sched.lookahead_at(depth))?;
+                // close the loop: the gather-time probe of the pull this
+                // batch consumed becomes the batch's next-epoch priority
+                // (an unused key under RoundRobin)
+                sched.record_staleness(b, stale);
                 epoch_loss += loss as f64;
+                epoch_stale += stale;
                 nb += 1;
                 result.steps += 1;
                 sched.advance();
@@ -271,6 +360,12 @@ impl<'a> Trainer<'a> {
             // reads applied histories, re-bounding staleness every epoch
             self.pipeline.sync();
             result.loss.push(epoch_loss / nb.max(1) as f64);
+            result.staleness_epoch.push(epoch_stale / nb.max(1) as f64);
+            // post-sync: every queued push of the epoch went through the
+            // delta-skip filter, so the cumulative counter is stable here
+            let skipped = self.pipeline.with_store(|s| s.skipped_pushes());
+            result.skipped_pushes.push((skipped - skipped_so_far) as f64);
+            skipped_so_far = skipped;
             if codec != Codec::F32 {
                 // post-sync: every push of the epoch has been quantized by
                 // the applier, so this window is exactly one epoch of pushes
@@ -287,6 +382,12 @@ impl<'a> Trainer<'a> {
                     best_val = va;
                     result.test_at_best_val = te;
                 }
+            }
+            // priority refresh: re-push the worst rows so they enter the
+            // NEXT epoch fresh (pointless after the last epoch — eval above
+            // already read the final histories)
+            if self.cfg.refresh_top_k > 0 && epoch + 1 < self.cfg.epochs {
+                result.refreshed_rows += self.refresh_pass(&mut result.buckets)?;
             }
         }
         let hl = self.art.spec().hist_layers();
@@ -308,7 +409,15 @@ impl<'a> Trainer<'a> {
     /// One optimizer step on batch `b`. `prefetch`: the batch `pull_depth`
     /// positions ahead, whose gather is requested as soon as this batch's
     /// staged pull is claimed (keeping every pull slot full steady-state).
-    fn step(&mut self, b: usize, buckets: &mut Buckets, prefetch: Option<usize>) -> Result<f32> {
+    /// Returns `(loss, staleness)` — the latter the layer-mean gather-time
+    /// staleness of the pull this step consumed, which the train loop
+    /// feeds back to the scheduler as the batch's priority key.
+    fn step(
+        &mut self,
+        b: usize,
+        buckets: &mut Buckets,
+        prefetch: Option<usize>,
+    ) -> Result<(f32, f64)> {
         let spec = self.art.spec();
         let hl = spec.hist_layers();
         let hd = spec.hist_dim;
@@ -327,8 +436,13 @@ impl<'a> Trainer<'a> {
         // pulls in flight the store's clocks have already moved on by the
         // time the pull is consumed — probing the store here would
         // understate the staleness the model actually trained on)
+        let mut step_stale = 0f64;
         for (l, s) in pull.staleness.iter().enumerate() {
             self.staleness_acc[l] += *s;
+            step_stale += *s;
+        }
+        if !pull.staleness.is_empty() {
+            step_stale /= pull.staleness.len() as f64;
         }
         self.staleness_cnt += 1;
 
@@ -375,7 +489,77 @@ impl<'a> Trainer<'a> {
         self.pipeline.tick();
         buckets.add("push", t.elapsed_s());
 
-        Ok(out.loss)
+        Ok((out.loss, step_stale))
+    }
+
+    /// Between-epoch priority refresh (the control loop's actuator):
+    /// rank rows by staleness clock or degree, map the top-K to the
+    /// batches that own them, and run a forward pass per owning batch to
+    /// re-push its layer embeddings under the *current* weights. No
+    /// optimizer step and no clock tick — the refresh replaces stale
+    /// rows, it is not a training step, so `TrainResult::steps` and the
+    /// equal-step-budget comparisons stay honest. Returns the number of
+    /// rows re-pushed (the owning batches' full row sets — a superset of
+    /// the K target rows, since pushes are batch-granular).
+    fn refresh_pass(&mut self, buckets: &mut Buckets) -> Result<usize> {
+        let t = Timer::start();
+        let k = self.cfg.refresh_top_k;
+        let rows = match self.cfg.refresh_by {
+            RefreshBy::Staleness => self.pipeline.with_store(|s| s.top_stale_rows(k)),
+            RefreshBy::Degree => self.top_degree_rows(k),
+        };
+        let mut batches: Vec<usize> =
+            rows.iter().map(|&v| self.owner[v as usize] as usize).collect();
+        batches.sort_unstable();
+        batches.dedup();
+        let spec = self.art.spec();
+        let (hl, hd) = (spec.hist_layers(), spec.hist_dim);
+        let mut refreshed = 0usize;
+        for b in batches {
+            // histories are synced (train() just crossed the epoch
+            // barrier), so a depth-1 pull/wait pair cannot collide with
+            // the steady-state prefetch slots
+            self.pipeline.request_pull(self.plans[b].halo_nodes.clone())?;
+            let pull = self.pipeline.wait_pull()?;
+            self.plans[b].fill_hist(spec, &pull, &mut self.hist_buf);
+            self.pipeline.recycle(pull);
+            self.ensure_statics(b)?;
+            let out = self.art.run_prepared(
+                &self.params.tensors,
+                self.statics[b].as_ref().unwrap(),
+                &self.hist_buf,
+                &self.noise_buf,
+                0.0,
+            )?;
+            let plan = &self.plans[b];
+            let nb_real = plan.batch_nodes.len();
+            for l in 0..hl {
+                let mut buf = self.pipeline.take_buffer(nb_real * hd);
+                let base = l * spec.nb * hd;
+                buf.copy_from_slice(&out.push[base..base + nb_real * hd]);
+                self.pipeline.push(l, plan.batch_nodes.clone(), buf);
+            }
+            refreshed += nb_real;
+        }
+        // drain the refresh pushes so the next epoch's first pulls (and
+        // their staleness probes) see the freshened rows
+        self.pipeline.sync();
+        buckets.add("refresh", t.elapsed_s());
+        Ok(refreshed)
+    }
+
+    /// Node ids by descending degree (ascending-id tie-break), computed
+    /// once and cached — the `RefreshBy::Degree` ranking is static.
+    fn top_degree_rows(&mut self, k: usize) -> Vec<u32> {
+        if self.degree_order.is_empty() {
+            let deg = self.ds.graph.degrees_f32();
+            let mut ids: Vec<u32> = (0..self.ds.n() as u32).collect();
+            ids.sort_by(|&a, &b| {
+                deg[b as usize].total_cmp(&deg[a as usize]).then(a.cmp(&b))
+            });
+            self.degree_order = ids;
+        }
+        self.degree_order.iter().take(k).copied().collect()
     }
 
     /// Read-only access to the (synced) history store — used by the

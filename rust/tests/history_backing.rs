@@ -28,6 +28,7 @@ use gas::baselines::naive_history::gas_config;
 use gas::graph::datasets::{Dataset, Profile};
 use gas::history::quant::{f16_round, int8_decode, int8_encode_row};
 use gas::history::{BackingSpec, Codec, PipelineMode, ShardedHistoryStore};
+use gas::sched::SchedulePolicy;
 use gas::train::Trainer;
 use gas::util::prop;
 use gas::util::rng::Rng;
@@ -492,4 +493,95 @@ fn quantized_training_converges_with_bounded_error() {
         drop(tr_mm);
         let _ = std::fs::remove_dir_all(&dir);
     }
+}
+
+/// Disabling delta tracking is an observability toggle, not a numerics
+/// one: the training curves stay bit-identical, and the only change is
+/// that the per-epoch push-delta probe reads back zero (the probe cost
+/// path is actually off, not just hidden).
+#[test]
+fn disabling_delta_tracking_zeroes_the_probe_without_touching_training() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcnii", 3, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+
+    let mut tr_on = Trainer::new(&ds, &art, serial_cfg(0.02, BackingSpec::ram())).unwrap();
+    let r_on = tr_on.train().unwrap();
+    let mut cfg = serial_cfg(0.02, BackingSpec::ram());
+    cfg.delta_tracking = false;
+    let mut tr_off = Trainer::new(&ds, &art, cfg).unwrap();
+    let r_off = tr_off.train().unwrap();
+
+    assert_eq!(fbits(&r_on.loss.values), fbits(&r_off.loss.values), "loss diverged");
+    assert_eq!(fbits(&r_on.val_acc.values), fbits(&r_off.val_acc.values), "val diverged");
+    assert_eq!(fbits(&r_on.test_acc.values), fbits(&r_off.test_acc.values), "test diverged");
+    assert_eq!(fbits(&r_on.staleness), fbits(&r_off.staleness), "staleness diverged");
+    // the probe itself: live when tracking, dead zero when not
+    assert!(
+        r_on.push_delta.iter().any(|&d| d > 0.0),
+        "tracking run never measured a push delta"
+    );
+    assert!(
+        r_off.push_delta.iter().all(|&d| d == 0.0),
+        "tracking disabled but the probe still measured: {:?}",
+        r_off.push_delta
+    );
+}
+
+/// An epsilon push-delta floor (`f32::MIN_POSITIVE`) can only drop
+/// pushes whose delta is *exactly* zero — and real training steps on
+/// float embeddings never produce one — so the run must be bit-identical
+/// to the unfiltered baseline, with zero skips reported.
+#[test]
+fn epsilon_delta_floor_is_bit_identical_to_no_filtering() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcnii", 3, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+
+    let mut tr_base = Trainer::new(&ds, &art, serial_cfg(0.02, BackingSpec::ram())).unwrap();
+    let r_base = tr_base.train().unwrap();
+    let mut cfg = serial_cfg(0.02, BackingSpec::ram());
+    cfg.push_delta_min = f32::MIN_POSITIVE;
+    let mut tr_eps = Trainer::new(&ds, &art, cfg).unwrap();
+    let r_eps = tr_eps.train().unwrap();
+
+    assert_eq!(fbits(&r_base.loss.values), fbits(&r_eps.loss.values), "loss diverged");
+    assert_eq!(fbits(&r_base.val_acc.values), fbits(&r_eps.val_acc.values), "val diverged");
+    assert_eq!(fbits(&r_base.staleness), fbits(&r_eps.staleness), "staleness diverged");
+    assert_eq!(fbits(&r_base.push_delta), fbits(&r_eps.push_delta), "push delta diverged");
+    assert_eq!(
+        r_eps.skipped_pushes.values.iter().sum::<f64>(),
+        0.0,
+        "epsilon floor skipped a real push"
+    );
+}
+
+/// Staleness-ordered scheduling reorders epochs, it does not resize
+/// them: the optimizer-step budget matches round-robin exactly, the
+/// per-epoch staleness curve is fully populated, and training still
+/// converges under the reordered schedule.
+#[test]
+fn staleness_ordered_scheduling_keeps_the_step_budget() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcnii", 3, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+
+    let mut tr_rr = Trainer::new(&ds, &art, serial_cfg(0.02, BackingSpec::ram())).unwrap();
+    let r_rr = tr_rr.train().unwrap();
+    let mut cfg = serial_cfg(0.02, BackingSpec::ram());
+    cfg.sched_policy = SchedulePolicy::StalenessOrdered;
+    let epochs = cfg.epochs;
+    let mut tr_st = Trainer::new(&ds, &art, cfg).unwrap();
+    let r_st = tr_st.train().unwrap();
+
+    assert_eq!(r_st.steps, r_rr.steps, "reordering changed the step budget");
+    assert_eq!(r_st.staleness_epoch.values.len(), epochs, "staleness curve not per-epoch");
+    assert_eq!(r_st.loss.values.len(), r_rr.loss.values.len());
+    assert!(
+        r_st.loss.values.last().unwrap() < r_st.loss.values.first().unwrap(),
+        "staleness-ordered run did not converge"
+    );
 }
