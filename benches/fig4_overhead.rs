@@ -151,11 +151,11 @@ fn main() -> anyhow::Result<()> {
                     let base = l * spec.nb * spec.hist_dim;
                     buf.copy_from_slice(
                         &out.push[base..base + batch.len() * spec.hist_dim]);
-                    pipe.push(l, batch_ids.clone(), buf);
+                    pipe.push(l, batch_ids.clone(), buf).expect("push worker alive");
                 }
                 push_wait += t.elapsed_s();
             }
-            pipe.sync();
+            pipe.sync().expect("pipeline sync");
             let step_s = t_all.elapsed_s() / steps as f64;
             results.push((label, step_s, (io_wait + push_wait) / steps as f64));
         }

@@ -149,9 +149,9 @@ fn main() -> anyhow::Result<()> {
                 for _ in 0..PUSHES_PER_ITER {
                     let mut buf = pipe.take_buffer(data.len());
                     buf.copy_from_slice(&data);
-                    pipe.push(0, ids_arc.clone(), buf);
+                    pipe.push(0, ids_arc.clone(), buf).expect("push worker alive");
                 }
-                pipe.sync();
+                pipe.sync().expect("pipeline sync");
             },
         );
         hist_medians.push((label, pull_s, push_s));
@@ -484,7 +484,7 @@ fn main() -> anyhow::Result<()> {
     // baseline (depth 1, Serial mode); "pull_depth=2" overlaps gather,
     // compute and push. The speedup metric is a CI floor
     // (ci/check_bench_micro.py) and both rows feed the trajectory gate.
-    let overlap_speedup = {
+    let (overlap_speedup, serial_epoch_s) = {
         let n = if tiny { 4_000 } else { 12_000 };
         let parts = 8usize;
         let profile = gas::graph::datasets::Profile {
@@ -559,11 +559,11 @@ fn main() -> anyhow::Result<()> {
                     let mut buf = pipe.take_buffer(nb_real * hd);
                     let base = l * spec.nb * hd;
                     buf.copy_from_slice(&out.push[base..base + nb_real * hd]);
-                    pipe.push(l, plan.batch_nodes.clone(), buf);
+                    pipe.push(l, plan.batch_nodes.clone(), buf).expect("push worker alive");
                 }
-                pipe.tick();
+                pipe.tick().expect("push worker alive");
             }
-            pipe.sync();
+            pipe.sync().expect("pipeline sync");
         };
         let mut hist_buf = Vec::new();
         let mut pipe_serial = HistoryPipeline::with_depth(
@@ -592,7 +592,76 @@ fn main() -> anyhow::Result<()> {
              (CI floor ≥ 0.9x, win tracked by trajectory; threads={})",
             rayon::current_num_threads()
         );
-        speedup
+        (speedup, serial_s)
+    };
+
+    // --- checkpoint manifests: epoch-boundary save + resume load -------------
+    // The crash-tolerance tax: one manifest per epoch boundary covers
+    // params, optimizer moments and a byte-exact history snapshot. CI caps
+    // save and load against the serial pipeline-epoch median
+    // (ci/check_bench_micro.py, GAS_BENCH_MAX_CKPT_RATIO) so checkpointing
+    // can never silently double epoch cost.
+    let (ckpt_save_ratio, ckpt_load_ratio) = {
+        use gas::train::checkpoint::Checkpoint;
+        let n = if tiny { 4_000 } else { 12_000 };
+        let (h, layers) = (64usize, 2usize);
+        let store = ShardedHistoryStore::new(n, h, layers);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let data: Vec<f32> = (0..n * h).map(|i| (i % 251) as f32 * 0.01 - 1.0).collect();
+        for l in 0..layers {
+            store.push(l, &ids, &data);
+        }
+        let params: Vec<Vec<f32>> = (0..4).map(|_| vec![0.5f32; 64 * 64]).collect();
+        let dir = std::env::temp_dir().join(format!("gas-bench-ckpt-{}", std::process::id()));
+        let make = || Checkpoint {
+            epochs_done: 1,
+            seed: 0,
+            epochs: 8,
+            num_batches: 8,
+            codec: gas::history::Codec::F32,
+            backing_kind: "ram".into(),
+            num_shards: store.num_shards(),
+            params: params.clone(),
+            adam_m: params.clone(),
+            adam_v: params.clone(),
+            adam_t: 100,
+            rng: gas::util::rng::Rng::new(1).state(),
+            sched: gas::sched::EpochScheduler::new(8, 1, true).snapshot(),
+            staleness_acc: vec![1.5; layers],
+            staleness_cnt: 64,
+            curves: vec![("train_loss".into(), vec![0.5; 8])],
+            best_val: 0.5,
+            test_at_best_val: 0.5,
+            skipped_so_far: 0,
+            refreshed_rows: 0,
+            steps: 64,
+            shards: store.export_state(),
+        };
+        let ckpt_save_s = run(
+            &mut reports,
+            &format!("checkpoint save manifest n={n} h={h} [{layers} layers]"),
+            &mut || {
+                // the full epoch-boundary cost: export the (synced) shard
+                // snapshot, encode, CRC, fsync, rename
+                make().save(&dir).expect("checkpoint save");
+            },
+        );
+        let ckpt_load_s = run(
+            &mut reports,
+            &format!("checkpoint resume-load n={n} h={h} [{layers} layers]"),
+            &mut || {
+                let ck = Checkpoint::load(&dir).expect("checkpoint load").expect("present");
+                assert_eq!(ck.shards.len(), store.num_shards());
+            },
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        println!(
+            "\ncheckpoint vs serial epoch: save {:.2}x, resume-load {:.2}x of the \
+             epoch median (CI caps the save ratio)",
+            ckpt_save_s / serial_epoch_s,
+            ckpt_load_s / serial_epoch_s
+        );
+        (ckpt_save_s / serial_epoch_s, ckpt_load_s / serial_epoch_s)
     };
 
     // --- summary + JSON -------------------------------------------------------
@@ -646,6 +715,8 @@ fn main() -> anyhow::Result<()> {
         ("pull_int8_over_ram_ratio", int8_pull / sharded_pull),
         ("push_int8_over_ram_ratio", int8_push / sharded_push),
         ("pipeline_overlap_speedup", overlap_speedup),
+        ("ckpt_save_over_epoch_ratio", ckpt_save_ratio),
+        ("ckpt_load_over_epoch_ratio", ckpt_load_ratio),
     ];
     metrics.extend(gemm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));
     metrics.extend(spmm_metrics.iter().map(|(k, v)| (k.as_str(), *v)));

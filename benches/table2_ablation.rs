@@ -51,6 +51,11 @@ fn cfg(metis: bool, reg: bool, epochs: usize) -> TrainConfig {
         refresh_by: RefreshBy::Staleness,
         push_delta_min: 0.0,
         delta_tracking: true,
+        checkpoint_dir: None,
+        checkpoint_every: 1,
+        resume: false,
+        stop_after_epoch: None,
+        fault: None,
     }
 }
 

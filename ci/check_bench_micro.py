@@ -40,6 +40,12 @@ local experimentation:
                                     is allowed to cost, but not an order of
                                     magnitude — the actual trend is tracked
                                     by the trajectory gate on the codec rows)
+    GAS_BENCH_MAX_CKPT_RATIO       (default 1.0, checkpoint manifest save
+                                    and resume-load medians vs the serial
+                                    training epoch — an epoch-boundary
+                                    checkpoint may never double epoch cost,
+                                    so the whole save+restore round trip
+                                    must stay within one epoch's time)
 
 Usage: python3 ci/check_bench_micro.py [BENCH_micro.json]
 """
@@ -77,6 +83,7 @@ def main() -> int:
     step_budget_ms = float(os.environ.get("GAS_BENCH_MAX_STEP_MS", "2000"))
     overlap_floor = float(os.environ.get("GAS_BENCH_MIN_OVERLAP_SPEEDUP", "0.9"))
     codec_ratio_cap = float(os.environ.get("GAS_BENCH_MAX_CODEC_RATIO", "4.0"))
+    ckpt_ratio_cap = float(os.environ.get("GAS_BENCH_MAX_CKPT_RATIO", "1.0"))
 
     medians = {r["name"]: r["median_ms"] for r in rec["results"]}
 
@@ -178,6 +185,16 @@ def main() -> int:
         print(f"{key}: {v:.2f}x (cap {codec_ratio_cap}x)")
         if v > codec_ratio_cap:
             failures.append(f"{key} = {v:.2f}x over cap {codec_ratio_cap}x")
+
+    # crash tolerance must be near-free: writing the epoch-boundary
+    # manifest (and loading it back on resume) is gated against the cost
+    # of the epoch it protects, so checkpointing can never silently
+    # double the training loop
+    for key in ("ckpt_save_over_epoch_ratio", "ckpt_load_over_epoch_ratio"):
+        v = metrics[key]
+        print(f"{key}: {v:.3f}x of a serial epoch (cap {ckpt_ratio_cap}x)")
+        if v > ckpt_ratio_cap:
+            failures.append(f"{key} = {v:.3f}x over cap {ckpt_ratio_cap}x")
 
     # pipelined (pull_depth=2) epoch must not fall clearly behind serial
     # (loose floor; the overlap *win* is gated by the trajectory check)

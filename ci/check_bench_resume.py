@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Kill-and-resume CI gate: SIGKILL a real training run, resume it, and
+require the resumed run to land on the *bit-identical* final state of an
+uninterrupted reference run.
+
+This is the one recovery test the in-process suite cannot perform: the
+`checkpoint` integration tests simulate the kill with `stop_after_epoch`
+(a clean break inside one process), while this gate delivers an actual
+`SIGKILL` to a separate `gas train` process mid-epoch — no destructors,
+no flush-on-exit, nothing but what the epoch-boundary manifest already
+made durable. The contract under test is the tentpole claim: on the
+deterministic schedule (Serial pipeline, pull_depth=1), kill + resume
+reproduces the uninterrupted run's FINAL fingerprint line exactly —
+f64 `to_bits` of the loss/val/test curves, the step count, and CRC-32s
+over the parameter tensors and raw history bytes.
+
+Sequence:
+  1. reference: `gas train` to completion, no checkpointing; parse FINAL
+  2. victim:    same command + --checkpoint-dir; wait for the first
+                manifest to appear (>= 1 epoch made durable), then
+                os.kill(pid, SIGKILL)
+  3. resumed:   same command + --checkpoint-dir --resume, to completion
+  4. compare every FINAL field bit-for-bit; write BENCH_resume.json
+
+Env:
+    GAS_BIN             path to the gas binary (default target/release/gas)
+    GAS_RESUME_EPOCHS   training length (default 12 — long enough that the
+                        victim is still mid-run when the kill lands)
+    GAS_RESUME_TIMEOUT  per-phase wall-time cap in seconds (default 300)
+
+Usage: python3 ci/check_bench_resume.py [OUT.json]
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+TRAIN_ARGS = [
+    "train", "--dataset", "cora", "--model", "gcn2", "--mode", "gas",
+    "--lr", "0.01", "--reg", "0.02", "--seed", "7",
+    "--pipeline", "serial", "--pull-depth", "1",
+]
+
+
+def parse_final(stdout: str, who: str) -> dict:
+    for line in stdout.splitlines():
+        if line.startswith("FINAL "):
+            fields = dict(tok.split("=", 1) for tok in line.split()[1:])
+            print(f"[{who}] {line}")
+            return fields
+    print(f"[{who}] no FINAL line in output:\n{stdout}")
+    raise SystemExit(2)
+
+
+def run_to_completion(cmd, timeout: float, who: str) -> tuple:
+    start = time.monotonic()
+    proc = subprocess.run(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, timeout=timeout,
+    )
+    seconds = time.monotonic() - start
+    if proc.returncode != 0:
+        print(f"[{who}] exited rc={proc.returncode}:\n{proc.stdout}")
+        raise SystemExit(2)
+    return parse_final(proc.stdout, who), seconds
+
+
+def row(name: str, seconds: float) -> dict:
+    ms = seconds * 1e3
+    return {
+        "name": name, "iters": 1,
+        "mean_ms": ms, "std_ms": 0.0, "median_ms": ms, "min_ms": ms,
+    }
+
+
+def main() -> int:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_resume.json"
+    gas_bin = os.environ.get("GAS_BIN", "target/release/gas")
+    epochs = int(os.environ.get("GAS_RESUME_EPOCHS", "12"))
+    timeout = float(os.environ.get("GAS_RESUME_TIMEOUT", "300"))
+
+    workdir = tempfile.mkdtemp(prefix="gas-resume-gate-")
+    ck_dir = os.path.join(workdir, "ckpt")
+    manifest = os.path.join(ck_dir, "checkpoint.gask")
+    base_cmd = [gas_bin] + TRAIN_ARGS + ["--epochs", str(epochs)]
+    ck_cmd = base_cmd + ["--checkpoint-dir", ck_dir, "--checkpoint-every", "1"]
+
+    # 1. the uninterrupted reference run
+    ref, ref_s = run_to_completion(base_cmd, timeout, "reference")
+
+    # 2. the victim: SIGKILL as soon as the first manifest is durable —
+    #    mid-epoch, destructors never run, shard files possibly torn
+    start = time.monotonic()
+    victim = subprocess.Popen(
+        ck_cmd, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+    killed = False
+    while time.monotonic() - start < timeout:
+        if os.path.exists(manifest):
+            os.kill(victim.pid, signal.SIGKILL)
+            killed = True
+            break
+        if victim.poll() is not None:
+            print(
+                f"[victim] finished (rc={victim.returncode}) before a manifest "
+                f"appeared — checkpointing is not writing {manifest}"
+            )
+            return 2
+        time.sleep(0.02)
+    victim.wait(timeout=timeout)
+    kill_s = time.monotonic() - start
+    if not killed:
+        print(f"[victim] no manifest within {timeout:.0f}s — gate cannot kill")
+        return 2
+    if victim.returncode == 0:
+        print("[victim] exited cleanly despite the SIGKILL — kill landed too late")
+        return 2
+    print(f"[victim] SIGKILLed {kill_s:.2f}s in (rc={victim.returncode})")
+
+    # 3. resume from whatever the manifest captured
+    res, res_s = run_to_completion(ck_cmd + ["--resume"], timeout, "resumed")
+
+    # 4. the bit-equality verdict
+    failures = []
+    for key in ("loss_bits", "val_bits", "test_bits", "steps", "params_crc", "hist_crc"):
+        a, b = ref.get(key), res.get(key)
+        if a is None or b is None:
+            failures.append(f"{key}: missing from a FINAL line (ref={a!r} resumed={b!r})")
+        elif a != b:
+            failures.append(f"{key}: reference {a} != resumed {b}")
+
+    record = {
+        "bench": "resume",
+        "results": [
+            row("resume reference run (uninterrupted)", ref_s),
+            row("resume victim run (train to SIGKILL)", kill_s),
+            row("resume recovered run (manifest to done)", res_s),
+        ],
+        "metrics": {
+            "bit_identical": 0.0 if failures else 1.0,
+            "epochs": float(epochs),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+    if failures:
+        print("\nRESUME GATE FAILED (killed+resumed run diverged from reference):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print("resume gate passed: killed+resumed run is bit-identical to the reference")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

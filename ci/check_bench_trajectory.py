@@ -61,6 +61,15 @@ GATED_SUBSTRINGS = {
         "train step",         # the per-model end-to-end native steps
         "batch assembly",
         "pipeline epoch",     # serial + pull_depth=2 software-pipeline rows
+        "checkpoint",         # manifest save + resume-load rows: the cost
+                              # of crash tolerance is a product surface
+    ],
+    # the kill-and-resume gate's wall-clock rows (train / kill / resume
+    # phases of the tiny SIGKILL drill); the bit-equality itself is gated
+    # absolutely by check_bench_resume.py, this tracks how long the
+    # recovery drill takes
+    "resume": [
+        "",
     ],
     # fig3 emits no timed rows today (metrics only, gated absolutely by
     # check_bench_fig3.py); listing it keeps the trajectory file tracked

@@ -37,6 +37,11 @@ fn run(ctx: &mut Ctx, metis: bool, reg: bool, epochs: usize) -> anyhow::Result<(
         refresh_by: RefreshBy::Staleness,
         push_delta_min: 0.0,
         delta_tracking: true,
+        checkpoint_dir: None,
+        checkpoint_every: 1,
+        resume: false,
+        stop_after_epoch: None,
+        fault: None,
     };
     let mut t = Trainer::new(ds, art, cfg)?;
     let r = t.train()?;

@@ -36,6 +36,11 @@ pub fn naive_config(epochs: usize, lr: f32, seed: u64) -> TrainConfig {
         refresh_by: RefreshBy::Staleness,
         push_delta_min: 0.0,
         delta_tracking: true,
+        checkpoint_dir: crate::config::default_checkpoint_dir(),
+        checkpoint_every: crate::config::default_checkpoint_every(),
+        resume: crate::config::default_resume(),
+        stop_after_epoch: None,
+        fault: crate::config::default_fault(),
     }
 }
 
@@ -63,6 +68,11 @@ pub fn gas_config(epochs: usize, lr: f32, reg_lambda: f32, seed: u64) -> TrainCo
         refresh_by: crate::config::default_refresh_by(),
         push_delta_min: crate::config::default_push_delta_min(),
         delta_tracking: true,
+        checkpoint_dir: crate::config::default_checkpoint_dir(),
+        checkpoint_every: crate::config::default_checkpoint_every(),
+        resume: crate::config::default_resume(),
+        stop_after_epoch: None,
+        fault: crate::config::default_fault(),
     }
 }
 

@@ -214,6 +214,96 @@ pub fn parse_history_codec(name: &str) -> Result<crate::history::Codec> {
     }
 }
 
+/// Default checkpoint directory: `GAS_CHECKPOINT_DIR` env when set and
+/// non-empty, else None (checkpointing off). `--checkpoint-dir`
+/// overrides per run.
+pub fn default_checkpoint_dir() -> Option<PathBuf> {
+    match std::env::var("GAS_CHECKPOINT_DIR") {
+        Ok(v) if !v.is_empty() => Some(PathBuf::from(v)),
+        _ => None,
+    }
+}
+
+/// Default checkpoint cadence (epoch boundaries between manifest
+/// writes): `GAS_CHECKPOINT_EVERY` env when set, else 1. 0 clamps to 1;
+/// garbage fails loudly. `--checkpoint-every` overrides per run.
+pub fn default_checkpoint_every() -> usize {
+    match std::env::var("GAS_CHECKPOINT_EVERY") {
+        Err(_) => 1,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(k) => k.max(1),
+            Err(_) => panic!("GAS_CHECKPOINT_EVERY must be a non-negative integer, got {v:?}"),
+        },
+    }
+}
+
+/// Default resume flag: `GAS_RESUME` env (`1` | `true` | `0` | `false`)
+/// when set, else false. `--resume` overrides per run.
+pub fn default_resume() -> bool {
+    match std::env::var("GAS_RESUME") {
+        Err(_) => false,
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "1" | "true" | "yes" => true,
+            "0" | "false" | "no" | "" => false,
+            other => panic!("GAS_RESUME must be a boolean, got {other:?}"),
+        },
+    }
+}
+
+/// Crash/fault injection plan for the robustness harnesses (tests and
+/// the kill-and-resume CI gate) — `GAS_FAULT` env, parsed by
+/// [`parse_fault_plan`]. Not for production runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPlan {
+    /// Panic the history push applier while it handles the N-th push
+    /// *job* from run start (1-based; each training step enqueues one
+    /// job per history layer) — exercises the `WorkerGone` recovery
+    /// path end to end.
+    PushWorkerPanicAtStep(u64),
+    /// `std::process::abort()` immediately after the checkpoint at the
+    /// end of epoch K (1-based) — a SIGKILL stand-in: no destructors,
+    /// no flush, shard files left torn.
+    AbortAtEpoch(usize),
+    /// Truncate shard file S before the store is built (only meaningful
+    /// with an mmap backing that reopens an existing directory) —
+    /// exercises the CRC-footer detection + recovery re-zero path.
+    TruncateShard(usize),
+}
+
+/// Default fault plan: `GAS_FAULT` env when set, else None. Garbage
+/// fails loudly — a mistyped fault must not silently run clean.
+pub fn default_fault() -> Option<FaultPlan> {
+    match std::env::var("GAS_FAULT") {
+        Err(_) => None,
+        Ok(v) if v.is_empty() => None,
+        Ok(v) => match parse_fault_plan(&v) {
+            Ok(p) => Some(p),
+            Err(e) => panic!("GAS_FAULT: {e}"),
+        },
+    }
+}
+
+/// Parse a fault-plan spec: `push_worker_panic@step:N` | `abort@epoch:K`
+/// | `truncate_shard:S`.
+pub fn parse_fault_plan(spec: &str) -> Result<FaultPlan> {
+    let bad = || {
+        anyhow::anyhow!(
+            "unknown fault plan {spec:?} (expected push_worker_panic@step:N | \
+             abort@epoch:K | truncate_shard:S)"
+        )
+    };
+    let num = |s: &str| s.parse::<u64>().map_err(|_| bad());
+    if let Some(rest) = spec.strip_prefix("push_worker_panic@step:") {
+        Ok(FaultPlan::PushWorkerPanicAtStep(num(rest)?))
+    } else if let Some(rest) = spec.strip_prefix("abort@epoch:") {
+        Ok(FaultPlan::AbortAtEpoch(num(rest)? as usize))
+    } else if let Some(rest) = spec.strip_prefix("truncate_shard:") {
+        Ok(FaultPlan::TruncateShard(num(rest)? as usize))
+    } else {
+        Err(bad())
+    }
+}
+
 /// Shared run context. Executors and datasets are cached on first use
 /// (XLA compilation and graph generation are the expensive parts).
 pub struct Ctx {
@@ -394,6 +484,23 @@ mod tests {
         let _ = default_refresh_top_k(); // usize: any parse result is valid
         let m = default_push_delta_min();
         assert!(m >= 0.0 && m.is_finite());
+    }
+
+    #[test]
+    fn fault_plans_parse() {
+        assert_eq!(
+            parse_fault_plan("push_worker_panic@step:5").unwrap(),
+            FaultPlan::PushWorkerPanicAtStep(5)
+        );
+        assert_eq!(parse_fault_plan("abort@epoch:2").unwrap(), FaultPlan::AbortAtEpoch(2));
+        assert_eq!(parse_fault_plan("truncate_shard:1").unwrap(), FaultPlan::TruncateShard(1));
+        assert!(parse_fault_plan("abort@epoch:two").is_err());
+        assert!(parse_fault_plan("oom@step:3").is_err());
+        // env-derived defaults (no env manipulation in parallel tests)
+        let _ = default_fault();
+        assert!(default_checkpoint_every() >= 1);
+        let _ = default_checkpoint_dir();
+        let _ = default_resume();
     }
 
     #[test]

@@ -137,7 +137,28 @@ pub trait HistoryBacking: Send + Sync {
         QuantStats::default()
     }
     fn reset_quant_error(&mut self) {}
+    /// Restore the push-time error telemetry from a checkpoint (no-op
+    /// for exact backings, whose error is identically zero).
+    fn set_quant_error(&mut self, _stats: QuantStats) {}
+    /// Snapshot of the encoded embedding block for checkpoint manifests:
+    /// exactly the bytes [`HistoryBacking::import_bytes`] restores, in
+    /// the backing's own encoding (so a quantized snapshot costs what
+    /// the quantized shard costs, not the f32-expanded size).
+    fn export_bytes(&self) -> Vec<u8>;
+    /// Restore a block captured by [`HistoryBacking::export_bytes`] on a
+    /// backing of identical geometry and codec. Length mismatch is
+    /// `InvalidData` — the snapshot came from a different run shape.
+    fn import_bytes(&mut self, bytes: &[u8]) -> io::Result<()>;
     fn kind(&self) -> &'static str;
+}
+
+/// Shared `InvalidData` error for [`HistoryBacking::import_bytes`]
+/// geometry mismatches.
+pub(crate) fn snapshot_len_error(want: usize, got: usize) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!("history snapshot holds {got} bytes but this backing needs {want}"),
+    )
 }
 
 /// Storage medium for a backing: in-core heap or a mapped shard file.
@@ -160,12 +181,19 @@ pub enum Media {
 pub struct BackingSpec {
     pub codec: Codec,
     pub media: Media,
+    /// Recovery mode for `Media::Mmap { reopen: true, .. }`: when a shard
+    /// file fails to reopen (truncated, CRC-mismatched, bad codec
+    /// header), re-create it zeroed and report it through the `recovered`
+    /// flag instead of erroring — the store pins such shards to maximum
+    /// staleness so a refresh pass repopulates them. Off by default:
+    /// without it, corruption at reopen stays a loud error.
+    pub recover: bool,
 }
 
 impl BackingSpec {
     /// Uncompressed in-core rows (the default).
     pub fn ram() -> BackingSpec {
-        BackingSpec { codec: Codec::F32, media: Media::Ram }
+        BackingSpec { codec: Codec::F32, media: Media::Ram, recover: false }
     }
 
     /// Uncompressed mapped shard files under `dir`.
@@ -173,11 +201,17 @@ impl BackingSpec {
         BackingSpec {
             codec: Codec::F32,
             media: Media::Mmap { dir: dir.into(), reopen },
+            recover: false,
         }
     }
 
     pub fn with_codec(mut self, codec: Codec) -> BackingSpec {
         self.codec = codec;
+        self
+    }
+
+    pub fn with_recovery(mut self, recover: bool) -> BackingSpec {
+        self.recover = recover;
         self
     }
 
@@ -204,6 +238,43 @@ impl BackingSpec {
 
 /// Construct the backing for shard `shard_idx` (`rows` striped rows).
 pub fn make_backing(
+    spec: &BackingSpec,
+    shard_idx: usize,
+    rows: usize,
+    h: usize,
+    num_layers: usize,
+) -> io::Result<Box<dyn HistoryBacking>> {
+    make_backing_report(spec, shard_idx, rows, h, num_layers).map(|(b, _)| b)
+}
+
+/// Like [`make_backing`], but also reports whether the recovery mode had
+/// to re-zero this shard (`spec.recover` + a reopen failure). Only a
+/// failed *reopen* triggers recovery; an error creating a fresh file
+/// (bad directory, full disk) stays an error either way.
+pub fn make_backing_report(
+    spec: &BackingSpec,
+    shard_idx: usize,
+    rows: usize,
+    h: usize,
+    num_layers: usize,
+) -> io::Result<(Box<dyn HistoryBacking>, bool)> {
+    match build_backing(spec, shard_idx, rows, h, num_layers) {
+        Ok(b) => Ok((b, false)),
+        Err(_e)
+            if spec.recover
+                && matches!(&spec.media, Media::Mmap { reopen: true, .. }) =>
+        {
+            let mut fresh = spec.clone();
+            if let Media::Mmap { reopen, .. } = &mut fresh.media {
+                *reopen = false;
+            }
+            build_backing(&fresh, shard_idx, rows, h, num_layers).map(|b| (b, true))
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn build_backing(
     spec: &BackingSpec,
     shard_idx: usize,
     rows: usize,
@@ -270,6 +341,24 @@ impl HistoryBacking for RamBacking {
         0
     }
 
+    fn export_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn import_bytes(&mut self, bytes: &[u8]) -> io::Result<()> {
+        if bytes.len() != self.data.len() * 4 {
+            return Err(snapshot_len_error(self.data.len() * 4, bytes.len()));
+        }
+        for (v, c) in self.data.iter_mut().zip(bytes.chunks_exact(4)) {
+            *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    }
+
     fn kind(&self) -> &'static str {
         "ram"
     }
@@ -301,6 +390,25 @@ impl HistoryBacking for MmapBacking {
 
     fn mapped_bytes(&self) -> usize {
         self.map.len_bytes()
+    }
+
+    fn export_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.map.len_bytes());
+        for v in self.map.as_f32() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn import_bytes(&mut self, bytes: &[u8]) -> io::Result<()> {
+        let want = self.map.len_bytes();
+        if bytes.len() != want {
+            return Err(snapshot_len_error(want, bytes.len()));
+        }
+        for (v, c) in self.map.as_f32_mut().iter_mut().zip(bytes.chunks_exact(4)) {
+            *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
     }
 
     fn kind(&self) -> &'static str {
@@ -406,6 +514,64 @@ mod tests {
         // geometry mismatch on reopen is an error, not silent corruption
         assert!(make_backing(&reopen, 2, 5, 2, 1).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_mode_rezeroes_a_corrupt_shard_instead_of_erroring() {
+        let dir = std::env::temp_dir().join(format!("gas-backing-recover-{}", std::process::id()));
+        let fresh = BackingSpec::mmap(&dir, false);
+        let mut b = make_backing(&fresh, 0, 4, 2, 1).unwrap();
+        b.layer_mut(0).fill(3.0);
+        b.flush().unwrap();
+        drop(b);
+        // truncate the shard file: reopen without recovery stays loud
+        let path = dir.join("shard000.bin");
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(7)
+            .unwrap();
+        let reopen = BackingSpec::mmap(&dir, true);
+        assert!(make_backing(&reopen, 0, 4, 2, 1).is_err());
+        // with recovery: zeroed backing + the recovered flag
+        let (rec, recovered) =
+            make_backing_report(&reopen.clone().with_recovery(true), 0, 4, 2, 1).unwrap();
+        assert!(recovered);
+        assert!(rec.layer(0).iter().all(|&v| v == 0.0));
+        // an intact shard under the same spec is NOT flagged
+        let mut ok = make_backing(&fresh, 1, 4, 2, 1).unwrap();
+        ok.layer_mut(0).fill(1.5);
+        ok.flush().unwrap();
+        drop(ok);
+        let (kept, flag) =
+            make_backing_report(&reopen.with_recovery(true), 1, 4, 2, 1).unwrap();
+        assert!(!flag);
+        assert!(kept.layer(0).iter().all(|&v| v == 1.5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_bytes_roundtrip_bit_exact_on_exact_backings() {
+        for spec in specs() {
+            let mut a = make_backing(&spec, 3, 5, 3, 2).unwrap();
+            for l in 0..2 {
+                a.layer_mut(l)
+                    .iter_mut()
+                    .enumerate()
+                    .for_each(|(i, v)| *v = (i as f32 + 0.125) * (l as f32 - 0.5));
+            }
+            let snap = a.export_bytes();
+            assert_eq!(snap.len(), 2 * 5 * 3 * 4, "{}", spec.kind());
+            let mut b = make_backing(&spec, 4, 5, 3, 2).unwrap();
+            b.import_bytes(&snap).unwrap();
+            for l in 0..2 {
+                let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(bits(a.layer(l)), bits(b.layer(l)), "{}", spec.kind());
+            }
+            // wrong-length snapshot is rejected, not truncated
+            assert!(b.import_bytes(&snap[..snap.len() - 4]).is_err());
+        }
     }
 
     #[test]

@@ -14,15 +14,36 @@
 //! the `unsafe impl Send + Sync` below only asserts what the lock already
 //! enforces.
 
+use crate::util::crc32::crc32_par;
 use std::fs::{File, OpenOptions};
 use std::io;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Footer sidecar magic + version (`<shard>.bin.crc`, 20 bytes LE).
+const FOOTER_MAGIC: &[u8; 4] = b"GASC";
+const FOOTER_VERSION: u32 = 1;
+/// Bounded backoff for transient `msync` failures: a signal landing mid
+/// `MS_SYNC` surfaces as `EINTR`, which is a retry, not a broken barrier.
+const MAX_FLUSH_RETRIES: u32 = 8;
+
+/// Path of the CRC footer sidecar guarding `path` (`<path>.crc`). A
+/// sidecar rather than trailing bytes keeps the shard data files
+/// byte-identical to their pre-footer layout (and the mapping a whole
+/// number of f32 words).
+pub fn footer_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".crc");
+    PathBuf::from(os)
+}
 
 /// Page-aligned `f32` buffer backed by a file of exactly `len_bytes`.
 pub struct MappedFile {
     inner: Inner,
     len_bytes: usize,
     path: PathBuf,
+    /// fault hook: pending synthetic `EINTR`s the next flushes will see
+    inject_eintr: AtomicU32,
 }
 
 impl MappedFile {
@@ -37,16 +58,26 @@ impl MappedFile {
             .open(path)?;
         // a hole-backed file reads as zeros — identical to RAM zero-init
         file.set_len(len_bytes as u64)?;
+        // a footer from a previous life of this path no longer describes
+        // the (zeroed) contents; the first flush writes a fresh one
+        let _ = std::fs::remove_file(footer_path(path));
         Ok(MappedFile {
             inner: Inner::map(&file, len_bytes)?,
             len_bytes,
             path: path.to_path_buf(),
+            inject_eintr: AtomicU32::new(0),
         })
     }
 
     /// Map an existing shard file, requiring its size to match the
     /// expected geometry exactly (a mismatch means the directory holds
-    /// shards written with different `n`/`h`/layers/shard-count).
+    /// shards written with different `n`/`h`/layers/shard-count) and —
+    /// when a `.crc` footer sidecar exists — its contents to match the
+    /// CRC recorded at the last flush barrier. A missing sidecar is
+    /// accepted (pre-footer shard directories stay reopenable); a
+    /// malformed or mismatching one is corruption, reported as
+    /// `InvalidData` so callers (or the recovery mode in
+    /// [`crate::history::backing`]) can decide what to do.
     pub fn reopen(path: &Path, len_bytes: usize) -> io::Result<MappedFile> {
         assert_eq!(len_bytes % 4, 0, "mapped length must hold whole f32 rows");
         let file = OpenOptions::new().read(true).write(true).open(path)?;
@@ -61,11 +92,36 @@ impl MappedFile {
                 ),
             ));
         }
-        Ok(MappedFile {
+        let map = MappedFile {
             inner: Inner::map(&file, len_bytes)?,
             len_bytes,
             path: path.to_path_buf(),
-        })
+            inject_eintr: AtomicU32::new(0),
+        };
+        if let Some((foot_len, foot_crc)) = read_footer(&footer_path(path))? {
+            if foot_len != len_bytes as u64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "history shard {}: CRC footer describes {foot_len} bytes, \
+                         file holds {len_bytes} — torn flush",
+                        path.display()
+                    ),
+                ));
+            }
+            let got = crc32_par(map.as_bytes());
+            if got != foot_crc {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "history shard {}: CRC mismatch (footer {foot_crc:#010x}, \
+                         contents {got:#010x}) — corrupted or torn shard",
+                        path.display()
+                    ),
+                ));
+            }
+        }
+        Ok(map)
     }
 
     pub fn len_bytes(&self) -> usize {
@@ -107,9 +163,104 @@ impl MappedFile {
     /// (`madvise(MADV_DONTNEED)`) so the process's RSS no longer charges
     /// for the shard. Later reads fault pages back in from page cache or
     /// disk. On the portable fallback this rewrites the whole buffer.
+    ///
+    /// `EINTR` from the sync step is retried with bounded backoff (a
+    /// signal interrupting `MS_SYNC` writeback is transient, not a broken
+    /// barrier). After the data is durable, the shard's CRC footer sidecar
+    /// is rewritten atomically (temp + rename) so a later reopen can
+    /// distinguish a complete flush from a torn one.
     pub fn flush(&mut self) -> io::Result<()> {
+        if self.len_bytes == 0 {
+            // nothing to sync, and an empty mapping carries no footer
+            return self.inner.flush(0);
+        }
+        // CRC before MADV_DONTNEED: the pages are still resident here, so
+        // the checksum pass does not fault the whole shard back in
+        let crc = crc32_par(self.as_bytes());
+        let mut attempt = 0u32;
+        loop {
+            match self.try_flush_data() {
+                Ok(()) => break,
+                Err(e)
+                    if e.kind() == io::ErrorKind::Interrupted
+                        && attempt < MAX_FLUSH_RETRIES =>
+                {
+                    attempt += 1;
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        50u64 << attempt.min(6),
+                    ));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        write_footer(&footer_path(&self.path), self.len_bytes as u64, crc)
+    }
+
+    /// Fault hook: make the next `n` data-sync attempts inside
+    /// [`MappedFile::flush`] fail with a synthetic `EINTR`, on every
+    /// platform (the portable fallback never sees a real one). Used by the
+    /// retry tests and the `GAS_FAULT` injection plumbing.
+    pub fn inject_flush_eintr(&self, n: u32) {
+        self.inject_eintr.store(n, Ordering::SeqCst);
+    }
+
+    fn try_flush_data(&mut self) -> io::Result<()> {
+        if self.inject_eintr.load(Ordering::SeqCst) > 0 {
+            self.inject_eintr.fetch_sub(1, Ordering::SeqCst);
+            return Err(io::Error::from_raw_os_error(4)); // EINTR
+        }
         self.inner.flush(self.len_bytes)
     }
+}
+
+/// Atomically (re)write a CRC footer sidecar: magic, version, the length
+/// of the data file it describes, and the CRC-32 of those bytes.
+fn write_footer(foot: &Path, data_len: u64, crc: u32) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(20);
+    buf.extend_from_slice(FOOTER_MAGIC);
+    buf.extend_from_slice(&FOOTER_VERSION.to_le_bytes());
+    buf.extend_from_slice(&data_len.to_le_bytes());
+    buf.extend_from_slice(&crc.to_le_bytes());
+    let mut tmp = foot.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    {
+        use std::io::Write;
+        let mut f = File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, foot)
+}
+
+/// Read a footer sidecar. `Ok(None)` when the sidecar does not exist
+/// (pre-footer shard directory); `InvalidData` when it exists but is not
+/// a well-formed footer — that is corruption, not absence.
+fn read_footer(foot: &Path) -> io::Result<Option<(u64, u32)>> {
+    let bytes = match std::fs::read(foot) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let bad = |what: &str| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("shard CRC footer {}: {what}", foot.display()),
+        )
+    };
+    if bytes.len() != 20 {
+        return Err(bad(&format!("expected 20 bytes, found {}", bytes.len())));
+    }
+    if &bytes[..4] != FOOTER_MAGIC {
+        return Err(bad("bad magic"));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != FOOTER_VERSION {
+        return Err(bad(&format!("unsupported version {version}")));
+    }
+    let data_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let crc = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    Ok(Some((data_len, crc)))
 }
 
 // ---------------------------------------------------------------------------
@@ -416,6 +567,101 @@ mod tests {
         m.flush().unwrap();
         drop(m);
         let m2 = MappedFile::create(&p, 4 * 4).unwrap();
+        assert!(m2.as_f32().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn injected_eintr_is_retried_until_the_flush_lands() {
+        let p = tmp("eintr-ok.bin");
+        let mut m = MappedFile::create(&p, 32 * 4).unwrap();
+        m.as_f32_mut().iter_mut().for_each(|v| *v = 2.5);
+        m.inject_flush_eintr(3); // within the retry budget
+        m.flush().unwrap();
+        drop(m);
+        let m2 = MappedFile::reopen(&p, 32 * 4).unwrap();
+        assert!(m2.as_f32().iter().all(|&v| v == 2.5));
+    }
+
+    #[test]
+    fn eintr_beyond_the_retry_budget_surfaces() {
+        let p = tmp("eintr-bad.bin");
+        let mut m = MappedFile::create(&p, 8 * 4).unwrap();
+        m.inject_flush_eintr(MAX_FLUSH_RETRIES + 1);
+        let err = m.flush().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::Interrupted);
+        // the injected storm has passed; the next barrier succeeds
+        m.flush().unwrap();
+    }
+
+    #[test]
+    fn corrupted_shard_fails_crc_at_reopen() {
+        let p = tmp("corrupt.bin");
+        let mut m = MappedFile::create(&p, 16 * 4).unwrap();
+        m.as_f32_mut()
+            .iter_mut()
+            .enumerate()
+            .for_each(|(i, v)| *v = i as f32);
+        m.flush().unwrap();
+        drop(m);
+        let mut raw = std::fs::read(&p).unwrap();
+        raw[5] ^= 0x40; // single bit flip, length unchanged
+        std::fs::write(&p, &raw).unwrap();
+        let err = MappedFile::reopen(&p, 16 * 4).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("CRC mismatch"), "{err}");
+    }
+
+    #[test]
+    fn missing_footer_is_accepted_for_back_compat() {
+        let p = tmp("nofooter.bin");
+        let mut m = MappedFile::create(&p, 8 * 4).unwrap();
+        m.as_f32_mut().fill(1.0);
+        m.flush().unwrap();
+        drop(m);
+        std::fs::remove_file(footer_path(&p)).unwrap();
+        let m2 = MappedFile::reopen(&p, 8 * 4).unwrap();
+        assert!(m2.as_f32().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn malformed_footer_is_corruption_not_absence() {
+        let p = tmp("badfooter.bin");
+        let mut m = MappedFile::create(&p, 8 * 4).unwrap();
+        m.flush().unwrap();
+        drop(m);
+        std::fs::write(footer_path(&p), b"junk").unwrap();
+        let err = MappedFile::reopen(&p, 8 * 4).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn footer_follows_every_flush() {
+        // a reopen after a second flush must verify against the newest CRC
+        let p = tmp("refresh.bin");
+        let mut m = MappedFile::create(&p, 8 * 4).unwrap();
+        m.as_f32_mut().fill(1.0);
+        m.flush().unwrap();
+        m.as_f32_mut().fill(2.0);
+        m.flush().unwrap();
+        drop(m);
+        let m2 = MappedFile::reopen(&p, 8 * 4).unwrap();
+        assert!(m2.as_f32().iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn create_discards_stale_footers() {
+        // crash between create() and the first flush must not leave a
+        // footer describing the previous life of the path
+        let p = tmp("stalefooter.bin");
+        let mut m = MappedFile::create(&p, 8 * 4).unwrap();
+        m.as_f32_mut().fill(7.0);
+        m.flush().unwrap();
+        drop(m);
+        let _fresh = MappedFile::create(&p, 8 * 4).unwrap(); // no flush
+        drop(_fresh);
+        assert!(!footer_path(&p).exists());
+        // data file is zeroed and footerless: reopen accepts it
+        let m2 = MappedFile::reopen(&p, 8 * 4).unwrap();
         assert!(m2.as_f32().iter().all(|&v| v == 0.0));
     }
 }

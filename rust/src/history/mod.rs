@@ -35,4 +35,4 @@ pub mod store;
 pub use backing::{BackingSpec, HistoryBacking, Media, QuantStats};
 pub use pipeline::{HistoryPipeline, PipelineError, PipelineMode, PullBuffer, DEFAULT_PULL_DEPTH};
 pub use quant::Codec;
-pub use store::{HistoryStore, ShardedHistoryStore};
+pub use store::{HistoryStore, ShardState, ShardedHistoryStore};

@@ -48,8 +48,9 @@
 
 use crate::history::store::ShardedHistoryStore;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,15 +64,22 @@ pub enum PipelineMode {
 pub const DEFAULT_PULL_DEPTH: usize = 2;
 
 /// Typed pipeline misuse/failure conditions — callers schedule pulls, so
-/// queue pressure is theirs to handle (it is not a crash).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// queue pressure is theirs to handle (it is not a crash), and a dead
+/// worker or failed flush propagates as an error the trainer can turn
+/// into a clean (checkpointable) exit instead of an abort.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PipelineError {
     /// `request_pull` would exceed the configured pull depth.
     PullQueueFull { depth: usize },
     /// `wait_pull` was called with no pull in flight.
     NoPullInFlight,
-    /// A background worker died (its channel closed underneath us).
+    /// A background worker died (panicked or its channel closed
+    /// underneath us). Queued write-backs may have been lost, so the
+    /// histories are in an unknown state and the epoch cannot complete.
     WorkerGone,
+    /// The durability barrier failed: the store's backing reported an
+    /// I/O error at flush, so rows applied this epoch may not be on disk.
+    FlushFailed(String),
 }
 
 impl std::fmt::Display for PipelineError {
@@ -82,6 +90,9 @@ impl std::fmt::Display for PipelineError {
             }
             PipelineError::NoPullInFlight => write!(f, "no pull in flight"),
             PipelineError::WorkerGone => write!(f, "history worker thread is gone"),
+            PipelineError::FlushFailed(e) => {
+                write!(f, "history backing flush failed at sync barrier: {e}")
+            }
         }
     }
 }
@@ -125,6 +136,9 @@ enum Job {
 }
 
 /// Count of queued-or-running jobs; `sync` blocks until it reaches zero.
+/// Poison-proof: the count is plain data, and `end()` must keep working
+/// while a worker thread unwinds (its drop guards run the accounting),
+/// so a poisoned mutex is recovered rather than double-panicking.
 #[derive(Default)]
 struct Inflight {
     n: Mutex<usize>,
@@ -132,22 +146,96 @@ struct Inflight {
 }
 
 impl Inflight {
+    fn lock_n(&self) -> MutexGuard<'_, usize> {
+        match self.n.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     fn begin(&self) {
-        *self.n.lock().unwrap() += 1;
+        *self.lock_n() += 1;
     }
 
     fn end(&self) {
-        let mut g = self.n.lock().unwrap();
+        let mut g = self.lock_n();
         *g -= 1;
         if *g == 0 {
             self.idle.notify_all();
         }
     }
 
-    fn wait_idle(&self) {
-        let mut g = self.n.lock().unwrap();
+    /// Wait for the count to reach zero. Returns `false` if the pipeline
+    /// died and the remaining counts stopped making progress — a job can
+    /// slip into a dying worker's channel after its drain guard ran, and
+    /// nothing will ever return that count, so blocking forever would
+    /// turn a worker panic into a hung trainer. The caller reports
+    /// `WorkerGone` either way once `dead` is set.
+    fn wait_idle_unless(&self, dead: &AtomicBool) -> bool {
+        let mut g = self.lock_n();
+        let mut stable = 0u32;
         while *g > 0 {
-            g = self.idle.wait(g).unwrap();
+            let before = *g;
+            g = match self.idle.wait_timeout(g, std::time::Duration::from_millis(20)) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+            if *g > 0 && dead.load(Ordering::SeqCst) {
+                stable = if *g == before { stable + 1 } else { 0 };
+                if stable >= 3 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Per-job drop guard on the worker threads: `inflight.end()` runs even
+/// when the job's handler panics (otherwise `sync()`'s `wait_idle` would
+/// hang forever on the count the dead job never returned), and a panic
+/// marks the pipeline dead so the next `sync()`/`push()` surfaces
+/// [`PipelineError::WorkerGone`] instead of aborting the process.
+struct EndGuard<'a> {
+    inflight: &'a Inflight,
+    dead: &'a AtomicBool,
+}
+
+impl Drop for EndGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.dead.store(true, Ordering::SeqCst);
+        }
+        self.inflight.end();
+    }
+}
+
+/// Worker-exit drop guard: when a worker dies mid-queue (panic), the
+/// jobs still sitting in its channel would each leak an inflight count
+/// (hanging `sync()`) and a staging buffer. Draining them here keeps the
+/// accounting exact and returns the buffers to the pool; on a normal
+/// exit (channel closed by the pipeline's Drop) there is nothing left
+/// to drain.
+struct DrainOnExit {
+    rx: Receiver<Job>,
+    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+    inflight: Arc<Inflight>,
+    dead: Arc<AtomicBool>,
+}
+
+impl Drop for DrainOnExit {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        self.dead.store(true, Ordering::SeqCst);
+        while let Ok(job) = self.rx.try_recv() {
+            if let Job::Push { data, .. } = job {
+                if let Ok(mut pool) = self.pool.lock() {
+                    pool.push(data);
+                }
+            }
+            self.inflight.end();
         }
     }
 }
@@ -171,6 +259,12 @@ pub struct HistoryPipeline {
     /// staging-buffer pool (pinned-memory analog): recycled Vec<f32>
     pool: Arc<Mutex<Vec<Vec<f32>>>>,
     inflight: Arc<Inflight>,
+    /// set by a worker's drop guards when it panics: the engine is no
+    /// longer sound and `push`/`tick`/`sync` report `WorkerGone`
+    dead: Arc<AtomicBool>,
+    /// fault hook: countdown to an injected panic in the push applier
+    /// (0 = disarmed) — exercises the WorkerGone recovery paths
+    push_panic_in: Arc<AtomicU32>,
 }
 
 impl HistoryPipeline {
@@ -192,6 +286,8 @@ impl HistoryPipeline {
         let store = Arc::new(store);
         let pool = Arc::new(Mutex::new(Vec::new()));
         let inflight = Arc::new(Inflight::default());
+        let dead = Arc::new(AtomicBool::new(false));
+        let push_panic_in = Arc::new(AtomicU32::new(0));
         let mut workers = Vec::new();
         let mut pull_txs = Vec::new();
         let push_tx = match mode {
@@ -200,10 +296,11 @@ impl HistoryPipeline {
                 // dedicated FIFO push applier
                 let (ptx, prx) = channel::<Job>();
                 let (st, pl, inf) = (Arc::clone(&store), Arc::clone(&pool), Arc::clone(&inflight));
+                let (dd, panic_in) = (Arc::clone(&dead), Arc::clone(&push_panic_in));
                 workers.push(
                     std::thread::Builder::new()
                         .name("gas-history-push".into())
-                        .spawn(move || push_worker(prx, st, pl, inf))
+                        .spawn(move || push_worker(prx, st, pl, inf, dd, panic_in))
                         .expect("spawn history push worker"),
                 );
                 // pull stager pool: one thread per in-flight slot
@@ -211,10 +308,11 @@ impl HistoryPipeline {
                     let (gtx, grx) = channel::<Job>();
                     let (st, pl, inf) =
                         (Arc::clone(&store), Arc::clone(&pool), Arc::clone(&inflight));
+                    let dd = Arc::clone(&dead);
                     workers.push(
                         std::thread::Builder::new()
                             .name(format!("gas-history-pull-{slot}"))
-                            .spawn(move || pull_worker(grx, st, pl, inf))
+                            .spawn(move || pull_worker(grx, st, pl, inf, dd))
                             .expect("spawn history pull worker"),
                     );
                     pull_txs.push(gtx);
@@ -234,6 +332,8 @@ impl HistoryPipeline {
             probe_staleness: false,
             pool,
             inflight,
+            dead,
+            push_panic_in,
         }
     }
 
@@ -303,19 +403,37 @@ impl HistoryPipeline {
     /// push-applier thread in Concurrent mode) is also where rows are
     /// encoded — the write-behind queue doubles as the quantization
     /// stage, so the training step never spends time in the codec.
-    pub fn push(&mut self, layer: usize, ids: Arc<[u32]>, data: Vec<f32>) {
+    ///
+    /// A dead push applier is [`PipelineError::WorkerGone`], not a panic;
+    /// the unsent staging buffer is recovered into the pool either way.
+    pub fn push(
+        &mut self,
+        layer: usize,
+        ids: Arc<[u32]>,
+        data: Vec<f32>,
+    ) -> Result<(), PipelineError> {
         match self.mode {
             PipelineMode::Serial => {
                 self.store.push(layer, &ids, &data);
                 self.pool.lock().unwrap().push(data);
+                Ok(())
             }
             PipelineMode::Concurrent => {
+                if self.dead.load(Ordering::SeqCst) {
+                    self.pool.lock().unwrap().push(data);
+                    return Err(PipelineError::WorkerGone);
+                }
                 self.inflight.begin();
-                self.push_tx
-                    .as_ref()
-                    .unwrap()
-                    .send(Job::Push { layer, ids, data })
-                    .expect("history push worker alive");
+                let tx = self.push_tx.as_ref().expect("concurrent mode has a push applier");
+                if let Err(unsent) = tx.send(Job::Push { layer, ids, data }) {
+                    self.inflight.end();
+                    // the job never left this thread: reclaim its buffer
+                    if let Job::Push { data, .. } = unsent.0 {
+                        self.pool.lock().unwrap().push(data);
+                    }
+                    return Err(PipelineError::WorkerGone);
+                }
+                Ok(())
             }
         }
     }
@@ -335,32 +453,55 @@ impl HistoryPipeline {
 
     /// Drain all queued work (epoch boundary / before evaluation), then
     /// flush the store's backing — the write-behind barrier: once `sync`
-    /// returns, every requested push has been applied *and* is durable on
-    /// the shard files (mmap backings; RAM backings flush as a no-op).
-    /// A storage failure here means the durability contract is broken
-    /// mid-epoch, which nothing downstream can reason about — panic.
-    pub fn sync(&mut self) {
+    /// returns `Ok`, every requested push has been applied *and* is
+    /// durable on the shard files (mmap backings; RAM backings flush as a
+    /// no-op). A worker that died with queued write-backs, or a storage
+    /// failure at flush, breaks the durability contract for this epoch —
+    /// both surface as typed errors so the trainer can exit cleanly (the
+    /// last epoch-boundary checkpoint stays the recovery point) instead
+    /// of aborting the process.
+    pub fn sync(&mut self) -> Result<(), PipelineError> {
         if self.mode == PipelineMode::Concurrent {
-            self.inflight.wait_idle();
+            let drained = self.inflight.wait_idle_unless(&self.dead);
+            if self.dead.load(Ordering::SeqCst) || !drained {
+                return Err(PipelineError::WorkerGone);
+            }
         }
-        self.store.flush().expect("history backing flush failed at sync barrier");
+        self.store
+            .flush()
+            .map_err(|e| PipelineError::FlushFailed(e.to_string()))
     }
 
     /// Advance the staleness clock. In `Concurrent` mode the tick is
     /// queued FIFO behind the pushes of the step it closes, so queued
     /// write-backs are stamped with the step they were produced in.
-    pub fn tick(&mut self) {
+    pub fn tick(&mut self) -> Result<(), PipelineError> {
         match self.mode {
-            PipelineMode::Serial => self.store.tick(),
+            PipelineMode::Serial => {
+                self.store.tick();
+                Ok(())
+            }
             PipelineMode::Concurrent => {
+                if self.dead.load(Ordering::SeqCst) {
+                    return Err(PipelineError::WorkerGone);
+                }
                 self.inflight.begin();
-                self.push_tx
-                    .as_ref()
-                    .unwrap()
-                    .send(Job::Tick)
-                    .expect("history push worker alive");
+                let tx = self.push_tx.as_ref().expect("concurrent mode has a push applier");
+                if tx.send(Job::Tick).is_err() {
+                    self.inflight.end();
+                    return Err(PipelineError::WorkerGone);
+                }
+                Ok(())
             }
         }
+    }
+
+    /// Fault hook: make the push applier panic while handling the `n`-th
+    /// push job from now (1 = the next one). Drives the WorkerGone
+    /// recovery tests and `GAS_FAULT=push_worker_panic@step:N`. No-op in
+    /// `Serial` mode (there is no applier thread to kill).
+    pub fn inject_push_panic_at(&self, n: u32) {
+        self.push_panic_in.store(n, Ordering::SeqCst);
     }
 
     /// Read access to the store (synced callers only).
@@ -403,16 +544,35 @@ fn gather(
     PullBuffer { data: buf, num_rows: ids.len(), num_layers, h, staleness }
 }
 
-/// Applies write-backs and clock ticks strictly in arrival order.
+/// Applies write-backs and clock ticks strictly in arrival order. A
+/// panic anywhere in a job (store bug, injected fault) runs the drop
+/// guards: the job's inflight count is returned, the queue is drained,
+/// and the pipeline is marked dead — `sync()` then reports `WorkerGone`
+/// instead of hanging or aborting.
 fn push_worker(
     rx: Receiver<Job>,
     store: Arc<ShardedHistoryStore>,
     pool: Arc<Mutex<Vec<Vec<f32>>>>,
     inflight: Arc<Inflight>,
+    dead: Arc<AtomicBool>,
+    panic_in: Arc<AtomicU32>,
 ) {
-    while let Ok(job) = rx.recv() {
+    let drain = DrainOnExit {
+        rx,
+        pool: Arc::clone(&pool),
+        inflight: Arc::clone(&inflight),
+        dead: Arc::clone(&dead),
+    };
+    while let Ok(job) = drain.rx.recv() {
+        let _guard = EndGuard { inflight: &inflight, dead: &dead };
         match job {
             Job::Push { layer, ids, data } => {
+                // countdown touched only on this thread: no begin/apply race
+                if panic_in.load(Ordering::SeqCst) > 0
+                    && panic_in.fetch_sub(1, Ordering::SeqCst) == 1
+                {
+                    panic!("injected push-worker fault (push_worker_panic)");
+                }
                 store.push(layer, &ids, &data);
                 pool.lock().unwrap().push(data);
             }
@@ -422,7 +582,6 @@ fn push_worker(
                 let _ = reply.send(gather(&store, &ids, &pool, probe));
             }
         }
-        inflight.end();
     }
 }
 
@@ -432,8 +591,16 @@ fn pull_worker(
     store: Arc<ShardedHistoryStore>,
     pool: Arc<Mutex<Vec<Vec<f32>>>>,
     inflight: Arc<Inflight>,
+    dead: Arc<AtomicBool>,
 ) {
-    while let Ok(job) = rx.recv() {
+    let drain = DrainOnExit {
+        rx,
+        pool: Arc::clone(&pool),
+        inflight: Arc::clone(&inflight),
+        dead: Arc::clone(&dead),
+    };
+    while let Ok(job) = drain.rx.recv() {
+        let _guard = EndGuard { inflight: &inflight, dead: &dead };
         match job {
             Job::Pull { ids, reply, probe } => {
                 let _ = reply.send(gather(&store, &ids, &pool, probe));
@@ -444,7 +611,6 @@ fn pull_worker(
             }
             Job::Tick => store.tick(),
         }
-        inflight.end();
     }
 }
 
@@ -457,9 +623,10 @@ mod tests {
         let mut p = HistoryPipeline::new(store, mode);
         let ids: Arc<[u32]> = Arc::from([2u32, 5, 9]);
         let data: Vec<f32> = (0..12).map(|x| x as f32 + 1.0).collect();
-        p.push(0, ids.clone(), data.clone());
-        p.push(1, ids.clone(), data.iter().map(|v| v * 10.0).collect());
-        p.sync();
+        p.push(0, ids.clone(), data.clone()).unwrap();
+        p.push(1, ids.clone(), data.iter().map(|v| v * 10.0).collect())
+            .unwrap();
+        p.sync().unwrap();
         p.request_pull(ids).unwrap();
         let buf = p.wait_pull().unwrap();
         assert_eq!(buf.num_rows, 3);
@@ -491,9 +658,9 @@ mod tests {
         for step in 0..50u32 {
             let ids: Arc<[u32]> = (0..100).map(|i| (step * 7 + i) % 1000).collect();
             let data: Vec<f32> = vec![step as f32; 100 * 8];
-            p.push(0, ids, data);
+            p.push(0, ids, data).unwrap();
         }
-        p.sync();
+        p.sync().unwrap();
         p.with_store(|s| {
             // last write to row (49*7 + 0) % 1000 was value 49: the FIFO
             // push applier must preserve last-write-wins across steps
@@ -538,7 +705,7 @@ mod tests {
             for step in 0..8 {
                 for l in 0..2 {
                     let data = vec![(step * 2 + l + 1) as f32; ids.len() * 16];
-                    p.push(l, ids.clone(), data);
+                    p.push(l, ids.clone(), data).unwrap();
                 }
                 // fill every pull slot, racing the queued push burst
                 for _ in 0..depth {
@@ -568,7 +735,7 @@ mod tests {
                 }
                 floor = step_max;
             }
-            p.sync();
+            p.sync().unwrap();
             p.with_store(|s| {
                 assert!(s.row(0, 100).iter().all(|&v| v == 15.0));
                 assert!(s.row(1, 100).iter().all(|&v| v == 16.0));
@@ -586,10 +753,10 @@ mod tests {
         let store = ShardedHistoryStore::with_shards(64, 2, 1, 4);
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
         let ids: Arc<[u32]> = (0..64).collect();
-        p.push(0, ids, vec![1.0; 64 * 2]);
-        p.tick(); // closes the step of the push above
-        p.push(0, Arc::from([3u32]), vec![2.0; 2]);
-        p.sync();
+        p.push(0, ids, vec![1.0; 64 * 2]).unwrap();
+        p.tick().unwrap(); // closes the step of the push above
+        p.push(0, Arc::from([3u32]), vec![2.0; 2]).unwrap();
+        p.sync().unwrap();
         p.with_store(|s| {
             assert_eq!(s.staleness(0, &[5]), 1.0, "pre-tick push aged one step");
             assert_eq!(s.staleness(0, &[3]), 0.0, "post-tick push is fresh");
@@ -605,8 +772,8 @@ mod tests {
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
         let ids: Arc<[u32]> = Arc::from([2u32, 5, 9]);
         let data: Vec<f32> = (0..12).map(|x| x as f32 + 1.0).collect();
-        p.push(0, ids.clone(), data.clone());
-        p.sync(); // write-behind barrier: applied AND durable
+        p.push(0, ids.clone(), data.clone()).unwrap();
+        p.sync().unwrap(); // write-behind barrier: applied AND durable
         drop(p);
         // a fresh store reopening the same shard files sees the pushed rows
         let spec = BackingSpec::mmap(&dir, true);
@@ -631,8 +798,8 @@ mod tests {
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
         let ids: Arc<[u32]> = Arc::from([2u32, 5, 9]);
         let data: Vec<f32> = (0..12).map(|x| x as f32 * 0.3 - 1.0).collect();
-        p.push(0, ids.clone(), data.clone());
-        p.sync();
+        p.push(0, ids.clone(), data.clone()).unwrap();
+        p.sync().unwrap();
         // the applier thread sampled the quantization error at push
         p.with_store(|s| assert_eq!(s.quant_error().count, 12));
         drop(p);
@@ -656,11 +823,11 @@ mod tests {
         store.set_push_delta_min(0.5);
         let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
         let ids: Arc<[u32]> = (0..32u32).collect();
-        p.push(0, ids.clone(), vec![1.0; 32 * 4]); // delta 2.0 per row: kept
-        p.tick();
-        p.push(0, ids.clone(), vec![1.0; 32 * 4]); // delta 0: all skipped
-        p.tick();
-        p.sync();
+        p.push(0, ids.clone(), vec![1.0; 32 * 4]).unwrap(); // delta 2.0 per row: kept
+        p.tick().unwrap();
+        p.push(0, ids.clone(), vec![1.0; 32 * 4]).unwrap(); // delta 0: all skipped
+        p.tick().unwrap();
+        p.sync().unwrap();
         p.with_store(|s| {
             assert_eq!(s.skipped_pushes(), 32);
             // clocks still say "last written at step 0" => staleness 2,
@@ -701,5 +868,46 @@ mod tests {
         let store = ShardedHistoryStore::sequential(8, 2, 1);
         let p = HistoryPipeline::with_depth(store, PipelineMode::Serial, 0);
         assert_eq!(p.pull_depth(), 1);
+    }
+
+    #[test]
+    fn dead_push_worker_is_a_typed_error_not_an_abort() {
+        // An injected panic kills the push applier mid-burst. The drop
+        // guards must (a) keep inflight balanced so sync() returns
+        // instead of hanging, (b) surface WorkerGone rather than
+        // panicking in sync/drop (a panic there would double-panic and
+        // abort the process), and (c) recover the staging buffers of
+        // queued jobs back into the pool.
+        let store = ShardedHistoryStore::with_shards(64, 4, 1, 2);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Concurrent);
+        p.inject_push_panic_at(3);
+        let ids: Arc<[u32]> = (0..16u32).collect();
+        // Sends race the worker's death: each push either lands in the
+        // queue (Ok) or finds the channel disconnected (WorkerGone).
+        // Either way the staging buffer must come back to the pool.
+        for step in 0..8 {
+            let data = vec![step as f32; 16 * 4];
+            let _ = p.push(0, ids.clone(), data);
+        }
+        let err = p.sync().unwrap_err();
+        assert_eq!(err, PipelineError::WorkerGone);
+        // the failure latches: later barriers keep reporting it
+        assert_eq!(p.sync().unwrap_err(), PipelineError::WorkerGone);
+        // dropping the pipeline after a worker death must not panic
+        drop(p);
+    }
+
+    #[test]
+    fn serial_mode_ignores_push_fault_injection() {
+        // the injection hook counts down on the *worker thread*; in
+        // Serial mode there is no worker, so the plan is inert and the
+        // run completes normally
+        let store = ShardedHistoryStore::with_shards(16, 2, 1, 2);
+        let mut p = HistoryPipeline::new(store, PipelineMode::Serial);
+        p.inject_push_panic_at(1);
+        let ids: Arc<[u32]> = (0..8u32).collect();
+        p.push(0, ids.clone(), vec![1.0; 8 * 2]).unwrap();
+        p.sync().unwrap();
+        p.with_store(|s| assert_eq!(s.row(0, 3), vec![1.0; 2]));
     }
 }

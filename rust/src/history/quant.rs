@@ -524,6 +524,27 @@ impl HistoryBacking for QuantBacking {
         self.stats = QuantStats::default();
     }
 
+    fn set_quant_error(&mut self, stats: QuantStats) {
+        self.stats = stats;
+    }
+
+    fn export_bytes(&self) -> Vec<u8> {
+        // payload only: the codec header (mapped medium) is derived from
+        // the spec at construction, so snapshots stay medium-portable
+        let plen = self.num_layers * self.codec.layer_span_bytes(self.rows, self.h);
+        self.store.bytes()[self.payload..self.payload + plen].to_vec()
+    }
+
+    fn import_bytes(&mut self, bytes: &[u8]) -> io::Result<()> {
+        let plen = self.num_layers * self.codec.layer_span_bytes(self.rows, self.h);
+        if bytes.len() != plen {
+            return Err(super::backing::snapshot_len_error(plen, bytes.len()));
+        }
+        let off = self.payload;
+        self.store.bytes_mut()[off..off + plen].copy_from_slice(bytes);
+        Ok(())
+    }
+
     fn kind(&self) -> &'static str {
         match (&self.store, self.codec) {
             (ByteStore::Heap(_), Codec::F16) => "ram/f16",
@@ -679,6 +700,38 @@ mod tests {
     fn out_of_range_scatter_layer_panics() {
         let mut b = QuantBacking::heap(Codec::Int8, 4, 3, 2);
         b.scatter_rows(2, 3, &[(0, 0)], &[1.0, 2.0, 3.0], false);
+    }
+
+    #[test]
+    fn snapshot_payload_roundtrips_across_media() {
+        // the snapshot excludes the mapped header, so a heap-captured
+        // block restores into a mapped backing of the same codec (and
+        // vice versa) with bit-identical decoded rows
+        let dir = std::env::temp_dir().join(format!("gas-quant-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (rows, h, layers) = (5, 4, 2);
+        for codec in [Codec::F16, Codec::Int8] {
+            let mut a = QuantBacking::heap(codec, rows, h, layers);
+            let data: Vec<f32> = (0..3 * h).map(|i| (i as f32).sin() * 2.0).collect();
+            a.scatter_rows(1, h, &[(0, 0), (2, 1), (4, 2)], &data, false);
+            let snap = a.export_bytes();
+            assert_eq!(snap.len(), layers * codec.layer_span_bytes(rows, h));
+            let path = dir.join(format!("snap-{}.bin", codec.name()));
+            let mut b = QuantBacking::mapped(codec, &path, rows, h, layers, false).unwrap();
+            b.import_bytes(&snap).unwrap();
+            let mut ga = vec![0f32; 3 * h];
+            let mut gb = vec![0f32; 3 * h];
+            a.gather_rows(1, h, &[(0, 0), (2, 1), (4, 2)], &mut ga);
+            b.gather_rows(1, h, &[(0, 0), (2, 1), (4, 2)], &mut gb);
+            let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&ga), bits(&gb), "{}", codec.name());
+            assert!(b.import_bytes(&snap[1..]).is_err());
+            // telemetry restore: checkpoints carry the running stats
+            let mut c = QuantBacking::heap(codec, rows, h, layers);
+            c.set_quant_error(a.quant_error());
+            assert_eq!(c.quant_error(), a.quant_error());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

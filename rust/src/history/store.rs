@@ -36,7 +36,7 @@
 //! the per-row path while never materializing a full-precision copy of
 //! a quantized shard.
 
-use super::backing::{make_backing, BackingSpec, HistoryBacking, QuantStats};
+use super::backing::{make_backing_report, BackingSpec, HistoryBacking, QuantStats};
 use super::quant::Codec;
 use crate::memaccount::host::HistoryFootprint;
 use rayon::prelude::*;
@@ -195,6 +195,10 @@ struct Shard {
     delta_cnt: Vec<u64>,
     /// rows dropped by the delta-skip filter (all layers)
     skipped: u64,
+    /// the recovery mode re-zeroed this shard at reopen (its rows are
+    /// zeros, not history — [`ShardedHistoryStore::import_state`] pins
+    /// them to maximum staleness so a refresh pass repopulates them)
+    recovered: bool,
 }
 
 impl Shard {
@@ -205,14 +209,16 @@ impl Shard {
         h: usize,
         num_layers: usize,
     ) -> std::io::Result<Shard> {
+        let (backing, recovered) = make_backing_report(spec, idx, rows, h, num_layers)?;
         Ok(Shard {
             rows,
-            backing: make_backing(spec, idx, rows, h, num_layers)?,
+            backing,
             last_push: (0..num_layers).map(|_| vec![0u64; rows]).collect(),
             step: 0,
             delta_sum: vec![0.0; num_layers],
             delta_cnt: vec![0; num_layers],
             skipped: 0,
+            recovered,
         })
     }
 
@@ -726,6 +732,95 @@ impl ShardedHistoryStore {
             g.delta_cnt.iter_mut().for_each(|x| *x = 0);
         }
     }
+
+    /// Shards the recovery mode re-zeroed at construction (empty unless
+    /// the spec had `recover` set and a shard file failed to reopen).
+    pub fn recovered_shards(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.read().unwrap().recovered)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Consistent snapshot of every shard for a checkpoint manifest:
+    /// staleness clocks, probe accumulators, push-time quantization
+    /// telemetry, and the encoded embedding block, captured under one
+    /// all-shard read-guard pass (so no push can interleave).
+    pub fn export_state(&self) -> Vec<ShardState> {
+        self.read_all()
+            .iter()
+            .map(|g| ShardState {
+                step: g.step,
+                last_push: g.last_push.clone(),
+                delta_sum: g.delta_sum.clone(),
+                delta_cnt: g.delta_cnt.clone(),
+                skipped: g.skipped,
+                quant: g.backing.quant_error(),
+                bytes: g.backing.export_bytes(),
+            })
+            .collect()
+    }
+
+    /// Restore a snapshot captured by [`Self::export_state`] on a store
+    /// of identical geometry (n, h, layers, shard count, codec). Shards
+    /// the recovery mode re-zeroed get their clocks restored but keep
+    /// zeroed rows and `last_push = 0` — at the restored `step` that
+    /// reads as maximum staleness, so staleness-aware scheduling and the
+    /// refresh pass target exactly the lost rows.
+    pub fn import_state(&self, states: Vec<ShardState>) -> std::io::Result<()> {
+        let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        if states.len() != self.num_shards {
+            return Err(bad(format!(
+                "history snapshot holds {} shards but this store stripes {}",
+                states.len(),
+                self.num_shards
+            )));
+        }
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        for (idx, (g, st)) in guards.iter_mut().zip(states).enumerate() {
+            if st.last_push.len() != self.num_layers
+                || st.last_push.iter().any(|v| v.len() != g.rows)
+                || st.delta_sum.len() != self.num_layers
+                || st.delta_cnt.len() != self.num_layers
+            {
+                return Err(bad(format!(
+                    "history snapshot shard {idx} does not match this store's \
+                     geometry ({} layers, {} rows)",
+                    self.num_layers, g.rows
+                )));
+            }
+            g.step = st.step;
+            g.delta_sum = st.delta_sum;
+            g.delta_cnt = st.delta_cnt;
+            g.skipped = st.skipped;
+            if g.recovered {
+                // rows are zeros, not the snapshot: leave last_push at 0
+                // (staleness = step, the maximum) and the telemetry clean
+                continue;
+            }
+            g.last_push = st.last_push;
+            g.backing.import_bytes(&st.bytes)?;
+            g.backing.set_quant_error(st.quant);
+        }
+        Ok(())
+    }
+}
+
+/// Serializable snapshot of one shard (see
+/// [`ShardedHistoryStore::export_state`]): the staleness clocks and probe
+/// accumulators plus the embedding block in the backing's own encoding —
+/// everything a resumed run needs to continue bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardState {
+    pub step: u64,
+    pub last_push: Vec<Vec<u64>>,
+    pub delta_sum: Vec<f64>,
+    pub delta_cnt: Vec<u64>,
+    pub skipped: u64,
+    pub quant: QuantStats,
+    pub bytes: Vec<u8>,
 }
 
 /// Mean staleness of `ids` at layer `l` over already-held shard guards.
@@ -1130,6 +1225,78 @@ mod tests {
         s.push(1, &[1], &[2.0; 2]); // row 1: fully fresh
         // worst-layer keys: row 0 = 2, row 2 = 2 (layer 1), row 1 = 0
         assert_eq!(s.top_stale_rows(3), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn shard_state_roundtrips_rows_clocks_and_probes_bit_exactly() {
+        for codec in [Codec::F32, Codec::F16, Codec::Int8] {
+            let spec = BackingSpec::ram().with_codec(codec);
+            let a = ShardedHistoryStore::with_backing(33, 4, 2, Some(3), &spec).unwrap();
+            let mut rng = Rng::new(11);
+            for step in 0..12 {
+                let l = step % 2;
+                let k = 1 + rng.below(20);
+                let ids: Vec<u32> = (0..k).map(|_| rng.below(33) as u32).collect();
+                let data: Vec<f32> = (0..k * 4).map(|_| rng.normal_f32()).collect();
+                a.push(l, &ids, &data);
+                a.tick();
+            }
+            let snap = a.export_state();
+            assert_eq!(snap.len(), 3);
+            let b = ShardedHistoryStore::with_backing(33, 4, 2, Some(3), &spec).unwrap();
+            b.import_state(snap).unwrap();
+            let all: Vec<u32> = (0..33u32).collect();
+            let mut ra = vec![0f32; 2 * 33 * 4];
+            let mut rb = vec![0f32; 2 * 33 * 4];
+            let sa = a.pull_all_with_staleness(&all, &mut ra);
+            let sb = b.pull_all_with_staleness(&all, &mut rb);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&ra), bits(&rb), "[{}] rows diverged", codec.name());
+            assert_eq!(sa, sb, "[{}] staleness diverged", codec.name());
+            assert_eq!(a.quant_error(), b.quant_error(), "[{}]", codec.name());
+            assert_eq!(a.mean_push_delta(0), b.mean_push_delta(0));
+            assert_eq!(a.top_stale_rows(5), b.top_stale_rows(5));
+            // wrong shard count is a loud error, not silent misstriping
+            let c = ShardedHistoryStore::with_backing(33, 4, 2, Some(4), &spec).unwrap();
+            assert!(c.import_state(a.export_state()).is_err());
+        }
+    }
+
+    #[test]
+    fn recovered_shards_are_pinned_to_max_staleness_on_import() {
+        let dir = std::env::temp_dir().join(format!("gas-store-recover-{}", std::process::id()));
+        let spec = BackingSpec::mmap(&dir, false);
+        let a = ShardedHistoryStore::with_backing(8, 2, 1, Some(2), &spec).unwrap();
+        let all: Vec<u32> = (0..8u32).collect();
+        a.push(0, &all, &[1.5; 16]);
+        a.tick();
+        let even: Vec<u32> = (0..8u32).filter(|i| i % 2 == 0).collect();
+        a.push(0, &even, &[2.5; 8]); // shard-0 rows refreshed at step 1
+        a.tick(); // step 2
+        let snap = a.export_state();
+        a.flush().unwrap();
+        drop(a);
+        // corrupt shard 1's file, then reopen with recovery
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(dir.join("shard001.bin"))
+            .unwrap()
+            .set_len(3)
+            .unwrap();
+        let spec_rec = BackingSpec::mmap(&dir, true).with_recovery(true);
+        let b = ShardedHistoryStore::with_backing(8, 2, 1, Some(2), &spec_rec).unwrap();
+        assert_eq!(b.recovered_shards(), vec![1]);
+        b.import_state(snap).unwrap();
+        // shard 0 rows survive with their true staleness; shard 1 rows
+        // (odd ids) are zeroed and read as maximally stale
+        assert_eq!(b.row(0, 0), vec![2.5, 2.5]);
+        assert_eq!(b.row(0, 1), vec![0.0, 0.0]);
+        assert_eq!(b.staleness(0, &[0]), 1.0);
+        assert_eq!(b.staleness(0, &[1]), 2.0); // step restored, clock pinned 0
+        // refresh targeting picks the lost rows first
+        assert_eq!(b.top_stale_rows(4), vec![1, 3, 5, 7]);
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //!              [--push-delta-min X]
 //!              (drop pushes moving a row by less than X in L2; default
 //!              GAS_PUSH_DELTA_MIN, else 0 = keep every push)
+//!              [--pipeline serial|concurrent]
+//!              (history engine mode; serial is the deterministic
+//!              baseline the kill-and-resume CI gate trains under)
+//!              [--checkpoint-dir PATH] [--checkpoint-every K] [--resume]
+//!              (epoch-boundary crash-recovery manifests; resume replays
+//!              the remaining epochs bit-identically — defaults
+//!              GAS_CHECKPOINT_DIR / GAS_CHECKPOINT_EVERY / GAS_RESUME)
 //!   gen        --dataset cora            (generate + print dataset stats)
 //!   partition  --dataset cora --parts 4  (METIS vs random quality)
 //!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
@@ -122,6 +129,24 @@ fn cmd_train(args: &Args) -> Result<()> {
                 cfg.refresh_by = parse_refresh_by(by)?;
             }
             cfg.push_delta_min = args.f64_or("push-delta-min", cfg.push_delta_min as f64)? as f32;
+            // crash tolerance: --pipeline pins the engine mode (the resume
+            // gate trains Serial for a deterministic replay), --checkpoint-*
+            // and --resume override the GAS_* envs the preset read
+            if let Some(mode) = args.get("pipeline") {
+                cfg.pipeline = match mode.to_ascii_lowercase().as_str() {
+                    "serial" => gas::history::PipelineMode::Serial,
+                    "concurrent" => gas::history::PipelineMode::Concurrent,
+                    other => bail!("unknown pipeline mode {other:?} (expected serial|concurrent)"),
+                };
+            }
+            if let Some(dir) = args.get("checkpoint-dir") {
+                cfg.checkpoint_dir = Some(std::path::PathBuf::from(dir));
+            }
+            cfg.checkpoint_every =
+                args.usize_or("checkpoint-every", cfg.checkpoint_every)?.max(1);
+            if args.has("resume") {
+                cfg.resume = true;
+            }
             let backing = cfg.history_backing.label();
             let sched = cfg.sched_policy;
             let (refresh_k, refresh_by) = (cfg.refresh_top_k, cfg.refresh_by);
@@ -170,6 +195,33 @@ fn cmd_train(args: &Args) -> Result<()> {
             for (k, v) in r.buckets.entries() {
                 println!("  {k:<12} {:.3}s", v);
             }
+            // machine-readable fingerprint for ci/check_bench_resume.py: a
+            // killed-and-resumed run must reproduce these bit patterns
+            // exactly (f64 to_bits for the curves, CRC-32 over the little-
+            // endian parameter tensors and the raw history shard bytes)
+            let params_crc = {
+                let mut c = 0u32;
+                for t in &tr.params.tensors {
+                    for v in t {
+                        c = gas::util::crc32::crc32_update(c, &v.to_le_bytes());
+                    }
+                }
+                c
+            };
+            let hist_crc = tr.with_history(|s| {
+                let mut c = 0u32;
+                for shard in s.export_state() {
+                    c = gas::util::crc32::crc32_update(c, &shard.bytes);
+                }
+                c
+            });
+            println!(
+                "FINAL loss_bits={:016x} val_bits={:016x} test_bits={:016x} steps={} params_crc={params_crc:08x} hist_crc={hist_crc:08x}",
+                r.loss.last().unwrap_or(0.0).to_bits(),
+                r.val_acc.last().unwrap_or(0.0).to_bits(),
+                r.test_at_best_val.to_bits(),
+                r.steps,
+            );
         }
         "full" => {
             let name = format!("{dataset}_{model}_full");

@@ -66,6 +66,21 @@ impl Adam {
         self.weight_decay = wd;
         self
     }
+
+    /// Moment state for checkpointing: `(m, v, t)`. Empty moment vectors
+    /// mean the optimizer has not taken a step yet (lazy init).
+    pub fn state(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, u64) {
+        (self.m.clone(), self.v.clone(), self.t)
+    }
+
+    /// Restore a snapshot taken with [`Adam::state`]. Restoring empty
+    /// moments re-arms the lazy init, exactly like a fresh optimizer.
+    pub fn restore(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, t: u64) {
+        assert_eq!(m.len(), v.len(), "Adam moments must pair up");
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
 }
 
 impl Optimizer for Adam {
@@ -172,6 +187,32 @@ mod tests {
         let mut g2 = vec![vec![0.3, 0.4]];
         clip_global_norm(&mut g2, 1.0);
         assert_eq!(g2[0], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn adam_state_roundtrip_is_bit_identical() {
+        // two optimizers diverge unless the restored one replays the
+        // moments AND the step counter (bias correction depends on t)
+        let mut a = Adam::new(0.05);
+        let mut pa = store(vec![1.0, -2.0, 0.5]);
+        for k in 0..7 {
+            a.step(&mut pa, &[vec![0.3 * k as f32, -0.1, 0.9]]);
+        }
+        let (m, v, t) = a.state();
+        assert_eq!(t, 7);
+        let mut b = Adam::new(0.05);
+        let mut pb = ParamStore {
+            specs: pa.specs.clone(),
+            tensors: pa.tensors.clone(),
+        };
+        b.restore(m, v, t);
+        for k in 0..5 {
+            let g = vec![vec![-0.2, 0.4 * k as f32, 0.1]];
+            a.step(&mut pa, &g);
+            b.step(&mut pb, &g);
+        }
+        let bits = |t: &[f32]| t.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&pa.tensors[0]), bits(&pb.tensors[0]));
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod batch;
 pub mod scheduler;
 
 pub use batch::{BatchPlan, LabelSel, StaticTensors};
-pub use scheduler::{BatchStalenessTracker, EpochScheduler, SchedulePolicy};
+pub use scheduler::{BatchStalenessTracker, EpochScheduler, SchedulePolicy, SchedulerState};

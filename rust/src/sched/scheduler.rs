@@ -20,7 +20,7 @@
 //!   — so `pull_depth`-deep prefetch works identically under both
 //!   policies.
 
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngState};
 
 /// How [`EpochScheduler::next_epoch`] derives each epoch's batch order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -187,6 +187,50 @@ impl EpochScheduler {
     pub fn num_batches(&self) -> usize {
         self.num_batches
     }
+
+    /// Everything that carries across an epoch boundary, for
+    /// checkpointing: the RNG stream (RoundRobin consumes one shuffle per
+    /// epoch), the in-epoch order/position, and both tracker windows
+    /// (StalenessOrdered keys the next epoch off the accumulating
+    /// scores).
+    pub fn snapshot(&self) -> SchedulerState {
+        SchedulerState {
+            order: self.order.clone(),
+            pos: self.pos,
+            rng: self.rng.state(),
+            scores: self.tracker.scores.clone(),
+            prev: self.tracker.prev.clone(),
+        }
+    }
+
+    /// Restore a [`Self::snapshot`] onto a freshly constructed scheduler
+    /// of the same geometry and policy; the next `next_epoch` then
+    /// derives exactly the order the snapshotted run would have.
+    pub fn restore(&mut self, st: SchedulerState) {
+        assert_eq!(
+            st.scores.len(),
+            self.num_batches,
+            "scheduler snapshot is for {} batches, this run has {}",
+            st.scores.len(),
+            self.num_batches
+        );
+        self.order = st.order;
+        self.pos = st.pos;
+        self.rng = Rng::from_state(st.rng);
+        self.tracker.scores = st.scores;
+        self.tracker.prev = st.prev;
+    }
+}
+
+/// Serializable snapshot of an [`EpochScheduler`] (see
+/// [`EpochScheduler::snapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerState {
+    pub order: Vec<usize>,
+    pub pos: usize,
+    pub rng: RngState,
+    pub scores: Vec<f64>,
+    pub prev: Vec<f64>,
 }
 
 #[cfg(test)]
@@ -290,6 +334,47 @@ mod tests {
             orders
         };
         assert_eq!(run(), run(), "same seed + same feedback must replay identically");
+    }
+
+    #[test]
+    fn snapshot_restore_replays_future_epochs_for_both_policies() {
+        for policy in [SchedulePolicy::RoundRobin, SchedulePolicy::StalenessOrdered] {
+            // drive a scheduler through 3 epochs of feedback, snapshot,
+            // then check a restored copy serves identical future epochs
+            let mut a = EpochScheduler::with_policy(7, 11, true, policy);
+            for epoch in 0..3 {
+                a.next_epoch();
+                while let Some(b) = a.current() {
+                    a.record_staleness(b, ((b * 5 + epoch * 3) % 9) as f64);
+                    a.advance();
+                }
+            }
+            let snap = a.snapshot();
+            let mut b = EpochScheduler::with_policy(7, 999, true, policy);
+            b.restore(snap.clone());
+            assert_eq!(b.snapshot(), snap, "restore must be lossless");
+            for epoch in 3..6 {
+                a.next_epoch();
+                b.next_epoch();
+                while let Some(ba) = a.current() {
+                    assert_eq!(Some(ba), b.current(), "{policy:?} epoch {epoch}");
+                    let fb = ((ba * 5 + epoch * 3) % 9) as f64;
+                    a.record_staleness(ba, fb);
+                    b.record_staleness(ba, fb);
+                    a.advance();
+                    b.advance();
+                }
+                assert_eq!(b.current(), None);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduler snapshot is for")]
+    fn snapshot_geometry_mismatch_is_rejected() {
+        let a = EpochScheduler::new(4, 1, true);
+        let mut b = EpochScheduler::new(5, 1, true);
+        b.restore(a.snapshot());
     }
 
     #[test]

@@ -1,0 +1,585 @@
+//! Epoch-boundary checkpoint manifests — crash-tolerant training.
+//!
+//! At every epoch boundary the trainer has just crossed the pipeline's
+//! `sync()` barrier: every push is applied, the histories are durable,
+//! and the whole run state is a pure function of a small set of values.
+//! [`Checkpoint`] captures exactly that set — parameters, Adam moments,
+//! both RNG streams (trainer noise + scheduler shuffle, including the
+//! Box–Muller cache), the scheduler's order/position/tracker windows,
+//! staleness accumulators, recorded curves, and a byte-exact snapshot of
+//! every history shard ([`crate::history::ShardState`]) — so a process
+//! killed at *any* point resumes from the last manifest and replays the
+//! remaining epochs bit-identically to the uninterrupted run (the
+//! kill-and-resume property test in `rust/tests/checkpoint.rs`).
+//!
+//! Shard rows ride inside the manifest for every media, including mmap:
+//! the kernel may write dirty mapped pages back at any moment, so after
+//! a SIGKILL mid-epoch the shard *files* are a torn mix of flush-time
+//! and post-checkpoint state. Resume therefore never reopens shard
+//! files — it recreates the backing zeroed and imports the snapshot.
+//! (The shard CRC footers and `BackingSpec::with_recovery` serve the
+//! non-resume reopen flow: warm starts from a cleanly flushed shard
+//! directory.) Quantized snapshots are payload-only, so a manifest
+//! written over a RAM backing restores onto an mmap one and vice versa.
+//!
+//! On-disk format (`checkpoint.gask`), all little-endian:
+//!
+//! ```text
+//! "GASK" | version u32 | crc32(payload) u32 | payload
+//! ```
+//!
+//! The manifest is written to a `.tmp` sibling, fsynced, then renamed
+//! over the previous one — a crash mid-write leaves the old manifest
+//! intact, and a torn rename is caught by the CRC. [`Checkpoint::load`]
+//! distinguishes *absent* (fresh start, `Ok(None)`) from *corrupt*
+//! (loud `Err` — silently restarting from epoch 0 would be data loss).
+
+use crate::history::{Codec, QuantStats, ShardState};
+use crate::sched::SchedulerState;
+use crate::util::crc32::crc32_par;
+use crate::util::rng::RngState;
+use std::io::{self, Write as _};
+use std::path::{Path, PathBuf};
+
+pub const MAGIC: &[u8; 4] = b"GASK";
+pub const VERSION: u32 = 1;
+
+/// Manifest file inside a checkpoint directory.
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("checkpoint.gask")
+}
+
+/// Everything the trainer needs to resume an interrupted run
+/// bit-identically from the end of epoch `epochs_done`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// epochs fully completed (resume starts at this epoch index)
+    pub epochs_done: usize,
+    // -- config echo: the resumed run must match or the replay diverges --
+    pub seed: u64,
+    pub epochs: usize,
+    pub num_batches: usize,
+    pub codec: Codec,
+    pub backing_kind: String,
+    pub num_shards: usize,
+    // -- model / optimizer -----------------------------------------------
+    pub params: Vec<Vec<f32>>,
+    pub adam_m: Vec<Vec<f32>>,
+    pub adam_v: Vec<Vec<f32>>,
+    pub adam_t: u64,
+    // -- rng / schedule --------------------------------------------------
+    pub rng: RngState,
+    pub sched: SchedulerState,
+    // -- probes and curves -----------------------------------------------
+    pub staleness_acc: Vec<f64>,
+    pub staleness_cnt: u64,
+    /// recorded curves by name (loss, accuracies, staleness, …)
+    pub curves: Vec<(String, Vec<f64>)>,
+    pub best_val: f64,
+    pub test_at_best_val: f64,
+    pub skipped_so_far: u64,
+    pub refreshed_rows: u64,
+    pub steps: u64,
+    // -- history snapshot (rows + clocks + probes, per shard) ------------
+    pub shards: Vec<ShardState>,
+}
+
+impl Checkpoint {
+    /// Atomically (re)write the manifest in `dir`: temp file + fsync +
+    /// rename, so the previous checkpoint survives a crash mid-save.
+    pub fn save(&self, dir: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let payload = self.encode();
+        let mut out = Vec::with_capacity(payload.len() + 12);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&crc32_par(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let path = manifest_path(dir);
+        let tmp = dir.join("checkpoint.gask.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&out)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        // best-effort: make the rename itself durable
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    /// Load the manifest from `dir`. `Ok(None)` when no checkpoint
+    /// exists (fresh start); a manifest that exists but fails the magic,
+    /// version, or CRC check is a loud error — restarting silently from
+    /// scratch would throw away a run the operator asked to resume.
+    pub fn load(dir: &Path) -> io::Result<Option<Checkpoint>> {
+        let path = manifest_path(dir);
+        let raw = match std::fs::read(&path) {
+            Ok(r) => r,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        let bad = |what: String| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("checkpoint manifest {}: {what}", path.display()),
+            )
+        };
+        if raw.len() < 12 || &raw[..4] != MAGIC {
+            return Err(bad("not a GASK manifest".into()));
+        }
+        let version = u32::from_le_bytes(raw[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(bad(format!("unsupported version {version} (want {VERSION})")));
+        }
+        let want = u32::from_le_bytes(raw[8..12].try_into().unwrap());
+        let got = crc32_par(&raw[12..]);
+        if got != want {
+            return Err(bad(format!("CRC mismatch (stored {want:#010x}, computed {got:#010x})")));
+        }
+        Self::decode(&raw[12..]).map(Some).map_err(|e| bad(e.to_string()))
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.u64(self.epochs_done as u64);
+        e.u64(self.seed);
+        e.u64(self.epochs as u64);
+        e.u64(self.num_batches as u64);
+        e.u8(codec_tag(self.codec));
+        e.str(&self.backing_kind);
+        e.u64(self.num_shards as u64);
+        e.vecs_f32(&self.params);
+        e.vecs_f32(&self.adam_m);
+        e.vecs_f32(&self.adam_v);
+        e.u64(self.adam_t);
+        e.rng(&self.rng);
+        e.u64s_usize(&self.sched.order);
+        e.u64(self.sched.pos as u64);
+        e.rng(&self.sched.rng);
+        e.f64s(&self.sched.scores);
+        e.f64s(&self.sched.prev);
+        e.f64s(&self.staleness_acc);
+        e.u64(self.staleness_cnt);
+        e.u64(self.curves.len() as u64);
+        for (name, values) in &self.curves {
+            e.str(name);
+            e.f64s(values);
+        }
+        e.f64(self.best_val);
+        e.f64(self.test_at_best_val);
+        e.u64(self.skipped_so_far);
+        e.u64(self.refreshed_rows);
+        e.u64(self.steps);
+        e.u64(self.shards.len() as u64);
+        for s in &self.shards {
+            e.u64(s.step);
+            e.u64(s.last_push.len() as u64);
+            for layer in &s.last_push {
+                e.u64s(layer);
+            }
+            e.f64s(&s.delta_sum);
+            e.u64s(&s.delta_cnt);
+            e.u64(s.skipped);
+            e.f64(s.quant.max_abs);
+            e.f64(s.quant.sum_abs);
+            e.u64(s.quant.count);
+            e.bytes(&s.bytes);
+        }
+        e.buf
+    }
+
+    fn decode(payload: &[u8]) -> io::Result<Checkpoint> {
+        let mut d = Dec { buf: payload, pos: 0 };
+        let epochs_done = d.u64()? as usize;
+        let seed = d.u64()?;
+        let epochs = d.u64()? as usize;
+        let num_batches = d.u64()? as usize;
+        let codec = codec_from_tag(d.u8()?)?;
+        let backing_kind = d.str()?;
+        let num_shards = d.u64()? as usize;
+        let params = d.vecs_f32()?;
+        let adam_m = d.vecs_f32()?;
+        let adam_v = d.vecs_f32()?;
+        let adam_t = d.u64()?;
+        let rng = d.rng()?;
+        let sched = SchedulerState {
+            order: d.usizes()?,
+            pos: d.u64()? as usize,
+            rng: d.rng()?,
+            scores: d.f64s()?,
+            prev: d.f64s()?,
+        };
+        let staleness_acc = d.f64s()?;
+        let staleness_cnt = d.u64()?;
+        let nc = d.u64()? as usize;
+        let mut curves = Vec::with_capacity(nc.min(64));
+        for _ in 0..nc {
+            let name = d.str()?;
+            let values = d.f64s()?;
+            curves.push((name, values));
+        }
+        let best_val = d.f64()?;
+        let test_at_best_val = d.f64()?;
+        let skipped_so_far = d.u64()?;
+        let refreshed_rows = d.u64()?;
+        let steps = d.u64()?;
+        let ns = d.u64()? as usize;
+        let mut shards = Vec::with_capacity(ns.min(4096));
+        for _ in 0..ns {
+            let step = d.u64()?;
+            let nl = d.u64()? as usize;
+            let mut last_push = Vec::with_capacity(nl.min(4096));
+            for _ in 0..nl {
+                last_push.push(d.u64s()?);
+            }
+            shards.push(ShardState {
+                step,
+                last_push,
+                delta_sum: d.f64s()?,
+                delta_cnt: d.u64s()?,
+                skipped: d.u64()?,
+                quant: QuantStats {
+                    max_abs: d.f64()?,
+                    sum_abs: d.f64()?,
+                    count: d.u64()?,
+                },
+                bytes: d.bytes()?,
+            });
+        }
+        if d.pos != d.buf.len() {
+            return Err(trunc_err("trailing bytes after payload"));
+        }
+        Ok(Checkpoint {
+            epochs_done,
+            seed,
+            epochs,
+            num_batches,
+            codec,
+            backing_kind,
+            num_shards,
+            params,
+            adam_m,
+            adam_v,
+            adam_t,
+            rng,
+            sched,
+            staleness_acc,
+            staleness_cnt,
+            curves,
+            best_val,
+            test_at_best_val,
+            skipped_so_far,
+            refreshed_rows,
+            steps,
+            shards,
+        })
+    }
+}
+
+fn codec_tag(c: Codec) -> u8 {
+    match c {
+        Codec::F32 => 0,
+        Codec::F16 => 1,
+        Codec::Int8 => 2,
+    }
+}
+
+fn codec_from_tag(t: u8) -> io::Result<Codec> {
+    match t {
+        0 => Ok(Codec::F32),
+        1 => Ok(Codec::F16),
+        2 => Ok(Codec::Int8),
+        other => Err(trunc_err(&format!("unknown codec tag {other}"))),
+    }
+}
+
+fn trunc_err(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("malformed payload: {what}"))
+}
+
+/// Little-endian payload writer.
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+    fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    fn u64s(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+    fn u64s_usize(&mut self, v: &[usize]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+    fn vecs_f32(&mut self, v: &[Vec<f32>]) {
+        self.u64(v.len() as u64);
+        for t in v {
+            self.f32s(t);
+        }
+    }
+    fn rng(&mut self, r: &RngState) {
+        for &w in &r.s {
+            self.u64(w);
+        }
+        match r.cached_normal {
+            Some(v) => {
+                self.u8(1);
+                self.f64(v);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+/// Little-endian payload reader; every read is bounds-checked so a
+/// truncated payload is `InvalidData`, never a panic.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Dec<'_> {
+    fn take(&mut self, n: usize) -> io::Result<&[u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(trunc_err("payload truncated"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// element count for a fixed-width array: bounds-checked against the
+    /// remaining payload *before* allocating, so a corrupted length
+    /// cannot trigger a huge allocation
+    fn len(&mut self, width: usize) -> io::Result<usize> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(width) {
+            Some(total) if total <= self.buf.len() - self.pos => Ok(n),
+            _ => Err(trunc_err("length exceeds payload")),
+        }
+    }
+    fn bytes(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn str(&mut self) -> io::Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b).map_err(|_| trunc_err("non-utf8 string"))
+    }
+    fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn f64s(&mut self) -> io::Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+    fn u64s(&mut self) -> io::Result<Vec<u64>> {
+        let n = self.len(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn usizes(&mut self) -> io::Result<Vec<usize>> {
+        Ok(self.u64s()?.into_iter().map(|v| v as usize).collect())
+    }
+    fn vecs_f32(&mut self) -> io::Result<Vec<Vec<f32>>> {
+        // each element costs at least the 8-byte length prefix
+        let n = self.len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32s()?);
+        }
+        Ok(out)
+    }
+    fn rng(&mut self) -> io::Result<RngState> {
+        let s = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
+        let cached_normal = match self.u8()? {
+            0 => None,
+            1 => Some(self.f64()?),
+            _ => return Err(trunc_err("bad rng cache flag")),
+        };
+        Ok(RngState { s, cached_normal })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gas-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            epochs_done: 3,
+            seed: 42,
+            epochs: 9,
+            num_batches: 4,
+            codec: Codec::Int8,
+            backing_kind: "mmap".into(),
+            num_shards: 2,
+            params: vec![vec![1.5, -2.25], vec![0.0; 3]],
+            adam_m: vec![vec![0.125, 0.5], vec![0.0; 3]],
+            adam_v: vec![vec![1e-8, 2e-8], vec![0.0; 3]],
+            adam_t: 37,
+            rng: RngState { s: [1, 2, 3, 4], cached_normal: Some(-0.75) },
+            sched: SchedulerState {
+                order: vec![2, 0, 3, 1],
+                pos: 2,
+                rng: RngState { s: [9, 8, 7, 6], cached_normal: None },
+                scores: vec![0.5, 0.0, 1.5, 2.0],
+                prev: vec![1.0, 2.0, 0.0, 0.5],
+            },
+            staleness_acc: vec![12.5, 3.25],
+            staleness_cnt: 48,
+            curves: vec![
+                ("train_loss".into(), vec![2.0, 1.5, 1.25]),
+                ("val_acc".into(), vec![0.3, 0.5, 0.6]),
+            ],
+            best_val: 0.6,
+            test_at_best_val: 0.55,
+            skipped_so_far: 7,
+            refreshed_rows: 11,
+            steps: 12,
+            shards: vec![
+                ShardState {
+                    step: 12,
+                    last_push: vec![vec![1, 2, 3], vec![4, 5, 6]],
+                    delta_sum: vec![0.5, 0.25],
+                    delta_cnt: vec![10, 20],
+                    skipped: 3,
+                    quant: QuantStats { max_abs: 0.01, sum_abs: 1.5, count: 300 },
+                    bytes: vec![0xde, 0xad, 0xbe, 0xef],
+                },
+                ShardState {
+                    step: 12,
+                    last_push: vec![vec![7, 8], vec![9, 10]],
+                    delta_sum: vec![0.0, 0.0],
+                    delta_cnt: vec![0, 0],
+                    skipped: 0,
+                    quant: QuantStats::default(),
+                    bytes: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_every_field() {
+        let dir = tmp("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(Checkpoint::load(&dir).unwrap(), None, "no manifest yet");
+        let ck = sample();
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap().expect("manifest exists");
+        assert_eq!(back, ck);
+        // non-finite sentinels survive (best_val starts at -inf)
+        let mut ck2 = ck.clone();
+        ck2.best_val = f64::NEG_INFINITY;
+        ck2.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap().unwrap();
+        assert_eq!(back.best_val, f64::NEG_INFINITY);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_replaces_atomically_and_leaves_no_temp() {
+        let dir = tmp("atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut ck = sample();
+        ck.save(&dir).unwrap();
+        ck.epochs_done = 4;
+        ck.save(&dir).unwrap();
+        assert!(!dir.join("checkpoint.gask.tmp").exists());
+        assert_eq!(Checkpoint::load(&dir).unwrap().unwrap().epochs_done, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_is_a_loud_error_not_a_fresh_start() {
+        let dir = tmp("corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        sample().save(&dir).unwrap();
+        let path = manifest_path(&dir);
+        // flip one payload bit
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = 12 + (raw.len() - 12) / 2;
+        raw[mid] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("CRC mismatch"), "{err}");
+        // truncation (torn write) is also loud
+        let raw = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() / 3]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // as is garbage that never was a manifest
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("not a GASK manifest"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_lengths_without_allocating() {
+        // a corrupted length field that passes the CRC of a hand-built
+        // buffer must bounds-check against the remaining payload, not
+        // trust the 8-byte count
+        let mut d = Dec { buf: &u64::MAX.to_le_bytes(), pos: 0 };
+        assert!(d.f64s().is_err());
+        let mut d = Dec { buf: &[1, 0, 0, 0, 0, 0, 0, 0], pos: 0 };
+        assert!(d.f32s().is_err(), "1 element promised, 0 bytes follow");
+    }
+}

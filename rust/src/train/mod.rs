@@ -2,10 +2,12 @@
 //! concurrent pipeline), the full-batch reference trainer, and curve
 //! recording.
 
+pub mod checkpoint;
 pub mod curve;
 pub mod full_batch;
 pub mod trainer;
 
+pub use checkpoint::Checkpoint;
 pub use curve::Curve;
 pub use full_batch::FullBatchTrainer;
 pub use trainer::{PartitionKind, RefreshBy, TrainConfig, TrainResult, Trainer};

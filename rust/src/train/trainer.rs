@@ -27,9 +27,10 @@
 //! batch order, so the result is bit-identical to the serial walk
 //! ([`Trainer::evaluate_serial`]).
 
+use crate::config::FaultPlan;
 use crate::graph::datasets::Dataset;
 use crate::history::{
-    BackingSpec, Codec, HistoryPipeline, PipelineMode, PullBuffer, ShardedHistoryStore,
+    BackingSpec, Codec, HistoryPipeline, Media, PipelineMode, PullBuffer, ShardedHistoryStore,
 };
 use crate::model::metrics;
 use crate::model::{Adam, Optimizer, ParamStore};
@@ -37,11 +38,13 @@ use crate::partition::{metis_partition, random_partition};
 use crate::runtime::{Executor, Prepared, StepInputs};
 use crate::sched::batch::{BatchPlan, LabelSel};
 use crate::sched::scheduler::{EpochScheduler, SchedulePolicy};
+use crate::train::checkpoint::Checkpoint;
 use crate::train::curve::Curve;
 use crate::util::rng::Rng;
 use crate::util::timer::{Buckets, Timer};
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context as _, Result};
 use rayon::prelude::*;
+use std::path::PathBuf;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionKind {
@@ -124,6 +127,26 @@ pub struct TrainConfig {
     /// default; disabling removes the O(h) compare from every push at
     /// the price of `TrainResult::push_delta` reading all-zero.
     pub delta_tracking: bool,
+    /// epoch-boundary checkpointing: directory for the manifest (and
+    /// the recovery point after a crash). None (default) disables. See
+    /// `--checkpoint-dir` / `GAS_CHECKPOINT_DIR`.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// write a manifest every K epoch boundaries (clamped ≥ 1; the
+    /// final epoch always checkpoints when a dir is set). See
+    /// `--checkpoint-every` / `GAS_CHECKPOINT_EVERY`.
+    pub checkpoint_every: usize,
+    /// resume from the manifest in `checkpoint_dir` when one exists.
+    /// The resumed run replays the remaining epochs bit-identically to
+    /// the uninterrupted run (curves, params, history bytes). See
+    /// `--resume` / `GAS_RESUME`.
+    pub resume: bool,
+    /// stop cleanly once this many epochs are done, without changing
+    /// `epochs` (which seeds the schedule and must match across a
+    /// kill/resume pair). Test/CI hook for "train to epoch K, then die".
+    pub stop_after_epoch: Option<usize>,
+    /// fault-injection plan (tests and the kill-and-resume CI gate
+    /// only). See `GAS_FAULT` / [`crate::config::parse_fault_plan`].
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for TrainConfig {
@@ -150,6 +173,11 @@ impl Default for TrainConfig {
             refresh_by: crate::config::default_refresh_by(),
             push_delta_min: crate::config::default_push_delta_min(),
             delta_tracking: true,
+            checkpoint_dir: crate::config::default_checkpoint_dir(),
+            checkpoint_every: crate::config::default_checkpoint_every(),
+            resume: crate::config::default_resume(),
+            stop_after_epoch: None,
+            fault: crate::config::default_fault(),
         }
     }
 }
@@ -220,6 +248,9 @@ pub struct Trainer<'a> {
     /// per-plan cached backend statics (§Perf: avoids re-marshalling
     /// x/edges/labels — megabytes — every step)
     statics: Vec<Option<Prepared>>,
+    /// loaded checkpoint awaiting consumption at `train()` start (the
+    /// shard snapshot is already imported into the store by `new()`)
+    resume_from: Option<Checkpoint>,
 }
 
 impl<'a> Trainer<'a> {
@@ -239,12 +270,39 @@ impl<'a> Trainer<'a> {
         for g in &groups {
             plans.push(BatchPlan::build_gas(ds, spec, g, cfg.label_sel)?);
         }
+        // resume: load the manifest before the store is built — the shard
+        // snapshot rides inside it, and the backing must be re-created
+        // fresh rather than reopened (after a SIGKILL the kernel may have
+        // written back any mix of dirty mmap pages, so the shard *files*
+        // are torn; the manifest is the only trustworthy copy)
+        let resume_from = match (&cfg.checkpoint_dir, cfg.resume) {
+            (Some(dir), true) => {
+                Checkpoint::load(dir).context("loading checkpoint manifest for --resume")?
+            }
+            _ => None,
+        };
+        let mut backing = cfg.history_backing.clone();
+        if resume_from.is_some() {
+            if let Media::Mmap { dir, .. } = &backing.media {
+                backing.media = Media::Mmap { dir: dir.clone(), reopen: false };
+            }
+        }
+        // fault hook for the reopen-flow tests: damage one shard file
+        // before the store sees it (inert unless the file exists)
+        if let Some(FaultPlan::TruncateShard(s)) = cfg.fault {
+            if let Media::Mmap { dir, .. } = &backing.media {
+                let shard = dir.join(format!("shard{s:03}.bin"));
+                if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&shard) {
+                    f.set_len(3)?;
+                }
+            }
+        }
         let mut store = ShardedHistoryStore::with_backing(
             ds.n(),
             spec.hist_dim,
             spec.hist_layers(),
             cfg.history_shards,
-            &cfg.history_backing,
+            &backing,
         )?;
         store.set_delta_tracking(cfg.delta_tracking);
         store.set_push_delta_min(cfg.push_delta_min);
@@ -252,6 +310,32 @@ impl<'a> Trainer<'a> {
         // the trainer consumes the gather-time staleness probe (TrainResult
         // + the Theorem-2 error-bound harnesses); benches/eval leave it off
         pipeline.set_staleness_probe(true);
+        if let Some(FaultPlan::PushWorkerPanicAtStep(n)) = cfg.fault {
+            pipeline.inject_push_panic_at(n.min(u32::MAX as u64) as u32);
+        }
+        if let Some(ck) = &resume_from {
+            ensure!(
+                ck.seed == cfg.seed && ck.epochs == cfg.epochs && ck.num_batches == plans.len(),
+                "checkpoint is for seed={} epochs={} batches={}, this run has seed={} \
+                 epochs={} batches={} — resume needs an identical schedule",
+                ck.seed,
+                ck.epochs,
+                ck.num_batches,
+                cfg.seed,
+                cfg.epochs,
+                plans.len()
+            );
+            ensure!(
+                ck.codec == backing.codec(),
+                "checkpoint history snapshot is {} but this run uses {} — shard payloads \
+                 are codec-specific",
+                ck.codec.name(),
+                backing.codec().name()
+            );
+            pipeline
+                .with_store(|s| s.import_state(ck.shards.clone()))
+                .context("restoring history shards from checkpoint")?;
+        }
         let params = ParamStore::init(&spec.params, cfg.seed ^ 0x9e37)?;
         let opt = {
             let mut a = Adam::new(cfg.lr).with_weight_decay(cfg.weight_decay);
@@ -286,6 +370,7 @@ impl<'a> Trainer<'a> {
             staleness_cnt: 0,
             owner,
             degree_order: Vec::new(),
+            resume_from,
         })
     }
 
@@ -328,7 +413,43 @@ impl<'a> Trainer<'a> {
         );
         let mut best_val = f64::NEG_INFINITY;
         let mut skipped_so_far = 0u64;
-        for epoch in 0..self.cfg.epochs {
+        let mut start_epoch = 0usize;
+        if let Some(ck) = self.resume_from.take() {
+            // the shard snapshot went into the store in new(); everything
+            // else — params, moments, both RNG streams, the scheduler, the
+            // probes and curves — is restored here, so the loop below
+            // continues exactly where the killed run's last epoch ended
+            start_epoch = ck.epochs_done;
+            self.params.tensors = ck.params;
+            self.opt.restore(ck.adam_m, ck.adam_v, ck.adam_t);
+            self.rng = Rng::from_state(ck.rng);
+            sched.restore(ck.sched);
+            self.staleness_acc = ck.staleness_acc;
+            self.staleness_cnt = ck.staleness_cnt;
+            best_val = ck.best_val;
+            result.test_at_best_val = ck.test_at_best_val;
+            skipped_so_far = ck.skipped_so_far;
+            result.refreshed_rows = ck.refreshed_rows as usize;
+            result.steps = ck.steps as usize;
+            for (name, mut values) in ck.curves {
+                for c in [
+                    &mut result.loss,
+                    &mut result.train_acc,
+                    &mut result.val_acc,
+                    &mut result.test_acc,
+                    &mut result.staleness_epoch,
+                    &mut result.skipped_pushes,
+                    &mut result.quant_err_max,
+                    &mut result.quant_err_mean,
+                ] {
+                    if c.name == name {
+                        c.values = std::mem::take(&mut values);
+                        break;
+                    }
+                }
+            }
+        }
+        for epoch in start_epoch..self.cfg.epochs {
             sched.next_epoch();
             let mut epoch_loss = 0f64;
             let mut epoch_stale = 0f64;
@@ -357,8 +478,10 @@ impl<'a> Trainer<'a> {
             // epoch boundary: every staged pull was consumed (prefetch never
             // reaches past the epoch order) — drain queued write-backs
             // across all shards so the next epoch (and any evaluation)
-            // reads applied histories, re-bounding staleness every epoch
-            self.pipeline.sync();
+            // reads applied histories, re-bounding staleness every epoch.
+            // A dead worker or failed flush surfaces here as an error (the
+            // last manifest stays the recovery point), never a panic.
+            self.pipeline.sync()?;
             result.loss.push(epoch_loss / nb.max(1) as f64);
             result.staleness_epoch.push(epoch_stale / nb.max(1) as f64);
             // post-sync: every queued push of the epoch went through the
@@ -389,6 +512,29 @@ impl<'a> Trainer<'a> {
             if self.cfg.refresh_top_k > 0 && epoch + 1 < self.cfg.epochs {
                 result.refreshed_rows += self.refresh_pass(&mut result.buckets)?;
             }
+            // the durability point: everything above (including the
+            // refresh pass) is synced, so the run state is exactly
+            // reproducible from here — write the manifest last so a crash
+            // anywhere in the epoch falls back to the previous one
+            if self.cfg.checkpoint_dir.is_some() {
+                let every = self.cfg.checkpoint_every.max(1);
+                if (epoch + 1) % every == 0 || epoch + 1 == self.cfg.epochs {
+                    self.save_checkpoint(epoch + 1, &sched, best_val, skipped_so_far, &result)?;
+                }
+            }
+            if let Some(FaultPlan::AbortAtEpoch(k)) = self.cfg.fault {
+                if epoch + 1 == k {
+                    // SIGKILL stand-in: no destructors, no flush — shard
+                    // files and curves die mid-flight, only the manifest
+                    // (written above) survives
+                    std::process::abort();
+                }
+            }
+            if let Some(stop) = self.cfg.stop_after_epoch {
+                if epoch + 1 >= stop {
+                    break;
+                }
+            }
         }
         let hl = self.art.spec().hist_layers();
         result.staleness = (0..hl)
@@ -404,6 +550,59 @@ impl<'a> Trainer<'a> {
         result.history_mapped_bytes = fp.mapped_bytes;
         result.history_stored_bytes = fp.stored_bytes;
         Ok(result)
+    }
+
+    /// Write the epoch-boundary manifest: called right after the epoch's
+    /// `sync()` barrier (histories applied + durable), so the shard
+    /// export is a consistent snapshot of exactly `epochs_done` epochs.
+    fn save_checkpoint(
+        &mut self,
+        epochs_done: usize,
+        sched: &EpochScheduler,
+        best_val: f64,
+        skipped_so_far: u64,
+        result: &TrainResult,
+    ) -> Result<()> {
+        let dir = self.cfg.checkpoint_dir.clone().expect("caller checked checkpoint_dir");
+        let (adam_m, adam_v, adam_t) = self.opt.state();
+        let shards = self.pipeline.with_store(|s| s.export_state());
+        let curve_set = [
+            &result.loss,
+            &result.train_acc,
+            &result.val_acc,
+            &result.test_acc,
+            &result.staleness_epoch,
+            &result.skipped_pushes,
+            &result.quant_err_max,
+            &result.quant_err_mean,
+        ];
+        let ck = Checkpoint {
+            epochs_done,
+            seed: self.cfg.seed,
+            epochs: self.cfg.epochs,
+            num_batches: self.plans.len(),
+            codec: self.pipeline.with_store(|s| s.codec()),
+            backing_kind: self.cfg.history_backing.kind().to_string(),
+            num_shards: shards.len(),
+            params: self.params.tensors.clone(),
+            adam_m,
+            adam_v,
+            adam_t,
+            rng: self.rng.state(),
+            sched: sched.snapshot(),
+            staleness_acc: self.staleness_acc.clone(),
+            staleness_cnt: self.staleness_cnt,
+            curves: curve_set.iter().map(|c| (c.name.clone(), c.values.clone())).collect(),
+            best_val,
+            test_at_best_val: result.test_at_best_val,
+            skipped_so_far,
+            refreshed_rows: result.refreshed_rows as u64,
+            steps: result.steps as u64,
+            shards,
+        };
+        ck.save(&dir).with_context(|| {
+            format!("writing checkpoint manifest after epoch {epochs_done} to {}", dir.display())
+        })
     }
 
     /// One optimizer step on batch `b`. `prefetch`: the batch `pull_depth`
@@ -484,9 +683,9 @@ impl<'a> Trainer<'a> {
             let mut buf = self.pipeline.take_buffer(nb_real * hd);
             let base = l * spec.nb * hd;
             buf.copy_from_slice(&out.push[base..base + nb_real * hd]);
-            self.pipeline.push(l, plan.batch_nodes.clone(), buf);
+            self.pipeline.push(l, plan.batch_nodes.clone(), buf)?;
         }
-        self.pipeline.tick();
+        self.pipeline.tick()?;
         buckets.add("push", t.elapsed_s());
 
         Ok((out.loss, step_stale))
@@ -537,13 +736,13 @@ impl<'a> Trainer<'a> {
                 let mut buf = self.pipeline.take_buffer(nb_real * hd);
                 let base = l * spec.nb * hd;
                 buf.copy_from_slice(&out.push[base..base + nb_real * hd]);
-                self.pipeline.push(l, plan.batch_nodes.clone(), buf);
+                self.pipeline.push(l, plan.batch_nodes.clone(), buf)?;
             }
             refreshed += nb_real;
         }
         // drain the refresh pushes so the next epoch's first pulls (and
         // their staleness probes) see the freshened rows
-        self.pipeline.sync();
+        self.pipeline.sync()?;
         buckets.add("refresh", t.elapsed_s());
         Ok(refreshed)
     }
@@ -565,7 +764,9 @@ impl<'a> Trainer<'a> {
     /// Read-only access to the (synced) history store — used by the
     /// Theorem-2 error-bound probes.
     pub fn with_history<T>(&mut self, f: impl FnOnce(&ShardedHistoryStore) -> T) -> T {
-        self.pipeline.sync();
+        // infallible signature (probe helper): a failed barrier here
+        // means the probe would read garbage — fail loudly instead
+        self.pipeline.sync().expect("history sync for read-only probe");
         self.pipeline.with_store(f)
     }
 
@@ -606,7 +807,7 @@ impl<'a> Trainer<'a> {
     /// [`Trainer::evaluate_serial`] for any thread count.
     pub fn evaluate(&mut self, buckets: &mut Buckets) -> Result<(f64, f64, f64)> {
         // ensure queued pushes are applied and no pull is left hanging
-        self.pipeline.sync();
+        self.pipeline.sync()?;
         let t = Timer::start();
         for b in 0..self.plans.len() {
             self.ensure_statics(b)?;
@@ -661,7 +862,7 @@ impl<'a> Trainer<'a> {
     /// debugging backend issues without rayon in the way.
     pub fn evaluate_serial(&mut self, buckets: &mut Buckets) -> Result<(f64, f64, f64)> {
         // ensure queued pushes are applied and no pull is left hanging
-        self.pipeline.sync();
+        self.pipeline.sync()?;
         let art = self.art;
         let spec = art.spec();
         let t = Timer::start();

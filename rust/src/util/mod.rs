@@ -3,6 +3,7 @@
 //! all built in-repo (DESIGN.md §4).
 
 pub mod argparse;
+pub mod crc32;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,339 @@
+//! Crash tolerance end to end: a training run killed at an epoch
+//! boundary and resumed from its checkpoint manifest must be
+//! indistinguishable from one that was never interrupted.
+//!
+//! "Indistinguishable" is the bit-level contract of the tape-regression
+//! schedule (Serial pipeline, pull_depth=1): every curve point, every
+//! parameter tensor, and every history shard — clocks, probe
+//! accumulators, and encoded rows alike — compare `to_bits`-equal. The
+//! sweep crosses kill epoch x codec {f32,f16,int8} x medium {ram,mmap}
+//! x schedule policy, plus a checkpoint_every > 1 arm where the kill
+//! lands *past* the last manifest and resume has to replay an epoch.
+//!
+//! The fault-injection half covers the degraded paths: a poisoned push
+//! worker surfaces as a typed error from `train()` (never a process
+//! abort), a truncated shard file is re-zeroed under
+//! `BackingSpec::with_recovery` and training continues with finite,
+//! decreasing loss (and is refused loudly without it), and a corrupt
+//! manifest fails resume with a CRC complaint rather than silently
+//! training from scratch.
+
+use gas::backend::native::{registry, NativeArtifact};
+use gas::baselines::naive_history::gas_config;
+use gas::config::FaultPlan;
+use gas::graph::datasets::{Dataset, Profile};
+use gas::history::{BackingSpec, Codec, PipelineMode};
+use gas::sched::SchedulePolicy;
+use gas::train::checkpoint::manifest_path;
+use gas::train::{TrainConfig, Trainer};
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gas-ckpt-{tag}-{}", std::process::id()))
+}
+
+fn fbits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn pbits(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn synth_profile() -> Profile {
+    Profile {
+        name: "ckpt_pp".into(),
+        kind: "planted".into(),
+        n: 400,
+        f: 16,
+        c: 4,
+        avg_deg: 6.0,
+        multilabel: false,
+        train_frac: 0.5,
+        val_frac: 0.2,
+        homophily: 0.9,
+        feat_noise: 0.5,
+        parts: 4,
+        paper_n: 400,
+        seed: 11,
+    }
+}
+
+/// The bit-deterministic schedule: Serial pipeline, one-step lookahead.
+fn serial_cfg(backing: BackingSpec) -> TrainConfig {
+    let mut cfg = gas_config(6, 0.01, 0.02, 9);
+    cfg.pipeline = PipelineMode::Serial;
+    cfg.pull_depth = 1;
+    cfg.eval_every = 2;
+    cfg.history_backing = backing;
+    cfg
+}
+
+/// One kill-and-resume arm: run uninterrupted as the reference, run
+/// again stopping after `kill_epoch` (the checkpoint written at that
+/// boundary — or an earlier one, when `every > 1` — is all that
+/// survives), then resume in a fresh Trainer and compare everything.
+fn assert_kill_resume_bit_identical(
+    tag: &str,
+    codec: Codec,
+    mmap_medium: bool,
+    kill_epoch: usize,
+    every: usize,
+    policy: SchedulePolicy,
+) {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcn", 2, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+    let ck_dir = tmp(&format!("{tag}-manifest"));
+    let shards_a = tmp(&format!("{tag}-shards-a"));
+    let shards_b = tmp(&format!("{tag}-shards-b"));
+    let backing = |dir: &PathBuf| {
+        if mmap_medium {
+            BackingSpec::mmap(dir, false).with_codec(codec)
+        } else {
+            BackingSpec::ram().with_codec(codec)
+        }
+    };
+
+    // reference: never interrupted, never checkpointed
+    let mut cfg_a = serial_cfg(backing(&shards_a));
+    cfg_a.sched_policy = policy;
+    let mut tr_a = Trainer::new(&ds, &art, cfg_a).unwrap();
+    let r_a = tr_a.train().unwrap();
+    assert!(
+        r_a.loss.values.last().unwrap() < r_a.loss.values.first().unwrap(),
+        "{tag}: reference run did not train"
+    );
+
+    // killed run: checkpoints every `every` epochs, stops after
+    // `kill_epoch` (stand-in for SIGKILL: the Trainer is dropped and
+    // only what `save_checkpoint` persisted survives into the resume)
+    let mut cfg_b = serial_cfg(backing(&shards_b));
+    cfg_b.sched_policy = policy;
+    cfg_b.checkpoint_dir = Some(ck_dir.clone());
+    cfg_b.checkpoint_every = every;
+    cfg_b.stop_after_epoch = Some(kill_epoch);
+    let mut tr_b = Trainer::new(&ds, &art, cfg_b).unwrap();
+    let r_b = tr_b.train().unwrap();
+    assert!(
+        r_b.loss.values.len() < r_a.loss.values.len(),
+        "{tag}: killed run was supposed to stop early"
+    );
+    drop(tr_b);
+
+    // resumed run: same config, --resume; finishes the remaining epochs
+    let mut cfg_c = serial_cfg(backing(&shards_b));
+    cfg_c.sched_policy = policy;
+    cfg_c.checkpoint_dir = Some(ck_dir.clone());
+    cfg_c.checkpoint_every = every;
+    cfg_c.resume = true;
+    let mut tr_c = Trainer::new(&ds, &art, cfg_c).unwrap();
+    let r_c = tr_c.train().unwrap();
+
+    // every observable the uninterrupted run produced, bit for bit
+    assert_eq!(fbits(&r_a.loss.values), fbits(&r_c.loss.values), "{tag}: loss curve");
+    assert_eq!(fbits(&r_a.train_acc.values), fbits(&r_c.train_acc.values), "{tag}: train acc");
+    assert_eq!(fbits(&r_a.val_acc.values), fbits(&r_c.val_acc.values), "{tag}: val acc");
+    assert_eq!(fbits(&r_a.test_acc.values), fbits(&r_c.test_acc.values), "{tag}: test acc");
+    assert_eq!(
+        r_a.test_at_best_val.to_bits(),
+        r_c.test_at_best_val.to_bits(),
+        "{tag}: test@best-val"
+    );
+    assert_eq!(
+        fbits(&r_a.staleness_epoch.values),
+        fbits(&r_c.staleness_epoch.values),
+        "{tag}: staleness curve"
+    );
+    assert_eq!(fbits(&r_a.staleness), fbits(&r_c.staleness), "{tag}: final staleness");
+    assert_eq!(
+        fbits(&r_a.quant_err_max.values),
+        fbits(&r_c.quant_err_max.values),
+        "{tag}: quant telemetry"
+    );
+    assert_eq!(r_a.steps, r_c.steps, "{tag}: step count");
+    assert_eq!(
+        pbits(&tr_a.params.tensors),
+        pbits(&tr_c.params.tensors),
+        "{tag}: parameter tensors diverged"
+    );
+    // the history itself: staleness clocks, probe accumulators, and the
+    // encoded rows in the backing's own byte encoding
+    let hist_a = tr_a.with_history(|s| s.export_state());
+    let hist_c = tr_c.with_history(|s| s.export_state());
+    assert_eq!(hist_a, hist_c, "{tag}: history shard state diverged");
+
+    drop((tr_a, tr_c));
+    for d in [&ck_dir, &shards_a, &shards_b] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn kill_and_resume_f32_ram() {
+    assert_kill_resume_bit_identical(
+        "f32-ram", Codec::F32, false, 3, 1, SchedulePolicy::RoundRobin,
+    );
+}
+
+#[test]
+fn kill_and_resume_f32_mmap_kill_at_first_epoch() {
+    assert_kill_resume_bit_identical(
+        "f32-mmap", Codec::F32, true, 1, 1, SchedulePolicy::RoundRobin,
+    );
+}
+
+#[test]
+fn kill_and_resume_f16_ram() {
+    assert_kill_resume_bit_identical(
+        "f16-ram", Codec::F16, false, 2, 1, SchedulePolicy::RoundRobin,
+    );
+}
+
+#[test]
+fn kill_and_resume_f16_mmap_kill_at_last_epoch() {
+    // kill after epoch 5 of 6: resume replays exactly one epoch
+    assert_kill_resume_bit_identical(
+        "f16-mmap", Codec::F16, true, 5, 1, SchedulePolicy::RoundRobin,
+    );
+}
+
+#[test]
+fn kill_and_resume_int8_ram_kill_past_last_manifest() {
+    // checkpoint every 2, killed after epoch 3: the newest manifest is
+    // from epoch 2, so resume re-runs epoch 3 — the replay must land on
+    // the same bits the first attempt produced
+    assert_kill_resume_bit_identical(
+        "int8-ram", Codec::Int8, false, 3, 2, SchedulePolicy::RoundRobin,
+    );
+}
+
+#[test]
+fn kill_and_resume_int8_mmap_staleness_schedule() {
+    // the staleness-ordered policy carries cross-epoch scheduler state
+    // (scores, order, its own rng) — all of it rides in the manifest
+    assert_kill_resume_bit_identical(
+        "int8-mmap", Codec::Int8, true, 3, 1, SchedulePolicy::StalenessOrdered,
+    );
+}
+
+#[test]
+fn poisoned_push_worker_is_a_training_error_not_an_abort() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcn", 2, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+    let mut cfg = serial_cfg(BackingSpec::ram());
+    cfg.pipeline = PipelineMode::Concurrent;
+    cfg.pull_depth = 2;
+    cfg.fault = Some(FaultPlan::PushWorkerPanicAtStep(3));
+    let mut tr = Trainer::new(&ds, &art, cfg).unwrap();
+    let err = tr.train().expect_err("poisoned worker must fail the run");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("worker"),
+        "expected a typed worker-death error, got: {msg}"
+    );
+    // dropping the trainer (and with it the dead pipeline) must not panic
+    drop(tr);
+}
+
+#[test]
+fn truncated_shard_recovers_under_recovery_mode_and_is_refused_without() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcn", 2, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+    let dir = tmp("recover-shards");
+
+    // seed the shard files with a healthy flushed run
+    let mut tr = Trainer::new(&ds, &art, serial_cfg(BackingSpec::mmap(&dir, false))).unwrap();
+    tr.train().unwrap();
+    drop(tr);
+
+    // without recovery mode, the damaged shard is a loud constructor
+    // error (the TruncateShard fault clips shard001.bin before the
+    // store reopens it, simulating a torn write-behind flush)
+    let mut cfg = serial_cfg(BackingSpec::mmap(&dir, true));
+    cfg.fault = Some(FaultPlan::TruncateShard(1));
+    assert!(
+        Trainer::new(&ds, &art, cfg).is_err(),
+        "truncated shard must not reopen silently without recovery mode"
+    );
+
+    // with recovery mode: the bad shard is re-zeroed, its rows pinned
+    // max-stale, and training proceeds to a finite, decreasing loss
+    let mut cfg = serial_cfg(BackingSpec::mmap(&dir, true).with_recovery(true));
+    cfg.fault = Some(FaultPlan::TruncateShard(1));
+    let mut tr = Trainer::new(&ds, &art, cfg).unwrap();
+    assert_eq!(
+        tr.with_history(|s| s.recovered_shards()),
+        vec![1],
+        "exactly the damaged shard should be in recovery"
+    );
+    let r = tr.train().unwrap();
+    assert!(
+        r.loss.values.iter().all(|v| v.is_finite()),
+        "recovered run produced a non-finite loss"
+    );
+    assert!(
+        r.loss.values.last().unwrap() < r.loss.values.first().unwrap(),
+        "recovered run did not converge"
+    );
+    drop(tr);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_manifest_fails_resume_loudly() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcn", 2, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+    let dir = tmp("bad-manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(manifest_path(&dir), b"not a checkpoint at all").unwrap();
+    let mut cfg = serial_cfg(BackingSpec::ram());
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    let err = match Trainer::new(&ds, &art, cfg) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("corrupt manifest must not silently train from scratch"),
+    };
+    assert!(
+        err.contains("GASK") || err.contains("checkpoint"),
+        "expected a manifest-format complaint, got: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_rejects_a_mismatched_schedule() {
+    let profile = synth_profile();
+    let ds = Dataset::generate(&profile);
+    let spec = registry::spec_for_profile(&profile, "gcn", 2, "gas", "").unwrap();
+    let art = NativeArtifact::new(spec).unwrap();
+    let dir = tmp("mismatch-manifest");
+
+    let mut cfg = serial_cfg(BackingSpec::ram());
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.stop_after_epoch = Some(2);
+    let mut tr = Trainer::new(&ds, &art, cfg).unwrap();
+    tr.train().unwrap();
+    drop(tr);
+
+    // different seed: the replayed schedule would diverge — refuse
+    let mut cfg = serial_cfg(BackingSpec::ram());
+    cfg.seed = 123;
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    assert!(Trainer::new(&ds, &art, cfg).is_err(), "seed mismatch must refuse resume");
+
+    // different codec: the shard payloads are codec-specific — refuse
+    let mut cfg = serial_cfg(BackingSpec::ram().with_codec(Codec::F16));
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.resume = true;
+    assert!(Trainer::new(&ds, &art, cfg).is_err(), "codec mismatch must refuse resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
