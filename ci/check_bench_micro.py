@@ -7,8 +7,11 @@ blocked GEMM/SpMM/edge-softmax kernels stop clearing their per-shape
 throughput floors or the blocked-vs-scalar speedup floors on the gated
 n=10k shapes, when any native per-model train-step row (gcn2 / gat2 /
 appnp10 — their presence also proves the models actually run natively)
-blows its budget or goes missing, or when the pull_depth=2 pipelined
-epoch falls behind the serial epoch.
+blows its budget or goes missing, when the kernel-ISA dispatch rows go
+missing or the auto tier resolves below the 8-lane blocked path (or the
+forced-v16 rows miss their throughput floors on runners where the wide
+tier is detected), or when the pull_depth=2 pipelined epoch falls behind
+the serial epoch.
 The history/throughput budgets are deliberately loose: shared CI runners
 are noisy, so those catch order-of-magnitude regressions (and near-hangs
 shorter than the job timeout), not few-percent drift; the GEMM/SpMM
@@ -32,6 +35,14 @@ local experimentation:
                                     oracle is serial softmax math, so the
                                     floor is looser than the SpMM one —
                                     the win is tracked by the trajectory)
+    GAS_BENCH_MIN_GEMM_V16_GFLOPS  (default 1.0, the forced-v16 n=10k gemm
+                                    row; applied only when the bench record
+                                    says the wide tier was detected
+                                    (`kernel_isa_wide`), with a logged skip
+                                    otherwise — a v16 floor on an AVX2-only
+                                    runner would gate emulated shuffles)
+    GAS_BENCH_MIN_SPMM_V16_GEDGES  (default 0.02, the forced-v16 n=10k deg8
+                                    scatter row; same wide-detection gate)
     GAS_BENCH_MAX_STEP_MS          (default 2000, every native train-step
                                     row; loose — catches hangs, not drift)
     GAS_BENCH_MIN_OVERLAP_SPEEDUP  (default 0.9, pipelined vs serial epoch)
@@ -80,6 +91,8 @@ def main() -> int:
     spmm_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_SPMM_SPEEDUP", "2.0"))
     attn_gedges_floor = float(os.environ.get("GAS_BENCH_MIN_ATTN_GEDGES", "0.005"))
     attn_speedup_floor = float(os.environ.get("GAS_BENCH_MIN_ATTN_SPEEDUP", "1.2"))
+    gemm_v16_floor = float(os.environ.get("GAS_BENCH_MIN_GEMM_V16_GFLOPS", "1.0"))
+    spmm_v16_floor = float(os.environ.get("GAS_BENCH_MIN_SPMM_V16_GEDGES", "0.02"))
     step_budget_ms = float(os.environ.get("GAS_BENCH_MAX_STEP_MS", "2000"))
     overlap_floor = float(os.environ.get("GAS_BENCH_MIN_OVERLAP_SPEEDUP", "0.9"))
     codec_ratio_cap = float(os.environ.get("GAS_BENCH_MAX_CODEC_RATIO", "4.0"))
@@ -153,6 +166,37 @@ def main() -> int:
         print(f"{key}: {v:.2f}x (floor {attn_speedup_floor}x)")
         if v < attn_speedup_floor:
             failures.append(f"{key} = {v:.2f}x below floor {attn_speedup_floor}x")
+
+    # kernel ISA dispatch: liveness first — the auto-dispatched row and
+    # every forced-tier row must exist (a missing row means the dispatcher
+    # or the forcing path silently stopped running), and the resolved auto
+    # tier must be at least the 8-lane blocked path (Scalar is never
+    # auto-selected; seeing 0 here means detection broke or someone left
+    # GAS_KERNEL_ISA=scalar set in the CI environment)
+    for tag in ("[isa auto]", "[isa scalar-forced]", "[isa v8-forced]", "[isa v16-forced]"):
+        name, ms = one("gemm fwd n10k", tag)
+        print(f"{name}: median {ms:.3f} ms (liveness)")
+    for tag in ("[isa v8-forced]", "[isa v16-forced]"):
+        name, ms = one("spmm fwd n10k_deg8", tag)
+        print(f"{name}: median {ms:.3f} ms (liveness)")
+    kernel_isa = metrics["kernel_isa"]
+    print(f"kernel_isa: {kernel_isa:.0f} (0=scalar 1=v8 2=v16; floor 1)")
+    if kernel_isa < 1.0:
+        failures.append(f"kernel_isa = {kernel_isa:.0f}: auto dispatch resolved below the v8 tier")
+    # per-tier throughput floors: only meaningful where the wide tier is
+    # native — on an AVX2-only runner the v16 rows measure narrowed
+    # codegen, so the floor is skipped (loudly, never silently)
+    if metrics.get("kernel_isa_wide", 0.0) >= 1.0:
+        for key, floor, unit in (
+            ("gemm_fwd_n10k_v16_gflops", gemm_v16_floor, "GFLOP/s"),
+            ("spmm_fwd_n10k_deg8_v16_gedges", spmm_v16_floor, "GEdge/s"),
+        ):
+            v = metrics[key]
+            print(f"{key}: {v:.3f} {unit} (floor {floor})")
+            if v < floor:
+                failures.append(f"{key} = {v:.3f} {unit} below floor {floor}")
+    else:
+        print("wide tier not detected on this runner — v16 throughput floors skipped")
 
     # native per-model train steps: present (the artifact loaded and the
     # interpreter ran it) and within the hang budget. Keyed off the

@@ -16,6 +16,10 @@ Rules:
   * missing baseline  -> pass (first run on a fresh branch history)
   * tiny-mode mismatch between fresh and baseline -> pass with a note
     (the records are not comparable)
+  * kernel-ISA tier mismatch -> pass with a note: micro records carry the
+    resolved dispatch tier as the `kernel_isa` metric, and a baseline
+    measured on a different tier (scalar/v8/v16) prices every kernel row
+    differently; the main-only refresh step re-keys the baseline
   * toolchain mismatch -> pass with a note: when the workflow exports
     GAS_BENCH_TRAJ_FINGERPRINT (the rustc version) and the committed
     FINGERPRINT next to the baseline differs, kernel codegen changed under
@@ -132,6 +136,19 @@ def main() -> int:
         return 0
     if fresh.get("metrics", {}).get("tiny") != base.get("metrics", {}).get("tiny"):
         print("tiny-mode mismatch between fresh and baseline — records not comparable, skipping")
+        return 0
+    # micro records carry the resolved kernel-ISA tier (0=scalar 1=v8
+    # 2=v16); a baseline measured on a different tier (runner generation
+    # changed, or a forced GAS_KERNEL_ISA run was committed) prices every
+    # kernel row differently, so the medians are not comparable — the
+    # main-only refresh step will re-key the baseline on the new tier
+    if fresh.get("metrics", {}).get("kernel_isa") != base.get("metrics", {}).get("kernel_isa"):
+        print(
+            "kernel-ISA tier mismatch between fresh and baseline "
+            f"({base.get('metrics', {}).get('kernel_isa')!r} -> "
+            f"{fresh.get('metrics', {}).get('kernel_isa')!r}) — "
+            "records not comparable, skipping until main refreshes the baseline"
+        )
         return 0
     fingerprint = os.environ.get("GAS_BENCH_TRAJ_FINGERPRINT", "")
     fp_path = os.path.join(os.path.dirname(base_path) or ".", "FINGERPRINT")

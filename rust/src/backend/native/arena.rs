@@ -1,0 +1,191 @@
+//! Reusable per-step buffer arena for the native tape.
+//!
+//! Every intermediate the tape needs for one forward/backward step — value
+//! slots, halo/splice staging, loss scratch, backward `dq`/`dx`/`dasrc`
+//! buffers — is checked out of a [`StepArena`] and returned when the step is
+//! done. The arena never frees: buffers are recycled by capacity, so after a
+//! warm-up step the steady-state compute path performs zero heap allocations
+//! (asserted by the `zero_alloc` integration test).
+//!
+//! Numerics: `zeroed(n)` produces exactly the bytes of `vec![0f32; n]` and
+//! `copy_of(src)` exactly those of `src.to_vec()`, so routing a buffer
+//! through the arena cannot change a single bit of any step output.
+
+/// A free-list arena of `Vec<f32>` (and `Vec<f64>` for loss reductions)
+/// scratch buffers, reset — not freed — between steps.
+#[derive(Default)]
+pub struct StepArena {
+    free: Vec<Vec<f32>>,
+    free64: Vec<Vec<f64>>,
+    fresh: usize,
+}
+
+impl StepArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of buffers that had to be freshly heap-allocated because the
+    /// free list had no fit. Stable across steps once warm.
+    pub fn fresh_allocs(&self) -> usize {
+        self.fresh
+    }
+
+    /// Pop the best-fitting recycled buffer: smallest capacity >= len, else
+    /// the largest available (which will grow once and then satisfy this
+    /// size forever after).
+    fn pop_fit(&mut self, len: usize) -> Option<Vec<f32>> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            best = Some(match best {
+                None => i,
+                Some(j) => {
+                    let bc = self.free[j].capacity();
+                    let better = if cap >= len && bc >= len {
+                        cap < bc // both fit: smaller wins
+                    } else if cap >= len || bc >= len {
+                        cap >= len // exactly one fits: the fitting one wins
+                    } else {
+                        cap > bc // neither fits: larger wins (grows less later)
+                    };
+                    if better {
+                        i
+                    } else {
+                        j
+                    }
+                }
+            });
+        }
+        best.map(|i| self.free.swap_remove(i))
+    }
+
+    /// A buffer of `len` zeros — bit-identical to `vec![0f32; len]`.
+    pub fn zeroed(&mut self, len: usize) -> Vec<f32> {
+        match self.pop_fit(len) {
+            Some(mut b) => {
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.fresh += 1;
+                vec![0f32; len]
+            }
+        }
+    }
+
+    /// A buffer holding a copy of `src` — bit-identical to `src.to_vec()`.
+    pub fn copy_of(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut b = self.zeroed_capacity(src.len());
+        b.extend_from_slice(src);
+        b
+    }
+
+    /// An empty buffer with at least `cap` capacity (len 0).
+    pub fn zeroed_capacity(&mut self, cap: usize) -> Vec<f32> {
+        match self.pop_fit(cap) {
+            Some(mut b) => {
+                b.clear();
+                b.reserve(cap);
+                b
+            }
+            None => {
+                self.fresh += 1;
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Return a buffer to the free list for the next checkout.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// A buffer of `len` f64 zeros — bit-identical to `vec![0f64; len]`.
+    pub fn zeroed64(&mut self, len: usize) -> Vec<f64> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free64.iter().enumerate() {
+            if b.capacity() >= len {
+                best = Some(i);
+                break;
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.free64.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.fresh += 1;
+                vec![0f64; len]
+            }
+        }
+    }
+
+    /// Return an f64 buffer to the free list.
+    pub fn put64(&mut self, buf: Vec<f64>) {
+        if buf.capacity() > 0 {
+            self.free64.push(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_matches_fresh_vec() {
+        let mut ar = StepArena::new();
+        let a = ar.zeroed(7);
+        assert_eq!(a, vec![0f32; 7]);
+        ar.put(a);
+        // Recycled buffer must be indistinguishable from a fresh one.
+        let b = ar.zeroed(5);
+        assert_eq!(b, vec![0f32; 5]);
+        let c = ar.zeroed(9);
+        assert_eq!(c, vec![0f32; 9]);
+    }
+
+    #[test]
+    fn copy_of_matches_to_vec() {
+        let mut ar = StepArena::new();
+        let src = [1.0f32, -0.0, 3.5, f32::MIN_POSITIVE];
+        let seed = ar.zeroed(16);
+        ar.put(seed);
+        let got = ar.copy_of(&src);
+        assert_eq!(got.len(), src.len());
+        for (g, s) in got.iter().zip(src.iter()) {
+            assert_eq!(g.to_bits(), s.to_bits());
+        }
+    }
+
+    #[test]
+    fn steady_state_reuses_buffers() {
+        let mut ar = StepArena::new();
+        for _ in 0..4 {
+            let a = ar.zeroed(64);
+            let b = ar.zeroed(32);
+            ar.put(a);
+            ar.put(b);
+        }
+        // First round allocates two buffers; later rounds reuse them.
+        assert_eq!(ar.fresh_allocs(), 2);
+    }
+
+    #[test]
+    fn f64_scratch_reused_too() {
+        let mut ar = StepArena::new();
+        for _ in 0..3 {
+            let p = ar.zeroed64(10);
+            assert_eq!(p, vec![0f64; 10]);
+            ar.put64(p);
+        }
+        assert_eq!(ar.fresh_allocs(), 1);
+    }
+}

@@ -31,6 +31,8 @@
 //! contributes `exp(0)`), and `leaky_relu` uses slope 0.2 with the
 //! `x >= 0` branch convention of `jax.nn.leaky_relu`.
 
+use super::arena::StepArena;
+use super::isa::{kernel_isa, KernelIsa};
 use super::ops::EdgeIndex;
 use super::{gemm, spmm};
 use rayon::prelude::*;
@@ -72,6 +74,21 @@ pub struct Softmax {
 /// Per-head attention scores `s[n, k] = Σ_d z[n, k·dh + d] · a[k, d]`
 /// (the `einsum("nkd,kd->nk")` of the reference), rayon over rows.
 pub fn head_scores(z: &[f32], rows: usize, heads: usize, dh: usize, a: &[f32]) -> Vec<f32> {
+    let mut s = vec![0f32; rows * heads];
+    head_scores_into(z, rows, heads, dh, a, &mut s);
+    s
+}
+
+/// [`head_scores`] writing into a caller (arena) buffer; every element of
+/// `s[..rows*heads]` is overwritten.
+pub(crate) fn head_scores_into(
+    z: &[f32],
+    rows: usize,
+    heads: usize,
+    dh: usize,
+    a: &[f32],
+    s: &mut [f32],
+) {
     let w = heads * dh;
     assert!(
         z.len() >= rows * w,
@@ -80,7 +97,13 @@ pub fn head_scores(z: &[f32], rows: usize, heads: usize, dh: usize, a: &[f32]) -
         rows * w
     );
     assert!(a.len() >= w, "attn::head_scores: a has {} values, K*dh = {}", a.len(), w);
-    let mut s = vec![0f32; rows * heads];
+    assert!(
+        s.len() >= rows * heads,
+        "attn::head_scores: s has {} values, rows*K = {}",
+        s.len(),
+        rows * heads
+    );
+    let s = &mut s[..rows * heads];
     let body = |(n, srow): (usize, &mut [f32])| {
         let zrow = &z[n * w..n * w + w];
         for (kk, cell) in srow.iter_mut().enumerate() {
@@ -96,7 +119,6 @@ pub fn head_scores(z: &[f32], rows: usize, heads: usize, dh: usize, a: &[f32]) -
     } else {
         s.chunks_mut(heads).enumerate().for_each(body);
     }
-    s
 }
 
 /// One destination row of the softmax: scores stashed, max folded (self
@@ -146,6 +168,39 @@ fn softmax_row(
 /// the edge-indexed `alpha`), so the result is bitwise identical to
 /// [`edge_softmax_scalar`] at any thread count.
 pub fn edge_softmax(ei: &EdgeIndex, s_src: &[f32], s_dst: &[f32], heads: usize) -> Softmax {
+    edge_softmax_isa(ei, s_src, s_dst, heads, kernel_isa())
+}
+
+/// [`edge_softmax`] on a forced tier. The softmax math is per-row scalar
+/// code on every blocked tier (V8 and V16 share it); `Scalar` routes to
+/// the serial oracle.
+pub fn edge_softmax_isa(
+    ei: &EdgeIndex,
+    s_src: &[f32],
+    s_dst: &[f32],
+    heads: usize,
+    isa: KernelIsa,
+) -> Softmax {
+    if isa == KernelIsa::Scalar {
+        return edge_softmax_scalar(ei, s_src, s_dst, heads);
+    }
+    let mut alpha = vec![0f32; ei.num_edges() * heads];
+    let mut salpha = vec![0f32; ei.n_out * heads];
+    edge_softmax_into(ei, s_src, s_dst, heads, &mut alpha, &mut salpha);
+    Softmax { alpha, salpha }
+}
+
+/// Blocked edge-softmax core writing into caller (arena) buffers; every
+/// element of both outputs is overwritten. The serial path runs the block
+/// body once over the whole range — no task list, no allocations.
+pub(crate) fn edge_softmax_into(
+    ei: &EdgeIndex,
+    s_src: &[f32],
+    s_dst: &[f32],
+    heads: usize,
+    alpha: &mut [f32],
+    salpha: &mut [f32],
+) {
     let nb = ei.n_out;
     assert!(
         s_src.len() >= ei.n_src * heads,
@@ -161,26 +216,10 @@ pub fn edge_softmax(ei: &EdgeIndex, s_src: &[f32], s_dst: &[f32], heads: usize) 
     );
     let (off, idx, _) = ei.dst_csr();
     let e_real = ei.num_edges();
-    let mut alpha = vec![0f32; e_real * heads];
-    let mut salpha = vec![0f32; nb * heads];
-    // carve disjoint per-block slices of both outputs (edge ranges per
-    // row block are contiguous in dst-CSR order) — no unsafe needed
-    let nblocks = nb.div_ceil(RB);
-    let mut tasks: Vec<(usize, &mut [f32], &mut [f32])> = Vec::with_capacity(nblocks);
-    let mut alpha_rest = &mut alpha[..];
-    let mut sal_rest = &mut salpha[..];
-    let mut e_prev = 0usize;
-    for blk in 0..nblocks {
-        let r0 = blk * RB;
-        let r1 = (r0 + RB).min(nb);
-        let e1 = off[r1] as usize;
-        let (a_blk, rest) = alpha_rest.split_at_mut((e1 - e_prev) * heads);
-        alpha_rest = rest;
-        let (s_blk, rest) = sal_rest.split_at_mut((r1 - r0) * heads);
-        sal_rest = rest;
-        tasks.push((blk, a_blk, s_blk));
-        e_prev = e1;
-    }
+    assert!(
+        alpha.len() == e_real * heads && salpha.len() == nb * heads,
+        "attn::edge_softmax: output buffers shaped for a different graph"
+    );
     let body = |(blk, a_blk, s_blk): (usize, &mut [f32], &mut [f32])| {
         let r0 = blk * RB;
         let mut a_off = 0usize;
@@ -194,11 +233,30 @@ pub fn edge_softmax(ei: &EdgeIndex, s_src: &[f32], s_dst: &[f32], heads: usize) 
         }
     };
     if (e_real + nb) * heads >= PAR_MIN_LANES {
+        // carve disjoint per-block slices of both outputs (edge ranges per
+        // row block are contiguous in dst-CSR order) — no unsafe needed
+        let nblocks = nb.div_ceil(RB);
+        let mut tasks: Vec<(usize, &mut [f32], &mut [f32])> = Vec::with_capacity(nblocks);
+        let mut alpha_rest = &mut alpha[..];
+        let mut sal_rest = &mut salpha[..];
+        let mut e_prev = 0usize;
+        for blk in 0..nblocks {
+            let r0 = blk * RB;
+            let r1 = (r0 + RB).min(nb);
+            let e1 = off[r1] as usize;
+            let (a_blk, rest) = alpha_rest.split_at_mut((e1 - e_prev) * heads);
+            alpha_rest = rest;
+            let (s_blk, rest) = sal_rest.split_at_mut((r1 - r0) * heads);
+            sal_rest = rest;
+            tasks.push((blk, a_blk, s_blk));
+            e_prev = e1;
+        }
         tasks.into_par_iter().for_each(body);
     } else {
-        tasks.into_iter().for_each(body);
+        // the body with blk = 0 over the full slices walks every row in
+        // the same order the block decomposition would
+        body((0, alpha, salpha));
     }
-    Softmax { alpha, salpha }
 }
 
 /// Serial reference for [`edge_softmax`]: one row at a time, plain loops.
@@ -246,6 +304,44 @@ pub fn edge_softmax_scalar(ei: &EdgeIndex, s_src: &[f32], s_dst: &[f32], heads: 
 /// after the edge sums, matching the reference's `scatter_sum + self_msg`
 /// order. Pure copies aside, the accumulation chains are the SpMM's.
 pub fn attn_scatter(ei: &EdgeIndex, sm: &Softmax, z: &[f32], heads: usize, dh: usize) -> Vec<f32> {
+    attn_scatter_isa(ei, sm, z, heads, dh, kernel_isa())
+}
+
+/// [`attn_scatter`] on a forced tier: the per-head panel aggregation
+/// carries the tier into [`spmm::scatter_weighted_isa`]; `Scalar` routes
+/// to the serial oracle.
+pub fn attn_scatter_isa(
+    ei: &EdgeIndex,
+    sm: &Softmax,
+    z: &[f32],
+    heads: usize,
+    dh: usize,
+    isa: KernelIsa,
+) -> Vec<f32> {
+    if isa == KernelIsa::Scalar {
+        return attn_scatter_scalar(ei, sm, z, heads, dh);
+    }
+    let mut out = vec![0f32; ei.n_out * heads * dh];
+    let mut ar = StepArena::new();
+    attn_scatter_into(ei, sm, z, heads, dh, isa, &mut ar, &mut out);
+    out
+}
+
+/// Blocked aggregation core writing into a caller buffer (every element
+/// of `out[..nb*heads*dh]` is overwritten); per-head staging (`zh`, the
+/// weight column `wk`, the head output `oh`) is checked out of the arena —
+/// the zero-alloc tape path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_scatter_into(
+    ei: &EdgeIndex,
+    sm: &Softmax,
+    z: &[f32],
+    heads: usize,
+    dh: usize,
+    isa: KernelIsa,
+    ar: &mut StepArena,
+    out: &mut [f32],
+) {
     let w = heads * dh;
     let (nb, rows) = (ei.n_out, ei.n_src);
     let e_real = ei.num_edges();
@@ -259,9 +355,17 @@ pub fn attn_scatter(ei: &EdgeIndex, sm: &Softmax, z: &[f32], heads: usize, dh: u
         sm.alpha.len() == e_real * heads && sm.salpha.len() == nb * heads,
         "attn::attn_scatter: softmax shaped for a different graph"
     );
+    assert!(
+        out.len() >= nb * w,
+        "attn::attn_scatter: out has {} values, n_out*K*dh = {}",
+        out.len(),
+        nb * w
+    );
+    let out = &mut out[..nb * w];
     let par = (e_real + nb) * w >= PAR_MIN_LANES;
-    let mut out = vec![0f32; nb * w];
-    let mut zh = vec![0f32; rows * dh];
+    let mut zh = ar.zeroed(rows * dh);
+    let mut wk = ar.zeroed(e_real);
+    let mut oh = ar.zeroed(nb * dh);
     for kk in 0..heads {
         let gather = |(n, row): (usize, &mut [f32])| {
             row.copy_from_slice(&z[n * w + kk * dh..n * w + kk * dh + dh]);
@@ -271,12 +375,22 @@ pub fn attn_scatter(ei: &EdgeIndex, sm: &Softmax, z: &[f32], heads: usize, dh: u
         } else {
             zh.chunks_mut(dh).enumerate().for_each(gather);
         }
-        let wk: Vec<f32> = (0..e_real).map(|e| sm.alpha[e * heads + kk]).collect();
-        let oh = spmm::scatter_weighted(ei, &wk, &zh, dh);
+        for (e, we) in wk.iter_mut().enumerate() {
+            *we = sm.alpha[e * heads + kk];
+        }
+        if kk > 0 {
+            // scatter seeds its accumulators from the incoming values, so
+            // the recycled head buffer must look freshly zeroed
+            oh.fill(0.0);
+        }
+        spmm::scatter_weighted_into_isa(ei, &wk, &zh, dh, isa, &mut oh);
         for (orow, hrow) in out.chunks_mut(w).zip(oh.chunks(dh)) {
             orow[kk * dh..kk * dh + dh].copy_from_slice(hrow);
         }
     }
+    ar.put(zh);
+    ar.put(wk);
+    ar.put(oh);
     let self_body = |(v, orow): (usize, &mut [f32])| {
         for kk in 0..heads {
             let sa = sm.salpha[v * heads + kk];
@@ -290,7 +404,6 @@ pub fn attn_scatter(ei: &EdgeIndex, sm: &Softmax, z: &[f32], heads: usize, dh: u
     } else {
         out.chunks_mut(w).enumerate().for_each(self_body);
     }
-    out
 }
 
 /// Serial reference for [`attn_scatter`]: per destination row, per head,
@@ -337,6 +450,9 @@ pub(crate) struct GatSaved {
 
 /// One multi-head GAT layer forward (bias excluded — it is its own tape
 /// op): projection, per-head scores, edge softmax, weighted aggregation.
+/// Every intermediate — including the saved state handed to [`gat_bwd`] —
+/// is checked out of the arena; the tape returns the saved buffers when
+/// the step ends.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gat_fwd(
     ei: &EdgeIndex,
@@ -348,12 +464,30 @@ pub(crate) fn gat_fwd(
     adst: &[f32],
     heads: usize,
     dh: usize,
+    ar: &mut StepArena,
 ) -> (Vec<f32>, GatSaved) {
-    let z = gemm::matmul(h_src, rows, din, w, heads * dh);
-    let s_src = head_scores(&z, rows, heads, dh, asrc);
-    let s_dst = head_scores(&z, ei.n_out, heads, dh, adst);
-    let sm = edge_softmax(ei, &s_src, &s_dst, heads);
-    let out = attn_scatter(ei, &sm, &z, heads, dh);
+    let isa = kernel_isa();
+    let wd = heads * dh;
+    let mut z = ar.zeroed(rows * wd);
+    gemm::matmul_into(h_src, rows, din, w, wd, &mut z);
+    let mut s_src = ar.zeroed(rows * heads);
+    head_scores_into(&z, rows, heads, dh, asrc, &mut s_src);
+    let mut s_dst = ar.zeroed(ei.n_out * heads);
+    head_scores_into(&z, ei.n_out, heads, dh, adst, &mut s_dst);
+    let sm = if isa == KernelIsa::Scalar {
+        edge_softmax_scalar(ei, &s_src, &s_dst, heads)
+    } else {
+        let mut alpha = ar.zeroed(ei.num_edges() * heads);
+        let mut salpha = ar.zeroed(ei.n_out * heads);
+        edge_softmax_into(ei, &s_src, &s_dst, heads, &mut alpha, &mut salpha);
+        Softmax { alpha, salpha }
+    };
+    let mut out = ar.zeroed(ei.n_out * wd);
+    if isa == KernelIsa::Scalar {
+        out.copy_from_slice(&attn_scatter_scalar(ei, &sm, &z, heads, dh));
+    } else {
+        attn_scatter_into(ei, &sm, &z, heads, dh, isa, ar, &mut out);
+    }
     (out, GatSaved { z, s_src, s_dst, sm })
 }
 
@@ -383,6 +517,7 @@ pub(crate) fn gat_bwd(
     heads: usize,
     dh: usize,
     rows: usize,
+    ar: &mut StepArena,
 ) -> Vec<f32> {
     let w = heads * dh;
     let nb = ei.n_out;
@@ -394,30 +529,10 @@ pub(crate) fn gat_bwd(
     let (alpha, salpha) = (&sv.sm.alpha[..], &sv.sm.salpha[..]);
 
     // --- phase A: dst-major — de_pre per edge, des_pre + ds_dst per row --
-    let mut de_pre = vec![0f32; e_real * heads];
-    let mut des_pre = vec![0f32; nb * heads];
-    let mut ds_dst = vec![0f32; nb * heads];
+    let mut de_pre = ar.zeroed(e_real * heads);
+    let mut des_pre = ar.zeroed(nb * heads);
+    let mut ds_dst = ar.zeroed(nb * heads);
     {
-        let nblocks = nb.div_ceil(RB);
-        let mut tasks: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> =
-            Vec::with_capacity(nblocks);
-        let mut de_rest = &mut de_pre[..];
-        let mut des_rest = &mut des_pre[..];
-        let mut dd_rest = &mut ds_dst[..];
-        let mut e_prev = 0usize;
-        for blk in 0..nblocks {
-            let r0 = blk * RB;
-            let r1 = (r0 + RB).min(nb);
-            let e1 = off[r1] as usize;
-            let (de_blk, rest) = de_rest.split_at_mut((e1 - e_prev) * heads);
-            de_rest = rest;
-            let (des_blk, rest) = des_rest.split_at_mut((r1 - r0) * heads);
-            des_rest = rest;
-            let (dd_blk, rest) = dd_rest.split_at_mut((r1 - r0) * heads);
-            dd_rest = rest;
-            tasks.push((blk, de_blk, des_blk, dd_blk));
-            e_prev = e1;
-        }
         let body = |(blk, de_blk, des_blk, dd_blk): (usize, &mut [f32], &mut [f32], &mut [f32])| {
             let r0 = blk * RB;
             let mut a_off = 0usize;
@@ -467,15 +582,40 @@ pub(crate) fn gat_bwd(
             }
         };
         if par {
+            // carve disjoint per-block slices (edge ranges per row block
+            // are contiguous in dst-CSR order) — no unsafe needed
+            let nblocks = nb.div_ceil(RB);
+            let mut tasks: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> =
+                Vec::with_capacity(nblocks);
+            let mut de_rest = &mut de_pre[..];
+            let mut des_rest = &mut des_pre[..];
+            let mut dd_rest = &mut ds_dst[..];
+            let mut e_prev = 0usize;
+            for blk in 0..nblocks {
+                let r0 = blk * RB;
+                let r1 = (r0 + RB).min(nb);
+                let e1 = off[r1] as usize;
+                let (de_blk, rest) = de_rest.split_at_mut((e1 - e_prev) * heads);
+                de_rest = rest;
+                let (des_blk, rest) = des_rest.split_at_mut((r1 - r0) * heads);
+                des_rest = rest;
+                let (dd_blk, rest) = dd_rest.split_at_mut((r1 - r0) * heads);
+                dd_rest = rest;
+                tasks.push((blk, de_blk, des_blk, dd_blk));
+                e_prev = e1;
+            }
             tasks.into_par_iter().for_each(body);
         } else {
-            tasks.into_iter().for_each(body);
+            // the body with blk = 0 over the full slices walks every row
+            // in the same order the block decomposition would — no task
+            // list, no allocations
+            body((0, &mut de_pre[..], &mut des_pre[..], &mut ds_dst[..]));
         }
     }
 
     // --- phase B: src-major — dz message grads + ds_src per source row --
-    let mut dz = vec![0f32; rows * w];
-    let mut ds_src = vec![0f32; rows * heads];
+    let mut dz = ar.zeroed(rows * w);
+    let mut ds_src = ar.zeroed(rows * heads);
     {
         let (s_off, s_dst_arr, _) = ei.src_csr();
         let pos = ei.src_csr_dst_pos();
@@ -541,6 +681,10 @@ pub(crate) fn gat_bwd(
             }
         }
     }
+    ar.put(de_pre);
+    ar.put(des_pre);
+    ar.put(ds_dst);
+    ar.put(ds_src);
     dz
 }
 
@@ -582,5 +726,21 @@ mod tests {
         assert_eq!(blocked, scalar);
         // the empty dst row is exactly its own (self-attended) message
         assert_eq!(&blocked[6..12], &z[6..12]);
+    }
+
+    #[test]
+    fn forced_tiers_agree_bitwise_on_tiny_graph() {
+        let ei = tiny_graph();
+        let s_src = [0.3f32, -0.2, 0.9, 0.1, -0.5, 0.7];
+        let s_dst = [0.1f32, 0.4, -0.3, 0.2];
+        let z: Vec<f32> = (0..3 * 6).map(|i| (i as f32 - 8.0) * 0.25).collect();
+        let base_sm = edge_softmax_isa(&ei, &s_src, &s_dst, 2, KernelIsa::Scalar);
+        let base = attn_scatter_isa(&ei, &base_sm, &z, 2, 3, KernelIsa::Scalar);
+        for isa in [KernelIsa::V8, KernelIsa::V16] {
+            let sm = edge_softmax_isa(&ei, &s_src, &s_dst, 2, isa);
+            assert_eq!(sm.alpha, base_sm.alpha, "{isa:?}");
+            assert_eq!(sm.salpha, base_sm.salpha, "{isa:?}");
+            assert_eq!(attn_scatter_isa(&ei, &sm, &z, 2, 3, isa), base, "{isa:?}");
+        }
     }
 }

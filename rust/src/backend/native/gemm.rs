@@ -34,8 +34,27 @@
 //! Shape checks here are *real* asserts, release builds included: these
 //! entry points are fed by manifest-derived shapes, and a bad manifest
 //! must fail loudly rather than read OOB-adjacent garbage.
+//!
+//! ISA tiers ([`super::isa`]): every public entry point dispatches on the
+//! process-wide [`KernelIsa`] — `Scalar` routes to the element-ordered
+//! oracles in [`super::ops`], `V8` is the 8-lane path described above, and
+//! `V16` is a 16-lane ([`V16`]) twin of the same macro-kernels (64-byte
+//! panels, 2×16-lane register tiles). The V16 twin is plain safe Rust with
+//! the identical per-element depth-order mul-then-add chain, so it is
+//! bit-compatible with both other tiers on any machine; `avx512f`
+//! detection only decides whether it is *auto-selected*. The `*_isa`
+//! variants force a tier explicitly (used by the parity property tests and
+//! the forced bench rows). Packing buffers and row masks live in
+//! thread-local scratch so steady-state calls allocate nothing; a rayon
+//! work-steal that re-enters a kernel on the same thread falls back to
+//! fresh buffers instead of aliasing the busy scratch.
+
+use std::cell::RefCell;
 
 use rayon::prelude::*;
+
+use super::isa::{kernel_isa, KernelIsa};
+use super::ops;
 
 /// Register-tile rows: A rows per micro-kernel call.
 const MR: usize = 3;
@@ -82,23 +101,59 @@ impl V8 {
     }
 }
 
+/// Lanes per packed panel on the wide ([`KernelIsa::V16`]) tier.
+const NR16: usize = 16;
+
+/// 16 f32 lanes, 64-byte aligned — the [`V8`] idiom widened to one
+/// 512-bit register. Same mul-then-add contract; plain safe Rust, so the
+/// tier is correct everywhere and `avx512f` detection only gates when it
+/// is auto-selected.
+#[derive(Clone, Copy)]
+#[repr(align(64))]
+struct V16([f32; NR16]);
+
+impl V16 {
+    const ZERO: V16 = V16([0.0; NR16]);
+
+    /// `self += a * b` lane-wise — mul then add, never `mul_add`.
+    #[inline(always)]
+    fn fma(&mut self, a: f32, b: &V16) {
+        for (acc, &bv) in self.0.iter_mut().zip(b.0.iter()) {
+            *acc += a * bv;
+        }
+    }
+
+    /// Load up to 16 lanes from a slice, zero-padding the rest.
+    #[inline(always)]
+    fn load(src: &[f32]) -> V16 {
+        let mut v = V16::ZERO;
+        let w = src.len().min(NR16);
+        v.0[..w].copy_from_slice(&src[..w]);
+        v
+    }
+}
+
 /// Per-row "has any nonzero" mask of the `[n, k]` A operand — zero rows
-/// are shape padding and every kernel skips them wholesale.
-fn nonzero_rows(a: &[f32], n: usize, k: usize) -> Vec<bool> {
+/// are shape padding and every kernel skips them wholesale. Fills the
+/// caller's (recycled) vec.
+fn nonzero_rows_into(a: &[f32], n: usize, k: usize, nz: &mut Vec<bool>) {
     let scan = |row: &[f32]| row.iter().any(|&x| x != 0.0);
     if n * k >= PAR_MIN_FLOPS {
-        a[..n * k].par_chunks(k).map(scan).collect()
+        a[..n * k].par_chunks(k).map(scan).collect_into_vec(nz);
     } else {
-        a[..n * k].chunks(k).map(scan).collect()
+        nz.clear();
+        nz.extend(a[..n * k].chunks(k).map(scan));
     }
 }
 
 /// Pack the `[k, m]` row-major B of `A·B` into `m.div_ceil(NR)` panels:
 /// panel `p` holds output columns `p*NR..`, depth-major (`packed[p*k + kk]`
-/// is the panel's 8 columns at depth `kk`), zero-padded past `m`.
-fn pack_b(b: &[f32], k: usize, m: usize) -> Vec<V8> {
+/// is the panel's 8 columns at depth `kk`), zero-padded past `m`. Fills
+/// the caller's (recycled) vec.
+fn pack_b_into(b: &[f32], k: usize, m: usize, out: &mut Vec<V8>) {
     let panels = m.div_ceil(NR);
-    let mut out = vec![V8::ZERO; panels * k];
+    out.clear();
+    out.resize(panels * k, V8::ZERO);
     for (p, dst) in out.chunks_mut(k).enumerate() {
         let j0 = p * NR;
         let w = NR.min(m - j0);
@@ -106,14 +161,14 @@ fn pack_b(b: &[f32], k: usize, m: usize) -> Vec<V8> {
             v.0[..w].copy_from_slice(&b[kk * m + j0..kk * m + j0 + w]);
         }
     }
-    out
 }
 
 /// Pack the `[kout, m]` row-major B of `A·Bᵀ` the same way: panel `p`
 /// holds B *rows* `p*NR..` as output columns, depth-major over `m`.
-fn pack_bt(b: &[f32], kout: usize, m: usize) -> Vec<V8> {
+fn pack_bt_into(b: &[f32], kout: usize, m: usize, out: &mut Vec<V8>) {
     let panels = kout.div_ceil(NR);
-    let mut out = vec![V8::ZERO; panels * m];
+    out.clear();
+    out.resize(panels * m, V8::ZERO);
     for (p, dst) in out.chunks_mut(m).enumerate() {
         let i0 = p * NR;
         let w = NR.min(kout - i0);
@@ -124,7 +179,37 @@ fn pack_bt(b: &[f32], kout: usize, m: usize) -> Vec<V8> {
             }
         }
     }
-    out
+}
+
+/// [`pack_b_into`] on 16-lane panels.
+fn pack_b16_into(b: &[f32], k: usize, m: usize, out: &mut Vec<V16>) {
+    let panels = m.div_ceil(NR16);
+    out.clear();
+    out.resize(panels * k, V16::ZERO);
+    for (p, dst) in out.chunks_mut(k).enumerate() {
+        let j0 = p * NR16;
+        let w = NR16.min(m - j0);
+        for (kk, v) in dst.iter_mut().enumerate() {
+            v.0[..w].copy_from_slice(&b[kk * m + j0..kk * m + j0 + w]);
+        }
+    }
+}
+
+/// [`pack_bt_into`] on 16-lane panels.
+fn pack_bt16_into(b: &[f32], kout: usize, m: usize, out: &mut Vec<V16>) {
+    let panels = kout.div_ceil(NR16);
+    out.clear();
+    out.resize(panels * m, V16::ZERO);
+    for (p, dst) in out.chunks_mut(m).enumerate() {
+        let i0 = p * NR16;
+        let w = NR16.min(kout - i0);
+        for c in 0..w {
+            let brow = &b[(i0 + c) * m..(i0 + c) * m + m];
+            for (v, &x) in dst.iter_mut().zip(brow.iter()) {
+                v.0[c] = x;
+            }
+        }
+    }
 }
 
 /// Micro-kernel: `M` A rows × `P` packed panels, accumulators in registers
@@ -215,11 +300,106 @@ fn row_group<const M: usize>(
     }
 }
 
+/// [`micro_tile`] on 16-lane panels: `M` A rows × `P` packed V16 panels.
+/// Identical accumulation order — per element the depth chain does not
+/// depend on how columns are grouped into panels.
+#[allow(clippy::too_many_arguments)] // private micro-kernel: args are the tile coordinates
+#[inline(always)]
+fn micro_tile16<const M: usize, const P: usize>(
+    a: &[f32],
+    lda: usize,
+    vbase: usize,
+    depth: usize,
+    panels: [&[V16]; P],
+    j0: usize,
+    jn: usize,
+    w: usize,
+    out_rows: &mut [f32],
+) {
+    let mut arows = [a; M];
+    for (i, r) in arows.iter_mut().enumerate() {
+        *r = &a[(vbase + i) * lda..(vbase + i) * lda + depth];
+    }
+    let mut acc = [[V16::ZERO; P]; M];
+    for kk in 0..depth {
+        let mut bv = [V16::ZERO; P];
+        for (q, pan) in panels.iter().enumerate() {
+            bv[q] = pan[kk];
+        }
+        for (i, accr) in acc.iter_mut().enumerate() {
+            let av = arows[i][kk];
+            for (q, accq) in accr.iter_mut().enumerate() {
+                accq.fma(av, &bv[q]);
+            }
+        }
+    }
+    for (i, accr) in acc.iter().enumerate() {
+        for (q, accq) in accr.iter().enumerate() {
+            let jq = j0 + q * NR16;
+            let lanes = if q + 1 == P { jn } else { NR16 };
+            out_rows[i * w + jq..i * w + jq + lanes].copy_from_slice(&accq.0[..lanes]);
+        }
+    }
+}
+
+/// [`row_group`] on 16-lane panels: pairs of V16 panels (32 output
+/// columns per micro-kernel call), then the odd trailing panel.
+#[inline(always)]
+fn row_group16<const M: usize>(
+    a: &[f32],
+    lda: usize,
+    vbase: usize,
+    depth: usize,
+    packed: &[V16],
+    w: usize,
+    out_rows: &mut [f32],
+) {
+    let panels = w.div_ceil(NR16);
+    let mut p = 0;
+    while p + 2 <= panels {
+        let lanes2 = (w - (p + 1) * NR16).min(NR16);
+        micro_tile16::<M, 2>(
+            a,
+            lda,
+            vbase,
+            depth,
+            [&packed[p * depth..(p + 1) * depth], &packed[(p + 1) * depth..(p + 2) * depth]],
+            p * NR16,
+            lanes2,
+            w,
+            out_rows,
+        );
+        p += 2;
+    }
+    if p < panels {
+        let lanes = w - p * NR16;
+        micro_tile16::<M, 1>(
+            a,
+            lda,
+            vbase,
+            depth,
+            [&packed[p * depth..(p + 1) * depth]],
+            p * NR16,
+            lanes.min(NR16),
+            w,
+            out_rows,
+        );
+    }
+}
+
 /// Shared macro-kernel for [`matmul`] / [`matmul_bt`]: `out [n, w] =
 /// A [n, depth] · packed-panels`, rayon-parallel over MC-row blocks.
-/// Zero A rows leave the (already-zeroed) out rows untouched.
-fn gemm_packed(a: &[f32], n: usize, depth: usize, packed: &[V8], w: usize, out: &mut [f32]) {
-    let row_nz = nonzero_rows(a, n, depth);
+/// Zero A rows (per `row_nz`) leave the (already-zeroed) out rows
+/// untouched.
+fn gemm_packed(
+    a: &[f32],
+    n: usize,
+    depth: usize,
+    packed: &[V8],
+    w: usize,
+    row_nz: &[bool],
+    out: &mut [f32],
+) {
     let block = |(blk, out_blk): (usize, &mut [f32])| {
         let rows = out_blk.len() / w;
         let v0 = blk * MC;
@@ -245,40 +425,220 @@ fn gemm_packed(a: &[f32], n: usize, depth: usize, packed: &[V8], w: usize, out: 
     }
 }
 
+/// [`gemm_packed`] on 16-lane panels.
+fn gemm_packed16(
+    a: &[f32],
+    n: usize,
+    depth: usize,
+    packed: &[V16],
+    w: usize,
+    row_nz: &[bool],
+    out: &mut [f32],
+) {
+    let block = |(blk, out_blk): (usize, &mut [f32])| {
+        let rows = out_blk.len() / w;
+        let v0 = blk * MC;
+        let mut r = 0;
+        while r < rows {
+            let mr = MR.min(rows - r);
+            let vbase = v0 + r;
+            if row_nz[vbase..vbase + mr].iter().any(|&nz| nz) {
+                let out_rows = &mut out_blk[r * w..(r + mr) * w];
+                match mr {
+                    3 => row_group16::<3>(a, depth, vbase, depth, packed, w, out_rows),
+                    2 => row_group16::<2>(a, depth, vbase, depth, packed, w, out_rows),
+                    _ => row_group16::<1>(a, depth, vbase, depth, packed, w, out_rows),
+                }
+            }
+            r += mr;
+        }
+    };
+    if n * depth * w >= PAR_MIN_FLOPS {
+        out.par_chunks_mut(MC * w).enumerate().for_each(block);
+    } else {
+        out.chunks_mut(MC * w).enumerate().for_each(block);
+    }
+}
+
+thread_local! {
+    /// Per-thread packing scratch (panel buffer + row mask) for the V8
+    /// tier; V16 has its own. Reused across calls so steady-state kernel
+    /// invocations allocate nothing.
+    static SCRATCH8: RefCell<(Vec<V8>, Vec<bool>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+    static SCRATCH16: RefCell<(Vec<V16>, Vec<bool>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Run `f` with this thread's V8 packing scratch. If the scratch is
+/// already borrowed — a rayon work-steal re-entered a kernel on this
+/// thread — fall back to fresh buffers rather than alias it.
+fn with_scratch8<R>(f: impl FnOnce(&mut Vec<V8>, &mut Vec<bool>) -> R) -> R {
+    SCRATCH8.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut s) => {
+            let (pack, nz) = &mut *s;
+            f(pack, nz)
+        }
+        Err(_) => f(&mut Vec::new(), &mut Vec::new()),
+    })
+}
+
+/// [`with_scratch8`] for the V16 tier.
+fn with_scratch16<R>(f: impl FnOnce(&mut Vec<V16>, &mut Vec<bool>) -> R) -> R {
+    SCRATCH16.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut s) => {
+            let (pack, nz) = &mut *s;
+            f(pack, nz)
+        }
+        Err(_) => f(&mut Vec::new(), &mut Vec::new()),
+    })
+}
+
+/// Tier dispatch for `A·B` into a pre-zeroed `[n, m]` out slice. All dims
+/// nonzero (callers early-return). The `Scalar` tier computes through the
+/// allocating oracle — it is never auto-selected, so the zero-alloc
+/// compute path never sees it.
+fn matmul_dispatch(
+    a: &[f32],
+    n: usize,
+    k: usize,
+    b: &[f32],
+    m: usize,
+    isa: KernelIsa,
+    out: &mut [f32],
+) {
+    match isa {
+        KernelIsa::Scalar => {
+            let r = ops::matmul_scalar(a, n, k, b, m);
+            out[..n * m].copy_from_slice(&r);
+        }
+        KernelIsa::V8 => with_scratch8(|pack, nz| {
+            pack_b_into(b, k, m, pack);
+            nonzero_rows_into(a, n, k, nz);
+            gemm_packed(a, n, k, pack, m, nz, out);
+        }),
+        KernelIsa::V16 => with_scratch16(|pack, nz| {
+            pack_b16_into(b, k, m, pack);
+            nonzero_rows_into(a, n, k, nz);
+            gemm_packed16(a, n, k, pack, m, nz, out);
+        }),
+    }
+}
+
+/// Tier dispatch for `A·Bᵀ` into a pre-zeroed `[n, k]` out slice.
+fn matmul_bt_dispatch(
+    a: &[f32],
+    n: usize,
+    m: usize,
+    b: &[f32],
+    k: usize,
+    isa: KernelIsa,
+    out: &mut [f32],
+) {
+    match isa {
+        KernelIsa::Scalar => {
+            let r = ops::matmul_bt_scalar(a, n, m, b, k);
+            out[..n * k].copy_from_slice(&r);
+        }
+        KernelIsa::V8 => with_scratch8(|pack, nz| {
+            pack_bt_into(b, k, m, pack);
+            nonzero_rows_into(a, n, m, nz);
+            gemm_packed(a, n, m, pack, k, nz, out);
+        }),
+        KernelIsa::V16 => with_scratch16(|pack, nz| {
+            pack_bt16_into(b, k, m, pack);
+            nonzero_rows_into(a, n, m, nz);
+            gemm_packed16(a, n, m, pack, k, nz, out);
+        }),
+    }
+}
+
 /// `a [n,k] @ b [k,m] -> [n,m]`, row-major — the blocked drop-in for
-/// [`super::ops::matmul_scalar`]. Zero rows of `a` (shape padding) are
-/// skipped entirely.
+/// [`super::ops::matmul_scalar`] on the process-wide tier. Zero rows of
+/// `a` (shape padding) are skipped entirely.
 pub fn matmul(a: &[f32], n: usize, k: usize, b: &[f32], m: usize) -> Vec<f32> {
+    matmul_isa(a, n, k, b, m, kernel_isa())
+}
+
+/// [`matmul`] on a forced tier (parity tests, forced bench rows).
+pub fn matmul_isa(a: &[f32], n: usize, k: usize, b: &[f32], m: usize, isa: KernelIsa) -> Vec<f32> {
     assert!(a.len() >= n * k, "gemm::matmul: a has {} values, n*k = {}", a.len(), n * k);
     assert!(b.len() >= k * m, "gemm::matmul: b has {} values, k*m = {}", b.len(), k * m);
     let mut out = vec![0f32; n * m];
     if n == 0 || k == 0 || m == 0 {
         return out;
     }
-    let packed = pack_b(b, k, m);
-    gemm_packed(a, n, k, &packed, m, &mut out);
+    matmul_dispatch(a, n, k, b, m, isa, &mut out);
     out
 }
 
+/// [`matmul`] writing into a pre-zeroed arena buffer (`out.len() >= n*m`,
+/// all `n*m` values zero on entry) — the zero-alloc tape path.
+pub(crate) fn matmul_into(a: &[f32], n: usize, k: usize, b: &[f32], m: usize, out: &mut [f32]) {
+    assert!(a.len() >= n * k, "gemm::matmul: a has {} values, n*k = {}", a.len(), n * k);
+    assert!(b.len() >= k * m, "gemm::matmul: b has {} values, k*m = {}", b.len(), k * m);
+    assert!(out.len() >= n * m, "gemm::matmul: out has {} values, n*m = {}", out.len(), n * m);
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    matmul_dispatch(a, n, k, b, m, kernel_isa(), out);
+}
+
 /// `a [n,m] @ b [k,m]^T -> [n,k]` (used for `dz @ W^T`) — the blocked
-/// drop-in for [`super::ops::matmul_bt_scalar`].
+/// drop-in for [`super::ops::matmul_bt_scalar`] on the process-wide tier.
 pub fn matmul_bt(a: &[f32], n: usize, m: usize, b: &[f32], k: usize) -> Vec<f32> {
+    matmul_bt_isa(a, n, m, b, k, kernel_isa())
+}
+
+/// [`matmul_bt`] on a forced tier.
+pub fn matmul_bt_isa(
+    a: &[f32],
+    n: usize,
+    m: usize,
+    b: &[f32],
+    k: usize,
+    isa: KernelIsa,
+) -> Vec<f32> {
     assert!(a.len() >= n * m, "gemm::matmul_bt: a has {} values, n*m = {}", a.len(), n * m);
     assert!(b.len() >= k * m, "gemm::matmul_bt: b has {} values, k*m = {}", b.len(), k * m);
     let mut out = vec![0f32; n * k];
     if n == 0 || m == 0 || k == 0 {
         return out;
     }
-    let packed = pack_bt(b, k, m);
-    gemm_packed(a, n, m, &packed, k, &mut out);
+    matmul_bt_dispatch(a, n, m, b, k, isa, &mut out);
     out
 }
 
+/// [`matmul_bt`] writing into a pre-zeroed arena buffer.
+pub(crate) fn matmul_bt_into(a: &[f32], n: usize, m: usize, b: &[f32], k: usize, out: &mut [f32]) {
+    assert!(a.len() >= n * m, "gemm::matmul_bt: a has {} values, n*m = {}", a.len(), n * m);
+    assert!(b.len() >= k * m, "gemm::matmul_bt: b has {} values, k*m = {}", b.len(), k * m);
+    assert!(out.len() >= n * k, "gemm::matmul_bt: out has {} values, n*k = {}", out.len(), n * k);
+    if n == 0 || m == 0 || k == 0 {
+        return;
+    }
+    matmul_bt_dispatch(a, n, m, b, k, kernel_isa(), out);
+}
+
 /// `out [k,m] += a [n,k]^T @ da [n,m]` (parameter gradients) — the blocked
-/// drop-in for [`super::ops::matmul_at_b_acc_scalar`]. Rayon-parallel over
-/// `out` row tiles; every element accumulates over `v` in ascending order
-/// on top of the incoming `out` values, so chains match the oracle.
+/// drop-in for [`super::ops::matmul_at_b_acc_scalar`] on the process-wide
+/// tier. Rayon-parallel over `out` row tiles; every element accumulates
+/// over `v` in ascending order on top of the incoming `out` values, so
+/// chains match the oracle.
 pub fn matmul_at_b_acc(a: &[f32], n: usize, k: usize, da: &[f32], m: usize, out: &mut [f32]) {
+    matmul_at_b_acc_isa(a, n, k, da, m, out, kernel_isa());
+}
+
+/// [`matmul_at_b_acc`] on a forced tier.
+pub fn matmul_at_b_acc_isa(
+    a: &[f32],
+    n: usize,
+    k: usize,
+    da: &[f32],
+    m: usize,
+    out: &mut [f32],
+    isa: KernelIsa,
+) {
     assert!(a.len() >= n * k, "gemm::matmul_at_b_acc: a has {} values, n*k = {}", a.len(), n * k);
     assert!(
         da.len() >= n * m,
@@ -295,15 +655,32 @@ pub fn matmul_at_b_acc(a: &[f32], n: usize, k: usize, da: &[f32], m: usize, out:
     if n == 0 || k == 0 || m == 0 {
         return;
     }
-    let row_nz = nonzero_rows(a, n, k);
-    let out = &mut out[..k * m];
-    let tile = |(t, out_blk): (usize, &mut [f32])| {
-        at_b_tile(a, n, k, da, m, t * MR, out_blk, &row_nz);
+    if isa == KernelIsa::Scalar {
+        ops::matmul_at_b_acc_scalar(a, n, k, da, m, out);
+        return;
+    }
+    let wide = isa == KernelIsa::V16;
+    let run = |nz: &mut Vec<bool>, out: &mut [f32]| {
+        nonzero_rows_into(a, n, k, nz);
+        let row_nz: &[bool] = nz;
+        let out = &mut out[..k * m];
+        let tile = |(t, out_blk): (usize, &mut [f32])| {
+            if wide {
+                at_b_tile16(a, n, k, da, m, t * MR, out_blk, row_nz);
+            } else {
+                at_b_tile(a, n, k, da, m, t * MR, out_blk, row_nz);
+            }
+        };
+        if n * k * m >= PAR_MIN_FLOPS {
+            out.par_chunks_mut(MR * m).enumerate().for_each(tile);
+        } else {
+            out.chunks_mut(MR * m).enumerate().for_each(tile);
+        }
     };
-    if n * k * m >= PAR_MIN_FLOPS {
-        out.par_chunks_mut(MR * m).enumerate().for_each(tile);
+    if wide {
+        with_scratch16(|_pack, nz| run(nz, out));
     } else {
-        out.chunks_mut(MR * m).enumerate().for_each(tile);
+        with_scratch8(|_pack, nz| run(nz, out));
     }
 }
 
@@ -348,6 +725,63 @@ fn at_b_tile(
         }
         // ragged tail columns (m % NR): plain loops, still v-ordered
         let j0 = panels_full * NR;
+        if j0 < m {
+            for v in v0..vend {
+                if !row_nz[v] {
+                    continue;
+                }
+                let drow = &da[v * m + j0..v * m + m];
+                let arow = &a[v * k + i0..v * k + i0 + mr];
+                for (i, &av) in arow.iter().enumerate() {
+                    let orow = &mut out_blk[i * m + j0..i * m + m];
+                    for (o, &d) in orow.iter_mut().zip(drow.iter()) {
+                        *o += av * d;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`at_b_tile`] on 16-lane panels: same v-ordered accumulation chains,
+/// wider column strips per register pass.
+#[allow(clippy::too_many_arguments)] // private kernel: args are the tile coordinates
+fn at_b_tile16(
+    a: &[f32],
+    n: usize,
+    k: usize,
+    da: &[f32],
+    m: usize,
+    i0: usize,
+    out_blk: &mut [f32],
+    row_nz: &[bool],
+) {
+    let mr = out_blk.len() / m;
+    let panels_full = m / NR16;
+    for v0 in (0..n).step_by(VB) {
+        let vend = (v0 + VB).min(n);
+        for p in 0..panels_full {
+            let j0 = p * NR16;
+            let mut acc = [V16::ZERO; MR];
+            for (i, accr) in acc.iter_mut().take(mr).enumerate() {
+                accr.0.copy_from_slice(&out_blk[i * m + j0..i * m + j0 + NR16]);
+            }
+            for v in v0..vend {
+                if !row_nz[v] {
+                    continue;
+                }
+                let dv = V16::load(&da[v * m + j0..v * m + j0 + NR16]);
+                let arow = &a[v * k + i0..v * k + i0 + mr];
+                for (i, &av) in arow.iter().enumerate() {
+                    acc[i].fma(av, &dv);
+                }
+            }
+            for (i, accr) in acc.iter().take(mr).enumerate() {
+                out_blk[i * m + j0..i * m + j0 + NR16].copy_from_slice(&accr.0);
+            }
+        }
+        // ragged tail columns (m % NR16): plain loops, still v-ordered
+        let j0 = panels_full * NR16;
         if j0 < m {
             for v in v0..vend {
                 if !row_nz[v] {
@@ -415,6 +849,45 @@ mod tests {
             ops::matmul_at_b_acc_scalar(&a, n, k, &da, m, &mut out_scalar);
             assert_eq!(out_blocked, out_scalar, "{n}x{k}x{m}");
         }
+    }
+
+    #[test]
+    fn v16_tier_matches_v8_bitwise() {
+        let mut rng = Rng::new(7);
+        for &(n, k, m) in &[(1, 1, 1), (3, 5, 8), (7, 16, 17), (33, 20, 40), (130, 33, 20)] {
+            let a = randv(&mut rng, n * k);
+            let b = randv(&mut rng, k * m);
+            let w8 = matmul_isa(&a, n, k, &b, m, KernelIsa::V8);
+            let w16 = matmul_isa(&a, n, k, &b, m, KernelIsa::V16);
+            assert_eq!(w8, w16, "fwd {n}x{k}x{m}");
+            let abt = randv(&mut rng, n * m);
+            assert_eq!(
+                matmul_bt_isa(&abt, n, m, &b, k, KernelIsa::V8),
+                matmul_bt_isa(&abt, n, m, &b, k, KernelIsa::V16),
+                "bt {n}x{k}x{m}"
+            );
+            let da = randv(&mut rng, n * m);
+            let mut o8 = randv(&mut rng, k * m);
+            let mut o16 = o8.clone();
+            matmul_at_b_acc_isa(&a, n, k, &da, m, &mut o8, KernelIsa::V8);
+            matmul_at_b_acc_isa(&a, n, k, &da, m, &mut o16, KernelIsa::V16);
+            assert_eq!(o8, o16, "atb {n}x{k}x{m}");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_entry_points() {
+        let mut rng = Rng::new(11);
+        let (n, k, m) = (13, 24, 17);
+        let a = randv(&mut rng, n * k);
+        let b = randv(&mut rng, k * m);
+        let mut out = vec![0f32; n * m];
+        matmul_into(&a, n, k, &b, m, &mut out);
+        assert_eq!(out, matmul(&a, n, k, &b, m));
+        let abt = randv(&mut rng, n * m);
+        let mut obt = vec![0f32; n * k];
+        matmul_bt_into(&abt, n, m, &b, k, &mut obt);
+        assert_eq!(obt, matmul_bt(&abt, n, m, &b, k));
     }
 
     #[test]

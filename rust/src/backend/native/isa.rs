@@ -1,0 +1,156 @@
+//! Runtime kernel-ISA dispatch for the native backend.
+//!
+//! The blocked gemm/spmm/attn kernels come in three tiers:
+//!
+//! * `Scalar` — the element-ordered oracle loops in `ops.rs` / the serial
+//!   softmax path. Never auto-selected; exists for forcing and for tests.
+//! * `V8` — the 8-lane aligned-panel path (256-bit registers). The baseline
+//!   blocked path that every x86-64 machine runs.
+//! * `V16` — the 16-lane panel path (512-bit registers). Written in the same
+//!   plain fixed-width-loop style as `V8`, so it is *correct* on any machine;
+//!   runtime detection of `avx512f` only decides whether it is profitable to
+//!   auto-select it.
+//!
+//! The tier is resolved once per process: `GAS_KERNEL_ISA` (or the
+//! `--kernel-isa` CLI flag, which must run before the first kernel call) wins
+//! over autodetection, and garbage values fail loudly like every other knob.
+//!
+//! Numerics contract: every tier computes each output element with the same
+//! per-element depth-order (gemm) or CSR-edge-order (spmm/attn) mul-then-add
+//! chain — no FMA contraction, no partial-sum reassociation — so the
+//! blocked==scalar `to_bits` property tests hold for every tier, forced and
+//! auto.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// Kernel instruction-set tier for the blocked native kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Element-ordered scalar oracles (forced only; never auto-selected).
+    Scalar,
+    /// 8-lane aligned-panel blocked path (256-bit).
+    V8,
+    /// 16-lane panel blocked path (512-bit).
+    V16,
+}
+
+impl KernelIsa {
+    /// Stable lowercase name, accepted back by [`parse_kernel_isa`].
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::V8 => "v8",
+            KernelIsa::V16 => "v16",
+        }
+    }
+
+    /// Numeric code for bench metrics (0 = scalar, 1 = v8, 2 = v16).
+    pub fn code(self) -> f64 {
+        match self {
+            KernelIsa::Scalar => 0.0,
+            KernelIsa::V8 => 1.0,
+            KernelIsa::V16 => 2.0,
+        }
+    }
+}
+
+/// Parse a tier name. Accepts `scalar`, `v8` (alias `avx2`), `v16`
+/// (alias `avx512`); anything else is an error.
+pub fn parse_kernel_isa(s: &str) -> Result<KernelIsa> {
+    match s.to_ascii_lowercase().as_str() {
+        "scalar" => Ok(KernelIsa::Scalar),
+        "v8" | "avx2" => Ok(KernelIsa::V8),
+        "v16" | "avx512" => Ok(KernelIsa::V16),
+        other => bail!("unknown kernel ISA tier {other:?} (expected scalar|v8|v16)"),
+    }
+}
+
+/// True when the CPU can run 512-bit vector code natively.
+fn wide_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx512f")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn detect() -> KernelIsa {
+    if wide_supported() {
+        KernelIsa::V16
+    } else {
+        KernelIsa::V8
+    }
+}
+
+static ISA: OnceLock<KernelIsa> = OnceLock::new();
+
+/// The process-wide kernel tier. Resolved on first call: `GAS_KERNEL_ISA`
+/// overrides autodetection; garbage values panic loudly.
+pub fn kernel_isa() -> KernelIsa {
+    *ISA.get_or_init(|| match std::env::var("GAS_KERNEL_ISA") {
+        Ok(v) => parse_kernel_isa(&v)
+            .unwrap_or_else(|e| panic!("invalid GAS_KERNEL_ISA={v:?}: {e}")),
+        Err(_) => detect(),
+    })
+}
+
+/// Force the process-wide tier (the `--kernel-isa` CLI flag). Must run before
+/// the first kernel call; errors if the tier was already resolved to a
+/// different value.
+pub fn set_kernel_isa(isa: KernelIsa) -> Result<()> {
+    let got = *ISA.get_or_init(|| isa);
+    if got != isa {
+        bail!(
+            "kernel ISA already resolved to {} (cannot switch to {})",
+            got.name(),
+            isa.name()
+        );
+    }
+    Ok(())
+}
+
+/// Whether the auto-detected tier on this machine would be the wide one.
+/// Independent of any forced override; used for the bench `kernel_isa_wide`
+/// metric and the CI per-tier floor gating.
+pub fn wide_detected() -> bool {
+    wide_supported()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_known_tiers_and_aliases() {
+        assert_eq!(parse_kernel_isa("scalar").unwrap(), KernelIsa::Scalar);
+        assert_eq!(parse_kernel_isa("v8").unwrap(), KernelIsa::V8);
+        assert_eq!(parse_kernel_isa("AVX2").unwrap(), KernelIsa::V8);
+        assert_eq!(parse_kernel_isa("v16").unwrap(), KernelIsa::V16);
+        assert_eq!(parse_kernel_isa("avx512").unwrap(), KernelIsa::V16);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_kernel_isa("").is_err());
+        assert!(parse_kernel_isa("v32").is_err());
+        assert!(parse_kernel_isa("fast").is_err());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for isa in [KernelIsa::Scalar, KernelIsa::V8, KernelIsa::V16] {
+            assert_eq!(parse_kernel_isa(isa.name()).unwrap(), isa);
+        }
+    }
+
+    #[test]
+    fn codes_are_ordered() {
+        assert!(KernelIsa::Scalar.code() < KernelIsa::V8.code());
+        assert!(KernelIsa::V8.code() < KernelIsa::V16.code());
+    }
+}

@@ -35,6 +35,17 @@
 //! pre-refactor interpreters verbatim and asserts `to_bits` equality of
 //! loss/grads/push/logits per step and of end-to-end training curves.
 //!
+//! **Zero-alloc steady state.** Every per-step intermediate — value
+//! slots, shadow values, cotangents, splice staging, loss scratch,
+//! composite-op saved tensors — is checked out of a per-executor
+//! [`StepArena`] (via [`StepScratch`]) and recycled when the step ends.
+//! After a warm-up step the only heap allocations left on the compute
+//! path are the step *outputs* (gradients, push tensor, logits), which
+//! must outlive the scratch state; `rust/tests/zero_alloc.rs` pins this
+//! with a counting global allocator. Arena checkouts reproduce
+//! `vec![0f32; n]` / `to_vec()` bytes exactly, so recycling is invisible
+//! to the bit-compatibility contract above.
+//!
 //! **Segments and the Lipschitz pair.** Ops are grouped into contiguous
 //! [`Segment`]s. A segment with a [`Pair`] is one GNN layer whose
 //! forward may be re-run on noise-perturbed sources (Eq. 3 of the paper):
@@ -45,6 +56,7 @@
 //! both branches feeding the same parameter-gradient and segment-input
 //! buffers — exactly the old `branch(main); branch(perturbed)` scheme.
 
+use crate::backend::native::arena::StepArena;
 use crate::backend::native::attn;
 use crate::backend::native::gemm;
 use crate::backend::native::models::{Params, StepCtx};
@@ -502,6 +514,48 @@ struct Env<'r, 'a> {
     self_w: Vec<f32>,
 }
 
+/// Reusable per-executor step state: the buffer arena plus the tape's
+/// slot tables, kept alive between steps so the steady state allocates
+/// nothing. One `StepScratch` serves one tape at a time (the executor
+/// holds it under a mutex; `run_model` builds a throwaway one).
+pub(crate) struct StepScratch {
+    arena: StepArena,
+    vals: Vec<Option<Vec<f32>>>,
+    shadow: Vec<Option<Vec<f32>>>,
+    saved: Vec<Saved>,
+    saved_sh: Vec<Saved>,
+    pin: Vec<Option<Vec<f32>>>,
+    dvals: Vec<Option<Vec<f32>>>,
+    dshadow: Vec<Option<Vec<f32>>>,
+}
+
+impl StepScratch {
+    pub(crate) fn new() -> StepScratch {
+        StepScratch {
+            arena: StepArena::new(),
+            vals: Vec::new(),
+            shadow: Vec::new(),
+            saved: Vec::new(),
+            saved_sh: Vec::new(),
+            pin: Vec::new(),
+            dvals: Vec::new(),
+            dshadow: Vec::new(),
+        }
+    }
+
+    /// Hand the slot tables back after a step (they were taken by
+    /// [`St::begin`]); their element buffers are already in the arena.
+    fn restore(&mut self, st: St) {
+        self.vals = st.vals;
+        self.shadow = st.shadow;
+        self.saved = st.saved;
+        self.saved_sh = st.saved_sh;
+        self.pin = st.pin;
+        self.dvals = st.dvals;
+        self.dshadow = st.dshadow;
+    }
+}
+
 /// Mutable tape state: main + shadow value tables, saved tensors, the
 /// cotangent tables, and the current segment's shared input buffer.
 struct St {
@@ -517,17 +571,72 @@ struct St {
 }
 
 impl St {
-    fn new(n_vals: usize, n_ops: usize, n_segs: usize) -> St {
-        St {
-            vals: (0..n_vals).map(|_| None).collect(),
-            shadow: (0..n_vals).map(|_| None).collect(),
-            saved: (0..n_ops).map(|_| Saved::None).collect(),
-            saved_sh: (0..n_ops).map(|_| Saved::None).collect(),
-            pin: (0..n_segs).map(|_| None).collect(),
-            dvals: (0..n_vals).map(|_| None).collect(),
-            dshadow: (0..n_vals).map(|_| None).collect(),
+    /// Take the slot tables out of the scratch (leaving it empty) and
+    /// size them for this tape. The tables keep their capacity across
+    /// steps, so on a warm scratch this allocates nothing.
+    fn begin(scratch: &mut StepScratch, n_vals: usize, n_ops: usize, n_segs: usize) -> St {
+        let mut st = St {
+            vals: std::mem::take(&mut scratch.vals),
+            shadow: std::mem::take(&mut scratch.shadow),
+            saved: std::mem::take(&mut scratch.saved),
+            saved_sh: std::mem::take(&mut scratch.saved_sh),
+            pin: std::mem::take(&mut scratch.pin),
+            dvals: std::mem::take(&mut scratch.dvals),
+            dshadow: std::mem::take(&mut scratch.dshadow),
             local: None,
             cur_seg: 0,
+        };
+        st.vals.clear();
+        st.vals.resize_with(n_vals, || None);
+        st.shadow.clear();
+        st.shadow.resize_with(n_vals, || None);
+        st.dvals.clear();
+        st.dvals.resize_with(n_vals, || None);
+        st.dshadow.clear();
+        st.dshadow.resize_with(n_vals, || None);
+        st.pin.clear();
+        st.pin.resize_with(n_segs, || None);
+        st.saved.clear();
+        st.saved.resize_with(n_ops, || Saved::None);
+        st.saved_sh.clear();
+        st.saved_sh.resize_with(n_ops, || Saved::None);
+        st
+    }
+
+    /// Recycle every buffer the step left in the tables back into the
+    /// arena, resetting the tables to all-`None` for the next step.
+    fn drain(&mut self, ar: &mut StepArena) {
+        let opts = self
+            .vals
+            .iter_mut()
+            .chain(self.shadow.iter_mut())
+            .chain(self.pin.iter_mut())
+            .chain(self.dvals.iter_mut())
+            .chain(self.dshadow.iter_mut());
+        for slot in opts {
+            if let Some(b) = slot.take() {
+                ar.put(b);
+            }
+        }
+        for s in self.saved.iter_mut().chain(self.saved_sh.iter_mut()) {
+            match std::mem::replace(s, Saved::None) {
+                Saved::None => {}
+                Saved::Gin { pre, u, a } => {
+                    ar.put(pre);
+                    ar.put(u);
+                    ar.put(a);
+                }
+                Saved::Gat(sv) => {
+                    ar.put(sv.z);
+                    ar.put(sv.s_src);
+                    ar.put(sv.s_dst);
+                    ar.put(sv.sm.alpha);
+                    ar.put(sv.sm.salpha);
+                }
+            }
+        }
+        if let Some((_, b)) = self.local.take() {
+            ar.put(b);
         }
     }
 
@@ -595,14 +704,23 @@ impl St {
     /// Route a contribution to `v`'s cotangent: the segment-local input
     /// buffer when `v` is the paired input consumed by the segment's first
     /// op, the shadow table for shadow-produced slots, the main table
-    /// otherwise. First contribution moves in; later ones add.
-    fn contribute(&mut self, v: ValId, data: Vec<f32>, at_seg_start: bool, sh: bool) {
+    /// otherwise. First contribution moves in; later ones add (and the
+    /// merged-in vector is recycled to the arena).
+    fn contribute(
+        &mut self,
+        ar: &mut StepArena,
+        v: ValId,
+        data: Vec<f32>,
+        at_seg_start: bool,
+        sh: bool,
+    ) {
         if at_seg_start {
             if let Some((lv, buf)) = &mut self.local {
                 if *lv == v {
                     for (b, d) in buf.iter_mut().zip(data.iter()) {
                         *b += d;
                     }
+                    ar.put(data);
                     return;
                 }
             }
@@ -618,14 +736,22 @@ impl St {
                 for (b, d) in buf.iter_mut().zip(data.iter()) {
                     *b += d;
                 }
+                ar.put(data);
             }
         }
     }
 
     /// Borrow `v`'s cotangent buffer for in-place accumulation (creating
-    /// it zeroed if absent) — the shared-chain path for scatter-style
-    /// VJPs. Routing rules match [`St::contribute`].
-    fn acc_buf(&mut self, v: ValId, len: usize, at_seg_start: bool, sh: bool) -> &mut [f32] {
+    /// it zeroed, from the arena, if absent) — the shared-chain path for
+    /// scatter-style VJPs. Routing rules match [`St::contribute`].
+    fn acc_buf(
+        &mut self,
+        ar: &mut StepArena,
+        v: ValId,
+        len: usize,
+        at_seg_start: bool,
+        sh: bool,
+    ) -> &mut [f32] {
         let use_local = at_seg_start && matches!(&self.local, Some((lv, _)) if *lv == v);
         if use_local {
             return &mut self.local.as_mut().expect("local buffer").1;
@@ -635,7 +761,10 @@ impl St {
         } else {
             &mut self.dvals[v]
         };
-        slot.get_or_insert_with(|| vec![0f32; len])
+        if slot.is_none() {
+            *slot = Some(ar.zeroed(len));
+        }
+        slot.as_mut().expect("cotangent buffer").as_mut_slice()
     }
 }
 
@@ -647,18 +776,18 @@ fn zero_grads(spec: &ArtifactSpec) -> Vec<Vec<f32>> {
 }
 
 /// Concatenate fresh in-batch rows with the halo history rows of layer
-/// `l` into one `[NT, d]` source tensor (gas programs).
-pub(crate) fn concat_sources(
+/// `l` into one `[NT, d]` source tensor (gas programs). `out` must hold
+/// exactly `(nb + nh) * d` values; every element is overwritten.
+fn concat_sources_into(
     h_batch: &[f32],
     hist_l: &[f32],
     nb: usize,
     nh: usize,
     d: usize,
-) -> Vec<f32> {
-    let mut out = vec![0f32; (nb + nh) * d];
+    out: &mut [f32],
+) {
     out[..nb * d].copy_from_slice(&h_batch[..nb * d]);
     out[nb * d..].copy_from_slice(&hist_l[..nh * d]);
-    out
 }
 
 /// Assemble the flat `[(L-1) * NB * hd]` push tensor from per-layer
@@ -671,7 +800,7 @@ fn stack_push(layers: &[&[f32]], nb: usize, hd: usize) -> Vec<f32> {
     out
 }
 
-fn fwd_op(st: &mut St, env: &Env, oi: usize, sh: bool) {
+fn fwd_op(st: &mut St, ar: &mut StepArena, env: &Env, oi: usize, sh: bool) {
     let tape = env.tape;
     let spec = env.cx.spec;
     let nb = spec.nb;
@@ -679,66 +808,80 @@ fn fwd_op(st: &mut St, env: &Env, oi: usize, sh: bool) {
         Op::Linear { x, w, out, .. } => {
             let (rows, din) = tape.shapes[*x];
             let dout = tape.shapes[*out].1;
-            let z = gemm::matmul(st.src_val(env, oi, *x, sh), rows, din, w.get(env.p), dout);
+            let mut z = ar.zeroed(rows * dout);
+            gemm::matmul_into(st.src_val(env, oi, *x, sh), rows, din, w.get(env.p), dout, &mut z);
             st.set(*out, z, sh);
         }
         Op::Bias { x, b, out } => {
             let (rows, cols) = tape.shapes[*out];
-            let mut o = st.src_val(env, oi, *x, sh).to_vec();
+            let mut o = ar.copy_of(st.src_val(env, oi, *x, sh));
             ops::add_bias(&mut o, rows, cols, b.get(env.p));
             st.set(*out, o, sh);
         }
         Op::Relu { x, out } => {
-            let o = ops::relu(st.src_val(env, oi, *x, sh));
+            let src = st.src_val(env, oi, *x, sh);
+            let mut o = ar.zeroed(src.len());
+            ops::relu_into(src, &mut o);
             st.set(*out, o, sh);
         }
         Op::Elu { x, out } => {
-            let o = ops::elu(st.src_val(env, oi, *x, sh));
+            let src = st.src_val(env, oi, *x, sh);
+            let mut o = ar.zeroed(src.len());
+            ops::elu_into(src, &mut o);
             st.set(*out, o, sh);
         }
         Op::PropagateGcn { x, out } => {
-            let d = tape.shapes[*out].1;
-            let z = st.src_val(env, oi, *x, sh);
-            let mut pre = spmm::scatter(env.cx.edges, z, d);
-            for v in 0..nb {
-                let zr = &z[v * d..v * d + d];
-                let pr = &mut pre[v * d..v * d + d];
-                for j in 0..d {
-                    pr[j] += env.self_w[v] * zr[j];
+            let (rows_out, d) = tape.shapes[*out];
+            let mut pre = ar.zeroed(rows_out * d);
+            {
+                let z = st.src_val(env, oi, *x, sh);
+                spmm::scatter_into(env.cx.edges, z, d, &mut pre);
+                for v in 0..nb {
+                    let zr = &z[v * d..v * d + d];
+                    let pr = &mut pre[v * d..v * d + d];
+                    for j in 0..d {
+                        pr[j] += env.self_w[v] * zr[j];
+                    }
                 }
             }
             st.set(*out, pre, sh);
         }
         Op::HistSplice { x, layer, out } => {
-            let d = tape.shapes[*out].1;
-            let o = concat_sources(
+            let (rows_out, d) = tape.shapes[*out];
+            let mut o = ar.zeroed(rows_out * d);
+            concat_sources_into(
                 st.src_val(env, oi, *x, sh),
                 env.cx.hist_layer(*layer),
                 nb,
                 spec.nh,
                 d,
+                &mut o,
             );
             st.set(*out, o, sh);
         }
         Op::InitialResidual { x, h0, alpha, out } => {
             let (rows, cols) = tape.shapes[*out];
             let n = rows * cols;
-            let px = st.src_val(env, oi, *x, sh);
-            let h0v = st.src_val(env, oi, *h0, sh);
-            let mut o = vec![0f32; n];
-            for i in 0..n {
-                o[i] = (1.0 - alpha) * px[i] + alpha * h0v[i];
+            let mut o = ar.zeroed(n);
+            {
+                let px = st.src_val(env, oi, *x, sh);
+                let h0v = st.src_val(env, oi, *h0, sh);
+                for i in 0..n {
+                    o[i] = (1.0 - alpha) * px[i] + alpha * h0v[i];
+                }
             }
             st.set(*out, o, sh);
         }
         Op::Mix { x, q, beta, out } => {
             let (rows, cols) = tape.shapes[*out];
             let n = rows * cols;
-            let xv = st.src_val(env, oi, *x, sh);
-            let qv = st.src_val(env, oi, *q, sh);
-            let mut o = vec![0f32; n];
-            for i in 0..n {
-                o[i] = (1.0 - beta) * xv[i] + beta * qv[i];
+            let mut o = ar.zeroed(n);
+            {
+                let xv = st.src_val(env, oi, *x, sh);
+                let qv = st.src_val(env, oi, *q, sh);
+                for i in 0..n {
+                    o[i] = (1.0 - beta) * xv[i] + beta * qv[i];
+                }
             }
             st.set(*out, o, sh);
         }
@@ -746,19 +889,22 @@ fn fwd_op(st: &mut St, env: &Env, oi: usize, sh: bool) {
             let din = tape.shapes[*x].1;
             let h = tape.shapes[*out].1;
             let eps = refs.eps.get(env.p)[0];
-            let (pre, u, a, o) = {
+            let mut pre = ar.zeroed(nb * din);
+            let mut u = ar.zeroed(nb * h);
+            let mut a = ar.zeroed(nb * h);
+            let mut o = ar.zeroed(nb * h);
+            {
                 let src = st.src_val(env, oi, *x, sh);
-                let mut pre = spmm::scatter(env.cx.edges, src, din);
+                spmm::scatter_into(env.cx.edges, src, din, &mut pre);
                 for i in 0..nb * din {
                     pre[i] += (1.0 + eps) * src[i];
                 }
-                let mut u = gemm::matmul(&pre, nb, din, refs.w1.get(env.p), h);
-                ops::add_bias(&mut u, nb, h, refs.b1.get(env.p));
-                let a = ops::relu(&u);
-                let mut o = gemm::matmul(&a, nb, h, refs.w2.get(env.p), h);
-                ops::add_bias(&mut o, nb, h, refs.b2.get(env.p));
-                (pre, u, a, o)
-            };
+            }
+            gemm::matmul_into(&pre, nb, din, refs.w1.get(env.p), h, &mut u);
+            ops::add_bias(&mut u, nb, h, refs.b1.get(env.p));
+            ops::relu_into(&u, &mut a);
+            gemm::matmul_into(&a, nb, h, refs.w2.get(env.p), h, &mut o);
+            ops::add_bias(&mut o, nb, h, refs.b2.get(env.p));
             st.set_saved(oi, Saved::Gin { pre, u, a }, sh);
             st.set(*out, o, sh);
         }
@@ -776,6 +922,7 @@ fn fwd_op(st: &mut St, env: &Env, oi: usize, sh: bool) {
                     refs.adst.get(env.p),
                     *heads,
                     *dh,
+                    ar,
                 )
             };
             st.set_saved(oi, Saved::Gat(sv), sh);
@@ -784,7 +931,7 @@ fn fwd_op(st: &mut St, env: &Env, oi: usize, sh: bool) {
     }
 }
 
-fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
+fn bwd_op(st: &mut St, ar: &mut StepArena, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
     let tape = env.tape;
     let spec = env.cx.spec;
     let nb = spec.nb;
@@ -799,53 +946,71 @@ fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
                 gemm::matmul_at_b_acc(a, rows, din, &dout, dcols, w.grad(grads));
             }
             if *needs_dx {
-                let dx = gemm::matmul_bt(&dout, rows, dcols, w.get(env.p), din);
-                st.contribute(*x, dx, seg_start, sh);
+                let mut dx = ar.zeroed(rows * din);
+                gemm::matmul_bt_into(&dout, rows, dcols, w.get(env.p), din, &mut dx);
+                st.contribute(ar, *x, dx, seg_start, sh);
             }
+            ar.put(dout);
         }
         Op::Bias { x, b, out } => {
             let dout = st.take_d(*out, sh);
             let (rows, cols) = tape.shapes[*out];
             ops::colsum_acc(&dout, rows, cols, b.grad(grads));
-            st.contribute(*x, dout, seg_start, sh);
+            st.contribute(ar, *x, dout, seg_start, sh);
         }
         Op::Relu { x, out } => {
-            let dout = st.take_d(*out, sh);
-            let dx = ops::relu_bwd(&dout, st.src_val(env, oi, *x, sh));
-            st.contribute(*x, dx, seg_start, sh);
+            // reuse the cotangent buffer: `g` where pre > 0, else 0 —
+            // the exact `ops::relu_bwd` branch, applied in place
+            let mut dout = st.take_d(*out, sh);
+            {
+                let src = st.src_val(env, oi, *x, sh);
+                for (g, &p) in dout.iter_mut().zip(src.iter()) {
+                    *g = if p > 0.0 { *g } else { 0.0 };
+                }
+            }
+            st.contribute(ar, *x, dout, seg_start, sh);
         }
         Op::Elu { x, out } => {
-            let dout = st.take_d(*out, sh);
-            let dx = ops::elu_bwd(&dout, st.src_val(env, oi, *x, sh));
-            st.contribute(*x, dx, seg_start, sh);
+            // in-place `ops::elu_bwd`: `g` where pre > 0, else `g·exp(pre)`
+            let mut dout = st.take_d(*out, sh);
+            {
+                let src = st.src_val(env, oi, *x, sh);
+                for (g, &p) in dout.iter_mut().zip(src.iter()) {
+                    *g = if p > 0.0 { *g } else { *g * p.exp() };
+                }
+            }
+            st.contribute(ar, *x, dout, seg_start, sh);
         }
         Op::PropagateGcn { x, out } => {
             let dout = st.take_d(*out, sh);
             let d = tape.shapes[*out].1;
             let (rows_in, _) = tape.shapes[*x];
-            let buf = st.acc_buf(*x, rows_in * d, seg_start, sh);
-            spmm::scatter_t_acc(env.cx.edges, &dout, d, buf);
-            for v in 0..nb {
-                let dr = &dout[v * d..v * d + d];
-                let br = &mut buf[v * d..v * d + d];
-                for j in 0..d {
-                    br[j] += env.self_w[v] * dr[j];
+            {
+                let buf = st.acc_buf(ar, *x, rows_in * d, seg_start, sh);
+                spmm::scatter_t_acc(env.cx.edges, &dout, d, buf);
+                for v in 0..nb {
+                    let dr = &dout[v * d..v * d + d];
+                    let br = &mut buf[v * d..v * d + d];
+                    for j in 0..d {
+                        br[j] += env.self_w[v] * dr[j];
+                    }
                 }
             }
+            ar.put(dout);
         }
         Op::HistSplice { x, out, .. } => {
             // history rows are inputs: the gradient stops at the batch rows
             let mut dout = st.take_d(*out, sh);
             let (rows_x, d) = tape.shapes[*x];
             dout.truncate(rows_x * d);
-            st.contribute(*x, dout, seg_start, sh);
+            st.contribute(ar, *x, dout, seg_start, sh);
         }
         Op::InitialResidual { x, h0, alpha, out } => {
             let mut dout = st.take_d(*out, sh);
             let n = dout.len();
             {
                 let (h0r, h0c) = tape.shapes[*h0];
-                let buf = st.acc_buf(*h0, h0r * h0c, seg_start, sh);
+                let buf = st.acc_buf(ar, *h0, h0r * h0c, seg_start, sh);
                 for i in 0..n {
                     buf[i] += alpha * dout[i];
                 }
@@ -853,21 +1018,20 @@ fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
             for v in dout.iter_mut() {
                 *v *= 1.0 - alpha;
             }
-            st.contribute(*x, dout, seg_start, sh);
+            st.contribute(ar, *x, dout, seg_start, sh);
         }
         Op::Mix { x, q, beta, out } => {
-            let dout = st.take_d(*out, sh);
+            let mut dout = st.take_d(*out, sh);
             let n = dout.len();
-            let mut dq = vec![0f32; n];
+            let mut dq = ar.zeroed(n);
             for i in 0..n {
                 dq[i] = beta * dout[i];
             }
-            st.contribute(*q, dq, seg_start, sh);
-            let mut dx = vec![0f32; n];
+            st.contribute(ar, *q, dq, seg_start, sh);
             for i in 0..n {
-                dx[i] = (1.0 - beta) * dout[i];
+                dout[i] = (1.0 - beta) * dout[i];
             }
-            st.contribute(*x, dx, seg_start, sh);
+            st.contribute(ar, *x, dout, seg_start, sh);
         }
         Op::GinLayer { x, refs, out } => {
             let do_ = st.take_d(*out, sh);
@@ -875,18 +1039,24 @@ fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
             let (rows_in, _) = tape.shapes[*x];
             let h = tape.shapes[*out].1;
             let eps = refs.eps.get(env.p)[0];
-            let dpre = {
+            let mut da = ar.zeroed(nb * h);
+            let mut du = ar.zeroed(nb * h);
+            let mut dpre = ar.zeroed(nb * din);
+            {
                 let Saved::Gin { pre, u, a } = st.get_saved(oi, sh) else {
                     unreachable!("gin layer without saved tensors")
                 };
                 gemm::matmul_at_b_acc(a, nb, h, &do_, h, refs.w2.grad(grads));
                 ops::colsum_acc(&do_, nb, h, refs.b2.grad(grads));
-                let da = gemm::matmul_bt(&do_, nb, h, refs.w2.get(env.p), h);
-                let du = ops::relu_bwd(&da, u);
+                gemm::matmul_bt_into(&do_, nb, h, refs.w2.get(env.p), h, &mut da);
+                ops::relu_bwd_into(&da, u, &mut du);
                 gemm::matmul_at_b_acc(pre, nb, din, &du, h, refs.w1.grad(grads));
                 ops::colsum_acc(&du, nb, h, refs.b1.grad(grads));
-                gemm::matmul_bt(&du, nb, h, refs.w1.get(env.p), din)
-            };
+                gemm::matmul_bt_into(&du, nb, h, refs.w1.get(env.p), din, &mut dpre);
+            }
+            ar.put(da);
+            ar.put(du);
+            ar.put(do_);
             let deps = {
                 let src = st.src_val(env, oi, *x, sh);
                 let mut acc = 0f32;
@@ -896,19 +1066,22 @@ fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
                 acc
             };
             refs.eps.grad(grads)[0] += deps;
-            let buf = st.acc_buf(*x, rows_in * din, seg_start, sh);
-            for i in 0..nb * din {
-                buf[i] += (1.0 + eps) * dpre[i];
+            {
+                let buf = st.acc_buf(ar, *x, rows_in * din, seg_start, sh);
+                for i in 0..nb * din {
+                    buf[i] += (1.0 + eps) * dpre[i];
+                }
+                spmm::scatter_t_acc(env.cx.edges, &dpre, din, buf);
             }
-            spmm::scatter_t_acc(env.cx.edges, &dpre, din, buf);
+            ar.put(dpre);
         }
         Op::GatLayer { x, heads, dh, refs, out, needs_dx } => {
             let dout = st.take_d(*out, sh);
             let (rows, din) = tape.shapes[*x];
             // attention-vector grads land in temporaries (two &mut slices
             // of `grads` can't be borrowed at once), then fold in
-            let mut dasrc = vec![0f32; refs.asrc.len];
-            let mut dadst = vec![0f32; refs.adst.len];
+            let mut dasrc = ar.zeroed(refs.asrc.len);
+            let mut dadst = ar.zeroed(refs.adst.len);
             let dz = {
                 let Saved::Gat(sv) = st.get_saved(oi, sh) else {
                     unreachable!("gat layer without saved tensors")
@@ -924,6 +1097,7 @@ fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
                     *heads,
                     *dh,
                     rows,
+                    ar,
                 )
             };
             for (g, v) in refs.asrc.grad(grads).iter_mut().zip(dasrc.iter()) {
@@ -932,15 +1106,20 @@ fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
             for (g, v) in refs.adst.grad(grads).iter_mut().zip(dadst.iter()) {
                 *g += v;
             }
+            ar.put(dasrc);
+            ar.put(dadst);
             let w_cols = heads * dh;
             {
                 let a = st.src_val(env, oi, *x, sh);
                 gemm::matmul_at_b_acc(a, rows, din, &dz, w_cols, refs.w.grad(grads));
             }
             if *needs_dx {
-                let dx = gemm::matmul_bt(&dz, rows, w_cols, refs.w.get(env.p), din);
-                st.contribute(*x, dx, seg_start, sh);
+                let mut dx = ar.zeroed(rows * din);
+                gemm::matmul_bt_into(&dz, rows, w_cols, refs.w.get(env.p), din, &mut dx);
+                st.contribute(ar, *x, dx, seg_start, sh);
             }
+            ar.put(dz);
+            ar.put(dout);
         }
     }
 }
@@ -949,16 +1128,30 @@ fn bwd_op(st: &mut St, env: &Env, grads: &mut [Vec<f32>], oi: usize, sh: bool) {
 /// reg-paired layers when the Lipschitz regularizer is active), task loss
 /// on the logits, then the reverse walk producing gradients and the push
 /// tensor — `StepOutputs` in the compiled artifacts' output order.
-pub(crate) fn run_tape(cx: &StepCtx, p: &Params, tape: &Tape) -> Result<StepOutputs> {
+///
+/// All intermediates come from `scratch`'s arena and are recycled before
+/// returning; only the `StepOutputs` tensors are freshly allocated.
+pub(crate) fn run_tape(
+    cx: &StepCtx,
+    p: &Params,
+    tape: &Tape,
+    scratch: &mut StepScratch,
+) -> Result<StepOutputs> {
     let spec = cx.spec;
     let nb = spec.nb;
-    let env = Env {
-        cx,
-        p,
-        tape,
-        self_w: if tape.uses_self_w { cx.self_weights() } else { Vec::new() },
+    let mut st = St::begin(scratch, tape.shapes.len(), tape.ops.len(), tape.segs.len());
+    let ar = &mut scratch.arena;
+    let self_w = if tape.uses_self_w {
+        // `1/(deg+1)` — same bits as `StepCtx::self_weights`, arena-backed
+        let mut w = ar.zeroed(spec.nb);
+        for (w, &d) in w.iter_mut().zip(cx.deg[..spec.nb].iter()) {
+            *w = 1.0 / (d + 1.0);
+        }
+        w
+    } else {
+        Vec::new()
     };
-    let mut st = St::new(tape.shapes.len(), tape.ops.len(), tape.segs.len());
+    let env = Env { cx, p, tape, self_w };
     let reg_active = cx.reg_on();
     let mut reg = 0f32;
 
@@ -967,15 +1160,23 @@ pub(crate) fn run_tape(cx: &StepCtx, p: &Params, tape: &Tape) -> Result<StepOutp
         st.cur_seg = si;
         let seg = &tape.segs[si];
         for oi in seg.start..seg.end {
-            fwd_op(&mut st, &env, oi, false);
+            fwd_op(&mut st, ar, &env, oi, false);
         }
         if let Some(pair) = &seg.pair {
             if pair.reg && reg_active {
                 let (rows, cols) = tape.shapes[pair.input];
-                let pin = cx.perturb(st.src_val(&env, seg.start, pair.input, false), rows, cols);
+                let pin = {
+                    // `StepCtx::perturb` inlined onto an arena buffer
+                    let src = st.src_val(&env, seg.start, pair.input, false);
+                    let mut pin = ar.copy_of(&src[..rows * cols]);
+                    for (o, n) in pin.iter_mut().zip(cx.noise[..rows * cols].iter()) {
+                        *o += n;
+                    }
+                    pin
+                };
                 st.pin[si] = Some(pin);
                 for oi in seg.start..seg.end {
-                    fwd_op(&mut st, &env, oi, true);
+                    fwd_op(&mut st, ar, &env, oi, true);
                 }
                 let out = st.vals[pair.output].as_ref().expect("segment output");
                 let out_p = st.shadow[pair.output].as_ref().expect("shadow output");
@@ -997,7 +1198,10 @@ pub(crate) fn run_tape(cx: &StepCtx, p: &Params, tape: &Tape) -> Result<StepOutp
     let push = stack_push(&push_layers, nb, spec.hist_dim);
 
     // -- loss + backward --------------------------------------------------
-    let (task, dlogits) = cx.task_loss(&logits);
+    let mut dlogits = ar.zeroed(nb * spec.c);
+    let mut per_row = ar.zeroed64(nb);
+    let task = cx.task_loss_into(&logits, &mut dlogits, &mut per_row);
+    ar.put64(per_row);
     let loss = if tape.reg_model { task + cx.reg_lambda * reg } else { task };
     let mut grads = zero_grads(spec);
     st.dvals[tape.logits] = Some(dlogits);
@@ -1010,10 +1214,11 @@ pub(crate) fn run_tape(cx: &StepCtx, p: &Params, tape: &Tape) -> Result<StepOutp
                 pair_active = true;
                 // inject the Lipschitz gradient into both branch outputs
                 let coef = cx.reg_lambda * 2.0 / nb as f32;
+                let (orows, ocols) = tape.shapes[pair.output];
+                let mut dp = ar.zeroed(orows * ocols);
                 let out = st.vals[pair.output].as_ref().expect("segment output");
                 let out_p = st.shadow[pair.output].as_ref().expect("shadow output");
                 let dout = st.dvals[pair.output].as_mut().expect("output cotangent");
-                let mut dp = vec![0f32; out.len()];
                 for i in 0..out.len() {
                     let g = coef * (out[i] - out_p[i]);
                     dout[i] += g;
@@ -1022,14 +1227,14 @@ pub(crate) fn run_tape(cx: &StepCtx, p: &Params, tape: &Tape) -> Result<StepOutp
                 st.dshadow[pair.output] = Some(dp);
             }
             let (rows, cols) = tape.shapes[pair.input];
-            st.local = Some((pair.input, vec![0f32; rows * cols]));
+            st.local = Some((pair.input, ar.zeroed(rows * cols)));
         }
         for oi in (seg.start..seg.end).rev() {
-            bwd_op(&mut st, &env, &mut grads, oi, false);
+            bwd_op(&mut st, ar, &env, &mut grads, oi, false);
         }
         if pair_active {
             for oi in (seg.start..seg.end).rev() {
-                bwd_op(&mut st, &env, &mut grads, oi, true);
+                bwd_op(&mut st, ar, &env, &mut grads, oi, true);
             }
         }
         if let Some((v, buf)) = st.local.take() {
@@ -1039,10 +1244,15 @@ pub(crate) fn run_tape(cx: &StepCtx, p: &Params, tape: &Tape) -> Result<StepOutp
                     for (a, b) in d.iter_mut().zip(buf.iter()) {
                         *a += b;
                     }
+                    ar.put(buf);
                 }
             }
         }
     }
+    // recycle everything the step touched; `env.self_w` included
+    st.drain(ar);
+    ar.put(env.self_w);
+    scratch.restore(st);
     Ok(StepOutputs { loss, grads, push, logits })
 }
 

@@ -19,14 +19,36 @@ pub fn softmax_ce(
     labels: &[i32],
     mask: &[f32],
 ) -> (f32, Vec<f32>) {
-    let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
     let mut dl = vec![0f32; n * c];
-    let per_row: Vec<f64> = dl
-        .par_chunks_mut(c)
+    let mut per_row = vec![0f64; n];
+    let loss = softmax_ce_into(logits, n, c, labels, mask, &mut dl, &mut per_row);
+    (loss, dl)
+}
+
+/// [`softmax_ce`] into caller-provided (arena) buffers — same fan-out,
+/// same row-order f64 reduction, bit-identical loss and gradient. `dl`
+/// holds `n·c` values, `per_row` holds `n` reduction terms; every element
+/// of both is overwritten.
+pub fn softmax_ce_into(
+    logits: &[f32],
+    n: usize,
+    c: usize,
+    labels: &[i32],
+    mask: &[f32],
+    dl: &mut [f32],
+    per_row: &mut [f64],
+) -> f32 {
+    let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
+    let dl = &mut dl[..n * c];
+    let per_row = &mut per_row[..n];
+    dl.par_chunks_mut(c)
+        .zip(per_row.par_iter_mut())
         .enumerate()
-        .map(|(v, drow)| {
+        .for_each(|(v, (drow, term))| {
             if mask[v] == 0.0 {
-                return 0.0;
+                drow.fill(0.0);
+                *term = 0.0;
+                return;
             }
             let row = &logits[v * c..v * c + c];
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -43,9 +65,8 @@ pub fn softmax_ce(
             }
             // keep the exact pre-parallel rounding (mul before the msum
             // divide) so recorded loss curves stay bit-comparable
-            (-logp_y * mask[v] / msum) as f64
-        })
-        .collect();
+            *term = (-logp_y * mask[v] / msum) as f64;
+        });
     // deterministic reduction: the serial accumulation chain, in row order
     let mut loss = 0f64;
     for (v, term) in per_row.iter().enumerate() {
@@ -53,7 +74,7 @@ pub fn softmax_ce(
             loss += term;
         }
     }
-    (loss as f32, dl)
+    loss as f32
 }
 
 /// Masked mean multilabel binary cross-entropy (per-row mean over
@@ -65,14 +86,34 @@ pub fn bce_multilabel(
     labels: &[f32],
     mask: &[f32],
 ) -> (f32, Vec<f32>) {
-    let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
     let mut dl = vec![0f32; n * c];
-    let per_row: Vec<f64> = dl
-        .par_chunks_mut(c)
+    let mut per_row = vec![0f64; n];
+    let loss = bce_multilabel_into(logits, n, c, labels, mask, &mut dl, &mut per_row);
+    (loss, dl)
+}
+
+/// [`bce_multilabel`] into caller-provided (arena) buffers —
+/// bit-identical; every element of `dl` and `per_row` is overwritten.
+pub fn bce_multilabel_into(
+    logits: &[f32],
+    n: usize,
+    c: usize,
+    labels: &[f32],
+    mask: &[f32],
+    dl: &mut [f32],
+    per_row: &mut [f64],
+) -> f32 {
+    let msum: f32 = mask[..n].iter().sum::<f32>().max(1.0);
+    let dl = &mut dl[..n * c];
+    let per_row = &mut per_row[..n];
+    dl.par_chunks_mut(c)
+        .zip(per_row.par_iter_mut())
         .enumerate()
-        .map(|(v, drow)| {
+        .for_each(|(v, (drow, term))| {
             if mask[v] == 0.0 {
-                return 0.0;
+                drow.fill(0.0);
+                *term = 0.0;
+                return;
             }
             let row = &logits[v * c..v * c + c];
             let yrow = &labels[v * c..v * c + c];
@@ -90,16 +131,15 @@ pub fn bce_multilabel(
                 let sig = 1.0 / (1.0 + (-l).exp());
                 *d = scale * (sig - y);
             }
-            per / c as f64 * (mask[v] / msum) as f64
-        })
-        .collect();
+            *term = per / c as f64 * (mask[v] / msum) as f64;
+        });
     let mut loss = 0f64;
     for (v, term) in per_row.iter().enumerate() {
         if mask[v] != 0.0 {
             loss += term;
         }
     }
-    (loss as f32, dl)
+    loss as f32
 }
 
 #[cfg(test)]

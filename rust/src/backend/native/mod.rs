@@ -19,12 +19,22 @@
 //! [`ops`]); GAT's edge softmax runs on the CSR attention kernels in
 //! [`attn`] (property-tested against their own scalar oracles).
 //!
+//! The blocked kernels are **runtime-dispatched** over ISA tiers
+//! ([`isa`]): an 8-lane (AVX2-width) and a 16-lane (AVX-512-width)
+//! variant of each macro-kernel, selected once per process from
+//! `is_x86_feature_detected!` (overridable via `--kernel-isa` /
+//! `GAS_KERNEL_ISA`), all tiers bit-identical by construction. Per-step
+//! intermediates live in a reusable [`arena::StepArena`] bound to each
+//! prepared plan, so the steady-state compute path allocates nothing.
+//!
 //! This makes the whole GAS loop run end-to-end without PJRT: when no
 //! AOT-compiled artifact directory is present, [`crate::config::Ctx`]
 //! synthesizes specs from [`registry`] and executes them here.
 
+pub mod arena;
 pub mod attn;
 pub mod gemm;
+pub mod isa;
 pub(crate) mod layers;
 pub mod loss;
 pub mod models;
@@ -65,7 +75,10 @@ pub struct NativeArtifact {
 
 /// Owned per-plan statics: the per-epoch-invariant tensors plus the CSR
 /// edge index (built once per plan — the native analog of the PJRT
-/// literal cache).
+/// literal cache), and the reusable step scratch (value tables + buffer
+/// arena) that makes repeated `run_prepared` calls allocation-free after
+/// the first step. The mutex satisfies `Prepared`'s `Sync` bound; each
+/// plan/batch owns its own `Prepared`, so it is never contended.
 pub struct NativeStatics {
     x: Vec<f32>,
     deg: Vec<f32>,
@@ -74,6 +87,7 @@ pub struct NativeStatics {
     mask: Vec<f32>,
     edges: EdgeIndex,
     noise: Option<Vec<f32>>,
+    scratch: std::sync::Mutex<layers::StepScratch>,
 }
 
 impl NativeArtifact {
@@ -158,6 +172,7 @@ impl NativeArtifact {
             mask: inp.label_mask.to_vec(),
             edges,
             noise: if cache_noise { Some(inp.noise.to_vec()) } else { None },
+            scratch: std::sync::Mutex::new(layers::StepScratch::new()),
         })
     }
 
@@ -168,6 +183,7 @@ impl NativeArtifact {
         hist: &[f32],
         noise: &[f32],
         reg_lambda: f32,
+        scratch: &mut layers::StepScratch,
     ) -> Result<StepOutputs> {
         let spec = &self.spec;
         if !spec.is_full() {
@@ -195,7 +211,7 @@ impl NativeArtifact {
             alpha: self.hyper.alpha,
             lam: self.hyper.lam,
         };
-        models::run_on_tape(&cx, params, &self.tape)
+        models::run_on_tape(&cx, params, &self.tape, scratch)
     }
 }
 
@@ -218,12 +234,16 @@ impl Executor for NativeArtifact {
     ) -> Result<StepOutputs> {
         let st = statics.downcast::<NativeStatics>()?;
         let noise = st.noise.as_deref().unwrap_or(noise);
-        self.run_impl(params, st, hist, noise, reg_lambda)
+        // uncontended in practice (one Prepared per plan/batch); recover
+        // from poisoning — the scratch holds no cross-step invariants
+        let mut scratch = st.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        self.run_impl(params, st, hist, noise, reg_lambda, &mut scratch)
     }
 
     fn run(&self, params: &[Vec<f32>], inp: &StepInputs) -> Result<StepOutputs> {
         let st = self.build_statics(inp, false)?;
-        self.run_impl(params, &st, inp.hist, inp.noise, inp.reg_lambda)
+        let mut scratch = layers::StepScratch::new();
+        self.run_impl(params, &st, inp.hist, inp.noise, inp.reg_lambda, &mut scratch)
     }
 }
 

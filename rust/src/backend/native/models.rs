@@ -130,6 +130,18 @@ impl<'a> StepCtx<'a> {
         }
     }
 
+    /// [`StepCtx::task_loss`] into caller-provided (arena) buffers:
+    /// `dl [nb·c]` receives the logit gradient, `per_row [nb]` is loss
+    /// reduction scratch. Bit-identical to the allocating version.
+    pub fn task_loss_into(&self, logits: &[f32], dl: &mut [f32], per_row: &mut [f64]) -> f32 {
+        let (nb, c) = (self.spec.nb, self.spec.c);
+        if self.spec.loss == "bce" {
+            loss::bce_multilabel_into(logits, nb, c, self.labels_f, self.mask, dl, per_row)
+        } else {
+            loss::softmax_ce_into(logits, nb, c, self.labels_i, self.mask, dl, per_row)
+        }
+    }
+
     /// The regularizer is only compiled into gas artifacts (`with_reg`)
     /// and only bites when the runtime scalar is non-zero.
     pub fn reg_on(&self) -> bool {
@@ -167,15 +179,24 @@ pub(crate) fn build_tape(spec: &ArtifactSpec, alpha: f32, lam: f32) -> Result<Ta
 
 /// One training step on a prebuilt tape: run it forward, apply the task
 /// loss, walk it backward. The tape must have been built from `cx.spec`
-/// with the same hyperparameters.
-pub(crate) fn run_on_tape(cx: &StepCtx, params: &[Vec<f32>], tape: &Tape) -> Result<StepOutputs> {
+/// with the same hyperparameters. `scratch` supplies (and gets back) every
+/// intermediate buffer — reuse it across steps for a zero-alloc steady
+/// state.
+pub(crate) fn run_on_tape(
+    cx: &StepCtx,
+    params: &[Vec<f32>],
+    tape: &Tape,
+    scratch: &mut layers::StepScratch,
+) -> Result<StepOutputs> {
     let p = Params::new(cx.spec, params)?;
-    layers::run_tape(cx, &p, tape)
+    layers::run_tape(cx, &p, tape, scratch)
 }
 
 /// One-shot convenience: build the op tape for the spec's family, then
-/// run one step on it (the executor path caches the tape instead).
+/// run one step on it with throwaway scratch (the executor path caches
+/// both the tape and the scratch instead).
 pub fn run_model(cx: &StepCtx, params: &[Vec<f32>]) -> Result<StepOutputs> {
     let tape = build_tape(cx.spec, cx.alpha, cx.lam)?;
-    run_on_tape(cx, params, &tape)
+    let mut scratch = layers::StepScratch::new();
+    run_on_tape(cx, params, &tape, &mut scratch)
 }

@@ -262,6 +262,15 @@ pub fn relu(pre: &[f32]) -> Vec<f32> {
     pre.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
 }
 
+/// [`relu`] into a caller-provided (arena) buffer — same branch, same
+/// bits, no allocation. `out.len()` must equal `pre.len()`.
+pub fn relu_into(pre: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(pre.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(pre.iter()) {
+        *o = if v > 0.0 { v } else { 0.0 };
+    }
+}
+
 /// ReLU backward: `dh ⊙ [pre > 0]` (derivative 0 at exactly 0, as in jax).
 pub fn relu_bwd(dh: &[f32], pre: &[f32]) -> Vec<f32> {
     debug_assert_eq!(dh.len(), pre.len());
@@ -271,10 +280,27 @@ pub fn relu_bwd(dh: &[f32], pre: &[f32]) -> Vec<f32> {
         .collect()
 }
 
+/// [`relu_bwd`] into a caller-provided (arena) buffer — bit-identical.
+pub fn relu_bwd_into(dh: &[f32], pre: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(dh.len(), pre.len());
+    debug_assert_eq!(dh.len(), out.len());
+    for ((o, &g), &p) in out.iter_mut().zip(dh.iter()).zip(pre.iter()) {
+        *o = if p > 0.0 { g } else { 0.0 };
+    }
+}
+
 /// Elementwise ELU (α = 1): `x` if positive, `exp(x) - 1` otherwise —
 /// the inter-layer activation of the GAT operator (`jax.nn.elu`).
 pub fn elu(pre: &[f32]) -> Vec<f32> {
     pre.iter().map(|&v| if v > 0.0 { v } else { v.exp_m1() }).collect()
+}
+
+/// [`elu`] into a caller-provided (arena) buffer — bit-identical.
+pub fn elu_into(pre: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(pre.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(pre.iter()) {
+        *o = if v > 0.0 { v } else { v.exp_m1() };
+    }
 }
 
 /// ELU backward: `dh` where positive, `dh · exp(pre)` otherwise

@@ -38,7 +38,18 @@
 //! Shape checks are *real* asserts, release builds included: these entry
 //! points are fed by manifest-derived shapes, and a bad manifest must
 //! fail loudly rather than read OOB-adjacent garbage.
+//!
+//! ISA tiers ([`super::isa`]): the public entry points dispatch on the
+//! process-wide [`KernelIsa`] — `Scalar` routes to the per-row oracles,
+//! `V8` is the path above, `V16` a 16-lane twin ([`V16`], 64-byte panels,
+//! up to 64 lanes per edge sweep). The per-element chain is the row's
+//! CSR edge order on every tier — panel width never reorders it — so all
+//! tiers are mutually bit-identical; `avx512f` detection only decides
+//! when V16 is auto-selected. `*_isa` variants force a tier (parity
+//! tests, forced bench rows); `*_into` variants write into pre-zeroed
+//! arena buffers for the zero-alloc tape path.
 
+use super::isa::{kernel_isa, KernelIsa};
 use super::ops::EdgeIndex;
 use rayon::prelude::*;
 
@@ -100,6 +111,55 @@ impl V8 {
     #[inline(always)]
     fn storep(&self, dst: &mut [f32]) {
         let n = dst.len().min(NR);
+        dst[..n].copy_from_slice(&self.0[..n]);
+    }
+}
+
+/// Lanes per feature panel on the wide ([`KernelIsa::V16`]) tier.
+const NR16: usize = 16;
+/// Max V16 panels per edge sweep (64 lanes — d = 64 in a single sweep).
+const NP16: usize = 4;
+
+/// 16 f32 lanes, 64-byte aligned — the [`V8`] idiom widened to one
+/// 512-bit register. Same mul-then-add contract; plain safe Rust, so the
+/// tier is correct on any machine and `avx512f` detection only gates when
+/// it is auto-selected.
+#[derive(Clone, Copy)]
+#[repr(align(64))]
+struct V16([f32; NR16]);
+
+impl V16 {
+    const ZERO: V16 = V16([0.0; NR16]);
+
+    /// `self += a * b` lane-wise — mul then add, never `mul_add`.
+    #[inline(always)]
+    fn fma(&mut self, a: f32, b: &V16) {
+        for (acc, &bv) in self.0.iter_mut().zip(b.0.iter()) {
+            *acc += a * bv;
+        }
+    }
+
+    /// Load a full 16-lane group (`src.len() >= 16`).
+    #[inline(always)]
+    fn load16(src: &[f32]) -> V16 {
+        let mut v = V16::ZERO;
+        v.0.copy_from_slice(&src[..NR16]);
+        v
+    }
+
+    /// Load up to 16 lanes, zero-padding the rest (ragged feature tail).
+    #[inline(always)]
+    fn loadp(src: &[f32]) -> V16 {
+        let mut v = V16::ZERO;
+        let n = src.len().min(NR16);
+        v.0[..n].copy_from_slice(&src[..n]);
+        v
+    }
+
+    /// Store the first `dst.len().min(16)` lanes.
+    #[inline(always)]
+    fn storep(&self, dst: &mut [f32]) {
+        let n = dst.len().min(NR16);
         dst[..n].copy_from_slice(&self.0[..n]);
     }
 }
@@ -169,20 +229,94 @@ fn scatter_row(idx: &[u32], wts: &[f32], src: &[f32], d: usize, out_row: &mut [f
     }
 }
 
+/// [`row_group`] on 16-lane panels: identical seed/sweep/store structure,
+/// identical per-element CSR-order chains.
+#[inline(always)]
+fn row_group16<const P: usize, const TAIL_FULL: bool>(
+    idx: &[u32],
+    wts: &[f32],
+    src: &[f32],
+    d: usize,
+    j0: usize,
+    span: usize,
+    out_row: &mut [f32],
+) {
+    let tail0 = (P - 1) * NR16;
+    let mut acc = [V16::ZERO; P];
+    for (q, a) in acc.iter_mut().enumerate() {
+        let c0 = j0 + q * NR16;
+        *a = V16::loadp(&out_row[c0..(c0 + NR16).min(j0 + span)]);
+    }
+    for (&s, &we) in idx.iter().zip(wts.iter()) {
+        let base = s as usize * d + j0;
+        let zrow = &src[base..base + span];
+        for (q, a) in acc.iter_mut().enumerate().take(P - 1) {
+            a.fma(we, &V16::load16(&zrow[q * NR16..q * NR16 + NR16]));
+        }
+        if TAIL_FULL {
+            acc[P - 1].fma(we, &V16::load16(&zrow[tail0..tail0 + NR16]));
+        } else {
+            acc[P - 1].fma(we, &V16::loadp(&zrow[tail0..span]));
+        }
+    }
+    for (q, a) in acc.iter().enumerate() {
+        let c0 = j0 + q * NR16;
+        a.storep(&mut out_row[c0..(c0 + NR16).min(j0 + span)]);
+    }
+}
+
+/// [`scatter_row`] on 16-lane panels (groups of up to [`NP16`]).
+#[inline(always)]
+fn scatter_row16(idx: &[u32], wts: &[f32], src: &[f32], d: usize, out_row: &mut [f32]) {
+    let panels = d.div_ceil(NR16);
+    let mut p = 0;
+    while p < panels {
+        let pg = (panels - p).min(NP16);
+        let j0 = p * NR16;
+        let span = (d - j0).min(pg * NR16);
+        match (pg, span == pg * NR16) {
+            (4, true) => row_group16::<4, true>(idx, wts, src, d, j0, span, out_row),
+            (4, false) => row_group16::<4, false>(idx, wts, src, d, j0, span, out_row),
+            (3, true) => row_group16::<3, true>(idx, wts, src, d, j0, span, out_row),
+            (3, false) => row_group16::<3, false>(idx, wts, src, d, j0, span, out_row),
+            (2, true) => row_group16::<2, true>(idx, wts, src, d, j0, span, out_row),
+            (2, false) => row_group16::<2, false>(idx, wts, src, d, j0, span, out_row),
+            (_, true) => row_group16::<1, true>(idx, wts, src, d, j0, span, out_row),
+            (_, false) => row_group16::<1, false>(idx, wts, src, d, j0, span, out_row),
+        }
+        p += pg;
+    }
+}
+
 /// Shared macro-kernel: `out` is `[rows, d]` in the CSR's row numbering,
 /// rayon-parallel over [`RB`]-row blocks. Rows with an empty edge slice
-/// are skipped (their `out` values are left untouched).
-fn run_csr(off: &[u32], idx: &[u32], wts: &[f32], src: &[f32], d: usize, out: &mut [f32]) {
+/// are skipped (their `out` values are left untouched). `isa` picks the
+/// panel width; the Scalar tier never reaches here (entry points route it
+/// to the oracles).
+fn run_csr(
+    off: &[u32],
+    idx: &[u32],
+    wts: &[f32],
+    src: &[f32],
+    d: usize,
+    isa: KernelIsa,
+    out: &mut [f32],
+) {
     if d == 0 || out.is_empty() {
         return;
     }
+    let wide = isa == KernelIsa::V16;
     let block = |(blk, out_blk): (usize, &mut [f32])| {
         let r0 = blk * RB;
         for (i, out_row) in out_blk.chunks_mut(d).enumerate() {
             let r = r0 + i;
             let (e0, e1) = (off[r] as usize, off[r + 1] as usize);
             if e0 < e1 {
-                scatter_row(&idx[e0..e1], &wts[e0..e1], src, d, out_row);
+                if wide {
+                    scatter_row16(&idx[e0..e1], &wts[e0..e1], src, d, out_row);
+                } else {
+                    scatter_row(&idx[e0..e1], &wts[e0..e1], src, d, out_row);
+                }
             }
         }
     };
@@ -196,18 +330,52 @@ fn run_csr(off: &[u32], idx: &[u32], wts: &[f32], src: &[f32], d: usize, out: &m
 
 /// Forward scatter-sum `out[v] = Σ_{(s,w) -> v} w * z[s]`; `z` is
 /// `[n_src, d]`, result `[n_out, d]` — the blocked drop-in for
-/// [`EdgeIndex::scatter_scalar`].
+/// [`EdgeIndex::scatter_scalar`] on the process-wide tier.
 pub fn scatter(ei: &EdgeIndex, z: &[f32], d: usize) -> Vec<f32> {
+    scatter_isa(ei, z, d, kernel_isa())
+}
+
+/// [`scatter`] on a forced tier (parity tests, forced bench rows).
+pub fn scatter_isa(ei: &EdgeIndex, z: &[f32], d: usize, isa: KernelIsa) -> Vec<f32> {
     assert!(
         z.len() >= ei.n_src * d,
         "spmm::scatter: z has {} values, n_src*d = {}",
         z.len(),
         ei.n_src * d
     );
+    if isa == KernelIsa::Scalar {
+        return ei.scatter_scalar(z, d);
+    }
     let mut out = vec![0f32; ei.n_out * d];
     let (off, idx, wts) = ei.dst_csr();
-    run_csr(off, idx, wts, z, d, &mut out);
+    run_csr(off, idx, wts, z, d, isa, &mut out);
     out
+}
+
+/// [`scatter`] writing into a pre-zeroed arena buffer
+/// (`out.len() >= n_out*d`, all zeros on entry) — the zero-alloc tape
+/// path.
+pub(crate) fn scatter_into(ei: &EdgeIndex, z: &[f32], d: usize, out: &mut [f32]) {
+    assert!(
+        z.len() >= ei.n_src * d,
+        "spmm::scatter: z has {} values, n_src*d = {}",
+        z.len(),
+        ei.n_src * d
+    );
+    assert!(
+        out.len() >= ei.n_out * d,
+        "spmm::scatter: out has {} values, n_out*d = {}",
+        out.len(),
+        ei.n_out * d
+    );
+    let isa = kernel_isa();
+    if isa == KernelIsa::Scalar {
+        // never auto-selected; allocating through the oracle is fine here
+        out[..ei.n_out * d].copy_from_slice(&ei.scatter_scalar(z, d));
+        return;
+    }
+    let (off, idx, wts) = ei.dst_csr();
+    run_csr(off, idx, wts, z, d, isa, &mut out[..ei.n_out * d]);
 }
 
 /// Forward scatter-sum with *external* per-edge weights: `out[v] =
@@ -220,6 +388,32 @@ pub fn scatter(ei: &EdgeIndex, z: &[f32], d: usize) -> Vec<f32> {
 /// (and therefore the same per-element CSR-order accumulation chains) as
 /// [`scatter`].
 pub fn scatter_weighted(ei: &EdgeIndex, edge_w: &[f32], z: &[f32], d: usize) -> Vec<f32> {
+    scatter_weighted_isa(ei, edge_w, z, d, kernel_isa())
+}
+
+/// [`scatter_weighted`] on a forced tier.
+pub fn scatter_weighted_isa(
+    ei: &EdgeIndex,
+    edge_w: &[f32],
+    z: &[f32],
+    d: usize,
+    isa: KernelIsa,
+) -> Vec<f32> {
+    let mut out = vec![0f32; ei.n_out * d];
+    scatter_weighted_into_isa(ei, edge_w, z, d, isa, &mut out);
+    out
+}
+
+/// [`scatter_weighted`] writing into a pre-zeroed arena buffer — the
+/// zero-alloc path of the GAT aggregation core.
+pub(crate) fn scatter_weighted_into_isa(
+    ei: &EdgeIndex,
+    edge_w: &[f32],
+    z: &[f32],
+    d: usize,
+    isa: KernelIsa,
+    out: &mut [f32],
+) {
     assert!(
         edge_w.len() == ei.num_edges(),
         "spmm::scatter_weighted: {} weights for {} edges",
@@ -232,9 +426,50 @@ pub fn scatter_weighted(ei: &EdgeIndex, edge_w: &[f32], z: &[f32], d: usize) -> 
         z.len(),
         ei.n_src * d
     );
-    let mut out = vec![0f32; ei.n_out * d];
+    assert!(
+        out.len() >= ei.n_out * d,
+        "spmm::scatter_weighted: out has {} values, n_out*d = {}",
+        out.len(),
+        ei.n_out * d
+    );
+    if isa == KernelIsa::Scalar {
+        out[..ei.n_out * d].copy_from_slice(&scatter_weighted_scalar(ei, edge_w, z, d));
+        return;
+    }
     let (off, idx, _) = ei.dst_csr();
-    run_csr(off, idx, edge_w, z, d, &mut out);
+    run_csr(off, idx, edge_w, z, d, isa, &mut out[..ei.n_out * d]);
+}
+
+/// Per-row scalar oracle for [`scatter_weighted`]: identical CSR-order
+/// per-element chains, plain loops (the Scalar tier and the parity
+/// property tests).
+pub fn scatter_weighted_scalar(ei: &EdgeIndex, edge_w: &[f32], z: &[f32], d: usize) -> Vec<f32> {
+    assert!(
+        edge_w.len() == ei.num_edges(),
+        "spmm::scatter_weighted: {} weights for {} edges",
+        edge_w.len(),
+        ei.num_edges()
+    );
+    assert!(
+        z.len() >= ei.n_src * d,
+        "spmm::scatter_weighted: z has {} values, n_src*d = {}",
+        z.len(),
+        ei.n_src * d
+    );
+    let (off, idx, _) = ei.dst_csr();
+    let mut out = vec![0f32; ei.n_out * d];
+    if d == 0 {
+        return out;
+    }
+    out.par_chunks_mut(d).enumerate().for_each(|(v, row)| {
+        for e in off[v] as usize..off[v + 1] as usize {
+            let base = idx[e] as usize * d;
+            let we = edge_w[e];
+            for (j, o) in row.iter_mut().enumerate() {
+                *o += we * z[base + j];
+            }
+        }
+    });
     out
 }
 
@@ -243,6 +478,11 @@ pub fn scatter_weighted(ei: &EdgeIndex, edge_w: &[f32], z: &[f32], d: usize) -> 
 /// drop-in for [`EdgeIndex::scatter_t_acc_scalar`]. Accumulator chains
 /// seed from the incoming `out` values, in source-row CSR edge order.
 pub fn scatter_t_acc(ei: &EdgeIndex, dh: &[f32], d: usize, out: &mut [f32]) {
+    scatter_t_acc_isa(ei, dh, d, out, kernel_isa());
+}
+
+/// [`scatter_t_acc`] on a forced tier.
+pub fn scatter_t_acc_isa(ei: &EdgeIndex, dh: &[f32], d: usize, out: &mut [f32], isa: KernelIsa) {
     assert!(
         dh.len() >= ei.n_out * d,
         "spmm::scatter_t_acc: dh has {} values, n_out*d = {}",
@@ -255,8 +495,12 @@ pub fn scatter_t_acc(ei: &EdgeIndex, dh: &[f32], d: usize, out: &mut [f32]) {
         out.len(),
         ei.n_src * d
     );
+    if isa == KernelIsa::Scalar {
+        ei.scatter_t_acc_scalar(dh, d, out);
+        return;
+    }
     let (off, idx, wts) = ei.src_csr();
-    run_csr(off, idx, wts, dh, d, &mut out[..ei.n_src * d]);
+    run_csr(off, idx, wts, dh, d, isa, &mut out[..ei.n_src * d]);
 }
 
 #[cfg(test)]
@@ -320,6 +564,32 @@ mod tests {
         let (_, _, w) = ei.dst_csr();
         let w = w.to_vec();
         assert_eq!(scatter_weighted(&ei, &w, &z, 2), scatter(&ei, &z, 2));
+    }
+
+    #[test]
+    fn v16_tier_matches_v8_bitwise() {
+        let mut rng = Rng::new(19);
+        for &d in &[1usize, 5, 8, 9, 16, 17, 31, 33, 48, 64] {
+            let ei = random_graph(&mut rng, 97, 61, 700);
+            let z: Vec<f32> = (0..97 * d).map(|_| rng.normal_f32()).collect();
+            assert_eq!(
+                scatter_isa(&ei, &z, d, KernelIsa::V8),
+                scatter_isa(&ei, &z, d, KernelIsa::V16),
+                "fwd d={d}"
+            );
+            let ew: Vec<f32> = (0..ei.num_edges()).map(|_| rng.normal_f32()).collect();
+            let w8 = scatter_weighted_isa(&ei, &ew, &z, d, KernelIsa::V8);
+            assert_eq!(w8, scatter_weighted_isa(&ei, &ew, &z, d, KernelIsa::V16), "wtd d={d}");
+            let wsc = scatter_weighted_isa(&ei, &ew, &z, d, KernelIsa::Scalar);
+            assert_eq!(w8, wsc, "wtd-sc d={d}");
+            let dh: Vec<f32> = (0..61 * d).map(|_| rng.normal_f32()).collect();
+            let init: Vec<f32> = (0..97 * d).map(|_| rng.normal_f32() * 0.5).collect();
+            let mut b8 = init.clone();
+            let mut b16 = init;
+            scatter_t_acc_isa(&ei, &dh, d, &mut b8, KernelIsa::V8);
+            scatter_t_acc_isa(&ei, &dh, d, &mut b16, KernelIsa::V16);
+            assert_eq!(b8, b16, "bwd d={d}");
+        }
     }
 
     #[test]

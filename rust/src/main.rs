@@ -30,6 +30,11 @@
 //!              (epoch-boundary crash-recovery manifests; resume replays
 //!              the remaining epochs bit-identically — defaults
 //!              GAS_CHECKPOINT_DIR / GAS_CHECKPOINT_EVERY / GAS_RESUME)
+//!              [--kernel-isa scalar|v8|v16]
+//!              (force the native kernels' ISA dispatch tier instead of
+//!              auto-detecting; v16 needs AVX-512-class vectors to pay
+//!              off but is valid — and bit-identical — anywhere; default
+//!              GAS_KERNEL_ISA, else runtime detection)
 //!   gen        --dataset cora            (generate + print dataset stats)
 //!   partition  --dataset cora --parts 4  (METIS vs random quality)
 //!   memory     --dataset yelp --layers 2 (Table-3-style memory model)
@@ -85,6 +90,12 @@ fn backend_for(args: &Args) -> Result<Backend> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // pin the kernel dispatch tier before any kernel runs (the first
+    // kernel call freezes it); --kernel-isa overrides GAS_KERNEL_ISA
+    if let Some(tier) = args.get("kernel-isa") {
+        use gas::backend::native::isa;
+        isa::set_kernel_isa(isa::parse_kernel_isa(tier)?)?;
+    }
     let dataset = args.str_or("dataset", "cora");
     let model = resolve_model(&args.str_or("model", "gcn2"));
     let mode = args.str_or("mode", "gas");

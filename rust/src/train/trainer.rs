@@ -805,7 +805,20 @@ impl<'a> Trainer<'a> {
     /// executor (`&dyn Executor` is `Sync`). Per-batch logits merge and
     /// metrics reduce in batch order, so the result is bit-identical to
     /// [`Trainer::evaluate_serial`] for any thread count.
+    ///
+    /// Pull/splice staging is pooled per rayon thread and reused across
+    /// batches and eval rounds — recycled buffers are reset to exactly
+    /// the bytes a fresh allocation would have, so repeated evals stop
+    /// allocating staging without perturbing a single bit of the result.
     pub fn evaluate(&mut self, buckets: &mut Buckets) -> Result<(f64, f64, f64)> {
+        // per-thread (pull rows, spliced hist) staging. try_borrow_mut
+        // guards rayon re-entrancy — a task blocked in a kernel's inner
+        // parallel loop can steal another eval task onto this thread —
+        // by falling back to fresh buffers in that rare case.
+        thread_local! {
+            static EVAL_STAGE: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+                const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+        }
         // ensure queued pushes are applied and no pull is left hanging
         self.pipeline.sync()?;
         let t = Timer::start();
@@ -825,19 +838,34 @@ impl<'a> Trainer<'a> {
                 .zip(statics.par_iter())
                 .map(|(plan, st)| {
                     let ids = &plan.halo_nodes;
-                    let mut pull = PullBuffer {
-                        data: vec![0f32; hl * ids.len() * hd],
-                        num_rows: ids.len(),
-                        num_layers: hl,
-                        h: hd,
-                        staleness: Vec::new(),
+                    let run = |data: &mut Vec<f32>, hist: &mut Vec<f32>| -> Result<Vec<f32>> {
+                        // recycled staging must look freshly allocated:
+                        // zeroed pull rows, empty hist
+                        data.clear();
+                        data.resize(hl * ids.len() * hd, 0.0);
+                        hist.clear();
+                        let mut pull = PullBuffer {
+                            data: std::mem::take(data),
+                            num_rows: ids.len(),
+                            num_layers: hl,
+                            h: hd,
+                            staleness: Vec::new(),
+                        };
+                        store.pull_all(ids, &mut pull.data);
+                        plan.fill_hist(spec, &pull, hist);
+                        let st = st.as_ref().expect("statics prepared above");
+                        let out = art.run_prepared(params, st, hist, noise, 0.0)?;
+                        // hand the staging back for this thread's next batch
+                        *data = pull.data;
+                        Ok(out.logits)
                     };
-                    store.pull_all(ids, &mut pull.data);
-                    let mut hist = Vec::new();
-                    plan.fill_hist(spec, &pull, &mut hist);
-                    let st = st.as_ref().expect("statics prepared above");
-                    let out = art.run_prepared(params, st, &hist, noise, 0.0)?;
-                    Ok(out.logits)
+                    EVAL_STAGE.with(|cell| match cell.try_borrow_mut() {
+                        Ok(mut stage) => {
+                            let (data, hist) = &mut *stage;
+                            run(data, hist)
+                        }
+                        Err(_) => run(&mut Vec::new(), &mut Vec::new()),
+                    })
                 })
                 .collect()
         });

@@ -1,0 +1,231 @@
+//! Cross-tier parity property tests for the runtime-dispatched kernels
+//! (`backend::native::{gemm, spmm, attn}` over `isa::KernelIsa`): every
+//! tier — `Scalar`, `V8` (AVX2-width panels) and `V16` (AVX-512-width
+//! panels) — runs the exact same per-element depth-order (gemm) or CSR
+//! edge-order (spmm/attn) mul-then-add chain, so forcing the tier through
+//! the `*_isa` entry points must not change a single output bit. The wide
+//! tiers are plain safe Rust (panel width only changes how many output
+//! columns share one pass over the inputs, never any element's chain), so
+//! these tests are valid on any machine regardless of what
+//! `is_x86_feature_detected!` reports — detection only drives
+//! auto-selection, never correctness.
+//!
+//! `V8 == V16` is strict `to_bits` everywhere. Against `Scalar`, the
+//! gemm comparisons use `==` (which equates ±0.0): the blocked tiers skip
+//! whole zero rows while the scalar oracle skips individual zero
+//! elements, a granularity difference that can only flip the sign of an
+//! exact zero. The spmm/attn scatters share the oracle's exact zero-skip
+//! granularity, so there the Scalar comparison is strict `to_bits` too.
+
+use gas::backend::native::isa::{parse_kernel_isa, KernelIsa};
+use gas::backend::native::ops::EdgeIndex;
+use gas::backend::native::{attn, gemm, spmm};
+use gas::util::prop;
+use gas::util::rng::Rng;
+
+const TIERS: [KernelIsa; 3] = [KernelIsa::Scalar, KernelIsa::V8, KernelIsa::V16];
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(&x, &y)| x.to_bits() == y.to_bits())
+}
+
+/// `==` equates -0.0 and +0.0 — the only divergence the gemm tiers' row-
+/// vs element-level zero-skip granularity allows against the oracle.
+fn zero_sign_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(&x, &y)| x == y)
+}
+
+/// Random `[n, k]` operand with ~10% zero elements and zero-padded row
+/// suffix + interior zero rows, exercising each tier's row-skip path.
+fn padded_operand(rng: &mut Rng, n: usize, k: usize) -> Vec<f32> {
+    let mut a: Vec<f32> = (0..n * k)
+        .map(|_| if rng.chance(0.1) { 0.0 } else { rng.normal_f32() })
+        .collect();
+    let pad_rows = rng.below(n / 3 + 1);
+    for v in (n - pad_rows)..n {
+        a[v * k..(v + 1) * k].fill(0.0);
+    }
+    for _ in 0..2 {
+        let v = rng.below(n);
+        a[v * k..(v + 1) * k].fill(0.0);
+    }
+    a
+}
+
+/// Random padded COO edge list (duplicates likely, ~15% zero-weight
+/// padding with some out-of-range endpoints the builder must drop).
+fn random_edges(rng: &mut Rng, n_src: usize, n_out: usize, e: usize) -> EdgeIndex {
+    let src_bound = if rng.chance(0.3) { n_src / 2 + 1 } else { n_src };
+    let dst_bound = if rng.chance(0.3) { n_out / 2 + 1 } else { n_out };
+    let mut src = Vec::with_capacity(e);
+    let mut dst = Vec::with_capacity(e);
+    let mut w = Vec::with_capacity(e);
+    for _ in 0..e {
+        if rng.chance(0.15) {
+            src.push(if rng.chance(0.3) { -1 } else { rng.below(n_src) as i32 });
+            dst.push(if rng.chance(0.3) { (n_out + 7) as i32 } else { rng.below(n_out) as i32 });
+            w.push(0.0);
+        } else {
+            src.push(rng.below(src_bound) as i32);
+            dst.push(rng.below(dst_bound) as i32);
+            w.push(rng.normal_f32());
+        }
+    }
+    EdgeIndex::build(&src, &dst, &w, n_src, n_out).unwrap()
+}
+
+/// Shape + data-seed case; dims are clamped to ≥ 1 inside the property so
+/// shrinking stays within the kernels' contracts.
+type Case = ((usize, usize), (usize, u64));
+
+fn gen_case(r: &mut Rng) -> Case {
+    // m crosses both the 8- and 16-column panel boundaries, with ragged
+    // tails in every dim, so both wide tiers hit full panels AND remainders
+    ((r.below(160) + 1, r.below(68) + 1), (r.below(68) + 1, r.next_u64()))
+}
+
+#[test]
+fn gemm_tiers_agree_bitwise() {
+    prop::check(0x15A0, 40, gen_case, |&((n, k), (m, seed))| {
+        let (n, k, m) = (n.max(1), k.max(1), m.max(1));
+        let mut rng = Rng::new(seed ^ 0x66);
+        let a = padded_operand(&mut rng, n, k);
+        let b: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
+        let scalar = gemm::matmul_isa(&a, n, k, &b, m, KernelIsa::Scalar);
+        let v8 = gemm::matmul_isa(&a, n, k, &b, m, KernelIsa::V8);
+        let v16 = gemm::matmul_isa(&a, n, k, &b, m, KernelIsa::V16);
+        bits_eq(&v8, &v16) && zero_sign_eq(&v8, &scalar)
+    });
+}
+
+#[test]
+fn gemm_bt_tiers_agree_bitwise() {
+    prop::check(0x15B0, 40, gen_case, |&((n, k), (m, seed))| {
+        let (n, k, m) = (n.max(1), k.max(1), m.max(1));
+        let mut rng = Rng::new(seed ^ 0x77);
+        let a = padded_operand(&mut rng, n, m);
+        let b: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
+        let scalar = gemm::matmul_bt_isa(&a, n, m, &b, k, KernelIsa::Scalar);
+        let v8 = gemm::matmul_bt_isa(&a, n, m, &b, k, KernelIsa::V8);
+        let v16 = gemm::matmul_bt_isa(&a, n, m, &b, k, KernelIsa::V16);
+        bits_eq(&v8, &v16) && zero_sign_eq(&v8, &scalar)
+    });
+}
+
+#[test]
+fn gemm_at_b_acc_tiers_agree_bitwise() {
+    prop::check(0x15C0, 40, gen_case, |&((n, k), (m, seed))| {
+        let (n, k, m) = (n.max(1), k.max(1), m.max(1));
+        let mut rng = Rng::new(seed ^ 0x88);
+        let a = padded_operand(&mut rng, n, k);
+        let da: Vec<f32> = (0..n * m).map(|_| rng.normal_f32()).collect();
+        // all tiers must chain new terms onto the same incoming prefix
+        let init: Vec<f32> = (0..k * m).map(|_| rng.normal_f32() * 0.5).collect();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for isa in TIERS {
+            let mut out = init.clone();
+            gemm::matmul_at_b_acc_isa(&a, n, k, &da, m, &mut out, isa);
+            outs.push(out);
+        }
+        bits_eq(&outs[1], &outs[2]) && zero_sign_eq(&outs[1], &outs[0])
+    });
+}
+
+#[test]
+fn spmm_tiers_agree_bitwise() {
+    type SpCase = ((usize, usize), ((usize, usize), u64));
+    fn gen_sp(r: &mut Rng) -> SpCase {
+        // d spans sub-panel (d < 8), exact-panel, 8..16 (V16 tail), and
+        // multi-group tails; node counts cross the row-block boundary
+        ((r.below(150) + 1, r.below(150) + 1), ((r.below(70) + 1, r.below(1000)), r.next_u64()))
+    }
+    prop::check(0x15D0, 40, gen_sp, |&((n_src, n_out), ((d, e), seed))| {
+        let (n_src, n_out, d) = (n_src.max(1), n_out.max(1), d.max(1));
+        let mut rng = Rng::new(seed ^ 0x99);
+        let ei = random_edges(&mut rng, n_src, n_out, e);
+        let z: Vec<f32> = (0..n_src * d).map(|_| rng.normal_f32()).collect();
+        let ew: Vec<f32> = (0..ei.num_edges()).map(|_| rng.normal_f32()).collect();
+        let dh: Vec<f32> = (0..n_out * d).map(|_| rng.normal_f32()).collect();
+        let init: Vec<f32> = (0..n_src * d).map(|_| rng.normal_f32() * 0.5).collect();
+        let fwd: Vec<Vec<f32>> = TIERS.iter().map(|&i| spmm::scatter_isa(&ei, &z, d, i)).collect();
+        let wtd: Vec<Vec<f32>> =
+            TIERS.iter().map(|&i| spmm::scatter_weighted_isa(&ei, &ew, &z, d, i)).collect();
+        let bwd: Vec<Vec<f32>> = TIERS
+            .iter()
+            .map(|&i| {
+                let mut out = init.clone();
+                spmm::scatter_t_acc_isa(&ei, &dh, d, &mut out, i);
+                out
+            })
+            .collect();
+        // spmm tiers share the oracle's edge-order chain exactly: strict
+        // bit equality across all three tiers, signs of zero included
+        [&fwd, &wtd, &bwd]
+            .iter()
+            .all(|outs| bits_eq(&outs[0], &outs[1]) && bits_eq(&outs[1], &outs[2]))
+    });
+}
+
+#[test]
+fn attn_tiers_agree_bitwise() {
+    type AtCase = ((usize, usize), ((usize, usize), u64));
+    fn gen_at(r: &mut Rng) -> AtCase {
+        // heads*dh spans sub-panel through multi-panel lane counts
+        ((r.below(90) + 1, r.below(90) + 1), ((r.below(4) + 1, r.below(11) + 1), r.next_u64()))
+    }
+    prop::check(0x15E0, 40, gen_at, |&((n_src, n_out), ((heads, dh), seed))| {
+        let (n_src, n_out) = (n_src.max(1), n_out.max(1));
+        let (heads, dh) = (heads.max(1), dh.max(1));
+        let mut rng = Rng::new(seed ^ 0xAA);
+        let ei = random_edges(&mut rng, n_src, n_out, n_src * 4);
+        let z: Vec<f32> = (0..n_src * heads * dh).map(|_| rng.normal_f32()).collect();
+        let s_src: Vec<f32> = (0..n_src * heads).map(|_| rng.normal_f32()).collect();
+        let s_dst: Vec<f32> = (0..n_out * heads).map(|_| rng.normal_f32()).collect();
+        let base_sm = attn::edge_softmax_isa(&ei, &s_src, &s_dst, heads, KernelIsa::Scalar);
+        let base = attn::attn_scatter_isa(&ei, &base_sm, &z, heads, dh, KernelIsa::Scalar);
+        TIERS[1..].iter().all(|&isa| {
+            let sm = attn::edge_softmax_isa(&ei, &s_src, &s_dst, heads, isa);
+            sm.alpha.len() == base_sm.alpha.len()
+                && bits_eq(&sm.alpha, &base_sm.alpha)
+                && bits_eq(&sm.salpha, &base_sm.salpha)
+                && bits_eq(&attn::attn_scatter_isa(&ei, &sm, &z, heads, dh, isa), &base)
+        })
+    });
+}
+
+#[test]
+fn large_shapes_engage_parallel_paths_identically() {
+    // big enough to cross every rayon fan-out threshold: the parallel
+    // row-block split must not change any tier's chains either
+    let mut rng = Rng::new(21);
+    let (n, k, m) = (1003usize, 256usize, 64usize);
+    let a = padded_operand(&mut rng, n, k);
+    let b: Vec<f32> = (0..k * m).map(|_| rng.normal_f32() * 0.05).collect();
+    let v8 = gemm::matmul_isa(&a, n, k, &b, m, KernelIsa::V8);
+    let v16 = gemm::matmul_isa(&a, n, k, &b, m, KernelIsa::V16);
+    assert!(bits_eq(&v8, &v16), "large gemm: V8 vs V16 diverged");
+    assert!(
+        zero_sign_eq(&v8, &gemm::matmul_isa(&a, n, k, &b, m, KernelIsa::Scalar)),
+        "large gemm: blocked vs scalar diverged"
+    );
+
+    let (nn, d) = (5003usize, 64usize);
+    let ei = random_edges(&mut rng, nn, nn, nn * 8);
+    let z: Vec<f32> = (0..nn * d).map(|_| rng.normal_f32()).collect();
+    let s = spmm::scatter_isa(&ei, &z, d, KernelIsa::Scalar);
+    assert!(bits_eq(&spmm::scatter_isa(&ei, &z, d, KernelIsa::V8), &s), "large spmm V8");
+    assert!(bits_eq(&spmm::scatter_isa(&ei, &z, d, KernelIsa::V16), &s), "large spmm V16");
+}
+
+#[test]
+fn kernel_isa_parse_accepts_tiers_and_rejects_garbage() {
+    assert_eq!(parse_kernel_isa("scalar").unwrap(), KernelIsa::Scalar);
+    assert_eq!(parse_kernel_isa("v8").unwrap(), KernelIsa::V8);
+    assert_eq!(parse_kernel_isa("AVX2").unwrap(), KernelIsa::V8);
+    assert_eq!(parse_kernel_isa("v16").unwrap(), KernelIsa::V16);
+    assert_eq!(parse_kernel_isa("avx512").unwrap(), KernelIsa::V16);
+    // garbage must fail loudly, not fall back to a silent default
+    for bad in ["", "sse2", "v32", "auto!"] {
+        assert!(parse_kernel_isa(bad).is_err(), "{bad:?} should be rejected");
+    }
+}

@@ -1,0 +1,139 @@
+//! Steady-state allocation harness for the native step path: a counting
+//! global allocator wraps `System`, and after a short warm-up, repeated
+//! `run_prepared` calls on the same `Prepared` plan must settle to a
+//! small, non-growing per-step allocation count — the per-step
+//! intermediates all come out of the plan's reusable `StepArena`, so the
+//! only remaining allocations are the step's *outputs*, which stay fresh
+//! by contract (`grads` = one Vec per parameter tensor plus the outer
+//! Vec, the `push` tensor, `logits`, and the loss fan-out's one rayon
+//! injection): roughly `nparams + 10` per step, never the dozens that a
+//! per-op `vec![0f32; ..]` regression would reintroduce.
+//!
+//! The whole binary is a single `#[test]` (plus the allocator): parallel
+//! tests would interleave their counts through the one global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use gas::backend::native::{registry, NativeArtifact};
+use gas::model::ParamStore;
+use gas::runtime::{Executor, StepInputs};
+
+/// `System`, with every allocation (and reallocation) counted.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Per-step allocation counts for `steps` repeated `run_prepared` calls
+/// on one prepared plan, after `warmup` uncounted calls.
+fn step_alloc_counts(
+    model: &str,
+    layers: usize,
+    h: usize,
+    warmup: usize,
+    steps: usize,
+) -> Vec<usize> {
+    // tiny shapes: every kernel stays below its rayon fan-out threshold,
+    // so the compute path runs serially on this thread (the masked loss
+    // still fans out — its one injection per step is part of the budget)
+    let spec = registry::test_spec(model, layers, "gas", 4, 2, 8, 4, h, 3, "ce");
+    let art = NativeArtifact::new(spec.clone()).unwrap();
+    let params = ParamStore::init(&spec.params, 7).unwrap();
+    let x: Vec<f32> = (0..spec.nt * spec.f).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+    let mut src = vec![1, 0, 2, 1, 4, 5];
+    let mut dst = vec![0, 1, 1, 2, 0, 3];
+    let mut w = vec![1.0; 6];
+    src.resize(spec.e, 0);
+    dst.resize(spec.e, 0);
+    w.resize(spec.e, 0.0);
+    let hist: Vec<f32> =
+        (0..spec.hist_layers() * spec.nh * spec.hist_dim).map(|i| (i % 3) as f32 * 0.1).collect();
+    let deg = vec![2.0; spec.nt];
+    let labels = vec![0, 1, 2, 0];
+    let mask = vec![1.0; spec.nb];
+    let noise = vec![0f32; spec.nt * spec.hist_dim.max(spec.h)];
+    let inp = StepInputs {
+        x: &x,
+        edge_src: &src,
+        edge_dst: &dst,
+        edge_w: &w,
+        hist: &hist,
+        labels_i: Some(&labels),
+        labels_f: None,
+        label_mask: &mask,
+        deg: &deg,
+        noise: &noise,
+        reg_lambda: 0.0,
+    };
+    let prep = art.prepare_static(&inp, true).unwrap();
+
+    // warm-up: first steps grow the arena free lists and the value-table
+    // capacities (and spin up the rayon pool) — all one-time costs
+    for _ in 0..warmup {
+        art.run_prepared(&params.tensors, &prep, &hist, &noise, 0.0).unwrap();
+    }
+
+    let mut counts = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let out = art.run_prepared(&params.tensors, &prep, &hist, &noise, 0.0).unwrap();
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert!(out.loss.is_finite(), "{model}: loss went non-finite");
+        drop(out); // deallocations are free; only allocations are counted
+        counts.push(after - before);
+    }
+    counts
+}
+
+#[test]
+fn steady_state_steps_do_not_allocate_intermediates() {
+    // gcn exercises Linear/Bias/Relu/Propagate/HistSplice, gin the
+    // GinLayer MLP saves, gat the attention arena path (h = 4 heads × 2)
+    for (model, layers, h) in [("gcn", 3, 4), ("gin", 3, 4), ("gat", 2, 8)] {
+        let spec = registry::test_spec(model, layers, "gas", 4, 2, 8, 4, h, 3, "ce");
+        let nparams = spec.params.len();
+        let counts = step_alloc_counts(model, layers, h, 4, 6);
+
+        // outputs-only budget: grads (nparams + 1) + push assembly (2) +
+        // logits (1) + slack for the loss fan-out's injection machinery.
+        // A per-op allocation regression adds tens per step (7 value
+        // tables + one or more buffers per tape op, forward and backward).
+        let bound = nparams + 16;
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(
+            max <= bound,
+            "{model}: steady-state step allocated {max} times (> budget {bound}): {counts:?}"
+        );
+        // non-growing: repeated steps must not drift upward (amortized
+        // rayon injector block growth allows a tiny jitter, never a trend)
+        assert!(
+            max - min <= 4,
+            "{model}: per-step allocation count unstable: {counts:?}"
+        );
+    }
+}
